@@ -1,0 +1,79 @@
+//! Compression hot-path benchmarks: importance scoring (the CPU mirror
+//! of the L1 kernel), mask packing/OR, top-k selection, TernGrad
+//! encoding, residual accumulation — the per-step L3 costs that must
+//! stay far below the PJRT train-step time (DESIGN.md §8).
+
+use ringiwp::compress::importance::{score_and_mask, EPS};
+use ringiwp::compress::residual::ResidualStore;
+use ringiwp::compress::terngrad::TernGrad;
+use ringiwp::model::{LayerKind, ParamLayout};
+use ringiwp::sparse::{BitMask, SparseVec};
+use ringiwp::util::rng::Rng;
+use ringiwp::util::timer::bench;
+
+fn main() {
+    println!("bench_compress — per-coordinate hot paths\n");
+    let mut rng = Rng::new(7);
+    let len = 1 << 21; // 2M coords ~ one large layer
+
+    let mut g = vec![0.0f32; len];
+    let mut w = vec![0.0f32; len];
+    rng.fill_normal(&mut g, 0.0, 1e-4);
+    rng.fill_normal(&mut w, 0.0, 0.05);
+    let u = vec![1.0f32; len];
+    let mut imp = vec![0.0f32; len];
+
+    let stats = bench(3, 10, || {
+        let mut mask = BitMask::zeros(len);
+        std::hint::black_box(score_and_mask(
+            &g, &w, &u, 0.01, EPS, &mut imp, &mut mask,
+        ));
+    });
+    println!("{}", stats.row("score_and_mask 2M coords"));
+    println!(
+        "    -> {:.0} Mcoord/s ({:.2} GB/s read)",
+        stats.per_sec(len as f64) / 1e6,
+        stats.per_sec(len as f64) * 12.0 / 1e9
+    );
+
+    let mask = BitMask::from_threshold(&imp, 0.01);
+    let stats = bench(3, 20, || {
+        let mut m2 = mask.clone();
+        m2.or_assign(std::hint::black_box(&mask));
+        std::hint::black_box(m2.count());
+    });
+    println!("{}", stats.row("mask OR + popcount 2M bits"));
+
+    let stats = bench(3, 10, || {
+        std::hint::black_box(mask.encode_u8());
+    });
+    println!("{}", stats.row("mask encode_u8 2M bits"));
+
+    let stats = bench(2, 8, || {
+        std::hint::black_box(SparseVec::top_k(&g, len / 100));
+    });
+    println!("{}", stats.row("top_k 1% of 2M (DGC select)"));
+
+    let stats = bench(2, 8, || {
+        std::hint::black_box(SparseVec::from_mask(&g, &mask));
+    });
+    println!("{}", stats.row("sparse gather from mask"));
+
+    let layout = ParamLayout::new(
+        "bench",
+        vec![("big".into(), vec![len], LayerKind::Conv)],
+    );
+    let stats = bench(1, 5, || {
+        let mut r = Rng::new(3);
+        std::hint::black_box(TernGrad::encode(&g, &layout, &mut r));
+    });
+    println!("{}", stats.row("terngrad encode 2M coords"));
+
+    let mut store = ResidualStore::new(len, 0.9);
+    let stats = bench(2, 10, || {
+        store.accumulate(std::hint::black_box(&g));
+    });
+    println!("{}", stats.row("residual accumulate 2M coords"));
+
+    println!("\n(bench_compress done)");
+}

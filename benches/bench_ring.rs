@@ -1,0 +1,97 @@
+//! Ring-transport benchmarks (criterion is unreachable offline; this is
+//! a `harness = false` bench using `util::timer`).
+//!
+//! Covers the transport behind Figs. 7/8 and Table I: dense vs masked vs
+//! sparse schedules across ring sizes and payloads, plus the support-only
+//! fast path the 96-node sims rely on.
+
+use ringiwp::net::{LinkSpec, RingNet};
+use ringiwp::ring;
+use ringiwp::sparse::{BitMask, SparseVec};
+use ringiwp::util::rng::Rng;
+use ringiwp::util::timer::bench;
+
+fn net(n: usize) -> RingNet {
+    RingNet::new(n, LinkSpec::gigabit_ethernet(), 1.0)
+}
+
+fn main() {
+    println!("bench_ring — ring all-reduce schedules\n");
+    let mut rng = Rng::new(42);
+
+    for (nodes, len) in [(4usize, 1 << 16), (8, 1 << 18), (16, 1 << 20)] {
+        let base: Vec<Vec<f32>> = (0..nodes)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+
+        let stats = bench(2, 8, || {
+            let mut nw = net(nodes);
+            let mut bufs = base.clone();
+            std::hint::black_box(ring::dense::allreduce(&mut nw, &mut bufs));
+        });
+        println!(
+            "{}",
+            stats.row(&format!("dense_allreduce n={nodes} len={len}"))
+        );
+        println!(
+            "    -> {:.2} Melem/s reduced",
+            stats.per_sec(len as f64) / 1e6
+        );
+
+        // Masked (IWP) at 1% density.
+        let mut mask = BitMask::zeros(len);
+        for _ in 0..len / 100 {
+            mask.set(rng.below(len));
+        }
+        let refs: Vec<&[f32]> = base.iter().map(|v| v.as_slice()).collect();
+        let stats = bench(2, 8, || {
+            let mut nw = net(nodes);
+            std::hint::black_box(ring::masked::allreduce(&mut nw, &[&mask], &refs));
+        });
+        println!(
+            "{}",
+            stats.row(&format!("masked_allreduce n={nodes} len={len} d=1%"))
+        );
+
+        // Sparse (DGC) at 1% density.
+        let sparses: Vec<SparseVec> = base
+            .iter()
+            .map(|v| SparseVec::top_k(v, len / 100))
+            .collect();
+        let stats = bench(1, 5, || {
+            let mut nw = net(nodes);
+            std::hint::black_box(ring::sparse::allreduce(&mut nw, &sparses));
+        });
+        println!(
+            "{}",
+            stats.row(&format!("sparse_allreduce n={nodes} len={len} d=1%"))
+        );
+        println!();
+    }
+
+    // Support-only fast path at paper scale.
+    for nodes in [32usize, 96] {
+        let len = 25_557_032; // ResNet50
+        let mut supports = Vec::with_capacity(nodes);
+        for _ in 0..nodes {
+            let mut m = BitMask::zeros(len);
+            for _ in 0..len / 100 {
+                m.set(rng.below(len));
+            }
+            supports.push(m);
+        }
+        let stats = bench(1, 3, || {
+            let mut nw = net(nodes);
+            std::hint::black_box(ring::sparse::allreduce_support(&mut nw, &supports));
+        });
+        println!(
+            "{}",
+            stats.row(&format!("support_allreduce n={nodes} len=25.6M d=1%"))
+        );
+    }
+    println!("\n(bench_ring done)");
+}

@@ -1,0 +1,84 @@
+//! PJRT hot-path latencies: the L2 train-step executions and the L1
+//! importance-kernel calls as the Rust coordinator drives them. Skips
+//! gracefully when artifacts are missing.
+
+use ringiwp::data::SynthClassification;
+use ringiwp::runtime::{ImportanceKernel, Runtime};
+use ringiwp::util::rng::Rng;
+use ringiwp::util::timer::bench;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = match Runtime::cpu(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP bench_step: {e}");
+            return Ok(());
+        }
+    };
+    println!("bench_step — PJRT latencies (platform: {})\n", rt.platform());
+
+    // MLP train step.
+    let art = rt.load("train_step_mlp_b32")?;
+    let layout = art.meta.layout()?;
+    let mut rng = Rng::new(1);
+    let params: Vec<Vec<f32>> = layout
+        .layers()
+        .iter()
+        .map(|l| {
+            let mut p = vec![0.0f32; l.size];
+            rng.fill_normal(&mut p, 0.0, 0.05);
+            p
+        })
+        .collect();
+    let data = SynthClassification::cifar_like(2);
+    let (x, y) = data.batch(&mut rng, 32);
+    let stats = bench(3, 15, || {
+        let mut inputs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+        inputs.push(&x);
+        inputs.push(&y);
+        std::hint::black_box(art.run_f32(&inputs).unwrap());
+    });
+    println!("{}", stats.row("mlp train_step (B=32, 820k params)"));
+
+    // Transformer train step.
+    let art = rt.load("train_step_tfm_tiny_b8")?;
+    let layout = art.meta.layout()?;
+    let params: Vec<Vec<f32>> = layout
+        .layers()
+        .iter()
+        .map(|l| {
+            let mut p = vec![0.0f32; l.size];
+            rng.fill_normal(&mut p, 0.0, 0.02);
+            p
+        })
+        .collect();
+    let corpus = ringiwp::data::CharCorpus::tiny();
+    let tokens = corpus.batch(&mut rng, 8, 64);
+    let stats = bench(2, 10, || {
+        let mut inputs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+        inputs.push(&tokens);
+        std::hint::black_box(art.run_f32(&inputs).unwrap());
+    });
+    println!("{}", stats.row("tfm train_step (B=8, 430k params)"));
+
+    // Importance kernel across buffer sizes (incl. padded-tail path).
+    let mut kernel = ImportanceKernel::load(&rt)?;
+    for len in [8192usize, 65_536, 786_432, 1_000_000] {
+        let mut g = vec![0.0f32; len];
+        let mut w = vec![0.0f32; len];
+        rng.fill_normal(&mut g, 0.0, 1e-4);
+        rng.fill_normal(&mut w, 0.0, 0.05);
+        let u = vec![1.0f32; len];
+        let stats = bench(2, 10, || {
+            std::hint::black_box(kernel.score(&g, &w, &u, 0.01, 1e-8).unwrap());
+        });
+        println!(
+            "{}  ({:.0} Mcoord/s)",
+            stats.row(&format!("importance kernel len={len}")),
+            stats.per_sec(len as f64) / 1e6
+        );
+    }
+    println!("\n(bench_step done)");
+    Ok(())
+}

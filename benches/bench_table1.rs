@@ -1,0 +1,38 @@
+//! End-to-end per-step cost of every Table-I method on the ResNet50
+//! inventory (the workload the paper's evaluation runs) — one bench per
+//! paper table row family, plus the Fig. 7/8 trace workload.
+
+use ringiwp::compress::Method;
+use ringiwp::exp::simrun::{SimCfg, SimEngine};
+use ringiwp::model::zoo;
+use ringiwp::util::timer::bench;
+
+fn main() {
+    println!("bench_table1 — SimEngine step time per method (ResNet50, 16-node ring)\n");
+    for method in [
+        Method::Baseline,
+        Method::TernGrad,
+        Method::IwpFixed,
+        Method::IwpLayerwise,
+        Method::Dgc,
+    ] {
+        let cfg = SimCfg {
+            nodes: 16,
+            method,
+            seed: 5,
+            ..Default::default()
+        };
+        let mut engine = SimEngine::new(zoo::resnet50(), cfg);
+        let mut step = 0usize;
+        let stats = bench(1, 3, || {
+            std::hint::black_box(engine.step(step));
+            step += 1;
+        });
+        println!(
+            "{}  ratio so far {:.1}x",
+            stats.row(&format!("step/{}", method.name())),
+            engine.account.ratio()
+        );
+    }
+    println!("\n(bench_table1 done)");
+}

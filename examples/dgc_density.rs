@@ -1,0 +1,53 @@
+//! Section-II standalone: why DGC breaks on rings. Per-node top-1%
+//! supports union as they travel; the shared-mask schedule doesn't.
+//!
+//! ```bash
+//! cargo run --release --example dgc_density
+//! ```
+
+use ringiwp::net::{LinkSpec, RingNet};
+use ringiwp::ring;
+use ringiwp::sparse::BitMask;
+use ringiwp::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let len = 1_000_000;
+    let d0 = 0.01;
+    let k = (len as f64 * d0) as usize;
+
+    println!("per-node top-{:.0}% supports on a {}-coordinate gradient\n", d0 * 100.0, len);
+    println!("{:>6} {:>18} {:>18} {:>14}", "nodes", "DGC final density", "IWP final density", "model");
+    for n in [4usize, 8, 16, 32, 64, 96] {
+        let mut rng = Rng::new(7 + n as u64);
+        // DGC: independent per-node supports.
+        let supports: Vec<BitMask> = (0..n)
+            .map(|_| {
+                let mut m = BitMask::zeros(len);
+                for _ in 0..k {
+                    m.set(rng.below(len));
+                }
+                m
+            })
+            .collect();
+        let mut net = RingNet::new(n, LinkSpec::gigabit_ethernet(), 1.0);
+        let rep = ring::sparse::allreduce_support(&mut net, &supports);
+        let dgc_final = *rep.density_per_hop.last().unwrap();
+
+        // IWP: one shared mask at the same density — invariant by
+        // construction; run it through the masked schedule to prove it.
+        let shared = supports[0].clone();
+        let mut net2 = RingNet::new(n, LinkSpec::gigabit_ethernet(), 1.0);
+        let (mask, rep2) = ring::masked::allreduce_bytes_only(&mut net2, &[&shared]);
+        let iwp_final = *rep2.density_per_hop.last().unwrap();
+        assert_eq!(mask.count(), shared.count());
+
+        println!(
+            "{n:>6} {:>17.3}% {:>17.3}% {:>13.3}%",
+            dgc_final * 100.0,
+            iwp_final * 100.0,
+            ring::sparse::expected_final_density(d0, n) * 100.0
+        );
+    }
+    println!("\npaper (Sec. II): \"as the number of nodes increases, the gradient carried\nby the nodes will continue become denser\" — DGC loses the sparsity, IWP keeps it.");
+    Ok(())
+}

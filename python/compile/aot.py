@@ -1,0 +1,72 @@
+"""AOT lowering: jitted L2 functions -> artifacts/*.hlo.txt (+ manifests).
+
+Interchange is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly
+(/opt/xla-example/README.md).  Lowered with return_tuple=True; the rust
+side unwraps with to_tuple().
+
+Run once via `make artifacts`; python never appears on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str, name: str, fn, args, meta) -> None:
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    meta = dict(meta)
+    meta["name"] = name
+    meta["hlo"] = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  {name}: {len(text)} chars, {len(meta['inputs'])} inputs")
+
+
+# (name, builder) — the artifact set the rust runtime expects.
+ARTIFACTS = {
+    "importance_m65536": lambda: model.build_importance(65536),
+    "importance_m8192": lambda: model.build_importance(8192),
+    "train_step_mlp_b32": lambda: model.build_mlp_train_step(32),
+    "train_step_tfm_tiny_b8": lambda: model.build_tfm_train_step("tiny", 8),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="comma list of artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    names = list(ARTIFACTS) if not args.only else args.only.split(",")
+    print(f"lowering {len(names)} artifacts -> {args.out}")
+    for name in names:
+        fn, ex_args, meta = ARTIFACTS[name]()
+        emit(args.out, name, fn, ex_args, meta)
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump({"artifacts": names}, f, indent=1)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

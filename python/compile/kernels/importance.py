@@ -1,0 +1,119 @@
+"""L1 — Pallas kernel: fused importance-weighted pruning mask.
+
+The paper's per-parameter hot spot (Sec. III-B/C): for every parameter,
+
+    importance I = |g| / (|w| + eps)            (the "ratio of parameter
+                                                 calculation gradient to
+                                                 parameter value")
+    transmit    = I > thr                        (fixed / layerwise thr)
+    or, with random gradient selection (Sec. III-C),
+    transmit    = u < I / thr    with u ~ U[0,1)  => P(update) = I/thr
+
+Both cases collapse to one branch-free compare:
+
+    mask = (I > u * thr)
+
+because u == 1.0 recovers the plain threshold and u ~ U[0,1) gives the
+randomized acceptance (I > thr implies I > u*thr for any u < 1).
+
+TPU adaptation (DESIGN.md §7): the GPU paper would run three elementwise
+kernels (score, compact, histogram).  Here everything is fused into ONE
+VMEM pass per 8192-element chunk — one HBM read of (g, w, u), one HBM
+write of (mask, I), plus per-chunk Σ/Σ² partials that feed the Eq. 4
+layer-wise threshold controller, so the layer statistics never require a
+second pass over HBM.  Masks are emitted as f32 0/1 (no cheap u8 vector
+path on the VPU); the wire encoding to bitmaps happens in L3 where bytes
+actually matter.
+
+interpret=True throughout: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the artifact executes
+on the rust CPU client.  Real-TPU perf is estimated structurally in
+DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Chunk of the flat parameter/gradient buffer processed per grid step.
+# 5 live f32 buffers x 32 KiB = 160 KiB << 16 MiB VMEM (double-buffer room).
+CHUNK = 8192
+
+# Number of per-chunk statistics emitted for the layerwise controller:
+# [sum(I), sum(I^2), n_selected, n_total]
+N_STATS = 4
+
+
+def _iwp_kernel(thr_ref, eps_ref, g_ref, w_ref, u_ref, mask_ref, imp_ref, stats_ref):
+    """One VMEM-resident chunk: score + mask + stats in a single pass."""
+    g = g_ref[...]
+    w = w_ref[...]
+    u = u_ref[...]
+    thr = thr_ref[0]
+    eps = eps_ref[0]
+
+    imp = jnp.abs(g) / (jnp.abs(w) + eps)
+    # Branch-free randomized threshold (see module docstring).
+    mask = (imp > u * thr).astype(jnp.float32)
+
+    imp_ref[...] = imp
+    mask_ref[...] = mask
+    # Per-chunk partial sums for the Eq. 4 layerwise controller — each grid
+    # step owns one row of the (n_chunks, N_STATS) output, so the layer
+    # statistics come out of the same single HBM pass as the mask.
+    stats_ref[0, 0] = jnp.sum(imp)
+    stats_ref[0, 1] = jnp.sum(imp * imp)
+    stats_ref[0, 2] = jnp.sum(mask)
+    stats_ref[0, 3] = jnp.float32(imp.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def importance_prune(g, w, u, thr, eps, *, interpret: bool = True):
+    """Fused importance scoring over a flat f32 buffer.
+
+    Args:
+      g:   f32[M]  flat gradient (M must be a multiple of CHUNK)
+      w:   f32[M]  flat parameter values
+      u:   f32[M]  uniform randoms in [0,1) (pass 1.0 to disable the
+                   random-selection path and get the hard threshold)
+      thr: f32[1]  importance threshold
+      eps: f32[1]  denominator guard
+
+    Returns:
+      mask:  f32[M]       1.0 = transmit, 0.0 = accumulate locally
+      imp:   f32[M]       importance scores |g|/(|w|+eps)
+      stats: f32[4]       [sum I, sum I^2, n_selected, n_total] over M
+    """
+    (m,) = g.shape
+    if m % CHUNK != 0:
+        raise ValueError(f"buffer length {m} not a multiple of CHUNK={CHUNK}")
+    n_chunks = m // CHUNK
+
+    mask, imp, stats = pl.pallas_call(
+        _iwp_kernel,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),      # thr (broadcast)
+            pl.BlockSpec((1,), lambda i: (0,)),      # eps (broadcast)
+            pl.BlockSpec((CHUNK,), lambda i: (i,)),  # g
+            pl.BlockSpec((CHUNK,), lambda i: (i,)),  # w
+            pl.BlockSpec((CHUNK,), lambda i: (i,)),  # u
+        ],
+        out_specs=[
+            pl.BlockSpec((CHUNK,), lambda i: (i,)),         # mask
+            pl.BlockSpec((CHUNK,), lambda i: (i,)),         # importance
+            pl.BlockSpec((1, N_STATS), lambda i: (i, 0)),   # per-chunk stats
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((n_chunks, N_STATS), jnp.float32),
+        ],
+        interpret=interpret,
+    )(thr, eps, g, w, u)
+    # Tiny tree-reduction over the per-chunk rows (n_chunks x 4 values).
+    return mask, imp, jnp.sum(stats, axis=0)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the importance-pruning kernel.
+
+This is the unfused reference the Pallas kernel is validated against
+(pytest `test_kernel.py`): same math, written the naive multi-pass way a
+GPU implementation of the paper would run it (score pass, mask pass,
+stats pass).  Numerics must match the kernel to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+N_STATS = 4
+
+
+def importance_scores(g, w, eps):
+    """I = |g| / (|w| + eps) — Sec. III-B's gradient importance."""
+    return jnp.abs(g) / (jnp.abs(w) + eps)
+
+
+def prune_mask(imp, u, thr):
+    """Randomized threshold: u==1 -> hard threshold, u~U[0,1) -> P=I/thr."""
+    return (imp > u * thr).astype(jnp.float32)
+
+
+def layer_stats(imp, mask):
+    """[sum I, sum I^2, n_selected, n_total] — inputs to Eq. 4."""
+    return jnp.stack(
+        [
+            jnp.sum(imp),
+            jnp.sum(imp * imp),
+            jnp.sum(mask),
+            jnp.float32(imp.shape[-1]),
+        ]
+    )
+
+
+def importance_prune_ref(g, w, u, thr, eps):
+    """Reference pipeline; mirrors kernels.importance.importance_prune."""
+    imp = importance_scores(g, w, eps[0])
+    mask = prune_mask(imp, u, thr[0])
+    return mask, imp, layer_stats(imp, mask)

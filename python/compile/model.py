@@ -1,0 +1,134 @@
+"""L2 facade: the jitted functions that become AOT artifacts.
+
+Each builder returns (fn, example_args, manifest_meta).  `aot.py` lowers
+fn via jax.jit(...).lower(*example_args) to HLO text and writes the
+manifest JSON the rust runtime uses to marshal Literals.
+
+The importance artifact is an L2 function that *calls the L1 Pallas
+kernel*, so the kernel lowers into the same HLO module (three-layer
+chain: rust -> this HLO -> pallas ops).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from compile.kernels import importance as iwp_kernel
+from compile.models import mlp, transformer
+
+
+def _shape_meta(shape_dtype_structs, names):
+    return [
+        {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+        for n, s in zip(names, shape_dtype_structs)
+    ]
+
+
+def _layer_meta(layers):
+    out, offset = [], 0
+    for name, shape, kind in layers:
+        size = 1
+        for d in shape:
+            size *= d
+        out.append(
+            {
+                "name": name,
+                "shape": list(shape),
+                "kind": kind,
+                "size": size,
+                "offset": offset,
+            }
+        )
+        offset += size
+    return out
+
+
+def build_importance(m: int):
+    """Importance kernel over a flat f32[m] buffer (m % CHUNK == 0)."""
+
+    def fn(g, w, u, thr, eps):
+        return iwp_kernel.importance_prune(g, w, u, thr, eps, interpret=True)
+
+    f32 = jnp.float32
+    import jax
+
+    args = (
+        jax.ShapeDtypeStruct((m,), f32),
+        jax.ShapeDtypeStruct((m,), f32),
+        jax.ShapeDtypeStruct((m,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )
+    meta = {
+        "kind": "importance",
+        "m": m,
+        "chunk": iwp_kernel.CHUNK,
+        "inputs": _shape_meta(args, ["g", "w", "u", "thr", "eps"]),
+        "outputs": [
+            {"name": "mask", "shape": [m], "dtype": "float32"},
+            {"name": "importance", "shape": [m], "dtype": "float32"},
+            {"name": "stats", "shape": [iwp_kernel.N_STATS], "dtype": "float32"},
+        ],
+    }
+    return fn, args, meta
+
+
+def build_mlp_train_step(batch_size: int):
+    def fn(*flat):
+        params, (x, y) = list(flat[:-2]), flat[-2:]
+        return mlp.train_step(params, x, y)
+
+    params, x, y = mlp.example_args(batch_size)
+    args = (*params, x, y)
+    names = [n for n, _, _ in mlp.LAYERS] + ["x", "y"]
+    meta = {
+        "kind": "train_step",
+        "model": "mlp",
+        "batch_size": batch_size,
+        "inputs": _shape_meta(args, names),
+        "outputs": (
+            [
+                {"name": "loss", "shape": [], "dtype": "float32"},
+                {"name": "acc", "shape": [], "dtype": "float32"},
+            ]
+            + [
+                {"name": "grad." + n, "shape": list(s), "dtype": "float32"}
+                for n, s, _ in mlp.LAYERS
+            ]
+        ),
+        "layers": _layer_meta(mlp.LAYERS),
+    }
+    return fn, args, meta
+
+
+def build_tfm_train_step(preset: str, batch_size: int):
+    cfg = transformer.PRESETS[preset]
+    layers = transformer.layer_spec(cfg)
+
+    def fn(*flat):
+        params, tokens = list(flat[:-1]), flat[-1]
+        return transformer.train_step(params, tokens, cfg)
+
+    params, tokens = transformer.example_args(cfg, batch_size)
+    args = (*params, tokens)
+    names = [n for n, _, _ in layers] + ["tokens"]
+    meta = {
+        "kind": "train_step",
+        "model": f"tfm_{preset}",
+        "batch_size": batch_size,
+        "seq_len": cfg.seq_len,
+        "vocab": cfg.vocab,
+        "n_params": transformer.n_params(cfg),
+        "inputs": _shape_meta(args, names),
+        "outputs": (
+            [{"name": "loss", "shape": [], "dtype": "float32"}]
+            + [
+                {"name": "grad." + n, "shape": list(s), "dtype": "float32"}
+                for n, s, _ in layers
+            ]
+        ),
+        "layers": _layer_meta(layers),
+    }
+    return fn, args, meta

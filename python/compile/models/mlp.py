@@ -1,0 +1,82 @@
+"""L2 — MLP image classifier (the paper's AlexNet-class stand-in).
+
+A 3-layer ReLU MLP over flattened 32x32x3 inputs, 10 classes — the small
+real model whose end-to-end training (PJRT from rust, N-node simulated
+ring) produces the *accuracy* columns of Table I and the Fig. 5/6 curves.
+The *ratio* columns run on the true AlexNet/ResNet50 layer inventories in
+rust (DESIGN.md §2).
+
+The train step is a single jitted function (loss, accuracy, grads) that
+AOT-lowers to one HLO artifact; parameters travel as a flat list of arrays
+so the rust side can treat them uniformly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IN_DIM = 3 * 32 * 32
+HIDDEN1 = 256
+HIDDEN2 = 128
+N_CLASSES = 10
+
+# (name, shape, kind) — kind feeds the layerwise controller, mirroring the
+# paper's conv/bn/fc distinction.
+LAYERS = [
+    ("fc1.weight", (IN_DIM, HIDDEN1), "fc"),
+    ("fc1.bias", (HIDDEN1,), "bias"),
+    ("fc2.weight", (HIDDEN1, HIDDEN2), "fc"),
+    ("fc2.bias", (HIDDEN2,), "bias"),
+    ("fc3.weight", (HIDDEN2, N_CLASSES), "fc"),
+    ("fc3.bias", (N_CLASSES,), "bias"),
+]
+
+
+def init_params(key):
+    """He-init params as the flat list the artifact expects."""
+    params = []
+    for name, shape, _kind in LAYERS:
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            scale = jnp.sqrt(2.0 / shape[0])
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def forward(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    h = jax.nn.relu(x @ w1 + b1)
+    h = jax.nn.relu(h @ w2 + b2)
+    return h @ w3 + b3  # logits
+
+
+def loss_fn(params, x, y_onehot):
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+    acc = jnp.mean(
+        (jnp.argmax(logits, -1) == jnp.argmax(y_onehot, -1)).astype(jnp.float32)
+    )
+    return loss, acc
+
+
+def train_step(params, x, y_f32):
+    """One local step: inputs all f32 (labels cast inside — keeps the rust
+    Literal marshalling single-dtype).  Returns (loss, acc, *grads)."""
+    y = y_f32.astype(jnp.int32)
+    y_onehot = jax.nn.one_hot(y, N_CLASSES, dtype=jnp.float32)
+    (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, x, y_onehot
+    )
+    return (loss, acc, *grads)
+
+
+def example_args(batch_size: int):
+    f32 = jnp.float32
+    params = [jax.ShapeDtypeStruct(s, f32) for _, s, _ in LAYERS]
+    x = jax.ShapeDtypeStruct((batch_size, IN_DIM), f32)
+    y = jax.ShapeDtypeStruct((batch_size,), f32)
+    return params, x, y

@@ -1,0 +1,160 @@
+"""L2 — decoder-only char-LM transformer (pre-LN, causal).
+
+The second real model for end-to-end validation: `examples/
+train_transformer.rs` trains it for a few hundred steps on the embedded
+tiny corpus over a simulated ring with IWP compression and logs the loss
+curve (EXPERIMENTS.md §E2E).
+
+Sizes are presets so the same artifact pipeline scales from ~0.4M params
+(CI-friendly on 1 CPU core) up to ~25M ("base", ResNet50-class parameter
+count) on real hardware.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TfmConfig:
+    vocab: int = 96
+    seq_len: int = 64
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+PRESETS = {
+    # ~0.42M params — default e2e driver (1 CPU core budget).
+    "tiny": TfmConfig(vocab=96, seq_len=64, d_model=128, n_layers=2, n_heads=4, d_ff=512),
+    # ~3.2M params — heavier local runs.
+    "small": TfmConfig(vocab=96, seq_len=128, d_model=256, n_layers=4, n_heads=8, d_ff=1024),
+    # ~25M params — ResNet50-class count; for real hardware.
+    "base": TfmConfig(vocab=96, seq_len=256, d_model=512, n_layers=8, n_heads=8, d_ff=2048),
+}
+
+
+def layer_spec(cfg: TfmConfig):
+    """(name, shape, kind) for every parameter, in artifact order."""
+    layers = [
+        ("embed.weight", (cfg.vocab, cfg.d_model), "embed"),
+        ("pos.weight", (cfg.seq_len, cfg.d_model), "embed"),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"block{i}."
+        layers += [
+            (p + "ln1.gain", (cfg.d_model,), "norm"),
+            (p + "ln1.bias", (cfg.d_model,), "bias"),
+            (p + "attn.wq", (cfg.d_model, cfg.d_model), "attn"),
+            (p + "attn.wk", (cfg.d_model, cfg.d_model), "attn"),
+            (p + "attn.wv", (cfg.d_model, cfg.d_model), "attn"),
+            (p + "attn.wo", (cfg.d_model, cfg.d_model), "attn"),
+            (p + "ln2.gain", (cfg.d_model,), "norm"),
+            (p + "ln2.bias", (cfg.d_model,), "bias"),
+            (p + "mlp.w1", (cfg.d_model, cfg.d_ff), "fc"),
+            (p + "mlp.b1", (cfg.d_ff,), "bias"),
+            (p + "mlp.w2", (cfg.d_ff, cfg.d_model), "fc"),
+            (p + "mlp.b2", (cfg.d_model,), "bias"),
+        ]
+    layers += [
+        ("lnf.gain", (cfg.d_model,), "norm"),
+        ("lnf.bias", (cfg.d_model,), "bias"),
+        ("head.weight", (cfg.d_model, cfg.vocab), "fc"),
+    ]
+    return layers
+
+
+def n_params(cfg: TfmConfig) -> int:
+    total = 0
+    for _, shape, _ in layer_spec(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def init_params(key, cfg: TfmConfig):
+    params = []
+    for name, shape, kind in layer_spec(cfg):
+        key, sub = jax.random.split(key)
+        if kind == "norm":
+            params.append(jnp.ones(shape, jnp.float32))
+        elif kind == "bias" or name.endswith(".bias"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            scale = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _layer_norm(x, gain, bias, eps=1e-5):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return gain * (x - mu) / jnp.sqrt(var + eps) + bias
+
+
+def _attention(x, wq, wk, wv, wo, cfg: TfmConfig):
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def split(proj):
+        return proj.reshape(b, t, h, dh).transpose(0, 2, 1, 3)  # b h t dh
+
+    q, k, v = split(x @ wq), split(x @ wk), split(x @ wv)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(dh))
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+    scores = jnp.where(causal[None, None] > 0, scores, -1e9)
+    attn = jax.nn.softmax(scores, -1)
+    out = (attn @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wo
+
+
+def forward(params, tokens, cfg: TfmConfig):
+    """tokens: i32[B, T] -> logits f32[B, T, vocab]."""
+    it = iter(params)
+    embed, pos = next(it), next(it)
+    x = embed[tokens] + pos[None, : tokens.shape[1]]
+    for _ in range(cfg.n_layers):
+        g1, b1 = next(it), next(it)
+        wq, wk, wv, wo = next(it), next(it), next(it), next(it)
+        g2, b2 = next(it), next(it)
+        mw1, mb1, mw2, mb2 = next(it), next(it), next(it), next(it)
+        x = x + _attention(_layer_norm(x, g1, b1), wq, wk, wv, wo, cfg)
+        h = _layer_norm(x, g2, b2)
+        x = x + jax.nn.relu(h @ mw1 + mb1) @ mw2 + mb2
+    gf, bf = next(it), next(it)
+    head = next(it)
+    return _layer_norm(x, gf, bf) @ head
+
+
+def loss_fn(params, inputs, targets, cfg: TfmConfig):
+    logits = forward(params, inputs, cfg)
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(targets, cfg.vocab, dtype=jnp.float32)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def train_step(params, tokens_f32, cfg: TfmConfig):
+    """tokens_f32: f32[B, T+1] (cast inside; rust marshals f32 only).
+    inputs = tokens[:, :T], targets = tokens[:, 1:].  Returns (loss, *grads)."""
+    tokens = tokens_f32.astype(jnp.int32)
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    loss, grads = jax.value_and_grad(loss_fn)(params, inputs, targets, cfg)
+    return (loss, *grads)
+
+
+def example_args(cfg: TfmConfig, batch_size: int):
+    f32 = jnp.float32
+    params = [jax.ShapeDtypeStruct(s, f32) for _, s, _ in layer_spec(cfg)]
+    tokens = jax.ShapeDtypeStruct((batch_size, cfg.seq_len + 1), f32)
+    return params, tokens

@@ -1,0 +1,42 @@
+"""AOT pipeline sanity: manifests match builder shapes; layers contiguous."""
+
+import jax.numpy as jnp
+
+from compile import model
+
+
+def _nelem(shape):
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def test_importance_manifest():
+    fn, args, meta = model.build_importance(16384)
+    assert meta["m"] == 16384 and meta["chunk"] == 8192
+    assert [i["name"] for i in meta["inputs"]] == ["g", "w", "u", "thr", "eps"]
+    out = fn(*[jnp.zeros(a.shape, jnp.float32) + 0.5 for a in args])
+    assert [list(o.shape) for o in out] == [o["shape"] for o in meta["outputs"]]
+
+
+def test_mlp_manifest_layers_contiguous():
+    _fn, _args, meta = model.build_mlp_train_step(8)
+    off = 0
+    for layer in meta["layers"]:
+        assert layer["offset"] == off
+        assert layer["size"] == _nelem(layer["shape"])
+        off += layer["size"]
+    total = off
+    assert total == sum(_nelem(s) for _, s, _ in __import__(
+        "compile.models.mlp", fromlist=["LAYERS"]).LAYERS)
+
+
+def test_tfm_manifest_consistent():
+    _fn, args, meta = model.build_tfm_train_step("tiny", 2)
+    assert meta["n_params"] == sum(l["size"] for l in meta["layers"])
+    assert len(meta["inputs"]) == len(meta["layers"]) + 1
+    # grads mirror params one-to-one
+    assert len(meta["outputs"]) == 1 + len(meta["layers"])
+    for layer, out in zip(meta["layers"], meta["outputs"][1:]):
+        assert out["shape"] == layer["shape"]

@@ -1,0 +1,100 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle.
+
+The CORE correctness signal for the compile path: hypothesis sweeps
+buffer sizes, value ranges, and thresholds; every case asserts
+allclose(kernel, ref) plus the semantic invariants of the paper's
+mask (Sec. III-B/C).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.importance import CHUNK, N_STATS, importance_prune
+
+
+def _mk(key, m, scale_g=1.0, scale_w=1.0):
+    kg, kw, ku = jax.random.split(key, 3)
+    g = scale_g * jax.random.normal(kg, (m,), jnp.float32)
+    w = scale_w * jax.random.normal(kw, (m,), jnp.float32)
+    u = jax.random.uniform(ku, (m,), jnp.float32)
+    return g, w, u
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_chunks=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    thr=st.sampled_from([0.005, 0.01, 0.05, 0.1, 1.0]),
+    scale_g=st.sampled_from([1e-3, 1.0, 10.0]),
+)
+def test_kernel_matches_ref(n_chunks, seed, thr, scale_g):
+    m = n_chunks * CHUNK
+    g, w, u = _mk(jax.random.PRNGKey(seed), m, scale_g=scale_g)
+    thr_a = jnp.array([thr], jnp.float32)
+    eps_a = jnp.array([1e-8], jnp.float32)
+    mask_k, imp_k, stats_k = importance_prune(g, w, u, thr_a, eps_a)
+    mask_r, imp_r, stats_r = ref.importance_prune_ref(g, w, u, thr_a, eps_a)
+    np.testing.assert_allclose(imp_k, imp_r, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(mask_k, mask_r)
+    np.testing.assert_allclose(stats_k, stats_r, rtol=1e-4)
+
+
+def test_hard_threshold_when_u_is_one():
+    m = CHUNK
+    g, w, _ = _mk(jax.random.PRNGKey(0), m)
+    u = jnp.ones((m,), jnp.float32)
+    thr = jnp.array([0.05], jnp.float32)
+    eps = jnp.array([1e-8], jnp.float32)
+    mask, imp, _ = importance_prune(g, w, u, thr, eps)
+    np.testing.assert_array_equal(mask, (imp > 0.05).astype(jnp.float32))
+
+
+def test_random_selection_rate():
+    """P(update) = importance/threshold for sub-threshold gradients."""
+    m = 4 * CHUNK
+    key = jax.random.PRNGKey(7)
+    # Construct importance exactly 0.5*thr everywhere -> expect ~50% selected.
+    thr = 0.1
+    g = jnp.full((m,), 0.05, jnp.float32)
+    w = jnp.full((m,), 1.0, jnp.float32)
+    u = jax.random.uniform(key, (m,), jnp.float32)
+    mask, _, stats = importance_prune(
+        g, w, u, jnp.array([thr], jnp.float32), jnp.array([0.0], jnp.float32)
+    )
+    rate = float(stats[2] / stats[3])
+    assert abs(rate - 0.5) < 0.02, rate
+
+
+def test_stats_are_sums_over_all_chunks():
+    m = 3 * CHUNK
+    g, w, u = _mk(jax.random.PRNGKey(3), m)
+    thr = jnp.array([0.01], jnp.float32)
+    eps = jnp.array([1e-8], jnp.float32)
+    mask, imp, stats = importance_prune(g, w, u, thr, eps)
+    assert stats.shape == (N_STATS,)
+    np.testing.assert_allclose(stats[0], jnp.sum(imp), rtol=1e-5)
+    np.testing.assert_allclose(stats[2], jnp.sum(mask), rtol=1e-6)
+    assert float(stats[3]) == m
+
+
+def test_rejects_non_chunk_multiple():
+    bad = jnp.zeros((CHUNK + 1,), jnp.float32)
+    one = jnp.array([1.0], jnp.float32)
+    with pytest.raises(ValueError):
+        importance_prune(bad, bad, bad, one, one)
+
+
+def test_zero_weights_guarded_by_eps():
+    m = CHUNK
+    g = jnp.ones((m,), jnp.float32)
+    w = jnp.zeros((m,), jnp.float32)
+    u = jnp.ones((m,), jnp.float32)
+    mask, imp, _ = importance_prune(
+        g, w, u, jnp.array([1.0], jnp.float32), jnp.array([1e-8], jnp.float32)
+    )
+    assert bool(jnp.all(jnp.isfinite(imp)))
+    assert bool(jnp.all(mask == 1.0))  # |1|/eps >> thr

@@ -1,0 +1,60 @@
+//! Local gradient clipping — applied per node *before* residual
+//! accumulation (the paper: "we has implemented warm-up training and
+//! local gradient clip", inherited from DGC where per-node clipping by
+//! N^{-1/2}-scaled global norm keeps the summed update bounded).
+
+/// Clip `grad` in place to `max_norm` (global L2). Returns the pre-clip
+/// norm. No-op if the norm is already within bounds or max_norm <= 0.
+pub fn clip_by_global_norm(grad: &mut [f32], max_norm: f32) -> f64 {
+    let norm = grad
+        .iter()
+        .map(|&v| (v as f64) * (v as f64))
+        .sum::<f64>()
+        .sqrt();
+    if max_norm > 0.0 && norm > max_norm as f64 {
+        let scale = (max_norm as f64 / norm) as f32;
+        grad.iter_mut().for_each(|v| *v *= scale);
+    }
+    norm
+}
+
+/// DGC's per-node scaling: each of N nodes clips to `global / sqrt(N)` so
+/// the *sum* stays within `global`.
+pub fn per_node_max_norm(global_max: f32, n_nodes: usize) -> f32 {
+    global_max / (n_nodes as f32).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clips_to_max_norm() {
+        let mut g = vec![3.0f32, 4.0]; // norm 5
+        let pre = clip_by_global_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-9);
+        let post = (g[0] * g[0] + g[1] * g[1]).sqrt();
+        assert!((post - 1.0).abs() < 1e-6);
+        // Direction preserved.
+        assert!((g[0] / g[1] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn within_bounds_untouched() {
+        let mut g = vec![0.3f32, 0.4];
+        clip_by_global_norm(&mut g, 1.0);
+        assert_eq!(g, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn zero_max_disables() {
+        let mut g = vec![100.0f32];
+        clip_by_global_norm(&mut g, 0.0);
+        assert_eq!(g, vec![100.0]);
+    }
+
+    #[test]
+    fn per_node_scaling() {
+        assert!((per_node_max_norm(4.0, 16) - 1.0).abs() < 1e-6);
+    }
+}

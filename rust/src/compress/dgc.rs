@@ -1,0 +1,123 @@
+//! Deep Gradient Compression baseline (Lin et al., 2017) — per-node top-k
+//! selection with momentum-corrected residuals.
+//!
+//! This is the method the paper argues *breaks on rings* (Sec. II): every
+//! node picks its own top-k support, so as chunks travel the ring the
+//! union of supports grows — "if we took the top 1% gradient on each
+//! node… the worst case is that the top k gradient is 2%" per hop, i.e.
+//! density → min(1, k·N/len).  `ring::sparse` measures exactly this;
+//! `exp::density` turns it into the density-growth figure.
+
+use super::residual::ResidualStore;
+use crate::sparse::SparseVec;
+
+/// DGC compressor state for one node.
+#[derive(Debug, Clone)]
+pub struct Dgc {
+    /// Fraction of coordinates transmitted per step (paper's 1% -> 0.01).
+    pub density: f64,
+    store: ResidualStore,
+}
+
+impl Dgc {
+    pub fn new(len: usize, density: f64, momentum: f32) -> Self {
+        assert!((0.0..=1.0).contains(&density));
+        Dgc {
+            density,
+            store: ResidualStore::new(len, momentum),
+        }
+    }
+
+    /// Warm-up aware density: DGC ramps 25% -> 6.25% -> … -> target over
+    /// the first epochs.
+    pub fn density_at_epoch(target: f64, epoch: usize, warmup_epochs: usize) -> f64 {
+        if epoch >= warmup_epochs {
+            return target;
+        }
+        // Geometric: start at 0.25 and interpolate towards target.
+        let start: f64 = 0.25;
+        let frac = epoch as f64 / warmup_epochs.max(1) as f64;
+        start * (target / start).powf(frac)
+    }
+
+    /// One step: accumulate the local gradient, emit the top-k sparse
+    /// update and clear those coordinates.
+    pub fn step(&mut self, grad: &[f32]) -> SparseVec {
+        self.store.accumulate(grad);
+        let k = ((self.store.len() as f64) * self.density).ceil() as usize;
+        let sparse = SparseVec::top_k(self.store.pending(), k);
+        // Momentum factor masking on the transmitted support.
+        let mut mask = crate::sparse::BitMask::zeros(self.store.len());
+        for &i in &sparse.idx {
+            mask.set(i as usize);
+        }
+        let _ = self.store.take_masked(&mask);
+        sparse
+    }
+
+    pub fn residual_norm(&self) -> f64 {
+        self.store.residual_norm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_requested_density() {
+        let mut d = Dgc::new(1000, 0.01, 0.0);
+        let g: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        let s = d.step(&g);
+        assert_eq!(s.nnz(), 10);
+    }
+
+    #[test]
+    fn residuals_flush_eventually() {
+        // A large coordinate not initially selected keeps accumulating
+        // until it wins top-k.
+        let mut d = Dgc::new(100, 0.01, 0.0); // k = 1
+        let mut g = vec![0.0f32; 100];
+        g[7] = 0.4; // runner-up each step
+        g[3] = 1.0; // winner each step
+        let s1 = d.step(&g);
+        assert_eq!(s1.idx, vec![3]);
+        // After enough steps, coord 7's residual (0.4 per step) exceeds
+        // coord 3's fresh 1.0: 3 steps -> 1.2.
+        let _ = d.step(&g);
+        let s3 = d.step(&g);
+        assert_eq!(s3.idx, vec![7], "residual accumulation must flush");
+    }
+
+    #[test]
+    fn warmup_density_ramps_down() {
+        let d0 = Dgc::density_at_epoch(0.001, 0, 4);
+        let d2 = Dgc::density_at_epoch(0.001, 2, 4);
+        let d4 = Dgc::density_at_epoch(0.001, 4, 4);
+        assert!((d0 - 0.25).abs() < 1e-9);
+        assert!(d2 < d0 && d2 > d4);
+        assert_eq!(d4, 0.001);
+    }
+
+    #[test]
+    fn transmitted_plus_residual_conserves_mass() {
+        let mut d = Dgc::new(50, 0.1, 0.0);
+        let g: Vec<f32> = (0..50).map(|i| i as f32 / 10.0).collect();
+        let injected: f64 = g.iter().map(|&v| v as f64).sum();
+        let s = d.step(&g);
+        let sent: f64 = s.val.iter().map(|&v| v as f64).sum();
+        // residual_norm is L2; recompute pending sum via another take.
+        let mut store_sum = 0.0;
+        let dense = {
+            let mut m = crate::sparse::BitMask::zeros(50);
+            for i in 0..50 {
+                m.set(i);
+            }
+            d.store.take_masked(&m)
+        };
+        for v in dense {
+            store_sum += v as f64;
+        }
+        assert!((injected - sent - store_sum).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,210 @@
+//! CPU importance scoring — the exact math of the L1 Pallas kernel
+//! (`python/compile/kernels/importance.py`), used (a) by the large
+//! synthetic-gradient experiments where PJRT round-trips per layer would
+//! dominate, and (b) as the cross-check oracle for the kernel-backed path
+//! (`tests/runtime_kernel.rs` asserts bit-level agreement on masks).
+
+use crate::model::ParamLayout;
+use crate::sparse::BitMask;
+use crate::util::stats::mean_var_from_sums;
+
+/// Default denominator guard (matches the artifact default).
+pub const EPS: f32 = 1e-8;
+
+/// Per-layer importance statistics — the kernel's `stats` output
+/// aggregated per layer: inputs to the Eq. 4 controller and to Fig. 4.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerStats {
+    pub sum: f64,
+    pub sumsq: f64,
+    pub n_selected: f64,
+    pub n: f64,
+}
+
+impl LayerStats {
+    pub fn mean(&self) -> f64 {
+        if self.n > 0.0 {
+            self.sum / self.n
+        } else {
+            0.0
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        mean_var_from_sums(self.sum, self.sumsq, self.n).1
+    }
+
+    /// The Eq. 4 dispersion factor.
+    pub fn var_over_mean(&self) -> f64 {
+        let m = self.mean();
+        if m.abs() < 1e-30 {
+            0.0
+        } else {
+            self.var() / m
+        }
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.n > 0.0 {
+            self.n_selected / self.n
+        } else {
+            0.0
+        }
+    }
+
+    pub fn merge(&mut self, other: &LayerStats) {
+        self.sum += other.sum;
+        self.sumsq += other.sumsq;
+        self.n_selected += other.n_selected;
+        self.n += other.n;
+    }
+
+    /// From the kernel's raw `[ΣI, ΣI², n_sel, n]` row.
+    pub fn from_kernel(stats: &[f32]) -> Self {
+        LayerStats {
+            sum: stats[0] as f64,
+            sumsq: stats[1] as f64,
+            n_selected: stats[2] as f64,
+            n: stats[3] as f64,
+        }
+    }
+}
+
+/// `out[i] = |g[i]| / (|w[i]| + eps)` — one flat buffer.
+pub fn scores_into(g: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    assert!(g.len() == w.len() && g.len() == out.len());
+    for i in 0..g.len() {
+        out[i] = g[i].abs() / (w[i].abs() + eps);
+    }
+}
+
+pub fn scores(g: &[f32], w: &[f32], eps: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; g.len()];
+    scores_into(g, w, eps, &mut out);
+    out
+}
+
+/// Masked scoring with randomized selection: `mask = I > u*thr` where
+/// `u == 1` disables the random path (the kernel's exact semantics).
+/// Returns per-buffer stats like the kernel's stats row.
+pub fn score_and_mask(
+    g: &[f32],
+    w: &[f32],
+    u: &[f32],
+    thr: f32,
+    eps: f32,
+    imp_out: &mut [f32],
+    mask_out: &mut BitMask,
+) -> LayerStats {
+    assert!(g.len() == w.len() && g.len() == u.len() && g.len() == imp_out.len());
+    assert_eq!(mask_out.len(), g.len());
+    let mut stats = LayerStats::default();
+    for i in 0..g.len() {
+        let imp = g[i].abs() / (w[i].abs() + eps);
+        imp_out[i] = imp;
+        stats.sum += imp as f64;
+        stats.sumsq += (imp as f64) * (imp as f64);
+        if imp > u[i] * thr {
+            mask_out.set(i);
+            stats.n_selected += 1.0;
+        }
+    }
+    stats.n = g.len() as f64;
+    stats
+}
+
+/// Per-layer stats over a whole model buffer (no masking) — the Fig. 2/3/4
+/// measurement pass.
+pub fn layer_stats(layout: &ParamLayout, imp: &[f32]) -> Vec<LayerStats> {
+    assert_eq!(imp.len(), layout.total_params());
+    layout
+        .layers()
+        .iter()
+        .map(|layer| {
+            let mut s = LayerStats::default();
+            for &v in &imp[layer.range()] {
+                s.sum += v as f64;
+                s.sumsq += (v as f64) * (v as f64);
+            }
+            s.n = layer.size as f64;
+            s
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LayerKind, ParamLayout};
+    use crate::util::prop::forall;
+
+    #[test]
+    fn scores_formula() {
+        let got = scores(&[1.0, -2.0, 0.0], &[0.5, -0.5, 2.0], 0.0);
+        assert_eq!(got, vec![2.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn eps_guards_zero_weight() {
+        let got = scores(&[1.0], &[0.0], 1e-8);
+        assert!(got[0].is_finite() && got[0] > 1e7);
+    }
+
+    #[test]
+    fn score_and_mask_hard_threshold() {
+        let g = [1.0f32, 0.01, 0.5];
+        let w = [1.0f32, 1.0, 1.0];
+        let u = [1.0f32; 3];
+        let mut imp = [0.0f32; 3];
+        let mut mask = BitMask::zeros(3);
+        let s = score_and_mask(&g, &w, &u, 0.1, 0.0, &mut imp, &mut mask);
+        assert!(mask.get(0) && !mask.get(1) && mask.get(2));
+        assert_eq!(s.n_selected, 2.0);
+        assert_eq!(s.n, 3.0);
+    }
+
+    #[test]
+    fn stats_match_direct_computation_property() {
+        forall("score stats == welford", 50, |gen| {
+            let n = gen.usize_in(1, 400);
+            let g = gen.vec_normal(n, 0.0, 1.0);
+            let w = gen.vec_normal(n, 0.0, 1.0);
+            let u = vec![1.0f32; n];
+            let mut imp = vec![0.0f32; n];
+            let mut mask = BitMask::zeros(n);
+            let s = score_and_mask(&g, &w, &u, 0.05, EPS, &mut imp, &mut mask);
+            let mean_direct =
+                imp.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+            assert!((s.mean() - mean_direct).abs() < 1e-6 * mean_direct.abs().max(1.0));
+            assert_eq!(s.n_selected as usize, mask.count());
+        });
+    }
+
+    #[test]
+    fn layer_stats_partition_global_sum() {
+        let layout = ParamLayout::new(
+            "t",
+            vec![
+                ("a".into(), vec![10], LayerKind::Fc),
+                ("b".into(), vec![5], LayerKind::Bias),
+            ],
+        );
+        let imp: Vec<f32> = (0..15).map(|i| i as f32).collect();
+        let per = layer_stats(&layout, &imp);
+        let total: f64 = per.iter().map(|s| s.sum).sum();
+        assert_eq!(total, (0..15).sum::<i32>() as f64);
+        assert_eq!(per[0].n, 10.0);
+        assert_eq!(per[1].n, 5.0);
+    }
+
+    #[test]
+    fn var_over_mean_of_constant_is_zero() {
+        let s = LayerStats {
+            sum: 100.0,
+            sumsq: 100.0,
+            n_selected: 0.0,
+            n: 100.0,
+        };
+        assert!(s.var_over_mean().abs() < 1e-9);
+    }
+}

@@ -1,0 +1,96 @@
+//! Gradient compression policies — the paper's contribution and its
+//! Table-I comparators.
+//!
+//! * `importance` — CPU mirror of the L1 Pallas kernel: `I = |g|/(|w|+ε)`
+//!   scoring + per-layer stats (the kernel-backed path lives in
+//!   `runtime::kernels` and is cross-validated against this in tests).
+//! * `threshold` — fixed and layer-wise (Eq. 4) threshold controllers.
+//! * `select` — random gradient selection, `P(update) = I/thr` (Sec. III-C).
+//! * `residual` — local accumulation with momentum (Eq. 3) + momentum
+//!   factor masking.
+//! * `clip` / `warmup` — DGC-inherited tricks the paper also applies.
+//! * `terngrad` / `dgc` — the baselines the paper compares against.
+
+pub mod clip;
+pub mod dgc;
+pub mod importance;
+pub mod residual;
+pub mod select;
+pub mod terngrad;
+pub mod threshold;
+pub mod warmup;
+
+/// The training methods of Table I (plus DGC for the §II density claim).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Dense synchronous SGD over ring all-reduce.
+    Baseline,
+    /// TernGrad ternary quantization.
+    TernGrad,
+    /// Importance-weighted pruning, one global threshold ("Fix Threshold").
+    IwpFixed,
+    /// Importance-weighted pruning with the Eq. 4 layer-wise controller.
+    IwpLayerwise,
+    /// Deep Gradient Compression top-k (per-node masks; densifies on ring).
+    Dgc,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "baseline" | "dense" => Method::Baseline,
+            "terngrad" => Method::TernGrad,
+            "iwp-fixed" | "fixed" => Method::IwpFixed,
+            "iwp-layerwise" | "layerwise" => Method::IwpLayerwise,
+            "dgc" | "topk" => Method::Dgc,
+            other => anyhow::bail!(
+                "unknown method `{other}` (baseline|terngrad|iwp-fixed|iwp-layerwise|dgc)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Baseline => "baseline",
+            Method::TernGrad => "terngrad",
+            Method::IwpFixed => "iwp-fixed",
+            Method::IwpLayerwise => "iwp-layerwise",
+            Method::Dgc => "dgc",
+        }
+    }
+
+    /// Paper's Table-I label.
+    pub fn table_label(&self) -> &'static str {
+        match self {
+            Method::Baseline => "Baseline",
+            Method::TernGrad => "TernGrad",
+            Method::IwpFixed => "Fix Threshold",
+            Method::IwpLayerwise => "Layerwise Threshold",
+            Method::Dgc => "DGC top-k",
+        }
+    }
+
+    pub fn all() -> [Method; 5] {
+        [
+            Method::Baseline,
+            Method::TernGrad,
+            Method::IwpFixed,
+            Method::IwpLayerwise,
+            Method::Dgc,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(Method::parse("layerwise").unwrap(), Method::IwpLayerwise);
+        assert!(Method::parse("nope").is_err());
+    }
+}

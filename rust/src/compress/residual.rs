@@ -1,0 +1,176 @@
+//! Residual accumulation with momentum (Eq. 3) — unsent gradients are not
+//! dropped; they accumulate locally and ride along once selected.
+//!
+//! Implements DGC-style *momentum correction*: instead of accumulating the
+//! raw gradient and applying momentum globally (which Eq. 2 shows would
+//! mis-weight stale coordinates), each node keeps
+//!
+//! ```text
+//! v_t = m * v_{t-1} + g_t          (per-node momentum buffer)
+//! r_t = r_{t-1} + v_t              (residual accumulation)
+//! transmit r_t ⊙ Mask; r_t ⊙ ¬Mask stays; v ⊙ Mask is cleared
+//! ```
+//!
+//! the last step being *momentum factor masking*, which stops stale
+//! momentum from pushing a just-transmitted coordinate twice.
+
+/// Per-node residual + momentum store over a flat parameter buffer.
+#[derive(Debug, Clone)]
+pub struct ResidualStore {
+    momentum: f32,
+    /// Momentum-corrected velocity v.
+    vel: Vec<f32>,
+    /// Accumulated unsent gradient r.
+    res: Vec<f32>,
+}
+
+impl ResidualStore {
+    pub fn new(len: usize, momentum: f32) -> Self {
+        assert!((0.0..1.0).contains(&momentum));
+        ResidualStore {
+            momentum,
+            vel: vec![0.0; len],
+            res: vec![0.0; len],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.res.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.res.is_empty()
+    }
+
+    /// Fold one local gradient into the store (velocity + residual).
+    pub fn accumulate(&mut self, grad: &[f32]) {
+        assert_eq!(grad.len(), self.res.len());
+        for i in 0..grad.len() {
+            self.vel[i] = self.momentum * self.vel[i] + grad[i];
+            self.res[i] += self.vel[i];
+        }
+    }
+
+    /// The value that *would* transmit per coordinate (for importance
+    /// scoring — the paper scores the accumulated update, Sec. III-B).
+    pub fn pending(&self) -> &[f32] {
+        &self.res
+    }
+
+    /// Extract the selected coordinates for transmission, zeroing their
+    /// residual AND velocity (momentum factor masking). `mask.get(i)` true
+    /// means coordinate i is transmitted this step.
+    pub fn take_masked(&mut self, mask: &crate::sparse::BitMask) -> Vec<f32> {
+        assert_eq!(mask.len(), self.res.len());
+        let mut out = Vec::with_capacity(mask.count());
+        for i in mask.iter_set() {
+            out.push(self.res[i]);
+            self.res[i] = 0.0;
+            self.vel[i] = 0.0;
+        }
+        out
+    }
+
+    /// Take everything (dense baseline path).
+    pub fn take_all(&mut self) -> Vec<f32> {
+        let out = self.res.clone();
+        self.res.iter_mut().for_each(|v| *v = 0.0);
+        self.vel.iter_mut().for_each(|v| *v = 0.0);
+        out
+    }
+
+    /// L2 norm of the unsent residual (diagnostic: gradient staleness mass).
+    pub fn residual_norm(&self) -> f64 {
+        self.res.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::BitMask;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn momentum_accumulation_matches_closed_form() {
+        let mut s = ResidualStore::new(1, 0.9);
+        s.accumulate(&[1.0]);
+        s.accumulate(&[1.0]);
+        // v1=1, r1=1; v2=0.9+1=1.9, r2=1+1.9=2.9
+        assert!((s.pending()[0] - 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn take_masked_zeroes_selected_only() {
+        let mut s = ResidualStore::new(4, 0.0);
+        s.accumulate(&[1.0, 2.0, 3.0, 4.0]);
+        let mut m = BitMask::zeros(4);
+        m.set(1);
+        m.set(3);
+        let sent = s.take_masked(&m);
+        assert_eq!(sent, vec![2.0, 4.0]);
+        assert_eq!(s.pending(), &[1.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn momentum_factor_masking_clears_velocity() {
+        let mut s = ResidualStore::new(2, 0.9);
+        s.accumulate(&[1.0, 1.0]);
+        let mut m = BitMask::zeros(2);
+        m.set(0);
+        let _ = s.take_masked(&m);
+        s.accumulate(&[0.0, 0.0]);
+        // Coord 0's velocity was cleared -> residual stays 0; coord 1 keeps
+        // compounding (0.9 * 1.0 added).
+        assert_eq!(s.pending()[0], 0.0);
+        assert!((s.pending()[1] - 1.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn no_gradient_mass_lost_property() {
+        // With momentum 0: every accumulated unit is either transmitted or
+        // still pending — conservation across arbitrary mask sequences.
+        forall("residual conserves gradient mass", 50, |gen| {
+            let n = gen.usize_in(1, 100);
+            let mut store = ResidualStore::new(n, 0.0);
+            let mut transmitted = vec![0.0f64; n];
+            let mut injected = vec![0.0f64; n];
+            for _ in 0..5 {
+                let g = gen.vec_normal(n, 0.0, 1.0);
+                for i in 0..n {
+                    injected[i] += g[i] as f64;
+                }
+                store.accumulate(&g);
+                let mut mask = BitMask::zeros(n);
+                for i in 0..n {
+                    if gen.bool() {
+                        mask.set(i);
+                    }
+                }
+                let sent = store.take_masked(&mask);
+                for (j, i) in mask.iter_set().enumerate() {
+                    transmitted[i] += sent[j] as f64;
+                }
+            }
+            for i in 0..n {
+                let pending = store.pending()[i] as f64;
+                assert!(
+                    (injected[i] - transmitted[i] - pending).abs() < 1e-4,
+                    "coord {i}: injected {} != sent {} + pending {}",
+                    injected[i],
+                    transmitted[i],
+                    pending
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn take_all_resets() {
+        let mut s = ResidualStore::new(3, 0.5);
+        s.accumulate(&[1.0, 2.0, 3.0]);
+        let all = s.take_all();
+        assert_eq!(all, vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.residual_norm(), 0.0);
+    }
+}

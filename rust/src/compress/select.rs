@@ -1,0 +1,75 @@
+//! Random gradient selection (Sec. III-C): sub-threshold gradients still
+//! transmit with probability `P(update) = importance / threshold`,
+//! countering gradient staleness ("most of the parameters are updated
+//! between 100-300 steps; the dated gradient will lead to errors in the
+//! direction of parameter update").
+//!
+//! Mechanism: the kernel's branch-free compare `I > u*thr` needs a `u`
+//! buffer — `fill_u` draws it (or fills 1.0 when the feature is off).
+
+use crate::util::rng::Rng;
+
+/// Fill the selection buffer: uniforms when enabled, 1.0 when disabled
+/// (disabled == exact hard threshold in the kernel/CPU compare).
+pub fn fill_u(rng: &mut Rng, enabled: bool, out: &mut [f32]) {
+    if enabled {
+        rng.fill_uniform(out);
+    } else {
+        out.iter_mut().for_each(|v| *v = 1.0);
+    }
+}
+
+/// Expected selection probability for a coordinate of importance `imp`
+/// under threshold `thr` (the paper's P(update), clamped to [0,1]).
+pub fn p_update(imp: f32, thr: f32) -> f32 {
+    if thr <= 0.0 {
+        1.0
+    } else {
+        (imp / thr).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn disabled_gives_hard_threshold() {
+        let mut rng = Rng::new(1);
+        let mut u = vec![0.0f32; 8];
+        fill_u(&mut rng, false, &mut u);
+        assert!(u.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn enabled_matches_p_update_empirically() {
+        // importance fixed at 0.3 * thr -> ~30% acceptance.
+        let mut rng = Rng::new(5);
+        let n = 100_000;
+        let mut u = vec![0.0f32; n];
+        fill_u(&mut rng, true, &mut u);
+        let thr = 0.1f32;
+        let imp = 0.03f32;
+        let selected = u.iter().filter(|&&ui| imp > ui * thr).count();
+        let rate = selected as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn p_update_clamps() {
+        assert_eq!(p_update(5.0, 0.1), 1.0);
+        assert!((p_update(0.05, 0.1) - 0.5).abs() < 1e-6);
+        assert_eq!(p_update(0.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn super_threshold_always_selected_property() {
+        forall("I > thr always transmits under any u", 100, |g| {
+            let thr = g.f32_in(0.001, 0.5);
+            let imp = thr * g.f32_in(1.001, 10.0);
+            let u = g.f32_in(0.0, 1.0);
+            assert!(imp > u * thr);
+        });
+    }
+}

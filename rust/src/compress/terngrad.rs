@@ -1,0 +1,177 @@
+//! TernGrad baseline (Wen et al., 2017) — Table I comparator.
+//!
+//! Each gradient coordinate is stochastically rounded to
+//! `s_t * sign(g) * b` with `b ∈ {0, 1}`, `P(b=1) = |g| / s_t`, where
+//! `s_t = max|g|` per layer (scaler sharing). The estimator is unbiased:
+//! `E[decode] = g`. Wire format: 2 bits/coordinate + one f32 scale per
+//! layer.
+
+use crate::model::ParamLayout;
+use crate::util::rng::Rng;
+
+/// Ternary-quantized gradient for one flat buffer.
+#[derive(Debug, Clone)]
+pub struct TernGrad {
+    pub len: usize,
+    /// Per-layer scales s_t.
+    pub scales: Vec<f32>,
+    /// 2-bit codes packed 4/byte: 0 -> 0, 1 -> +1, 2 -> -1.
+    pub codes: Vec<u8>,
+}
+
+const CODE_ZERO: u8 = 0;
+const CODE_POS: u8 = 1;
+const CODE_NEG: u8 = 2;
+
+impl TernGrad {
+    /// Quantize `grad` with per-layer scales (stochastic, unbiased).
+    pub fn encode(grad: &[f32], layout: &ParamLayout, rng: &mut Rng) -> Self {
+        assert_eq!(grad.len(), layout.total_params());
+        let mut scales = Vec::with_capacity(layout.n_layers());
+        let mut codes = vec![0u8; grad.len().div_ceil(4)];
+        for layer in layout.layers() {
+            let g = &grad[layer.range()];
+            let s = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            scales.push(s);
+            if s == 0.0 {
+                continue; // all codes stay zero
+            }
+            for (k, &v) in g.iter().enumerate() {
+                let i = layer.offset + k;
+                let p = v.abs() / s;
+                let code = if rng.uniform() < p {
+                    if v >= 0.0 {
+                        CODE_POS
+                    } else {
+                        CODE_NEG
+                    }
+                } else {
+                    CODE_ZERO
+                };
+                codes[i / 4] |= code << ((i % 4) * 2);
+            }
+        }
+        TernGrad {
+            len: grad.len(),
+            scales,
+            codes,
+        }
+    }
+
+    /// Decode back to a dense f32 buffer.
+    pub fn decode(&self, layout: &ParamLayout) -> Vec<f32> {
+        assert_eq!(self.len, layout.total_params());
+        let mut out = vec![0.0f32; self.len];
+        for (li, layer) in layout.layers().iter().enumerate() {
+            let s = self.scales[li];
+            for i in layer.range() {
+                let code = (self.codes[i / 4] >> ((i % 4) * 2)) & 0b11;
+                out[i] = match code {
+                    CODE_POS => s,
+                    CODE_NEG => -s,
+                    _ => 0.0,
+                };
+            }
+        }
+        out
+    }
+
+    /// Bytes on the wire: packed codes + per-layer scales + header.
+    pub fn wire_bytes(&self) -> u64 {
+        crate::sparse::HEADER_BYTES + self.codes.len() as u64 + 4 * self.scales.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LayerKind, ParamLayout};
+
+    fn layout(n: usize) -> ParamLayout {
+        ParamLayout::new("t", vec![("a".into(), vec![n], LayerKind::Fc)])
+    }
+
+    #[test]
+    fn decode_values_in_ternary_set() {
+        let mut rng = Rng::new(1);
+        let l = layout(64);
+        let g: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) / 10.0).collect();
+        let t = TernGrad::encode(&g, &l, &mut rng);
+        let d = t.decode(&l);
+        let s = t.scales[0];
+        for &v in &d {
+            assert!(v == 0.0 || (v - s).abs() < 1e-6 || (v + s).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn unbiased_estimator() {
+        let mut rng = Rng::new(2);
+        let l = layout(4);
+        let g = vec![0.5f32, -0.25, 1.0, 0.0];
+        let trials = 20_000;
+        let mut acc = vec![0.0f64; 4];
+        for _ in 0..trials {
+            let t = TernGrad::encode(&g, &l, &mut rng);
+            for (a, v) in acc.iter_mut().zip(t.decode(&l)) {
+                *a += v as f64;
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - g[i] as f64).abs() < 0.02,
+                "coord {i}: E={mean} vs g={}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn max_magnitude_always_transmits() {
+        let mut rng = Rng::new(3);
+        let l = layout(3);
+        let g = vec![0.1f32, -2.0, 0.1];
+        for _ in 0..50 {
+            let t = TernGrad::encode(&g, &l, &mut rng);
+            let d = t.decode(&l);
+            assert!((d[1] + 2.0).abs() < 1e-6); // P = |g|/s = 1
+        }
+    }
+
+    #[test]
+    fn wire_bytes_approx_quarter_byte_per_coord() {
+        let mut rng = Rng::new(4);
+        let l = layout(10_000);
+        let g = vec![0.1f32; 10_000];
+        let t = TernGrad::encode(&g, &l, &mut rng);
+        // 10k coords -> 2500 code bytes + 4 scale + 9 header.
+        assert_eq!(t.wire_bytes(), 2500 + 4 + 9);
+        // ~16x smaller than 40000 dense bytes.
+        assert!((10_000 * 4) as f64 / t.wire_bytes() as f64 > 15.0);
+    }
+
+    #[test]
+    fn zero_layer_encodes_to_zero() {
+        let mut rng = Rng::new(5);
+        let l = layout(16);
+        let g = vec![0.0f32; 16];
+        let t = TernGrad::encode(&g, &l, &mut rng);
+        assert!(t.decode(&l).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn multi_layer_scales_are_per_layer() {
+        let l = ParamLayout::new(
+            "t",
+            vec![
+                ("a".into(), vec![4], LayerKind::Fc),
+                ("b".into(), vec![4], LayerKind::Fc),
+            ],
+        );
+        let mut rng = Rng::new(6);
+        let g = vec![1.0, 1.0, 1.0, 1.0, 10.0, 10.0, 10.0, 10.0];
+        let t = TernGrad::encode(&g, &l, &mut rng);
+        assert_eq!(t.scales, vec![1.0, 10.0]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Threshold controllers: fixed (Sec. IV-A sweeps 0.005–0.1) and the
+//! Eq. 4 layer-wise adaptive rule.
+//!
+//! Eq. 4 (paper):
+//! ```text
+//! thr_layer = alpha_epoch + beta_epoch * (var/mean)   if var/mean > C
+//!           = alpha_epoch - beta_epoch * (var/mean)   otherwise
+//! ```
+//! Rationale (paper Sec. III-D): a large var/mean means the layer's
+//! importance distribution is disordered — compress harder (raise thr);
+//! a small var/mean with large mean means the layer matters — let more
+//! through (lower thr).  `alpha_epoch` is piecewise-constant over epoch
+//! intervals; warm-up scaling multiplies on top (see `warmup`).
+
+use super::importance::LayerStats;
+use crate::model::ParamLayout;
+
+/// Controller configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ThresholdCfg {
+    /// Base threshold α (also the fixed threshold when layerwise is off).
+    pub alpha: f32,
+    /// Dispersion gain β of Eq. 4.
+    pub beta: f32,
+    /// Dispersion crossover C of Eq. 4.
+    pub c: f32,
+    /// Epoch schedule for α: multiply by `alpha_decay` every
+    /// `alpha_epoch_interval` epochs (paper: "α can be set to a constant
+    /// within a certain epoch interval").
+    pub alpha_epoch_interval: usize,
+    pub alpha_decay: f32,
+}
+
+impl Default for ThresholdCfg {
+    fn default() -> Self {
+        ThresholdCfg {
+            alpha: 0.01,
+            beta: 0.002,
+            c: 1.0,
+            alpha_epoch_interval: 20,
+            alpha_decay: 1.25, // importance judgement tightens as lr decays
+        }
+    }
+}
+
+impl ThresholdCfg {
+    /// α at a given epoch.
+    pub fn alpha_at(&self, epoch: usize) -> f32 {
+        let k = (epoch / self.alpha_epoch_interval.max(1)) as i32;
+        self.alpha * self.alpha_decay.powi(k)
+    }
+}
+
+/// Threshold policy for one step.
+#[derive(Debug, Clone)]
+pub enum ThresholdPolicy {
+    /// One global threshold for every layer.
+    Fixed(f32),
+    /// Eq. 4 per-layer thresholds.
+    Layerwise(ThresholdCfg),
+}
+
+impl ThresholdPolicy {
+    /// Per-layer thresholds for this step. `stats[i]` are the layer-i
+    /// importance statistics measured on the *current* pending gradients
+    /// (the kernel's stats output aggregated per layer);
+    /// `warmup_mult` scales thresholds down during warm-up epochs.
+    pub fn layer_thresholds(
+        &self,
+        layout: &ParamLayout,
+        stats: &[LayerStats],
+        epoch: usize,
+        warmup_mult: f32,
+    ) -> Vec<f32> {
+        assert_eq!(stats.len(), layout.n_layers());
+        match self {
+            ThresholdPolicy::Fixed(thr) => {
+                vec![(thr * warmup_mult).max(0.0); layout.n_layers()]
+            }
+            ThresholdPolicy::Layerwise(cfg) => {
+                let alpha = cfg.alpha_at(epoch);
+                stats
+                    .iter()
+                    .map(|s| {
+                        let vm = s.var_over_mean() as f32;
+                        let thr = if vm > cfg.c {
+                            alpha + cfg.beta * vm
+                        } else {
+                            alpha - cfg.beta * vm
+                        };
+                        // A threshold can never go negative (that would
+                        // transmit everything regardless of importance).
+                        (thr * warmup_mult).max(0.0)
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LayerKind, ParamLayout};
+
+    fn layout2() -> ParamLayout {
+        ParamLayout::new(
+            "t",
+            vec![
+                ("a".into(), vec![8], LayerKind::Conv),
+                ("b".into(), vec![8], LayerKind::BatchNorm),
+            ],
+        )
+    }
+
+    fn stats_with_vm(vm: f64) -> LayerStats {
+        // mean = 1, var = vm  ->  sumsq/n - 1 = vm
+        LayerStats {
+            sum: 8.0,
+            sumsq: 8.0 * (1.0 + vm),
+            n_selected: 0.0,
+            n: 8.0,
+        }
+    }
+
+    #[test]
+    fn fixed_is_uniform() {
+        let p = ThresholdPolicy::Fixed(0.05);
+        let thr = p.layer_thresholds(&layout2(), &[stats_with_vm(0.1), stats_with_vm(5.0)], 0, 1.0);
+        assert_eq!(thr, vec![0.05, 0.05]);
+    }
+
+    #[test]
+    fn layerwise_raises_for_disordered_lowers_for_ordered() {
+        let cfg = ThresholdCfg {
+            alpha: 0.01,
+            beta: 0.002,
+            c: 1.0,
+            ..Default::default()
+        };
+        let p = ThresholdPolicy::Layerwise(cfg);
+        let thr = p.layer_thresholds(
+            &layout2(),
+            &[stats_with_vm(4.0), stats_with_vm(0.5)],
+            0,
+            1.0,
+        );
+        // Layer 0: vm=4 > C -> alpha + beta*4 = 0.018
+        assert!((thr[0] - 0.018).abs() < 1e-6, "{}", thr[0]);
+        // Layer 1: vm=0.5 <= C -> alpha - beta*0.5 = 0.009
+        assert!((thr[1] - 0.009).abs() < 1e-6, "{}", thr[1]);
+    }
+
+    #[test]
+    fn alpha_epoch_schedule() {
+        let cfg = ThresholdCfg::default();
+        assert_eq!(cfg.alpha_at(0), cfg.alpha);
+        assert_eq!(cfg.alpha_at(19), cfg.alpha);
+        assert!((cfg.alpha_at(20) - cfg.alpha * 1.25).abs() < 1e-9);
+        assert!((cfg.alpha_at(45) - cfg.alpha * 1.25 * 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warmup_scales_down() {
+        let p = ThresholdPolicy::Fixed(0.1);
+        let thr = p.layer_thresholds(&layout2(), &[stats_with_vm(0.0); 2], 0, 0.25);
+        assert_eq!(thr, vec![0.025, 0.025]);
+    }
+
+    #[test]
+    fn never_negative() {
+        let cfg = ThresholdCfg {
+            alpha: 0.001,
+            beta: 1.0,
+            c: 10.0, // vm below C -> alpha - beta*vm would go negative
+            ..Default::default()
+        };
+        let p = ThresholdPolicy::Layerwise(cfg);
+        let thr = p.layer_thresholds(&layout2(), &[stats_with_vm(5.0); 2], 0, 1.0);
+        assert!(thr.iter().all(|&t| t >= 0.0));
+    }
+}

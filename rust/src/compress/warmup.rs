@@ -1,0 +1,77 @@
+//! Warm-up training (Sec. IV-A, inherited from DGC): aggressive pruning
+//! from step 0 hurts early optimisation, so sparsity ramps up over the
+//! first epochs — implemented as a multiplier < 1 on the importance
+//! threshold that exponentially approaches 1.
+
+/// Warm-up schedule over epochs.
+#[derive(Debug, Clone, Copy)]
+pub struct Warmup {
+    pub epochs: usize,
+    /// Threshold multiplier at epoch 0 (e.g. 0.1 -> 10x laxer threshold).
+    pub start_mult: f32,
+}
+
+impl Default for Warmup {
+    fn default() -> Self {
+        Warmup {
+            epochs: 4,
+            start_mult: 0.1,
+        }
+    }
+}
+
+impl Warmup {
+    pub fn none() -> Self {
+        Warmup {
+            epochs: 0,
+            start_mult: 1.0,
+        }
+    }
+
+    /// Threshold multiplier at `epoch` — exponential ramp from
+    /// `start_mult` to 1.0 across `epochs` (DGC ramps density 25%, 6.25%,
+    /// …; the threshold-domain equivalent is a geometric multiplier).
+    pub fn multiplier(&self, epoch: usize) -> f32 {
+        if self.epochs == 0 || epoch >= self.epochs {
+            return 1.0;
+        }
+        let frac = epoch as f32 / self.epochs as f32;
+        // Geometric interpolation start_mult^(1-frac).
+        self.start_mult.powf(1.0 - frac)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ramps_from_start_to_one() {
+        let w = Warmup {
+            epochs: 4,
+            start_mult: 0.1,
+        };
+        assert!((w.multiplier(0) - 0.1).abs() < 1e-6);
+        assert!(w.multiplier(1) > w.multiplier(0));
+        assert!(w.multiplier(3) < 1.0);
+        assert_eq!(w.multiplier(4), 1.0);
+        assert_eq!(w.multiplier(100), 1.0);
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let w = Warmup::none();
+        assert_eq!(w.multiplier(0), 1.0);
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let w = Warmup::default();
+        let mut prev = 0.0;
+        for e in 0..=w.epochs {
+            let m = w.multiplier(e);
+            assert!(m >= prev);
+            prev = m;
+        }
+    }
+}

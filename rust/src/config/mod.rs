@@ -1,0 +1,249 @@
+//! Run configuration: CLI flags + key=value config files + presets.
+//!
+//! serde/toml are unreachable offline, so the file format is a strict
+//! `key = value` subset (one pair per line, `#` comments) — enough for
+//! reproducible experiment configs checked into `configs/`.
+
+use std::collections::BTreeMap;
+
+use crate::compress::Method;
+use crate::util::cli::Args;
+
+/// Everything a training / experiment run needs.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Simulated ring size.
+    pub nodes: usize,
+    /// `mlp` | `tfm_tiny` | zoo names for synthetic runs.
+    pub model: String,
+    pub method: Method,
+    /// Importance threshold (α for layerwise).
+    pub threshold: f32,
+    /// Eq. 4 dispersion gain β.
+    pub beta: f32,
+    /// Eq. 4 crossover C.
+    pub c: f32,
+    /// Number of random mask-broadcast nodes r (Alg. 1).
+    pub mask_nodes: usize,
+    /// Random gradient selection on/off (Sec. III-C).
+    pub random_select: bool,
+    pub momentum: f32,
+    pub lr: f32,
+    pub steps: usize,
+    pub batch_size: usize,
+    /// Steps per "epoch" for epoch-indexed schedules (small-scale stand-in).
+    pub steps_per_epoch: usize,
+    pub warmup_epochs: usize,
+    pub clip_norm: f32,
+    /// DGC baseline density.
+    pub dgc_density: f64,
+    pub seed: u64,
+    /// Link model.
+    pub bandwidth_mbps: f64,
+    pub latency_us: f64,
+    /// Artifact + output dirs.
+    pub artifacts_dir: String,
+    pub out_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            nodes: 4,
+            model: "mlp".into(),
+            method: Method::IwpLayerwise,
+            threshold: 0.01,
+            beta: 0.002,
+            c: 1.0,
+            mask_nodes: 2,
+            random_select: true,
+            momentum: 0.9,
+            lr: 0.05,
+            steps: 200,
+            batch_size: 32,
+            steps_per_epoch: 50,
+            warmup_epochs: 1,
+            clip_norm: 5.0,
+            dgc_density: 0.01,
+            seed: 42,
+            bandwidth_mbps: 117.0 * 1.048576, // gigabit usable, in MB/s
+            latency_us: 100.0,
+            artifacts_dir: "artifacts".into(),
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Apply CLI flag overrides on top of `self`.
+    pub fn apply_args(mut self, a: &Args) -> anyhow::Result<Self> {
+        if let Some(path) = a.str_opt("config") {
+            let text = std::fs::read_to_string(path)?;
+            self = self.apply_kv(&parse_kv(&text)?)?;
+        }
+        self.nodes = a.usize_or("nodes", self.nodes);
+        self.model = a.str_or("model", &self.model);
+        if let Some(m) = a.str_opt("method") {
+            self.method = Method::parse(m)?;
+        }
+        self.threshold = a.f64_or("thr", self.threshold as f64) as f32;
+        self.beta = a.f64_or("beta", self.beta as f64) as f32;
+        self.c = a.f64_or("c", self.c as f64) as f32;
+        self.mask_nodes = a.usize_or("mask-nodes", self.mask_nodes);
+        if a.switch("no-random-select") {
+            self.random_select = false;
+        }
+        self.momentum = a.f64_or("momentum", self.momentum as f64) as f32;
+        self.lr = a.f64_or("lr", self.lr as f64) as f32;
+        self.steps = a.usize_or("steps", self.steps);
+        self.batch_size = a.usize_or("batch", self.batch_size);
+        self.steps_per_epoch = a.usize_or("steps-per-epoch", self.steps_per_epoch);
+        self.warmup_epochs = a.usize_or("warmup-epochs", self.warmup_epochs);
+        self.clip_norm = a.f64_or("clip", self.clip_norm as f64) as f32;
+        self.dgc_density = a.f64_or("dgc-density", self.dgc_density);
+        self.seed = a.u64_or("seed", self.seed);
+        self.bandwidth_mbps = a.f64_or("bandwidth-mbps", self.bandwidth_mbps);
+        self.latency_us = a.f64_or("latency-us", self.latency_us);
+        self.artifacts_dir = a.str_or("artifacts", &self.artifacts_dir);
+        self.out_dir = a.str_or("out", &self.out_dir);
+        self.validate()?;
+        Ok(self)
+    }
+
+    fn apply_kv(mut self, kv: &BTreeMap<String, String>) -> anyhow::Result<Self> {
+        for (k, v) in kv {
+            match k.as_str() {
+                "nodes" => self.nodes = v.parse()?,
+                "model" => self.model = v.clone(),
+                "method" => self.method = Method::parse(v)?,
+                "threshold" | "thr" => self.threshold = v.parse()?,
+                "beta" => self.beta = v.parse()?,
+                "c" => self.c = v.parse()?,
+                "mask_nodes" => self.mask_nodes = v.parse()?,
+                "random_select" => self.random_select = v.parse()?,
+                "momentum" => self.momentum = v.parse()?,
+                "lr" => self.lr = v.parse()?,
+                "steps" => self.steps = v.parse()?,
+                "batch_size" => self.batch_size = v.parse()?,
+                "steps_per_epoch" => self.steps_per_epoch = v.parse()?,
+                "warmup_epochs" => self.warmup_epochs = v.parse()?,
+                "clip_norm" => self.clip_norm = v.parse()?,
+                "dgc_density" => self.dgc_density = v.parse()?,
+                "seed" => self.seed = v.parse()?,
+                "bandwidth_mbps" => self.bandwidth_mbps = v.parse()?,
+                "latency_us" => self.latency_us = v.parse()?,
+                "artifacts_dir" => self.artifacts_dir = v.clone(),
+                "out_dir" => self.out_dir = v.clone(),
+                other => anyhow::bail!("unknown config key `{other}`"),
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.nodes >= 2, "nodes must be >= 2");
+        anyhow::ensure!(self.threshold >= 0.0, "threshold must be >= 0");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.momentum),
+            "momentum must be in [0,1)"
+        );
+        anyhow::ensure!(self.lr > 0.0, "lr must be > 0");
+        anyhow::ensure!(
+            self.mask_nodes >= 1 && self.mask_nodes <= self.nodes,
+            "mask_nodes must be in [1, nodes]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.dgc_density),
+            "dgc_density must be in [0,1]"
+        );
+        anyhow::ensure!(self.steps_per_epoch > 0, "steps_per_epoch must be > 0");
+        Ok(())
+    }
+
+    pub fn link_spec(&self) -> crate::net::LinkSpec {
+        crate::net::LinkSpec::new(self.bandwidth_mbps * 1e6, self.latency_us * 1e-6)
+    }
+
+    pub fn epoch_of(&self, step: usize) -> usize {
+        step / self.steps_per_epoch
+    }
+}
+
+/// Parse `key = value` lines (# comments, blank lines ok).
+pub fn parse_kv(text: &str) -> anyhow::Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("config line {}: missing `=`", ln + 1))?;
+        out.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn kv_parsing() {
+        let kv = parse_kv("# comment\nnodes = 8\n\nmethod = dgc\n").unwrap();
+        assert_eq!(kv["nodes"], "8");
+        let cfg = Config::default().apply_kv(&kv).unwrap();
+        assert_eq!(cfg.nodes, 8);
+        assert_eq!(cfg.method, Method::Dgc);
+    }
+
+    #[test]
+    fn kv_rejects_unknown_key() {
+        let kv = parse_kv("bogus = 1").unwrap();
+        assert!(Config::default().apply_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn kv_rejects_missing_equals() {
+        assert!(parse_kv("nodes 8").is_err());
+    }
+
+    #[test]
+    fn args_override() {
+        let a = Args::parse(
+            ["train", "--nodes", "16", "--method", "iwp-fixed", "--thr", "0.05"]
+                .into_iter()
+                .map(String::from),
+        );
+        let cfg = Config::default().apply_args(&a).unwrap();
+        assert_eq!(cfg.nodes, 16);
+        assert_eq!(cfg.method, Method::IwpFixed);
+        assert!((cfg.threshold - 0.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = Config::default();
+        c.nodes = 1;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.mask_nodes = 10;
+        c.nodes = 4;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn epoch_indexing() {
+        let mut c = Config::default();
+        c.steps_per_epoch = 50;
+        assert_eq!(c.epoch_of(0), 0);
+        assert_eq!(c.epoch_of(49), 0);
+        assert_eq!(c.epoch_of(50), 1);
+    }
+}

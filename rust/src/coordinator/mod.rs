@@ -1,0 +1,20 @@
+//! The distributed trainer — the L3 composition of everything:
+//!
+//! ```text
+//! per step, per node:  PJRT train_step (L2 HLO, contains the L1 kernel
+//!                      lineage) -> local gradient
+//! per step, globally:  clip -> residual accumulate -> importance mask
+//!                      (L1 kernel via PJRT) -> ring all-reduce over the
+//!                      virtual network -> SGD update
+//! ```
+//!
+//! Replicas stay bit-identical across nodes (synchronous SGD), so the
+//! trainer keeps ONE parameter copy and per-node gradient/residual
+//! state — the transport still moves per-node data and accounts every
+//! wire byte.  Determinism note: node threads would buy nothing on this
+//! 1-core testbed and would cost reproducibility; the ring transport is
+//! the unit under test, not the OS scheduler (DESIGN.md §2).
+
+pub mod trainer;
+
+pub use trainer::{TrainOutcome, Trainer};

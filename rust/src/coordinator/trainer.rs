@@ -1,0 +1,499 @@
+//! End-to-end N-node trainer over the simulated ring.
+
+use crate::compress::importance::LayerStats;
+use crate::compress::residual::ResidualStore;
+use crate::compress::threshold::{ThresholdCfg, ThresholdPolicy};
+use crate::compress::{clip, dgc::Dgc, select, terngrad::TernGrad, warmup::Warmup, Method};
+use crate::config::Config;
+use crate::data::{CharCorpus, SynthClassification};
+use crate::metrics::CompressionAccount;
+use crate::model::ParamLayout;
+use crate::net::RingNet;
+use crate::optim::{LrSchedule, MomentumSgd};
+use crate::ring;
+use crate::runtime::{Artifact, ImportanceKernel, Runtime};
+use crate::sparse::BitMask;
+use crate::util::rng::Rng;
+
+/// What a training run produces (feeds Table I, Figs. 5–8, E2E log).
+#[derive(Debug, Clone, Default)]
+pub struct TrainOutcome {
+    /// (step, mean train loss across nodes).
+    pub losses: Vec<(usize, f64)>,
+    /// (step, eval loss, eval accuracy) — accuracy 0 for LM tasks.
+    pub evals: Vec<(usize, f64, f64)>,
+    /// Compression accounting over the whole run.
+    pub account: CompressionAccount,
+    /// Virtual seconds spent on the wire.
+    pub net_seconds: f64,
+    /// Node-0 I/O trace (KB/s series) for Fig. 7/8-style plots.
+    pub io_trace: Vec<(f64, f64)>,
+    pub peak_kbps: f64,
+    pub final_eval_loss: f64,
+    pub final_eval_acc: f64,
+}
+
+/// The data-side of a task.
+enum Task {
+    Mlp {
+        data: SynthClassification,
+        eval_x: Vec<f32>,
+        eval_y: Vec<f32>,
+    },
+    Lm {
+        corpus: CharCorpus,
+        seq_len: usize,
+        eval_tokens: Vec<f32>,
+    },
+}
+
+/// N-node synchronous trainer.
+pub struct Trainer {
+    cfg: Config,
+    art: Artifact,
+    layout: ParamLayout,
+    kernel: Option<ImportanceKernel>,
+    task: Task,
+    /// Flat parameter buffer (replicas are identical; see mod docs).
+    params: Vec<f32>,
+    /// Per-node residual stores (IWP methods).
+    stores: Vec<ResidualStore>,
+    /// Per-node DGC state.
+    dgcs: Vec<Dgc>,
+    opt: MomentumSgd,
+    lr: LrSchedule,
+    net: RingNet,
+    policy: ThresholdPolicy,
+    warmup: Warmup,
+    /// Trailing per-layer importance stats (layerwise controller input).
+    prev_stats: Vec<LayerStats>,
+    /// Per-node data RNG streams + one control stream.
+    node_rngs: Vec<Rng>,
+    ctl_rng: Rng,
+    /// Scratch: per-node gradient buffers.
+    grads: Vec<Vec<f32>>,
+    u_buf: Vec<f32>,
+    account_scratch: CompressionAccount,
+}
+
+impl Trainer {
+    /// Build a trainer from config; loads artifacts via the runtime.
+    pub fn new(cfg: Config, rt: &Runtime) -> anyhow::Result<Self> {
+        let (art_name, task) = match cfg.model.as_str() {
+            "mlp" => {
+                let data = SynthClassification::cifar_like(cfg.seed);
+                let (eval_x, eval_y) = data.eval_set(128, cfg.seed);
+                (
+                    "train_step_mlp_b32",
+                    Task::Mlp {
+                        data,
+                        eval_x,
+                        eval_y,
+                    },
+                )
+            }
+            "tfm_tiny" => {
+                let corpus = CharCorpus::tiny();
+                let mut erng = Rng::new(cfg.seed ^ 0xE7A1);
+                let eval_tokens = corpus.batch(&mut erng, 8, 64);
+                (
+                    "train_step_tfm_tiny_b8",
+                    Task::Lm {
+                        corpus,
+                        seq_len: 64,
+                        eval_tokens,
+                    },
+                )
+            }
+            other => anyhow::bail!("trainer model `{other}` (mlp|tfm_tiny)"),
+        };
+        let art = rt.load(art_name)?;
+        let layout = art.meta.layout()?;
+        let kernel = match cfg.method {
+            Method::IwpFixed | Method::IwpLayerwise => Some(ImportanceKernel::load(rt)?),
+            _ => None,
+        };
+        let total = layout.total_params();
+
+        let mut init_rng = Rng::new(cfg.seed ^ 0x1217);
+        let params = init_params(&layout, &mut init_rng);
+
+        let mut root = Rng::new(cfg.seed);
+        let node_rngs: Vec<Rng> = (0..cfg.nodes).map(|i| root.split(i as u64)).collect();
+        let ctl_rng = root.split(0xC011);
+
+        let policy = match cfg.method {
+            Method::IwpLayerwise => ThresholdPolicy::Layerwise(ThresholdCfg {
+                alpha: cfg.threshold,
+                beta: cfg.beta,
+                c: cfg.c,
+                ..Default::default()
+            }),
+            _ => ThresholdPolicy::Fixed(cfg.threshold),
+        };
+        let warmup = if cfg.warmup_epochs > 0 {
+            Warmup {
+                epochs: cfg.warmup_epochs,
+                start_mult: 0.1,
+            }
+        } else {
+            Warmup::none()
+        };
+
+        // Compressed paths carry momentum in the residual store (momentum
+        // correction); the global optimizer momentum is for dense paths.
+        let (opt_momentum, store_momentum) = match cfg.method {
+            Method::Baseline | Method::TernGrad => (cfg.momentum, 0.0),
+            _ => (0.0, cfg.momentum),
+        };
+
+        Ok(Trainer {
+            net: RingNet::new(cfg.nodes, cfg.link_spec(), 0.05),
+            stores: (0..cfg.nodes)
+                .map(|_| ResidualStore::new(total, store_momentum))
+                .collect(),
+            dgcs: (0..cfg.nodes)
+                .map(|_| Dgc::new(total, cfg.dgc_density, cfg.momentum))
+                .collect(),
+            opt: MomentumSgd::new(total, opt_momentum),
+            lr: LrSchedule::with_warmup(cfg.lr, cfg.steps_per_epoch / 2),
+            prev_stats: vec![LayerStats::default(); layout.n_layers()],
+            grads: vec![vec![0.0; total]; cfg.nodes],
+            u_buf: vec![1.0; total],
+            account_scratch: CompressionAccount::new(),
+            node_rngs,
+            ctl_rng,
+            policy,
+            warmup,
+            task,
+            params,
+            layout,
+            kernel,
+            art,
+            cfg,
+        })
+    }
+
+    pub fn layout(&self) -> &ParamLayout {
+        &self.layout
+    }
+
+    /// Dense per-node wire reference: 2(N-1)/N of the gradient bytes —
+    /// the denominator-side of the paper's compression ratio on a ring.
+    fn dense_ref_bytes(&self) -> u64 {
+        let n = self.cfg.nodes as u64;
+        2 * (n - 1) * self.layout.dense_bytes() / n
+    }
+
+    /// One local forward/backward on `node` — PJRT executes the L2 HLO.
+    /// Returns the train loss; fills `self.grads[node]`.
+    fn local_step(&mut self, node: usize) -> anyhow::Result<f64> {
+        let (loss, outs) = match &self.task {
+            Task::Mlp { data, .. } => {
+                let (x, y) = data.batch(&mut self.node_rngs[node], 32);
+                let mut inputs: Vec<&[f32]> = Vec::with_capacity(self.layout.n_layers() + 2);
+                let splits = self.layout.split(&self.params);
+                inputs.extend(splits);
+                inputs.push(&x);
+                inputs.push(&y);
+                let out = self.art.run_f32(&inputs)?;
+                (out[0][0] as f64, out[2..].to_vec())
+            }
+            Task::Lm {
+                corpus, seq_len, ..
+            } => {
+                let tokens = corpus.batch(&mut self.node_rngs[node], 8, *seq_len);
+                let mut inputs: Vec<&[f32]> = Vec::with_capacity(self.layout.n_layers() + 1);
+                let splits = self.layout.split(&self.params);
+                inputs.extend(splits);
+                inputs.push(&tokens);
+                let out = self.art.run_f32(&inputs)?;
+                (out[0][0] as f64, out[1..].to_vec())
+            }
+        };
+        // Flatten per-layer grads into the node's flat buffer.
+        let flat = &mut self.grads[node];
+        for (layer, g) in self.layout.layers().iter().zip(&outs) {
+            flat[layer.range()].copy_from_slice(g);
+        }
+        Ok(loss)
+    }
+
+    /// Evaluate on the held-out set (no update).
+    fn eval(&mut self) -> anyhow::Result<(f64, f64)> {
+        match &self.task {
+            Task::Mlp { eval_x, eval_y, .. } => {
+                let mut loss_sum = 0.0;
+                let mut acc_sum = 0.0;
+                let n_batches = eval_x.len() / (32 * 3072);
+                for b in 0..n_batches {
+                    let x = &eval_x[b * 32 * 3072..(b + 1) * 32 * 3072];
+                    let y = &eval_y[b * 32..(b + 1) * 32];
+                    let mut inputs: Vec<&[f32]> = Vec::new();
+                    inputs.extend(self.layout.split(&self.params));
+                    inputs.push(x);
+                    inputs.push(y);
+                    let out = self.art.run_f32(&inputs)?;
+                    loss_sum += out[0][0] as f64;
+                    acc_sum += out[1][0] as f64;
+                }
+                Ok((loss_sum / n_batches as f64, acc_sum / n_batches as f64))
+            }
+            Task::Lm { eval_tokens, .. } => {
+                let mut inputs: Vec<&[f32]> = Vec::new();
+                inputs.extend(self.layout.split(&self.params));
+                inputs.push(eval_tokens);
+                let out = self.art.run_f32(&inputs)?;
+                Ok((out[0][0] as f64, 0.0))
+            }
+        }
+    }
+
+    /// Run the configured number of steps.
+    pub fn run(&mut self) -> anyhow::Result<TrainOutcome> {
+        let mut out = TrainOutcome::default();
+        let eval_every = (self.cfg.steps / 20).max(5);
+        for step in 0..self.cfg.steps {
+            let loss = self.step(step)?;
+            out.losses.push((step, loss));
+            if step % eval_every == 0 || step + 1 == self.cfg.steps {
+                let (el, ea) = self.eval()?;
+                out.evals.push((step, el, ea));
+            }
+        }
+        let (el, ea) = self.eval()?;
+        out.final_eval_loss = el;
+        out.final_eval_acc = ea;
+        out.net_seconds = self.net.clock();
+        out.io_trace = self.net.trace().kbps_series(0);
+        out.peak_kbps = self.net.trace().peak_kbps(0);
+        out.account = std::mem::take(&mut self.account_scratch);
+        Ok(out)
+    }
+
+    /// One synchronous step across all nodes. Returns the mean train loss.
+    pub fn step(&mut self, step: usize) -> anyhow::Result<f64> {
+        let n = self.cfg.nodes;
+        let epoch = self.cfg.epoch_of(step);
+        let lr = self.lr.at(step);
+
+        // ---- local gradients (PJRT per node) -------------------------
+        let mut loss_sum = 0.0;
+        for node in 0..n {
+            loss_sum += self.local_step(node)?;
+        }
+
+        // ---- local gradient clipping ---------------------------------
+        if self.cfg.clip_norm > 0.0 {
+            let per_node = clip::per_node_max_norm(self.cfg.clip_norm, n);
+            for g in self.grads.iter_mut() {
+                clip::clip_by_global_norm(g, per_node);
+            }
+        }
+
+        // ---- reduce + update (method-specific) -----------------------
+        match self.cfg.method {
+            Method::Baseline => self.reduce_dense(lr)?,
+            Method::TernGrad => self.reduce_terngrad(lr)?,
+            Method::Dgc => self.reduce_dgc(lr, epoch)?,
+            Method::IwpFixed | Method::IwpLayerwise => self.reduce_iwp(lr, epoch)?,
+        }
+
+        // Small compute-phase gap so I/O traces show the paper's idle
+        // valleys between bursts (virtual time, trace realism only).
+        self.net.advance(0.01);
+
+        Ok(loss_sum / n as f64)
+    }
+
+    // ---- reduce paths ------------------------------------------------
+
+    fn reduce_dense(&mut self, lr: f32) -> anyhow::Result<()> {
+        let rep = ring::dense::allreduce(&mut self.net, &mut self.grads);
+        let n = self.cfg.nodes as f32;
+        // grads[0] now holds the sum; average and apply with momentum.
+        let avg: Vec<f32> = self.grads[0].iter().map(|&g| g / n).collect();
+        self.opt.step(&mut self.params, &avg, lr);
+        self.account_scratch.record_full(
+            self.dense_ref_bytes(),
+            rep.mean_bytes_per_node() as u64,
+            self.layout.dense_bytes(),
+            self.layout.dense_bytes(),
+            1.0,
+        );
+        Ok(())
+    }
+
+    fn reduce_terngrad(&mut self, lr: f32) -> anyhow::Result<()> {
+        let n = self.cfg.nodes;
+        // Encode per node, allgather the quantized blobs, decode + sum.
+        let mut sum = vec![0.0f32; self.layout.total_params()];
+        let mut blob_bytes = vec![0u64; n];
+        let before: Vec<u64> = (0..n).map(|i| self.net.node_tx_bytes(i)).collect();
+        for node in 0..n {
+            let t = TernGrad::encode(&self.grads[node], &self.layout, &mut self.node_rngs[node]);
+            blob_bytes[node] = t.wire_bytes();
+            for (s, v) in sum.iter_mut().zip(t.decode(&self.layout)) {
+                *s += v;
+            }
+        }
+        self.net.allgather(&blob_bytes);
+        let wire = (0..n)
+            .map(|i| self.net.node_tx_bytes(i) - before[i])
+            .sum::<u64>()
+            / n as u64;
+        let avg: Vec<f32> = sum.iter().map(|&g| g / n as f32).collect();
+        self.opt.step(&mut self.params, &avg, lr);
+        self.account_scratch.record_full(
+            self.dense_ref_bytes(),
+            wire,
+            self.layout.dense_bytes(),
+            blob_bytes[0],
+            1.0,
+        );
+        Ok(())
+    }
+
+    fn reduce_dgc(&mut self, lr: f32, epoch: usize) -> anyhow::Result<()> {
+        let n = self.cfg.nodes;
+        let density =
+            Dgc::density_at_epoch(self.cfg.dgc_density, epoch, self.cfg.warmup_epochs);
+        let sparses: Vec<_> = (0..n)
+            .map(|node| {
+                self.dgcs[node].density = density;
+                self.dgcs[node].step(&self.grads[node])
+            })
+            .collect();
+        let (sum, rep) = ring::sparse::allreduce(&mut self.net, &sparses);
+        let inv_n = 1.0 / n as f32;
+        for (i, &v) in sum.iter().enumerate() {
+            if v != 0.0 {
+                self.params[i] -= lr * v * inv_n;
+            }
+        }
+        let k = sparses[0].nnz();
+        let total = self.layout.total_params();
+        self.account_scratch.record_full(
+            self.dense_ref_bytes(),
+            rep.mean_bytes_per_node() as u64,
+            self.layout.dense_bytes(),
+            crate::sparse::wire_bytes(
+                crate::sparse::WireFormat::cheapest(total, k),
+                total,
+                k,
+            ),
+            rep.density_per_hop.last().copied().unwrap_or(density),
+        );
+        Ok(())
+    }
+
+    fn reduce_iwp(&mut self, lr: f32, epoch: usize) -> anyhow::Result<()> {
+        let n = self.cfg.nodes;
+        // Residual accumulation (momentum correction) on every node.
+        for node in 0..n {
+            self.stores[node].accumulate(&self.grads[node]);
+        }
+
+        // Per-layer thresholds from trailing stats (Eq. 4 controller).
+        let wmult = self.warmup.multiplier(epoch);
+        let thrs =
+            self.policy
+                .layer_thresholds(&self.layout, &self.prev_stats, epoch, wmult);
+
+        // Random broadcaster nodes (Alg. 1 line 6).
+        let broadcasters = self
+            .ctl_rng
+            .choose_distinct(n, self.cfg.mask_nodes.min(n));
+
+        // Each broadcaster scores its pending residuals with the L1
+        // kernel, layer by layer, and builds its mask.
+        let total = self.layout.total_params();
+        let mut masks: Vec<BitMask> = Vec::with_capacity(broadcasters.len());
+        let mut new_stats = vec![LayerStats::default(); self.layout.n_layers()];
+        let kernel = self
+            .kernel
+            .as_mut()
+            .expect("IWP methods always load the kernel");
+        for &b in &broadcasters {
+            select::fill_u(
+                &mut self.node_rngs[b],
+                self.cfg.random_select,
+                &mut self.u_buf,
+            );
+            let pending = self.stores[b].pending();
+            let weights = &self.params;
+            let mut mask = BitMask::zeros(total);
+            for (li, layer) in self.layout.layers().iter().enumerate() {
+                let r = layer.range();
+                let (m, _imp, st) = kernel.score(
+                    &pending[r.clone()],
+                    &weights[r.clone()],
+                    &self.u_buf[r.clone()],
+                    thrs[li],
+                    crate::compress::importance::EPS,
+                )?;
+                for i in m.iter_set() {
+                    mask.set(r.start + i);
+                }
+                new_stats[li].merge(&st);
+            }
+            masks.push(mask);
+        }
+        self.prev_stats = new_stats;
+
+        // Shared-mask ring all-reduce (Alg. 1 lines 7–12). `values`
+        // borrows `stores` while the net (a disjoint field) mutates.
+        let mask_refs: Vec<&BitMask> = masks.iter().collect();
+        let values: Vec<&[f32]> = self.stores.iter().map(|s| s.pending()).collect();
+        let (shared, summed, rep) =
+            ring::masked::allreduce(&mut self.net, &mask_refs, &values);
+
+        // Zero transmitted residual + velocity on every node.
+        for store in self.stores.iter_mut() {
+            let _ = store.take_masked(&shared);
+        }
+
+        // Sparse SGD update on the shared support (Alg. 1 line 13).
+        let support: Vec<usize> = shared.iter_set().collect();
+        let inv_n = 1.0 / n as f32;
+        let scaled: Vec<f32> = summed.iter().map(|&v| v * inv_n).collect();
+        self.opt.step_sparse(&mut self.params, &support, &scaled, lr);
+
+        let total = self.layout.total_params();
+        self.account_scratch.record_full(
+            self.dense_ref_bytes(),
+            rep.mean_bytes_per_node() as u64,
+            self.layout.dense_bytes(),
+            crate::sparse::wire_bytes(
+                crate::sparse::WireFormat::cheapest(total, support.len()),
+                total,
+                support.len(),
+            ),
+            shared.density(),
+        );
+        Ok(())
+    }
+}
+
+/// Kind-aware parameter init over a flat buffer (mirrors the python
+/// init; numerics need not match bit-for-bit, only distribution).
+pub fn init_params(layout: &ParamLayout, rng: &mut Rng) -> Vec<f32> {
+    let mut params = vec![0.0f32; layout.total_params()];
+    for layer in layout.layers() {
+        let p = &mut params[layer.range()];
+        match layer.kind {
+            crate::model::LayerKind::Norm => p.fill(1.0),
+            crate::model::LayerKind::Bias => {}
+            crate::model::LayerKind::BatchNorm => p.fill(1.0),
+            crate::model::LayerKind::Fc | crate::model::LayerKind::Conv => {
+                let sigma = (2.0 / layer.fan_in() as f32).sqrt();
+                rng.fill_normal(p, 0.0, sigma);
+            }
+            _ => {
+                let sigma = 1.0 / (layer.fan_in() as f32).sqrt();
+                rng.fill_normal(p, 0.0, sigma);
+            }
+        }
+    }
+    params
+}

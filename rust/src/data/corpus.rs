@@ -1,0 +1,161 @@
+//! Embedded tiny text corpus + char tokenizer for the transformer LM.
+//!
+//! Vocab = 96 printable ASCII codes (32..=126 plus newline mapped to 95),
+//! matching `python/compile/models/transformer.py`. The corpus is a
+//! distribution-systems themed passage embedded in the binary so the e2e
+//! driver needs no external data.
+
+const VOCAB: usize = 96;
+
+/// The training text. A few KB of real English prose is plenty for a
+/// char-LM to show a cleanly decreasing loss curve over a few hundred
+/// steps (EXPERIMENTS.md §E2E).
+pub const TINY_CORPUS: &str = "\
+Training deep neural networks on a single machine is limited by the memory \
+and compute of one accelerator, so modern systems distribute the work across \
+many nodes. In synchronous data parallel training every node holds a replica \
+of the model, computes gradients on its own shard of the data, and then all \
+nodes must agree on a single averaged gradient before taking a step. The \
+simplest design routes every gradient through a central parameter server, \
+but the server's network link saturates as the cluster grows. Ring all \
+reduce removes the central bottleneck: the nodes form a ring, each node \
+sends one chunk of its gradient to its neighbour while receiving another, \
+and after two sweeps around the ring every node holds the averaged result. \
+The bytes each node transmits are constant in the number of nodes, which \
+makes the ring attractive for large clusters built from commodity gigabit \
+ethernet rather than expensive infiniband fabrics. Even so, the gradient of \
+a modern network is tens or hundreds of megabytes, and exchanging it every \
+step keeps the links near full load. Gradient compression attacks this cost \
+directly. Most coordinates of the gradient barely move the weights, so a \
+node can transmit only the important coordinates and accumulate the rest \
+locally until they matter. Importance can be measured by the ratio of the \
+gradient to the weight it updates: a small weight moved by a large gradient \
+changes the function of the network far more than a large weight nudged \
+slightly. A fixed threshold on this ratio already removes most of the \
+traffic. A layer wise threshold adapts further, because convolutional \
+layers, normalisation layers and fully connected layers have very different \
+importance distributions, and the dispersion of each layer's distribution \
+signals whether its gradients are ordered enough to prune aggressively. \
+Pruning on a ring has a subtle failure mode: if every node selects its own \
+top coordinates, the union of selections grows at every hop and the \
+gradient arriving back at each node is nearly dense, wasting the bandwidth \
+the pruning was meant to save. Sharing one mask fixes this. A few randomly \
+chosen nodes broadcast the indices they consider important, every node \
+combines those masks, and the ring then reduces exactly the shared support, \
+so the sparsity survives the whole journey regardless of how many nodes \
+join the ring. Stale residuals are refreshed by occasionally transmitting \
+unimportant gradients with probability proportional to their importance, \
+which keeps slow moving parameters from freezing in place. Together these \
+pieces let a commodity cluster train image classifiers at full accuracy \
+while moving a tiny fraction of the original bytes.\n";
+
+/// Char tokenizer: printable ASCII 32..=126 -> 0..=94, everything else
+/// (incl. newline) -> 95.
+pub fn encode_char(c: u8) -> u8 {
+    if (32..=126).contains(&c) {
+        c - 32
+    } else {
+        (VOCAB - 1) as u8
+    }
+}
+
+pub fn decode_char(t: u8) -> char {
+    if (t as usize) < VOCAB - 1 {
+        (t + 32) as char
+    } else {
+        '\n'
+    }
+}
+
+/// Tokenized corpus with sharded batch sampling.
+#[derive(Debug, Clone)]
+pub struct CharCorpus {
+    tokens: Vec<u8>,
+    pub vocab: usize,
+}
+
+impl CharCorpus {
+    pub fn tiny() -> Self {
+        CharCorpus::from_text(TINY_CORPUS)
+    }
+
+    pub fn from_text(text: &str) -> Self {
+        CharCorpus {
+            tokens: text.bytes().map(encode_char).collect(),
+            vocab: VOCAB,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Sample a batch of (seq_len + 1)-token windows as f32 (the artifact
+    /// takes f32 tokens and casts inside — see transformer.py).
+    /// Returns a flat B*(seq_len+1) buffer.
+    pub fn batch(&self, rng: &mut crate::util::rng::Rng, batch: usize, seq_len: usize) -> Vec<f32> {
+        let window = seq_len + 1;
+        assert!(
+            self.tokens.len() > window,
+            "corpus shorter than one window"
+        );
+        let mut out = Vec::with_capacity(batch * window);
+        for _ in 0..batch {
+            let start = rng.below(self.tokens.len() - window);
+            out.extend(
+                self.tokens[start..start + window]
+                    .iter()
+                    .map(|&t| t as f32),
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn corpus_is_nontrivial() {
+        let c = CharCorpus::tiny();
+        assert!(c.len() > 2000, "corpus too small: {}", c.len());
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = CharCorpus::tiny();
+        assert!(c.tokens.iter().all(|&t| (t as usize) < VOCAB));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_printables() {
+        for c in 32u8..=126 {
+            assert_eq!(decode_char(encode_char(c)), c as char);
+        }
+        assert_eq!(decode_char(encode_char(b'\n')), '\n');
+    }
+
+    #[test]
+    fn batch_shape_and_range() {
+        let c = CharCorpus::tiny();
+        let mut rng = Rng::new(1);
+        let b = c.batch(&mut rng, 4, 64);
+        assert_eq!(b.len(), 4 * 65);
+        assert!(b.iter().all(|&t| t >= 0.0 && t < VOCAB as f32));
+    }
+
+    #[test]
+    fn batches_vary() {
+        let c = CharCorpus::tiny();
+        let mut rng = Rng::new(1);
+        let a = c.batch(&mut rng, 2, 32);
+        let b = c.batch(&mut rng, 2, 32);
+        assert_ne!(a, b);
+    }
+}

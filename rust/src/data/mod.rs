@@ -1,0 +1,9 @@
+//! Datasets: synthetic classification (CIFAR-stand-in for the MLP) and
+//! the embedded tiny text corpus (char-LM transformer). Both shard across
+//! simulated nodes the way the paper shards ImageNet across workers.
+
+pub mod corpus;
+pub mod synth;
+
+pub use corpus::CharCorpus;
+pub use synth::SynthClassification;

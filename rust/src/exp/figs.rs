@@ -1,0 +1,110 @@
+//! Figs. 2–4 — importance-distribution measurements.
+//!
+//! * Fig. 2: histogram of gradient importance, convolutional layers.
+//! * Fig. 3: histogram of gradient importance, batch-norm layers.
+//! * Fig. 4: var/mean of the first downsample layer over training steps
+//!   (the signal driving the Eq. 4 layerwise controller).
+
+use crate::compress::Method;
+use crate::csv_row;
+use crate::exp::simrun::{SimCfg, SimEngine};
+use crate::metrics::CsvWriter;
+use crate::model::zoo;
+use crate::model::LayerKind;
+use crate::util::stats::Histogram;
+
+/// Figs. 2/3: log10-importance histograms per layer kind at a few steps.
+pub fn run_fig2_fig3(out_dir: &str, steps: usize, seed: u64) -> anyhow::Result<()> {
+    let layout = zoo::resnet50();
+    let cfg = SimCfg {
+        nodes: 8,
+        method: Method::IwpFixed,
+        seed,
+        ..Default::default()
+    };
+    let mut engine = SimEngine::new(layout, cfg);
+
+    let snapshots = [0usize, steps / 2, steps.saturating_sub(1)];
+    let mut csv = CsvWriter::create(
+        format!("{out_dir}/fig2_fig3_importance_hist.csv"),
+        &["figure", "kind", "step", "log10_importance_bin", "count"],
+    )?;
+    println!("== Fig 2/3: importance distributions (ResNet50, synthetic grads) ==");
+    for s in 0..steps {
+        engine.step(s);
+        if !snapshots.contains(&s) {
+            continue;
+        }
+        let layout = engine.layout().clone();
+        let (imp, _) = engine.importance_snapshot();
+        for (fig, kind) in [("fig2", LayerKind::Conv), ("fig3", LayerKind::BatchNorm)] {
+            let mut hist = Histogram::log10(-8, 2, 5);
+            for layer in layout.of_kind(kind) {
+                for &v in &imp[layer.range()] {
+                    hist.push_log10(v as f64);
+                }
+            }
+            let total = hist.total().max(1);
+            let mut mode = (0.0, 0u64);
+            for (center, count) in hist.rows() {
+                csv_row!(csv, fig, kind.name(), s, center, count)?;
+                if count > mode.1 {
+                    mode = (center, count);
+                }
+            }
+            println!(
+                "  {fig} step {s:>4} {}: n={total}, mode at log10(I)≈{:.1}, under={} over={}",
+                kind.name(),
+                mode.0,
+                hist.under,
+                hist.over
+            );
+        }
+    }
+    csv.flush()?;
+    println!("paper: conv and bn importance distributions differ in location/shape;\n       both shift as training progresses");
+    Ok(())
+}
+
+/// Fig. 4: var/mean of the first downsample layer over steps.
+pub fn run_fig4(out_dir: &str, steps: usize, seed: u64) -> anyhow::Result<()> {
+    let layout = zoo::resnet50();
+    let target = "layer1.0.downsample.conv.weight";
+    let target_idx = layout
+        .layers()
+        .iter()
+        .position(|l| l.name == target)
+        .expect("resnet50 has a first downsample layer");
+    let cfg = SimCfg {
+        nodes: 8,
+        method: Method::IwpLayerwise,
+        seed,
+        ..Default::default()
+    };
+    let mut engine = SimEngine::new(layout, cfg);
+    let mut csv = CsvWriter::create(
+        format!("{out_dir}/fig4_var_over_mean.csv"),
+        &["step", "layer", "var_over_mean", "mean", "var"],
+    )?;
+    println!("== Fig 4: var/mean of `{target}` over steps ==");
+    let mut series = Vec::new();
+    for s in 0..steps {
+        engine.step(s);
+        let (_, stats) = engine.importance_snapshot();
+        let st = &stats[target_idx];
+        series.push(st.var_over_mean());
+        csv_row!(csv, s, target, st.var_over_mean(), st.mean(), st.var())?;
+    }
+    csv.flush()?;
+    let (min, max) = series
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &v| {
+            (lo.min(v), hi.max(v))
+        });
+    println!(
+        "  {} steps: var/mean in [{min:.3}, {max:.3}] — fluctuating layer dispersion",
+        series.len()
+    );
+    println!("paper: var/mean of the downsample layer fluctuates strongly over steps,\n       motivating the adaptive Eq. 4 threshold");
+    Ok(())
+}

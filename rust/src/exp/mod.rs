@@ -1,0 +1,18 @@
+//! Experiment harnesses — one per paper table/figure (DESIGN.md §5).
+//!
+//! Each harness regenerates its artifact as CSV rows under `--out`
+//! (default `results/`) and prints the same rows the paper reports.
+//! `ringiwp exp all` runs the whole battery.
+
+pub mod curves;
+pub mod density;
+pub mod figs;
+pub mod io_trace;
+pub mod simrun;
+pub mod sweep;
+pub mod table1;
+
+/// Shared output-directory helper.
+pub fn out_path(out_dir: &str, name: &str) -> String {
+    format!("{out_dir}/{name}")
+}

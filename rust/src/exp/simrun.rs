@@ -1,0 +1,435 @@
+//! Synthetic-gradient simulation engine — runs the full compression +
+//! ring transport stack over the paper's real AlexNet/ResNet50 layer
+//! inventories at any ring size, without PJRT (the models are far too
+//! large to *train* on this testbed; their wire behaviour is exact —
+//! DESIGN.md §2).
+//!
+//! The engine mirrors `coordinator::Trainer`'s reduce paths 1:1 but
+//! sources gradients from `grad::SynthGrads` and scores importance with
+//! the CPU mirror of the L1 kernel (bit-identical semantics, cross-
+//! validated in `tests/runtime_smoke.rs`).
+
+use crate::compress::importance::{score_and_mask, LayerStats, EPS};
+use crate::compress::residual::ResidualStore;
+use crate::compress::threshold::{ThresholdCfg, ThresholdPolicy};
+use crate::compress::{dgc::Dgc, select, terngrad::TernGrad, warmup::Warmup, Method};
+use crate::grad::SynthGrads;
+use crate::metrics::CompressionAccount;
+use crate::model::ParamLayout;
+use crate::net::{LinkSpec, RingNet};
+use crate::ring;
+use crate::sparse::BitMask;
+use crate::util::rng::Rng;
+
+/// Engine configuration (subset of `config::Config` relevant here).
+#[derive(Debug, Clone)]
+pub struct SimCfg {
+    pub nodes: usize,
+    pub method: Method,
+    pub threshold: f32,
+    pub beta: f32,
+    pub c: f32,
+    pub mask_nodes: usize,
+    pub random_select: bool,
+    pub momentum: f32,
+    pub dgc_density: f64,
+    pub steps_per_epoch: usize,
+    pub warmup_epochs: usize,
+    pub seed: u64,
+    pub link: LinkSpec,
+}
+
+impl Default for SimCfg {
+    fn default() -> Self {
+        SimCfg {
+            nodes: 96, // the paper's cluster size
+            method: Method::IwpFixed,
+            // Paper sweeps 0.005–0.1; the headline 64x/58.8x ratios live
+            // at the aggressive end once random selection (P = I/thr)
+            // adds its expected sub-threshold traffic.
+            threshold: 0.05,
+            beta: 0.002,
+            c: 1.0,
+            mask_nodes: 3,
+            random_select: true,
+            momentum: 0.9,
+            dgc_density: 0.01,
+            steps_per_epoch: 100,
+            warmup_epochs: 0,
+            seed: 17,
+            link: LinkSpec::gigabit_ethernet(),
+        }
+    }
+}
+
+/// Per-step report.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    pub wire_bytes_per_node: u64,
+    pub density: f64,
+    pub seconds: f64,
+}
+
+/// The simulation engine.
+pub struct SimEngine {
+    pub cfg: SimCfg,
+    layout: ParamLayout,
+    synth: SynthGrads,
+    stores: Vec<ResidualStore>,
+    dgcs: Vec<Dgc>,
+    net: RingNet,
+    policy: ThresholdPolicy,
+    warmup: Warmup,
+    /// Trailing per-layer stats (layerwise controller input, Fig. 4 data).
+    pub prev_stats: Vec<LayerStats>,
+    rngs: Vec<Rng>,
+    ctl_rng: Rng,
+    pub account: CompressionAccount,
+    imp_scratch: Vec<f32>,
+    u_scratch: Vec<f32>,
+    grads: Vec<Vec<f32>>,
+}
+
+impl SimEngine {
+    /// Cap on *materialized* node states. Nodes are exchangeable
+    /// (identical gradient distribution, disjoint shards), so wire
+    /// accounting at ring size N only needs: the r mask broadcasters'
+    /// residual states (IWP), one representative TernGrad encoder, and
+    /// per-node *supports* (DGC — synthesized as exchangeable draws
+    /// beyond the cap). Keeps 96-node x 61M-param sims in memory.
+    const SIM_NODE_CAP: usize = 4;
+
+    pub fn new(layout: ParamLayout, cfg: SimCfg) -> Self {
+        let total = layout.total_params();
+        let mut root = Rng::new(cfg.seed);
+        let policy = match cfg.method {
+            Method::IwpLayerwise => ThresholdPolicy::Layerwise(ThresholdCfg {
+                alpha: cfg.threshold,
+                beta: cfg.beta,
+                c: cfg.c,
+                ..Default::default()
+            }),
+            _ => ThresholdPolicy::Fixed(cfg.threshold),
+        };
+        let warmup = if cfg.warmup_epochs > 0 {
+            Warmup {
+                epochs: cfg.warmup_epochs,
+                start_mult: 0.1,
+            }
+        } else {
+            Warmup::none()
+        };
+        SimEngine {
+            synth: SynthGrads::new(layout.clone(), cfg.seed ^ 0x5EED),
+            stores: (0..cfg.nodes.min(Self::SIM_NODE_CAP))
+                .map(|_| ResidualStore::new(total, cfg.momentum))
+                .collect(),
+            dgcs: (0..cfg.nodes.min(Self::SIM_NODE_CAP))
+                .map(|_| Dgc::new(total, cfg.dgc_density, cfg.momentum))
+                .collect(),
+            net: RingNet::new(cfg.nodes, cfg.link, 0.05),
+            prev_stats: vec![LayerStats::default(); layout.n_layers()],
+            rngs: (0..cfg.nodes).map(|i| root.split(i as u64)).collect(),
+            ctl_rng: root.split(0xC011),
+            account: CompressionAccount::new(),
+            imp_scratch: vec![0.0; total],
+            u_scratch: vec![1.0; total],
+            grads: vec![vec![0.0; total]; cfg.nodes.min(Self::SIM_NODE_CAP)],
+            policy,
+            warmup,
+            layout,
+            cfg,
+        }
+    }
+
+    pub fn layout(&self) -> &ParamLayout {
+        &self.layout
+    }
+
+    pub fn net(&self) -> &RingNet {
+        &self.net
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.synth.weights
+    }
+
+    fn dense_ref_bytes(&self) -> u64 {
+        let n = self.cfg.nodes as u64;
+        2 * (n - 1) * self.layout.dense_bytes() / n
+    }
+
+    /// Importance scores of node 0's current pending gradient, per layer
+    /// (Figs. 2–4 measurement hook). Call after at least one `step`.
+    pub fn importance_snapshot(&mut self) -> (&[f32], Vec<LayerStats>) {
+        let pending = self.stores[0].pending();
+        let w = &self.synth.weights;
+        for i in 0..pending.len() {
+            self.imp_scratch[i] = pending[i].abs() / (w[i].abs() + EPS);
+        }
+        let stats = crate::compress::importance::layer_stats(&self.layout, &self.imp_scratch);
+        (&self.imp_scratch, stats)
+    }
+
+    /// One synchronous step: generate per-node gradients, compress,
+    /// ring-reduce, account.
+    pub fn step(&mut self, step: usize) -> StepReport {
+        let epoch = step / self.cfg.steps_per_epoch.max(1);
+        let sim_nodes = self.grads.len();
+        // Only materialize the gradient streams this method consumes
+        // (25M+-param fills dominate wall time otherwise).
+        let needed = match self.cfg.method {
+            Method::Baseline => 0,
+            Method::TernGrad => 1,
+            _ => sim_nodes,
+        };
+        for node in 0..needed {
+            self.synth.gen_step(step, &mut self.grads[node]);
+            // Decorrelate nodes with cheap multiplicative uniform jitter.
+            let rng = &mut self.rngs[node];
+            for v in self.grads[node].iter_mut() {
+                *v *= 0.85 + 0.3 * rng.uniform();
+            }
+        }
+
+        let t0 = self.net.clock();
+        let (wire, payload, density) = match self.cfg.method {
+            Method::Baseline => {
+                // Account-only dense ring (moving 61M f32 per node through
+                // the data path buys nothing here; bytes are exact).
+                let n = self.cfg.nodes;
+                let chunk_bytes: Vec<u64> = ring::chunk_ranges(self.layout.total_params(), n)
+                    .iter()
+                    .map(|r| (r.len() * 4) as u64)
+                    .collect();
+                for r in 0..2 * (n - 1) {
+                    let sends: Vec<u64> = (0..n)
+                        .map(|i| chunk_bytes[(i + n - (r % n)) % n])
+                        .collect();
+                    self.net.round(&sends);
+                }
+                (self.dense_ref_bytes(), self.layout.dense_bytes(), 1.0)
+            }
+            Method::TernGrad => {
+                // Blob sizes are shape-determined (codes + scales), so one
+                // representative encoding prices every node's blob.
+                let n = self.cfg.nodes;
+                let t = TernGrad::encode(&self.grads[0], &self.layout, &mut self.rngs[0]);
+                let blobs = vec![t.wire_bytes(); n];
+                let before = self.net.node_tx_bytes(0);
+                // Ternary values are not closed under addition, so a ring
+                // cannot scatter-REDUCE them — the quantized blobs must
+                // allgather (N-1 hops each). This is why quantization
+                // alone does not help rings (the paper's Sec. II point);
+                // the payload ratio below is TernGrad's native
+                // parameter-server number.
+                self.net.allgather(&blobs);
+                (self.net.node_tx_bytes(0) - before, t.wire_bytes(), 1.0)
+            }
+            Method::Dgc => {
+                let density =
+                    Dgc::density_at_epoch(self.cfg.dgc_density, epoch, self.cfg.warmup_epochs);
+                let total = self.layout.total_params();
+                let k = ((total as f64) * density).ceil() as usize;
+                // Real top-k supports for materialized nodes; exchangeable
+                // random k-subsets for the rest (supports across disjoint
+                // data shards are near-independent — the same assumption
+                // behind the paper's 1%->2% worst-case argument).
+                let mut supports: Vec<BitMask> = Vec::with_capacity(self.cfg.nodes);
+                for node in 0..sim_nodes {
+                    self.dgcs[node].density = density;
+                    let sv = self.dgcs[node].step(&self.grads[node]);
+                    let mut m = BitMask::zeros(total);
+                    for &i in &sv.idx {
+                        m.set(i as usize);
+                    }
+                    supports.push(m);
+                }
+                for node in sim_nodes..self.cfg.nodes {
+                    let rng = &mut self.rngs[node];
+                    let mut m = BitMask::zeros(total);
+                    for _ in 0..k {
+                        m.set(rng.below(total));
+                    }
+                    supports.push(m);
+                }
+                let rep = ring::sparse::allreduce_support(&mut self.net, &supports);
+                // Paper-metric payload: each node's own encoded top-k.
+                let payload = crate::sparse::wire_bytes(
+                    crate::sparse::WireFormat::cheapest(total, k),
+                    total,
+                    k,
+                );
+                (
+                    rep.mean_bytes_per_node() as u64,
+                    payload,
+                    rep.density_per_hop.last().copied().unwrap_or(density),
+                )
+            }
+            Method::IwpFixed | Method::IwpLayerwise => {
+                for node in 0..sim_nodes {
+                    self.stores[node].accumulate(&self.grads[node]);
+                }
+                let wmult = self.warmup.multiplier(epoch);
+                let thrs = self.policy.layer_thresholds(
+                    &self.layout,
+                    &self.prev_stats,
+                    epoch,
+                    wmult,
+                );
+                // Broadcasters drawn from the materialized (exchangeable)
+                // node states.
+                let broadcasters = self
+                    .ctl_rng
+                    .choose_distinct(sim_nodes, self.cfg.mask_nodes.min(sim_nodes));
+                let total = self.layout.total_params();
+                let mut masks = Vec::with_capacity(broadcasters.len());
+                let mut new_stats = vec![LayerStats::default(); self.layout.n_layers()];
+                for &b in &broadcasters {
+                    select::fill_u(
+                        &mut self.rngs[b],
+                        self.cfg.random_select,
+                        &mut self.u_scratch,
+                    );
+                    let pending = self.stores[b].pending();
+                    let mut mask = BitMask::zeros(total);
+                    for (li, layer) in self.layout.layers().iter().enumerate() {
+                        let r = layer.range();
+                        let mut layer_mask = BitMask::zeros(layer.size);
+                        let st = score_and_mask(
+                            &pending[r.clone()],
+                            &self.synth.weights[r.clone()],
+                            &self.u_scratch[r.clone()],
+                            thrs[li],
+                            EPS,
+                            &mut self.imp_scratch[r.clone()],
+                            &mut layer_mask,
+                        );
+                        for i in layer_mask.iter_set() {
+                            mask.set(r.start + i);
+                        }
+                        new_stats[li].merge(&st);
+                    }
+                    masks.push(mask);
+                }
+                self.prev_stats = new_stats;
+                let mask_refs: Vec<&BitMask> = masks.iter().collect();
+                let (shared, rep) =
+                    ring::masked::allreduce_bytes_only(&mut self.net, &mask_refs);
+                for store in self.stores.iter_mut() {
+                    let _ = store.take_masked(&shared);
+                }
+                // Paper-metric payload: encode(sparse(G)) per node — the
+                // selected values under the cheapest codec.
+                let nnz = shared.count();
+                let total = self.layout.total_params();
+                let payload = crate::sparse::wire_bytes(
+                    crate::sparse::WireFormat::cheapest(total, nnz),
+                    total,
+                    nnz,
+                );
+                (rep.mean_bytes_per_node() as u64, payload, shared.density())
+            }
+        };
+        // Compute-phase gap (ResNet50 on a 1080ti: ~0.35 s/step at the
+        // paper's batch size — gives Fig. 7/8 their burst/idle shape).
+        self.net.advance(0.35);
+
+        self.account.record_full(
+            self.dense_ref_bytes(),
+            wire,
+            self.layout.dense_bytes(),
+            payload,
+            density,
+        );
+        StepReport {
+            wire_bytes_per_node: wire,
+            density,
+            seconds: self.net.clock() - t0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::model::{LayerKind, ParamLayout};
+
+    fn small_layout() -> ParamLayout {
+        ParamLayout::new(
+            "small",
+            vec![
+                ("conv".into(), vec![32, 16, 3, 3], LayerKind::Conv),
+                ("bn".into(), vec![64], LayerKind::BatchNorm),
+                ("fc".into(), vec![128, 10], LayerKind::Fc),
+            ],
+        )
+    }
+
+    fn cfg(method: Method, nodes: usize) -> SimCfg {
+        SimCfg {
+            nodes,
+            method,
+            link: LinkSpec::new(1e9, 0.0),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn iwp_compresses_hard() {
+        let mut c = cfg(Method::IwpFixed, 8);
+        c.threshold = 0.05;
+        let mut e = SimEngine::new(small_layout(), c);
+        for s in 0..5 {
+            e.step(s);
+        }
+        assert!(e.account.ratio() > 4.0, "ratio {}", e.account.ratio());
+        assert!(e.account.mean_density() < 0.25);
+    }
+
+    #[test]
+    fn baseline_ratio_is_one() {
+        let mut e = SimEngine::new(small_layout(), cfg(Method::Baseline, 8));
+        e.step(0);
+        assert!((e.account.ratio() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dgc_density_grows_with_ring_but_iwp_does_not() {
+        let layout = small_layout();
+        let density_of = |method: Method, nodes: usize| -> f64 {
+            let mut c = cfg(method, nodes);
+            c.dgc_density = 0.01;
+            c.threshold = 0.05;
+            let mut e = SimEngine::new(layout.clone(), c);
+            let mut last = 0.0;
+            for s in 0..3 {
+                last = e.step(s).density;
+            }
+            last
+        };
+        let dgc_small = density_of(Method::Dgc, 4);
+        let dgc_big = density_of(Method::Dgc, 32);
+        assert!(
+            dgc_big > dgc_small * 2.0,
+            "DGC should densify: {dgc_small} -> {dgc_big}"
+        );
+        let iwp_small = density_of(Method::IwpFixed, 4);
+        let iwp_big = density_of(Method::IwpFixed, 32);
+        assert!(
+            (iwp_big / iwp_small.max(1e-9)) < 2.0,
+            "IWP should stay sparse: {iwp_small} -> {iwp_big}"
+        );
+    }
+
+    #[test]
+    fn resnet50_inventory_runs() {
+        let mut e = SimEngine::new(zoo::resnet50(), cfg(Method::IwpFixed, 4));
+        let rep = e.step(0);
+        assert!(rep.wire_bytes_per_node > 0);
+        assert!(rep.density < 1.0);
+        let (_imp, stats) = e.importance_snapshot();
+        assert_eq!(stats.len(), e.layout().n_layers());
+    }
+}

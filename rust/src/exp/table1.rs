@@ -1,0 +1,155 @@
+//! Table I — "Comparison of gradient compression ratio on ImageNet".
+//!
+//! Two halves (DESIGN.md §2):
+//! * **Ratio columns** — exact wire accounting of every method on the
+//!   real AlexNet / ResNet50 layer inventories, 96-node gigabit ring,
+//!   synthetic gradients (`SimEngine`).
+//! * **Accuracy columns** — real end-to-end training of the small PJRT
+//!   models (MLP / transformer) under the same methods, same seeds and
+//!   step budget, reporting final eval accuracy/loss.
+//!
+//! Paper values for comparison: AlexNet 64× (fixed) / 53× (layerwise),
+//! ResNet50 58.8× / 47.6×, TernGrad 8×, with ≤0.2pt top-1 delta.
+
+use crate::compress::Method;
+use crate::config::Config;
+use crate::coordinator::Trainer;
+use crate::csv_row;
+use crate::exp::simrun::{SimCfg, SimEngine};
+use crate::metrics::CsvWriter;
+use crate::model::zoo;
+use crate::runtime::Runtime;
+
+/// Ratio half: (model, method, payload_ratio, wire_ratio, mean_density).
+pub fn ratio_rows(
+    nodes: usize,
+    steps: usize,
+    threshold: f32,
+    seed: u64,
+) -> Vec<(String, Method, f64, f64, f64)> {
+    let mut rows = Vec::new();
+    for (model_name, layout) in [("AlexNet", zoo::alexnet()), ("ResNet50", zoo::resnet50())] {
+        for method in [
+            Method::Baseline,
+            Method::TernGrad,
+            Method::IwpFixed,
+            Method::IwpLayerwise,
+        ] {
+            let cfg = SimCfg {
+                nodes,
+                method,
+                threshold,
+                seed,
+                ..Default::default()
+            };
+            let mut engine = SimEngine::new(layout.clone(), cfg);
+            for s in 0..steps {
+                engine.step(s);
+            }
+            rows.push((
+                model_name.to_string(),
+                method,
+                engine.account.payload_ratio(),
+                engine.account.ratio(),
+                engine.account.mean_density(),
+            ));
+        }
+    }
+    rows
+}
+
+/// Accuracy half: train the real small models under each method.
+pub fn accuracy_rows(
+    rt: &Runtime,
+    steps: usize,
+    seed: u64,
+) -> anyhow::Result<Vec<(String, Method, f64, f64, f64)>> {
+    let mut rows = Vec::new();
+    for model in ["mlp"] {
+        for method in [
+            Method::Baseline,
+            Method::TernGrad,
+            Method::IwpFixed,
+            Method::IwpLayerwise,
+        ] {
+            let mut cfg = Config::default();
+            cfg.model = model.into();
+            cfg.method = method;
+            cfg.steps = steps;
+            cfg.seed = seed;
+            cfg.nodes = 4;
+            // Real small models early in training have importance values
+            // O(1-10) (large gradients vs freshly-initialized weights);
+            // the IWP threshold scales accordingly (the paper's 0.005-0.1
+            // regime corresponds to ImageNet steady-state gradients).
+            cfg.threshold = 200.0;
+            let mut t = Trainer::new(cfg, rt)?;
+            let out = t.run()?;
+            rows.push((
+                model.to_string(),
+                method,
+                out.final_eval_acc,
+                out.final_eval_loss,
+                out.account.ratio(),
+            ));
+        }
+    }
+    Ok(rows)
+}
+
+/// Full harness: print the table and write CSVs.
+pub fn run(
+    rt: Option<&Runtime>,
+    out_dir: &str,
+    nodes: usize,
+    sim_steps: usize,
+    train_steps: usize,
+    threshold: f32,
+    seed: u64,
+) -> anyhow::Result<()> {
+    println!("== Table I (ratio half): {nodes}-node ring, synthetic grads on real inventories ==");
+    println!("  CompressRatio = the paper's size[G]/size[encode(sparse(G))] payload metric;");
+    println!("  WireRatio additionally counts mask AllGather + ring transport end-to-end.");
+    println!(
+        "{:<10} {:<22} {:>14} {:>11} {:>12}",
+        "Model", "Training Method", "CompressRatio", "WireRatio", "MeanDensity"
+    );
+    let mut csv = CsvWriter::create(
+        format!("{out_dir}/table1_ratio.csv"),
+        &["model", "method", "compress_ratio_payload", "wire_ratio", "mean_density"],
+    )?;
+    for (model, method, payload, wire, density) in
+        ratio_rows(nodes, sim_steps, threshold, seed)
+    {
+        println!(
+            "{model:<10} {:<22} {payload:>13.1}x {wire:>10.1}x {density:>12.5}",
+            method.table_label()
+        );
+        csv_row!(csv, model.as_str(), method.name(), payload, wire, density)?;
+    }
+    csv.flush()?;
+
+    if let Some(rt) = rt {
+        println!("\n== Table I (accuracy half): real training, {train_steps} steps, 4-node ring ==");
+        println!(
+            "{:<10} {:<22} {:>10} {:>10} {:>14}",
+            "Model", "Training Method", "EvalAcc", "EvalLoss", "CompressRatio"
+        );
+        let mut csv = CsvWriter::create(
+            format!("{out_dir}/table1_accuracy.csv"),
+            &["model", "method", "eval_acc", "eval_loss", "compress_ratio"],
+        )?;
+        for (model, method, acc, loss, ratio) in accuracy_rows(rt, train_steps, seed)? {
+            println!(
+                "{model:<10} {:<22} {acc:>10.4} {loss:>10.4} {ratio:>13.1}x",
+                method.table_label()
+            );
+            csv_row!(csv, model.as_str(), method.name(), acc, loss, ratio)?;
+        }
+        csv.flush()?;
+    } else {
+        println!("\n(no artifacts — skipping accuracy half; run `make artifacts`)");
+    }
+    println!("\npaper: AlexNet 64x/53x, ResNet50 58.8x/47.6x, TernGrad 8x; accuracy within 0.2pt of baseline");
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Gradient substrates: synthetic generators for bandwidth-scale
+//! experiments (ImageNet-model inventories are too large to *train* on
+//! this testbed, but their gradient *statistics* are reproducible).
+
+pub mod synth;
+
+pub use synth::SynthGrads;

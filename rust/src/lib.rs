@@ -1,0 +1,39 @@
+//! `ringiwp` — Importance-Weighted Pruning on Ring AllReduce.
+//!
+//! A full reproduction of Cheng & Xu (2019), *Bandwidth Reduction using
+//! Importance Weighted Pruning on Ring AllReduce*, as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-training coordinator: ring
+//!   all-reduce schedules (dense / sparse / shared-mask), the compression
+//!   policies (IWP fixed & layerwise, DGC top-k, TernGrad), a virtual-time
+//!   network simulator with per-link I/O traces, the multi-node trainer,
+//!   and one experiment harness per paper table/figure.
+//! * **L2** — JAX train-step graphs (MLP classifier, char-LM transformer),
+//!   AOT-lowered to HLO text under `artifacts/`.
+//! * **L1** — the Pallas importance kernel (fused score + mask + layer
+//!   stats), called from L2 so it lowers into the same HLO.
+//!
+//! Python runs only at `make artifacts`; the request path (training steps,
+//! ring rounds) is pure Rust + PJRT.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod grad;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod optim;
+pub mod ring;
+pub mod runtime;
+pub mod sparse;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

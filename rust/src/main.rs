@@ -1,0 +1,230 @@
+//! `ringiwp` — CLI entrypoint for the Importance-Weighted-Pruning
+//! ring-all-reduce system (see README.md).
+//!
+//! Subcommands:
+//!   train   — run the N-node simulated-ring trainer on a real model
+//!   exp     — regenerate a paper table/figure (table1, fig2, …, all)
+//!   info    — show artifacts, platform, model inventories
+//!   help    — this text
+
+use ringiwp::config::Config;
+use ringiwp::coordinator::Trainer;
+use ringiwp::exp;
+use ringiwp::model::zoo;
+use ringiwp::runtime::Runtime;
+use ringiwp::util::cli::Args;
+use ringiwp::util::human_bytes;
+
+const USAGE: &str = "\
+ringiwp — Bandwidth Reduction using Importance Weighted Pruning on Ring AllReduce
+
+USAGE:
+    ringiwp <subcommand> [flags]
+
+SUBCOMMANDS:
+    train       train a real model (PJRT) on the simulated N-node ring
+                  --model mlp|tfm_tiny   --method baseline|terngrad|iwp-fixed|
+                  iwp-layerwise|dgc      --nodes N --steps N --thr X --seed N
+                  --mask-nodes R --no-random-select --config FILE --out DIR
+    exp         regenerate a paper experiment:
+                  --id table1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|density|sweep|all
+                  --out DIR (default results/) --steps N --nodes N --seed N
+    info        list artifacts, PJRT platform, zoo inventories
+    help        print this message
+
+Config file (--config): `key = value` lines; see configs/*.conf.
+Artifacts must exist (run `make artifacts` once).
+";
+
+fn main() {
+    env_logger_init();
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => {
+            let unknown = args.unknown();
+            if !unknown.is_empty() {
+                eprintln!("warning: unrecognized flags: {unknown:?}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn env_logger_init() {
+    // Minimal logger: honor RUST_LOG=debug for verbose traces.
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    fn max_level() -> log::Level {
+        match std::env::var("RUST_LOG").as_deref() {
+            Ok("debug") => log::Level::Debug,
+            Ok("trace") => log::Level::Trace,
+            _ => log::Level::Info,
+        }
+    }
+    let _ = log::set_logger(Box::leak(Box::new(L)));
+    log::set_max_level(log::LevelFilter::Debug);
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("exp") => cmd_exp(args),
+        Some("info") => cmd_info(args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown subcommand `{other}`\n\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = Config::default().apply_args(args)?;
+    let rt = Runtime::cpu(&cfg.artifacts_dir)?;
+    println!(
+        "training {} with {} on a {}-node ring (PJRT platform: {})",
+        cfg.model,
+        cfg.method.name(),
+        cfg.nodes,
+        rt.platform()
+    );
+    let out_dir = cfg.out_dir.clone();
+    let steps = cfg.steps;
+    let mut trainer = Trainer::new(cfg, &rt)?;
+    let t0 = std::time::Instant::now();
+    let out = trainer.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\nstep      train_loss");
+    let stride = (steps / 20).max(1);
+    for &(s, l) in out.losses.iter().filter(|(s, _)| s % stride == 0) {
+        println!("{s:>6}    {l:.4}");
+    }
+    println!("\nfinal eval: loss {:.4}, acc {:.4}", out.final_eval_loss, out.final_eval_acc);
+    println!(
+        "compression ratio: {:.1}x (mean selected density {:.5})",
+        out.account.ratio(),
+        out.account.mean_density()
+    );
+    println!(
+        "wire: {} total per-node (dense reference {}), {:.2} virtual net-seconds, peak {:.0} KB/s",
+        human_bytes(out.account.total_wire_bytes() as f64),
+        human_bytes(out.account.total_dense_bytes() as f64),
+        out.net_seconds,
+        out.peak_kbps
+    );
+    println!("wall time: {wall:.1}s ({:.2} s/step)", wall / steps as f64);
+
+    // Persist curves.
+    std::fs::create_dir_all(&out_dir)?;
+    use ringiwp::csv_row;
+    use ringiwp::metrics::CsvWriter;
+    let mut csv = CsvWriter::create(
+        format!("{out_dir}/train_losses.csv"),
+        &["step", "train_loss"],
+    )?;
+    for &(s, l) in &out.losses {
+        csv_row!(csv, s, l)?;
+    }
+    csv.flush()?;
+    println!("wrote {out_dir}/train_losses.csv");
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let id = args.str_or("id", "all");
+    let out_dir = args.str_or("out", "results");
+    let seed = args.u64_or("seed", 42);
+    let artifacts_dir = args.str_or("artifacts", "artifacts");
+    std::fs::create_dir_all(&out_dir)?;
+    let rt = Runtime::cpu(&artifacts_dir).ok();
+    if rt.is_none() {
+        eprintln!("note: artifacts not found — accuracy halves will be skipped");
+    }
+
+    let run_one = |id: &str, rt: Option<&Runtime>| -> anyhow::Result<()> {
+        match id {
+            "table1" => exp::table1::run(
+                rt,
+                &out_dir,
+                args.usize_or("nodes", 96),
+                args.usize_or("steps", 8),
+                args.usize_or("train-steps", 120),
+                args.f64_or("thr", 0.05) as f32,
+                seed,
+            ),
+            "fig2" | "fig3" => exp::figs::run_fig2_fig3(&out_dir, args.usize_or("steps", 12), seed),
+            "fig4" => exp::figs::run_fig4(&out_dir, args.usize_or("steps", 40), seed),
+            "fig5" | "fig6" => {
+                let rt = rt.ok_or_else(|| anyhow::anyhow!("fig5/6 need artifacts"))?;
+                exp::curves::run(rt, &out_dir, &args.str_or("model", "mlp"),
+                                 args.usize_or("steps", 150), seed)
+            }
+            "fig7" | "fig8" => exp::io_trace::run(
+                &out_dir,
+                args.usize_or("nodes", 96),
+                args.usize_or("steps", 6),
+                seed,
+            ),
+            "density" => exp::density::run(&out_dir, seed),
+            "sweep" => exp::sweep::run(rt, &out_dir, args.usize_or("steps", 6), seed),
+            other => anyhow::bail!("unknown experiment `{other}`"),
+        }
+    };
+
+    if id == "all" {
+        for id in ["table1", "fig2", "fig4", "fig5", "fig7", "density", "sweep"] {
+            println!("\n──────────────────────────── exp {id} ────────────────────────────");
+            run_one(id, rt.as_ref())?;
+        }
+        Ok(())
+    } else {
+        run_one(&id, rt.as_ref())
+    }
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let artifacts_dir = args.str_or("artifacts", "artifacts");
+    match Runtime::cpu(&artifacts_dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts ({artifacts_dir}):");
+            for name in rt.available()? {
+                let art = rt.load(&name)?;
+                println!(
+                    "  {name:<28} kind={:<12} inputs={} outputs={}",
+                    art.meta.kind,
+                    art.meta.inputs.len(),
+                    art.meta.outputs.len()
+                );
+            }
+        }
+        Err(e) => println!("no runtime: {e}"),
+    }
+    println!("\nzoo inventories:");
+    for layout in [zoo::alexnet(), zoo::resnet50()] {
+        println!(
+            "  {:<10} {:>4} layers, {:>11} params ({})",
+            layout.model,
+            layout.n_layers(),
+            layout.total_params(),
+            human_bytes(layout.dense_bytes() as f64)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,166 @@
+//! CSV output for every experiment (the figures' data files).
+
+use std::io::Write;
+use std::path::Path;
+
+/// Minimal CSV writer: header row + typed value rows, RFC-4180 quoting
+/// for strings.
+pub struct CsvWriter {
+    out: Box<dyn Write>,
+    n_cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = std::fs::File::create(path)?;
+        Self::from_writer(Box::new(std::io::BufWriter::new(file)), header)
+    }
+
+    pub fn from_writer(mut out: Box<dyn Write>, header: &[&str]) -> anyhow::Result<Self> {
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            n_cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, cells: &[CsvCell]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            cells.len() == self.n_cols,
+            "row has {} cells, header has {}",
+            cells.len(),
+            self.n_cols
+        );
+        let rendered: Vec<String> = cells.iter().map(|c| c.render()).collect();
+        writeln!(self.out, "{}", rendered.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// A single CSV cell.
+pub enum CsvCell {
+    Str(String),
+    F64(f64),
+    U64(u64),
+    Usize(usize),
+}
+
+impl CsvCell {
+    fn render(&self) -> String {
+        match self {
+            CsvCell::Str(s) => {
+                if s.contains(',') || s.contains('"') || s.contains('\n') {
+                    format!("\"{}\"", s.replace('"', "\"\""))
+                } else {
+                    s.clone()
+                }
+            }
+            CsvCell::F64(v) => format!("{v}"),
+            CsvCell::U64(v) => format!("{v}"),
+            CsvCell::Usize(v) => format!("{v}"),
+        }
+    }
+}
+
+impl From<&str> for CsvCell {
+    fn from(s: &str) -> Self {
+        CsvCell::Str(s.to_string())
+    }
+}
+impl From<f64> for CsvCell {
+    fn from(v: f64) -> Self {
+        CsvCell::F64(v)
+    }
+}
+impl From<u64> for CsvCell {
+    fn from(v: u64) -> Self {
+        CsvCell::U64(v)
+    }
+}
+impl From<usize> for CsvCell {
+    fn from(v: usize) -> Self {
+        CsvCell::Usize(v)
+    }
+}
+
+/// Convenience macro: `csv_row!(writer, "name", 1.5, 42usize)`.
+#[macro_export]
+macro_rules! csv_row {
+    ($w:expr, $($cell:expr),+ $(,)?) => {
+        $w.row(&[$($crate::metrics::csv::CsvCell::from($cell)),+])
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn render_rows(header: &[&str], rows: Vec<Vec<CsvCell>>) -> String {
+        let buf = std::sync::Arc::new(std::sync::Mutex::new(Vec::<u8>::new()));
+        struct Shared(std::sync::Arc<std::sync::Mutex<Vec<u8>>>);
+        impl Write for Shared {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut w =
+            CsvWriter::from_writer(Box::new(Shared(buf.clone())), header).unwrap();
+        for r in rows {
+            w.row(&r).unwrap();
+        }
+        w.flush().unwrap();
+        drop(w);
+        let bytes = buf.lock().unwrap().clone();
+        String::from_utf8(bytes).unwrap()
+    }
+
+    #[test]
+    fn writes_header_and_rows() {
+        let text = render_rows(
+            &["a", "b"],
+            vec![vec![CsvCell::from("x"), CsvCell::from(1.5f64)]],
+        );
+        assert_eq!(text, "a,b\nx,1.5\n");
+    }
+
+    #[test]
+    fn quotes_commas_and_quotes() {
+        let text = render_rows(
+            &["s"],
+            vec![vec![CsvCell::from("he said \"hi, there\"")]],
+        );
+        assert_eq!(text, "s\n\"he said \"\"hi, there\"\"\"\n");
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let buf: Vec<u8> = Vec::new();
+        let mut w = CsvWriter::from_writer(Box::new(buf), &["a", "b"]).unwrap();
+        assert!(w.row(&[CsvCell::from(1.0f64)]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let path = std::env::temp_dir().join("ringiwp_csv_test.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            csv_row!(w, 0usize, 2.5f64).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n0,2.5\n");
+        let _ = std::fs::remove_file(path);
+    }
+}

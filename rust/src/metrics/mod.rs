@@ -1,0 +1,7 @@
+//! Experiment metrics: loss/accuracy series, compression accounting, CSV.
+
+pub mod accounting;
+pub mod csv;
+
+pub use accounting::CompressionAccount;
+pub use csv::CsvWriter;

@@ -1,0 +1,259 @@
+//! `ParamLayout` — the bridge between flat f32 buffers (what the ring and
+//! the compression pipeline move around) and the model's layer structure
+//! (what the paper's *layer-wise* threshold controller needs).
+//!
+//! Layouts come from two sources: artifact manifests (`runtime::artifact`)
+//! for the real PJRT-trained models, and `model::zoo` for the paper's
+//! AlexNet/ResNet50 inventories used in the bandwidth experiments.
+
+use crate::util::json::Json;
+
+/// Layer taxonomy. The paper distinguishes conv vs batch-norm vs fc
+/// importance distributions (Figs. 2/3); the zoo and the manifests map
+/// onto this shared set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    Conv,
+    BatchNorm,
+    Fc,
+    Bias,
+    Embed,
+    Attn,
+    Norm,
+}
+
+impl LayerKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "conv" => LayerKind::Conv,
+            "bn" | "batchnorm" => LayerKind::BatchNorm,
+            "fc" => LayerKind::Fc,
+            "bias" => LayerKind::Bias,
+            "embed" => LayerKind::Embed,
+            "attn" => LayerKind::Attn,
+            "norm" => LayerKind::Norm,
+            other => anyhow::bail!("unknown layer kind `{other}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::Conv => "conv",
+            LayerKind::BatchNorm => "bn",
+            LayerKind::Fc => "fc",
+            LayerKind::Bias => "bias",
+            LayerKind::Embed => "embed",
+            LayerKind::Attn => "attn",
+            LayerKind::Norm => "norm",
+        }
+    }
+}
+
+/// One named parameter tensor inside the flat buffer.
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: LayerKind,
+    pub size: usize,
+    pub offset: usize,
+}
+
+impl LayerInfo {
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.size
+    }
+
+    /// Fan-in heuristic used by the synthetic gradient generator.
+    pub fn fan_in(&self) -> usize {
+        match self.shape.len() {
+            0 | 1 => self.shape.first().copied().unwrap_or(1),
+            2 => self.shape[0],
+            // conv OIHW: in_ch * kh * kw
+            _ => self.shape[1..].iter().product(),
+        }
+    }
+}
+
+/// Ordered layers tiling a flat parameter buffer without gaps.
+#[derive(Debug, Clone)]
+pub struct ParamLayout {
+    pub model: String,
+    layers: Vec<LayerInfo>,
+    total: usize,
+}
+
+impl ParamLayout {
+    pub fn new(model: impl Into<String>, specs: Vec<(String, Vec<usize>, LayerKind)>) -> Self {
+        let mut layers = Vec::with_capacity(specs.len());
+        let mut offset = 0;
+        for (name, shape, kind) in specs {
+            let size = shape.iter().product::<usize>().max(1);
+            layers.push(LayerInfo {
+                name,
+                shape,
+                kind,
+                size,
+                offset,
+            });
+            offset += size;
+        }
+        ParamLayout {
+            model: model.into(),
+            layers,
+            total: offset,
+        }
+    }
+
+    /// Parse the `layers` array of an artifact manifest.
+    pub fn from_manifest(model: &str, manifest: &Json) -> anyhow::Result<Self> {
+        let mut specs = Vec::new();
+        for layer in manifest.req_arr("layers")? {
+            let name = layer.req_str("name")?.to_string();
+            let shape: Vec<usize> = layer
+                .req_arr("shape")?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            let kind = LayerKind::parse(layer.req_str("kind")?)?;
+            specs.push((name, shape, kind));
+        }
+        let out = ParamLayout::new(model, specs);
+        // Cross-check offsets against the manifest (they are redundant but
+        // catching drift early beats silent corruption).
+        for (ours, theirs) in out.layers.iter().zip(manifest.req_arr("layers")?) {
+            let off = theirs.req_usize("offset")?;
+            anyhow::ensure!(
+                ours.offset == off,
+                "manifest offset mismatch for `{}`: {} vs {}",
+                ours.name,
+                ours.offset,
+                off
+            );
+        }
+        Ok(out)
+    }
+
+    pub fn layers(&self) -> &[LayerInfo] {
+        &self.layers
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total parameter count (== flat buffer length).
+    pub fn total_params(&self) -> usize {
+        self.total
+    }
+
+    pub fn layer(&self, i: usize) -> &LayerInfo {
+        &self.layers[i]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&LayerInfo> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Slice a flat buffer into per-layer sub-slices.
+    pub fn split<'a>(&self, flat: &'a [f32]) -> Vec<&'a [f32]> {
+        assert_eq!(flat.len(), self.total);
+        self.layers.iter().map(|l| &flat[l.range()]).collect()
+    }
+
+    /// Layers of a given kind.
+    pub fn of_kind(&self, kind: LayerKind) -> impl Iterator<Item = &LayerInfo> {
+        self.layers.iter().filter(move |l| l.kind == kind)
+    }
+
+    /// Bytes of one dense fp32 gradient exchange.
+    pub fn dense_bytes(&self) -> u64 {
+        (self.total * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn toy() -> ParamLayout {
+        ParamLayout::new(
+            "toy",
+            vec![
+                ("a".into(), vec![2, 3], LayerKind::Fc),
+                ("b".into(), vec![3], LayerKind::Bias),
+                ("c".into(), vec![4, 1, 2, 2], LayerKind::Conv),
+            ],
+        )
+    }
+
+    #[test]
+    fn offsets_tile_contiguously() {
+        let l = toy();
+        assert_eq!(l.total_params(), 6 + 3 + 16);
+        assert_eq!(l.layer(0).offset, 0);
+        assert_eq!(l.layer(1).offset, 6);
+        assert_eq!(l.layer(2).offset, 9);
+        assert_eq!(l.dense_bytes(), 25 * 4);
+    }
+
+    #[test]
+    fn split_returns_layer_views() {
+        let l = toy();
+        let flat: Vec<f32> = (0..25).map(|i| i as f32).collect();
+        let parts = l.split(&flat);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0], &flat[0..6]);
+        assert_eq!(parts[1], &flat[6..9]);
+        assert_eq!(parts[2], &flat[9..25]);
+    }
+
+    #[test]
+    fn fan_in_heuristics() {
+        let l = toy();
+        assert_eq!(l.layer(0).fan_in(), 2); // fc (in, out)
+        assert_eq!(l.layer(2).fan_in(), 1 * 2 * 2); // conv OIHW
+    }
+
+    #[test]
+    fn from_manifest_roundtrip() {
+        let m = json::parse(
+            r#"{"layers": [
+                {"name": "x", "shape": [4, 2], "kind": "fc", "size": 8, "offset": 0},
+                {"name": "y", "shape": [2], "kind": "bias", "size": 2, "offset": 8}
+            ]}"#,
+        )
+        .unwrap();
+        let l = ParamLayout::from_manifest("m", &m).unwrap();
+        assert_eq!(l.total_params(), 10);
+        assert_eq!(l.by_name("y").unwrap().kind, LayerKind::Bias);
+    }
+
+    #[test]
+    fn from_manifest_rejects_bad_offset() {
+        let m = json::parse(
+            r#"{"layers": [
+                {"name": "x", "shape": [4], "kind": "fc", "size": 4, "offset": 1}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(ParamLayout::from_manifest("m", &m).is_err());
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [
+            LayerKind::Conv,
+            LayerKind::BatchNorm,
+            LayerKind::Fc,
+            LayerKind::Bias,
+            LayerKind::Embed,
+            LayerKind::Attn,
+            LayerKind::Norm,
+        ] {
+            assert_eq!(LayerKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(LayerKind::parse("quux").is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Model metadata: parameter layouts over flat buffers + the layer
+//! inventories of the paper's evaluation models.
+
+pub mod layout;
+pub mod zoo;
+
+pub use layout::{LayerInfo, LayerKind, ParamLayout};

@@ -1,0 +1,167 @@
+//! Layer inventories of the paper's evaluation models.
+//!
+//! Table I and Figs. 2–4/7–8 are functions of *layer shapes* and wire
+//! bytes, not of trained weights; we therefore carry the exact parameter
+//! inventories of AlexNet (61.1M) and ResNet-50 (25.56M) — torchvision
+//! definitions — and drive them with realistic synthetic gradients
+//! (`grad::synth`).  DESIGN.md §2 records this substitution for the
+//! ImageNet-scale experiments; the *accuracy* experiments train real
+//! small models end-to-end instead.
+
+use super::layout::{LayerKind, ParamLayout};
+
+type Spec = (String, Vec<usize>, LayerKind);
+
+fn conv(name: &str, out_ch: usize, in_ch: usize, k: usize) -> Spec {
+    (name.into(), vec![out_ch, in_ch, k, k], LayerKind::Conv)
+}
+
+fn bias(name: &str, n: usize) -> Spec {
+    (name.into(), vec![n], LayerKind::Bias)
+}
+
+fn bn(name: &str, ch: usize) -> Vec<Spec> {
+    vec![
+        (format!("{name}.weight"), vec![ch], LayerKind::BatchNorm),
+        (format!("{name}.bias"), vec![ch], LayerKind::BatchNorm),
+    ]
+}
+
+fn fc(name: &str, in_f: usize, out_f: usize) -> Vec<Spec> {
+    vec![
+        (format!("{name}.weight"), vec![out_f, in_f], LayerKind::Fc),
+        (format!("{name}.bias"), vec![out_f], LayerKind::Bias),
+    ]
+}
+
+/// AlexNet (torchvision) — 61,100,840 parameters.
+pub fn alexnet() -> ParamLayout {
+    let mut s: Vec<Spec> = Vec::new();
+    for (name, o, i, k) in [
+        ("features.conv1", 64, 3, 11),
+        ("features.conv2", 192, 64, 5),
+        ("features.conv3", 384, 192, 3),
+        ("features.conv4", 256, 384, 3),
+        ("features.conv5", 256, 256, 3),
+    ] {
+        s.push(conv(&format!("{name}.weight"), o, i, k));
+        s.push(bias(&format!("{name}.bias"), o));
+    }
+    s.extend(fc("classifier.fc6", 256 * 6 * 6, 4096));
+    s.extend(fc("classifier.fc7", 4096, 4096));
+    s.extend(fc("classifier.fc8", 4096, 1000));
+    ParamLayout::new("alexnet", s)
+}
+
+/// ResNet-50 (torchvision) — 25,557,032 parameters (incl. BN affine).
+pub fn resnet50() -> ParamLayout {
+    resnet("resnet50", [3, 4, 6, 3], 1000)
+}
+
+/// ResNet-101 — 44,549,160 parameters; the paper also evaluates
+/// ResNet101 on CIFAR10 (10-class head).
+pub fn resnet101_cifar10() -> ParamLayout {
+    resnet("resnet101_cifar10", [3, 4, 23, 3], 10)
+}
+
+/// Bottleneck ResNet inventory generator.
+fn resnet(name: &str, blocks: [usize; 4], n_classes: usize) -> ParamLayout {
+    let mut s: Vec<Spec> = Vec::new();
+    // Stem.
+    s.push(conv("conv1.weight", 64, 3, 7));
+    s.extend(bn("bn1", 64));
+
+    // Bottleneck stages: (blocks, mid_ch, out_ch).
+    let stages = [
+        (blocks[0], 64usize, 256usize),
+        (blocks[1], 128, 512),
+        (blocks[2], 256, 1024),
+        (blocks[3], 512, 2048),
+    ];
+
+    let mut in_ch = 64;
+    for (si, (blocks, mid, out)) in stages.into_iter().enumerate() {
+        for b in 0..blocks {
+            let p = format!("layer{}.{}", si + 1, b);
+            s.push(conv(&format!("{p}.conv1.weight"), mid, in_ch, 1));
+            s.extend(bn(&format!("{p}.bn1"), mid));
+            s.push(conv(&format!("{p}.conv2.weight"), mid, mid, 3));
+            s.extend(bn(&format!("{p}.bn2"), mid));
+            s.push(conv(&format!("{p}.conv3.weight"), out, mid, 1));
+            s.extend(bn(&format!("{p}.bn3"), out));
+            if b == 0 {
+                // Downsample projection (the layer Fig. 4 tracks).
+                s.push(conv(&format!("{p}.downsample.conv.weight"), out, in_ch, 1));
+                s.extend(bn(&format!("{p}.downsample.bn"), out));
+            }
+            in_ch = out;
+        }
+    }
+    s.extend(fc("fc", 2048, n_classes));
+    ParamLayout::new(name, s)
+}
+
+/// Registry used by the CLI / experiment harness.
+pub fn by_name(name: &str) -> anyhow::Result<ParamLayout> {
+    match name {
+        "alexnet" => Ok(alexnet()),
+        "resnet50" => Ok(resnet50()),
+        "resnet101" | "resnet101_cifar10" => Ok(resnet101_cifar10()),
+        other => anyhow::bail!(
+            "unknown zoo model `{other}` (alexnet|resnet50|resnet101)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_exact_param_count() {
+        // torchvision.models.alexnet: 61,100,840
+        assert_eq!(alexnet().total_params(), 61_100_840);
+    }
+
+    #[test]
+    fn resnet50_exact_param_count() {
+        // torchvision.models.resnet50 trainable params: 25,557,032
+        assert_eq!(resnet50().total_params(), 25_557_032);
+    }
+
+    #[test]
+    fn resnet50_has_downsample_layers() {
+        let r = resnet50();
+        let ds: Vec<_> = r
+            .layers()
+            .iter()
+            .filter(|l| l.name.contains("downsample.conv"))
+            .collect();
+        assert_eq!(ds.len(), 4); // one per stage
+        assert_eq!(ds[0].name, "layer1.0.downsample.conv.weight");
+    }
+
+    #[test]
+    fn kind_mix() {
+        let r = resnet50();
+        assert!(r.of_kind(LayerKind::Conv).count() > 50);
+        assert!(r.of_kind(LayerKind::BatchNorm).count() > 100);
+        assert_eq!(r.of_kind(LayerKind::Fc).count(), 1);
+    }
+
+    #[test]
+    fn resnet101_cifar10_param_count() {
+        // torchvision resnet101 is 44,549,160 with a 1000-class head;
+        // the CIFAR10 head replaces 2048x1000+1000 with 2048x10+10.
+        let expect = 44_549_160 - (2048 * 1000 + 1000) + (2048 * 10 + 10);
+        assert_eq!(resnet101_cifar10().total_params(), expect);
+    }
+
+    #[test]
+    fn registry() {
+        assert!(by_name("alexnet").is_ok());
+        assert!(by_name("resnet50").is_ok());
+        assert!(by_name("resnet101").is_ok());
+        assert!(by_name("vgg").is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! Link bandwidth/latency model.
+
+/// Homogeneous link parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkSpec {
+    /// Usable bandwidth in bytes per second.
+    pub bandwidth_bps: f64,
+    /// Per-transfer latency in seconds (propagation + stack overhead).
+    pub latency_s: f64,
+}
+
+impl LinkSpec {
+    pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
+        assert!(bandwidth_bps > 0.0 && latency_s >= 0.0);
+        LinkSpec {
+            bandwidth_bps,
+            latency_s,
+        }
+    }
+
+    /// The paper's testbed: gigabit Ethernet, no Infiniband.
+    /// ~117 MiB/s usable (protocol overhead off 125 MB/s line rate) and
+    /// 100 µs software latency.
+    pub fn gigabit_ethernet() -> Self {
+        LinkSpec::new(117.0 * 1024.0 * 1024.0, 100e-6)
+    }
+
+    /// 10-gigabit variant for scaling sweeps.
+    pub fn ten_gigabit() -> Self {
+        LinkSpec::new(1170.0 * 1024.0 * 1024.0, 50e-6)
+    }
+
+    /// Time to move `bytes` across this link. Zero-byte transfers are
+    /// free (no message sent).
+    #[inline]
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.latency_s + bytes as f64 / self.bandwidth_bps
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_linear_in_bytes() {
+        let l = LinkSpec::new(1000.0, 0.1);
+        assert!((l.transfer_time(1000) - 1.1).abs() < 1e-12);
+        assert!((l.transfer_time(2000) - 2.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_bytes_is_free() {
+        let l = LinkSpec::new(1000.0, 0.1);
+        assert_eq!(l.transfer_time(0), 0.0);
+    }
+
+    #[test]
+    fn gigabit_sanity() {
+        let g = LinkSpec::gigabit_ethernet();
+        // 117 MiB should take ~1 s.
+        let t = g.transfer_time(117 * 1024 * 1024);
+        assert!((t - 1.0001).abs() < 1e-3, "{t}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_bandwidth() {
+        let _ = LinkSpec::new(0.0, 0.0);
+    }
+}

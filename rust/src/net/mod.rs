@@ -1,0 +1,196 @@
+//! Virtual-time network simulator.
+//!
+//! The paper's testbed is a 96-node gigabit-Ethernet ring without
+//! Infiniband; its bandwidth results (Figs. 7/8, the motivation for the
+//! whole method) are statements about *bytes on the wire over time*.
+//! This module accounts those bytes exactly under a virtual clock:
+//!
+//! * every directed link has a bandwidth (bytes/s) and latency (s),
+//! * communication proceeds in synchronous ring *rounds* (the natural
+//!   granularity of ring all-reduce: everyone sends one chunk to their
+//!   successor); a round lasts as long as its slowest transfer — the
+//!   paper's "the limit of the system is determined only by the slowest
+//!   connection",
+//! * per-node transmit traces are bucketed over virtual time to produce
+//!   the KB/s plots of Figs. 7/8.
+
+pub mod link;
+pub mod trace;
+
+pub use link::LinkSpec;
+pub use trace::Trace;
+
+/// A unidirectional ring of `n` nodes with homogeneous links.
+/// Node `i` transmits to `(i+1) % n`.
+#[derive(Debug, Clone)]
+pub struct RingNet {
+    n: usize,
+    spec: LinkSpec,
+    clock: f64,
+    /// Cumulative bytes sent on each node's outgoing link.
+    tx_bytes: Vec<u64>,
+    /// Per-node transmit trace (virtual-time bucketed).
+    trace: Trace,
+    rounds: u64,
+}
+
+impl RingNet {
+    pub fn new(n: usize, spec: LinkSpec, trace_bucket_s: f64) -> Self {
+        assert!(n >= 2, "a ring needs at least 2 nodes");
+        RingNet {
+            n,
+            spec,
+            clock: 0.0,
+            tx_bytes: vec![0; n],
+            trace: Trace::new(n, trace_bucket_s),
+            rounds: 0,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    pub fn spec(&self) -> &LinkSpec {
+        &self.spec
+    }
+
+    /// One synchronous ring round: node `i` sends `bytes[i]` to its
+    /// successor. Advances the clock by the slowest transfer and records
+    /// traffic. Returns the round duration in virtual seconds.
+    pub fn round(&mut self, bytes: &[u64]) -> f64 {
+        assert_eq!(bytes.len(), self.n);
+        let dur = bytes
+            .iter()
+            .map(|&b| self.spec.transfer_time(b))
+            .fold(0.0f64, f64::max);
+        for (i, &b) in bytes.iter().enumerate() {
+            if b > 0 {
+                self.tx_bytes[i] += b;
+                // Spread the bytes over this node's actual transfer window.
+                self.trace
+                    .add(self.clock, self.spec.transfer_time(b), i, b);
+            }
+        }
+        self.clock += dur;
+        self.rounds += 1;
+        dur
+    }
+
+    /// Uniform round: every node sends the same byte count.
+    pub fn uniform_round(&mut self, bytes_per_node: u64) -> f64 {
+        let v = vec![bytes_per_node; self.n];
+        self.round(&v)
+    }
+
+    /// Ring AllGather of per-node blobs: N-1 rounds; in round r node i
+    /// forwards the blob originated by node (i - r). Returns total time.
+    /// (This is Algorithm 1's mask AllGather when blobs are bitmask bytes.)
+    pub fn allgather(&mut self, blob_bytes: &[u64]) -> f64 {
+        assert_eq!(blob_bytes.len(), self.n);
+        let mut total = 0.0;
+        for r in 0..self.n - 1 {
+            let sends: Vec<u64> = (0..self.n)
+                .map(|i| blob_bytes[(i + self.n - r) % self.n])
+                .collect();
+            total += self.round(&sends);
+        }
+        total
+    }
+
+    /// Advance the clock without traffic (e.g. compute phase) so traces
+    /// show idle gaps like the paper's I/O plots between steps.
+    pub fn advance(&mut self, seconds: f64) {
+        assert!(seconds >= 0.0);
+        self.clock += seconds;
+    }
+
+    /// Total bytes transmitted by one node.
+    pub fn node_tx_bytes(&self, node: usize) -> u64 {
+        self.tx_bytes[node]
+    }
+
+    /// Total bytes across all links.
+    pub fn total_bytes(&self) -> u64 {
+        self.tx_bytes.iter().sum()
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    /// Reset counters/clock but keep topology (between experiment arms).
+    pub fn reset(&mut self) {
+        self.clock = 0.0;
+        self.rounds = 0;
+        self.tx_bytes.iter_mut().for_each(|b| *b = 0);
+        self.trace.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gigabit() -> LinkSpec {
+        LinkSpec::gigabit_ethernet()
+    }
+
+    #[test]
+    fn round_time_is_slowest_link() {
+        let mut net = RingNet::new(4, LinkSpec::new(1000.0, 0.0), 1.0);
+        let dur = net.round(&[100, 500, 1000, 0]);
+        assert!((dur - 1.0).abs() < 1e-9); // 1000 bytes / 1000 Bps
+        assert!((net.clock() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_adds_to_transfers() {
+        let mut net = RingNet::new(2, LinkSpec::new(1000.0, 0.5), 1.0);
+        let dur = net.round(&[1000, 1000]);
+        assert!((dur - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let mut net = RingNet::new(3, gigabit(), 1.0);
+        net.round(&[10, 20, 30]);
+        net.round(&[1, 2, 3]);
+        assert_eq!(net.node_tx_bytes(0), 11);
+        assert_eq!(net.node_tx_bytes(2), 33);
+        assert_eq!(net.total_bytes(), 66);
+        assert_eq!(net.rounds(), 2);
+    }
+
+    #[test]
+    fn allgather_moves_each_blob_n_minus_1_times() {
+        let mut net = RingNet::new(4, gigabit(), 1.0);
+        net.allgather(&[100, 200, 300, 400]);
+        // Every blob crosses N-1 links: total = 3 * (100+200+300+400).
+        assert_eq!(net.total_bytes(), 3 * 1000);
+        assert_eq!(net.rounds(), 3);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut net = RingNet::new(2, gigabit(), 1.0);
+        net.uniform_round(1_000_000);
+        net.reset();
+        assert_eq!(net.total_bytes(), 0);
+        assert_eq!(net.clock(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2")]
+    fn rejects_degenerate_ring() {
+        let _ = RingNet::new(1, gigabit(), 1.0);
+    }
+}

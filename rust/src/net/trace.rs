@@ -1,0 +1,171 @@
+//! Time-bucketed per-node transmit traces — the data behind the paper's
+//! Networks-I/O plots (Figs. 7/8, KB/s over wall time).
+
+/// Bytes-per-bucket trace for every node.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    n_nodes: usize,
+    bucket_s: f64,
+    /// buckets[t][node] = bytes transmitted by `node` during bucket `t`.
+    buckets: Vec<Vec<f64>>,
+}
+
+impl Trace {
+    pub fn new(n_nodes: usize, bucket_s: f64) -> Self {
+        assert!(bucket_s > 0.0);
+        Trace {
+            n_nodes,
+            bucket_s,
+            buckets: Vec::new(),
+        }
+    }
+
+    pub fn bucket_seconds(&self) -> f64 {
+        self.bucket_s
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    fn ensure(&mut self, bucket: usize) {
+        while self.buckets.len() <= bucket {
+            self.buckets.push(vec![0.0; self.n_nodes]);
+        }
+    }
+
+    /// Record `bytes` transmitted by `node` over [start, start+dur),
+    /// spread proportionally across the buckets the window overlaps.
+    pub fn add(&mut self, start: f64, dur: f64, node: usize, bytes: u64) {
+        assert!(node < self.n_nodes);
+        if bytes == 0 {
+            return;
+        }
+        let end = start + dur.max(1e-12);
+        let rate = bytes as f64 / (end - start);
+        // Integer bucket iteration: a float-stepping loop can stall when
+        // `(b+1)*bucket_s` rounds to exactly the current position (seen in
+        // production at t=2.1499999999999999, bucket_s=0.05 — infinite
+        // loop). Indices always advance.
+        let first = (start / self.bucket_s) as usize;
+        let last = ((end / self.bucket_s).ceil() as usize).max(first + 1);
+        self.ensure(last - 1);
+        for b in first..last {
+            let b_start = b as f64 * self.bucket_s;
+            let b_end = b_start + self.bucket_s;
+            let seg = end.min(b_end) - start.max(b_start);
+            if seg > 0.0 {
+                self.buckets[b][node] += rate * seg;
+            }
+        }
+    }
+
+    /// KB/s series for one node: (bucket_start_s, kb_per_s) rows —
+    /// directly comparable to the paper's Fig. 7/8 axes.
+    pub fn kbps_series(&self, node: usize) -> Vec<(f64, f64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                (
+                    i as f64 * self.bucket_s,
+                    b[node] / 1024.0 / self.bucket_s,
+                )
+            })
+            .collect()
+    }
+
+    /// Aggregate KB/s across all nodes.
+    pub fn total_kbps_series(&self) -> Vec<(f64, f64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                (
+                    i as f64 * self.bucket_s,
+                    b.iter().sum::<f64>() / 1024.0 / self.bucket_s,
+                )
+            })
+            .collect()
+    }
+
+    /// Peak per-node KB/s (the "full load" level in Fig. 7).
+    pub fn peak_kbps(&self, node: usize) -> f64 {
+        self.kbps_series(node)
+            .into_iter()
+            .map(|(_, v)| v)
+            .fold(0.0, f64::max)
+    }
+
+    /// Mean per-node KB/s over the non-empty prefix of the trace.
+    pub fn mean_kbps(&self, node: usize) -> f64 {
+        let s = self.kbps_series(node);
+        if s.is_empty() {
+            0.0
+        } else {
+            s.iter().map(|(_, v)| v).sum::<f64>() / s.len() as f64
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.buckets.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_conserved_across_buckets() {
+        let mut t = Trace::new(2, 1.0);
+        t.add(0.5, 2.0, 0, 2000); // spans buckets 0,1,2
+        let total: f64 = t.kbps_series(0).iter().map(|(_, v)| v * 1024.0).sum();
+        assert!((total - 2000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn proportional_spread() {
+        let mut t = Trace::new(1, 1.0);
+        t.add(0.0, 2.0, 0, 1000);
+        let s = t.kbps_series(0);
+        assert_eq!(s.len(), 2);
+        assert!((s[0].1 - s[1].1).abs() < 1e-9); // even split
+    }
+
+    #[test]
+    fn instantaneous_transfer_lands_in_one_bucket() {
+        let mut t = Trace::new(1, 1.0);
+        t.add(3.2, 0.0, 0, 500);
+        let s = t.kbps_series(0);
+        assert_eq!(s.len(), 4);
+        assert!((s[3].1 * 1024.0 - 500.0).abs() < 1e-6);
+        assert_eq!(s[0].1, 0.0);
+    }
+
+    #[test]
+    fn peak_and_mean() {
+        let mut t = Trace::new(1, 1.0);
+        t.add(0.0, 1.0, 0, 1024); // 1 KB/s in bucket 0
+        t.add(1.0, 1.0, 0, 3 * 1024); // 3 KB/s in bucket 1
+        assert!((t.peak_kbps(0) - 3.0).abs() < 1e-9);
+        assert!((t.mean_kbps(0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pathological_float_boundary_terminates() {
+        // Regression: this exact (start, bucket) combination stalled the
+        // old float-stepping implementation forever.
+        let mut t = Trace::new(16, 0.05);
+        t.add(2.1499999999999999, 0.0546875, 0, 6_389_258);
+        let total: f64 = t.kbps_series(0).iter().map(|(_, v)| v * 1024.0 * 0.05).sum();
+        assert!((total - 6_389_258.0).abs() / 6_389_258.0 < 1e-9);
+    }
+
+    #[test]
+    fn zero_bytes_noop() {
+        let mut t = Trace::new(1, 1.0);
+        t.add(0.0, 1.0, 0, 0);
+        assert_eq!(t.n_buckets(), 0);
+    }
+}

@@ -1,0 +1,74 @@
+//! Learning-rate schedules: linear warm-up + step decay (the standard
+//! large-batch ImageNet recipe the paper trains under).
+
+/// Piecewise schedule: linear warm-up over `warmup_steps`, then decay by
+/// `gamma` at each milestone (in steps).
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base_lr: f32,
+    pub warmup_steps: usize,
+    pub milestones: Vec<usize>,
+    pub gamma: f32,
+}
+
+impl LrSchedule {
+    pub fn constant(lr: f32) -> Self {
+        LrSchedule {
+            base_lr: lr,
+            warmup_steps: 0,
+            milestones: Vec::new(),
+            gamma: 1.0,
+        }
+    }
+
+    pub fn with_warmup(lr: f32, warmup_steps: usize) -> Self {
+        LrSchedule {
+            base_lr: lr,
+            warmup_steps,
+            milestones: Vec::new(),
+            gamma: 1.0,
+        }
+    }
+
+    pub fn at(&self, step: usize) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        let decays = self.milestones.iter().filter(|&&m| step >= m).count();
+        self.base_lr * self.gamma.powi(decays as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.1);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(10_000), 0.1);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::with_warmup(1.0, 10);
+        assert!((s.at(0) - 0.1).abs() < 1e-6);
+        assert!((s.at(4) - 0.5).abs() < 1e-6);
+        assert_eq!(s.at(9), 1.0);
+        assert_eq!(s.at(10), 1.0);
+    }
+
+    #[test]
+    fn milestones_decay() {
+        let s = LrSchedule {
+            base_lr: 1.0,
+            warmup_steps: 0,
+            milestones: vec![100, 200],
+            gamma: 0.1,
+        };
+        assert_eq!(s.at(50), 1.0);
+        assert!((s.at(150) - 0.1).abs() < 1e-7);
+        assert!((s.at(250) - 0.01).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,7 @@
+//! Optimizers + learning-rate schedules (Eq. 1's distributed momentum SGD).
+
+pub mod lr;
+pub mod sgd;
+
+pub use lr::LrSchedule;
+pub use sgd::MomentumSgd;

@@ -1,0 +1,102 @@
+//! Momentum SGD — Eq. 1:  g_t = m·g_{t-1} + Σ_k ∇_{k,t};  ω_{t+1} = ω_t − η·g_t.
+//!
+//! In the compressed paths the *momentum lives in the per-node residual
+//! store* (momentum correction, Eq. 3), so the global optimizer is then
+//! run with momentum = 0 to avoid double-applying it. The baseline dense
+//! path uses this optimizer's momentum directly.
+
+/// Momentum SGD over a flat parameter buffer.
+#[derive(Debug, Clone)]
+pub struct MomentumSgd {
+    momentum: f32,
+    velocity: Vec<f32>,
+}
+
+impl MomentumSgd {
+    pub fn new(len: usize, momentum: f32) -> Self {
+        assert!((0.0..1.0).contains(&momentum));
+        MomentumSgd {
+            momentum,
+            velocity: vec![0.0; len],
+        }
+    }
+
+    pub fn momentum(&self) -> f32 {
+        self.momentum
+    }
+
+    /// Dense update: params -= lr * (m·v + g).
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        assert!(params.len() == grad.len() && params.len() == self.velocity.len());
+        if self.momentum == 0.0 {
+            for i in 0..params.len() {
+                params[i] -= lr * grad[i];
+            }
+        } else {
+            for i in 0..params.len() {
+                self.velocity[i] = self.momentum * self.velocity[i] + grad[i];
+                params[i] -= lr * self.velocity[i];
+            }
+        }
+    }
+
+    /// Sparse update on a known support (Alg. 1 line 13 after a masked
+    /// reduce): `indices[j]` gets `values[j]`. Momentum is intentionally
+    /// NOT applied here — compressed paths carry it in the residual store.
+    pub fn step_sparse(&mut self, params: &mut [f32], indices: &[usize], values: &[f32], lr: f32) {
+        assert_eq!(indices.len(), values.len());
+        for (&i, &v) in indices.iter().zip(values) {
+            params[i] -= lr * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_descends() {
+        let mut opt = MomentumSgd::new(2, 0.0);
+        let mut p = vec![1.0f32, -1.0];
+        opt.step(&mut p, &[0.5, -0.5], 0.1);
+        assert_eq!(p, vec![0.95, -0.95]);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = MomentumSgd::new(1, 0.9);
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0], 1.0); // v=1, p=-1
+        opt.step(&mut p, &[1.0], 1.0); // v=1.9, p=-2.9
+        assert!((p[0] + 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sparse_update_touches_support_only() {
+        let mut opt = MomentumSgd::new(4, 0.9);
+        let mut p = vec![1.0f32; 4];
+        opt.step_sparse(&mut p, &[1, 3], &[10.0, 20.0], 0.1);
+        assert_eq!(p, vec![1.0, 0.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn momentum_matches_eq1_closed_form() {
+        // After T steps of constant gradient 1: p = -lr * sum_{t=1..T} sum_{tau=0}^{t-1} m^tau
+        let m: f32 = 0.5;
+        let lr = 0.1;
+        let mut opt = MomentumSgd::new(1, m);
+        let mut p = vec![0.0f32];
+        let t_steps = 5;
+        for _ in 0..t_steps {
+            opt.step(&mut p, &[1.0], lr);
+        }
+        let mut expect = 0.0f32;
+        let mut v = 0.0f32;
+        for _ in 0..t_steps {
+            v = m * v + 1.0;
+            expect -= lr * v;
+        }
+        assert!((p[0] - expect).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,173 @@
+//! Dense ring all-reduce: scatter-reduce + allgather (Baidu/Gibiansky).
+//!
+//! With N nodes and V bytes of gradient, every node transmits
+//! `2·(N−1)/N · V` bytes regardless of N — the constant-cost property
+//! that makes rings the right substrate for large models, and the
+//! baseline transport whose I/O trace is Fig. 7.
+
+use super::{chunk_ranges, per_node_delta, snapshot, ReduceReport};
+use crate::net::RingNet;
+
+/// In-place dense all-reduce over every node's buffer. On return every
+/// `bufs[i]` holds the element-wise **sum** across nodes (callers divide
+/// by N for the average — Algorithm 1 line 12 averages after reduce).
+pub fn allreduce(net: &mut RingNet, bufs: &mut [Vec<f32>]) -> ReduceReport {
+    let n = net.n_nodes();
+    assert_eq!(bufs.len(), n, "one buffer per node");
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len));
+    if len == 0 {
+        return ReduceReport {
+            bytes_per_node: vec![0; n],
+            ..Default::default()
+        };
+    }
+
+    let chunks = chunk_ranges(len, n);
+    let before = snapshot(net);
+    let t0 = net.clock();
+
+    // Scatter-reduce: round r, node i sends chunk (i - r) mod n to i+1,
+    // which accumulates it into its own copy.
+    for r in 0..n - 1 {
+        let sends: Vec<u64> = (0..n)
+            .map(|i| {
+                let c = (i + n - r) % n;
+                (chunks[c].len() * 4) as u64
+            })
+            .collect();
+        net.round(&sends);
+        // Apply the data movement: receiver (i+1) accumulates sender i's
+        // current copy of chunk (i - r). Use a staging copy so updates
+        // within a round don't cascade.
+        let staged: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let c = (i + n - r) % n;
+                bufs[i][chunks[c].clone()].to_vec()
+            })
+            .collect();
+        for i in 0..n {
+            let dst = (i + 1) % n;
+            let c = (i + n - r) % n;
+            let range = chunks[c].clone();
+            for (k, idx) in range.enumerate() {
+                bufs[dst][idx] += staged[i][k];
+            }
+        }
+    }
+
+    // After scatter-reduce, node i owns the fully-reduced chunk (i+1)%n.
+    // Allgather: round r, node i sends chunk (i + 1 - r) mod n onward.
+    for r in 0..n - 1 {
+        let sends: Vec<u64> = (0..n)
+            .map(|i| {
+                let c = (i + 1 + n - r) % n;
+                (chunks[c].len() * 4) as u64
+            })
+            .collect();
+        net.round(&sends);
+        let staged: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let c = (i + 1 + n - r) % n;
+                bufs[i][chunks[c].clone()].to_vec()
+            })
+            .collect();
+        for i in 0..n {
+            let dst = (i + 1) % n;
+            let c = (i + 1 + n - r) % n;
+            let range = chunks[c].clone();
+            for (k, idx) in range.enumerate() {
+                bufs[dst][idx] = staged[i][k];
+            }
+        }
+    }
+
+    ReduceReport {
+        bytes_per_node: per_node_delta(net, &before),
+        seconds: net.clock() - t0,
+        density_per_hop: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkSpec;
+    use crate::util::prop::forall;
+
+    fn net(n: usize) -> RingNet {
+        RingNet::new(n, LinkSpec::new(1e9, 0.0), 1.0)
+    }
+
+    #[test]
+    fn reduces_to_sum_small() {
+        let mut nw = net(3);
+        let mut bufs = vec![
+            vec![1.0f32, 2.0, 3.0, 4.0],
+            vec![10.0, 20.0, 30.0, 40.0],
+            vec![100.0, 200.0, 300.0, 400.0],
+        ];
+        allreduce(&mut nw, &mut bufs);
+        for b in &bufs {
+            assert_eq!(b, &vec![111.0, 222.0, 333.0, 444.0]);
+        }
+    }
+
+    #[test]
+    fn byte_cost_is_2_n_minus_1_over_n() {
+        let n = 8;
+        let len = 800usize;
+        let mut nw = net(n);
+        let mut bufs = vec![vec![1.0f32; len]; n];
+        let rep = allreduce(&mut nw, &mut bufs);
+        let expect = 2 * (n as u64 - 1) * (len as u64 * 4) / n as u64;
+        for &b in &rep.bytes_per_node {
+            assert_eq!(b, expect);
+        }
+    }
+
+    #[test]
+    fn allreduce_equals_direct_sum_property() {
+        forall("ring dense allreduce == sum", 40, |g| {
+            let n = g.usize_in(2, 9);
+            let len = g.usize_in(1, 64);
+            let bufs_orig: Vec<Vec<f32>> =
+                (0..n).map(|_| g.vec_normal(len, 0.0, 1.0)).collect();
+            let mut expect = vec![0.0f32; len];
+            for b in &bufs_orig {
+                for (e, &v) in expect.iter_mut().zip(b) {
+                    *e += v;
+                }
+            }
+            let mut nw = net(n);
+            let mut bufs = bufs_orig.clone();
+            allreduce(&mut nw, &mut bufs);
+            for b in &bufs {
+                for (x, e) in b.iter().zip(&expect) {
+                    assert!(
+                        (x - e).abs() <= 1e-3 * e.abs().max(1.0),
+                        "node disagrees with direct sum: {x} vs {e}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn len_smaller_than_ring_still_works() {
+        let mut nw = net(5);
+        let mut bufs = vec![vec![1.0f32, 2.0]; 5];
+        allreduce(&mut nw, &mut bufs);
+        for b in &bufs {
+            assert_eq!(b, &vec![5.0, 10.0]);
+        }
+    }
+
+    #[test]
+    fn empty_buffers_are_noop() {
+        let mut nw = net(3);
+        let mut bufs = vec![Vec::new(), Vec::new(), Vec::new()];
+        let rep = allreduce(&mut nw, &mut bufs);
+        assert_eq!(rep.total_bytes(), 0);
+    }
+}

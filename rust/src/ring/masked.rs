@@ -1,0 +1,282 @@
+//! Algorithm 1's transport: shared-mask ring all-reduce.
+//!
+//! ```text
+//! choose random nodes r_1..r_k
+//! Mask_{r_i} <- |∇w_r / w_r| > thr            (computed by the caller)
+//! AllGather(encode_uint8(Mask_{r_i}))          (mask bytes on the wire)
+//! Mask = OR_i Mask_{r_i}                       (identical on every node)
+//! ring all-reduce of (∇w ⊙ Mask), compacted to the mask support
+//! ```
+//!
+//! Because every node reduces the *same* support, the travelling chunks
+//! never densify — the sparsity is invariant in N, which is the paper's
+//! structural advantage over DGC on rings.
+
+use super::{dense, ReduceReport};
+use crate::net::RingNet;
+use crate::sparse::{values_only_bytes, BitMask};
+
+/// Byte cost of AllGather-ing `k` masks of `mask_bytes` each around an
+/// N-ring: each blob crosses N-1 links.
+pub fn mask_allgather_bytes(mask_bytes: u64, k: usize, n: usize) -> u64 {
+    mask_bytes * k as u64 * (n as u64 - 1)
+}
+
+/// Shared-mask all-reduce.
+///
+/// * `masks` — the masks of the `r` randomly-chosen broadcaster nodes
+///   (already computed from their local importance scores).
+/// * `values` — per node, the residual values at *every* coordinate
+///   (the schedule gathers the mask support itself).
+///
+/// Returns `(shared_mask, summed_masked_values_compacted, report)`:
+/// the summed values are aligned with `shared_mask.iter_set()` order.
+pub fn allreduce(
+    net: &mut RingNet,
+    masks: &[&BitMask],
+    values: &[&[f32]],
+) -> (BitMask, Vec<f32>, ReduceReport) {
+    let n = net.n_nodes();
+    assert_eq!(values.len(), n);
+    assert!(!masks.is_empty(), "need at least one mask broadcaster");
+    let len = masks[0].len();
+    assert!(values.iter().all(|v| v.len() == len));
+
+    // Phase 1 — mask AllGather (Alg. 1 line 7): each broadcaster's
+    // encoded mask travels N-1 hops. We account it as an allgather of k
+    // blobs; non-broadcasters contribute zero-byte blobs.
+    let mask_bytes = masks[0].wire_bytes();
+    let mut blobs = vec![0u64; n];
+    for (i, blob) in blobs.iter_mut().enumerate().take(masks.len().min(n)) {
+        let _ = i;
+        *blob = mask_bytes;
+    }
+    let t0 = net.clock();
+    let before: Vec<u64> = (0..n).map(|i| net.node_tx_bytes(i)).collect();
+    net.allgather(&blobs);
+
+    // Phase 2 — OR-combine (identical on every node).
+    let mut shared = BitMask::zeros(len);
+    for m in masks {
+        assert_eq!(m.len(), len);
+        shared.or_assign(m);
+    }
+
+    // Phase 3 — compact every node's values to the shared support and
+    // dense-ring-allreduce the compacted vectors (values only: the
+    // support is known to all).
+    let support: Vec<usize> = shared.iter_set().collect();
+    let mut compact: Vec<Vec<f32>> = values
+        .iter()
+        .map(|v| support.iter().map(|&i| v[i]).collect())
+        .collect();
+    let dense_rep = dense::allreduce(net, &mut compact);
+
+    // Validate accounting matches the values-only wire model (loosely:
+    // the dense schedule moves 2(N-1)/N of the compact payload).
+    debug_assert!({
+        let expect = 2.0 * (n as f64 - 1.0) / n as f64
+            * values_only_bytes(support.len()) as f64;
+        dense_rep.mean_bytes_per_node() <= expect + 64.0 * n as f64 + 1.0
+    });
+
+    let report = ReduceReport {
+        bytes_per_node: (0..n)
+            .map(|i| net.node_tx_bytes(i) - before[i])
+            .collect(),
+        seconds: net.clock() - t0,
+        density_per_hop: vec![shared.density(); n.saturating_sub(1)],
+    };
+    (shared, compact.swap_remove(0), report)
+}
+
+/// Accounting-only variant of [`allreduce`] for large-scale bandwidth
+/// sims: performs the mask AllGather + OR and models the compacted value
+/// rounds' bytes/time on the net, without moving value data (the callers
+/// — `exp::simrun` at 96 nodes x 25M+ params — discard the summed values
+/// anyway). Byte accounting is identical to the exact path.
+pub fn allreduce_bytes_only(
+    net: &mut RingNet,
+    masks: &[&BitMask],
+) -> (BitMask, ReduceReport) {
+    let n = net.n_nodes();
+    assert!(!masks.is_empty());
+    let len = masks[0].len();
+
+    let mask_bytes = masks[0].wire_bytes();
+    let mut blobs = vec![0u64; n];
+    for blob in blobs.iter_mut().take(masks.len().min(n)) {
+        *blob = mask_bytes;
+    }
+    let t0 = net.clock();
+    let before: Vec<u64> = (0..n).map(|i| net.node_tx_bytes(i)).collect();
+    net.allgather(&blobs);
+
+    let mut shared = BitMask::zeros(len);
+    for m in masks {
+        assert_eq!(m.len(), len);
+        shared.or_assign(m);
+    }
+
+    // Dense-equivalent rounds over the compacted support (bytes/time only).
+    let support_len = shared.count();
+    let chunks = super::chunk_ranges(support_len, n);
+    let chunk_bytes: Vec<u64> = chunks.iter().map(|c| (c.len() * 4) as u64).collect();
+    for r in 0..n - 1 {
+        let sends: Vec<u64> = (0..n).map(|i| chunk_bytes[(i + n - r) % n]).collect();
+        net.round(&sends);
+    }
+    for r in 0..n - 1 {
+        let sends: Vec<u64> = (0..n)
+            .map(|i| chunk_bytes[(i + 1 + n - r) % n])
+            .collect();
+        net.round(&sends);
+    }
+
+    let report = ReduceReport {
+        bytes_per_node: (0..n)
+            .map(|i| net.node_tx_bytes(i) - before[i])
+            .collect(),
+        seconds: net.clock() - t0,
+        density_per_hop: vec![shared.density(); n.saturating_sub(1)],
+    };
+    (shared, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkSpec;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn net(n: usize) -> RingNet {
+        RingNet::new(n, LinkSpec::new(1e9, 0.0), 1.0)
+    }
+
+    #[test]
+    fn reduces_masked_sum() {
+        let n = 3;
+        let len = 6;
+        let mut m = BitMask::zeros(len);
+        m.set(1);
+        m.set(4);
+        let vals: Vec<Vec<f32>> = (0..n)
+            .map(|i| (0..len).map(|j| (i * 10 + j) as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = vals.iter().map(|v| v.as_slice()).collect();
+        let mut nw = net(n);
+        let (shared, summed, _) = allreduce(&mut nw, &[&m], &refs);
+        assert_eq!(shared.iter_set().collect::<Vec<_>>(), vec![1, 4]);
+        // coord1: 1 + 11 + 21 = 33 ; coord4: 4 + 14 + 24 = 42
+        assert_eq!(summed, vec![33.0, 42.0]);
+    }
+
+    #[test]
+    fn or_of_multiple_masks() {
+        let len = 10;
+        let mut a = BitMask::zeros(len);
+        a.set(0);
+        let mut b = BitMask::zeros(len);
+        b.set(9);
+        let vals = vec![vec![1.0f32; len]; 2];
+        let refs: Vec<&[f32]> = vals.iter().map(|v| v.as_slice()).collect();
+        let mut nw = net(2);
+        let (shared, summed, _) = allreduce(&mut nw, &[&a, &b], &refs);
+        assert_eq!(shared.count(), 2);
+        assert_eq!(summed, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn sparsity_invariant_in_ring_size() {
+        // The paper's key claim: unlike DGC, density does not grow with N.
+        let len = 10_000;
+        let mut rng = Rng::new(3);
+        let mut mask = BitMask::zeros(len);
+        for _ in 0..100 {
+            mask.set(rng.below(len));
+        }
+        let d0 = mask.density();
+        for n in [4, 16, 64] {
+            let vals = vec![vec![1.0f32; len]; n];
+            let refs: Vec<&[f32]> = vals.iter().map(|v| v.as_slice()).collect();
+            let mut nw = net(n);
+            let (_, _, rep) = allreduce(&mut nw, &[&mask], &refs);
+            for &d in &rep.density_per_hop {
+                assert!((d - d0).abs() < 1e-12, "density changed with n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_dense_on_masked_coords_property() {
+        forall("masked reduce == dense sum on support", 30, |g| {
+            let n = g.usize_in(2, 6);
+            let len = g.usize_in(4, 60);
+            let mut mask = BitMask::zeros(len);
+            for i in 0..len {
+                if g.bool() {
+                    mask.set(i);
+                }
+            }
+            let vals: Vec<Vec<f32>> =
+                (0..n).map(|_| g.vec_normal(len, 0.0, 1.0)).collect();
+            let refs: Vec<&[f32]> = vals.iter().map(|v| v.as_slice()).collect();
+            let mut nw = net(n);
+            let (shared, summed, _) = allreduce(&mut nw, &[&mask], &refs);
+            for (k, i) in shared.iter_set().enumerate() {
+                let direct: f32 = vals.iter().map(|v| v[i]).sum();
+                assert!(
+                    (summed[k] - direct).abs() < 1e-3,
+                    "coord {i}: {} vs {direct}",
+                    summed[k]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn wire_bytes_scale_with_support_not_len() {
+        let len = 100_000;
+        let mut mask = BitMask::zeros(len);
+        for i in 0..100 {
+            mask.set(i * 997 % len);
+        }
+        let n = 8;
+        let vals = vec![vec![1.0f32; len]; n];
+        let refs: Vec<&[f32]> = vals.iter().map(|v| v.as_slice()).collect();
+        let mut nw = net(n);
+        let (_, _, rep) = allreduce(&mut nw, &[&mask], &refs);
+        // Mask allgather dominates here: ~12.5 KB * (n-1). Value rounds are
+        // ~100 floats. Total far below dense 2(N-1)/N * 400KB = 700KB.
+        assert!(
+            rep.mean_bytes_per_node() < 40_000.0,
+            "{}",
+            rep.mean_bytes_per_node()
+        );
+    }
+
+    #[test]
+    fn bytes_only_matches_exact_path_accounting() {
+        let n = 5;
+        let len = 4000;
+        let mut rng = Rng::new(11);
+        let mut mask = BitMask::zeros(len);
+        for _ in 0..200 {
+            mask.set(rng.below(len));
+        }
+        let vals = vec![vec![0.5f32; len]; n];
+        let refs: Vec<&[f32]> = vals.iter().map(|v| v.as_slice()).collect();
+        let mut net_a = net(n);
+        let (shared_a, _, rep_a) = allreduce(&mut net_a, &[&mask], &refs);
+        let mut net_b = net(n);
+        let (shared_b, rep_b) = allreduce_bytes_only(&mut net_b, &[&mask]);
+        assert_eq!(shared_a, shared_b);
+        assert_eq!(rep_a.total_bytes(), rep_b.total_bytes());
+    }
+
+    #[test]
+    fn mask_allgather_byte_model() {
+        assert_eq!(mask_allgather_bytes(1000, 3, 5), 1000 * 3 * 4);
+    }
+}

@@ -1,0 +1,119 @@
+//! Ring all-reduce schedules over the virtual network.
+//!
+//! Three schedules, one per gradient representation:
+//!
+//! * [`dense`] — classic scatter-reduce + allgather on raw f32 chunks
+//!   (Gibiansky/Baidu; the paper's baseline transport).
+//! * [`sparse`] — per-node sparse supports (DGC on a ring): chunk
+//!   segments *union* as they travel, demonstrating the densification
+//!   the paper argues makes DGC lose "the meaning of spreading the
+//!   sparse gradient" (Sec. II).
+//! * [`masked`] — Algorithm 1: a shared mask is OR-built from `r`
+//!   randomly chosen nodes via AllGather, then values ride the dense
+//!   schedule *compacted to the mask support* — sparsity is ring-size
+//!   invariant, which is the paper's key structural fix.
+//!
+//! All schedules move real data (the reduce is exact, tested against
+//! direct summation) *and* account every wire byte on the `RingNet`.
+
+pub mod dense;
+pub mod masked;
+pub mod sparse;
+
+use crate::net::RingNet;
+
+/// Outcome of one all-reduce: per-node wire accounting plus timing.
+#[derive(Debug, Clone, Default)]
+pub struct ReduceReport {
+    /// Bytes transmitted by each node during this all-reduce.
+    pub bytes_per_node: Vec<u64>,
+    /// Virtual seconds the all-reduce took.
+    pub seconds: f64,
+    /// For sparse schedules: density of the travelling chunks after each
+    /// scatter-reduce hop (the §II density-growth measurement).
+    pub density_per_hop: Vec<f64>,
+}
+
+impl ReduceReport {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_per_node.iter().sum()
+    }
+
+    pub fn mean_bytes_per_node(&self) -> f64 {
+        if self.bytes_per_node.is_empty() {
+            0.0
+        } else {
+            self.total_bytes() as f64 / self.bytes_per_node.len() as f64
+        }
+    }
+}
+
+/// Split `len` coordinates into `n` contiguous chunks (ring ownership).
+/// Chunk sizes differ by at most 1.
+pub fn chunk_ranges(len: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(n > 0);
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let size = base + usize::from(i < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    out
+}
+
+/// Like [`chunk_ranges`] but with boundaries aligned to 64-coordinate
+/// words (except the last), so chunk supports are direct `u64`-word
+/// slices of a `BitMask` — the support-only fast path depends on this.
+pub fn chunk_ranges_aligned(len: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(n > 0);
+    let words = len.div_ceil(64);
+    let word_chunks = chunk_ranges(words, n);
+    word_chunks
+        .into_iter()
+        .map(|wr| (wr.start * 64).min(len)..(wr.end * 64).min(len))
+        .collect()
+}
+
+/// Snapshot byte counters before/after an operation on the net.
+pub(crate) fn per_node_delta(net: &RingNet, before: &[u64]) -> Vec<u64> {
+    (0..net.n_nodes())
+        .map(|i| net.node_tx_bytes(i) - before[i])
+        .collect()
+}
+
+pub(crate) fn snapshot(net: &RingNet) -> Vec<u64> {
+    (0..net.n_nodes()).map(|i| net.node_tx_bytes(i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_tile_exactly() {
+        let r = chunk_ranges(10, 3);
+        assert_eq!(r, vec![0..4, 4..7, 7..10]);
+        let r = chunk_ranges(9, 3);
+        assert_eq!(r, vec![0..3, 3..6, 6..9]);
+    }
+
+    #[test]
+    fn aligned_chunks_tile_and_align() {
+        let r = chunk_ranges_aligned(1000, 3);
+        assert_eq!(r.iter().map(|r| r.len()).sum::<usize>(), 1000);
+        for w in &r[..r.len() - 1] {
+            assert_eq!(w.end % 64, 0, "{w:?} not word-aligned");
+        }
+        assert_eq!(r.last().unwrap().end, 1000);
+    }
+
+    #[test]
+    fn chunks_handle_len_smaller_than_n() {
+        let r = chunk_ranges(2, 4);
+        assert_eq!(r.iter().map(|r| r.len()).sum::<usize>(), 2);
+        assert_eq!(r.len(), 4);
+    }
+}

@@ -1,0 +1,326 @@
+//! Sparse ring all-reduce with **per-node supports** — DGC-on-a-ring.
+//!
+//! Each node contributes its own sparse gradient. During scatter-reduce a
+//! travelling chunk segment accumulates the *union* of the supports it
+//! passes through, so its nnz grows with every hop — the densification
+//! the paper identifies as DGC's failure mode on rings (Sec. II: "as the
+//! number of ring nodes increases, the gradient on each node becomes
+//! denser as the ring reduce is performed").  `ReduceReport::
+//! density_per_hop` quantifies it; `exp::density` plots it against N.
+
+use super::{chunk_ranges, per_node_delta, snapshot, ReduceReport};
+use crate::net::RingNet;
+use crate::sparse::SparseVec;
+
+/// All-reduce of per-node sparse gradients. Returns the summed dense
+/// result (identical on every node) plus wire accounting; the travelling
+/// segments stay in sparse wire format the whole way.
+pub fn allreduce(net: &mut RingNet, inputs: &[SparseVec]) -> (Vec<f32>, ReduceReport) {
+    let n = net.n_nodes();
+    assert_eq!(inputs.len(), n);
+    let len = inputs[0].len;
+    assert!(inputs.iter().all(|s| s.len == len));
+
+    let chunks = chunk_ranges(len, n);
+    let before = snapshot(net);
+    let t0 = net.clock();
+
+    // Segment (node i, chunk c) = node i's sparse slice of chunk c.
+    let segment = |s: &SparseVec, c: usize| -> SparseVec {
+        let range = &chunks[c];
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (&i, &v) in s.idx.iter().zip(&s.val) {
+            let i = i as usize;
+            if range.contains(&i) {
+                idx.push((i - range.start) as u32);
+                val.push(v);
+            }
+        }
+        SparseVec {
+            len: range.len(),
+            idx,
+            val,
+        }
+    };
+
+    // held[i] = the travelling segment node i currently holds.
+    // Initially node i holds its own slice of chunk i.
+    let mut held: Vec<SparseVec> = (0..n).map(|i| segment(&inputs[i], i)).collect();
+    let mut density_per_hop = Vec::with_capacity(n - 1);
+
+    // Scatter-reduce: at round r node i holds the partial sum of chunk
+    // (i - r); it sends it to i+1 which merges in its own slice.
+    for r in 0..n - 1 {
+        let sends: Vec<u64> = held.iter().map(|s| s.wire_bytes()).collect();
+        net.round(&sends);
+        let mut next: Vec<SparseVec> = Vec::with_capacity(n);
+        for dst in 0..n {
+            let src = (dst + n - 1) % n;
+            let c = (dst + n - (r + 1)) % n; // chunk arriving at dst
+            let own = segment(&inputs[dst], c);
+            next.push(held[src].merge_add(&own));
+        }
+        held = next;
+        // Mean density of travelling segments after this hop.
+        let d = held.iter().map(|s| s.density()).sum::<f64>() / n as f64;
+        density_per_hop.push(d);
+    }
+
+    // Node i now holds the fully-reduced chunk (i + 1) % n.
+    // Assemble the global dense result and run the allgather purely for
+    // byte/time accounting (every node must end with every chunk).
+    let mut result = vec![0.0f32; len];
+    for i in 0..n {
+        let c = (i + 1) % n;
+        let range = chunks[c].clone();
+        for (&k, &v) in held[i].idx.iter().zip(&held[i].val) {
+            result[range.start + k as usize] += v;
+        }
+    }
+    for r in 0..n - 1 {
+        let sends: Vec<u64> = (0..n)
+            .map(|i| {
+                let c = (i + 1 + n - r) % n;
+                // The reduced chunk c travels in sparse format.
+                let seg_density: f64 = held[(c + n - 1) % n].density();
+                let nnz = (chunks[c].len() as f64 * seg_density).round() as usize;
+                SparseVec {
+                    len: chunks[c].len(),
+                    idx: vec![0; nnz.min(chunks[c].len())],
+                    val: vec![0.0; nnz.min(chunks[c].len())],
+                }
+                .wire_bytes()
+            })
+            .collect();
+        net.round(&sends);
+    }
+
+    (
+        result,
+        ReduceReport {
+            bytes_per_node: per_node_delta(net, &before),
+            seconds: net.clock() - t0,
+            density_per_hop,
+        },
+    )
+}
+
+/// Final density after a full scatter-reduce for per-node density `d0`
+/// under the independence approximation: 1 - (1 - d0)^N. The paper's
+/// "top 1% becomes 2%" worst case is the small-d0 linear regime.
+pub fn expected_final_density(d0: f64, n: usize) -> f64 {
+    1.0 - (1.0 - d0).powi(n as i32)
+}
+
+/// Support-only sparse ring all-reduce — the fast path for large-model
+/// density/bandwidth sims (96 nodes x 25M+ params), where the exact
+/// value-merging path is O(N^2 * nnz) and per-node f32 state would be
+/// tens of GB. Only the *supports* travel: per hop, a chunk's support is
+/// OR-ed with the local node's support (word-at-a-time); wire bytes are
+/// modelled from each segment's nnz with the same codec chooser the
+/// exact path uses. Cross-validated against `allreduce` in tests.
+pub fn allreduce_support(
+    net: &mut RingNet,
+    supports: &[crate::sparse::BitMask],
+) -> ReduceReport {
+    use crate::sparse::BitMask;
+    let n = net.n_nodes();
+    assert_eq!(supports.len(), n);
+    let len = supports[0].len();
+    assert!(supports.iter().all(|s| s.len() == len));
+
+    let chunks = super::chunk_ranges_aligned(len, n);
+    let before = super::snapshot(net);
+    let t0 = net.clock();
+
+    // held[i] = travelling support words for the chunk node i holds.
+    let mut held: Vec<Vec<u64>> = (0..n)
+        .map(|i| supports[i].word_slice(chunks[i].clone()).to_vec())
+        .collect();
+    let mut density_per_hop = Vec::with_capacity(n - 1);
+
+    let seg_bytes = |words: &[u64], chunk_len: usize| -> u64 {
+        let nnz = BitMask::popcount_words(words);
+        crate::sparse::wire_bytes(
+            crate::sparse::WireFormat::cheapest(chunk_len, nnz),
+            chunk_len,
+            nnz,
+        )
+    };
+
+    for r in 0..n - 1 {
+        let sends: Vec<u64> = (0..n)
+            .map(|i| {
+                let c = (i + n - r) % n;
+                seg_bytes(&held[i], chunks[c].len())
+            })
+            .collect();
+        net.round(&sends);
+        let mut next: Vec<Vec<u64>> = Vec::with_capacity(n);
+        for dst in 0..n {
+            let src = (dst + n - 1) % n;
+            let c = (dst + n - (r + 1)) % n;
+            let own = supports[dst].word_slice(chunks[c].clone());
+            let mut merged = held[src].clone();
+            for (m, o) in merged.iter_mut().zip(own) {
+                *m |= o;
+            }
+            next.push(merged);
+        }
+        held = next;
+        let (mut nnz, mut tot) = (0usize, 0usize);
+        for (i, h) in held.iter().enumerate() {
+            let c = (i + n - (r + 1)) % n;
+            nnz += BitMask::popcount_words(h);
+            tot += chunks[c].len();
+        }
+        density_per_hop.push(nnz as f64 / tot.max(1) as f64);
+    }
+
+    // Allgather accounting at final densities.
+    for r in 0..n - 1 {
+        let sends: Vec<u64> = (0..n)
+            .map(|i| {
+                let c = (i + 1 + n - r) % n;
+                let holder = (c + n - 1) % n;
+                seg_bytes(&held[holder], chunks[c].len())
+            })
+            .collect();
+        net.round(&sends);
+    }
+
+    ReduceReport {
+        bytes_per_node: super::per_node_delta(net, &before),
+        seconds: net.clock() - t0,
+        density_per_hop,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkSpec;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn net(n: usize) -> RingNet {
+        RingNet::new(n, LinkSpec::new(1e9, 0.0), 1.0)
+    }
+
+    fn random_sparse(rng: &mut Rng, len: usize, density: f64) -> SparseVec {
+        let mut dense = vec![0.0f32; len];
+        for v in dense.iter_mut() {
+            if (rng.uniform() as f64) < density {
+                *v = rng.normal();
+            }
+        }
+        SparseVec::from_dense(&dense)
+    }
+
+    #[test]
+    fn result_equals_dense_sum_property() {
+        forall("sparse ring allreduce == sum", 30, |g| {
+            let n = g.usize_in(2, 7);
+            let len = g.usize_in(n, 80);
+            let mut rng = Rng::new(g.case as u64 + 77);
+            let inputs: Vec<SparseVec> = (0..n)
+                .map(|_| random_sparse(&mut rng, len, 0.3))
+                .collect();
+            let mut expect = vec![0.0f32; len];
+            for s in &inputs {
+                s.scatter_add(&mut expect);
+            }
+            let mut nw = net(n);
+            let (got, _) = allreduce(&mut nw, &inputs);
+            for (a, b) in got.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn density_grows_per_hop() {
+        let n = 8;
+        let len = 8000;
+        let mut rng = Rng::new(42);
+        let inputs: Vec<SparseVec> = (0..n)
+            .map(|_| random_sparse(&mut rng, len, 0.01))
+            .collect();
+        let mut nw = net(n);
+        let (_, rep) = allreduce(&mut nw, &inputs);
+        assert_eq!(rep.density_per_hop.len(), n - 1);
+        // Strictly (statistically) increasing density.
+        assert!(
+            rep.density_per_hop.last().unwrap() > &(rep.density_per_hop[0] * 2.0),
+            "{:?}",
+            rep.density_per_hop
+        );
+        // Close to the independence model.
+        let model = expected_final_density(0.01, n);
+        let got = *rep.density_per_hop.last().unwrap();
+        assert!(
+            (got - model).abs() < model * 0.5,
+            "got {got}, model {model}"
+        );
+    }
+
+    #[test]
+    fn sparse_beats_dense_bytes_when_sparse_enough() {
+        let n = 4;
+        let len = 40_000;
+        let mut rng = Rng::new(1);
+        let inputs: Vec<SparseVec> = (0..n)
+            .map(|_| random_sparse(&mut rng, len, 0.001))
+            .collect();
+        let mut nw = net(n);
+        let (_, rep) = allreduce(&mut nw, &inputs);
+        let dense_cost = 2 * (n as u64 - 1) * (len as u64 * 4) / n as u64;
+        assert!(rep.mean_bytes_per_node() < dense_cost as f64 / 10.0);
+    }
+
+    #[test]
+    fn support_path_matches_exact_path() {
+        let n = 6;
+        let len = 3000;
+        let mut rng = Rng::new(9);
+        let inputs: Vec<SparseVec> = (0..n)
+            .map(|_| random_sparse(&mut rng, len, 0.02))
+            .collect();
+        let supports: Vec<crate::sparse::BitMask> = inputs
+            .iter()
+            .map(|s| {
+                let mut m = crate::sparse::BitMask::zeros(len);
+                for &i in &s.idx {
+                    m.set(i as usize);
+                }
+                m
+            })
+            .collect();
+        let mut net_a = net(n);
+        let (_, exact) = allreduce(&mut net_a, &inputs);
+        let mut net_b = net(n);
+        let fast = allreduce_support(&mut net_b, &supports);
+        // Same hop count; same final density (chunking differs slightly
+        // by word alignment, so allow a small relative gap).
+        assert_eq!(exact.density_per_hop.len(), fast.density_per_hop.len());
+        let (de, df) = (
+            *exact.density_per_hop.last().unwrap(),
+            *fast.density_per_hop.last().unwrap(),
+        );
+        assert!((de - df).abs() < de * 0.25, "{de} vs {df}");
+        // Byte totals within 30% (alignment + codec-boundary effects).
+        let (be, bf) = (
+            exact.total_bytes() as f64,
+            fast.total_bytes() as f64,
+        );
+        assert!((be - bf).abs() < be * 0.3, "{be} vs {bf}");
+    }
+
+    #[test]
+    fn expected_density_model() {
+        assert!((expected_final_density(0.01, 2) - 0.0199).abs() < 1e-4);
+        assert!(expected_final_density(0.01, 96) > 0.6);
+        assert!(expected_final_density(0.5, 96) > 0.999);
+    }
+}

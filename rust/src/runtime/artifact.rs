@@ -1,0 +1,135 @@
+//! One loaded artifact: compiled executable + manifest metadata +
+//! f32 marshalling.
+
+use std::path::Path;
+
+use crate::model::ParamLayout;
+use crate::util::json::{parse, Json};
+
+/// Parsed manifest metadata (shapes the marshalling layer relies on).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    /// (name, shape) per input, in call order.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    /// (name, shape) per output, in tuple order.
+    pub outputs: Vec<(String, Vec<usize>)>,
+    pub raw: Json,
+}
+
+impl ArtifactMeta {
+    pub fn from_json(raw: Json) -> anyhow::Result<Self> {
+        let shapes = |key: &str| -> anyhow::Result<Vec<(String, Vec<usize>)>> {
+            raw.req_arr(key)?
+                .iter()
+                .map(|o| {
+                    let name = o.req_str("name")?.to_string();
+                    let shape = o
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|v| v.as_usize().unwrap_or(0))
+                        .collect();
+                    Ok((name, shape))
+                })
+                .collect()
+        };
+        Ok(ArtifactMeta {
+            name: raw.req_str("name")?.to_string(),
+            kind: raw.req_str("kind")?.to_string(),
+            inputs: shapes("inputs")?,
+            outputs: shapes("outputs")?,
+            raw,
+        })
+    }
+
+    /// Parameter layout for `train_step` artifacts.
+    pub fn layout(&self) -> anyhow::Result<ParamLayout> {
+        let model = self.raw.get("model").as_str().unwrap_or(&self.name);
+        ParamLayout::from_manifest(model, &self.raw)
+    }
+
+    /// Number of leading inputs that are model parameters (train_step
+    /// artifacts list params first, then data inputs).
+    pub fn n_param_inputs(&self) -> anyhow::Result<usize> {
+        Ok(self.raw.req_arr("layers")?.len())
+    }
+}
+
+/// Compiled executable + metadata.
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    pub fn load(
+        client: &xla::PjRtClient,
+        dir: &Path,
+        name: &str,
+    ) -> anyhow::Result<Self> {
+        let manifest_path = dir.join(format!("{name}.manifest.json"));
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e}", manifest_path.display())
+        })?;
+        let meta = ArtifactMeta::from_json(
+            parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?,
+        )?;
+        let hlo_path = dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Artifact { meta, exe })
+    }
+
+    /// Execute with flat f32 buffers (one per manifest input, lengths must
+    /// match the manifest shapes). Returns one flat f32 buffer per output.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.meta.inputs.len(),
+            "artifact `{}` expects {} inputs, got {}",
+            self.meta.name,
+            self.meta.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, (iname, shape)) in inputs.iter().zip(&self.meta.inputs) {
+            let numel: usize = shape.iter().product::<usize>().max(1);
+            anyhow::ensure!(
+                buf.len() == numel,
+                "input `{iname}` of `{}`: {} elements given, shape {:?} needs {numel}",
+                self.meta.name,
+                buf.len(),
+                shape
+            );
+            let lit = if shape.is_empty() {
+                xla::Literal::from(buf[0])
+            } else if shape.len() == 1 {
+                xla::Literal::vec1(buf)
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(buf).reshape(&dims)?
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.meta.outputs.len(),
+            "artifact `{}` returned {} outputs, manifest says {}",
+            self.meta.name,
+            parts.len(),
+            self.meta.outputs.len()
+        );
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}

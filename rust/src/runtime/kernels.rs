@@ -1,0 +1,99 @@
+//! Kernel-backed importance scoring: the L1 Pallas kernel on the actual
+//! request path.
+//!
+//! The artifact processes fixed-size flat buffers (`importance_m65536` /
+//! `importance_m8192`); this wrapper tiles arbitrary layer lengths across
+//! those sizes, padding the tail with (g=0, w=1, u=1) — importance 0,
+//! never selected — and corrects the padded count out of the stats.
+
+use super::Artifact;
+use crate::compress::importance::LayerStats;
+use crate::sparse::BitMask;
+
+/// The two artifact granularities (large for bulk, small for tails).
+pub const M_LARGE: usize = 65_536;
+pub const M_SMALL: usize = 8_192;
+
+/// Importance kernel executor over arbitrary-length buffers.
+pub struct ImportanceKernel {
+    large: Artifact,
+    small: Artifact,
+    // Reusable padded staging buffers (hot path: no per-call allocation).
+    g_pad: Vec<f32>,
+    w_pad: Vec<f32>,
+    u_pad: Vec<f32>,
+}
+
+impl ImportanceKernel {
+    pub fn load(rt: &super::Runtime) -> anyhow::Result<Self> {
+        Ok(ImportanceKernel {
+            large: rt.load(&format!("importance_m{M_LARGE}"))?,
+            small: rt.load(&format!("importance_m{M_SMALL}"))?,
+            g_pad: vec![0.0; M_LARGE],
+            w_pad: vec![1.0; M_LARGE],
+            u_pad: vec![1.0; M_LARGE],
+        })
+    }
+
+    /// Score one flat buffer: returns (mask, importance, stats).
+    /// `u` follows the kernel semantics (1.0 = hard threshold).
+    pub fn score(
+        &mut self,
+        g: &[f32],
+        w: &[f32],
+        u: &[f32],
+        thr: f32,
+        eps: f32,
+    ) -> anyhow::Result<(BitMask, Vec<f32>, LayerStats)> {
+        assert!(g.len() == w.len() && g.len() == u.len());
+        let len = g.len();
+        let mut mask = BitMask::zeros(len);
+        let mut imp = vec![0.0f32; len];
+        let mut stats = LayerStats::default();
+
+        let thr_buf = [thr];
+        let eps_buf = [eps];
+        let mut off = 0usize;
+        while off < len {
+            let remaining = len - off;
+            let (m, art) = if remaining >= M_LARGE {
+                (M_LARGE, &self.large)
+            } else {
+                (M_SMALL, &self.small)
+            };
+            let take = remaining.min(m);
+            let (gs, ws, us): (&[f32], &[f32], &[f32]) = if take == m {
+                (
+                    &g[off..off + m],
+                    &w[off..off + m],
+                    &u[off..off + m],
+                )
+            } else {
+                // Tail: stage into padded buffers (g=0, w=1, u=1).
+                self.g_pad[..take].copy_from_slice(&g[off..off + take]);
+                self.g_pad[take..m].fill(0.0);
+                self.w_pad[..take].copy_from_slice(&w[off..off + take]);
+                self.w_pad[take..m].fill(1.0);
+                self.u_pad[..take].copy_from_slice(&u[off..off + take]);
+                self.u_pad[take..m].fill(1.0);
+                (&self.g_pad[..m], &self.w_pad[..m], &self.u_pad[..m])
+            };
+            let out = art.run_f32(&[gs, ws, us, &thr_buf, &eps_buf])?;
+            let (mask_f32, imp_f32, st) = (&out[0], &out[1], &out[2]);
+            for k in 0..take {
+                if mask_f32[k] != 0.0 {
+                    mask.set(off + k);
+                }
+                imp[off + k] = imp_f32[k];
+            }
+            // Kernel stats include the padded coordinates (importance 0,
+            // unselected) — only `n` needs correcting.
+            stats.sum += st[0] as f64;
+            stats.sumsq += st[1] as f64;
+            stats.n_selected += st[2] as f64;
+            stats.n += take as f64;
+            off += take;
+        }
+        Ok((mask, imp, stats))
+    }
+}

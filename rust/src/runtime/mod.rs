@@ -1,0 +1,60 @@
+//! PJRT runtime — loads AOT artifacts (HLO text lowered by
+//! `python/compile/aot.py`) and executes them from the Rust hot path.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`.  Interchange is HLO **text**: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Python never runs here — `make artifacts` is the only compile path.
+
+pub mod artifact;
+pub mod kernels;
+
+pub use artifact::{Artifact, ArtifactMeta};
+pub use kernels::ImportanceKernel;
+
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU runtime owning the client and the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU runtime rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        anyhow::ensure!(
+            dir.is_dir(),
+            "artifacts directory `{}` not found — run `make artifacts` first",
+            dir.display()
+        );
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            dir,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by name (`train_step_mlp_b32`, …).
+    pub fn load(&self, name: &str) -> anyhow::Result<Artifact> {
+        Artifact::load(&self.client, &self.dir, name)
+    }
+
+    /// Names listed in the artifact index (artifacts/index.json).
+    pub fn available(&self) -> anyhow::Result<Vec<String>> {
+        let text = std::fs::read_to_string(self.dir.join("index.json"))?;
+        let idx = crate::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("bad index.json: {e}"))?;
+        Ok(idx
+            .req_arr("artifacts")?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect())
+    }
+}

@@ -1,0 +1,266 @@
+//! `BitMask` — packed transmit-mask, the wire object of Algorithm 1's
+//! `AllGather(encode_uint8(Mask))` / `Mask = OR(Mask_r)` steps.
+
+/// Packed bitmask over `len` coordinates (u64 words).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitMask {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl BitMask {
+    pub fn zeros(len: usize) -> Self {
+        BitMask {
+            len,
+            words: vec![0; len.div_ceil(64)],
+        }
+    }
+
+    /// Build from the L1 kernel's f32 0/1 mask output.
+    pub fn from_f32(mask: &[f32]) -> Self {
+        let mut m = BitMask::zeros(mask.len());
+        for (i, &v) in mask.iter().enumerate() {
+            if v != 0.0 {
+                m.set(i);
+            }
+        }
+        m
+    }
+
+    /// Build by thresholding importance scores (CPU mirror of the kernel).
+    pub fn from_threshold(imp: &[f32], thr: f32) -> Self {
+        let mut m = BitMask::zeros(imp.len());
+        for (i, &v) in imp.iter().enumerate() {
+            if v > thr {
+                m.set(i);
+            }
+        }
+        m
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1 << (i % 64);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] &= !(1 << (i % 64));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    /// Word-at-a-time OR — Algorithm 1's mask union.
+    pub fn or_assign(&mut self, other: &BitMask) {
+        assert_eq!(self.len, other.len, "mask length mismatch");
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    pub fn and_assign(&mut self, other: &BitMask) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// Population count (selected coordinates).
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Selected fraction.
+    pub fn density(&self) -> f64 {
+        if self.len == 0 {
+            0.0
+        } else {
+            self.count() as f64 / self.len as f64
+        }
+    }
+
+    /// Iterate set indices in ascending order.
+    pub fn iter_set(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(move |(wi, &w)| {
+            let mut bits = w;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    None
+                } else {
+                    let b = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    // ---- wire codec (Algorithm 1's encode_uint8) ----------------------
+
+    /// Pack to bytes: little-endian u64 words truncated to ceil(len/8).
+    pub fn encode_u8(&self) -> Vec<u8> {
+        let n_bytes = self.len.div_ceil(8);
+        let mut out = Vec::with_capacity(n_bytes);
+        for w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.truncate(n_bytes);
+        out
+    }
+
+    pub fn decode_u8(bytes: &[u8], len: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            bytes.len() == len.div_ceil(8),
+            "mask byte length {} != expected {}",
+            bytes.len(),
+            len.div_ceil(8)
+        );
+        let mut words = vec![0u64; len.div_ceil(64)];
+        for (i, &b) in bytes.iter().enumerate() {
+            words[i / 8] |= (b as u64) << ((i % 8) * 8);
+        }
+        // Zero any bits past `len` (robustness against dirty padding).
+        let tail = len % 64;
+        if tail != 0 {
+            if let Some(last) = words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+        Ok(BitMask { len, words })
+    }
+
+    /// Wire bytes of this mask.
+    pub fn wire_bytes(&self) -> u64 {
+        self.len.div_ceil(8) as u64
+    }
+
+    /// Raw word view of a word-aligned coordinate range (the support-only
+    /// ring fast path uses `chunk_ranges_aligned` so chunk supports are
+    /// direct word slices). `range.start` must be a multiple of 64.
+    pub fn word_slice(&self, range: std::ops::Range<usize>) -> &[u64] {
+        assert_eq!(range.start % 64, 0, "unaligned word_slice start");
+        assert!(range.end <= self.len);
+        &self.words[range.start / 64..range.end.div_ceil(64)]
+    }
+
+    /// Set-bit count of a slice of words.
+    pub fn popcount_words(words: &[u64]) -> usize {
+        words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn set_get_clear() {
+        let mut m = BitMask::zeros(130);
+        m.set(0);
+        m.set(64);
+        m.set(129);
+        assert!(m.get(0) && m.get(64) && m.get(129));
+        assert!(!m.get(1) && !m.get(128));
+        assert_eq!(m.count(), 3);
+        m.clear(64);
+        assert!(!m.get(64));
+        assert_eq!(m.count(), 2);
+    }
+
+    #[test]
+    fn or_is_union() {
+        let mut a = BitMask::zeros(100);
+        let mut b = BitMask::zeros(100);
+        a.set(3);
+        b.set(97);
+        b.set(3);
+        a.or_assign(&b);
+        assert_eq!(a.iter_set().collect::<Vec<_>>(), vec![3, 97]);
+    }
+
+    #[test]
+    fn from_f32_and_threshold_agree() {
+        let imp = [0.1f32, 0.0, 0.5, 0.04, 0.06];
+        let as_f32: Vec<f32> = imp.iter().map(|&v| (v > 0.05) as u8 as f32).collect();
+        assert_eq!(
+            BitMask::from_f32(&as_f32),
+            BitMask::from_threshold(&imp, 0.05)
+        );
+    }
+
+    #[test]
+    fn codec_roundtrip_property() {
+        forall("bitmask u8 codec roundtrip", 100, |g| {
+            let len = g.usize_in(1, 2000);
+            let mut m = BitMask::zeros(len);
+            let n_set = g.usize_in(0, len.max(2));
+            for _ in 0..n_set {
+                m.set(g.usize_in(0, len));
+            }
+            let bytes = m.encode_u8();
+            assert_eq!(bytes.len(), len.div_ceil(8));
+            let back = BitMask::decode_u8(&bytes, len).unwrap();
+            assert_eq!(m, back);
+        });
+    }
+
+    #[test]
+    fn or_matches_elementwise_property() {
+        forall("word-level OR == element OR", 50, |g| {
+            let len = g.usize_in(1, 500);
+            let mut a = BitMask::zeros(len);
+            let mut b = BitMask::zeros(len);
+            for i in 0..len {
+                if g.bool() {
+                    a.set(i);
+                }
+                if g.bool() {
+                    b.set(i);
+                }
+            }
+            let mut c = a.clone();
+            c.or_assign(&b);
+            for i in 0..len {
+                assert_eq!(c.get(i), a.get(i) || b.get(i));
+            }
+        });
+    }
+
+    #[test]
+    fn decode_rejects_bad_length() {
+        assert!(BitMask::decode_u8(&[0u8; 3], 100).is_err());
+    }
+
+    #[test]
+    fn iter_set_ascending() {
+        let mut m = BitMask::zeros(200);
+        for i in [5usize, 63, 64, 65, 199] {
+            m.set(i);
+        }
+        assert_eq!(m.iter_set().collect::<Vec<_>>(), vec![5, 63, 64, 65, 199]);
+    }
+
+    #[test]
+    fn density() {
+        let mut m = BitMask::zeros(1000);
+        for i in 0..10 {
+            m.set(i * 100);
+        }
+        assert!((m.density() - 0.01).abs() < 1e-12);
+    }
+}

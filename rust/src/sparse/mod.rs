@@ -1,0 +1,95 @@
+//! Sparse gradient codecs + wire-size accounting.
+//!
+//! Everything the paper's bandwidth numbers rest on: how a pruned gradient
+//! is represented on the wire. Three encodings, chosen per message by
+//! actual byte cost (`WireFormat::cheapest`):
+//!
+//! * `Pairs` — (u32 index, f32 value) per nonzero: best when very sparse.
+//! * `Bitmap` — 1 bit/coordinate + packed f32 values: best at ≥ ~3%
+//!   density, and the natural mate of Algorithm 1's shared mask (the mask
+//!   travels once as a bitmap, the values alone afterwards).
+//! * `Dense` — raw f32s: the fallback that keeps "compressed" never worse
+//!   than baseline.
+//!
+//! `BitMask` is the `encode_uint8(Mask)` of Algorithm 1 — masks AllGather
+//! around the ring as packed bytes and are OR-combined.
+
+pub mod mask;
+pub mod vec;
+
+pub use mask::BitMask;
+pub use vec::SparseVec;
+
+/// Wire encodings for one gradient message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFormat {
+    Pairs,
+    Bitmap,
+    Dense,
+}
+
+/// Fixed per-message header: format tag + element count (u8 + u32 + u32 nnz).
+pub const HEADER_BYTES: u64 = 9;
+
+/// Wire size of `nnz` nonzeros out of `len` coordinates, per format.
+pub fn wire_bytes(format: WireFormat, len: usize, nnz: usize) -> u64 {
+    HEADER_BYTES
+        + match format {
+            WireFormat::Pairs => (nnz as u64) * 8,
+            WireFormat::Bitmap => (len as u64).div_ceil(8) + (nnz as u64) * 4,
+            WireFormat::Dense => (len as u64) * 4,
+        }
+}
+
+impl WireFormat {
+    /// Cheapest format for the given density.
+    pub fn cheapest(len: usize, nnz: usize) -> WireFormat {
+        let mut best = WireFormat::Dense;
+        let mut best_bytes = wire_bytes(WireFormat::Dense, len, nnz);
+        for f in [WireFormat::Pairs, WireFormat::Bitmap] {
+            let b = wire_bytes(f, len, nnz);
+            if b < best_bytes {
+                best = f;
+                best_bytes = b;
+            }
+        }
+        best
+    }
+}
+
+/// Bytes for transmitting only the values under an *already shared* mask
+/// (Algorithm 1: after the mask AllGather, ring rounds carry values only).
+pub fn values_only_bytes(nnz: usize) -> u64 {
+    HEADER_BYTES + (nnz as u64) * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairs_win_when_very_sparse() {
+        assert_eq!(WireFormat::cheapest(1_000_000, 100), WireFormat::Pairs);
+    }
+
+    #[test]
+    fn bitmap_wins_at_moderate_density() {
+        // 5% density: pairs = 8*50k = 400k; bitmap = 125k + 200k = 325k.
+        assert_eq!(WireFormat::cheapest(1_000_000, 50_000), WireFormat::Bitmap);
+    }
+
+    #[test]
+    fn dense_wins_when_dense() {
+        assert_eq!(WireFormat::cheapest(1000, 999), WireFormat::Dense);
+    }
+
+    #[test]
+    fn wire_bytes_formulas() {
+        assert_eq!(wire_bytes(WireFormat::Dense, 100, 0), HEADER_BYTES + 400);
+        assert_eq!(wire_bytes(WireFormat::Pairs, 100, 10), HEADER_BYTES + 80);
+        assert_eq!(
+            wire_bytes(WireFormat::Bitmap, 100, 10),
+            HEADER_BYTES + 13 + 40
+        );
+    }
+}

@@ -1,0 +1,266 @@
+//! `SparseVec` — (index, value) gradient representation used by the
+//! per-node sparse path (DGC baseline) and by ring rounds that carry
+//! values under a shared mask.
+
+use super::mask::BitMask;
+use super::{wire_bytes, WireFormat};
+
+/// Sparse view of a length-`len` f32 vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseVec {
+    pub len: usize,
+    pub idx: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn empty(len: usize) -> Self {
+        SparseVec {
+            len,
+            idx: Vec::new(),
+            val: Vec::new(),
+        }
+    }
+
+    /// Gather the coordinates selected by `mask`.
+    pub fn from_mask(dense: &[f32], mask: &BitMask) -> Self {
+        assert_eq!(dense.len(), mask.len());
+        let mut idx = Vec::with_capacity(mask.count());
+        let mut val = Vec::with_capacity(idx.capacity());
+        for i in mask.iter_set() {
+            idx.push(i as u32);
+            val.push(dense[i]);
+        }
+        SparseVec {
+            len: dense.len(),
+            idx,
+            val,
+        }
+    }
+
+    /// All nonzero coordinates.
+    pub fn from_dense(dense: &[f32]) -> Self {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &v) in dense.iter().enumerate() {
+            if v != 0.0 {
+                idx.push(i as u32);
+                val.push(v);
+            }
+        }
+        SparseVec {
+            len: dense.len(),
+            idx,
+            val,
+        }
+    }
+
+    /// Top-k by |value| (the DGC selection rule). Deterministic tie-break
+    /// by index. k is clamped to len.
+    pub fn top_k(dense: &[f32], k: usize) -> Self {
+        let k = k.min(dense.len());
+        if k == 0 {
+            return SparseVec::empty(dense.len());
+        }
+        // Select the k largest |v| via partial sort of indices.
+        let mut order: Vec<u32> = (0..dense.len() as u32).collect();
+        order.select_nth_unstable_by(k - 1, |&a, &b| {
+            let (va, vb) = (dense[a as usize].abs(), dense[b as usize].abs());
+            vb.partial_cmp(&va)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut idx: Vec<u32> = order[..k].to_vec();
+        idx.sort_unstable();
+        let val = idx.iter().map(|&i| dense[i as usize]).collect();
+        SparseVec {
+            len: dense.len(),
+            idx,
+            val,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.len == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.len as f64
+        }
+    }
+
+    /// Dense reconstruction.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        self.scatter_into(&mut out);
+        out
+    }
+
+    /// out[idx] = val (overwrite).
+    pub fn scatter_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+    }
+
+    /// out[idx] += val — the reduce step of sparse ring all-reduce.
+    pub fn scatter_add(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] += v;
+        }
+    }
+
+    /// Merge-add two sparse vectors (union support, summed values).
+    /// Both inputs must have ascending indices; output is ascending.
+    pub fn merge_add(&self, other: &SparseVec) -> SparseVec {
+        assert_eq!(self.len, other.len);
+        let mut idx = Vec::with_capacity(self.nnz() + other.nnz());
+        let mut val = Vec::with_capacity(idx.capacity());
+        let (mut a, mut b) = (0usize, 0usize);
+        while a < self.nnz() || b < other.nnz() {
+            let ia = self.idx.get(a).copied().unwrap_or(u32::MAX);
+            let ib = other.idx.get(b).copied().unwrap_or(u32::MAX);
+            match ia.cmp(&ib) {
+                std::cmp::Ordering::Less => {
+                    idx.push(ia);
+                    val.push(self.val[a]);
+                    a += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    idx.push(ib);
+                    val.push(other.val[b]);
+                    b += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    idx.push(ia);
+                    val.push(self.val[a] + other.val[b]);
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        SparseVec {
+            len: self.len,
+            idx,
+            val,
+        }
+    }
+
+    /// Wire bytes under the cheapest codec for this density.
+    pub fn wire_bytes(&self) -> u64 {
+        wire_bytes(
+            WireFormat::cheapest(self.len, self.nnz()),
+            self.len,
+            self.nnz(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let d = vec![0.0, 1.5, 0.0, -2.0, 0.0];
+        let s = SparseVec::from_dense(&d);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.to_dense(), d);
+    }
+
+    #[test]
+    fn from_mask_gathers_selected() {
+        let d = vec![1.0, 2.0, 3.0, 4.0];
+        let mut m = BitMask::zeros(4);
+        m.set(1);
+        m.set(3);
+        let s = SparseVec::from_mask(&d, &m);
+        assert_eq!(s.idx, vec![1, 3]);
+        assert_eq!(s.val, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn top_k_selects_largest_magnitudes() {
+        let d = vec![0.1, -5.0, 3.0, 0.2, -0.05];
+        let s = SparseVec::top_k(&d, 2);
+        assert_eq!(s.idx, vec![1, 2]);
+        assert_eq!(s.val, vec![-5.0, 3.0]);
+    }
+
+    #[test]
+    fn top_k_edge_cases() {
+        let d = vec![1.0, 2.0];
+        assert_eq!(SparseVec::top_k(&d, 0).nnz(), 0);
+        assert_eq!(SparseVec::top_k(&d, 10).nnz(), 2);
+    }
+
+    #[test]
+    fn scatter_add_accumulates() {
+        let s = SparseVec {
+            len: 4,
+            idx: vec![0, 2],
+            val: vec![1.0, 2.0],
+        };
+        let mut out = vec![10.0, 10.0, 10.0, 10.0];
+        s.scatter_add(&mut out);
+        assert_eq!(out, vec![11.0, 10.0, 12.0, 10.0]);
+    }
+
+    #[test]
+    fn merge_add_property() {
+        forall("merge_add == dense add", 100, |g| {
+            let len = g.usize_in(1, 300);
+            let a_dense = g.vec_sparse(len, 0.2);
+            let b_dense = g.vec_sparse(len, 0.2);
+            let a = SparseVec::from_dense(&a_dense);
+            let b = SparseVec::from_dense(&b_dense);
+            let merged = a.merge_add(&b).to_dense();
+            let expect: Vec<f32> = a_dense
+                .iter()
+                .zip(&b_dense)
+                .map(|(x, y)| x + y)
+                .collect();
+            assert_eq!(merged, expect);
+        });
+    }
+
+    #[test]
+    fn top_k_matches_sort_property() {
+        forall("top_k == full-sort top-k", 60, |g| {
+            let len = g.usize_in(1, 200);
+            let d = g.vec_normal(len, 0.0, 1.0);
+            let k = g.usize_in(0, len + 1);
+            let s = SparseVec::top_k(&d, k);
+            let mut mags: Vec<f32> = d.iter().map(|v| v.abs()).collect();
+            mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let kth = if k == 0 { f32::INFINITY } else { mags[k.min(len) - 1] };
+            // Every selected magnitude >= every unselected magnitude.
+            let sel: std::collections::HashSet<u32> = s.idx.iter().copied().collect();
+            for (i, &v) in d.iter().enumerate() {
+                if !sel.contains(&(i as u32)) {
+                    assert!(
+                        v.abs() <= kth + 1e-6,
+                        "unselected {} > kth {}",
+                        v.abs(),
+                        kth
+                    );
+                }
+            }
+            assert_eq!(s.nnz(), k.min(len));
+        });
+    }
+
+    #[test]
+    fn wire_bytes_picks_cheap_codec() {
+        let mut d = vec![0.0f32; 10_000];
+        d[5] = 1.0;
+        let s = SparseVec::from_dense(&d);
+        assert!(s.wire_bytes() < 100); // pairs, not bitmap/dense
+    }
+}

@@ -1,0 +1,167 @@
+//! Tiny CLI argument substrate (clap is unreachable offline).
+//!
+//! Grammar: `ringiwp <subcommand> [--flag value] [--switch] [positional…]`.
+//! Typed getters with defaults; unknown-flag detection; auto-generated
+//! usage text assembled by `main.rs`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// Flags the program actually queried — used to report unknown flags.
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--k=v`, `--k v`, or boolean `--k`.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got `{v}`")),
+            None => default,
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects a number, got `{v}`")),
+            None => default,
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got `{v}`")),
+            None => default,
+        }
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.mark(key);
+        self.switches.iter().any(|s| s == key)
+    }
+
+    /// Flags/switches present on the command line but never queried.
+    pub fn unknown(&self) -> Vec<String> {
+        let seen = self.seen.borrow();
+        self.flags
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // NOTE the grammar: `--flag token` binds the token as the flag's
+        // value, so boolean switches must come last or use `--flag=`.
+        let a = args("train extra --nodes 8 --thr 0.01 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("nodes", 1), 8);
+        assert!((a.f64_or("thr", 0.0) - 0.01).abs() < 1e-12);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = args("exp --id=table1 --steps=50");
+        assert_eq!(a.str_or("id", ""), "table1");
+        assert_eq!(a.usize_or("steps", 0), 50);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("train");
+        assert_eq!(a.usize_or("nodes", 4), 4);
+        assert_eq!(a.str_or("model", "mlp"), "mlp");
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = args("bench --quick");
+        assert!(a.switch("quick"));
+    }
+
+    #[test]
+    fn unknown_flag_reporting() {
+        let a = args("train --nodes 4 --oops 1");
+        let _ = a.usize_or("nodes", 1);
+        assert_eq!(a.unknown(), vec!["oops".to_string()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_int_panics() {
+        let a = args("x --n abc");
+        // `--n abc` parses as flag n=abc; getter panics on parse.
+        let _ = a.usize_or("n", 0);
+    }
+}

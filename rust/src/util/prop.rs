@@ -1,0 +1,161 @@
+//! Property-testing substrate (proptest is unreachable offline).
+//!
+//! A deliberately small harness: deterministic seeded generators, N cases
+//! per property, and on failure a report of the seed + case index so the
+//! exact counterexample replays. No shrinking — generators are sized so
+//! raw counterexamples stay readable.
+//!
+//! ```no_run
+//! use ringiwp::util::prop::{forall, Gen};
+//! forall("sum is commutative", 100, |g| {
+//!     let a = g.f32_in(-1e3, 1e3);
+//!     let b = g.f32_in(-1e3, 1e3);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Case-local generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    /// Case index, exposed so properties can scale sizes deterministically.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.rng.below(hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of uniform f32 values.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Vector of normals — gradient-like data.
+    pub fn vec_normal(&mut self, len: usize, mu: f32, sigma: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal_with(mu, sigma)).collect()
+    }
+
+    /// Sparse-ish vector: each element nonzero with probability `density`.
+    pub fn vec_sparse(&mut self, len: usize, density: f64) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                if (self.rng.uniform() as f64) < density {
+                    self.rng.normal()
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Pick one of the provided values.
+    pub fn choice<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Environment knob: RINGIWP_PROP_SEED replays a failing run.
+fn base_seed() -> u64 {
+    std::env::var("RINGIWP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `property` against `cases` generated inputs; panics with replay
+/// info on the first failure.
+pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: usize,
+    property: F,
+) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut gen = Gen {
+            rng: Rng::new(seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            case,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut gen)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property `{name}` failed at case {case}/{cases} \
+                 (replay: RINGIWP_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("abs is non-negative", 50, |g| {
+            let x = g.f32_in(-100.0, 100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn reports_failure_with_case() {
+        forall("always fails", 10, |g| {
+            let _ = g.bool();
+            assert!(false, "boom");
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        forall("generator bounds", 100, |g| {
+            let n = g.usize_in(1, 50);
+            assert!((1..50).contains(&n));
+            let v = g.vec_f32(n, -2.0, 2.0);
+            assert_eq!(v.len(), n);
+            assert!(v.iter().all(|x| (-2.0..2.0).contains(x)));
+            let s = g.vec_sparse(200, 0.1);
+            let nnz = s.iter().filter(|x| **x != 0.0).count();
+            assert!(nnz < 100, "density way off: {nnz}");
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        forall("collect", 5, |g| {
+            // note: can't mutate outer state through RefUnwindSafe easily;
+            // instead just assert the stream is stable per case index.
+            let v = g.rng().next_u64();
+            let mut g2 = Rng::new(
+                base_seed() ^ (g.case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            assert_eq!(v, g2.next_u64());
+        });
+        first.push(0u8); // silence unused warning pattern
+        assert_eq!(first.len(), 1);
+    }
+}

@@ -1,0 +1,235 @@
+//! Deterministic RNG substrate (SplitMix64 core).
+//!
+//! Every stochastic piece of the system — synthetic gradients, random
+//! gradient selection (Sec. III-C), random mask-node choice (Alg. 1), data
+//! shuffling — draws from seeded `Rng` instances so whole experiments are
+//! reproducible bit-for-bit. `rand` is unavailable offline; SplitMix64 has
+//! excellent statistical quality for simulation workloads and is trivially
+//! splittable for per-node streams.
+
+/// SplitMix64 PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zeros fixed point and decorrelate small seeds.
+        Rng {
+            state: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xD1B5_4A32_D192_ED03,
+        }
+    }
+
+    /// Derive an independent stream (e.g. one per simulated node).
+    pub fn split(&mut self, tag: u64) -> Rng {
+        let s = self.next_u64();
+        Rng::new(s ^ tag.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        // 24 high-quality bits -> f32 mantissa.
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style widening multiply keeps this unbiased-enough for
+        // simulation use and branch-free.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal (Box–Muller; one value per call, cached pair dropped
+    /// deliberately to keep the struct `Copy`-light and splittable).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-12 {
+                let u2 = self.uniform();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (std::f32::consts::TAU * u2).cos();
+            }
+        }
+    }
+
+    /// N(mu, sigma^2).
+    pub fn normal_with(&mut self, mu: f32, sigma: f32) -> f32 {
+        mu + sigma * self.normal()
+    }
+
+    /// Log-normal with underlying N(mu, sigma^2).
+    pub fn lognormal(&mut self, mu: f32, sigma: f32) -> f32 {
+        self.normal_with(mu, sigma).exp()
+    }
+
+    /// Fill a slice with uniforms in [0,1).
+    pub fn fill_uniform(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.uniform();
+        }
+    }
+
+    /// Fill a slice with N(mu, sigma^2). Uses paired Box–Muller (both
+    /// the cos and sin branches), which halves the ln/sqrt/trig cost on
+    /// the bulk-generation hot path (synthetic 25M-param gradients).
+    pub fn fill_normal(&mut self, out: &mut [f32], mu: f32, sigma: f32) {
+        let mut i = 0;
+        let n = out.len();
+        while i + 1 < n {
+            let (a, b) = self.normal_pair();
+            out[i] = mu + sigma * a;
+            out[i + 1] = mu + sigma * b;
+            i += 2;
+        }
+        if i < n {
+            out[i] = self.normal_with(mu, sigma);
+        }
+    }
+
+    /// One Box–Muller draw yielding both independent normals.
+    #[inline]
+    pub fn normal_pair(&mut self) -> (f32, f32) {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-12 {
+                let u2 = self.uniform();
+                let r = (-2.0 * u1.ln()).sqrt();
+                let (s, c) = (std::f32::consts::TAU * u2).sin_cos();
+                return (r * c, r * s);
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose k distinct indices from [0, n) (Alg. 1's random node pick).
+    pub fn choose_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot choose {k} distinct from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        // Partial Fisher–Yates: only the first k swaps are needed.
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let (mut a, mut b) = (Rng::new(1), Rng::new(2));
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(7);
+        let mut sum = 0.0f64;
+        for _ in 0..100_000 {
+            let v = r.uniform();
+            assert!((0.0..1.0).contains(&v));
+            sum += v as f64;
+        }
+        let mean = sum / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let v = r.normal() as f64;
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn choose_distinct_is_distinct() {
+        let mut r = Rng::new(9);
+        for _ in 0..50 {
+            let mut picks = r.choose_distinct(96, 5);
+            picks.sort_unstable();
+            picks.dedup();
+            assert_eq!(picks.len(), 5);
+            assert!(picks.iter().all(|&p| p < 96));
+        }
+    }
+
+    #[test]
+    fn split_streams_decorrelated() {
+        let mut root = Rng::new(5);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(13);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

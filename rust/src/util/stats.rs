@@ -1,0 +1,231 @@
+//! Streaming statistics + histograms.
+//!
+//! The layerwise threshold controller (Eq. 4) consumes mean/var of the
+//! per-layer importance distribution; Figs. 2–4 are histograms and
+//! var/mean time-series over these same statistics.
+
+/// Welford accumulator — single pass, numerically stable mean/variance.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn extend(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.push(x as f64);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    /// Population variance.
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// var/mean — the dispersion factor of the Eq. 4 controller.
+    pub fn var_over_mean(&self) -> f64 {
+        if self.mean.abs() < 1e-30 {
+            0.0
+        } else {
+            self.var() / self.mean
+        }
+    }
+}
+
+/// Merge two sets of moment sums (sum, sumsq, n) into (mean, var).
+/// This is how the kernel's per-layer stats [ΣI, ΣI², n_sel, n] become
+/// the controller inputs without a second pass.
+pub fn mean_var_from_sums(sum: f64, sumsq: f64, n: f64) -> (f64, f64) {
+    if n <= 0.0 {
+        return (0.0, 0.0);
+    }
+    let mean = sum / n;
+    let var = (sumsq / n - mean * mean).max(0.0);
+    (mean, var)
+}
+
+/// Fixed-bin histogram over [lo, hi) with overflow/underflow buckets.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub under: u64,
+    pub over: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0);
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; n_bins],
+            under: 0,
+            over: 0,
+        }
+    }
+
+    /// Log-scale histogram helper for importance values spanning decades
+    /// (Fig. 2/3 plot log-spaced importance distributions).
+    pub fn log10(lo_exp: i32, hi_exp: i32, bins_per_decade: usize) -> Self {
+        let n = ((hi_exp - lo_exp) as usize) * bins_per_decade;
+        Histogram::new(lo_exp as f64, hi_exp as f64, n)
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.under += 1;
+        } else if x >= self.hi {
+            self.over += 1;
+        } else {
+            let n = self.bins.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.bins[idx.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn push_log10(&mut self, x: f64) {
+        if x > 0.0 {
+            self.push(x.log10());
+        } else {
+            self.under += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.under + self.over
+    }
+
+    /// (bin_center, count) rows for CSV export.
+    pub fn rows(&self) -> Vec<(f64, u64)> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (self.lo + (i as f64 + 0.5) * w, c))
+            .collect()
+    }
+}
+
+/// Exact percentile on a scratch copy (fine at experiment scale).
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty() && (0.0..=100.0).contains(&p));
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).floor() as usize;
+    v[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_known_values() {
+        let mut w = Welford::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert!((w.var() - 4.0).abs() < 1e-12);
+        assert_eq!(w.min(), 2.0);
+        assert_eq!(w.max(), 9.0);
+    }
+
+    #[test]
+    fn sums_match_welford() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64).sin() + 2.0).collect();
+        let mut w = Welford::new();
+        let (mut s, mut s2) = (0.0, 0.0);
+        for &x in &xs {
+            w.push(x);
+            s += x;
+            s2 += x * x;
+        }
+        let (mean, var) = mean_var_from_sums(s, s2, xs.len() as f64);
+        assert!((mean - w.mean()).abs() < 1e-9);
+        assert!((var - w.var()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn var_over_mean_guards_zero() {
+        let w = Welford::new();
+        assert_eq!(w.var_over_mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        h.push(-1.0);
+        h.push(42.0);
+        assert!(h.bins.iter().all(|&c| c == 1));
+        assert_eq!(h.under, 1);
+        assert_eq!(h.over, 1);
+        assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn log_histogram() {
+        let mut h = Histogram::log10(-6, 0, 10);
+        h.push_log10(1e-3); // -3 -> in range
+        h.push_log10(0.0); // underflow
+        assert_eq!(h.under, 1);
+        assert_eq!(h.total(), 2);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+    }
+}

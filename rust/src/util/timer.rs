@@ -1,0 +1,110 @@
+//! Wall-clock timing helpers for the bench harness (criterion is
+//! unreachable offline; `benches/*` use these with `harness = false`).
+
+use std::time::Instant;
+
+/// Measure `f` repeatedly: warmup runs, then `iters` timed runs.
+/// Returns per-iteration stats in nanoseconds.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchStats::from_samples(samples)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        BenchStats {
+            iters: samples.len(),
+            mean_ns: mean,
+            median_ns: samples[samples.len() / 2],
+            min_ns: samples[0],
+            max_ns: *samples.last().unwrap(),
+            std_ns: var.sqrt(),
+        }
+    }
+
+    /// `name  median  mean ±std  min..max` row, auto-scaled units.
+    pub fn row(&self, name: &str) -> String {
+        format!(
+            "{name:<44} {:>12}  {:>12} ±{:<10} [{} .. {}]  n={}",
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.max_ns),
+            self.iters
+        )
+    }
+
+    /// Throughput helper: items processed per second at the median.
+    pub fn per_sec(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns / 1e9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = BenchStats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.median_ns, 3.0);
+        assert_eq!(s.mean_ns, 3.0);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 5.0);
+    }
+
+    #[test]
+    fn bench_runs_and_measures() {
+        let mut count = 0u64;
+        let stats = bench(2, 10, || {
+            count += 1;
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(count, 12);
+        assert!(stats.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

@@ -1,0 +1,154 @@
+//! Failure injection + edge cases: the system must fail loudly and
+//! precisely, never corrupt state silently.
+
+use ringiwp::compress::Method;
+use ringiwp::config::Config;
+use ringiwp::model::{zoo, LayerKind, ParamLayout};
+use ringiwp::runtime::Runtime;
+use ringiwp::sparse::BitMask;
+use ringiwp::util::cli::Args;
+use ringiwp::util::json;
+
+#[test]
+fn runtime_missing_artifacts_dir_is_actionable() {
+    let err = Runtime::cpu("/nonexistent/path/xyz").err().expect("must fail");
+    let msg = format!("{err}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn runtime_rejects_missing_artifact() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(rt) = Runtime::cpu(&dir) else {
+        eprintln!("SKIP (no artifacts)");
+        return;
+    };
+    assert!(rt.load("no_such_artifact").is_err());
+}
+
+#[test]
+fn runtime_rejects_wrong_input_arity_and_shape() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(rt) = Runtime::cpu(&dir) else {
+        eprintln!("SKIP (no artifacts)");
+        return;
+    };
+    let art = rt.load("importance_m8192").unwrap();
+    // Wrong arity.
+    assert!(art.run_f32(&[&[0.0f32; 8192]]).is_err());
+    // Wrong shape.
+    let bad = vec![0.0f32; 100];
+    let good = vec![0.0f32; 8192];
+    let one = [0.5f32];
+    let err = art
+        .run_f32(&[&bad, &good, &good, &one, &one])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("elements given"), "{err}");
+}
+
+#[test]
+fn corrupted_manifest_fails_cleanly() {
+    let dir = std::env::temp_dir().join("ringiwp_corrupt_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("broken.manifest.json"), "{ not json !").unwrap();
+    std::fs::write(dir.join("broken.hlo.txt"), "HloModule nonsense").unwrap();
+    std::fs::write(dir.join("index.json"), r#"{"artifacts": ["broken"]}"#).unwrap();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let err = rt.load("broken").err().expect("must fail").to_string();
+    assert!(err.contains("manifest"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn config_validation_is_comprehensive() {
+    let bad_cases: Vec<Box<dyn Fn(&mut Config)>> = vec![
+        Box::new(|c| c.nodes = 0),
+        Box::new(|c| c.nodes = 1),
+        Box::new(|c| c.momentum = 1.0),
+        Box::new(|c| c.momentum = -0.1),
+        Box::new(|c| c.lr = 0.0),
+        Box::new(|c| c.threshold = -1.0),
+        Box::new(|c| c.mask_nodes = 0),
+        Box::new(|c| c.dgc_density = 1.5),
+        Box::new(|c| c.steps_per_epoch = 0),
+    ];
+    for (i, mutate) in bad_cases.iter().enumerate() {
+        let mut c = Config::default();
+        mutate(&mut c);
+        assert!(c.validate().is_err(), "bad case {i} passed validation");
+    }
+}
+
+#[test]
+fn cli_flags_flow_into_config() {
+    let a = Args::parse(
+        ["train", "--method", "dgc", "--dgc-density", "0.05", "--seed", "9"]
+            .into_iter()
+            .map(String::from),
+    );
+    let c = Config::default().apply_args(&a).unwrap();
+    assert_eq!(c.method, Method::Dgc);
+    assert!((c.dgc_density - 0.05).abs() < 1e-12);
+    assert_eq!(c.seed, 9);
+}
+
+#[test]
+fn config_file_roundtrip() {
+    let path = std::env::temp_dir().join("ringiwp_test.conf");
+    std::fs::write(&path, "nodes = 12\nmethod = terngrad\nlr = 0.2\n").unwrap();
+    let a = Args::parse(
+        ["train", "--config", path.to_str().unwrap()]
+            .into_iter()
+            .map(String::from),
+    );
+    let c = Config::default().apply_args(&a).unwrap();
+    assert_eq!(c.nodes, 12);
+    assert_eq!(c.method, Method::TernGrad);
+    assert!((c.lr - 0.2).abs() < 1e-7);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn json_error_reports_position() {
+    let err = json::parse("{\"a\": }").unwrap_err();
+    assert!(err.pos > 0);
+    assert!(format!("{err}").contains("byte"));
+}
+
+#[test]
+fn bitmask_length_mismatch_panics() {
+    let a = BitMask::zeros(10);
+    let mut b = BitMask::zeros(20);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        b.or_assign(&a);
+    }));
+    assert!(result.is_err());
+}
+
+#[test]
+fn zoo_lookup_errors() {
+    assert!(zoo::by_name("vgg16").is_err());
+}
+
+#[test]
+fn layout_split_rejects_wrong_len() {
+    let l = ParamLayout::new("t", vec![("a".into(), vec![4], LayerKind::Fc)]);
+    let result = std::panic::catch_unwind(|| {
+        let flat = vec![0.0f32; 5];
+        let _ = l.split(&flat);
+    });
+    assert!(result.is_err());
+}
+
+#[test]
+fn trainer_rejects_unknown_model() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(rt) = Runtime::cpu(&dir) else {
+        eprintln!("SKIP (no artifacts)");
+        return;
+    };
+    let mut cfg = Config::default();
+    cfg.model = "resnet9000".into();
+    assert!(ringiwp::coordinator::Trainer::new(cfg, &rt).is_err());
+}

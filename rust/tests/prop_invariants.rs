@@ -1,0 +1,175 @@
+//! Cross-module property tests: the invariants that make the paper's
+//! accounting trustworthy, exercised end-to-end across compress + ring +
+//! net (no PJRT needed).
+
+use ringiwp::compress::importance::{score_and_mask, EPS};
+use ringiwp::compress::residual::ResidualStore;
+use ringiwp::compress::terngrad::TernGrad;
+use ringiwp::model::{LayerKind, ParamLayout};
+use ringiwp::net::{LinkSpec, RingNet};
+use ringiwp::ring;
+use ringiwp::sparse::{BitMask, SparseVec};
+use ringiwp::util::prop::forall;
+use ringiwp::util::rng::Rng;
+
+fn net(n: usize) -> RingNet {
+    RingNet::new(n, LinkSpec::new(1e9, 0.0), 1.0)
+}
+
+#[test]
+fn residual_plus_masked_ring_conserves_gradient_mass() {
+    // What every node applies + what stays pending == what was injected,
+    // across multiple steps of IWP with arbitrary masks. Momentum 0 so
+    // conservation is exact.
+    forall("IWP pipeline conserves mass", 25, |g| {
+        let n = g.usize_in(2, 5);
+        let len = g.usize_in(8, 120);
+        let steps = g.usize_in(1, 4);
+        let mut stores: Vec<ResidualStore> =
+            (0..n).map(|_| ResidualStore::new(len, 0.0)).collect();
+        let mut injected = vec![0.0f64; len];
+        let mut applied = vec![0.0f64; len];
+        for _ in 0..steps {
+            for store in stores.iter_mut() {
+                let grad = g.vec_normal(len, 0.0, 1.0);
+                for (acc, &v) in injected.iter_mut().zip(&grad) {
+                    *acc += v as f64;
+                }
+                store.accumulate(&grad);
+            }
+            // Random broadcaster mask.
+            let mut mask = BitMask::zeros(len);
+            for i in 0..len {
+                if g.bool() {
+                    mask.set(i);
+                }
+            }
+            let values: Vec<&[f32]> = stores.iter().map(|s| s.pending()).collect();
+            let mut nw = net(n);
+            let (shared, summed, _) = ring::masked::allreduce(&mut nw, &[&mask], &values);
+            for (k, i) in shared.iter_set().enumerate() {
+                applied[i] += summed[k] as f64;
+            }
+            for store in stores.iter_mut() {
+                let _ = store.take_masked(&shared);
+            }
+        }
+        for i in 0..len {
+            let pending: f64 = stores.iter().map(|s| s.pending()[i] as f64).sum();
+            assert!(
+                (injected[i] - applied[i] - pending).abs() < 1e-3,
+                "coord {i}: injected {} != applied {} + pending {}",
+                injected[i],
+                applied[i],
+                pending
+            );
+        }
+    });
+}
+
+#[test]
+fn dense_ring_byte_formula_exact() {
+    forall("dense ring bytes == 2(N-1)/N * V", 30, |g| {
+        let n = g.usize_in(2, 10);
+        let len = g.usize_in(n, 500);
+        let mut bufs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(len, -1.0, 1.0)).collect();
+        let mut nw = net(n);
+        let rep = ring::dense::allreduce(&mut nw, &mut bufs);
+        // With (possibly uneven) chunking each node sends every chunk
+        // except its own twice-ish; totals must be exactly 2(N-1)*V*4
+        // across the ring.
+        assert_eq!(rep.total_bytes(), 2 * (n as u64 - 1) * (len as u64 * 4));
+    });
+}
+
+#[test]
+fn masked_bytes_scale_with_density_not_len() {
+    forall("masked wire ~ support", 20, |g| {
+        let len = 50_000;
+        let n = 4;
+        let nnz = g.usize_in(1, 400);
+        let mut mask = BitMask::zeros(len);
+        for _ in 0..nnz {
+            mask.set(g.usize_in(0, len));
+        }
+        let mut nw = net(n);
+        let (shared, rep) = ring::masked::allreduce_bytes_only(&mut nw, &[&mask]);
+        // Mask allgather cost is fixed; value cost ~ 4 bytes/selected * 2.
+        let fixed = (len as u64).div_ceil(8) * (n as u64 - 1);
+        let value_budget = 2 * 4 * shared.count() as u64 + 64 * n as u64;
+        assert!(
+            rep.mean_bytes_per_node() <= (fixed + value_budget) as f64,
+            "bytes {} vs budget {}",
+            rep.mean_bytes_per_node(),
+            fixed + value_budget
+        );
+    });
+}
+
+#[test]
+fn terngrad_roundtrip_magnitudes_bounded_by_scale() {
+    forall("terngrad |decode| <= layer max|g|", 30, |g| {
+        let len = g.usize_in(4, 300);
+        let layout = ParamLayout::new(
+            "t",
+            vec![("l".into(), vec![len], LayerKind::Fc)],
+        );
+        let grad = g.vec_normal(len, 0.0, 0.3);
+        let max = grad.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let mut rng = Rng::new(g.case as u64);
+        let t = TernGrad::encode(&grad, &layout, &mut rng);
+        for v in t.decode(&layout) {
+            assert!(v.abs() <= max + 1e-6);
+        }
+        // 2-bit wire size.
+        assert!(t.wire_bytes() <= (len as u64).div_ceil(4) + 16);
+    });
+}
+
+#[test]
+fn sparse_wire_never_exceeds_dense() {
+    forall("cheapest codec <= dense", 50, |g| {
+        let len = g.usize_in(1, 5000);
+        let density = g.choice(&[0.001, 0.01, 0.3, 0.9]);
+        let dense_vec = g.vec_sparse(len, density);
+        let sv = SparseVec::from_dense(&dense_vec);
+        let dense_bytes =
+            ringiwp::sparse::wire_bytes(ringiwp::sparse::WireFormat::Dense, len, sv.nnz());
+        assert!(sv.wire_bytes() <= dense_bytes);
+    });
+}
+
+#[test]
+fn score_and_mask_density_monotone_in_threshold() {
+    forall("higher thr -> fewer selected", 25, |g| {
+        let len = g.usize_in(32, 1000);
+        let grad = g.vec_normal(len, 0.0, 0.01);
+        let w = g.vec_normal(len, 0.0, 0.5);
+        let u = vec![1.0f32; len];
+        let mut imp = vec![0.0f32; len];
+        let mut prev = usize::MAX;
+        for thr in [0.001f32, 0.01, 0.1, 1.0] {
+            let mut mask = BitMask::zeros(len);
+            score_and_mask(&grad, &w, &u, thr, EPS, &mut imp, &mut mask);
+            assert!(mask.count() <= prev);
+            prev = mask.count();
+        }
+    });
+}
+
+#[test]
+fn ring_time_dominated_by_slowest_round() {
+    // Latency model: K rounds with per-round max semantics.
+    forall("round time == max link", 30, |g| {
+        let n = g.usize_in(2, 8);
+        let spec = LinkSpec::new(1e6, 0.001);
+        let mut nw = RingNet::new(n, spec, 1.0);
+        let bytes: Vec<u64> = (0..n).map(|_| g.usize_in(0, 100_000) as u64).collect();
+        let dur = nw.round(&bytes);
+        let expect = bytes
+            .iter()
+            .map(|&b| spec.transfer_time(b))
+            .fold(0.0f64, f64::max);
+        assert!((dur - expect).abs() < 1e-12);
+    });
+}

@@ -1,0 +1,155 @@
+//! Integration: PJRT runtime against the real AOT artifacts.
+//! Requires `make artifacts` (skipped gracefully if absent).
+
+use ringiwp::compress::importance as cpu_imp;
+use ringiwp::runtime::{ImportanceKernel, Runtime};
+use ringiwp::sparse::BitMask;
+use ringiwp::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::cpu(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn importance_kernel_matches_cpu_mirror() {
+    let Some(rt) = runtime() else { return };
+    let mut kernel = ImportanceKernel::load(&rt).expect("load kernel");
+    let mut rng = Rng::new(7);
+    // Odd length forces the padded-tail path (not a multiple of 8192).
+    for len in [1000usize, 8192, 20_000] {
+        let mut g = vec![0.0f32; len];
+        let mut w = vec![0.0f32; len];
+        rng.fill_normal(&mut g, 0.0, 0.1);
+        rng.fill_normal(&mut w, 0.0, 1.0);
+        let u = vec![1.0f32; len];
+        let thr = 0.05f32;
+        let eps = 1e-8f32;
+
+        let (mask_k, imp_k, stats_k) =
+            kernel.score(&g, &w, &u, thr, eps).expect("kernel score");
+
+        let mut imp_c = vec![0.0f32; len];
+        let mut mask_c = BitMask::zeros(len);
+        let stats_c =
+            cpu_imp::score_and_mask(&g, &w, &u, thr, eps, &mut imp_c, &mut mask_c);
+
+        assert_eq!(mask_k, mask_c, "mask mismatch at len={len}");
+        for i in 0..len {
+            assert!(
+                (imp_k[i] - imp_c[i]).abs() <= 1e-5 * imp_c[i].abs().max(1.0),
+                "imp[{i}] {} vs {}",
+                imp_k[i],
+                imp_c[i]
+            );
+        }
+        assert_eq!(stats_k.n, stats_c.n);
+        assert_eq!(stats_k.n_selected, stats_c.n_selected);
+        assert!((stats_k.sum - stats_c.sum).abs() < 1e-2 * stats_c.sum.abs().max(1.0));
+    }
+}
+
+#[test]
+fn mlp_train_step_runs_and_learns() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.load("train_step_mlp_b32").expect("load mlp");
+    let layout = art.meta.layout().expect("layout");
+    assert_eq!(art.meta.n_param_inputs().unwrap(), 6);
+
+    // He-init params.
+    let mut rng = Rng::new(1);
+    let mut params: Vec<Vec<f32>> = layout
+        .layers()
+        .iter()
+        .map(|l| {
+            let mut p = vec![0.0f32; l.size];
+            if l.shape.len() == 2 {
+                let sigma = (2.0 / l.shape[0] as f32).sqrt();
+                rng.fill_normal(&mut p, 0.0, sigma);
+            }
+            p
+        })
+        .collect();
+
+    let data = ringiwp::data::SynthClassification::cifar_like(3);
+    let mut data_rng = Rng::new(5);
+    let (x, y) = data.batch(&mut data_rng, 32);
+
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for _ in 0..30 {
+        let mut inputs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+        inputs.push(&x);
+        inputs.push(&y);
+        let out = art.run_f32(&inputs).expect("run");
+        // outputs: loss, acc, grads...
+        let loss = out[0][0];
+        assert!(loss.is_finite());
+        if first_loss.is_none() {
+            first_loss = Some(loss);
+        }
+        last_loss = loss;
+        for (p, g) in params.iter_mut().zip(&out[2..]) {
+            for (pi, gi) in p.iter_mut().zip(g) {
+                *pi -= 0.05 * gi;
+            }
+        }
+    }
+    assert!(
+        last_loss < first_loss.unwrap() * 0.7,
+        "loss did not decrease: {} -> {last_loss}",
+        first_loss.unwrap()
+    );
+}
+
+#[test]
+fn tfm_train_step_shapes() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.load("train_step_tfm_tiny_b8").expect("load tfm");
+    let layout = art.meta.layout().expect("layout");
+    let n_params: usize = layout.total_params();
+    assert!(n_params > 300_000 && n_params < 600_000, "{n_params}");
+
+    let mut rng = Rng::new(2);
+    let params: Vec<Vec<f32>> = layout
+        .layers()
+        .iter()
+        .map(|l| {
+            let mut p = vec![0.0f32; l.size];
+            match l.kind {
+                ringiwp::model::LayerKind::Norm => p.fill(1.0),
+                ringiwp::model::LayerKind::Bias => {}
+                _ => {
+                    let sigma = 1.0 / (l.fan_in() as f32).sqrt();
+                    rng.fill_normal(&mut p, 0.0, sigma);
+                }
+            }
+            p
+        })
+        .collect();
+
+    let corpus = ringiwp::data::CharCorpus::tiny();
+    let mut drng = Rng::new(3);
+    let tokens = corpus.batch(&mut drng, 8, 64);
+
+    let mut inputs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+    inputs.push(&tokens);
+    let out = art.run_f32(&inputs).expect("run tfm");
+    let loss = out[0][0];
+    // Random init: loss ~ ln(96) = 4.56.
+    assert!(
+        (loss - 4.56).abs() < 1.0,
+        "initial loss {loss} far from ln(vocab)"
+    );
+    assert_eq!(out.len(), 1 + layout.n_layers());
+    for (g, l) in out[1..].iter().zip(layout.layers()) {
+        assert_eq!(g.len(), l.size);
+        assert!(g.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,124 @@
+//! Integration: the full trainer across every method on the real MLP
+//! artifact + simulated ring. Requires `make artifacts`.
+
+use ringiwp::compress::Method;
+use ringiwp::config::Config;
+use ringiwp::coordinator::Trainer;
+use ringiwp::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::cpu(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn cfg(method: Method, steps: usize) -> Config {
+    let mut c = Config::default();
+    c.method = method;
+    c.steps = steps;
+    c.nodes = 4;
+    c.model = "mlp".into();
+    c.steps_per_epoch = 20;
+    c.warmup_epochs = 1;
+    c.seed = 7;
+    // Early-training importance on a fresh small model is O(1-10)
+    // (large CE gradients vs He-init weights), so the IWP threshold is
+    // correspondingly larger than the paper's ImageNet steady-state
+    // 0.005-0.1 range.
+    c.threshold = 200.0;
+    c
+}
+
+#[test]
+fn baseline_mlp_learns() {
+    let Some(rt) = runtime() else { return };
+    let mut t = Trainer::new(cfg(Method::Baseline, 40), &rt).unwrap();
+    let out = t.run().unwrap();
+    let first = out.losses[0].1;
+    let last = out.losses.last().unwrap().1;
+    assert!(last < first * 0.6, "loss {first} -> {last}");
+    // Dense ratio is ~1 by construction.
+    assert!((out.account.ratio() - 1.0).abs() < 0.05, "{}", out.account.ratio());
+    assert!(out.final_eval_acc > 0.5, "acc {}", out.final_eval_acc);
+}
+
+#[test]
+fn iwp_fixed_compresses_and_learns() {
+    let Some(rt) = runtime() else { return };
+    let mut t = Trainer::new(cfg(Method::IwpFixed, 40), &rt).unwrap();
+    let out = t.run().unwrap();
+    let first = out.losses[0].1;
+    let last = out.losses.last().unwrap().1;
+    assert!(last < first * 0.8, "loss {first} -> {last}");
+    assert!(
+        out.account.ratio() > 3.0,
+        "expected compression, ratio {}",
+        out.account.ratio()
+    );
+    assert!(
+        out.account.payload_ratio() > out.account.ratio(),
+        "payload metric should exceed wire metric"
+    );
+}
+
+#[test]
+fn iwp_layerwise_compresses_and_learns() {
+    let Some(rt) = runtime() else { return };
+    let mut t = Trainer::new(cfg(Method::IwpLayerwise, 40), &rt).unwrap();
+    let out = t.run().unwrap();
+    let last = out.losses.last().unwrap().1;
+    assert!(last < out.losses[0].1 * 0.8);
+    assert!(out.account.ratio() > 2.0, "{}", out.account.ratio());
+    assert!(out.account.mean_density() < 0.4);
+}
+
+#[test]
+fn dgc_runs_on_ring() {
+    let Some(rt) = runtime() else { return };
+    let mut t = Trainer::new(cfg(Method::Dgc, 30), &rt).unwrap();
+    let out = t.run().unwrap();
+    assert!(out.losses.last().unwrap().1.is_finite());
+    assert!(out.account.ratio() > 1.0);
+}
+
+#[test]
+fn terngrad_runs_and_learns() {
+    let Some(rt) = runtime() else { return };
+    let mut t = Trainer::new(cfg(Method::TernGrad, 40), &rt).unwrap();
+    let out = t.run().unwrap();
+    let last = out.losses.last().unwrap().1;
+    assert!(last < out.losses[0].1, "loss did not decrease");
+    assert!(out.account.ratio() > 2.0, "{}", out.account.ratio());
+}
+
+#[test]
+fn iwp_beats_baseline_bandwidth_at_similar_loss() {
+    let Some(rt) = runtime() else { return };
+    let out_base = Trainer::new(cfg(Method::Baseline, 60), &rt)
+        .unwrap()
+        .run()
+        .unwrap();
+    let out_iwp = Trainer::new(cfg(Method::IwpFixed, 60), &rt)
+        .unwrap()
+        .run()
+        .unwrap();
+    // The paper's central claim at miniature scale: large byte savings,
+    // small accuracy/loss cost.
+    let bytes_base = out_base.account.total_wire_bytes();
+    let bytes_iwp = out_iwp.account.total_wire_bytes();
+    assert!(
+        (bytes_base as f64) / (bytes_iwp as f64) > 3.0,
+        "bandwidth saving too small: {bytes_base} vs {bytes_iwp}"
+    );
+    assert!(
+        out_iwp.final_eval_loss < out_base.final_eval_loss * 1.5,
+        "IWP loss {} vs baseline {}",
+        out_iwp.final_eval_loss,
+        out_base.final_eval_loss
+    );
+}
