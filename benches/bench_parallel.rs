@@ -1,0 +1,111 @@
+//! Node-parallel executor speedups (DESIGN.md §4, EXPERIMENTS.md §5):
+//! the full `SimEngine` IWP step over the paper's real AlexNet/ResNet50
+//! inventories, swept across worker counts and ring sizes, plus the
+//! dense-schedule transport in isolation. `harness = false` (criterion
+//! is unreachable offline; `util::timer` provides the stats).
+//!
+//! The headline row is ResNet50 @ 4 workers: the per-node work
+//! (synthetic gradient fill, residual accumulation, broadcaster
+//! scoring, momentum masking) fans out per node/broadcaster, so the
+//! step should run ≥2x faster than the sequential oracle on a 4-core
+//! machine. Results are bit-identical at every width — the equivalence
+//! tests enforce that; this bench only measures time.
+
+use ringiwp::compress::Method;
+use ringiwp::exp::simrun::{SimCfg, SimEngine};
+use ringiwp::model::zoo;
+use ringiwp::net::LinkSpec;
+use ringiwp::ring;
+use ringiwp::ring::Executor;
+use ringiwp::util::rng::Rng;
+use ringiwp::util::timer::{bench, fmt_ns};
+
+const WORKERS: [usize; 4] = [1, 2, 4, 8];
+
+fn sim_step_median_ns(layout_name: &str, nodes: usize, workers: usize) -> f64 {
+    let layout = zoo::by_name(layout_name).expect("zoo layout");
+    let cfg = SimCfg {
+        nodes,
+        method: Method::IwpFixed,
+        link: LinkSpec::gigabit_ethernet(),
+        parallelism: workers,
+        seed: 42,
+        ..Default::default()
+    };
+    let mut engine = SimEngine::new(layout, cfg);
+    let mut step = 0usize;
+    let stats = bench(1, 3, || {
+        std::hint::black_box(engine.step(step));
+        step += 1;
+    });
+    stats.median_ns
+}
+
+fn main() {
+    println!("bench_parallel — node-parallel execution engine\n");
+
+    // ---- SimEngine IWP step over the real inventories ----------------
+    for (layout_name, label) in [("alexnet", "AlexNet 61.1M"), ("resnet50", "ResNet50 25.6M")] {
+        println!("== {label} — IWP sim step (median of 3) ==");
+        println!(
+            "{:>6} {:>10} {:>10} {:>10} {:>10}   speedup vs 1 worker",
+            "nodes", "w=1", "w=2", "w=4", "w=8"
+        );
+        for nodes in [4usize, 16, 96] {
+            let medians: Vec<f64> = WORKERS
+                .iter()
+                .map(|&w| sim_step_median_ns(layout_name, nodes, w))
+                .collect();
+            let speedups: Vec<String> = medians
+                .iter()
+                .map(|&m| format!("{:.2}x", medians[0] / m))
+                .collect();
+            println!(
+                "{:>6} {:>10} {:>10} {:>10} {:>10}   [{}]",
+                nodes,
+                fmt_ns(medians[0]),
+                fmt_ns(medians[1]),
+                fmt_ns(medians[2]),
+                fmt_ns(medians[3]),
+                speedups.join(" ")
+            );
+        }
+        println!();
+    }
+
+    // ---- Dense ring transport in isolation ---------------------------
+    println!("== dense ring all-reduce (1M f32, median of 5) ==");
+    let len = 1 << 20;
+    let mut rng = Rng::new(7);
+    for nodes in [4usize, 8, 16] {
+        let base: Vec<Vec<f32>> = (0..nodes)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let mut row = format!("{nodes:>6}");
+        let mut baseline = 0.0f64;
+        for &w in &WORKERS {
+            let exec = Executor::new(w);
+            let stats = bench(1, 5, || {
+                let mut net =
+                    ringiwp::net::RingNet::new(nodes, LinkSpec::gigabit_ethernet(), 1.0);
+                let mut bufs = base.clone();
+                std::hint::black_box(ring::dense::allreduce_exec(&mut net, &mut bufs, &exec));
+            });
+            if w == 1 {
+                baseline = stats.median_ns;
+            }
+            row.push_str(&format!(
+                " {:>10} ({:.2}x)",
+                fmt_ns(stats.median_ns),
+                baseline / stats.median_ns
+            ));
+        }
+        println!("{row}");
+    }
+
+    println!("\n(bench_parallel done — widths sweep {WORKERS:?}; equivalence is enforced by tests/parallel_equivalence.rs)");
+}

@@ -20,6 +20,8 @@ pub struct Dgc {
 }
 
 impl Dgc {
+    /// Fresh DGC state over `len` coordinates at the given target
+    /// density and residual momentum.
     pub fn new(len: usize, density: f64, momentum: f32) -> Self {
         assert!((0.0..=1.0).contains(&density));
         Dgc {
@@ -55,6 +57,7 @@ impl Dgc {
         sparse
     }
 
+    /// L2 norm of the unsent residual (staleness diagnostic).
     pub fn residual_norm(&self) -> f64 {
         self.store.residual_norm()
     }

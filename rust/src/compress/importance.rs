@@ -15,13 +15,18 @@ pub const EPS: f32 = 1e-8;
 /// aggregated per layer: inputs to the Eq. 4 controller and to Fig. 4.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct LayerStats {
+    /// ΣI — sum of importance values.
     pub sum: f64,
+    /// ΣI² — sum of squared importance values.
     pub sumsq: f64,
+    /// Number of coordinates the mask selected.
     pub n_selected: f64,
+    /// Number of coordinates scored.
     pub n: f64,
 }
 
 impl LayerStats {
+    /// Mean importance (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n > 0.0 {
             self.sum / self.n
@@ -30,6 +35,7 @@ impl LayerStats {
         }
     }
 
+    /// Population variance of the importance values.
     pub fn var(&self) -> f64 {
         mean_var_from_sums(self.sum, self.sumsq, self.n).1
     }
@@ -44,6 +50,7 @@ impl LayerStats {
         }
     }
 
+    /// Selected fraction `n_selected / n` (0 when empty).
     pub fn density(&self) -> f64 {
         if self.n > 0.0 {
             self.n_selected / self.n
@@ -52,6 +59,7 @@ impl LayerStats {
         }
     }
 
+    /// Accumulate another buffer's stats into this one (pure sums).
     pub fn merge(&mut self, other: &LayerStats) {
         self.sum += other.sum;
         self.sumsq += other.sumsq;
@@ -78,6 +86,7 @@ pub fn scores_into(g: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
     }
 }
 
+/// Allocating variant of [`scores_into`].
 pub fn scores(g: &[f32], w: &[f32], eps: f32) -> Vec<f32> {
     let mut out = vec![0.0f32; g.len()];
     scores_into(g, w, eps, &mut out);

@@ -36,6 +36,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Parse a CLI/config method name (accepts the common aliases).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s {
             "baseline" | "dense" => Method::Baseline,
@@ -49,6 +50,7 @@ impl Method {
         })
     }
 
+    /// Canonical CLI/CSV name.
     pub fn name(&self) -> &'static str {
         match self {
             Method::Baseline => "baseline",
@@ -70,6 +72,7 @@ impl Method {
         }
     }
 
+    /// Every method, in Table-I row order.
     pub fn all() -> [Method; 5] {
         [
             Method::Baseline,

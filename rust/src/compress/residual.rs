@@ -25,6 +25,7 @@ pub struct ResidualStore {
 }
 
 impl ResidualStore {
+    /// Zeroed store over `len` coordinates with the given momentum.
     pub fn new(len: usize, momentum: f32) -> Self {
         assert!((0.0..1.0).contains(&momentum));
         ResidualStore {
@@ -34,10 +35,12 @@ impl ResidualStore {
         }
     }
 
+    /// Number of coordinates tracked.
     pub fn len(&self) -> usize {
         self.res.len()
     }
 
+    /// True for a zero-length store.
     pub fn is_empty(&self) -> bool {
         self.res.is_empty()
     }

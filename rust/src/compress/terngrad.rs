@@ -12,6 +12,7 @@ use crate::util::rng::Rng;
 /// Ternary-quantized gradient for one flat buffer.
 #[derive(Debug, Clone)]
 pub struct TernGrad {
+    /// Coordinate count of the encoded buffer.
     pub len: usize,
     /// Per-layer scales s_t.
     pub scales: Vec<f32>,

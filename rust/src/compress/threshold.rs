@@ -28,6 +28,7 @@ pub struct ThresholdCfg {
     /// `alpha_epoch_interval` epochs (paper: "α can be set to a constant
     /// within a certain epoch interval").
     pub alpha_epoch_interval: usize,
+    /// Multiplier applied to α at each interval boundary.
     pub alpha_decay: f32,
 }
 

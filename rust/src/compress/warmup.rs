@@ -6,6 +6,7 @@
 /// Warm-up schedule over epochs.
 #[derive(Debug, Clone, Copy)]
 pub struct Warmup {
+    /// Number of warm-up epochs (0 disables).
     pub epochs: usize,
     /// Threshold multiplier at epoch 0 (e.g. 0.1 -> 10x laxer threshold).
     pub start_mult: f32,
@@ -21,6 +22,7 @@ impl Default for Warmup {
 }
 
 impl Warmup {
+    /// Disabled warm-up (multiplier 1 everywhere).
     pub fn none() -> Self {
         Warmup {
             epochs: 0,

@@ -16,6 +16,7 @@ pub struct Config {
     pub nodes: usize,
     /// `mlp` | `tfm_tiny` | zoo names for synthetic runs.
     pub model: String,
+    /// Compression method (Table I rows).
     pub method: Method,
     /// Importance threshold (α for layerwise).
     pub threshold: f32,
@@ -27,22 +28,35 @@ pub struct Config {
     pub mask_nodes: usize,
     /// Random gradient selection on/off (Sec. III-C).
     pub random_select: bool,
+    /// SGD / residual-store momentum m.
     pub momentum: f32,
+    /// Base learning rate η.
     pub lr: f32,
+    /// Total training steps.
     pub steps: usize,
+    /// Per-node batch size.
     pub batch_size: usize,
     /// Steps per "epoch" for epoch-indexed schedules (small-scale stand-in).
     pub steps_per_epoch: usize,
+    /// Warm-up epochs for thresholds / DGC density ramps.
     pub warmup_epochs: usize,
+    /// Per-step local gradient clip (global L2; 0 disables).
     pub clip_norm: f32,
     /// DGC baseline density.
     pub dgc_density: f64,
+    /// Root seed for every stochastic stream.
     pub seed: u64,
-    /// Link model.
+    /// Link bandwidth in MB/s (gigabit usable by default).
     pub bandwidth_mbps: f64,
+    /// Link latency in microseconds.
     pub latency_us: f64,
-    /// Artifact + output dirs.
+    /// Worker threads for the node-parallel execution engine
+    /// (`ring::exec`, DESIGN.md §4). 1 = sequential oracle; results are
+    /// bit-identical at any setting.
+    pub parallelism: usize,
+    /// Artifact directory (`make artifacts` output).
     pub artifacts_dir: String,
+    /// Output directory for CSVs and logs.
     pub out_dir: String,
 }
 
@@ -68,6 +82,7 @@ impl Default for Config {
             seed: 42,
             bandwidth_mbps: 117.0 * 1.048576, // gigabit usable, in MB/s
             latency_us: 100.0,
+            parallelism: 1,
             artifacts_dir: "artifacts".into(),
             out_dir: "results".into(),
         }
@@ -104,6 +119,7 @@ impl Config {
         self.seed = a.u64_or("seed", self.seed);
         self.bandwidth_mbps = a.f64_or("bandwidth-mbps", self.bandwidth_mbps);
         self.latency_us = a.f64_or("latency-us", self.latency_us);
+        self.parallelism = a.usize_or("parallelism", self.parallelism);
         self.artifacts_dir = a.str_or("artifacts", &self.artifacts_dir);
         self.out_dir = a.str_or("out", &self.out_dir);
         self.validate()?;
@@ -132,6 +148,7 @@ impl Config {
                 "seed" => self.seed = v.parse()?,
                 "bandwidth_mbps" => self.bandwidth_mbps = v.parse()?,
                 "latency_us" => self.latency_us = v.parse()?,
+                "parallelism" => self.parallelism = v.parse()?,
                 "artifacts_dir" => self.artifacts_dir = v.clone(),
                 "out_dir" => self.out_dir = v.clone(),
                 other => anyhow::bail!("unknown config key `{other}`"),
@@ -140,6 +157,7 @@ impl Config {
         Ok(self)
     }
 
+    /// Reject out-of-range values with actionable messages.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.nodes >= 2, "nodes must be >= 2");
         anyhow::ensure!(self.threshold >= 0.0, "threshold must be >= 0");
@@ -157,13 +175,21 @@ impl Config {
             "dgc_density must be in [0,1]"
         );
         anyhow::ensure!(self.steps_per_epoch > 0, "steps_per_epoch must be > 0");
+        anyhow::ensure!(self.parallelism >= 1, "parallelism must be >= 1");
         Ok(())
     }
 
+    /// Executor for the node-parallel engine at this config's width.
+    pub fn executor(&self) -> crate::ring::Executor {
+        crate::ring::Executor::new(self.parallelism)
+    }
+
+    /// The link model in SI units.
     pub fn link_spec(&self) -> crate::net::LinkSpec {
         crate::net::LinkSpec::new(self.bandwidth_mbps * 1e6, self.latency_us * 1e-6)
     }
 
+    /// Epoch index of a step under `steps_per_epoch`.
     pub fn epoch_of(&self, step: usize) -> usize {
         step / self.steps_per_epoch
     }
@@ -235,6 +261,21 @@ mod tests {
         let mut c = Config::default();
         c.mask_nodes = 10;
         c.nodes = 4;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn parallelism_knob_flows_and_validates() {
+        let a = Args::parse(
+            ["train", "--parallelism", "4"].into_iter().map(String::from),
+        );
+        let cfg = Config::default().apply_args(&a).unwrap();
+        assert_eq!(cfg.parallelism, 4);
+        assert_eq!(cfg.executor().workers(), 4);
+        let kv = parse_kv("parallelism = 8").unwrap();
+        assert_eq!(Config::default().apply_kv(&kv).unwrap().parallelism, 8);
+        let mut c = Config::default();
+        c.parallelism = 0;
         assert!(c.validate().is_err());
     }
 

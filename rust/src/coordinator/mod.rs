@@ -11,9 +11,13 @@
 //! Replicas stay bit-identical across nodes (synchronous SGD), so the
 //! trainer keeps ONE parameter copy and per-node gradient/residual
 //! state — the transport still moves per-node data and accounts every
-//! wire byte.  Determinism note: node threads would buy nothing on this
-//! 1-core testbed and would cost reproducibility; the ring transport is
-//! the unit under test, not the OS scheduler (DESIGN.md §2).
+//! wire byte.  Determinism note: per-node work (clipping, residual
+//! accumulation, encode/decode, the ring reduce itself) fans out over
+//! the node-parallel executor (`ring::exec`, `--parallelism W`), which
+//! is constructed so results stay bit-identical to the sequential
+//! oracle — the OS scheduler never becomes part of the unit under test
+//! (DESIGN.md §4). Only the PJRT local steps stay serialized behind the
+//! single artifact handle (DESIGN.md §2).
 
 pub mod trainer;
 

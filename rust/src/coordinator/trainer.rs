@@ -11,6 +11,7 @@ use crate::model::ParamLayout;
 use crate::net::RingNet;
 use crate::optim::{LrSchedule, MomentumSgd};
 use crate::ring;
+use crate::ring::Executor;
 use crate::runtime::{Artifact, ImportanceKernel, Runtime};
 use crate::sparse::BitMask;
 use crate::util::rng::Rng;
@@ -28,8 +29,11 @@ pub struct TrainOutcome {
     pub net_seconds: f64,
     /// Node-0 I/O trace (KB/s series) for Fig. 7/8-style plots.
     pub io_trace: Vec<(f64, f64)>,
+    /// Peak node-0 transmit rate over the run (KB/s).
     pub peak_kbps: f64,
+    /// Eval loss after the final step.
     pub final_eval_loss: f64,
+    /// Eval accuracy after the final step (0 for LM tasks).
     pub final_eval_acc: f64,
 }
 
@@ -74,6 +78,8 @@ pub struct Trainer {
     grads: Vec<Vec<f32>>,
     u_buf: Vec<f32>,
     account_scratch: CompressionAccount,
+    /// Node-parallel executor for the reduce paths (`cfg.parallelism`).
+    exec: Executor,
 }
 
 impl Trainer {
@@ -148,6 +154,7 @@ impl Trainer {
         };
 
         Ok(Trainer {
+            exec: Executor::new(cfg.parallelism),
             net: RingNet::new(cfg.nodes, cfg.link_spec(), 0.05),
             stores: (0..cfg.nodes)
                 .map(|_| ResidualStore::new(total, store_momentum))
@@ -174,6 +181,7 @@ impl Trainer {
         })
     }
 
+    /// The model layout under training.
     pub fn layout(&self) -> &ParamLayout {
         &self.layout
     }
@@ -286,9 +294,9 @@ impl Trainer {
         // ---- local gradient clipping ---------------------------------
         if self.cfg.clip_norm > 0.0 {
             let per_node = clip::per_node_max_norm(self.cfg.clip_norm, n);
-            for g in self.grads.iter_mut() {
+            self.exec.map_mut(&mut self.grads, |_, g| {
                 clip::clip_by_global_norm(g, per_node);
-            }
+            });
         }
 
         // ---- reduce + update (method-specific) -----------------------
@@ -309,7 +317,7 @@ impl Trainer {
     // ---- reduce paths ------------------------------------------------
 
     fn reduce_dense(&mut self, lr: f32) -> anyhow::Result<()> {
-        let rep = ring::dense::allreduce(&mut self.net, &mut self.grads);
+        let rep = ring::dense::allreduce_exec(&mut self.net, &mut self.grads, &self.exec);
         let n = self.cfg.nodes as f32;
         // grads[0] now holds the sum; average and apply with momentum.
         let avg: Vec<f32> = self.grads[0].iter().map(|&g| g / n).collect();
@@ -326,12 +334,21 @@ impl Trainer {
 
     fn reduce_terngrad(&mut self, lr: f32) -> anyhow::Result<()> {
         let n = self.cfg.nodes;
-        // Encode per node, allgather the quantized blobs, decode + sum.
+        // Encode per node in parallel (each node consumes only its own
+        // RNG stream; the ternary blobs are ~16x smaller than dense, so
+        // holding all n is cheap), then decode + sum sequentially in
+        // node order — the same f32 addition order as the sequential
+        // loop, one transient dense vector at a time — and allgather
+        // the quantized blobs.
+        let before: Vec<u64> = (0..n).map(|i| self.net.node_tx_bytes(i)).collect();
+        let grads = &self.grads;
+        let layout = &self.layout;
+        let encoded: Vec<TernGrad> = self.exec.map_mut(&mut self.node_rngs, |node, rng| {
+            TernGrad::encode(&grads[node], layout, rng)
+        });
         let mut sum = vec![0.0f32; self.layout.total_params()];
         let mut blob_bytes = vec![0u64; n];
-        let before: Vec<u64> = (0..n).map(|i| self.net.node_tx_bytes(i)).collect();
-        for node in 0..n {
-            let t = TernGrad::encode(&self.grads[node], &self.layout, &mut self.node_rngs[node]);
+        for (node, t) in encoded.iter().enumerate() {
             blob_bytes[node] = t.wire_bytes();
             for (s, v) in sum.iter_mut().zip(t.decode(&self.layout)) {
                 *s += v;
@@ -358,13 +375,12 @@ impl Trainer {
         let n = self.cfg.nodes;
         let density =
             Dgc::density_at_epoch(self.cfg.dgc_density, epoch, self.cfg.warmup_epochs);
-        let sparses: Vec<_> = (0..n)
-            .map(|node| {
-                self.dgcs[node].density = density;
-                self.dgcs[node].step(&self.grads[node])
-            })
-            .collect();
-        let (sum, rep) = ring::sparse::allreduce(&mut self.net, &sparses);
+        let grads = &self.grads;
+        let sparses: Vec<_> = self.exec.map_mut(&mut self.dgcs, |node, dgc| {
+            dgc.density = density;
+            dgc.step(&grads[node])
+        });
+        let (sum, rep) = ring::sparse::allreduce_exec(&mut self.net, &sparses, &self.exec);
         let inv_n = 1.0 / n as f32;
         for (i, &v) in sum.iter().enumerate() {
             if v != 0.0 {
@@ -389,9 +405,13 @@ impl Trainer {
 
     fn reduce_iwp(&mut self, lr: f32, epoch: usize) -> anyhow::Result<()> {
         let n = self.cfg.nodes;
-        // Residual accumulation (momentum correction) on every node.
-        for node in 0..n {
-            self.stores[node].accumulate(&self.grads[node]);
+        // Residual accumulation (momentum correction) on every node,
+        // fanned out across the executor (disjoint per-node stores).
+        {
+            let grads = &self.grads;
+            self.exec.map_mut(&mut self.stores, |node, store| {
+                store.accumulate(&grads[node]);
+            });
         }
 
         // Per-layer thresholds from trailing stats (Eq. 4 controller).
@@ -406,7 +426,11 @@ impl Trainer {
             .choose_distinct(n, self.cfg.mask_nodes.min(n));
 
         // Each broadcaster scores its pending residuals with the L1
-        // kernel, layer by layer, and builds its mask.
+        // kernel, layer by layer, and builds its mask. This loop stays
+        // sequential: the PJRT kernel executes through a single loaded
+        // artifact handle (parallelizing across PJRT clients is the
+        // ROADMAP async direction); the CPU-mirror engine in
+        // `exp::simrun` fans the same scoring out per broadcaster.
         let total = self.layout.total_params();
         let mut masks: Vec<BitMask> = Vec::with_capacity(broadcasters.len());
         let mut new_stats = vec![LayerStats::default(); self.layout.n_layers()];
@@ -446,12 +470,13 @@ impl Trainer {
         let mask_refs: Vec<&BitMask> = masks.iter().collect();
         let values: Vec<&[f32]> = self.stores.iter().map(|s| s.pending()).collect();
         let (shared, summed, rep) =
-            ring::masked::allreduce(&mut self.net, &mask_refs, &values);
+            ring::masked::allreduce_exec(&mut self.net, &mask_refs, &values, &self.exec);
 
         // Zero transmitted residual + velocity on every node.
-        for store in self.stores.iter_mut() {
-            let _ = store.take_masked(&shared);
-        }
+        let shared_ref = &shared;
+        self.exec.map_mut(&mut self.stores, |_, store| {
+            let _ = store.take_masked(shared_ref);
+        });
 
         // Sparse SGD update on the shared support (Alg. 1 line 13).
         let support: Vec<usize> = shared.iter_set().collect();

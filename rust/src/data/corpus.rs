@@ -59,6 +59,7 @@ pub fn encode_char(c: u8) -> u8 {
     }
 }
 
+/// Inverse of [`encode_char`] (the overflow token renders as newline).
 pub fn decode_char(t: u8) -> char {
     if (t as usize) < VOCAB - 1 {
         (t + 32) as char
@@ -71,14 +72,17 @@ pub fn decode_char(t: u8) -> char {
 #[derive(Debug, Clone)]
 pub struct CharCorpus {
     tokens: Vec<u8>,
+    /// Vocabulary size (96 printable-ASCII codes).
     pub vocab: usize,
 }
 
 impl CharCorpus {
+    /// The embedded [`TINY_CORPUS`].
     pub fn tiny() -> Self {
         CharCorpus::from_text(TINY_CORPUS)
     }
 
+    /// Tokenize arbitrary text with the char tokenizer.
     pub fn from_text(text: &str) -> Self {
         CharCorpus {
             tokens: text.bytes().map(encode_char).collect(),
@@ -86,10 +90,12 @@ impl CharCorpus {
         }
     }
 
+    /// Token count.
     pub fn len(&self) -> usize {
         self.tokens.len()
     }
 
+    /// True for an empty corpus.
     pub fn is_empty(&self) -> bool {
         self.tokens.is_empty()
     }

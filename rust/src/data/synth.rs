@@ -11,7 +11,9 @@ use crate::util::rng::Rng;
 /// Gaussian-mixture classification data, sharded per node.
 #[derive(Debug, Clone)]
 pub struct SynthClassification {
+    /// Input dimensionality.
     pub dim: usize,
+    /// Number of mixture components / labels.
     pub n_classes: usize,
     /// Per-class anchor vectors.
     prototypes: Vec<Vec<f32>>,
@@ -20,6 +22,7 @@ pub struct SynthClassification {
 }
 
 impl SynthClassification {
+    /// Draw `n_classes` Gaussian anchors in `dim` dimensions from `seed`.
     pub fn new(dim: usize, n_classes: usize, noise: f32, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let prototypes = (0..n_classes)

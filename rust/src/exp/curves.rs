@@ -12,6 +12,8 @@ use crate::csv_row;
 use crate::metrics::CsvWriter;
 use crate::runtime::Runtime;
 
+/// Train `model` under baseline + both IWP variants and write the
+/// Fig. 5/6 curve CSVs.
 pub fn run(
     rt: &Runtime,
     out_dir: &str,

@@ -12,6 +12,8 @@ use crate::metrics::CsvWriter;
 use crate::model::zoo;
 use crate::ring::sparse::expected_final_density;
 
+/// Sweep ring sizes under DGC and IWP and write
+/// `density_growth.csv` against the analytic `1-(1-d)^N` model.
 pub fn run(out_dir: &str, seed: u64) -> anyhow::Result<()> {
     let layout = zoo::resnet50();
     let ring_sizes = [4usize, 8, 16, 32, 64, 96];

@@ -11,6 +11,8 @@ use crate::exp::simrun::{SimCfg, SimEngine};
 use crate::metrics::CsvWriter;
 use crate::model::zoo;
 
+/// Run baseline and IWP over ResNet50 gradients and write the node-0
+/// KB/s trace CSV (`fig7_fig8_io_traces.csv`).
 pub fn run(out_dir: &str, nodes: usize, steps: usize, seed: u64) -> anyhow::Result<()> {
     let mut csv = CsvWriter::create(
         format!("{out_dir}/fig7_fig8_io_traces.csv"),

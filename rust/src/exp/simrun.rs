@@ -18,25 +18,43 @@ use crate::metrics::CompressionAccount;
 use crate::model::ParamLayout;
 use crate::net::{LinkSpec, RingNet};
 use crate::ring;
+use crate::ring::Executor;
 use crate::sparse::BitMask;
 use crate::util::rng::Rng;
 
 /// Engine configuration (subset of `config::Config` relevant here).
 #[derive(Debug, Clone)]
 pub struct SimCfg {
+    /// Simulated ring size N.
     pub nodes: usize,
+    /// Compression method under test.
     pub method: Method,
+    /// Importance threshold (α for the layerwise controller).
     pub threshold: f32,
+    /// Eq. 4 dispersion gain β.
     pub beta: f32,
+    /// Eq. 4 crossover C.
     pub c: f32,
+    /// Number of random mask-broadcast nodes r (Alg. 1).
     pub mask_nodes: usize,
+    /// Random gradient selection on/off (Sec. III-C).
     pub random_select: bool,
+    /// Residual-store momentum (momentum correction).
     pub momentum: f32,
+    /// DGC baseline per-node density.
     pub dgc_density: f64,
+    /// Steps per "epoch" for epoch-indexed schedules.
     pub steps_per_epoch: usize,
+    /// DGC/IWP warm-up epochs.
     pub warmup_epochs: usize,
+    /// Root seed for every stochastic stream.
     pub seed: u64,
+    /// Link model of the simulated ring.
     pub link: LinkSpec,
+    /// Worker threads for the node-parallel engine (`ring::exec`,
+    /// DESIGN.md §4). 1 = sequential oracle, bit-identical results at
+    /// any width.
+    pub parallelism: usize,
 }
 
 impl Default for SimCfg {
@@ -58,20 +76,36 @@ impl Default for SimCfg {
             warmup_epochs: 0,
             seed: 17,
             link: LinkSpec::gigabit_ethernet(),
+            parallelism: default_parallelism(),
         }
     }
+}
+
+/// Environment knob: `RINGIWP_PARALLELISM` sets the default executor
+/// width for every experiment harness (results are bit-identical at any
+/// width, so this only changes wall-clock).
+fn default_parallelism() -> usize {
+    std::env::var("RINGIWP_PARALLELISM")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&p| p >= 1)
+        .unwrap_or(1)
 }
 
 /// Per-step report.
 #[derive(Debug, Clone)]
 pub struct StepReport {
+    /// Mean wire bytes transmitted per node this step.
     pub wire_bytes_per_node: u64,
+    /// Transmitted gradient density this step.
     pub density: f64,
+    /// Virtual seconds this step occupied on the net.
     pub seconds: f64,
 }
 
 /// The simulation engine.
 pub struct SimEngine {
+    /// The configuration this engine was built with.
     pub cfg: SimCfg,
     layout: ParamLayout,
     synth: SynthGrads,
@@ -84,9 +118,10 @@ pub struct SimEngine {
     pub prev_stats: Vec<LayerStats>,
     rngs: Vec<Rng>,
     ctl_rng: Rng,
+    /// Compression accounting over the whole run.
     pub account: CompressionAccount,
+    exec: Executor,
     imp_scratch: Vec<f32>,
-    u_scratch: Vec<f32>,
     grads: Vec<Vec<f32>>,
 }
 
@@ -99,6 +134,7 @@ impl SimEngine {
     /// beyond the cap). Keeps 96-node x 61M-param sims in memory.
     const SIM_NODE_CAP: usize = 4;
 
+    /// Build an engine over `layout` with configuration `cfg`.
     pub fn new(layout: ParamLayout, cfg: SimCfg) -> Self {
         let total = layout.total_params();
         let mut root = Rng::new(cfg.seed);
@@ -132,8 +168,8 @@ impl SimEngine {
             rngs: (0..cfg.nodes).map(|i| root.split(i as u64)).collect(),
             ctl_rng: root.split(0xC011),
             account: CompressionAccount::new(),
+            exec: Executor::new(cfg.parallelism),
             imp_scratch: vec![0.0; total],
-            u_scratch: vec![1.0; total],
             grads: vec![vec![0.0; total]; cfg.nodes.min(Self::SIM_NODE_CAP)],
             policy,
             warmup,
@@ -142,14 +178,17 @@ impl SimEngine {
         }
     }
 
+    /// The model layout under simulation.
     pub fn layout(&self) -> &ParamLayout {
         &self.layout
     }
 
+    /// The virtual ring network (byte counters, clock, traces).
     pub fn net(&self) -> &RingNet {
         &self.net
     }
 
+    /// The synthetic weight buffer importance is scored against.
     pub fn weights(&self) -> &[f32] {
         &self.synth.weights
     }
@@ -172,7 +211,8 @@ impl SimEngine {
     }
 
     /// One synchronous step: generate per-node gradients, compress,
-    /// ring-reduce, account.
+    /// ring-reduce, account. Per-node work fans out over the configured
+    /// executor; reports are bit-identical at any `parallelism`.
     pub fn step(&mut self, step: usize) -> StepReport {
         let epoch = step / self.cfg.steps_per_epoch.max(1);
         let sim_nodes = self.grads.len();
@@ -183,13 +223,22 @@ impl SimEngine {
             Method::TernGrad => 1,
             _ => sim_nodes,
         };
-        for node in 0..needed {
-            self.synth.gen_step(step, &mut self.grads[node]);
-            // Decorrelate nodes with cheap multiplicative uniform jitter.
-            let rng = &mut self.rngs[node];
-            for v in self.grads[node].iter_mut() {
-                *v *= 0.85 + 0.3 * rng.uniform();
-            }
+        {
+            // Counter-based synthesis + per-node jitter streams: each
+            // node touches only its own buffer and RNG, so the fan-out
+            // is deterministic.
+            let synth = &self.synth;
+            self.exec.map_mut2(
+                &mut self.grads[..needed],
+                &mut self.rngs[..needed],
+                |node, grad, rng| {
+                    synth.gen_step_node(step, node, grad);
+                    // Decorrelate nodes with cheap multiplicative jitter.
+                    for v in grad.iter_mut() {
+                        *v *= 0.85 + 0.3 * rng.uniform();
+                    }
+                },
+            );
         }
 
         let t0 = self.net.clock();
@@ -234,26 +283,34 @@ impl SimEngine {
                 // Real top-k supports for materialized nodes; exchangeable
                 // random k-subsets for the rest (supports across disjoint
                 // data shards are near-independent — the same assumption
-                // behind the paper's 1%->2% worst-case argument).
-                let mut supports: Vec<BitMask> = Vec::with_capacity(self.cfg.nodes);
-                for node in 0..sim_nodes {
-                    self.dgcs[node].density = density;
-                    let sv = self.dgcs[node].step(&self.grads[node]);
-                    let mut m = BitMask::zeros(total);
-                    for &i in &sv.idx {
-                        m.set(i as usize);
-                    }
-                    supports.push(m);
-                }
-                for node in sim_nodes..self.cfg.nodes {
-                    let rng = &mut self.rngs[node];
-                    let mut m = BitMask::zeros(total);
-                    for _ in 0..k {
-                        m.set(rng.below(total));
-                    }
-                    supports.push(m);
-                }
-                let rep = ring::sparse::allreduce_support(&mut self.net, &supports);
+                // behind the paper's 1%->2% worst-case argument). Both
+                // halves are per-node-independent, so they fan out.
+                let grads = &self.grads;
+                let mut supports: Vec<BitMask> =
+                    self.exec.map_mut(&mut self.dgcs, |node, dgc| {
+                        dgc.density = density;
+                        let sv = dgc.step(&grads[node]);
+                        let mut m = BitMask::zeros(total);
+                        for &i in &sv.idx {
+                            m.set(i as usize);
+                        }
+                        m
+                    });
+                supports.extend(self.exec.map_mut(
+                    &mut self.rngs[sim_nodes..],
+                    |_, rng| {
+                        let mut m = BitMask::zeros(total);
+                        for _ in 0..k {
+                            m.set(rng.below(total));
+                        }
+                        m
+                    },
+                ));
+                let rep = ring::sparse::allreduce_support_exec(
+                    &mut self.net,
+                    &supports,
+                    &self.exec,
+                );
                 // Paper-metric payload: each node's own encoded top-k.
                 let payload = crate::sparse::wire_bytes(
                     crate::sparse::WireFormat::cheapest(total, k),
@@ -267,8 +324,12 @@ impl SimEngine {
                 )
             }
             Method::IwpFixed | Method::IwpLayerwise => {
-                for node in 0..sim_nodes {
-                    self.stores[node].accumulate(&self.grads[node]);
+                {
+                    // Residual accumulation: one store per node, fanned out.
+                    let grads = &self.grads;
+                    self.exec.map_mut(&mut self.stores, |node, store| {
+                        store.accumulate(&grads[node]);
+                    });
                 }
                 let wmult = self.warmup.multiplier(epoch);
                 let thrs = self.policy.layer_thresholds(
@@ -283,32 +344,57 @@ impl SimEngine {
                     .ctl_rng
                     .choose_distinct(sim_nodes, self.cfg.mask_nodes.min(sim_nodes));
                 let total = self.layout.total_params();
-                let mut masks = Vec::with_capacity(broadcasters.len());
-                let mut new_stats = vec![LayerStats::default(); self.layout.n_layers()];
-                for &b in &broadcasters {
-                    select::fill_u(
-                        &mut self.rngs[b],
-                        self.cfg.random_select,
-                        &mut self.u_scratch,
-                    );
-                    let pending = self.stores[b].pending();
-                    let mut mask = BitMask::zeros(total);
-                    for (li, layer) in self.layout.layers().iter().enumerate() {
-                        let r = layer.range();
-                        let mut layer_mask = BitMask::zeros(layer.size);
-                        let st = score_and_mask(
-                            &pending[r.clone()],
-                            &self.synth.weights[r.clone()],
-                            &self.u_scratch[r.clone()],
-                            thrs[li],
-                            EPS,
-                            &mut self.imp_scratch[r.clone()],
-                            &mut layer_mask,
-                        );
-                        for i in layer_mask.iter_set() {
-                            mask.set(r.start + i);
+                // Each broadcaster scores independently: its RNG stream is
+                // cloned out, scoring runs with broadcaster-local scratch
+                // (layer-sized, filled in layer order — the same draw
+                // sequence as one flat fill), and the stream is written
+                // back so cross-step RNG evolution matches the sequential
+                // path exactly.
+                let mut brngs: Vec<Rng> =
+                    broadcasters.iter().map(|&b| self.rngs[b].clone()).collect();
+                let stores = &self.stores;
+                let weights = &self.synth.weights;
+                let layout = &self.layout;
+                let bidx = &broadcasters;
+                let random_select = self.cfg.random_select;
+                let max_layer = layout.layers().iter().map(|l| l.size).max().unwrap_or(0);
+                let scored: Vec<(BitMask, Vec<LayerStats>)> =
+                    self.exec.map_mut(&mut brngs, |bi, rng| {
+                        let pending = stores[bidx[bi]].pending();
+                        let mut u = vec![1.0f32; max_layer];
+                        let mut imp = vec![0.0f32; max_layer];
+                        let mut mask = BitMask::zeros(total);
+                        let mut stats = Vec::with_capacity(layout.n_layers());
+                        for (li, layer) in layout.layers().iter().enumerate() {
+                            let r = layer.range();
+                            select::fill_u(rng, random_select, &mut u[..layer.size]);
+                            let mut layer_mask = BitMask::zeros(layer.size);
+                            let st = score_and_mask(
+                                &pending[r.clone()],
+                                &weights[r.clone()],
+                                &u[..layer.size],
+                                thrs[li],
+                                EPS,
+                                &mut imp[..layer.size],
+                                &mut layer_mask,
+                            );
+                            for i in layer_mask.iter_set() {
+                                mask.set(r.start + i);
+                            }
+                            stats.push(st);
                         }
-                        new_stats[li].merge(&st);
+                        (mask, stats)
+                    });
+                for (bi, &b) in broadcasters.iter().enumerate() {
+                    self.rngs[b] = brngs[bi].clone();
+                }
+                // Merge stats in broadcaster order (same f64 addition
+                // order as the sequential loop).
+                let mut new_stats = vec![LayerStats::default(); self.layout.n_layers()];
+                let mut masks = Vec::with_capacity(scored.len());
+                for (mask, stats) in scored {
+                    for (li, st) in stats.iter().enumerate() {
+                        new_stats[li].merge(st);
                     }
                     masks.push(mask);
                 }
@@ -316,9 +402,10 @@ impl SimEngine {
                 let mask_refs: Vec<&BitMask> = masks.iter().collect();
                 let (shared, rep) =
                     ring::masked::allreduce_bytes_only(&mut self.net, &mask_refs);
-                for store in self.stores.iter_mut() {
-                    let _ = store.take_masked(&shared);
-                }
+                let shared_ref = &shared;
+                self.exec.map_mut(&mut self.stores, |_, store| {
+                    let _ = store.take_masked(shared_ref);
+                });
                 // Paper-metric payload: encode(sparse(G)) per node — the
                 // selected values under the cheapest codec.
                 let nnz = shared.count();

@@ -12,8 +12,11 @@ use crate::metrics::CsvWriter;
 use crate::model::zoo;
 use crate::runtime::Runtime;
 
+/// The thresholds the paper sweeps in Sec. IV-A.
 pub const PAPER_THRESHOLDS: [f32; 4] = [0.005, 0.01, 0.05, 0.1];
 
+/// Threshold sweep + mask-node and random-selection ablations; writes
+/// one CSV per sweep.
 pub fn run(rt: Option<&Runtime>, out_dir: &str, steps: usize, seed: u64) -> anyhow::Result<()> {
     let mut csv = CsvWriter::create(
         format!("{out_dir}/threshold_sweep.csv"),

@@ -47,16 +47,30 @@ fn kind_grad_scale(kind: LayerKind) -> f32 {
 }
 
 /// Synthetic (weights, gradients) stream over a model layout.
+///
+/// Generation is **counter-based**: every (step, node, layer) triple
+/// derives its own SplitMix64 stream from the base seed, so gradients
+/// are a pure function of those coordinates. That makes per-node
+/// generation order-independent — the parallel executor (DESIGN.md §4)
+/// fills node buffers concurrently and gets bit-identical streams to
+/// the sequential path, with no shared RNG cursor to race on.
 pub struct SynthGrads {
     layout: ParamLayout,
+    /// Fixed synthetic weights (He-init scale per layer kind).
     pub weights: Vec<f32>,
-    /// Per-layer activity multipliers (resampled every `refocus_every` steps).
-    activity: Vec<f32>,
+    /// Steps between per-layer activity resamples (the paper's "focus
+    /// shifts between layers over 100-300 steps" observation).
     refocus_every: usize,
-    rng: Rng,
+    seed: u64,
 }
 
+/// Domain-separation tags for the counter-based streams.
+const TAG_GRAD: u64 = 0x6772_6164; // "grad"
+const TAG_ACTIVITY: u64 = 0xAC71_F17F;
+
 impl SynthGrads {
+    /// Build a generator over `layout` with all randomness derived from
+    /// `seed`.
     pub fn new(layout: ParamLayout, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let mut weights = vec![0.0f32; layout.total_params()];
@@ -74,29 +88,38 @@ impl SynthGrads {
                 }
             }
         }
-        let n_layers = layout.n_layers();
-        let mut s = SynthGrads {
+        SynthGrads {
             layout,
             weights,
-            activity: vec![1.0; n_layers],
             refocus_every: 100,
-            rng,
-        };
-        s.resample_activity();
-        s
+            seed,
+        }
     }
 
+    /// The layout this generator produces gradients for.
     pub fn layout(&self) -> &ParamLayout {
         &self.layout
     }
 
-    fn resample_activity(&mut self) {
-        // Log-normal activity: most layers quiet, a few "in focus"
-        // (the paper: "most of the parameters are updated between
-        // 100-300 steps").
-        for a in self.activity.iter_mut() {
-            *a = self.rng.lognormal(0.0, 1.0);
-        }
+    /// Stateless stream derivation: one independent RNG per
+    /// (tag, a, b, c) coordinate, mixed with distinct odd constants.
+    fn stream(&self, tag: u64, a: u64, b: u64, c: u64) -> Rng {
+        Rng::new(
+            self.seed
+                ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ a.wrapping_mul(0xBF58_476D_1CE4_E5B9)
+                ^ b.wrapping_mul(0x94D0_49BB_1331_11EB)
+                ^ c.wrapping_mul(0xD6E8_FEB8_6659_FD93),
+        )
+    }
+
+    /// Per-layer log-normal activity multiplier at `step`: most layers
+    /// quiet, a few "in focus", resampled every `refocus_every` steps
+    /// (the paper's false frozen-layer phenomenon driving Fig. 4).
+    pub fn activity_at(&self, layer_idx: usize, step: usize) -> f32 {
+        let epoch = step / self.refocus_every.max(1);
+        self.stream(TAG_ACTIVITY, epoch as u64, layer_idx as u64, 0)
+            .lognormal(0.0, 1.0)
     }
 
     /// Gradient scale decay over steps (lr schedule proxy).
@@ -104,24 +127,31 @@ impl SynthGrads {
         1.0 / (1.0 + step as f32 / 2000.0)
     }
 
-    /// Fill `grads` (len == total_params) for a given step.
-    pub fn gen_step(&mut self, step: usize, grads: &mut [f32]) {
+    /// Fill `grads` (len == total_params) with `node`'s gradient at
+    /// `step`. Pure in (step, node): any call order — including
+    /// concurrent per-node calls from the executor — produces identical
+    /// buffers.
+    pub fn gen_step_node(&self, step: usize, node: usize, grads: &mut [f32]) {
         assert_eq!(grads.len(), self.layout.total_params());
-        if step > 0 && step % self.refocus_every == 0 {
-            self.resample_activity();
-        }
         let decay = Self::decay(step);
         for (li, layer) in self.layout.layers().iter().enumerate() {
-            let sigma =
-                kind_grad_scale(layer.kind) * self.activity[li] * decay
-                    * (2.0 / layer.fan_in() as f32).sqrt().max(0.05);
+            let sigma = kind_grad_scale(layer.kind)
+                * self.activity_at(li, step)
+                * decay
+                * (2.0 / layer.fan_in() as f32).sqrt().max(0.05);
             let g = &mut grads[layer.range()];
-            self.rng.fill_normal(g, 0.0, sigma);
+            self.stream(TAG_GRAD, step as u64, node as u64, li as u64)
+                .fill_normal(g, 0.0, sigma);
         }
     }
 
-    /// Convenience: allocate and fill.
-    pub fn step(&mut self, step: usize) -> Vec<f32> {
+    /// Fill `grads` for node 0 (single-stream callers).
+    pub fn gen_step(&self, step: usize, grads: &mut [f32]) {
+        self.gen_step_node(step, 0, grads);
+    }
+
+    /// Convenience: allocate and fill node 0's gradient.
+    pub fn step(&self, step: usize) -> Vec<f32> {
         let mut g = vec![0.0f32; self.layout.total_params()];
         self.gen_step(step, &mut g);
         g
@@ -148,10 +178,26 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let mut a = SynthGrads::new(tiny_layout(), 7);
-        let mut b = SynthGrads::new(tiny_layout(), 7);
+        let a = SynthGrads::new(tiny_layout(), 7);
+        let b = SynthGrads::new(tiny_layout(), 7);
         assert_eq!(a.step(0), b.step(0));
         assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn node_streams_are_decorrelated_and_order_independent() {
+        let s = SynthGrads::new(tiny_layout(), 7);
+        let total = s.layout().total_params();
+        let mut g0 = vec![0.0f32; total];
+        let mut g1 = vec![0.0f32; total];
+        // Generate node 1 before node 0: counter-based streams must not
+        // care about call order.
+        s.gen_step_node(3, 1, &mut g1);
+        s.gen_step_node(3, 0, &mut g0);
+        assert_ne!(g0, g1, "nodes must see different gradients");
+        let mut g0_again = vec![0.0f32; total];
+        s.gen_step_node(3, 0, &mut g0_again);
+        assert_eq!(g0, g0_again, "same (step, node) must replay exactly");
     }
 
     #[test]
@@ -160,7 +206,7 @@ mod tests {
         // per-kind importance distributions are materially different
         // (conv weights are tiny He-scaled values -> heavy-tailed ratio;
         // BN gains sit near 1 -> compact, low-mean importance).
-        let mut s = SynthGrads::new(zoo::resnet50(), 3);
+        let s = SynthGrads::new(zoo::resnet50(), 3);
         let g = s.step(0);
         let mut conv = Welford::new();
         let mut bnw = Welford::new();
@@ -186,7 +232,7 @@ mod tests {
 
     #[test]
     fn gradient_scale_decays_over_steps() {
-        let mut s = SynthGrads::new(tiny_layout(), 5);
+        let s = SynthGrads::new(tiny_layout(), 5);
         let g0 = s.step(0);
         let g9k = s.step(9000);
         let rms = |v: &[f32]| {
@@ -197,10 +243,11 @@ mod tests {
 
     #[test]
     fn activity_refocuses_layers() {
-        let mut s = SynthGrads::new(tiny_layout(), 11);
-        let before = s.activity.clone();
-        let mut g = vec![0.0; s.layout().total_params()];
-        s.gen_step(100, &mut g); // triggers resample
-        assert_ne!(before, s.activity);
+        let s = SynthGrads::new(tiny_layout(), 11);
+        // Constant within an epoch interval, resampled across intervals.
+        assert_eq!(s.activity_at(0, 0), s.activity_at(0, 99));
+        assert_ne!(s.activity_at(0, 0), s.activity_at(0, 100));
+        // Layers refocus independently.
+        assert_ne!(s.activity_at(0, 0), s.activity_at(1, 0));
     }
 }

@@ -20,6 +20,8 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
+#![warn(missing_docs)]
+
 pub mod compress;
 pub mod config;
 pub mod coordinator;

@@ -26,9 +26,12 @@ SUBCOMMANDS:
                   --model mlp|tfm_tiny   --method baseline|terngrad|iwp-fixed|
                   iwp-layerwise|dgc      --nodes N --steps N --thr X --seed N
                   --mask-nodes R --no-random-select --config FILE --out DIR
+                  --parallelism W (node-parallel executor width, default 1)
     exp         regenerate a paper experiment:
                   --id table1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|density|sweep|all
                   --out DIR (default results/) --steps N --nodes N --seed N
+                  (env RINGIWP_PARALLELISM=W widens the sim executor;
+                   results are bit-identical at any width)
     info        list artifacts, PJRT platform, zoo inventories
     help        print this message
 

@@ -32,6 +32,7 @@ pub struct CompressionAccount {
 }
 
 impl CompressionAccount {
+    /// Fresh, empty account.
     pub fn new() -> Self {
         Self::default()
     }
@@ -58,14 +59,17 @@ impl CompressionAccount {
         self.densities.push(density);
     }
 
+    /// Number of recorded steps.
     pub fn steps(&self) -> u64 {
         self.steps
     }
 
+    /// Actual per-node wire bytes summed over the run.
     pub fn total_wire_bytes(&self) -> u64 {
         self.wire_bytes
     }
 
+    /// Dense-reference wire bytes summed over the run.
     pub fn total_dense_bytes(&self) -> u64 {
         self.dense_bytes
     }
@@ -89,6 +93,7 @@ impl CompressionAccount {
         }
     }
 
+    /// Mean selected density over all recorded steps.
     pub fn mean_density(&self) -> f64 {
         if self.densities.is_empty() {
             0.0
@@ -97,6 +102,7 @@ impl CompressionAccount {
         }
     }
 
+    /// Per-step density series (for density curves).
     pub fn density_series(&self) -> &[f64] {
         &self.densities
     }

@@ -11,6 +11,8 @@ pub struct CsvWriter {
 }
 
 impl CsvWriter {
+    /// Create (or truncate) `path`, creating parent dirs, and write the
+    /// header row.
     pub fn create(path: impl AsRef<Path>, header: &[&str]) -> anyhow::Result<Self> {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
@@ -19,6 +21,7 @@ impl CsvWriter {
         Self::from_writer(Box::new(std::io::BufWriter::new(file)), header)
     }
 
+    /// Wrap any writer (tests, stdout) and emit the header row.
     pub fn from_writer(mut out: Box<dyn Write>, header: &[&str]) -> anyhow::Result<Self> {
         writeln!(out, "{}", header.join(","))?;
         Ok(CsvWriter {
@@ -27,6 +30,7 @@ impl CsvWriter {
         })
     }
 
+    /// Write one row; arity must match the header.
     pub fn row(&mut self, cells: &[CsvCell]) -> anyhow::Result<()> {
         anyhow::ensure!(
             cells.len() == self.n_cols,
@@ -39,6 +43,7 @@ impl CsvWriter {
         Ok(())
     }
 
+    /// Flush the underlying writer.
     pub fn flush(&mut self) -> anyhow::Result<()> {
         self.out.flush()?;
         Ok(())
@@ -47,9 +52,13 @@ impl CsvWriter {
 
 /// A single CSV cell.
 pub enum CsvCell {
+    /// String cell (RFC-4180 quoted when needed).
     Str(String),
+    /// Float cell.
     F64(f64),
+    /// Unsigned cell.
     U64(u64),
+    /// Index/count cell.
     Usize(usize),
 }
 

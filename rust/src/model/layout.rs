@@ -13,16 +13,24 @@ use crate::util::json::Json;
 /// onto this shared set.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayerKind {
+    /// Convolution weight (OIHW).
     Conv,
+    /// Batch-norm affine parameter (gain or bias).
     BatchNorm,
+    /// Fully-connected weight.
     Fc,
+    /// Plain bias vector.
     Bias,
+    /// Embedding table.
     Embed,
+    /// Attention projection weight.
     Attn,
+    /// Layer-norm parameter.
     Norm,
 }
 
 impl LayerKind {
+    /// Parse a manifest/zoo kind tag.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s {
             "conv" => LayerKind::Conv,
@@ -36,6 +44,7 @@ impl LayerKind {
         })
     }
 
+    /// Canonical tag (inverse of [`LayerKind::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             LayerKind::Conv => "conv",
@@ -52,14 +61,20 @@ impl LayerKind {
 /// One named parameter tensor inside the flat buffer.
 #[derive(Debug, Clone)]
 pub struct LayerInfo {
+    /// Tensor name (torchvision-style for zoo models).
     pub name: String,
+    /// Tensor shape (OIHW for convs).
     pub shape: Vec<usize>,
+    /// Layer taxonomy bucket.
     pub kind: LayerKind,
+    /// Element count.
     pub size: usize,
+    /// Start offset in the flat buffer.
     pub offset: usize,
 }
 
 impl LayerInfo {
+    /// This layer's coordinate range in the flat buffer.
     pub fn range(&self) -> std::ops::Range<usize> {
         self.offset..self.offset + self.size
     }
@@ -78,12 +93,15 @@ impl LayerInfo {
 /// Ordered layers tiling a flat parameter buffer without gaps.
 #[derive(Debug, Clone)]
 pub struct ParamLayout {
+    /// Model name (zoo key or artifact model tag).
     pub model: String,
     layers: Vec<LayerInfo>,
     total: usize,
 }
 
 impl ParamLayout {
+    /// Build a layout from ordered (name, shape, kind) specs; offsets
+    /// tile contiguously in spec order.
     pub fn new(model: impl Into<String>, specs: Vec<(String, Vec<usize>, LayerKind)>) -> Self {
         let mut layers = Vec::with_capacity(specs.len());
         let mut offset = 0;
@@ -134,10 +152,12 @@ impl ParamLayout {
         Ok(out)
     }
 
+    /// The ordered layers.
     pub fn layers(&self) -> &[LayerInfo] {
         &self.layers
     }
 
+    /// Number of layers.
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }
@@ -147,10 +167,12 @@ impl ParamLayout {
         self.total
     }
 
+    /// Layer by index.
     pub fn layer(&self, i: usize) -> &LayerInfo {
         &self.layers[i]
     }
 
+    /// Layer by tensor name, if present.
     pub fn by_name(&self, name: &str) -> Option<&LayerInfo> {
         self.layers.iter().find(|l| l.name == name)
     }

@@ -10,6 +10,7 @@ pub struct LinkSpec {
 }
 
 impl LinkSpec {
+    /// Link with the given bandwidth (bytes/s, > 0) and latency (s, ≥ 0).
     pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
         assert!(bandwidth_bps > 0.0 && latency_s >= 0.0);
         LinkSpec {

@@ -20,47 +20,93 @@ pub mod trace;
 pub use link::LinkSpec;
 pub use trace::Trace;
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 /// A unidirectional ring of `n` nodes with homogeneous links.
 /// Node `i` transmits to `(i+1) % n`.
-#[derive(Debug, Clone)]
+///
+/// Byte accounting is **thread-safe**: the per-node transmit counters
+/// are atomics behind [`RingNet::record_tx`] (`&self`), so per-node
+/// totals stay exact and order-independent (u64 addition commutes) no
+/// matter which thread attributes them. Today every schedule drives
+/// them from the coordinating thread via [`RingNet::round`] — the
+/// parallel executor (`ring::exec`, DESIGN.md §4) keeps all `round`
+/// calls sequential — but the counters are the seam the ROADMAP's
+/// async-transport direction plugs into without changing accounting
+/// semantics. The clock and bucketed trace advance only under
+/// `&mut self`.
+#[derive(Debug)]
 pub struct RingNet {
     n: usize,
     spec: LinkSpec,
     clock: f64,
-    /// Cumulative bytes sent on each node's outgoing link.
-    tx_bytes: Vec<u64>,
+    /// Cumulative bytes sent on each node's outgoing link (atomic so
+    /// concurrent per-node senders can account without a lock).
+    tx_bytes: Vec<AtomicU64>,
     /// Per-node transmit trace (virtual-time bucketed).
     trace: Trace,
     rounds: u64,
 }
 
+impl Clone for RingNet {
+    fn clone(&self) -> Self {
+        RingNet {
+            n: self.n,
+            spec: self.spec,
+            clock: self.clock,
+            tx_bytes: self
+                .tx_bytes
+                .iter()
+                .map(|b| AtomicU64::new(b.load(Ordering::Relaxed)))
+                .collect(),
+            trace: self.trace.clone(),
+            rounds: self.rounds,
+        }
+    }
+}
+
 impl RingNet {
+    /// Build an `n`-node ring with homogeneous `spec` links; transmit
+    /// traces are bucketed every `trace_bucket_s` virtual seconds.
     pub fn new(n: usize, spec: LinkSpec, trace_bucket_s: f64) -> Self {
         assert!(n >= 2, "a ring needs at least 2 nodes");
         RingNet {
             n,
             spec,
             clock: 0.0,
-            tx_bytes: vec![0; n],
+            tx_bytes: (0..n).map(|_| AtomicU64::new(0)).collect(),
             trace: Trace::new(n, trace_bucket_s),
             rounds: 0,
         }
     }
 
+    /// Ring size.
     pub fn n_nodes(&self) -> usize {
         self.n
     }
 
+    /// Current virtual time in seconds.
     pub fn clock(&self) -> f64 {
         self.clock
     }
 
+    /// Number of synchronous ring rounds executed so far.
     pub fn rounds(&self) -> u64 {
         self.rounds
     }
 
+    /// The homogeneous link parameters of this ring.
     pub fn spec(&self) -> &LinkSpec {
         &self.spec
+    }
+
+    /// Attribute `bytes` to `node`'s outgoing link counter. Safe to call
+    /// from executor worker threads concurrently (`&self`, atomic add);
+    /// the caller remains responsible for advancing the clock/trace on
+    /// the coordinating thread ([`RingNet::round`] does both).
+    #[inline]
+    pub fn record_tx(&self, node: usize, bytes: u64) {
+        self.tx_bytes[node].fetch_add(bytes, Ordering::Relaxed);
     }
 
     /// One synchronous ring round: node `i` sends `bytes[i]` to its
@@ -74,7 +120,7 @@ impl RingNet {
             .fold(0.0f64, f64::max);
         for (i, &b) in bytes.iter().enumerate() {
             if b > 0 {
-                self.tx_bytes[i] += b;
+                self.record_tx(i, b);
                 // Spread the bytes over this node's actual transfer window.
                 self.trace
                     .add(self.clock, self.spec.transfer_time(b), i, b);
@@ -115,14 +161,18 @@ impl RingNet {
 
     /// Total bytes transmitted by one node.
     pub fn node_tx_bytes(&self, node: usize) -> u64 {
-        self.tx_bytes[node]
+        self.tx_bytes[node].load(Ordering::Relaxed)
     }
 
     /// Total bytes across all links.
     pub fn total_bytes(&self) -> u64 {
-        self.tx_bytes.iter().sum()
+        self.tx_bytes
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum()
     }
 
+    /// The per-node transmit trace accumulated so far.
     pub fn trace(&self) -> &Trace {
         &self.trace
     }
@@ -131,7 +181,9 @@ impl RingNet {
     pub fn reset(&mut self) {
         self.clock = 0.0;
         self.rounds = 0;
-        self.tx_bytes.iter_mut().for_each(|b| *b = 0);
+        self.tx_bytes
+            .iter()
+            .for_each(|b| b.store(0, Ordering::Relaxed));
         self.trace.clear();
     }
 }
@@ -192,5 +244,24 @@ mod tests {
     #[should_panic(expected = "at least 2")]
     fn rejects_degenerate_ring() {
         let _ = RingNet::new(1, gigabit(), 1.0);
+    }
+
+    #[test]
+    fn record_tx_is_thread_safe_and_exact() {
+        let net = RingNet::new(4, gigabit(), 1.0);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let net = &net;
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        net.record_tx(t, 3);
+                    }
+                });
+            }
+        });
+        for node in 0..4 {
+            assert_eq!(net.node_tx_bytes(node), 3000);
+        }
+        assert_eq!(net.total_bytes(), 12_000);
     }
 }

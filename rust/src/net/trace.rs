@@ -11,6 +11,7 @@ pub struct Trace {
 }
 
 impl Trace {
+    /// Empty trace for `n_nodes` with `bucket_s`-second buckets.
     pub fn new(n_nodes: usize, bucket_s: f64) -> Self {
         assert!(bucket_s > 0.0);
         Trace {
@@ -20,10 +21,12 @@ impl Trace {
         }
     }
 
+    /// Bucket width in virtual seconds.
     pub fn bucket_seconds(&self) -> f64 {
         self.bucket_s
     }
 
+    /// Number of materialized buckets.
     pub fn n_buckets(&self) -> usize {
         self.buckets.len()
     }
@@ -107,6 +110,7 @@ impl Trace {
         }
     }
 
+    /// Drop all recorded buckets.
     pub fn clear(&mut self) {
         self.buckets.clear();
     }

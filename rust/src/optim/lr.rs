@@ -5,13 +5,18 @@
 /// `gamma` at each milestone (in steps).
 #[derive(Debug, Clone)]
 pub struct LrSchedule {
+    /// Post-warm-up base rate.
     pub base_lr: f32,
+    /// Linear warm-up length in steps (0 disables).
     pub warmup_steps: usize,
+    /// Steps at which the rate decays by `gamma`.
     pub milestones: Vec<usize>,
+    /// Multiplicative decay at each milestone.
     pub gamma: f32,
 }
 
 impl LrSchedule {
+    /// Flat schedule at `lr`.
     pub fn constant(lr: f32) -> Self {
         LrSchedule {
             base_lr: lr,
@@ -21,6 +26,7 @@ impl LrSchedule {
         }
     }
 
+    /// Linear warm-up to `lr`, flat afterwards.
     pub fn with_warmup(lr: f32, warmup_steps: usize) -> Self {
         LrSchedule {
             base_lr: lr,
@@ -30,6 +36,7 @@ impl LrSchedule {
         }
     }
 
+    /// The learning rate at `step`.
     pub fn at(&self, step: usize) -> f32 {
         if self.warmup_steps > 0 && step < self.warmup_steps {
             return self.base_lr * (step + 1) as f32 / self.warmup_steps as f32;

@@ -13,6 +13,7 @@ pub struct MomentumSgd {
 }
 
 impl MomentumSgd {
+    /// Zero-velocity optimizer over `len` parameters.
     pub fn new(len: usize, momentum: f32) -> Self {
         assert!((0.0..1.0).contains(&momentum));
         MomentumSgd {
@@ -21,6 +22,7 @@ impl MomentumSgd {
         }
     }
 
+    /// The configured momentum m.
     pub fn momentum(&self) -> f32 {
         self.momentum
     }

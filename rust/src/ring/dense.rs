@@ -5,13 +5,26 @@
 //! that makes rings the right substrate for large models, and the
 //! baseline transport whose I/O trace is Fig. 7.
 
-use super::{chunk_ranges, per_node_delta, snapshot, ReduceReport};
+use super::{chunk_ranges, per_node_delta, snapshot, Executor, ReduceReport};
 use crate::net::RingNet;
 
 /// In-place dense all-reduce over every node's buffer. On return every
 /// `bufs[i]` holds the element-wise **sum** across nodes (callers divide
 /// by N for the average — Algorithm 1 line 12 averages after reduce).
 pub fn allreduce(net: &mut RingNet, bufs: &mut [Vec<f32>]) -> ReduceReport {
+    allreduce_exec(net, bufs, &Executor::sequential())
+}
+
+/// [`allreduce`] with per-node staging/accumulation fanned out over
+/// `exec`'s worker threads. Bit-identical to the sequential path: every
+/// round stages all senders' chunks first (reads), then applies all
+/// receivers' accumulations (writes to disjoint `bufs[dst]`), so neither
+/// phase has cross-node ordering effects.
+pub fn allreduce_exec(
+    net: &mut RingNet,
+    bufs: &mut [Vec<f32>],
+    exec: &Executor,
+) -> ReduceReport {
     let n = net.n_nodes();
     assert_eq!(bufs.len(), n, "one buffer per node");
     let len = bufs[0].len();
@@ -40,20 +53,18 @@ pub fn allreduce(net: &mut RingNet, bufs: &mut [Vec<f32>]) -> ReduceReport {
         // Apply the data movement: receiver (i+1) accumulates sender i's
         // current copy of chunk (i - r). Use a staging copy so updates
         // within a round don't cascade.
-        let staged: Vec<Vec<f32>> = (0..n)
-            .map(|i| {
-                let c = (i + n - r) % n;
-                bufs[i][chunks[c].clone()].to_vec()
-            })
-            .collect();
-        for i in 0..n {
-            let dst = (i + 1) % n;
+        let staged: Vec<Vec<f32>> = exec.map_indexed(n, |i| {
             let c = (i + n - r) % n;
+            bufs[i][chunks[c].clone()].to_vec()
+        });
+        exec.map_mut(bufs, |dst, buf| {
+            let src = (dst + n - 1) % n;
+            let c = (src + n - r) % n;
             let range = chunks[c].clone();
             for (k, idx) in range.enumerate() {
-                bufs[dst][idx] += staged[i][k];
+                buf[idx] += staged[src][k];
             }
-        }
+        });
     }
 
     // After scatter-reduce, node i owns the fully-reduced chunk (i+1)%n.
@@ -66,20 +77,18 @@ pub fn allreduce(net: &mut RingNet, bufs: &mut [Vec<f32>]) -> ReduceReport {
             })
             .collect();
         net.round(&sends);
-        let staged: Vec<Vec<f32>> = (0..n)
-            .map(|i| {
-                let c = (i + 1 + n - r) % n;
-                bufs[i][chunks[c].clone()].to_vec()
-            })
-            .collect();
-        for i in 0..n {
-            let dst = (i + 1) % n;
+        let staged: Vec<Vec<f32>> = exec.map_indexed(n, |i| {
             let c = (i + 1 + n - r) % n;
+            bufs[i][chunks[c].clone()].to_vec()
+        });
+        exec.map_mut(bufs, |dst, buf| {
+            let src = (dst + n - 1) % n;
+            let c = (src + 1 + n - r) % n;
             let range = chunks[c].clone();
             for (k, idx) in range.enumerate() {
-                bufs[dst][idx] = staged[i][k];
+                buf[idx] = staged[src][k];
             }
-        }
+        });
     }
 
     ReduceReport {

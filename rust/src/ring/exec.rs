@@ -1,0 +1,269 @@
+//! Node-parallel execution engine (DESIGN.md §4).
+//!
+//! Every ring schedule and both engines (`exp::simrun::SimEngine`,
+//! `coordinator::Trainer`) do per-node work — importance scoring,
+//! residual accumulation, DGC/TernGrad encoding, per-hop chunk merges —
+//! that is embarrassingly parallel across nodes but was historically run
+//! on one thread, making wall-clock scale linearly with ring size. The
+//! [`Executor`] fans that work out over a small pool of scoped OS
+//! threads (`std::thread::scope`; rayon is not available offline) while
+//! keeping results **bit-identical** to the sequential path:
+//!
+//! * work is partitioned into contiguous per-worker blocks with
+//!   [`super::chunk_ranges`], and outputs are concatenated in block
+//!   order, so output order never depends on thread scheduling;
+//! * each parallel region only mutates disjoint per-node state (one
+//!   node's buffer/store/RNG per closure invocation);
+//! * all cross-node reductions (float sums, stat merges, the virtual
+//!   clock) stay on the coordinating thread, in node order, exactly as
+//!   the sequential path performs them;
+//! * wire accounting goes through `RingNet`'s per-node atomic counters,
+//!   whose per-node totals are order-independent (u64 addition).
+//!
+//! `Executor::new(1)` is the sequential oracle: it runs every closure
+//! inline on the caller's thread, with no pool, and is the reference the
+//! equivalence tests (`tests/parallel_equivalence.rs`) compare against.
+
+/// A fixed-width fork/join executor for per-node work.
+///
+/// Cheap to construct (no persistent pool: scoped threads are spawned
+/// per region, which for the multi-millisecond regions of the 25M+
+/// parameter sims is noise) and trivially `Clone`.
+#[derive(Debug, Clone)]
+pub struct Executor {
+    workers: usize,
+}
+
+impl Executor {
+    /// An executor running work on `parallelism` threads.
+    /// `parallelism = 1` (or 0, clamped) executes inline — the
+    /// deterministic sequential oracle.
+    pub fn new(parallelism: usize) -> Self {
+        Executor {
+            workers: parallelism.max(1),
+        }
+    }
+
+    /// The inline sequential oracle (`parallelism = 1`).
+    pub fn sequential() -> Self {
+        Executor::new(1)
+    }
+
+    /// Number of worker threads this executor fans out to.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Whether this executor runs inline (no threads spawned).
+    pub fn is_sequential(&self) -> bool {
+        self.workers == 1
+    }
+
+    /// Parallel map over indices `0..n`: returns `[f(0), f(1), …]` in
+    /// index order regardless of scheduling.
+    pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.workers == 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let blocks = super::chunk_ranges(n, self.workers.min(n));
+        std::thread::scope(|scope| {
+            let f = &f;
+            let handles: Vec<_> = blocks
+                .into_iter()
+                .filter(|r| !r.is_empty())
+                .map(|r| scope.spawn(move || r.map(f).collect::<Vec<T>>()))
+                .collect();
+            let mut out = Vec::with_capacity(n);
+            for h in handles {
+                out.extend(h.join().expect("executor worker panicked"));
+            }
+            out
+        })
+    }
+
+    /// Parallel mutate-and-map over a slice: each element is visited
+    /// exactly once with its index, and the per-element results are
+    /// returned in element order. The per-node reduce/compress loops use
+    /// this to mutate disjoint node states (buffers, residual stores,
+    /// RNG streams) concurrently.
+    pub fn map_mut<T, R, F>(&self, items: &mut [T], f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.workers == 1 || n <= 1 {
+            return items
+                .iter_mut()
+                .enumerate()
+                .map(|(i, item)| f(i, item))
+                .collect();
+        }
+        let blocks = super::chunk_ranges(n, self.workers.min(n));
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest = items;
+            let mut handles = Vec::with_capacity(blocks.len());
+            for r in blocks {
+                let (head, tail) = rest.split_at_mut(r.len());
+                rest = tail;
+                if r.is_empty() {
+                    continue;
+                }
+                let base = r.start;
+                handles.push(scope.spawn(move || {
+                    head.iter_mut()
+                        .enumerate()
+                        .map(|(k, item)| f(base + k, item))
+                        .collect::<Vec<R>>()
+                }));
+            }
+            let mut out = Vec::with_capacity(n);
+            for h in handles {
+                out.extend(h.join().expect("executor worker panicked"));
+            }
+            out
+        })
+    }
+
+    /// Like [`Executor::map_mut`] but over two equal-length slices
+    /// zipped: `f(i, &mut a[i], &mut b[i])`. Used where one node's step
+    /// touches two state arrays at once (e.g. gradient buffer + RNG
+    /// stream in `exp::simrun`).
+    pub fn map_mut2<A, B, R, F>(&self, a: &mut [A], b: &mut [B], f: F) -> Vec<R>
+    where
+        A: Send,
+        B: Send,
+        R: Send,
+        F: Fn(usize, &mut A, &mut B) -> R + Sync,
+    {
+        assert_eq!(a.len(), b.len(), "map_mut2 slices must zip exactly");
+        let n = a.len();
+        if self.workers == 1 || n <= 1 {
+            return a
+                .iter_mut()
+                .zip(b.iter_mut())
+                .enumerate()
+                .map(|(i, (x, y))| f(i, x, y))
+                .collect();
+        }
+        let blocks = super::chunk_ranges(n, self.workers.min(n));
+        std::thread::scope(|scope| {
+            let f = &f;
+            let (mut rest_a, mut rest_b) = (a, b);
+            let mut handles = Vec::with_capacity(blocks.len());
+            for r in blocks {
+                let (head_a, tail_a) = rest_a.split_at_mut(r.len());
+                let (head_b, tail_b) = rest_b.split_at_mut(r.len());
+                rest_a = tail_a;
+                rest_b = tail_b;
+                if r.is_empty() {
+                    continue;
+                }
+                let base = r.start;
+                handles.push(scope.spawn(move || {
+                    head_a
+                        .iter_mut()
+                        .zip(head_b.iter_mut())
+                        .enumerate()
+                        .map(|(k, (x, y))| f(base + k, x, y))
+                        .collect::<Vec<R>>()
+                }));
+            }
+            let mut out = Vec::with_capacity(n);
+            for h in handles {
+                out.extend(h.join().expect("executor worker panicked"));
+            }
+            out
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        for workers in [1, 2, 4, 8] {
+            let exec = Executor::new(workers);
+            let got = exec.map_indexed(100, |i| i * i);
+            let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+            assert_eq!(got, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn map_mut_visits_each_once_in_order() {
+        for workers in [1, 3, 7] {
+            let exec = Executor::new(workers);
+            let mut xs = vec![0u64; 57];
+            let idx = exec.map_mut(&mut xs, |i, x| {
+                *x += 1;
+                i
+            });
+            assert!(xs.iter().all(|&x| x == 1), "workers={workers}");
+            assert_eq!(idx, (0..57).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn map_mut2_zips_disjoint_state() {
+        let exec = Executor::new(4);
+        let mut a = vec![1u32; 33];
+        let mut b = vec![2u32; 33];
+        let sums = exec.map_mut2(&mut a, &mut b, |i, x, y| {
+            *x += i as u32;
+            *y += *x;
+            *y
+        });
+        for (i, &s) in sums.iter().enumerate() {
+            assert_eq!(s, 2 + 1 + i as u32);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        // Float work partitioned per element is bit-identical across
+        // worker counts (no cross-element reduction happens off the
+        // coordinator).
+        let inputs: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        let seq = Executor::sequential().map_indexed(1000, |i| inputs[i].exp().to_bits());
+        for workers in [2, 4, 8] {
+            let par = Executor::new(workers).map_indexed(1000, |i| inputs[i].exp().to_bits());
+            assert_eq!(seq, par, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_sizes() {
+        let exec = Executor::new(8);
+        assert_eq!(exec.map_indexed(0, |i| i), Vec::<usize>::new());
+        assert_eq!(exec.map_indexed(1, |i| i), vec![0]);
+        // More workers than items.
+        assert_eq!(exec.map_indexed(3, |i| i), vec![0, 1, 2]);
+        let mut xs: [u8; 0] = [];
+        assert_eq!(exec.map_mut(&mut xs, |_, _| 0u8), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn zero_parallelism_clamps_to_sequential() {
+        let exec = Executor::new(0);
+        assert!(exec.is_sequential());
+        assert_eq!(exec.workers(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "zip exactly")]
+    fn map_mut2_rejects_length_mismatch() {
+        let exec = Executor::new(2);
+        let mut a = [0u8; 3];
+        let mut b = [0u8; 4];
+        let _ = exec.map_mut2(&mut a, &mut b, |_, _, _| ());
+    }
+}

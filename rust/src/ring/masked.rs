@@ -12,7 +12,7 @@
 //! never densify — the sparsity is invariant in N, which is the paper's
 //! structural advantage over DGC on rings.
 
-use super::{dense, ReduceReport};
+use super::{dense, Executor, ReduceReport};
 use crate::net::RingNet;
 use crate::sparse::{values_only_bytes, BitMask};
 
@@ -35,6 +35,19 @@ pub fn allreduce(
     net: &mut RingNet,
     masks: &[&BitMask],
     values: &[&[f32]],
+) -> (BitMask, Vec<f32>, ReduceReport) {
+    allreduce_exec(net, masks, values, &Executor::sequential())
+}
+
+/// [`allreduce`] with the per-node support compaction and the dense
+/// value rounds fanned out over `exec`. Bit-identical to sequential:
+/// compaction is a pure per-node gather and the dense schedule already
+/// guarantees equivalence.
+pub fn allreduce_exec(
+    net: &mut RingNet,
+    masks: &[&BitMask],
+    values: &[&[f32]],
+    exec: &Executor,
 ) -> (BitMask, Vec<f32>, ReduceReport) {
     let n = net.n_nodes();
     assert_eq!(values.len(), n);
@@ -66,11 +79,9 @@ pub fn allreduce(
     // dense-ring-allreduce the compacted vectors (values only: the
     // support is known to all).
     let support: Vec<usize> = shared.iter_set().collect();
-    let mut compact: Vec<Vec<f32>> = values
-        .iter()
-        .map(|v| support.iter().map(|&i| v[i]).collect())
-        .collect();
-    let dense_rep = dense::allreduce(net, &mut compact);
+    let mut compact: Vec<Vec<f32>> =
+        exec.map_indexed(n, |node| support.iter().map(|&i| values[node][i]).collect());
+    let dense_rep = dense::allreduce_exec(net, &mut compact, exec);
 
     // Validate accounting matches the values-only wire model (loosely:
     // the dense schedule moves 2(N-1)/N of the compact payload).

@@ -15,10 +15,18 @@
 //!
 //! All schedules move real data (the reduce is exact, tested against
 //! direct summation) *and* account every wire byte on the `RingNet`.
+//!
+//! Each schedule has two entry points: the plain function (sequential)
+//! and an `_exec` variant taking a [`exec::Executor`] that fans the
+//! per-node work (staging copies, sparse merges, mask compaction) out
+//! across worker threads with bit-identical results (DESIGN.md §4).
 
 pub mod dense;
+pub mod exec;
 pub mod masked;
 pub mod sparse;
+
+pub use exec::Executor;
 
 use crate::net::RingNet;
 
@@ -35,10 +43,12 @@ pub struct ReduceReport {
 }
 
 impl ReduceReport {
+    /// Total bytes transmitted across all nodes during this all-reduce.
     pub fn total_bytes(&self) -> u64 {
         self.bytes_per_node.iter().sum()
     }
 
+    /// Mean per-node transmitted bytes (0 for an empty report).
     pub fn mean_bytes_per_node(&self) -> f64 {
         if self.bytes_per_node.is_empty() {
             0.0
@@ -115,5 +125,49 @@ mod tests {
         let r = chunk_ranges(2, 4);
         assert_eq!(r.iter().map(|r| r.len()).sum::<usize>(), 2);
         assert_eq!(r.len(), 4);
+    }
+
+    #[test]
+    fn aligned_chunks_len_zero_is_all_empty() {
+        let r = chunk_ranges_aligned(0, 5);
+        assert_eq!(r.len(), 5);
+        assert!(r.iter().all(|c| c.is_empty()));
+    }
+
+    #[test]
+    fn aligned_chunks_len_smaller_than_word_times_n() {
+        // Fewer 64-bit words than chunks: trailing chunks collapse to
+        // empty, leading ones stay word-aligned, and the tiling is exact.
+        let r = chunk_ranges_aligned(100, 4); // 2 words, 4 chunks
+        assert_eq!(r.iter().map(|c| c.len()).sum::<usize>(), 100);
+        assert_eq!(r[0], 0..64);
+        assert_eq!(r[1], 64..100);
+        assert!(r[2].is_empty() && r[3].is_empty());
+    }
+
+    #[test]
+    fn aligned_chunks_exact_single_word_edge() {
+        // len exactly one word: the word goes to chunk 0, the rest empty.
+        let r = chunk_ranges_aligned(64, 3);
+        assert_eq!(r[0], 0..64);
+        assert!(r[1].is_empty() && r[2].is_empty());
+    }
+
+    #[test]
+    fn aligned_chunks_tile_property() {
+        use crate::util::prop::forall;
+        forall("aligned chunks tile [0, len) word-aligned", 100, |g| {
+            let len = g.usize_in(0, 5000);
+            let n = g.usize_in(1, 12);
+            let r = chunk_ranges_aligned(len, n);
+            assert_eq!(r.len(), n);
+            let mut cursor = 0;
+            for c in &r {
+                assert_eq!(c.start, cursor, "chunks must tile contiguously");
+                assert!(c.start % 64 == 0 || c.start == len);
+                cursor = c.end;
+            }
+            assert_eq!(cursor, len);
+        });
     }
 }

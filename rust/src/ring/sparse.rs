@@ -8,7 +8,7 @@
 //! denser as the ring reduce is performed").  `ReduceReport::
 //! density_per_hop` quantifies it; `exp::density` plots it against N.
 
-use super::{chunk_ranges, per_node_delta, snapshot, ReduceReport};
+use super::{chunk_ranges, per_node_delta, snapshot, Executor, ReduceReport};
 use crate::net::RingNet;
 use crate::sparse::SparseVec;
 
@@ -16,6 +16,18 @@ use crate::sparse::SparseVec;
 /// result (identical on every node) plus wire accounting; the travelling
 /// segments stay in sparse wire format the whole way.
 pub fn allreduce(net: &mut RingNet, inputs: &[SparseVec]) -> (Vec<f32>, ReduceReport) {
+    allreduce_exec(net, inputs, &Executor::sequential())
+}
+
+/// [`allreduce`] with the per-hop segment extraction and sparse merges
+/// fanned out over `exec` (one travelling segment per node, disjoint
+/// state). Densities and byte counts are reduced on the coordinating
+/// thread in node order, so reports are bit-identical to sequential.
+pub fn allreduce_exec(
+    net: &mut RingNet,
+    inputs: &[SparseVec],
+    exec: &Executor,
+) -> (Vec<f32>, ReduceReport) {
     let n = net.n_nodes();
     assert_eq!(inputs.len(), n);
     let len = inputs[0].len;
@@ -46,7 +58,7 @@ pub fn allreduce(net: &mut RingNet, inputs: &[SparseVec]) -> (Vec<f32>, ReduceRe
 
     // held[i] = the travelling segment node i currently holds.
     // Initially node i holds its own slice of chunk i.
-    let mut held: Vec<SparseVec> = (0..n).map(|i| segment(&inputs[i], i)).collect();
+    let mut held: Vec<SparseVec> = exec.map_indexed(n, |i| segment(&inputs[i], i));
     let mut density_per_hop = Vec::with_capacity(n - 1);
 
     // Scatter-reduce: at round r node i holds the partial sum of chunk
@@ -54,13 +66,12 @@ pub fn allreduce(net: &mut RingNet, inputs: &[SparseVec]) -> (Vec<f32>, ReduceRe
     for r in 0..n - 1 {
         let sends: Vec<u64> = held.iter().map(|s| s.wire_bytes()).collect();
         net.round(&sends);
-        let mut next: Vec<SparseVec> = Vec::with_capacity(n);
-        for dst in 0..n {
+        let next: Vec<SparseVec> = exec.map_indexed(n, |dst| {
             let src = (dst + n - 1) % n;
             let c = (dst + n - (r + 1)) % n; // chunk arriving at dst
             let own = segment(&inputs[dst], c);
-            next.push(held[src].merge_add(&own));
-        }
+            held[src].merge_add(&own)
+        });
         held = next;
         // Mean density of travelling segments after this hop.
         let d = held.iter().map(|s| s.density()).sum::<f64>() / n as f64;
@@ -124,6 +135,17 @@ pub fn allreduce_support(
     net: &mut RingNet,
     supports: &[crate::sparse::BitMask],
 ) -> ReduceReport {
+    allreduce_support_exec(net, supports, &Executor::sequential())
+}
+
+/// [`allreduce_support`] with the per-hop word-OR merges and codec
+/// sizing fanned out over `exec`. The hop-density reduction stays on the
+/// coordinating thread (node order), so reports are bit-identical.
+pub fn allreduce_support_exec(
+    net: &mut RingNet,
+    supports: &[crate::sparse::BitMask],
+    exec: &Executor,
+) -> ReduceReport {
     use crate::sparse::BitMask;
     let n = net.n_nodes();
     assert_eq!(supports.len(), n);
@@ -135,9 +157,8 @@ pub fn allreduce_support(
     let t0 = net.clock();
 
     // held[i] = travelling support words for the chunk node i holds.
-    let mut held: Vec<Vec<u64>> = (0..n)
-        .map(|i| supports[i].word_slice(chunks[i].clone()).to_vec())
-        .collect();
+    let mut held: Vec<Vec<u64>> =
+        exec.map_indexed(n, |i| supports[i].word_slice(chunks[i].clone()).to_vec());
     let mut density_per_hop = Vec::with_capacity(n - 1);
 
     let seg_bytes = |words: &[u64], chunk_len: usize| -> u64 {
@@ -150,6 +171,8 @@ pub fn allreduce_support(
     };
 
     for r in 0..n - 1 {
+        // Byte sizing is a per-node popcount — far too cheap to amortize
+        // a thread spawn; only the word-OR merges below fan out.
         let sends: Vec<u64> = (0..n)
             .map(|i| {
                 let c = (i + n - r) % n;
@@ -157,8 +180,7 @@ pub fn allreduce_support(
             })
             .collect();
         net.round(&sends);
-        let mut next: Vec<Vec<u64>> = Vec::with_capacity(n);
-        for dst in 0..n {
+        let next: Vec<Vec<u64>> = exec.map_indexed(n, |dst| {
             let src = (dst + n - 1) % n;
             let c = (dst + n - (r + 1)) % n;
             let own = supports[dst].word_slice(chunks[c].clone());
@@ -166,8 +188,8 @@ pub fn allreduce_support(
             for (m, o) in merged.iter_mut().zip(own) {
                 *m |= o;
             }
-            next.push(merged);
-        }
+            merged
+        });
         held = next;
         let (mut nnz, mut tot) = (0usize, 0usize);
         for (i, h) in held.iter().enumerate() {
@@ -178,7 +200,8 @@ pub fn allreduce_support(
         density_per_hop.push(nnz as f64 / tot.max(1) as f64);
     }
 
-    // Allgather accounting at final densities.
+    // Allgather accounting at final densities (sizing only — sequential
+    // for the same reason as above).
     for r in 0..n - 1 {
         let sends: Vec<u64> = (0..n)
             .map(|i| {

@@ -3,22 +3,27 @@
 
 use std::path::Path;
 
+use super::xla;
 use crate::model::ParamLayout;
 use crate::util::json::{parse, Json};
 
 /// Parsed manifest metadata (shapes the marshalling layer relies on).
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Artifact name (also the file stem on disk).
     pub name: String,
+    /// Artifact kind tag from the manifest (`train_step`, `kernel`, …).
     pub kind: String,
     /// (name, shape) per input, in call order.
     pub inputs: Vec<(String, Vec<usize>)>,
     /// (name, shape) per output, in tuple order.
     pub outputs: Vec<(String, Vec<usize>)>,
+    /// The full manifest document (layout, offsets, extras).
     pub raw: Json,
 }
 
 impl ArtifactMeta {
+    /// Parse a manifest document into typed metadata.
     pub fn from_json(raw: Json) -> anyhow::Result<Self> {
         let shapes = |key: &str| -> anyhow::Result<Vec<(String, Vec<usize>)>> {
             raw.req_arr(key)?
@@ -58,11 +63,14 @@ impl ArtifactMeta {
 
 /// Compiled executable + metadata.
 pub struct Artifact {
+    /// Manifest metadata driving the f32 marshalling.
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
 }
 
 impl Artifact {
+    /// Read `<dir>/<name>.manifest.json` + `<name>.hlo.txt` and compile
+    /// the HLO through the client.
     pub fn load(
         client: &xla::PjRtClient,
         dir: &Path,

@@ -10,8 +10,9 @@ use super::Artifact;
 use crate::compress::importance::LayerStats;
 use crate::sparse::BitMask;
 
-/// The two artifact granularities (large for bulk, small for tails).
+/// The bulk artifact granularity (large tiles).
 pub const M_LARGE: usize = 65_536;
+/// The tail artifact granularity (small tiles).
 pub const M_SMALL: usize = 8_192;
 
 /// Importance kernel executor over arbitrary-length buffers.
@@ -25,6 +26,7 @@ pub struct ImportanceKernel {
 }
 
 impl ImportanceKernel {
+    /// Load + compile both kernel granularities from the runtime.
     pub fn load(rt: &super::Runtime) -> anyhow::Result<Self> {
         Ok(ImportanceKernel {
             large: rt.load(&format!("importance_m{M_LARGE}"))?,

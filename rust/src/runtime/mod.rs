@@ -11,6 +11,15 @@
 pub mod artifact;
 pub mod kernels;
 
+/// The real PJRT bindings (feature `pjrt`) or an in-repo stub with the
+/// same surface that errors at execution time — so the whole crate,
+/// including the simulation stack and its tests, builds and runs on
+/// machines without the XLA extension.
+#[cfg(feature = "pjrt")]
+pub(crate) use ::xla;
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod xla;
+
 pub use artifact::{Artifact, ArtifactMeta};
 pub use kernels::ImportanceKernel;
 
@@ -37,6 +46,8 @@ impl Runtime {
         })
     }
 
+    /// The PJRT platform name (e.g. `cpu`; a stub marker without the
+    /// `pjrt` feature).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -9,6 +9,7 @@ pub struct BitMask {
 }
 
 impl BitMask {
+    /// All-clear mask over `len` coordinates.
     pub fn zeros(len: usize) -> Self {
         BitMask {
             len,
@@ -38,26 +39,31 @@ impl BitMask {
         m
     }
 
+    /// Number of coordinates this mask covers.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when the mask covers zero coordinates.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Select coordinate `i`.
     #[inline]
     pub fn set(&mut self, i: usize) {
         debug_assert!(i < self.len);
         self.words[i / 64] |= 1 << (i % 64);
     }
 
+    /// Deselect coordinate `i`.
     #[inline]
     pub fn clear(&mut self, i: usize) {
         debug_assert!(i < self.len);
         self.words[i / 64] &= !(1 << (i % 64));
     }
 
+    /// Whether coordinate `i` is selected.
     #[inline]
     pub fn get(&self, i: usize) -> bool {
         debug_assert!(i < self.len);
@@ -72,6 +78,7 @@ impl BitMask {
         }
     }
 
+    /// Word-at-a-time AND — mask intersection.
     pub fn and_assign(&mut self, other: &BitMask) {
         assert_eq!(self.len, other.len);
         for (a, b) in self.words.iter_mut().zip(&other.words) {
@@ -122,6 +129,8 @@ impl BitMask {
         out
     }
 
+    /// Inverse of [`BitMask::encode_u8`]; rejects wrong byte lengths and
+    /// zeroes any padding bits past `len`.
     pub fn decode_u8(bytes: &[u8], len: usize) -> anyhow::Result<Self> {
         anyhow::ensure!(
             bytes.len() == len.div_ceil(8),

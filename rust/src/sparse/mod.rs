@@ -23,8 +23,11 @@ pub use vec::SparseVec;
 /// Wire encodings for one gradient message.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WireFormat {
+    /// (u32 index, f32 value) per nonzero — best when very sparse.
     Pairs,
+    /// 1 bit/coordinate + packed f32 values — best at ≥ ~3% density.
     Bitmap,
+    /// Raw f32s — the never-worse-than-baseline fallback.
     Dense,
 }
 

@@ -8,12 +8,16 @@ use super::{wire_bytes, WireFormat};
 /// Sparse view of a length-`len` f32 vector.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SparseVec {
+    /// Logical (dense) length.
     pub len: usize,
+    /// Ascending nonzero coordinates.
     pub idx: Vec<u32>,
+    /// Values aligned with `idx`.
     pub val: Vec<f32>,
 }
 
 impl SparseVec {
+    /// The empty sparse vector of logical length `len`.
     pub fn empty(len: usize) -> Self {
         SparseVec {
             len,
@@ -80,10 +84,12 @@ impl SparseVec {
         }
     }
 
+    /// Number of stored nonzeros.
     pub fn nnz(&self) -> usize {
         self.idx.len()
     }
 
+    /// Stored fraction `nnz / len` (0 for the zero-length vector).
     pub fn density(&self) -> f64 {
         if self.len == 0 {
             0.0

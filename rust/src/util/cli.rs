@@ -6,9 +6,12 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line (subcommand + flags + switches + positionals).
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First bare token (`train`, `exp`, …).
     pub subcommand: Option<String>,
+    /// Remaining bare tokens after the subcommand.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
@@ -45,6 +48,7 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Self {
         Self::parse(std::env::args().skip(1))
     }
@@ -53,15 +57,18 @@ impl Args {
         self.seen.borrow_mut().push(key.to_string());
     }
 
+    /// `--key value` if present.
     pub fn str_opt(&self, key: &str) -> Option<&str> {
         self.mark(key);
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// `--key value` or `default`.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.str_opt(key).unwrap_or(default).to_string()
     }
 
+    /// Integer flag with default; panics with a usage message on junk.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.mark(key);
         match self.flags.get(key) {
@@ -72,6 +79,7 @@ impl Args {
         }
     }
 
+    /// Float flag with default; panics with a usage message on junk.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.mark(key);
         match self.flags.get(key) {
@@ -82,6 +90,7 @@ impl Args {
         }
     }
 
+    /// u64 flag with default (seeds); panics on junk.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.mark(key);
         match self.flags.get(key) {
@@ -92,6 +101,7 @@ impl Args {
         }
     }
 
+    /// Boolean `--key` switch presence.
     pub fn switch(&self, key: &str) -> bool {
         self.mark(key);
         self.switches.iter().any(|s| s == key)

@@ -11,11 +11,17 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (held as f64; manifest ints are < 2^53).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -23,13 +29,16 @@ pub enum Json {
 #[derive(Debug, thiserror::Error)]
 #[error("json parse error at byte {pos}: {msg}")]
 pub struct JsonError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// What was expected/found.
     pub msg: String,
 }
 
 impl Json {
     // ---- accessors --------------------------------------------------
 
+    /// String payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -37,6 +46,7 @@ impl Json {
         }
     }
 
+    /// Numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -44,10 +54,12 @@ impl Json {
         }
     }
 
+    /// Numeric payload truncated to usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Bool payload, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -55,6 +67,7 @@ impl Json {
         }
     }
 
+    /// Array view, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -62,6 +75,7 @@ impl Json {
         }
     }
 
+    /// Object view, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -82,6 +96,7 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing/non-string field `{key}`"))
     }
 
+    /// Required numeric field (anyhow context for manifest loading).
     pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
         self.get(key)
             .as_f64()
@@ -89,6 +104,7 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing/non-numeric field `{key}`"))
     }
 
+    /// Required array field (anyhow context for manifest loading).
     pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
         self.get(key)
             .as_arr()
@@ -97,14 +113,17 @@ impl Json {
 
     // ---- construction helpers ---------------------------------------
 
+    /// Object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Numeric array.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// String array.
     pub fn arr_str(xs: &[&str]) -> Json {
         Json::Arr(xs.iter().map(|s| Json::Str(s.to_string())).collect())
     }

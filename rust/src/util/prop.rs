@@ -24,19 +24,23 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Direct access to the case's RNG stream.
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng
     }
 
+    /// Uniform integer in [lo, hi).
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         assert!(hi > lo);
         lo + self.rng.below(hi - lo)
     }
 
+    /// Uniform float in [lo, hi).
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         self.rng.uniform_in(lo, hi)
     }
 
+    /// Fair coin.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }

@@ -14,6 +14,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded stream (any seed is fine, including 0).
     pub fn new(seed: u64) -> Self {
         // Avoid the all-zeros fixed point and decorrelate small seeds.
         Rng {
@@ -27,6 +28,7 @@ impl Rng {
         Rng::new(s ^ tag.wrapping_mul(0xBF58_476D_1CE4_E5B9))
     }
 
+    /// Next raw 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);

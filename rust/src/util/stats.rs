@@ -15,6 +15,7 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Fresh accumulator.
     pub fn new() -> Self {
         Welford {
             n: 0,
@@ -25,6 +26,7 @@ impl Welford {
         }
     }
 
+    /// Fold one observation in.
     #[inline]
     pub fn push(&mut self, x: f64) {
         self.n += 1;
@@ -35,15 +37,18 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Fold a whole f32 slice in.
     pub fn extend(&mut self, xs: &[f32]) {
         for &x in xs {
             self.push(x as f64);
         }
     }
 
+    /// Observation count.
     pub fn count(&self) -> u64 {
         self.n
     }
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -55,12 +60,15 @@ impl Welford {
             self.m2 / self.n as f64
         }
     }
+    /// Population standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
+    /// Smallest observation (+∞ when empty).
     pub fn min(&self) -> f64 {
         self.min
     }
+    /// Largest observation (−∞ when empty).
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -90,14 +98,20 @@ pub fn mean_var_from_sums(sum: f64, sumsq: f64, n: f64) -> (f64, f64) {
 /// Fixed-bin histogram over [lo, hi) with overflow/underflow buckets.
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Inclusive lower bound.
     pub lo: f64,
+    /// Exclusive upper bound.
     pub hi: f64,
+    /// Equal-width bin counts over [lo, hi).
     pub bins: Vec<u64>,
+    /// Count of observations below `lo`.
     pub under: u64,
+    /// Count of observations at/above `hi`.
     pub over: u64,
 }
 
 impl Histogram {
+    /// Equal-width histogram over [lo, hi) with `n_bins` bins.
     pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
         assert!(hi > lo && n_bins > 0);
         Histogram {
@@ -116,6 +130,7 @@ impl Histogram {
         Histogram::new(lo_exp as f64, hi_exp as f64, n)
     }
 
+    /// Bin one observation.
     #[inline]
     pub fn push(&mut self, x: f64) {
         if x < self.lo {
@@ -129,6 +144,7 @@ impl Histogram {
         }
     }
 
+    /// Bin `log10(x)`; non-positive values count as underflow.
     pub fn push_log10(&mut self, x: f64) {
         if x > 0.0 {
             self.push(x.log10());
@@ -137,6 +153,7 @@ impl Histogram {
         }
     }
 
+    /// Total observations including under/overflow.
     pub fn total(&self) -> u64 {
         self.bins.iter().sum::<u64>() + self.under + self.over
     }

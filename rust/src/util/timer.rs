@@ -18,17 +18,25 @@ pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
     BenchStats::from_samples(samples)
 }
 
+/// Per-iteration timing statistics in nanoseconds.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean ns/iteration.
     pub mean_ns: f64,
+    /// Median ns/iteration.
     pub median_ns: f64,
+    /// Fastest iteration.
     pub min_ns: f64,
+    /// Slowest iteration.
     pub max_ns: f64,
+    /// Population std of the samples.
     pub std_ns: f64,
 }
 
 impl BenchStats {
+    /// Compute stats from raw per-iteration samples (ns).
     pub fn from_samples(mut samples: Vec<f64>) -> Self {
         assert!(!samples.is_empty());
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -64,6 +72,7 @@ impl BenchStats {
     }
 }
 
+/// Render nanoseconds with auto-scaled units (`1.50 µs`, `2.50 ms`).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0} ns")

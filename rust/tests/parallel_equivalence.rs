@@ -1,0 +1,292 @@
+//! The parallel executor's contract (DESIGN.md §4): for every schedule
+//! and engine, `parallelism = W` produces **bit-identical** results to
+//! the sequential oracle (`parallelism = 1`) — same `ReduceReport`
+//! (bytes, virtual seconds, density per hop), same reduced values, same
+//! RNG evolution. No tolerance comparisons here: equality is exact.
+
+use ringiwp::compress::Method;
+use ringiwp::exp::simrun::{SimCfg, SimEngine};
+use ringiwp::model::{LayerKind, ParamLayout};
+use ringiwp::net::{LinkSpec, RingNet};
+use ringiwp::ring::{self, Executor, ReduceReport};
+use ringiwp::sparse::{BitMask, SparseVec};
+use ringiwp::util::prop::forall;
+use ringiwp::util::rng::Rng;
+
+fn net(n: usize) -> RingNet {
+    RingNet::new(n, LinkSpec::gigabit_ethernet(), 0.05)
+}
+
+fn assert_reports_identical(seq: &ReduceReport, par: &ReduceReport, ctx: &str) {
+    assert_eq!(seq.bytes_per_node, par.bytes_per_node, "{ctx}: bytes");
+    assert_eq!(
+        seq.seconds.to_bits(),
+        par.seconds.to_bits(),
+        "{ctx}: seconds {} vs {}",
+        seq.seconds,
+        par.seconds
+    );
+    let db = |r: &ReduceReport| -> Vec<u64> {
+        r.density_per_hop.iter().map(|d| d.to_bits()).collect()
+    };
+    assert_eq!(db(seq), db(par), "{ctx}: density_per_hop");
+}
+
+fn random_sparse(rng: &mut Rng, len: usize, density: f64) -> SparseVec {
+    let mut dense = vec![0.0f32; len];
+    for v in dense.iter_mut() {
+        if (rng.uniform() as f64) < density {
+            *v = rng.normal();
+        }
+    }
+    SparseVec::from_dense(&dense)
+}
+
+const RING_SIZES: [usize; 3] = [4, 8, 96];
+const WORKERS: [usize; 3] = [2, 4, 8];
+
+#[test]
+fn dense_schedule_parallel_is_bit_identical() {
+    for n in RING_SIZES {
+        let len = 6000;
+        let mut rng = Rng::new(7 + n as u64);
+        let base: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let mut net_seq = net(n);
+        let mut bufs_seq = base.clone();
+        let rep_seq = ring::dense::allreduce(&mut net_seq, &mut bufs_seq);
+        for w in WORKERS {
+            let mut net_par = net(n);
+            let mut bufs_par = base.clone();
+            let rep_par =
+                ring::dense::allreduce_exec(&mut net_par, &mut bufs_par, &Executor::new(w));
+            assert_reports_identical(&rep_seq, &rep_par, &format!("dense n={n} w={w}"));
+            for (s, p) in bufs_seq.iter().zip(&bufs_par) {
+                let sb: Vec<u32> = s.iter().map(|v| v.to_bits()).collect();
+                let pb: Vec<u32> = p.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(sb, pb, "dense n={n} w={w}: reduced values");
+            }
+            assert_eq!(net_seq.clock().to_bits(), net_par.clock().to_bits());
+        }
+    }
+}
+
+#[test]
+fn sparse_schedule_parallel_is_bit_identical() {
+    for n in RING_SIZES {
+        let len = 4000;
+        let mut rng = Rng::new(11 + n as u64);
+        let inputs: Vec<SparseVec> = (0..n)
+            .map(|_| random_sparse(&mut rng, len, 0.02))
+            .collect();
+        let mut net_seq = net(n);
+        let (sum_seq, rep_seq) = ring::sparse::allreduce(&mut net_seq, &inputs);
+        for w in WORKERS {
+            let mut net_par = net(n);
+            let (sum_par, rep_par) =
+                ring::sparse::allreduce_exec(&mut net_par, &inputs, &Executor::new(w));
+            assert_reports_identical(&rep_seq, &rep_par, &format!("sparse n={n} w={w}"));
+            let sb: Vec<u32> = sum_seq.iter().map(|v| v.to_bits()).collect();
+            let pb: Vec<u32> = sum_par.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sb, pb, "sparse n={n} w={w}: reduced values");
+        }
+    }
+}
+
+#[test]
+fn sparse_support_path_parallel_is_bit_identical() {
+    for n in RING_SIZES {
+        let len = 50_000;
+        let mut rng = Rng::new(13 + n as u64);
+        let supports: Vec<BitMask> = (0..n)
+            .map(|_| {
+                let mut m = BitMask::zeros(len);
+                for _ in 0..500 {
+                    m.set(rng.below(len));
+                }
+                m
+            })
+            .collect();
+        let mut net_seq = net(n);
+        let rep_seq = ring::sparse::allreduce_support(&mut net_seq, &supports);
+        for w in WORKERS {
+            let mut net_par = net(n);
+            let rep_par = ring::sparse::allreduce_support_exec(
+                &mut net_par,
+                &supports,
+                &Executor::new(w),
+            );
+            assert_reports_identical(&rep_seq, &rep_par, &format!("support n={n} w={w}"));
+        }
+    }
+}
+
+#[test]
+fn masked_schedule_parallel_is_bit_identical() {
+    for n in RING_SIZES {
+        let len = 20_000;
+        let mut rng = Rng::new(17 + n as u64);
+        let mut mask_a = BitMask::zeros(len);
+        let mut mask_b = BitMask::zeros(len);
+        for _ in 0..300 {
+            mask_a.set(rng.below(len));
+            mask_b.set(rng.below(len));
+        }
+        let values: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = values.iter().map(|v| v.as_slice()).collect();
+        let mut net_seq = net(n);
+        let (shared_seq, summed_seq, rep_seq) =
+            ring::masked::allreduce(&mut net_seq, &[&mask_a, &mask_b], &refs);
+        for w in WORKERS {
+            let mut net_par = net(n);
+            let (shared_par, summed_par, rep_par) = ring::masked::allreduce_exec(
+                &mut net_par,
+                &[&mask_a, &mask_b],
+                &refs,
+                &Executor::new(w),
+            );
+            assert_eq!(shared_seq, shared_par, "masked n={n} w={w}: shared mask");
+            assert_reports_identical(&rep_seq, &rep_par, &format!("masked n={n} w={w}"));
+            let sb: Vec<u32> = summed_seq.iter().map(|v| v.to_bits()).collect();
+            let pb: Vec<u32> = summed_par.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sb, pb, "masked n={n} w={w}: summed values");
+        }
+    }
+}
+
+/// Satellite property: across random seeds/shapes, every schedule's
+/// parallel report equals the sequential one exactly.
+#[test]
+fn reduce_report_equality_property_across_seeds() {
+    forall("parallel ReduceReport == sequential", 20, |g| {
+        let n = g.usize_in(2, 10);
+        let len = g.usize_in(n.max(8), 600);
+        let workers = g.choice(&[2usize, 3, 5, 8]);
+        let exec = Executor::new(workers);
+        let seed = g.rng().next_u64();
+        let mut rng = Rng::new(seed);
+
+        // Dense.
+        let base: Vec<Vec<f32>> = (0..n).map(|_| {
+            let mut v = vec![0.0f32; len];
+            rng.fill_normal(&mut v, 0.0, 1.0);
+            v
+        }).collect();
+        let (mut na, mut nb) = (net(n), net(n));
+        let (mut ba, mut bb) = (base.clone(), base);
+        let ra = ring::dense::allreduce(&mut na, &mut ba);
+        let rb = ring::dense::allreduce_exec(&mut nb, &mut bb, &exec);
+        assert_reports_identical(&ra, &rb, &format!("prop dense seed={seed}"));
+
+        // Sparse.
+        let inputs: Vec<SparseVec> = (0..n)
+            .map(|_| random_sparse(&mut rng, len, 0.1))
+            .collect();
+        let (mut na, mut nb) = (net(n), net(n));
+        let (va, ra) = ring::sparse::allreduce(&mut na, &inputs);
+        let (vb, rb) = ring::sparse::allreduce_exec(&mut nb, &inputs, &exec);
+        assert_reports_identical(&ra, &rb, &format!("prop sparse seed={seed}"));
+        assert_eq!(
+            va.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            vb.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+
+        // Masked.
+        let mut mask = BitMask::zeros(len);
+        for _ in 0..len / 4 {
+            mask.set(rng.below(len));
+        }
+        let values: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = values.iter().map(|v| v.as_slice()).collect();
+        let (mut na, mut nb) = (net(n), net(n));
+        let (sa, va, ra) = ring::masked::allreduce(&mut na, &[&mask], &refs);
+        let (sb, vb, rb) = ring::masked::allreduce_exec(&mut nb, &[&mask], &refs, &exec);
+        assert_eq!(sa, sb);
+        assert_reports_identical(&ra, &rb, &format!("prop masked seed={seed}"));
+        assert_eq!(
+            va.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            vb.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    });
+}
+
+// ---- engine-level equivalence -----------------------------------------
+
+fn sim_layout() -> ParamLayout {
+    ParamLayout::new(
+        "sim_eq",
+        vec![
+            ("conv1".into(), vec![32, 16, 3, 3], LayerKind::Conv),
+            ("bn1".into(), vec![64], LayerKind::BatchNorm),
+            ("conv2".into(), vec![64, 32, 3, 3], LayerKind::Conv),
+            ("fc".into(), vec![512, 10], LayerKind::Fc),
+            ("bias".into(), vec![10], LayerKind::Bias),
+        ],
+    )
+}
+
+fn run_engine(method: Method, nodes: usize, parallelism: usize) -> (Vec<(u64, u64, u64)>, f64) {
+    let cfg = SimCfg {
+        nodes,
+        method,
+        parallelism,
+        link: LinkSpec::gigabit_ethernet(),
+        seed: 23,
+        ..Default::default()
+    };
+    let mut engine = SimEngine::new(sim_layout(), cfg);
+    let mut reports = Vec::new();
+    for s in 0..3 {
+        let r = engine.step(s);
+        reports.push((
+            r.wire_bytes_per_node,
+            r.density.to_bits(),
+            r.seconds.to_bits(),
+        ));
+    }
+    (reports, engine.account.ratio())
+}
+
+#[test]
+fn sim_engine_parallel_is_bit_identical_across_methods_and_ring_sizes() {
+    for method in [
+        Method::Baseline,
+        Method::TernGrad,
+        Method::Dgc,
+        Method::IwpFixed,
+        Method::IwpLayerwise,
+    ] {
+        for nodes in [4usize, 8, 96] {
+            let (seq_reports, seq_ratio) = run_engine(method, nodes, 1);
+            for w in [2usize, 4] {
+                let (par_reports, par_ratio) = run_engine(method, nodes, w);
+                assert_eq!(
+                    seq_reports, par_reports,
+                    "{method:?} nodes={nodes} w={w}: step reports diverged"
+                );
+                assert_eq!(
+                    seq_ratio.to_bits(),
+                    par_ratio.to_bits(),
+                    "{method:?} nodes={nodes} w={w}: ratio diverged"
+                );
+            }
+        }
+    }
+}
