@@ -25,9 +25,7 @@ fn main() {
 
     let stats = bench(3, 10, || {
         let mut mask = BitMask::zeros(len);
-        std::hint::black_box(score_and_mask(
-            &g, &w, &u, 0.01, EPS, &mut imp, &mut mask,
-        ));
+        std::hint::black_box(score_and_mask(&g, &w, &u, 0.01, EPS, &mut imp, &mut mask));
     });
     println!("{}", stats.row("score_and_mask 2M coords"));
     println!(

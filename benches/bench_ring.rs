@@ -7,6 +7,7 @@
 
 use ringiwp::net::{LinkSpec, RingNet};
 use ringiwp::ring;
+use ringiwp::ring::{Arena, Executor};
 use ringiwp::sparse::{BitMask, SparseVec};
 use ringiwp::util::rng::Rng;
 use ringiwp::util::timer::bench;
@@ -72,6 +73,49 @@ fn main() {
         );
         println!();
     }
+
+    // Persistent staging arena vs per-call scratch (DESIGN.md §9): same
+    // schedule, same inputs — the only difference is buffer reuse across
+    // calls, i.e. the steady-state behaviour of SimEngine/Trainer.
+    println!("== staging arena reuse (sparse 1%, per-call vs persistent) ==");
+    let exec = Executor::sequential();
+    for (nodes, len) in [(8usize, 1 << 18), (16, 1 << 18)] {
+        let base: Vec<Vec<f32>> = (0..nodes)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let sparses: Vec<SparseVec> = base
+            .iter()
+            .map(|v| SparseVec::top_k(v, len / 100))
+            .collect();
+        let stats = bench(1, 5, || {
+            let mut nw = net(nodes);
+            std::hint::black_box(ring::sparse::allreduce_exec(&mut nw, &sparses, &exec));
+        });
+        println!(
+            "{}",
+            stats.row(&format!("sparse per-call scratch n={nodes} len={len}"))
+        );
+        let fresh_median = stats.median_ns;
+        let mut arena = Arena::for_nodes(nodes);
+        let stats = bench(1, 5, || {
+            let mut nw = net(nodes);
+            std::hint::black_box(ring::sparse::allreduce_in(&mut nw, &sparses, &exec, &mut arena));
+        });
+        println!(
+            "{}",
+            stats.row(&format!("sparse persistent arena n={nodes} len={len}"))
+        );
+        println!(
+            "    -> {:.2}x vs per-call scratch, {} arena grows total",
+            fresh_median / stats.median_ns,
+            arena.grows()
+        );
+    }
+    println!();
 
     // Support-only fast path at paper scale.
     for nodes in [32usize, 96] {

@@ -13,12 +13,14 @@ use ringiwp::runtime::Runtime;
 use ringiwp::util::human_bytes;
 
 fn main() -> anyhow::Result<()> {
-    let mut cfg = Config::default();
-    cfg.nodes = 8;
-    cfg.model = "mlp".into();
-    cfg.method = Method::IwpLayerwise;
-    cfg.steps = 60;
-    cfg.seed = 42;
+    let cfg = Config {
+        nodes: 8,
+        model: "mlp".into(),
+        method: Method::IwpLayerwise,
+        steps: 60,
+        seed: 42,
+        ..Config::default()
+    };
 
     let rt = Runtime::cpu(&cfg.artifacts_dir)?;
     println!(

@@ -24,15 +24,17 @@ use ringiwp::util::human_bytes;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let mut cfg = Config::default();
-    cfg.model = "tfm_tiny".into();
-    cfg.method = Method::IwpLayerwise;
-    cfg.nodes = 4;
-    cfg.steps = 300;
-    cfg.lr = 0.08; // stable for plain SGD + sparse updates at this scale
-    cfg.threshold = 75.0; // early-training importance is O(1); see DESIGN.md
-    cfg.steps_per_epoch = 75;
-    cfg = cfg.apply_args(&args)?;
+    let cfg = Config {
+        model: "tfm_tiny".into(),
+        method: Method::IwpLayerwise,
+        nodes: 4,
+        steps: 300,
+        lr: 0.08,        // stable for plain SGD + sparse updates at this scale
+        threshold: 75.0, // early-training importance is O(1); see DESIGN.md
+        steps_per_epoch: 75,
+        ..Config::default()
+    };
+    let cfg = cfg.apply_args(&args)?;
 
     let rt = Runtime::cpu(&cfg.artifacts_dir)?;
     println!(

@@ -255,12 +255,16 @@ mod tests {
 
     #[test]
     fn validation_catches_bad_values() {
-        let mut c = Config::default();
-        c.nodes = 1;
+        let c = Config {
+            nodes: 1,
+            ..Config::default()
+        };
         assert!(c.validate().is_err());
-        let mut c = Config::default();
-        c.mask_nodes = 10;
-        c.nodes = 4;
+        let c = Config {
+            mask_nodes: 10,
+            nodes: 4,
+            ..Config::default()
+        };
         assert!(c.validate().is_err());
     }
 
@@ -274,15 +278,19 @@ mod tests {
         assert_eq!(cfg.executor().workers(), 4);
         let kv = parse_kv("parallelism = 8").unwrap();
         assert_eq!(Config::default().apply_kv(&kv).unwrap().parallelism, 8);
-        let mut c = Config::default();
-        c.parallelism = 0;
+        let c = Config {
+            parallelism: 0,
+            ..Config::default()
+        };
         assert!(c.validate().is_err());
     }
 
     #[test]
     fn epoch_indexing() {
-        let mut c = Config::default();
-        c.steps_per_epoch = 50;
+        let c = Config {
+            steps_per_epoch: 50,
+            ..Config::default()
+        };
         assert_eq!(c.epoch_of(0), 0);
         assert_eq!(c.epoch_of(49), 0);
         assert_eq!(c.epoch_of(50), 1);

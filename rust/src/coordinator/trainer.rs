@@ -11,7 +11,7 @@ use crate::model::ParamLayout;
 use crate::net::RingNet;
 use crate::optim::{LrSchedule, MomentumSgd};
 use crate::ring;
-use crate::ring::Executor;
+use crate::ring::{Arena, Executor};
 use crate::runtime::{Artifact, ImportanceKernel, Runtime};
 use crate::sparse::BitMask;
 use crate::util::rng::Rng;
@@ -80,6 +80,8 @@ pub struct Trainer {
     account_scratch: CompressionAccount,
     /// Node-parallel executor for the reduce paths (`cfg.parallelism`).
     exec: Executor,
+    /// Staging arena for the reduce hot paths (DESIGN.md §9).
+    arena: Arena,
 }
 
 impl Trainer {
@@ -155,6 +157,7 @@ impl Trainer {
 
         Ok(Trainer {
             exec: Executor::new(cfg.parallelism),
+            arena: Arena::for_nodes(cfg.nodes),
             net: RingNet::new(cfg.nodes, cfg.link_spec(), 0.05),
             stores: (0..cfg.nodes)
                 .map(|_| ResidualStore::new(total, store_momentum))
@@ -317,7 +320,8 @@ impl Trainer {
     // ---- reduce paths ------------------------------------------------
 
     fn reduce_dense(&mut self, lr: f32) -> anyhow::Result<()> {
-        let rep = ring::dense::allreduce_exec(&mut self.net, &mut self.grads, &self.exec);
+        let rep =
+            ring::dense::allreduce_in(&mut self.net, &mut self.grads, &self.exec, &mut self.arena);
         let n = self.cfg.nodes as f32;
         // grads[0] now holds the sum; average and apply with momentum.
         let avg: Vec<f32> = self.grads[0].iter().map(|&g| g / n).collect();
@@ -347,14 +351,21 @@ impl Trainer {
             TernGrad::encode(&grads[node], layout, rng)
         });
         let mut sum = vec![0.0f32; self.layout.total_params()];
-        let mut blob_bytes = vec![0u64; n];
-        for (node, t) in encoded.iter().enumerate() {
-            blob_bytes[node] = t.wire_bytes();
+        for t in &encoded {
             for (s, v) in sum.iter_mut().zip(t.decode(&self.layout)) {
                 *s += v;
             }
         }
-        self.net.allgather(&blob_bytes);
+        {
+            let Arena {
+                grows,
+                mk_blobs,
+                ag_sends,
+                ..
+            } = &mut self.arena;
+            let blobs = encoded.iter().map(|t| t.wire_bytes());
+            Arena::allgather_into(&mut self.net, grows, mk_blobs, ag_sends, blobs);
+        }
         let wire = (0..n)
             .map(|i| self.net.node_tx_bytes(i) - before[i])
             .sum::<u64>()
@@ -365,7 +376,7 @@ impl Trainer {
             self.dense_ref_bytes(),
             wire,
             self.layout.dense_bytes(),
-            blob_bytes[0],
+            encoded[0].wire_bytes(),
             1.0,
         );
         Ok(())
@@ -380,7 +391,8 @@ impl Trainer {
             dgc.density = density;
             dgc.step(&grads[node])
         });
-        let (sum, rep) = ring::sparse::allreduce_exec(&mut self.net, &sparses, &self.exec);
+        let (sum, rep) =
+            ring::sparse::allreduce_in(&mut self.net, &sparses, &self.exec, &mut self.arena);
         let inv_n = 1.0 / n as f32;
         for (i, &v) in sum.iter().enumerate() {
             if v != 0.0 {
@@ -439,11 +451,7 @@ impl Trainer {
             .as_mut()
             .expect("IWP methods always load the kernel");
         for &b in &broadcasters {
-            select::fill_u(
-                &mut self.node_rngs[b],
-                self.cfg.random_select,
-                &mut self.u_buf,
-            );
+            select::fill_u(&mut self.node_rngs[b], self.cfg.random_select, &mut self.u_buf);
             let pending = self.stores[b].pending();
             let weights = &self.params;
             let mut mask = BitMask::zeros(total);
@@ -469,8 +477,13 @@ impl Trainer {
         // borrows `stores` while the net (a disjoint field) mutates.
         let mask_refs: Vec<&BitMask> = masks.iter().collect();
         let values: Vec<&[f32]> = self.stores.iter().map(|s| s.pending()).collect();
-        let (shared, summed, rep) =
-            ring::masked::allreduce_exec(&mut self.net, &mask_refs, &values, &self.exec);
+        let (shared, summed, rep) = ring::masked::allreduce_in(
+            &mut self.net,
+            &mask_refs,
+            &values,
+            &self.exec,
+            &mut self.arena,
+        );
 
         // Zero transmitted residual + velocity on every node.
         let shared_ref = &shared;

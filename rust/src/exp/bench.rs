@@ -1,0 +1,425 @@
+//! `exp::bench` — the in-process, deterministic perf harness behind
+//! `BENCH_ring.json` / `BENCH_step.json` (DESIGN.md §9, EXPERIMENTS.md
+//! §6).
+//!
+//! Two sweeps, both seeded and counter-based so every *deterministic*
+//! row field (wire bytes, virtual wire time from the `net::cost` model's
+//! link parameters, densities, ratios) replays bit-for-bit across runs
+//! and machines:
+//!
+//! * **ring** — the three transport schedules (dense / sparse / masked)
+//!   in isolation, per ring size, over a fixed synthetic payload. Rows
+//!   carry the simulated virtual seconds *and* the closed-form
+//!   `net::cost` prediction (`model_s`), which must agree.
+//! * **step** — the full `SimEngine` step (gradient synthesis →
+//!   compression → ring transport → accounting) for all 5 methods ×
+//!   ring sizes × AlexNet/ResNet50 inventories (scaled-down stand-ins
+//!   under the `quick` profile so the CI smoke run stays fast).
+//!
+//! Measured wall time (`ns_op`, the CI regression gate's input) is the
+//! only non-replayable field; `metrics::bench::canonical` strips it
+//! (plus provenance) for the determinism checks, and `timing: false`
+//! omits it entirely.
+
+use crate::compress::Method;
+use crate::exp::simrun::{SimCfg, SimEngine};
+use crate::metrics::bench::BenchReport;
+use crate::model::{zoo, LayerKind, ParamLayout};
+use crate::net::{CostModel, LinkSpec, RingNet};
+use crate::ring::{self, Arena, Executor, ReduceReport};
+use crate::sparse::{BitMask, SparseVec};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::timer;
+
+/// Harness configuration (CLI: `ringiwp bench`).
+#[derive(Debug, Clone)]
+pub struct BenchCfg {
+    /// Reduced payloads/inventories for the CI smoke run (`--quick`).
+    pub quick: bool,
+    /// Measure wall time (`ns_op`). `false` omits the field, making the
+    /// whole payload replay bit-for-bit (`--no-timing`).
+    pub timing: bool,
+    /// Timed iterations per arm (median is reported).
+    pub repeats: usize,
+    /// Ring sizes swept (the paper's 4..96 range by default).
+    pub ring_sizes: Vec<usize>,
+    /// Root seed for every synthetic stream.
+    pub seed: u64,
+    /// Link bandwidth/latency parameterizing the virtual wire time.
+    pub link: LinkSpec,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        BenchCfg {
+            quick: false,
+            timing: true,
+            repeats: 3,
+            ring_sizes: vec![4, 8, 32, 96],
+            seed: 42,
+            link: LinkSpec::gigabit_ethernet(),
+        }
+    }
+}
+
+impl BenchCfg {
+    /// Profile label recorded in the payload config; baselines only
+    /// compare against payloads of the same profile.
+    pub fn profile(&self) -> &'static str {
+        if self.quick {
+            "quick"
+        } else {
+            "full"
+        }
+    }
+
+    /// Ring-sweep payload size in coordinates.
+    fn ring_coords(&self) -> usize {
+        if self.quick {
+            1 << 13
+        } else {
+            1 << 17
+        }
+    }
+
+    /// Deterministic metric steps per step-sweep arm.
+    fn metric_steps(&self) -> usize {
+        if self.quick {
+            2
+        } else {
+            3
+        }
+    }
+
+    fn config_json(&self) -> Json {
+        Json::obj(vec![
+            ("profile", Json::from(self.profile())),
+            ("repeats", Json::from(self.repeats)),
+            (
+                "ring_sizes",
+                Json::Arr(self.ring_sizes.iter().map(|&n| Json::from(n)).collect()),
+            ),
+            // String, not number: JSON numbers are f64 and would corrupt
+            // seeds >= 2^53, breaking replay-from-config.
+            ("seed", Json::from(self.seed.to_string().as_str())),
+            ("bandwidth_bps", Json::from(self.link.bandwidth_bps)),
+            ("latency_s", Json::from(self.link.latency_s)),
+        ])
+    }
+}
+
+/// 1% of `len`, at least 1 — the sweeps' sparse payload density.
+fn one_percent(len: usize) -> usize {
+    (len / 100).max(1)
+}
+
+fn deterministic_sparse(rng: &mut Rng, len: usize) -> SparseVec {
+    let mut dense = vec![0.0f32; len];
+    for _ in 0..one_percent(len) {
+        dense[rng.below(len)] = rng.normal();
+    }
+    SparseVec::from_dense(&dense)
+}
+
+/// The ring transport sweep: dense / sparse / masked × ring sizes.
+pub fn run_ring(cfg: &BenchCfg) -> BenchReport {
+    let coords = cfg.ring_coords();
+    let mut report = BenchReport::new("ring", cfg.config_json());
+    let exec = Executor::sequential();
+    for &n in &cfg.ring_sizes {
+        let model = CostModel::new(n, cfg.link);
+        let mut rng = Rng::new(cfg.seed ^ ((n as u64) << 20));
+        let base: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; coords];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+
+        // -- dense ------------------------------------------------------
+        // The schedule reduces in place, so each sample restores `work`
+        // from `base` first (a memcpy, no allocation). ns_op therefore
+        // includes the restore + a fresh RingNet; both are identical on
+        // both sides of a baseline comparison, so the gate still tracks
+        // the schedule.
+        let mut arena = Arena::for_nodes(n);
+        let mut work = base.clone();
+        let run = |work: &mut [Vec<f32>], arena: &mut Arena| -> ReduceReport {
+            for (w, b) in work.iter_mut().zip(&base) {
+                w.copy_from_slice(b);
+            }
+            let mut net = RingNet::new(n, cfg.link, 1.0);
+            ring::dense::allreduce_in(&mut net, work, &exec, arena)
+        };
+        let rep = run(&mut work, &mut arena);
+        let ns = cfg.timing.then(|| {
+            timer::bench(0, cfg.repeats.max(1), || {
+                std::hint::black_box(run(&mut work, &mut arena));
+            })
+        });
+        report.push(ring_row(
+            &format!("ring/dense/n{n}/c{coords}"),
+            "dense",
+            n,
+            coords,
+            &rep,
+            Some(model.dense_seconds(coords)),
+            ns.map(|s| s.median_ns),
+        ));
+
+        // -- sparse (DGC-style per-node supports) -----------------------
+        let inputs: Vec<SparseVec> =
+            (0..n).map(|_| deterministic_sparse(&mut rng, coords)).collect();
+        let mut arena = Arena::for_nodes(n);
+        let run = |arena: &mut Arena| -> ReduceReport {
+            let mut net = RingNet::new(n, cfg.link, 1.0);
+            ring::sparse::allreduce_in(&mut net, &inputs, &exec, arena).1
+        };
+        let rep = run(&mut arena);
+        let ns = cfg.timing.then(|| {
+            timer::bench(0, cfg.repeats.max(1), || {
+                std::hint::black_box(run(&mut arena));
+            })
+        });
+        report.push(ring_row(
+            &format!("ring/sparse/n{n}/c{coords}"),
+            "sparse",
+            n,
+            coords,
+            &rep,
+            None,
+            ns.map(|s| s.median_ns),
+        ));
+
+        // -- masked (Algorithm 1's shared-mask transport) ---------------
+        let mut mask = BitMask::zeros(coords);
+        for _ in 0..one_percent(coords) {
+            mask.set(rng.below(coords));
+        }
+        let refs: Vec<&[f32]> = base.iter().map(|v| v.as_slice()).collect();
+        let support = mask.count();
+        let mut arena = Arena::for_nodes(n);
+        let run = |arena: &mut Arena| -> ReduceReport {
+            let mut net = RingNet::new(n, cfg.link, 1.0);
+            ring::masked::allreduce_in(&mut net, &[&mask], &refs, &exec, arena).2
+        };
+        let rep = run(&mut arena);
+        let ns = cfg.timing.then(|| {
+            timer::bench(0, cfg.repeats.max(1), || {
+                std::hint::black_box(run(&mut arena));
+            })
+        });
+        report.push(ring_row(
+            &format!("ring/masked/n{n}/c{coords}"),
+            "masked",
+            n,
+            coords,
+            &rep,
+            Some(model.masked_seconds(coords, 1, support)),
+            ns.map(|s| s.median_ns),
+        ));
+    }
+    report
+}
+
+fn ring_row(
+    id: &str,
+    schedule: &str,
+    nodes: usize,
+    coords: usize,
+    rep: &ReduceReport,
+    model_s: Option<f64>,
+    ns_op: Option<f64>,
+) -> Json {
+    let mut fields = vec![
+        ("id", Json::from(id)),
+        ("schedule", Json::from(schedule)),
+        ("nodes", Json::from(nodes)),
+        ("coords", Json::from(coords)),
+        ("bytes_per_node", Json::from(rep.mean_bytes_per_node())),
+        ("virtual_s", Json::from(rep.seconds)),
+    ];
+    if let Some(m) = model_s {
+        fields.push(("model_s", Json::from(m)));
+    }
+    if let Some(ns) = ns_op {
+        fields.push(("ns_op", Json::from(ns)));
+    }
+    Json::obj(fields)
+}
+
+/// AlexNet stand-in for the `quick` profile: the real 61M-parameter
+/// inventory's layer-kind mix at ~1/2800 scale.
+fn micro_alexnet() -> ParamLayout {
+    ParamLayout::new(
+        "alexnet_micro",
+        vec![
+            ("conv1".into(), vec![16, 3, 3, 3], LayerKind::Conv),
+            ("conv2".into(), vec![32, 16, 3, 3], LayerKind::Conv),
+            ("fc1".into(), vec![256, 64], LayerKind::Fc),
+            ("fc2".into(), vec![64, 10], LayerKind::Fc),
+            ("bias".into(), vec![10], LayerKind::Bias),
+        ],
+    )
+}
+
+/// ResNet50 stand-in for the `quick` profile (conv/BN alternation).
+fn micro_resnet50() -> ParamLayout {
+    ParamLayout::new(
+        "resnet50_micro",
+        vec![
+            ("conv1".into(), vec![16, 3, 7, 7], LayerKind::Conv),
+            ("bn1".into(), vec![32], LayerKind::BatchNorm),
+            ("block1".into(), vec![32, 16, 3, 3], LayerKind::Conv),
+            ("bn2".into(), vec![64], LayerKind::BatchNorm),
+            ("block2".into(), vec![64, 32, 3, 3], LayerKind::Conv),
+            ("fc".into(), vec![128, 10], LayerKind::Fc),
+        ],
+    )
+}
+
+const METHODS: [Method; 5] = [
+    Method::Baseline,
+    Method::TernGrad,
+    Method::Dgc,
+    Method::IwpFixed,
+    Method::IwpLayerwise,
+];
+
+/// The engine step sweep: 5 methods × ring sizes × AlexNet/ResNet50.
+pub fn run_step(cfg: &BenchCfg) -> BenchReport {
+    let mut report = BenchReport::new("step", cfg.config_json());
+    let models: Vec<(&str, ParamLayout)> = if cfg.quick {
+        vec![("alexnet", micro_alexnet()), ("resnet50", micro_resnet50())]
+    } else {
+        vec![("alexnet", zoo::alexnet()), ("resnet50", zoo::resnet50())]
+    };
+    for (model_name, layout) in &models {
+        for method in METHODS {
+            for &n in &cfg.ring_sizes {
+                let sim = SimCfg {
+                    nodes: n,
+                    method,
+                    seed: cfg.seed,
+                    link: cfg.link,
+                    ..Default::default()
+                };
+                // Deterministic metrics pass.
+                let mut engine = SimEngine::new(layout.clone(), sim.clone());
+                let steps = cfg.metric_steps();
+                let (mut wire_sum, mut secs, mut density) = (0u64, 0.0f64, 0.0f64);
+                for s in 0..steps {
+                    let r = engine.step(s);
+                    wire_sum += r.wire_bytes_per_node;
+                    secs += r.seconds;
+                    density = r.density;
+                }
+                // Timing pass on a fresh engine (the metrics pass above
+                // doubles as its cache/branch warm-up).
+                let ns = cfg.timing.then(|| {
+                    let mut e = SimEngine::new(layout.clone(), sim.clone());
+                    let mut s = 0usize;
+                    timer::bench(1, cfg.repeats.max(1), || {
+                        std::hint::black_box(e.step(s));
+                        s += 1;
+                    })
+                    .median_ns
+                });
+                let id = format!("step/{model_name}/{}/n{n}", method.name());
+                let mut fields = vec![
+                    ("id", Json::from(id.as_str())),
+                    ("model", Json::from(*model_name)),
+                    ("method", Json::from(method.name())),
+                    ("nodes", Json::from(n)),
+                    ("params", Json::from(layout.total_params())),
+                    ("bytes_per_node", Json::from(wire_sum as f64 / steps as f64)),
+                    ("virtual_s", Json::from(secs)),
+                    ("density", Json::from(density)),
+                    ("wire_ratio", Json::from(engine.account.ratio())),
+                    ("payload_ratio", Json::from(engine.account.payload_ratio())),
+                ];
+                if let Some(ns) = ns {
+                    fields.push(("ns_op", Json::from(ns)));
+                }
+                report.push(Json::obj(fields));
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::bench::canonical;
+
+    fn tiny_cfg() -> BenchCfg {
+        BenchCfg {
+            quick: true,
+            timing: false,
+            repeats: 1,
+            ring_sizes: vec![4, 8],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ring_payload_is_deterministic_across_runs() {
+        let cfg = tiny_cfg();
+        let a = run_ring(&cfg).to_json();
+        let b = run_ring(&cfg).to_json();
+        assert_eq!(canonical(&a), canonical(&b));
+        assert_eq!(a.get("rows").as_arr().unwrap().len(), 3 * 2);
+    }
+
+    #[test]
+    fn step_payload_is_deterministic_across_runs() {
+        let cfg = BenchCfg {
+            ring_sizes: vec![4],
+            ..tiny_cfg()
+        };
+        let a = run_step(&cfg).to_json();
+        let b = run_step(&cfg).to_json();
+        assert_eq!(canonical(&a), canonical(&b));
+        // 2 models x 5 methods x 1 ring size.
+        assert_eq!(a.get("rows").as_arr().unwrap().len(), 10);
+    }
+
+    #[test]
+    fn timing_mode_adds_only_volatile_fields() {
+        let quiet = tiny_cfg();
+        let timed = BenchCfg {
+            timing: true,
+            ring_sizes: vec![4],
+            ..tiny_cfg()
+        };
+        let a = run_ring(&BenchCfg {
+            ring_sizes: vec![4],
+            ..quiet
+        })
+        .to_json();
+        let b = run_ring(&timed).to_json();
+        assert_eq!(canonical(&a), canonical(&b));
+        let row = &b.get("rows").as_arr().unwrap()[0];
+        assert!(row.get("ns_op").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn ring_rows_carry_matching_cost_model_predictions() {
+        let cfg = tiny_cfg();
+        let j = run_ring(&cfg).to_json();
+        for row in j.get("rows").as_arr().unwrap() {
+            if let Some(model_s) = row.get("model_s").as_f64() {
+                let virtual_s = row.get("virtual_s").as_f64().unwrap();
+                assert_eq!(
+                    model_s.to_bits(),
+                    virtual_s.to_bits(),
+                    "cost model disagrees with simulation on {}",
+                    row.get("id").as_str().unwrap_or("?")
+                );
+            }
+        }
+    }
+}

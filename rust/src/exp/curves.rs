@@ -33,12 +33,14 @@ pub fn run(
 
     println!("== Fig 5/6: {model} curves over {steps} steps (baseline vs IWP) ==");
     for method in methods {
-        let mut cfg = Config::default();
-        cfg.model = model.into();
-        cfg.method = method;
-        cfg.steps = steps;
-        cfg.seed = seed;
-        cfg.threshold = 200.0; // see table1::accuracy_rows on scaling
+        let cfg = Config {
+            model: model.into(),
+            method,
+            steps,
+            seed,
+            threshold: 200.0, // see table1::accuracy_rows on scaling
+            ..Config::default()
+        };
         let mut t = Trainer::new(cfg, rt)?;
         let out = t.run()?;
         for &(s, l) in &out.losses {

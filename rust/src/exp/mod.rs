@@ -4,6 +4,7 @@
 //! (default `results/`) and prints the same rows the paper reports.
 //! `ringiwp exp all` runs the whole battery.
 
+pub mod bench;
 pub mod curves;
 pub mod density;
 pub mod figs;

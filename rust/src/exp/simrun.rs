@@ -18,7 +18,7 @@ use crate::metrics::CompressionAccount;
 use crate::model::ParamLayout;
 use crate::net::{LinkSpec, RingNet};
 use crate::ring;
-use crate::ring::Executor;
+use crate::ring::{Arena, Executor};
 use crate::sparse::BitMask;
 use crate::util::rng::Rng;
 
@@ -121,7 +121,13 @@ pub struct SimEngine {
     /// Compression accounting over the whole run.
     pub account: CompressionAccount,
     exec: Executor,
+    arena: Arena,
     imp_scratch: Vec<f32>,
+    /// Per-broadcaster (u, importance) scratch, max-layer sized. Both
+    /// buffers are fully overwritten before every read (`fill_u` writes
+    /// both branches; `score_and_mask` fills `imp_out` densely), so
+    /// reuse is bit-identical to fresh allocation.
+    score_scratch: Vec<(Vec<f32>, Vec<f32>)>,
     grads: Vec<Vec<f32>>,
 }
 
@@ -169,7 +175,15 @@ impl SimEngine {
             ctl_rng: root.split(0xC011),
             account: CompressionAccount::new(),
             exec: Executor::new(cfg.parallelism),
+            arena: Arena::for_nodes(cfg.nodes),
             imp_scratch: vec![0.0; total],
+            score_scratch: {
+                let max_layer = layout.layers().iter().map(|l| l.size).max().unwrap_or(0);
+                let broadcasters = cfg.mask_nodes.min(cfg.nodes.min(Self::SIM_NODE_CAP));
+                (0..broadcasters)
+                    .map(|_| (vec![1.0; max_layer], vec![0.0; max_layer]))
+                    .collect()
+            },
             grads: vec![vec![0.0; total]; cfg.nodes.min(Self::SIM_NODE_CAP)],
             policy,
             warmup,
@@ -186,6 +200,12 @@ impl SimEngine {
     /// The virtual ring network (byte counters, clock, traces).
     pub fn net(&self) -> &RingNet {
         &self.net
+    }
+
+    /// The staging arena behind the reduce paths (DESIGN.md §9); exposes
+    /// the (re)allocation counter the zero-alloc steady-state tests pin.
+    pub fn arena(&self) -> &Arena {
+        &self.arena
     }
 
     /// The synthetic weight buffer importance is scored against.
@@ -246,17 +266,11 @@ impl SimEngine {
             Method::Baseline => {
                 // Account-only dense ring (moving 61M f32 per node through
                 // the data path buys nothing here; bytes are exact).
-                let n = self.cfg.nodes;
-                let chunk_bytes: Vec<u64> = ring::chunk_ranges(self.layout.total_params(), n)
-                    .iter()
-                    .map(|r| (r.len() * 4) as u64)
-                    .collect();
-                for r in 0..2 * (n - 1) {
-                    let sends: Vec<u64> = (0..n)
-                        .map(|i| chunk_bytes[(i + n - (r % n)) % n])
-                        .collect();
-                    self.net.round(&sends);
-                }
+                ring::dense::rounds_bytes_only(
+                    &mut self.net,
+                    self.layout.total_params(),
+                    &mut self.arena,
+                );
                 (self.dense_ref_bytes(), self.layout.dense_bytes(), 1.0)
             }
             Method::TernGrad => {
@@ -264,7 +278,7 @@ impl SimEngine {
                 // representative encoding prices every node's blob.
                 let n = self.cfg.nodes;
                 let t = TernGrad::encode(&self.grads[0], &self.layout, &mut self.rngs[0]);
-                let blobs = vec![t.wire_bytes(); n];
+                let blob = t.wire_bytes();
                 let before = self.net.node_tx_bytes(0);
                 // Ternary values are not closed under addition, so a ring
                 // cannot scatter-REDUCE them — the quantized blobs must
@@ -272,8 +286,17 @@ impl SimEngine {
                 // alone does not help rings (the paper's Sec. II point);
                 // the payload ratio below is TernGrad's native
                 // parameter-server number.
-                self.net.allgather(&blobs);
-                (self.net.node_tx_bytes(0) - before, t.wire_bytes(), 1.0)
+                {
+                    let Arena {
+                        grows,
+                        mk_blobs,
+                        ag_sends,
+                        ..
+                    } = &mut self.arena;
+                    let blobs = (0..n).map(|_| blob);
+                    Arena::allgather_into(&mut self.net, grows, mk_blobs, ag_sends, blobs);
+                }
+                (self.net.node_tx_bytes(0) - before, blob, 1.0)
             }
             Method::Dgc => {
                 let density =
@@ -306,10 +329,11 @@ impl SimEngine {
                         m
                     },
                 ));
-                let rep = ring::sparse::allreduce_support_exec(
+                let rep = ring::sparse::allreduce_support_in(
                     &mut self.net,
                     &supports,
                     &self.exec,
+                    &mut self.arena,
                 );
                 // Paper-metric payload: each node's own encoded top-k.
                 let payload = crate::sparse::wire_bytes(
@@ -345,11 +369,11 @@ impl SimEngine {
                     .choose_distinct(sim_nodes, self.cfg.mask_nodes.min(sim_nodes));
                 let total = self.layout.total_params();
                 // Each broadcaster scores independently: its RNG stream is
-                // cloned out, scoring runs with broadcaster-local scratch
-                // (layer-sized, filled in layer order — the same draw
-                // sequence as one flat fill), and the stream is written
-                // back so cross-step RNG evolution matches the sequential
-                // path exactly.
+                // cloned out, scoring runs with a warm broadcaster-local
+                // scratch slot (layer-sized windows, filled in layer
+                // order — the same draw sequence as one flat fill), and
+                // the stream is written back so cross-step RNG evolution
+                // matches the sequential path exactly.
                 let mut brngs: Vec<Rng> =
                     broadcasters.iter().map(|&b| self.rngs[b].clone()).collect();
                 let stores = &self.stores;
@@ -357,12 +381,13 @@ impl SimEngine {
                 let layout = &self.layout;
                 let bidx = &broadcasters;
                 let random_select = self.cfg.random_select;
-                let max_layer = layout.layers().iter().map(|l| l.size).max().unwrap_or(0);
-                let scored: Vec<(BitMask, Vec<LayerStats>)> =
-                    self.exec.map_mut(&mut brngs, |bi, rng| {
+                let n_bcast = broadcasters.len();
+                let scored: Vec<(BitMask, Vec<LayerStats>)> = self.exec.map_mut2(
+                    &mut brngs,
+                    &mut self.score_scratch[..n_bcast],
+                    |bi, rng, scratch| {
+                        let (u, imp) = scratch;
                         let pending = stores[bidx[bi]].pending();
-                        let mut u = vec![1.0f32; max_layer];
-                        let mut imp = vec![0.0f32; max_layer];
                         let mut mask = BitMask::zeros(total);
                         let mut stats = Vec::with_capacity(layout.n_layers());
                         for (li, layer) in layout.layers().iter().enumerate() {
@@ -384,7 +409,8 @@ impl SimEngine {
                             stats.push(st);
                         }
                         (mask, stats)
-                    });
+                    },
+                );
                 for (bi, &b) in broadcasters.iter().enumerate() {
                     self.rngs[b] = brngs[bi].clone();
                 }
@@ -400,8 +426,11 @@ impl SimEngine {
                 }
                 self.prev_stats = new_stats;
                 let mask_refs: Vec<&BitMask> = masks.iter().collect();
-                let (shared, rep) =
-                    ring::masked::allreduce_bytes_only(&mut self.net, &mask_refs);
+                let (shared, rep) = ring::masked::allreduce_bytes_only_in(
+                    &mut self.net,
+                    &mask_refs,
+                    &mut self.arena,
+                );
                 let shared_ref = &shared;
                 self.exec.map_mut(&mut self.stores, |_, store| {
                     let _ = store.take_masked(shared_ref);

@@ -87,12 +87,14 @@ pub fn run(rt: Option<&Runtime>, out_dir: &str, steps: usize, seed: u64) -> anyh
             &["random_select", "eval_acc", "eval_loss", "compress_ratio"],
         )?;
         for random_select in [true, false] {
-            let mut cfg = Config::default();
-            cfg.method = Method::IwpFixed;
-            cfg.steps = 80;
-            cfg.seed = seed;
-            cfg.threshold = 200.0; // see table1::accuracy_rows on scaling
-            cfg.random_select = random_select;
+            let cfg = Config {
+                method: Method::IwpFixed,
+                steps: 80,
+                seed,
+                threshold: 200.0, // see table1::accuracy_rows on scaling
+                random_select,
+                ..Config::default()
+            };
             let mut t = Trainer::new(cfg, rt)?;
             let out = t.run()?;
             println!(

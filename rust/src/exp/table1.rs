@@ -72,17 +72,20 @@ pub fn accuracy_rows(
             Method::IwpFixed,
             Method::IwpLayerwise,
         ] {
-            let mut cfg = Config::default();
-            cfg.model = model.into();
-            cfg.method = method;
-            cfg.steps = steps;
-            cfg.seed = seed;
-            cfg.nodes = 4;
-            // Real small models early in training have importance values
-            // O(1-10) (large gradients vs freshly-initialized weights);
-            // the IWP threshold scales accordingly (the paper's 0.005-0.1
-            // regime corresponds to ImageNet steady-state gradients).
-            cfg.threshold = 200.0;
+            let cfg = Config {
+                model: model.into(),
+                method,
+                steps,
+                seed,
+                nodes: 4,
+                // Real small models early in training have importance
+                // values O(1-10) (large gradients vs freshly-initialized
+                // weights); the IWP threshold scales accordingly (the
+                // paper's 0.005-0.1 regime corresponds to ImageNet
+                // steady-state gradients).
+                threshold: 200.0,
+                ..Config::default()
+            };
             let mut t = Trainer::new(cfg, rt)?;
             let out = t.run()?;
             rows.push((

@@ -4,6 +4,7 @@
 //! Subcommands:
 //!   train   — run the N-node simulated-ring trainer on a real model
 //!   exp     — regenerate a paper table/figure (table1, fig2, …, all)
+//!   bench   — emit machine-readable BENCH_*.json perf payloads
 //!   info    — show artifacts, platform, model inventories
 //!   help    — this text
 
@@ -32,6 +33,14 @@ SUBCOMMANDS:
                   --out DIR (default results/) --steps N --nodes N --seed N
                   (env RINGIWP_PARALLELISM=W widens the sim executor;
                    results are bit-identical at any width)
+    bench       run the in-process perf harness (exp::bench) and emit
+                schema-versioned BENCH_ring.json / BENCH_step.json:
+                  --out DIR (default .) --quick --no-timing --repeats N
+                  --ring-sizes 4,8,32,96 --seed N
+                  --baseline FILE   gate ns/op + determinism against a
+                                    checked-in baseline (bench/baseline.json)
+                  --diff DIR_A DIR_B  compare two output dirs' payloads
+                                    modulo volatile fields (exit 1 on drift)
     info        list artifacts, PJRT platform, zoo inventories
     help        print this message
 
@@ -87,6 +96,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(args),
         Some("exp") => cmd_exp(args),
+        Some("bench") => cmd_bench(args),
         Some("info") => cmd_info(args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -199,6 +209,112 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     } else {
         run_one(&id, rt.as_ref())
     }
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    use ringiwp::exp::bench::{run_ring, run_step, BenchCfg};
+    use ringiwp::metrics::bench::{canonical, compare, commit};
+    use ringiwp::util::json;
+
+    // Diff mode: compare two output directories' payloads modulo the
+    // volatile fields (the CI determinism check).
+    if let Some(dir_a) = args.str_opt("diff") {
+        let dir_b = args
+            .positional
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("bench --diff needs two directories"))?;
+        let mut drift = false;
+        for name in ["BENCH_ring.json", "BENCH_step.json"] {
+            let a = json::parse(&std::fs::read_to_string(format!("{dir_a}/{name}"))?)
+                .map_err(|e| anyhow::anyhow!("{dir_a}/{name}: {e}"))?;
+            let b = json::parse(&std::fs::read_to_string(format!("{dir_b}/{name}"))?)
+                .map_err(|e| anyhow::anyhow!("{dir_b}/{name}: {e}"))?;
+            if canonical(&a) == canonical(&b) {
+                println!("{name}: identical modulo volatile fields");
+            } else {
+                eprintln!("{name}: DETERMINISM DRIFT between {dir_a} and {dir_b}");
+                drift = true;
+            }
+        }
+        anyhow::ensure!(!drift, "bench payloads are not deterministic");
+        return Ok(());
+    }
+
+    let mut cfg = BenchCfg {
+        quick: args.switch("quick"),
+        timing: !args.switch("no-timing"),
+        repeats: args.usize_or("repeats", 3).max(1),
+        seed: args.u64_or("seed", 42),
+        ..Default::default()
+    };
+    if let Some(sizes) = args.str_opt("ring-sizes") {
+        cfg.ring_sizes = sizes
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("--ring-sizes expects integers, got `{s}`"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(
+            cfg.ring_sizes.iter().all(|&n| n >= 2),
+            "--ring-sizes entries must be >= 2"
+        );
+    }
+    let out = args.str_or("out", ".");
+    std::fs::create_dir_all(&out)?;
+
+    println!(
+        "bench: profile={} timing={} repeats={} rings={:?} commit={}",
+        cfg.profile(),
+        cfg.timing,
+        cfg.repeats,
+        cfg.ring_sizes,
+        commit()
+    );
+    let ring = run_ring(&cfg);
+    let ring_path = format!("{out}/BENCH_ring.json");
+    ring.write(&ring_path)?;
+    println!("wrote {ring_path} ({} rows)", ring.len());
+    let step = run_step(&cfg);
+    let step_path = format!("{out}/BENCH_step.json");
+    step.write(&step_path)?;
+    println!("wrote {step_path} ({} rows)", step.len());
+
+    // Regression gate against a checked-in baseline.
+    if let Some(baseline_path) = args.str_opt("baseline") {
+        let text = std::fs::read_to_string(baseline_path)?;
+        let baseline = json::parse(&text).map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
+        let max_regression = baseline.get("max_regression").as_f64().unwrap_or(0.2);
+        let mut failures = Vec::new();
+        for (section, current) in [("ring", ring.to_json()), ("step", step.to_json())] {
+            let base = baseline.get(section);
+            if matches!(base, json::Json::Null) {
+                println!(
+                    "baseline `{section}` section is null — gate skipped (seed it from a \
+                     trusted CI run's BENCH_{section}.json artifact; see EXPERIMENTS.md §6)"
+                );
+                continue;
+            }
+            failures.extend(
+                compare(base, &current, max_regression)
+                    .into_iter()
+                    .map(|f| format!("[{section}] {f}")),
+            );
+        }
+        if failures.is_empty() {
+            println!(
+                "regression gate vs {baseline_path}: PASS (max ns/op regression {:.0}%)",
+                max_regression * 100.0
+            );
+        } else {
+            for f in &failures {
+                eprintln!("REGRESSION: {f}");
+            }
+            anyhow::bail!("{} bench regression(s) vs {baseline_path}", failures.len());
+        }
+    }
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {

@@ -1,0 +1,340 @@
+//! Schema-versioned machine-readable bench payloads — the `BENCH_*.json`
+//! substrate behind the perf-regression CI gate (DESIGN.md §9,
+//! EXPERIMENTS.md §6).
+//!
+//! A payload is a single JSON object: `schema_version`, `name`,
+//! provenance (`commit`, `timestamp`), the harness `config`, and a flat
+//! `rows` array. Every row carries a unique `id` plus a mix of
+//! *deterministic* fields (bytes on the wire, virtual seconds, densities
+//! — pure functions of config and seed) and *volatile* fields (measured
+//! `ns_op` wall time). [`canonical`] strips the volatile set so two runs
+//! of the same commit compare equal byte-for-byte; [`compare`] gates a
+//! current payload against a checked-in baseline: hard-fails on any
+//! deterministic drift and on `ns_op` regressions beyond the allowed
+//! fraction.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Version of the `BENCH_*.json` schema this crate emits.
+pub const SCHEMA_VERSION: usize = 1;
+
+/// Fields [`canonical`] strips before determinism comparisons: measured
+/// wall time and provenance. Everything else must replay bit-for-bit.
+pub const VOLATILE_FIELDS: [&str; 3] = ["ns_op", "commit", "timestamp"];
+
+/// An in-flight bench payload; build rows with [`BenchReport::push`],
+/// serialize with [`BenchReport::to_json`] / [`BenchReport::write`].
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    name: String,
+    config: Json,
+    rows: Vec<Json>,
+}
+
+impl BenchReport {
+    /// Start a payload named `name` (e.g. `"ring"`, `"step"`) under the
+    /// given harness `config` object.
+    pub fn new(name: &str, config: Json) -> Self {
+        BenchReport {
+            name: name.to_string(),
+            config,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append one row. Rows must carry a unique `"id"` string —
+    /// [`compare`] matches baseline rows by it.
+    pub fn push(&mut self, row: Json) {
+        debug_assert!(
+            row.get("id").as_str().is_some(),
+            "bench rows must carry an `id`"
+        );
+        self.rows.push(row);
+    }
+
+    /// Number of rows so far.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no rows were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// The full schema-versioned payload, provenance stamped from the
+    /// environment ([`commit`], [`timestamp`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::from(SCHEMA_VERSION)),
+            ("name", Json::from(self.name.as_str())),
+            ("commit", Json::from(commit().as_str())),
+            ("timestamp", Json::from(timestamp() as f64)),
+            ("config", self.config.clone()),
+            ("rows", Json::Arr(self.rows.clone())),
+        ])
+    }
+
+    /// Serialize to `path` (single-line JSON, trailing newline).
+    pub fn write(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))?;
+        Ok(())
+    }
+}
+
+/// Commit id for payload provenance: `RINGIWP_COMMIT`, else the CI's
+/// `GITHUB_SHA`, else `"unknown"` (no subprocess spawning — the harness
+/// must run identically inside and outside git checkouts).
+pub fn commit() -> String {
+    std::env::var("RINGIWP_COMMIT")
+        .or_else(|_| std::env::var("GITHUB_SHA"))
+        .unwrap_or_else(|_| "unknown".to_string())
+}
+
+/// Seconds since the Unix epoch (payload provenance only — stripped by
+/// [`canonical`]).
+pub fn timestamp() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Deep-copy `v` with every [`VOLATILE_FIELDS`] key removed, at any
+/// nesting depth. Two runs of the same commit+config must produce equal
+/// canonical payloads — the determinism contract CI enforces.
+pub fn canonical(v: &Json) -> Json {
+    match v {
+        Json::Obj(o) => {
+            let mut out = BTreeMap::new();
+            for (k, val) in o {
+                if !VOLATILE_FIELDS.contains(&k.as_str()) {
+                    out.insert(k.clone(), canonical(val));
+                }
+            }
+            Json::Obj(out)
+        }
+        Json::Arr(a) => Json::Arr(a.iter().map(canonical).collect()),
+        other => other.clone(),
+    }
+}
+
+fn rows_by_id(payload: &Json) -> BTreeMap<String, &Json> {
+    let mut out = BTreeMap::new();
+    if let Some(rows) = payload.get("rows").as_arr() {
+        for row in rows {
+            if let Some(id) = row.get("id").as_str() {
+                out.insert(id.to_string(), row);
+            }
+        }
+    }
+    out
+}
+
+/// Gate `current` against `baseline` (both full `BENCH_*` payloads).
+/// Returns human-readable failures, empty when the gate passes:
+///
+/// * a baseline row missing from `current` — coverage regressed;
+/// * any *deterministic* row field (everything but [`VOLATILE_FIELDS`])
+///   differing — the payload is supposed to replay bit-for-bit, so this
+///   is either nondeterminism or an unacknowledged behaviour change
+///   (re-baseline deliberately when the change is intended);
+/// * `ns_op` above `baseline * (1 + max_regression)` — a perf
+///   regression.
+///
+/// Rows present only in `current` are allowed (new coverage never
+/// fails the gate). Schema-version and config-profile mismatches fail
+/// loudly rather than comparing apples to oranges.
+pub fn compare(baseline: &Json, current: &Json, max_regression: f64) -> Vec<String> {
+    let mut failures = Vec::new();
+    let (bv, cv) = (
+        baseline.get("schema_version").as_usize(),
+        current.get("schema_version").as_usize(),
+    );
+    if bv != cv {
+        failures.push(format!("schema_version mismatch: baseline {bv:?} vs current {cv:?}"));
+        return failures;
+    }
+    let (bp, cp) = (
+        baseline.get("config").get("profile").as_str().unwrap_or(""),
+        current.get("config").get("profile").as_str().unwrap_or(""),
+    );
+    if bp != cp {
+        failures.push(format!(
+            "config profile mismatch: baseline `{bp}` vs current `{cp}` — reseed the baseline"
+        ));
+        return failures;
+    }
+
+    let base_rows = rows_by_id(baseline);
+    let cur_rows = rows_by_id(current);
+    let mut ns_gated = 0usize;
+    for (id, brow) in &base_rows {
+        let Some(crow) = cur_rows.get(id) else {
+            failures.push(format!("row `{id}`: present in baseline, missing from current"));
+            continue;
+        };
+        // Deterministic fields must replay exactly.
+        let (bc, cc) = (canonical(brow), canonical(crow));
+        if bc != cc {
+            failures.push(format!(
+                "row `{id}`: deterministic fields drifted (baseline {bc} vs current {cc})"
+            ));
+        }
+        // Volatile ns_op gates on relative regression.
+        if let (Some(b_ns), Some(c_ns)) =
+            (brow.get("ns_op").as_f64(), crow.get("ns_op").as_f64())
+        {
+            ns_gated += 1;
+            if b_ns > 0.0 && c_ns > b_ns * (1.0 + max_regression) {
+                failures.push(format!(
+                    "row `{id}`: ns_op regressed {:.1}% ({b_ns:.0} -> {c_ns:.0} ns, \
+                     gate {:.0}%)",
+                    (c_ns / b_ns - 1.0) * 100.0,
+                    max_regression * 100.0
+                ));
+            }
+        }
+    }
+    // A perf gate that compared zero timings is vacuous — fail loudly
+    // rather than print PASS having verified nothing (happens when the
+    // baseline was seeded from a --no-timing payload, or the current run
+    // passed --no-timing alongside --baseline).
+    if !base_rows.is_empty() && ns_gated == 0 {
+        failures.push(
+            "no ns_op rows compared: baseline or current payload lacks timing — re-seed \
+             the baseline from a timed run, or drop --baseline for deterministic-only \
+             checks"
+                .to_string(),
+        );
+    }
+    failures
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn row(id: &str, ns: f64, bytes: f64) -> Json {
+        Json::obj(vec![
+            ("id", Json::from(id)),
+            ("ns_op", Json::Num(ns)),
+            ("bytes_per_node", Json::Num(bytes)),
+        ])
+    }
+
+    fn payload(rows: Vec<Json>) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::from(SCHEMA_VERSION)),
+            ("name", Json::from("ring")),
+            ("commit", Json::from("abc")),
+            ("timestamp", Json::Num(1.0)),
+            (
+                "config",
+                Json::obj(vec![("profile", Json::from("quick"))]),
+            ),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
+    #[test]
+    fn canonical_strips_volatile_fields_everywhere() {
+        let p = payload(vec![row("a", 100.0, 64.0)]);
+        let c = canonical(&p);
+        assert_eq!(c.get("commit"), &Json::Null);
+        assert_eq!(c.get("timestamp"), &Json::Null);
+        let rows = c.get("rows").as_arr().unwrap();
+        assert_eq!(rows[0].get("ns_op"), &Json::Null);
+        assert_eq!(rows[0].get("bytes_per_node").as_f64(), Some(64.0));
+    }
+
+    #[test]
+    fn canonical_equates_same_run_different_provenance() {
+        let a = payload(vec![row("a", 100.0, 64.0)]);
+        let mut b = payload(vec![row("a", 250.0, 64.0)]);
+        if let Json::Obj(o) = &mut b {
+            o.insert("commit".into(), Json::from("def"));
+            o.insert("timestamp".into(), Json::Num(9.0));
+        }
+        assert_eq!(canonical(&a), canonical(&b));
+    }
+
+    #[test]
+    fn compare_passes_within_gate_and_fails_beyond() {
+        let base = payload(vec![row("a", 1000.0, 64.0)]);
+        let ok = payload(vec![row("a", 1150.0, 64.0)]);
+        assert!(compare(&base, &ok, 0.2).is_empty());
+        let slow = payload(vec![row("a", 1300.0, 64.0)]);
+        let fails = compare(&base, &slow, 0.2);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("regressed"), "{fails:?}");
+    }
+
+    #[test]
+    fn compare_fails_on_deterministic_drift_and_missing_rows() {
+        let base = payload(vec![row("a", 1000.0, 64.0), row("b", 1.0, 8.0)]);
+        let drifted = payload(vec![row("a", 1000.0, 65.0)]);
+        let fails = compare(&base, &drifted, 0.2);
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        assert!(fails.iter().any(|f| f.contains("drifted")));
+        assert!(fails.iter().any(|f| f.contains("missing")));
+        // New rows in current never fail the gate.
+        let grown = payload(vec![row("a", 1000.0, 64.0), row("b", 1.0, 8.0), row("c", 1.0, 1.0)]);
+        assert!(compare(&base, &grown, 0.2).is_empty());
+    }
+
+    #[test]
+    fn compare_fails_when_no_timings_were_compared() {
+        fn quiet_row(id: &str, bytes: f64) -> Json {
+            Json::obj(vec![
+                ("id", Json::from(id)),
+                ("bytes_per_node", Json::Num(bytes)),
+            ])
+        }
+        // Baseline seeded without timing: the gate must not report PASS.
+        let base = payload(vec![quiet_row("a", 64.0)]);
+        let cur = payload(vec![row("a", 100.0, 64.0)]);
+        let fails = compare(&base, &cur, 0.2);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("no ns_op rows compared"));
+        // Current run without timing: same vacuity failure.
+        let base = payload(vec![row("a", 100.0, 64.0)]);
+        let cur = payload(vec![quiet_row("a", 64.0)]);
+        let fails = compare(&base, &cur, 0.2);
+        assert!(fails.iter().any(|f| f.contains("no ns_op rows compared")), "{fails:?}");
+    }
+
+    #[test]
+    fn compare_fails_loudly_on_profile_mismatch() {
+        let base = payload(vec![row("a", 1.0, 1.0)]);
+        let mut cur = payload(vec![row("a", 1.0, 1.0)]);
+        if let Json::Obj(o) = &mut cur {
+            o.insert(
+                "config".into(),
+                Json::obj(vec![("profile", Json::from("full"))]),
+            );
+        }
+        let fails = compare(&base, &cur, 0.2);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("profile mismatch"));
+    }
+
+    #[test]
+    fn report_serializes_with_schema_and_roundtrips() {
+        let mut rep = BenchReport::new(
+            "ring",
+            Json::obj(vec![("profile", Json::from("quick"))]),
+        );
+        rep.push(row("dense/n4", 5.0, 10.0));
+        assert_eq!(rep.len(), 1);
+        assert!(!rep.is_empty());
+        let j = rep.to_json();
+        assert_eq!(j.get("schema_version").as_usize(), Some(SCHEMA_VERSION));
+        assert_eq!(j.get("name").as_str(), Some("ring"));
+        let reparsed = parse(&j.to_string()).unwrap();
+        assert_eq!(canonical(&reparsed), canonical(&j));
+    }
+}

@@ -1,7 +1,10 @@
-//! Experiment metrics: loss/accuracy series, compression accounting, CSV.
+//! Experiment metrics: loss/accuracy series, compression accounting,
+//! CSV, and the schema-versioned `BENCH_*.json` payloads.
 
 pub mod accounting;
+pub mod bench;
 pub mod csv;
 
 pub use accounting::CompressionAccount;
+pub use bench::BenchReport;
 pub use csv::CsvWriter;

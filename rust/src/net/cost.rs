@@ -1,0 +1,267 @@
+//! Closed-form wire-time cost model for ring schedules (DESIGN.md §9).
+//!
+//! [`RingNet`](super::RingNet) *executes* schedules round by round;
+//! this module *predicts* the same byte and virtual-time totals from
+//! the link parameters alone. Time predictions accumulate per-round
+//! durations in the exact order the simulator advances its clock, so
+//! for the uniform schedules (dense, masked, allgather) the prediction
+//! equals the simulated clock **to the last bit** — cross-validated in
+//! the tests here and in `exp::bench`, whose `BENCH_*.json` rows carry
+//! both numbers as a built-in sanity check. For the sparse DGC schedule
+//! (data-dependent densification) the model uses the paper's
+//! independence approximation and is an estimate, not an oracle.
+
+use super::LinkSpec;
+use crate::ring::chunk_ranges;
+use crate::sparse::{wire_bytes, WireFormat};
+
+/// Analytic byte/time model of one homogeneous `n`-node ring.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    nodes: usize,
+    link: LinkSpec,
+}
+
+impl CostModel {
+    /// Model an `n`-node ring (`n >= 2`) with homogeneous `link`s.
+    pub fn new(nodes: usize, link: LinkSpec) -> Self {
+        assert!(nodes >= 2, "a ring needs at least 2 nodes");
+        CostModel { nodes, link }
+    }
+
+    /// Ring size N.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// The link parameters this model prices against.
+    pub fn link(&self) -> &LinkSpec {
+        &self.link
+    }
+
+    /// Virtual seconds of one synchronous round whose slowest transfer
+    /// moves `max_bytes` (the paper's "the limit of the system is
+    /// determined only by the slowest connection").
+    pub fn round_seconds(&self, max_bytes: u64) -> f64 {
+        self.link.transfer_time(max_bytes)
+    }
+
+    /// Largest chunk (in bytes) of the balanced partition of `coords`
+    /// f32 coordinates — every dense round is paced by it.
+    fn max_chunk_bytes(&self, coords: usize) -> u64 {
+        let n = self.nodes;
+        ((coords / n + usize::from(coords % n != 0)) * 4) as u64
+    }
+
+    /// Dense scatter-reduce + allgather: `2(N-1)` rounds, each paced by
+    /// the largest chunk. Matches the simulated clock bit-for-bit.
+    pub fn dense_seconds(&self, coords: usize) -> f64 {
+        if coords == 0 {
+            return 0.0;
+        }
+        let per_round = self.round_seconds(self.max_chunk_bytes(coords));
+        let mut t = 0.0;
+        for _ in 0..2 * (self.nodes - 1) {
+            t += per_round;
+        }
+        t
+    }
+
+    /// Total wire bytes of a dense all-reduce across all nodes: every
+    /// round moves one full rotation of the chunk set.
+    pub fn dense_total_bytes(&self, coords: usize) -> u64 {
+        if coords == 0 {
+            return 0;
+        }
+        2 * (self.nodes as u64 - 1) * (coords as u64) * 4
+    }
+
+    /// Mean per-node wire bytes of a dense all-reduce — the paper's
+    /// `2(N-1)/N · V` constant-cost property.
+    pub fn dense_bytes_per_node(&self, coords: usize) -> f64 {
+        self.dense_total_bytes(coords) as f64 / self.nodes as f64
+    }
+
+    /// Ring allgather of `k` equal `blob_bytes` blobs (zero blobs on the
+    /// other nodes): `N-1` rounds, each paced by one blob (when `k >= 1`).
+    /// Matches the simulated clock bit-for-bit.
+    pub fn allgather_seconds(&self, blob_bytes: u64, k: usize) -> f64 {
+        let per_round = if k == 0 {
+            0.0
+        } else {
+            self.round_seconds(blob_bytes)
+        };
+        let mut t = 0.0;
+        for _ in 0..self.nodes - 1 {
+            t += per_round;
+        }
+        t
+    }
+
+    /// Total allgather bytes: each of the `k` blobs crosses `N-1` links.
+    pub fn allgather_total_bytes(&self, blob_bytes: u64, k: usize) -> u64 {
+        blob_bytes * k.min(self.nodes) as u64 * (self.nodes as u64 - 1)
+    }
+
+    /// Algorithm 1's masked schedule: allgather of `k` broadcaster masks
+    /// over `coords` coordinates, then dense value rounds over the
+    /// `support`-coordinate compacted vectors. Accumulates round by
+    /// round in the simulator's clock order (not phase-by-phase — f64
+    /// addition does not reassociate), so it matches the simulated clock
+    /// bit-for-bit.
+    pub fn masked_seconds(&self, coords: usize, k: usize, support: usize) -> f64 {
+        let mask_bytes = (coords.div_ceil(8)) as u64;
+        let mut t = self.allgather_seconds(mask_bytes, k);
+        if support > 0 {
+            let per_round = self.round_seconds(self.max_chunk_bytes(support));
+            for _ in 0..2 * (self.nodes - 1) {
+                t += per_round;
+            }
+        }
+        t
+    }
+
+    /// Total wire bytes of the masked schedule.
+    pub fn masked_total_bytes(&self, coords: usize, k: usize, support: usize) -> u64 {
+        let mask_bytes = (coords.div_ceil(8)) as u64;
+        self.allgather_total_bytes(mask_bytes, k) + self.dense_total_bytes(support)
+    }
+
+    /// Estimated seconds of the sparse (DGC-on-a-ring) scatter-reduce +
+    /// allgather at per-node density `d0`, under the independence
+    /// approximation `d_h = 1 - (1 - d0)^(h+1)` (the paper's Sec. II
+    /// densification model). An estimate: actual supports are random.
+    pub fn sparse_seconds_estimate(&self, coords: usize, d0: f64) -> f64 {
+        let n = self.nodes;
+        let chunks = chunk_ranges(coords, n);
+        let max_chunk = chunks.iter().map(|c| c.len()).max().unwrap_or(0);
+        let seg_bytes = |chunk: usize, d: f64| -> u64 {
+            let nnz = ((chunk as f64 * d).round() as usize).min(chunk);
+            wire_bytes(WireFormat::cheapest(chunk, nnz), chunk, nnz)
+        };
+        let mut t = 0.0;
+        // Scatter hop r sends segments that have absorbed r+1 supports.
+        for r in 0..n - 1 {
+            let d = 1.0 - (1.0 - d0).powi(r as i32 + 1);
+            t += self.round_seconds(seg_bytes(max_chunk, d));
+        }
+        // Allgather at the final density.
+        let d_final = 1.0 - (1.0 - d0).powi(n as i32);
+        for _ in 0..n - 1 {
+            t += self.round_seconds(seg_bytes(max_chunk, d_final));
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::RingNet;
+    use crate::ring;
+    use crate::sparse::{BitMask, SparseVec};
+    use crate::util::rng::Rng;
+
+    fn link() -> LinkSpec {
+        LinkSpec::gigabit_ethernet()
+    }
+
+    #[test]
+    fn dense_prediction_matches_simulation_bit_for_bit() {
+        for (n, len) in [(2usize, 100usize), (4, 1000), (7, 12345), (8, 4096)] {
+            let model = CostModel::new(n, link());
+            let mut net = RingNet::new(n, link(), 1.0);
+            let mut bufs = vec![vec![1.0f32; len]; n];
+            let rep = ring::dense::allreduce(&mut net, &mut bufs);
+            assert_eq!(
+                model.dense_seconds(len).to_bits(),
+                rep.seconds.to_bits(),
+                "n={n} len={len}: {} vs {}",
+                model.dense_seconds(len),
+                rep.seconds
+            );
+            assert_eq!(model.dense_total_bytes(len), rep.total_bytes());
+        }
+    }
+
+    #[test]
+    fn masked_prediction_matches_simulation_bit_for_bit() {
+        let (n, len) = (6usize, 20_000usize);
+        let mut rng = Rng::new(5);
+        let mut mask = BitMask::zeros(len);
+        for _ in 0..300 {
+            mask.set(rng.below(len));
+        }
+        let values: Vec<Vec<f32>> = (0..n).map(|_| vec![0.5f32; len]).collect();
+        let refs: Vec<&[f32]> = values.iter().map(|v| v.as_slice()).collect();
+        let mut net = RingNet::new(n, link(), 1.0);
+        let (shared, _, rep) = ring::masked::allreduce(&mut net, &[&mask], &refs);
+        let model = CostModel::new(n, link());
+        let predicted = model.masked_seconds(len, 1, shared.count());
+        assert_eq!(
+            predicted.to_bits(),
+            rep.seconds.to_bits(),
+            "{predicted} vs {}",
+            rep.seconds
+        );
+        assert_eq!(
+            model.masked_total_bytes(len, 1, shared.count()),
+            rep.total_bytes()
+        );
+    }
+
+    #[test]
+    fn allgather_prediction_matches_simulation() {
+        let n = 5;
+        let model = CostModel::new(n, link());
+        let mut net = RingNet::new(n, link(), 1.0);
+        let blobs = vec![700u64; n];
+        let t = net.allgather(&blobs);
+        assert_eq!(model.allgather_seconds(700, n).to_bits(), t.to_bits());
+        assert_eq!(model.allgather_total_bytes(700, n), net.total_bytes());
+    }
+
+    #[test]
+    fn sparse_estimate_is_in_the_simulated_ballpark() {
+        let (n, len, d0) = (8usize, 40_000usize, 0.01f64);
+        let mut rng = Rng::new(2);
+        let inputs: Vec<SparseVec> = (0..n)
+            .map(|_| {
+                let mut dense = vec![0.0f32; len];
+                for v in dense.iter_mut() {
+                    if (rng.uniform() as f64) < d0 {
+                        *v = rng.normal();
+                    }
+                }
+                SparseVec::from_dense(&dense)
+            })
+            .collect();
+        let mut net = RingNet::new(n, link(), 1.0);
+        let (_, rep) = ring::sparse::allreduce(&mut net, &inputs);
+        let est = CostModel::new(n, link()).sparse_seconds_estimate(len, d0);
+        assert!(
+            est > rep.seconds * 0.4 && est < rep.seconds * 2.5,
+            "estimate {est} vs simulated {}",
+            rep.seconds
+        );
+    }
+
+    #[test]
+    fn model_scales_with_link_and_ring() {
+        let slow = CostModel::new(8, LinkSpec::new(1e6, 0.0));
+        let fast = CostModel::new(8, LinkSpec::new(1e9, 0.0));
+        assert!(slow.dense_seconds(10_000) > fast.dense_seconds(10_000) * 100.0);
+        let small = CostModel::new(4, link());
+        let big = CostModel::new(96, link());
+        // Per-node dense cost is near-constant in N (the ring property).
+        let per_node_small = small.dense_bytes_per_node(1_000_000);
+        let per_node_big = big.dense_bytes_per_node(1_000_000);
+        assert!((per_node_small / per_node_big - 1.0).abs() < 0.35);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2")]
+    fn rejects_degenerate_ring() {
+        let _ = CostModel::new(1, link());
+    }
+}

@@ -14,9 +14,11 @@
 //! * per-node transmit traces are bucketed over virtual time to produce
 //!   the KB/s plots of Figs. 7/8.
 
+pub mod cost;
 pub mod link;
 pub mod trace;
 
+pub use cost::CostModel;
 pub use link::LinkSpec;
 pub use trace::Trace;
 
@@ -141,13 +143,19 @@ impl RingNet {
     /// forwards the blob originated by node (i - r). Returns total time.
     /// (This is Algorithm 1's mask AllGather when blobs are bitmask bytes.)
     pub fn allgather(&mut self, blob_bytes: &[u64]) -> f64 {
+        self.allgather_with(blob_bytes, &mut Vec::new())
+    }
+
+    /// [`RingNet::allgather`] with a caller-owned per-round send buffer
+    /// (arena reuse: the steady-state engines allgather every step and
+    /// the per-round rotation table is their only residual allocation).
+    pub fn allgather_with(&mut self, blob_bytes: &[u64], sends: &mut Vec<u64>) -> f64 {
         assert_eq!(blob_bytes.len(), self.n);
         let mut total = 0.0;
         for r in 0..self.n - 1 {
-            let sends: Vec<u64> = (0..self.n)
-                .map(|i| blob_bytes[(i + self.n - r) % self.n])
-                .collect();
-            total += self.round(&sends);
+            sends.clear();
+            sends.extend((0..self.n).map(|i| blob_bytes[(i + self.n - r) % self.n]));
+            total += self.round(sends);
         }
         total
     }
@@ -229,6 +237,20 @@ mod tests {
         // Every blob crosses N-1 links: total = 3 * (100+200+300+400).
         assert_eq!(net.total_bytes(), 3 * 1000);
         assert_eq!(net.rounds(), 3);
+    }
+
+    #[test]
+    fn allgather_with_reuses_buffer_and_matches() {
+        let mut net_a = RingNet::new(5, gigabit(), 1.0);
+        let t_a = net_a.allgather(&[10, 0, 30, 0, 50]);
+        let mut net_b = RingNet::new(5, gigabit(), 1.0);
+        let mut sends = Vec::new();
+        let t_b = net_b.allgather_with(&[10, 0, 30, 0, 50], &mut sends);
+        assert_eq!(t_a.to_bits(), t_b.to_bits());
+        assert_eq!(net_a.total_bytes(), net_b.total_bytes());
+        let cap = sends.capacity();
+        net_b.allgather_with(&[10, 0, 30, 0, 50], &mut sends);
+        assert_eq!(sends.capacity(), cap, "send buffer must be reused");
     }
 
     #[test]

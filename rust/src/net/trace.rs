@@ -70,10 +70,7 @@ impl Trace {
             .iter()
             .enumerate()
             .map(|(i, b)| {
-                (
-                    i as f64 * self.bucket_s,
-                    b[node] / 1024.0 / self.bucket_s,
-                )
+                (i as f64 * self.bucket_s, b[node] / 1024.0 / self.bucket_s)
             })
             .collect()
     }
@@ -84,10 +81,7 @@ impl Trace {
             .iter()
             .enumerate()
             .map(|(i, b)| {
-                (
-                    i as f64 * self.bucket_s,
-                    b.iter().sum::<f64>() / 1024.0 / self.bucket_s,
-                )
+                (i as f64 * self.bucket_s, b.iter().sum::<f64>() / 1024.0 / self.bucket_s)
             })
             .collect()
     }

@@ -1,0 +1,216 @@
+//! Staging arena for the ring hot paths (DESIGN.md §9).
+//!
+//! Every ring schedule does per-hop buffer work: the dense schedule
+//! stages one chunk copy per node per round, the sparse schedule
+//! extracts and union-merges one travelling segment per node per hop,
+//! the support-only path clones one word block per node per hop, and
+//! the masked schedule compacts every node's values to the shared
+//! support. Before this arena existed each of those was a fresh `Vec`
+//! per hop — O(N) allocations per round, O(N²) per all-reduce — which
+//! dominated the steady-state loop of the big sims.
+//!
+//! The [`Arena`] owns all of that scratch as preallocated per-node
+//! buffers. The `*_in` schedule variants (`ring::dense::allreduce_in`
+//! and friends) thread a caller-owned arena through every hop and refill
+//! buffers in place, so once the arena is warm the sequential reduce
+//! loop performs **zero heap allocations** (with `parallelism > 1` the
+//! executor's fork/join still spawns scoped threads and allocates its
+//! block/handle tables per region — see `ring::exec`; the arena removes
+//! the *data-buffer* churn in every configuration). Reuse is observable:
+//! [`Arena::grows`] counts every internal buffer (re)allocation, and
+//! `tests/parallel_equivalence.rs` pins the counter flat across
+//! steady-state iterations.
+//!
+//! The arena is scratch, not state: no schedule reads a value another
+//! call left behind, so one arena can serve every schedule of an engine
+//! (`SimEngine` and `Trainer` each own exactly one). Buffers are only
+//! ever filled on the coordinating thread or through the executor's
+//! disjoint per-node closures, so the bit-identical parallel contract
+//! (DESIGN.md §4) is unchanged.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sparse::SparseVec;
+
+/// Reusable per-node scratch for the ring schedules (DESIGN.md §9).
+///
+/// Construct once per engine ([`Arena::for_nodes`] pre-sizes the
+/// per-node slot tables) and pass to the `*_in` schedule entry points.
+/// [`Arena::grows`] exposes the internal (re)allocation count so tests
+/// and benches can assert the steady state allocates nothing.
+#[derive(Debug, Default)]
+pub struct Arena {
+    pub(crate) grows: AtomicU64,
+    // -- dense schedule (also the masked schedule's value rounds) --
+    pub(crate) dense_staging: Vec<Vec<f32>>,
+    pub(crate) dense_sends: Vec<u64>,
+    pub(crate) dense_chunks: Vec<Range<usize>>,
+    // -- sparse exact schedule --
+    pub(crate) sp_held: Vec<SparseVec>,
+    pub(crate) sp_next: Vec<SparseVec>,
+    pub(crate) sp_segs: Vec<SparseVec>,
+    pub(crate) sp_sends: Vec<u64>,
+    pub(crate) sp_chunks: Vec<Range<usize>>,
+    // -- support-only sparse schedule --
+    pub(crate) su_held: Vec<Vec<u64>>,
+    pub(crate) su_next: Vec<Vec<u64>>,
+    pub(crate) su_sends: Vec<u64>,
+    pub(crate) su_chunks: Vec<Range<usize>>,
+    // -- masked schedule + ring allgathers --
+    pub(crate) mk_blobs: Vec<u64>,
+    pub(crate) mk_support: Vec<usize>,
+    pub(crate) mk_compact: Vec<Vec<f32>>,
+    pub(crate) mk_chunk_bytes: Vec<u64>,
+    pub(crate) ag_sends: Vec<u64>,
+}
+
+impl Arena {
+    /// An empty arena; every buffer warms up on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An arena with the per-node slot tables pre-sized for an `n`-node
+    /// ring (the inner data buffers still size themselves on the first
+    /// pass — their lengths are payload-dependent). Slot pre-sizing here
+    /// does not count toward [`Arena::grows`].
+    pub fn for_nodes(n: usize) -> Self {
+        let mut a = Arena::new();
+        a.dense_staging.resize_with(n, Vec::new);
+        a.sp_held.resize_with(n, || SparseVec::empty(0));
+        a.sp_next.resize_with(n, || SparseVec::empty(0));
+        a.sp_segs.resize_with(n, || SparseVec::empty(0));
+        a.su_held.resize_with(n, Vec::new);
+        a.su_next.resize_with(n, Vec::new);
+        a.mk_compact.resize_with(n, Vec::new);
+        a.dense_sends.reserve(n);
+        a.sp_sends.reserve(n);
+        a.su_sends.reserve(n);
+        a.mk_blobs.reserve(n);
+        a.mk_chunk_bytes.reserve(n);
+        a.ag_sends.reserve(n);
+        a.dense_chunks.reserve(n);
+        a.sp_chunks.reserve(n);
+        a.su_chunks.reserve(n);
+        a
+    }
+
+    /// Number of internal buffer (re)allocations so far. Flat across
+    /// iterations of a warmed steady-state loop — the zero-alloc
+    /// contract the arena tests pin.
+    pub fn grows(&self) -> u64 {
+        self.grows.load(Ordering::Relaxed)
+    }
+
+    /// Record a (re)allocation event when `grew` is set. Callable from
+    /// executor workers (`&AtomicU64`).
+    #[inline]
+    pub(crate) fn note(grows: &AtomicU64, grew: bool) {
+        if grew {
+            grows.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Refill `buf` from an iterator, reusing its capacity; notes growth.
+    pub(crate) fn refill<T>(grows: &AtomicU64, buf: &mut Vec<T>, src: impl Iterator<Item = T>) {
+        let cap = buf.capacity();
+        buf.clear();
+        buf.extend(src);
+        Self::note(grows, buf.capacity() != cap);
+    }
+
+    /// Refill `buf` from a slice, reusing its capacity. Returns whether
+    /// the buffer had to reallocate (callers inside executor closures
+    /// note it themselves).
+    pub(crate) fn refill_slice<T: Copy>(buf: &mut Vec<T>, src: &[T]) -> bool {
+        let cap = buf.capacity();
+        buf.clear();
+        buf.extend_from_slice(src);
+        buf.capacity() != cap
+    }
+
+    /// Ensure `v` has at least `n` slots (constructed with `mk`),
+    /// keeping any existing slots' warm buffers; notes growth.
+    pub(crate) fn slots<T>(grows: &AtomicU64, v: &mut Vec<T>, n: usize, mk: impl FnMut() -> T) {
+        let cap = v.capacity();
+        if v.len() < n {
+            v.resize_with(n, mk);
+        }
+        Self::note(grows, v.capacity() != cap);
+    }
+
+    /// Ring-allgather `src`'s per-node blob sizes on `net` through the
+    /// arena's blob/send buffers, owning the refill and the growth
+    /// accounting in one place (four call sites share this exact dance).
+    pub(crate) fn allgather_into(
+        net: &mut crate::net::RingNet,
+        grows: &AtomicU64,
+        blobs: &mut Vec<u64>,
+        sends: &mut Vec<u64>,
+        src: impl Iterator<Item = u64>,
+    ) {
+        Self::refill(grows, blobs, src);
+        let cap = sends.capacity();
+        net.allgather_with(blobs, sends);
+        Self::note(grows, sends.capacity() != cap);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refill_reuses_capacity_and_counts_growth() {
+        let grows = AtomicU64::new(0);
+        let mut buf: Vec<u64> = Vec::new();
+        Arena::refill(&grows, &mut buf, 0..16);
+        assert_eq!(buf.len(), 16);
+        let after_warmup = grows.load(Ordering::Relaxed);
+        assert!(after_warmup >= 1, "first fill must count as growth");
+        for _ in 0..10 {
+            Arena::refill(&grows, &mut buf, 0..16);
+        }
+        assert_eq!(grows.load(Ordering::Relaxed), after_warmup);
+        // A strictly larger refill grows again.
+        Arena::refill(&grows, &mut buf, 0..64);
+        assert_eq!(grows.load(Ordering::Relaxed), after_warmup + 1);
+    }
+
+    #[test]
+    fn refill_slice_reports_growth_exactly_once() {
+        let mut buf: Vec<f32> = Vec::new();
+        let src = [1.0f32, 2.0, 3.0];
+        assert!(Arena::refill_slice(&mut buf, &src));
+        assert_eq!(buf, src);
+        assert!(!Arena::refill_slice(&mut buf, &src));
+        assert!(!Arena::refill_slice(&mut buf, &src[..1]));
+        assert_eq!(buf, [1.0]);
+    }
+
+    #[test]
+    fn slots_keeps_existing_and_never_shrinks() {
+        let grows = AtomicU64::new(0);
+        let mut v: Vec<Vec<u8>> = Vec::new();
+        Arena::slots(&grows, &mut v, 4, Vec::new);
+        assert_eq!(v.len(), 4);
+        v[2].push(7); // warm one slot
+        Arena::slots(&grows, &mut v, 2, Vec::new);
+        assert_eq!(v.len(), 4, "slots never shrink");
+        assert_eq!(v[2], vec![7], "warm buffers survive");
+        let g = grows.load(Ordering::Relaxed);
+        Arena::slots(&grows, &mut v, 4, Vec::new);
+        assert_eq!(grows.load(Ordering::Relaxed), g);
+    }
+
+    #[test]
+    fn for_nodes_presizes_without_counting_growth() {
+        let a = Arena::for_nodes(8);
+        assert_eq!(a.grows(), 0);
+        assert_eq!(a.dense_staging.len(), 8);
+        assert_eq!(a.sp_held.len(), 8);
+        assert_eq!(a.mk_compact.len(), 8);
+        assert!(a.dense_sends.capacity() >= 8);
+    }
+}

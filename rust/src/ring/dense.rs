@@ -5,7 +5,10 @@
 //! that makes rings the right substrate for large models, and the
 //! baseline transport whose I/O trace is Fig. 7.
 
-use super::{chunk_ranges, per_node_delta, snapshot, Executor, ReduceReport};
+use std::ops::Range;
+use std::sync::atomic::AtomicU64;
+
+use super::{chunk_ranges_into, per_node_delta, snapshot, Arena, Executor, ReduceReport};
 use crate::net::RingNet;
 
 /// In-place dense all-reduce over every node's buffer. On return every
@@ -20,10 +23,41 @@ pub fn allreduce(net: &mut RingNet, bufs: &mut [Vec<f32>]) -> ReduceReport {
 /// round stages all senders' chunks first (reads), then applies all
 /// receivers' accumulations (writes to disjoint `bufs[dst]`), so neither
 /// phase has cross-node ordering effects.
-pub fn allreduce_exec(
+pub fn allreduce_exec(net: &mut RingNet, bufs: &mut [Vec<f32>], exec: &Executor) -> ReduceReport {
+    allreduce_in(net, bufs, exec, &mut Arena::new())
+}
+
+/// [`allreduce_exec`] against a caller-owned [`Arena`]: the per-round
+/// staging copies and send-size tables live in the arena's reusable
+/// buffers, so the steady-state loop allocates nothing once warm
+/// (DESIGN.md §9). Results are bit-identical to the other entry points.
+pub fn allreduce_in(
     net: &mut RingNet,
     bufs: &mut [Vec<f32>],
     exec: &Executor,
+    arena: &mut Arena,
+) -> ReduceReport {
+    let Arena {
+        grows,
+        dense_staging,
+        dense_sends,
+        dense_chunks,
+        ..
+    } = arena;
+    allreduce_parts(net, bufs, exec, grows, dense_staging, dense_sends, dense_chunks)
+}
+
+/// Core dense schedule over explicit scratch parts, so the masked
+/// schedule can run it on the arena's dense scratch while holding its
+/// own arena fields.
+pub(super) fn allreduce_parts(
+    net: &mut RingNet,
+    bufs: &mut [Vec<f32>],
+    exec: &Executor,
+    grows: &AtomicU64,
+    staging: &mut Vec<Vec<f32>>,
+    sends: &mut Vec<u64>,
+    chunks: &mut Vec<Range<usize>>,
 ) -> ReduceReport {
     let n = net.n_nodes();
     assert_eq!(bufs.len(), n, "one buffer per node");
@@ -36,27 +70,37 @@ pub fn allreduce_exec(
         };
     }
 
-    let chunks = chunk_ranges(len, n);
+    let cap = chunks.capacity();
+    chunk_ranges_into(len, n, chunks);
+    Arena::note(grows, chunks.capacity() != cap);
+    Arena::slots(grows, staging, n, Vec::new);
+    let chunks: &[Range<usize>] = chunks;
     let before = snapshot(net);
     let t0 = net.clock();
 
     // Scatter-reduce: round r, node i sends chunk (i - r) mod n to i+1,
     // which accumulates it into its own copy.
     for r in 0..n - 1 {
-        let sends: Vec<u64> = (0..n)
-            .map(|i| {
+        Arena::refill(
+            grows,
+            sends,
+            (0..n).map(|i| {
                 let c = (i + n - r) % n;
                 (chunks[c].len() * 4) as u64
-            })
-            .collect();
-        net.round(&sends);
+            }),
+        );
+        net.round(sends);
         // Apply the data movement: receiver (i+1) accumulates sender i's
         // current copy of chunk (i - r). Use a staging copy so updates
         // within a round don't cascade.
-        let staged: Vec<Vec<f32>> = exec.map_indexed(n, |i| {
-            let c = (i + n - r) % n;
-            bufs[i][chunks[c].clone()].to_vec()
-        });
+        {
+            let bufs_src: &[Vec<f32>] = bufs;
+            exec.map_mut(&mut staging[..n], |i, stage| {
+                let c = (i + n - r) % n;
+                Arena::note(grows, Arena::refill_slice(stage, &bufs_src[i][chunks[c].clone()]));
+            });
+        }
+        let staged: &[Vec<f32>] = staging;
         exec.map_mut(bufs, |dst, buf| {
             let src = (dst + n - 1) % n;
             let c = (src + n - r) % n;
@@ -70,17 +114,23 @@ pub fn allreduce_exec(
     // After scatter-reduce, node i owns the fully-reduced chunk (i+1)%n.
     // Allgather: round r, node i sends chunk (i + 1 - r) mod n onward.
     for r in 0..n - 1 {
-        let sends: Vec<u64> = (0..n)
-            .map(|i| {
+        Arena::refill(
+            grows,
+            sends,
+            (0..n).map(|i| {
                 let c = (i + 1 + n - r) % n;
                 (chunks[c].len() * 4) as u64
-            })
-            .collect();
-        net.round(&sends);
-        let staged: Vec<Vec<f32>> = exec.map_indexed(n, |i| {
-            let c = (i + 1 + n - r) % n;
-            bufs[i][chunks[c].clone()].to_vec()
-        });
+            }),
+        );
+        net.round(sends);
+        {
+            let bufs_src: &[Vec<f32>] = bufs;
+            exec.map_mut(&mut staging[..n], |i, stage| {
+                let c = (i + 1 + n - r) % n;
+                Arena::note(grows, Arena::refill_slice(stage, &bufs_src[i][chunks[c].clone()]));
+            });
+        }
+        let staged: &[Vec<f32>] = staging;
         exec.map_mut(bufs, |dst, buf| {
             let src = (dst + n - 1) % n;
             let c = (src + 1 + n - r) % n;
@@ -95,6 +145,38 @@ pub fn allreduce_exec(
         bytes_per_node: per_node_delta(net, &before),
         seconds: net.clock() - t0,
         density_per_hop: Vec::new(),
+    }
+}
+
+/// Accounting-only dense schedule: models the `2(N-1)` rounds' bytes and
+/// virtual time on the net without moving any values — the Baseline arm
+/// of `exp::simrun`, where only the wire behaviour matters. Send
+/// sequences match the exact schedule's rotation, so byte/time totals
+/// are identical to [`allreduce`] over the same coordinate count.
+pub fn rounds_bytes_only(net: &mut RingNet, coords: usize, arena: &mut Arena) {
+    let n = net.n_nodes();
+    let Arena {
+        grows,
+        dense_sends,
+        dense_chunks,
+        mk_chunk_bytes,
+        ..
+    } = arena;
+    let cap = dense_chunks.capacity();
+    chunk_ranges_into(coords, n, dense_chunks);
+    Arena::note(grows, dense_chunks.capacity() != cap);
+    Arena::refill(
+        grows,
+        mk_chunk_bytes,
+        dense_chunks.iter().map(|r| (r.len() * 4) as u64),
+    );
+    for r in 0..2 * (n - 1) {
+        Arena::refill(
+            grows,
+            dense_sends,
+            (0..n).map(|i| mk_chunk_bytes[(i + n - (r % n)) % n]),
+        );
+        net.round(dense_sends);
     }
 }
 
@@ -118,8 +200,59 @@ mod tests {
         ];
         allreduce(&mut nw, &mut bufs);
         for b in &bufs {
-            assert_eq!(b, &vec![111.0, 222.0, 333.0, 444.0]);
+            assert_eq!(b, &[111.0, 222.0, 333.0, 444.0]);
         }
+    }
+
+    #[test]
+    fn arena_path_is_bit_identical_and_stops_allocating() {
+        let n = 5;
+        let len = 777;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let base: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let mut net_a = net(n);
+        let mut bufs_a = base.clone();
+        let rep_a = allreduce(&mut net_a, &mut bufs_a);
+        let mut arena = Arena::for_nodes(n);
+        let exec = Executor::sequential();
+        let mut grows_after_warmup = 0;
+        for pass in 0..3 {
+            let mut net_b = net(n);
+            let mut bufs_b = base.clone();
+            let rep_b = allreduce_in(&mut net_b, &mut bufs_b, &exec, &mut arena);
+            assert_eq!(rep_a.bytes_per_node, rep_b.bytes_per_node);
+            assert_eq!(rep_a.seconds.to_bits(), rep_b.seconds.to_bits());
+            for (a, b) in bufs_a.iter().zip(&bufs_b) {
+                let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb);
+            }
+            if pass == 0 {
+                grows_after_warmup = arena.grows();
+            } else {
+                assert_eq!(arena.grows(), grows_after_warmup, "pass {pass} reallocated");
+            }
+        }
+    }
+
+    #[test]
+    fn rounds_bytes_only_matches_exact_accounting() {
+        let n = 6;
+        let len = 1234;
+        let mut net_a = net(n);
+        let mut bufs = vec![vec![1.0f32; len]; n];
+        let rep = allreduce(&mut net_a, &mut bufs);
+        let mut net_b = net(n);
+        rounds_bytes_only(&mut net_b, len, &mut Arena::new());
+        assert_eq!(net_b.total_bytes(), rep.total_bytes());
+        assert_eq!(net_b.clock().to_bits(), rep.seconds.to_bits());
+        assert_eq!(net_b.rounds(), 2 * (n as u64 - 1));
     }
 
     #[test]
@@ -168,7 +301,7 @@ mod tests {
         let mut bufs = vec![vec![1.0f32, 2.0]; 5];
         allreduce(&mut nw, &mut bufs);
         for b in &bufs {
-            assert_eq!(b, &vec![5.0, 10.0]);
+            assert_eq!(b, &[5.0, 10.0]);
         }
     }
 

@@ -12,7 +12,7 @@
 //! never densify — the sparsity is invariant in N, which is the paper's
 //! structural advantage over DGC on rings.
 
-use super::{dense, Executor, ReduceReport};
+use super::{dense, Arena, Executor, ReduceReport};
 use crate::net::RingNet;
 use crate::sparse::{values_only_bytes, BitMask};
 
@@ -49,24 +49,52 @@ pub fn allreduce_exec(
     values: &[&[f32]],
     exec: &Executor,
 ) -> (BitMask, Vec<f32>, ReduceReport) {
+    allreduce_in(net, masks, values, exec, &mut Arena::new())
+}
+
+/// [`allreduce_exec`] against a caller-owned [`Arena`]: the mask blobs,
+/// the shared-support index table, the per-node compacted value buffers,
+/// and the dense value rounds' staging all live in the arena's reusable
+/// buffers, so the per-round/per-hop loop allocates nothing once warm
+/// (DESIGN.md §9). The *outputs* still allocate per call — the shared
+/// mask, the report, and the returned summed vector (cloned out of the
+/// arena slot so the warm buffer stays behind for the next call).
+/// Bit-identical to the other entry points.
+pub fn allreduce_in(
+    net: &mut RingNet,
+    masks: &[&BitMask],
+    values: &[&[f32]],
+    exec: &Executor,
+    arena: &mut Arena,
+) -> (BitMask, Vec<f32>, ReduceReport) {
     let n = net.n_nodes();
     assert_eq!(values.len(), n);
     assert!(!masks.is_empty(), "need at least one mask broadcaster");
     let len = masks[0].len();
     assert!(values.iter().all(|v| v.len() == len));
 
+    let Arena {
+        grows,
+        mk_blobs,
+        mk_support,
+        mk_compact,
+        ag_sends,
+        dense_staging,
+        dense_sends,
+        dense_chunks,
+        ..
+    } = arena;
+    let grows: &std::sync::atomic::AtomicU64 = grows;
+
     // Phase 1 — mask AllGather (Alg. 1 line 7): each broadcaster's
     // encoded mask travels N-1 hops. We account it as an allgather of k
     // blobs; non-broadcasters contribute zero-byte blobs.
     let mask_bytes = masks[0].wire_bytes();
-    let mut blobs = vec![0u64; n];
-    for (i, blob) in blobs.iter_mut().enumerate().take(masks.len().min(n)) {
-        let _ = i;
-        *blob = mask_bytes;
-    }
+    let k = masks.len().min(n);
     let t0 = net.clock();
     let before: Vec<u64> = (0..n).map(|i| net.node_tx_bytes(i)).collect();
-    net.allgather(&blobs);
+    let blob_sizes = (0..n).map(|i| if i < k { mask_bytes } else { 0 });
+    Arena::allgather_into(net, grows, mk_blobs, ag_sends, blob_sizes);
 
     // Phase 2 — OR-combine (identical on every node).
     let mut shared = BitMask::zeros(len);
@@ -78,16 +106,32 @@ pub fn allreduce_exec(
     // Phase 3 — compact every node's values to the shared support and
     // dense-ring-allreduce the compacted vectors (values only: the
     // support is known to all).
-    let support: Vec<usize> = shared.iter_set().collect();
-    let mut compact: Vec<Vec<f32>> =
-        exec.map_indexed(n, |node| support.iter().map(|&i| values[node][i]).collect());
-    let dense_rep = dense::allreduce_exec(net, &mut compact, exec);
+    Arena::refill(grows, mk_support, shared.iter_set());
+    Arena::slots(grows, mk_compact, n, Vec::new);
+    {
+        let support: &[usize] = mk_support;
+        exec.map_mut(&mut mk_compact[..n], |node, c| {
+            let cap = c.capacity();
+            c.clear();
+            c.extend(support.iter().map(|&i| values[node][i]));
+            Arena::note(grows, c.capacity() != cap);
+        });
+    }
+    let dense_rep = dense::allreduce_parts(
+        net,
+        &mut mk_compact[..n],
+        exec,
+        grows,
+        dense_staging,
+        dense_sends,
+        dense_chunks,
+    );
 
     // Validate accounting matches the values-only wire model (loosely:
     // the dense schedule moves 2(N-1)/N of the compact payload).
     debug_assert!({
-        let expect = 2.0 * (n as f64 - 1.0) / n as f64
-            * values_only_bytes(support.len()) as f64;
+        let expect =
+            2.0 * (n as f64 - 1.0) / n as f64 * values_only_bytes(mk_support.len()) as f64;
         dense_rep.mean_bytes_per_node() <= expect + 64.0 * n as f64 + 1.0
     });
 
@@ -98,7 +142,7 @@ pub fn allreduce_exec(
         seconds: net.clock() - t0,
         density_per_hop: vec![shared.density(); n.saturating_sub(1)],
     };
-    (shared, compact.swap_remove(0), report)
+    (shared, mk_compact[0].clone(), report)
 }
 
 /// Accounting-only variant of [`allreduce`] for large-scale bandwidth
@@ -106,22 +150,36 @@ pub fn allreduce_exec(
 /// rounds' bytes/time on the net, without moving value data (the callers
 /// — `exp::simrun` at 96 nodes x 25M+ params — discard the summed values
 /// anyway). Byte accounting is identical to the exact path.
-pub fn allreduce_bytes_only(
+pub fn allreduce_bytes_only(net: &mut RingNet, masks: &[&BitMask]) -> (BitMask, ReduceReport) {
+    allreduce_bytes_only_in(net, masks, &mut Arena::new())
+}
+
+/// [`allreduce_bytes_only`] against a caller-owned [`Arena`] — the big
+/// sims' per-step hot path, zero steady-state allocations once warm
+/// (DESIGN.md §9). Bit-identical to [`allreduce_bytes_only`].
+pub fn allreduce_bytes_only_in(
     net: &mut RingNet,
     masks: &[&BitMask],
+    arena: &mut Arena,
 ) -> (BitMask, ReduceReport) {
     let n = net.n_nodes();
     assert!(!masks.is_empty());
     let len = masks[0].len();
 
     let mask_bytes = masks[0].wire_bytes();
-    let mut blobs = vec![0u64; n];
-    for blob in blobs.iter_mut().take(masks.len().min(n)) {
-        *blob = mask_bytes;
-    }
+    let k = masks.len().min(n);
     let t0 = net.clock();
     let before: Vec<u64> = (0..n).map(|i| net.node_tx_bytes(i)).collect();
-    net.allgather(&blobs);
+    {
+        let Arena {
+            grows,
+            mk_blobs,
+            ag_sends,
+            ..
+        } = &mut *arena;
+        let blob_sizes = (0..n).map(|i| if i < k { mask_bytes } else { 0 });
+        Arena::allgather_into(net, grows, mk_blobs, ag_sends, blob_sizes);
+    }
 
     let mut shared = BitMask::zeros(len);
     for m in masks {
@@ -129,20 +187,10 @@ pub fn allreduce_bytes_only(
         shared.or_assign(m);
     }
 
-    // Dense-equivalent rounds over the compacted support (bytes/time only).
-    let support_len = shared.count();
-    let chunks = super::chunk_ranges(support_len, n);
-    let chunk_bytes: Vec<u64> = chunks.iter().map(|c| (c.len() * 4) as u64).collect();
-    for r in 0..n - 1 {
-        let sends: Vec<u64> = (0..n).map(|i| chunk_bytes[(i + n - r) % n]).collect();
-        net.round(&sends);
-    }
-    for r in 0..n - 1 {
-        let sends: Vec<u64> = (0..n)
-            .map(|i| chunk_bytes[(i + 1 + n - r) % n])
-            .collect();
-        net.round(&sends);
-    }
+    // Dense-equivalent rounds over the compacted support (bytes/time
+    // only) — the same rotation sequence as the exact schedule, shared
+    // with the Baseline arm's accounting engine.
+    dense::rounds_bytes_only(net, shared.count(), arena);
 
     let report = ReduceReport {
         bytes_per_node: (0..n)

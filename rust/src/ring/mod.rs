@@ -21,11 +21,13 @@
 //! per-node work (staging copies, sparse merges, mask compaction) out
 //! across worker threads with bit-identical results (DESIGN.md §4).
 
+pub mod arena;
 pub mod dense;
 pub mod exec;
 pub mod masked;
 pub mod sparse;
 
+pub use arena::Arena;
 pub use exec::Executor;
 
 use crate::net::RingNet;
@@ -61,30 +63,43 @@ impl ReduceReport {
 /// Split `len` coordinates into `n` contiguous chunks (ring ownership).
 /// Chunk sizes differ by at most 1.
 pub fn chunk_ranges(len: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    let mut out = Vec::with_capacity(n);
+    chunk_ranges_into(len, n, &mut out);
+    out
+}
+
+/// [`chunk_ranges`] into a caller-owned buffer (arena reuse; the
+/// steady-state engines recompute the same partition every step).
+pub fn chunk_ranges_into(len: usize, n: usize, out: &mut Vec<std::ops::Range<usize>>) {
     assert!(n > 0);
     let base = len / n;
     let extra = len % n;
-    let mut out = Vec::with_capacity(n);
+    out.clear();
     let mut start = 0;
     for i in 0..n {
         let size = base + usize::from(i < extra);
         out.push(start..start + size);
         start += size;
     }
-    out
 }
 
 /// Like [`chunk_ranges`] but with boundaries aligned to 64-coordinate
 /// words (except the last), so chunk supports are direct `u64`-word
 /// slices of a `BitMask` — the support-only fast path depends on this.
 pub fn chunk_ranges_aligned(len: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    let mut out = Vec::with_capacity(n);
+    chunk_ranges_aligned_into(len, n, &mut out);
+    out
+}
+
+/// [`chunk_ranges_aligned`] into a caller-owned buffer (arena reuse).
+pub fn chunk_ranges_aligned_into(len: usize, n: usize, out: &mut Vec<std::ops::Range<usize>>) {
     assert!(n > 0);
     let words = len.div_ceil(64);
-    let word_chunks = chunk_ranges(words, n);
-    word_chunks
-        .into_iter()
-        .map(|wr| (wr.start * 64).min(len)..(wr.end * 64).min(len))
-        .collect()
+    chunk_ranges_into(words, n, out);
+    for wr in out.iter_mut() {
+        *wr = (wr.start * 64).min(len)..(wr.end * 64).min(len);
+    }
 }
 
 /// Snapshot byte counters before/after an operation on the net.

@@ -8,7 +8,10 @@
 //! denser as the ring reduce is performed").  `ReduceReport::
 //! density_per_hop` quantifies it; `exp::density` plots it against N.
 
-use super::{chunk_ranges, per_node_delta, snapshot, Executor, ReduceReport};
+use std::ops::Range;
+
+use super::{chunk_ranges_aligned_into, chunk_ranges_into, per_node_delta, snapshot};
+use super::{Arena, Executor, ReduceReport};
 use crate::net::RingNet;
 use crate::sparse::SparseVec;
 
@@ -28,53 +31,71 @@ pub fn allreduce_exec(
     inputs: &[SparseVec],
     exec: &Executor,
 ) -> (Vec<f32>, ReduceReport) {
+    allreduce_in(net, inputs, exec, &mut Arena::new())
+}
+
+/// [`allreduce_exec`] against a caller-owned [`Arena`]: the travelling
+/// segments ping-pong between two arena slot tables and the per-hop
+/// segment gathers/union-merges reuse their buffers, so the steady-state
+/// hop loop allocates nothing once warm (DESIGN.md §9). Bit-identical to
+/// the other entry points.
+pub fn allreduce_in(
+    net: &mut RingNet,
+    inputs: &[SparseVec],
+    exec: &Executor,
+    arena: &mut Arena,
+) -> (Vec<f32>, ReduceReport) {
     let n = net.n_nodes();
     assert_eq!(inputs.len(), n);
     let len = inputs[0].len;
     assert!(inputs.iter().all(|s| s.len == len));
 
-    let chunks = chunk_ranges(len, n);
+    let Arena {
+        grows,
+        sp_held,
+        sp_next,
+        sp_segs,
+        sp_sends,
+        sp_chunks,
+        ..
+    } = arena;
+    let grows: &std::sync::atomic::AtomicU64 = grows;
+    let cap = sp_chunks.capacity();
+    chunk_ranges_into(len, n, sp_chunks);
+    Arena::note(grows, sp_chunks.capacity() != cap);
+    let chunks: &[Range<usize>] = sp_chunks;
+    Arena::slots(grows, sp_held, n, || SparseVec::empty(0));
+    Arena::slots(grows, sp_next, n, || SparseVec::empty(0));
+    Arena::slots(grows, sp_segs, n, || SparseVec::empty(0));
+
     let before = snapshot(net);
     let t0 = net.clock();
 
-    // Segment (node i, chunk c) = node i's sparse slice of chunk c.
-    let segment = |s: &SparseVec, c: usize| -> SparseVec {
-        let range = &chunks[c];
-        let mut idx = Vec::new();
-        let mut val = Vec::new();
-        for (&i, &v) in s.idx.iter().zip(&s.val) {
-            let i = i as usize;
-            if range.contains(&i) {
-                idx.push((i - range.start) as u32);
-                val.push(v);
-            }
-        }
-        SparseVec {
-            len: range.len(),
-            idx,
-            val,
-        }
-    };
-
     // held[i] = the travelling segment node i currently holds.
     // Initially node i holds its own slice of chunk i.
-    let mut held: Vec<SparseVec> = exec.map_indexed(n, |i| segment(&inputs[i], i));
+    exec.map_mut(&mut sp_held[..n], |i, h| {
+        Arena::note(grows, h.assign_window(&inputs[i], &chunks[i]));
+    });
+    let (mut held, mut next) = (sp_held, sp_next);
     let mut density_per_hop = Vec::with_capacity(n - 1);
 
     // Scatter-reduce: at round r node i holds the partial sum of chunk
     // (i - r); it sends it to i+1 which merges in its own slice.
     for r in 0..n - 1 {
-        let sends: Vec<u64> = held.iter().map(|s| s.wire_bytes()).collect();
-        net.round(&sends);
-        let next: Vec<SparseVec> = exec.map_indexed(n, |dst| {
-            let src = (dst + n - 1) % n;
-            let c = (dst + n - (r + 1)) % n; // chunk arriving at dst
-            let own = segment(&inputs[dst], c);
-            held[src].merge_add(&own)
-        });
-        held = next;
+        Arena::refill(grows, sp_sends, held[..n].iter().map(|s| s.wire_bytes()));
+        net.round(sp_sends);
+        {
+            let held_ref: &[SparseVec] = held;
+            exec.map_mut2(&mut next[..n], &mut sp_segs[..n], |dst, nx, seg| {
+                let src = (dst + n - 1) % n;
+                let c = (dst + n - (r + 1)) % n; // chunk arriving at dst
+                Arena::note(grows, seg.assign_window(&inputs[dst], &chunks[c]));
+                Arena::note(grows, held_ref[src].merge_add_into(seg, nx));
+            });
+        }
+        std::mem::swap(&mut held, &mut next);
         // Mean density of travelling segments after this hop.
-        let d = held.iter().map(|s| s.density()).sum::<f64>() / n as f64;
+        let d = held[..n].iter().map(|s| s.density()).sum::<f64>() / n as f64;
         density_per_hop.push(d);
     }
 
@@ -82,29 +103,31 @@ pub fn allreduce_exec(
     // Assemble the global dense result and run the allgather purely for
     // byte/time accounting (every node must end with every chunk).
     let mut result = vec![0.0f32; len];
-    for i in 0..n {
+    for (i, h) in held[..n].iter().enumerate() {
         let c = (i + 1) % n;
         let range = chunks[c].clone();
-        for (&k, &v) in held[i].idx.iter().zip(&held[i].val) {
+        for (&k, &v) in h.idx.iter().zip(&h.val) {
             result[range.start + k as usize] += v;
         }
     }
     for r in 0..n - 1 {
-        let sends: Vec<u64> = (0..n)
-            .map(|i| {
+        Arena::refill(
+            grows,
+            sp_sends,
+            (0..n).map(|i| {
                 let c = (i + 1 + n - r) % n;
                 // The reduced chunk c travels in sparse format.
                 let seg_density: f64 = held[(c + n - 1) % n].density();
-                let nnz = (chunks[c].len() as f64 * seg_density).round() as usize;
-                SparseVec {
-                    len: chunks[c].len(),
-                    idx: vec![0; nnz.min(chunks[c].len())],
-                    val: vec![0.0; nnz.min(chunks[c].len())],
-                }
-                .wire_bytes()
-            })
-            .collect();
-        net.round(&sends);
+                let nnz = ((chunks[c].len() as f64 * seg_density).round() as usize)
+                    .min(chunks[c].len());
+                crate::sparse::wire_bytes(
+                    crate::sparse::WireFormat::cheapest(chunks[c].len(), nnz),
+                    chunks[c].len(),
+                    nnz,
+                )
+            }),
+        );
+        net.round(sp_sends);
     }
 
     (
@@ -131,10 +154,7 @@ pub fn expected_final_density(d0: f64, n: usize) -> f64 {
 /// OR-ed with the local node's support (word-at-a-time); wire bytes are
 /// modelled from each segment's nnz with the same codec chooser the
 /// exact path uses. Cross-validated against `allreduce` in tests.
-pub fn allreduce_support(
-    net: &mut RingNet,
-    supports: &[crate::sparse::BitMask],
-) -> ReduceReport {
+pub fn allreduce_support(net: &mut RingNet, supports: &[crate::sparse::BitMask]) -> ReduceReport {
     allreduce_support_exec(net, supports, &Executor::sequential())
 }
 
@@ -146,19 +166,53 @@ pub fn allreduce_support_exec(
     supports: &[crate::sparse::BitMask],
     exec: &Executor,
 ) -> ReduceReport {
+    allreduce_support_in(net, supports, exec, &mut Arena::new())
+}
+
+/// [`allreduce_support_exec`] against a caller-owned [`Arena`]: the
+/// travelling word blocks ping-pong between two arena slot tables and
+/// the per-hop copies/ORs reuse their buffers — zero steady-state
+/// allocations once warm (DESIGN.md §9). Bit-identical to the other
+/// entry points.
+pub fn allreduce_support_in(
+    net: &mut RingNet,
+    supports: &[crate::sparse::BitMask],
+    exec: &Executor,
+    arena: &mut Arena,
+) -> ReduceReport {
     use crate::sparse::BitMask;
     let n = net.n_nodes();
     assert_eq!(supports.len(), n);
     let len = supports[0].len();
     assert!(supports.iter().all(|s| s.len() == len));
 
-    let chunks = super::chunk_ranges_aligned(len, n);
+    let Arena {
+        grows,
+        su_held,
+        su_next,
+        su_sends,
+        su_chunks,
+        ..
+    } = arena;
+    let grows: &std::sync::atomic::AtomicU64 = grows;
+    let cap = su_chunks.capacity();
+    chunk_ranges_aligned_into(len, n, su_chunks);
+    Arena::note(grows, su_chunks.capacity() != cap);
+    let chunks: &[Range<usize>] = su_chunks;
+    Arena::slots(grows, su_held, n, Vec::new);
+    Arena::slots(grows, su_next, n, Vec::new);
+
     let before = super::snapshot(net);
     let t0 = net.clock();
 
     // held[i] = travelling support words for the chunk node i holds.
-    let mut held: Vec<Vec<u64>> =
-        exec.map_indexed(n, |i| supports[i].word_slice(chunks[i].clone()).to_vec());
+    exec.map_mut(&mut su_held[..n], |i, h| {
+        Arena::note(
+            grows,
+            Arena::refill_slice(h, supports[i].word_slice(chunks[i].clone())),
+        );
+    });
+    let (mut held, mut next) = (su_held, su_next);
     let mut density_per_hop = Vec::with_capacity(n - 1);
 
     let seg_bytes = |words: &[u64], chunk_len: usize| -> u64 {
@@ -173,26 +227,30 @@ pub fn allreduce_support_exec(
     for r in 0..n - 1 {
         // Byte sizing is a per-node popcount — far too cheap to amortize
         // a thread spawn; only the word-OR merges below fan out.
-        let sends: Vec<u64> = (0..n)
-            .map(|i| {
+        Arena::refill(
+            grows,
+            su_sends,
+            (0..n).map(|i| {
                 let c = (i + n - r) % n;
                 seg_bytes(&held[i], chunks[c].len())
-            })
-            .collect();
-        net.round(&sends);
-        let next: Vec<Vec<u64>> = exec.map_indexed(n, |dst| {
-            let src = (dst + n - 1) % n;
-            let c = (dst + n - (r + 1)) % n;
-            let own = supports[dst].word_slice(chunks[c].clone());
-            let mut merged = held[src].clone();
-            for (m, o) in merged.iter_mut().zip(own) {
-                *m |= o;
-            }
-            merged
-        });
-        held = next;
+            }),
+        );
+        net.round(su_sends);
+        {
+            let held_ref: &[Vec<u64>] = held;
+            exec.map_mut(&mut next[..n], |dst, nx| {
+                let src = (dst + n - 1) % n;
+                let c = (dst + n - (r + 1)) % n;
+                let own = supports[dst].word_slice(chunks[c].clone());
+                Arena::note(grows, Arena::refill_slice(nx, &held_ref[src]));
+                for (m, o) in nx.iter_mut().zip(own) {
+                    *m |= o;
+                }
+            });
+        }
+        std::mem::swap(&mut held, &mut next);
         let (mut nnz, mut tot) = (0usize, 0usize);
-        for (i, h) in held.iter().enumerate() {
+        for (i, h) in held[..n].iter().enumerate() {
             let c = (i + n - (r + 1)) % n;
             nnz += BitMask::popcount_words(h);
             tot += chunks[c].len();
@@ -203,14 +261,16 @@ pub fn allreduce_support_exec(
     // Allgather accounting at final densities (sizing only — sequential
     // for the same reason as above).
     for r in 0..n - 1 {
-        let sends: Vec<u64> = (0..n)
-            .map(|i| {
+        Arena::refill(
+            grows,
+            su_sends,
+            (0..n).map(|i| {
                 let c = (i + 1 + n - r) % n;
                 let holder = (c + n - 1) % n;
                 seg_bytes(&held[holder], chunks[c].len())
-            })
-            .collect();
-        net.round(&sends);
+            }),
+        );
+        net.round(su_sends);
     }
 
     ReduceReport {
@@ -333,10 +393,7 @@ mod tests {
         );
         assert!((de - df).abs() < de * 0.25, "{de} vs {df}");
         // Byte totals within 30% (alignment + codec-boundary effects).
-        let (be, bf) = (
-            exact.total_bytes() as f64,
-            fast.total_bytes() as f64,
-        );
+        let (be, bf) = (exact.total_bytes() as f64, fast.total_bytes() as f64);
         assert!((be - bf).abs() < be * 0.3, "{be} vs {bf}");
     }
 

@@ -71,11 +71,7 @@ pub struct Artifact {
 impl Artifact {
     /// Read `<dir>/<name>.manifest.json` + `<name>.hlo.txt` and compile
     /// the HLO through the client.
-    pub fn load(
-        client: &xla::PjRtClient,
-        dir: &Path,
-        name: &str,
-    ) -> anyhow::Result<Self> {
+    pub fn load(client: &xla::PjRtClient, dir: &Path, name: &str) -> anyhow::Result<Self> {
         let manifest_path = dir.join(format!("{name}.manifest.json"));
         let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
             anyhow::anyhow!("reading {}: {e}", manifest_path.display())

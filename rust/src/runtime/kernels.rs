@@ -65,11 +65,7 @@ impl ImportanceKernel {
             };
             let take = remaining.min(m);
             let (gs, ws, us): (&[f32], &[f32], &[f32]) = if take == m {
-                (
-                    &g[off..off + m],
-                    &w[off..off + m],
-                    &u[off..off + m],
-                )
+                (&g[off..off + m], &w[off..off + m], &u[off..off + m])
             } else {
                 // Tail: stage into padded buffers (g=0, w=1, u=1).
                 self.g_pad[..take].copy_from_slice(&g[off..off + take]);

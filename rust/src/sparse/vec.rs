@@ -124,37 +124,68 @@ impl SparseVec {
     /// Merge-add two sparse vectors (union support, summed values).
     /// Both inputs must have ascending indices; output is ascending.
     pub fn merge_add(&self, other: &SparseVec) -> SparseVec {
+        let mut out = SparseVec::empty(self.len);
+        self.merge_add_into(other, &mut out);
+        out
+    }
+
+    /// Reset to an empty sparse vector of logical length `len`, keeping
+    /// the allocated index/value capacity (arena reuse).
+    pub fn clear_to(&mut self, len: usize) {
+        self.len = len;
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    /// Re-extract `src`'s slice of `range` into `self` — the per-hop
+    /// segment gather of the sparse ring schedule, reusing `self`'s
+    /// buffers. Indices are rebased to `range.start`. Returns `true`
+    /// when an internal buffer had to reallocate (arena accounting).
+    pub fn assign_window(&mut self, src: &SparseVec, range: &std::ops::Range<usize>) -> bool {
+        let caps = (self.idx.capacity(), self.val.capacity());
+        self.clear_to(range.len());
+        for (&i, &v) in src.idx.iter().zip(&src.val) {
+            let i = i as usize;
+            if range.contains(&i) {
+                self.idx.push((i - range.start) as u32);
+                self.val.push(v);
+            }
+        }
+        caps != (self.idx.capacity(), self.val.capacity())
+    }
+
+    /// [`SparseVec::merge_add`] writing into a caller-owned `out`
+    /// (buffer reuse; `out` must be a distinct object). The summed value
+    /// on overlaps adds `self`'s value first, exactly as `merge_add`.
+    /// Returns `true` when `out` had to reallocate.
+    pub fn merge_add_into(&self, other: &SparseVec, out: &mut SparseVec) -> bool {
         assert_eq!(self.len, other.len);
-        let mut idx = Vec::with_capacity(self.nnz() + other.nnz());
-        let mut val = Vec::with_capacity(idx.capacity());
+        let caps = (out.idx.capacity(), out.val.capacity());
+        out.clear_to(self.len);
         let (mut a, mut b) = (0usize, 0usize);
         while a < self.nnz() || b < other.nnz() {
             let ia = self.idx.get(a).copied().unwrap_or(u32::MAX);
             let ib = other.idx.get(b).copied().unwrap_or(u32::MAX);
             match ia.cmp(&ib) {
                 std::cmp::Ordering::Less => {
-                    idx.push(ia);
-                    val.push(self.val[a]);
+                    out.idx.push(ia);
+                    out.val.push(self.val[a]);
                     a += 1;
                 }
                 std::cmp::Ordering::Greater => {
-                    idx.push(ib);
-                    val.push(other.val[b]);
+                    out.idx.push(ib);
+                    out.val.push(other.val[b]);
                     b += 1;
                 }
                 std::cmp::Ordering::Equal => {
-                    idx.push(ia);
-                    val.push(self.val[a] + other.val[b]);
+                    out.idx.push(ia);
+                    out.val.push(self.val[a] + other.val[b]);
                     a += 1;
                     b += 1;
                 }
             }
         }
-        SparseVec {
-            len: self.len,
-            idx,
-            val,
-        }
+        caps != (out.idx.capacity(), out.val.capacity())
     }
 
     /// Wire bytes under the cheapest codec for this density.
@@ -260,6 +291,39 @@ mod tests {
             }
             assert_eq!(s.nnz(), k.min(len));
         });
+    }
+
+    #[test]
+    fn merge_add_into_matches_merge_add_and_reuses_buffers() {
+        forall("merge_add_into == merge_add", 60, |g| {
+            let len = g.usize_in(1, 200);
+            let a = SparseVec::from_dense(&g.vec_sparse(len, 0.3));
+            let b = SparseVec::from_dense(&g.vec_sparse(len, 0.3));
+            let fresh = a.merge_add(&b);
+            let mut out = SparseVec::empty(0);
+            a.merge_add_into(&b, &mut out);
+            assert_eq!(out, fresh);
+            // Second merge into the warmed buffer must not reallocate.
+            assert!(!a.merge_add_into(&b, &mut out));
+            assert_eq!(out, fresh);
+        });
+    }
+
+    #[test]
+    fn assign_window_extracts_and_rebases() {
+        let d = vec![0.0f32, 1.0, 0.0, 3.0, 4.0, 0.0, 6.0];
+        let s = SparseVec::from_dense(&d);
+        let mut seg = SparseVec::empty(0);
+        seg.assign_window(&s, &(2..5));
+        assert_eq!(seg.len, 3);
+        assert_eq!(seg.idx, vec![1, 2]);
+        assert_eq!(seg.val, vec![3.0, 4.0]);
+        // Warm buffer: repeating the same extraction never reallocates.
+        assert!(!seg.assign_window(&s, &(2..5)));
+        // Empty window.
+        seg.assign_window(&s, &(0..0));
+        assert_eq!(seg.nnz(), 0);
+        assert_eq!(seg.len, 0);
     }
 
     #[test]

@@ -84,11 +84,7 @@ fn base_seed() -> u64 {
 
 /// Run `property` against `cases` generated inputs; panics with replay
 /// info on the first failure.
-pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
-    name: &str,
-    cases: usize,
-    property: F,
-) {
+pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, property: F) {
     let seed = base_seed();
     for case in 0..cases {
         let mut gen = Gen {

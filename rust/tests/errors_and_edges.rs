@@ -148,7 +148,9 @@ fn trainer_rejects_unknown_model() {
         eprintln!("SKIP (no artifacts)");
         return;
     };
-    let mut cfg = Config::default();
-    cfg.model = "resnet9000".into();
+    let cfg = Config {
+        model: "resnet9000".into(),
+        ..Config::default()
+    };
     assert!(ringiwp::coordinator::Trainer::new(cfg, &rt).is_err());
 }

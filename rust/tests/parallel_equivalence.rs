@@ -8,7 +8,7 @@ use ringiwp::compress::Method;
 use ringiwp::exp::simrun::{SimCfg, SimEngine};
 use ringiwp::model::{LayerKind, ParamLayout};
 use ringiwp::net::{LinkSpec, RingNet};
-use ringiwp::ring::{self, Executor, ReduceReport};
+use ringiwp::ring::{self, Arena, Executor, ReduceReport};
 use ringiwp::sparse::{BitMask, SparseVec};
 use ringiwp::util::prop::forall;
 use ringiwp::util::rng::Rng;
@@ -255,13 +255,453 @@ fn run_engine(method: Method, nodes: usize, parallelism: usize) -> (Vec<(u64, u6
     let mut reports = Vec::new();
     for s in 0..3 {
         let r = engine.step(s);
-        reports.push((
-            r.wire_bytes_per_node,
-            r.density.to_bits(),
-            r.seconds.to_bits(),
-        ));
+        reports.push((r.wire_bytes_per_node, r.density.to_bits(), r.seconds.to_bits()));
     }
     (reports, engine.account.ratio())
+}
+
+// ---- golden pre-refactor references (PR 2 arena contract) -------------
+//
+// Verbatim copies of the schedules as they stood BEFORE the staging-
+// arena refactor (sequential path, per-hop `Vec` allocations and all).
+// They are the checked-in golden oracle: the arena paths must reproduce
+// their `ReduceReport`s and reduced values bit-for-bit, so "zero-alloc"
+// can never silently become "slightly different numbers".
+mod golden {
+    use ringiwp::net::RingNet;
+    use ringiwp::ring::{chunk_ranges, chunk_ranges_aligned, ReduceReport};
+    use ringiwp::sparse::{wire_bytes, BitMask, SparseVec, WireFormat};
+
+    fn snapshot(net: &RingNet) -> Vec<u64> {
+        (0..net.n_nodes()).map(|i| net.node_tx_bytes(i)).collect()
+    }
+
+    fn delta(net: &RingNet, before: &[u64]) -> Vec<u64> {
+        (0..net.n_nodes())
+            .map(|i| net.node_tx_bytes(i) - before[i])
+            .collect()
+    }
+
+    pub fn dense(net: &mut RingNet, bufs: &mut [Vec<f32>]) -> ReduceReport {
+        let n = net.n_nodes();
+        assert_eq!(bufs.len(), n);
+        let len = bufs[0].len();
+        if len == 0 {
+            return ReduceReport {
+                bytes_per_node: vec![0; n],
+                ..Default::default()
+            };
+        }
+        let chunks = chunk_ranges(len, n);
+        let before = snapshot(net);
+        let t0 = net.clock();
+        for r in 0..n - 1 {
+            let sends: Vec<u64> = (0..n)
+                .map(|i| (chunks[(i + n - r) % n].len() * 4) as u64)
+                .collect();
+            net.round(&sends);
+            let staged: Vec<Vec<f32>> = (0..n)
+                .map(|i| bufs[i][chunks[(i + n - r) % n].clone()].to_vec())
+                .collect();
+            for dst in 0..n {
+                let src = (dst + n - 1) % n;
+                let c = (src + n - r) % n;
+                for (k, idx) in chunks[c].clone().enumerate() {
+                    bufs[dst][idx] += staged[src][k];
+                }
+            }
+        }
+        for r in 0..n - 1 {
+            let sends: Vec<u64> = (0..n)
+                .map(|i| (chunks[(i + 1 + n - r) % n].len() * 4) as u64)
+                .collect();
+            net.round(&sends);
+            let staged: Vec<Vec<f32>> = (0..n)
+                .map(|i| bufs[i][chunks[(i + 1 + n - r) % n].clone()].to_vec())
+                .collect();
+            for dst in 0..n {
+                let src = (dst + n - 1) % n;
+                let c = (src + 1 + n - r) % n;
+                for (k, idx) in chunks[c].clone().enumerate() {
+                    bufs[dst][idx] = staged[src][k];
+                }
+            }
+        }
+        ReduceReport {
+            bytes_per_node: delta(net, &before),
+            seconds: net.clock() - t0,
+            density_per_hop: Vec::new(),
+        }
+    }
+
+    pub fn sparse(net: &mut RingNet, inputs: &[SparseVec]) -> (Vec<f32>, ReduceReport) {
+        let n = net.n_nodes();
+        let len = inputs[0].len;
+        let chunks = chunk_ranges(len, n);
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let segment = |s: &SparseVec, c: usize| -> SparseVec {
+            let range = &chunks[c];
+            let mut idx = Vec::new();
+            let mut val = Vec::new();
+            for (&i, &v) in s.idx.iter().zip(&s.val) {
+                let i = i as usize;
+                if range.contains(&i) {
+                    idx.push((i - range.start) as u32);
+                    val.push(v);
+                }
+            }
+            SparseVec {
+                len: range.len(),
+                idx,
+                val,
+            }
+        };
+        let mut held: Vec<SparseVec> = (0..n).map(|i| segment(&inputs[i], i)).collect();
+        let mut density_per_hop = Vec::with_capacity(n - 1);
+        for r in 0..n - 1 {
+            let sends: Vec<u64> = held.iter().map(|s| s.wire_bytes()).collect();
+            net.round(&sends);
+            let next: Vec<SparseVec> = (0..n)
+                .map(|dst| {
+                    let src = (dst + n - 1) % n;
+                    let c = (dst + n - (r + 1)) % n;
+                    held[src].merge_add(&segment(&inputs[dst], c))
+                })
+                .collect();
+            held = next;
+            let d = held.iter().map(|s| s.density()).sum::<f64>() / n as f64;
+            density_per_hop.push(d);
+        }
+        let mut result = vec![0.0f32; len];
+        for (i, h) in held.iter().enumerate() {
+            let range = chunks[(i + 1) % n].clone();
+            for (&k, &v) in h.idx.iter().zip(&h.val) {
+                result[range.start + k as usize] += v;
+            }
+        }
+        for r in 0..n - 1 {
+            let sends: Vec<u64> = (0..n)
+                .map(|i| {
+                    let c = (i + 1 + n - r) % n;
+                    let seg_density: f64 = held[(c + n - 1) % n].density();
+                    let nnz = (chunks[c].len() as f64 * seg_density).round() as usize;
+                    SparseVec {
+                        len: chunks[c].len(),
+                        idx: vec![0; nnz.min(chunks[c].len())],
+                        val: vec![0.0; nnz.min(chunks[c].len())],
+                    }
+                    .wire_bytes()
+                })
+                .collect();
+            net.round(&sends);
+        }
+        (
+            result,
+            ReduceReport {
+                bytes_per_node: delta(net, &before),
+                seconds: net.clock() - t0,
+                density_per_hop,
+            },
+        )
+    }
+
+    pub fn support(net: &mut RingNet, supports: &[BitMask]) -> ReduceReport {
+        let n = net.n_nodes();
+        let len = supports[0].len();
+        let chunks = chunk_ranges_aligned(len, n);
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let mut held: Vec<Vec<u64>> = (0..n)
+            .map(|i| supports[i].word_slice(chunks[i].clone()).to_vec())
+            .collect();
+        let mut density_per_hop = Vec::with_capacity(n - 1);
+        let seg_bytes = |words: &[u64], chunk_len: usize| -> u64 {
+            let nnz = BitMask::popcount_words(words);
+            wire_bytes(WireFormat::cheapest(chunk_len, nnz), chunk_len, nnz)
+        };
+        for r in 0..n - 1 {
+            let sends: Vec<u64> = (0..n)
+                .map(|i| seg_bytes(&held[i], chunks[(i + n - r) % n].len()))
+                .collect();
+            net.round(&sends);
+            let next: Vec<Vec<u64>> = (0..n)
+                .map(|dst| {
+                    let src = (dst + n - 1) % n;
+                    let c = (dst + n - (r + 1)) % n;
+                    let own = supports[dst].word_slice(chunks[c].clone());
+                    let mut merged = held[src].clone();
+                    for (m, o) in merged.iter_mut().zip(own) {
+                        *m |= o;
+                    }
+                    merged
+                })
+                .collect();
+            held = next;
+            let (mut nnz, mut tot) = (0usize, 0usize);
+            for (i, h) in held.iter().enumerate() {
+                let c = (i + n - (r + 1)) % n;
+                nnz += BitMask::popcount_words(h);
+                tot += chunks[c].len();
+            }
+            density_per_hop.push(nnz as f64 / tot.max(1) as f64);
+        }
+        for r in 0..n - 1 {
+            let sends: Vec<u64> = (0..n)
+                .map(|i| {
+                    let c = (i + 1 + n - r) % n;
+                    seg_bytes(&held[(c + n - 1) % n], chunks[c].len())
+                })
+                .collect();
+            net.round(&sends);
+        }
+        ReduceReport {
+            bytes_per_node: delta(net, &before),
+            seconds: net.clock() - t0,
+            density_per_hop,
+        }
+    }
+
+    pub fn masked(
+        net: &mut RingNet,
+        masks: &[&BitMask],
+        values: &[&[f32]],
+    ) -> (BitMask, Vec<f32>, ReduceReport) {
+        let n = net.n_nodes();
+        let len = masks[0].len();
+        let mask_bytes = masks[0].wire_bytes();
+        let mut blobs = vec![0u64; n];
+        for blob in blobs.iter_mut().take(masks.len().min(n)) {
+            *blob = mask_bytes;
+        }
+        let t0 = net.clock();
+        let before = snapshot(net);
+        net.allgather(&blobs);
+        let mut shared = BitMask::zeros(len);
+        for m in masks {
+            shared.or_assign(m);
+        }
+        let support: Vec<usize> = shared.iter_set().collect();
+        let mut compact: Vec<Vec<f32>> = (0..n)
+            .map(|node| support.iter().map(|&i| values[node][i]).collect())
+            .collect();
+        dense(net, &mut compact);
+        let report = ReduceReport {
+            bytes_per_node: delta(net, &before),
+            seconds: net.clock() - t0,
+            density_per_hop: vec![shared.density(); n.saturating_sub(1)],
+        };
+        (shared, compact.swap_remove(0), report)
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn arena_dense_matches_pre_refactor_golden_bit_for_bit() {
+    for n in RING_SIZES {
+        let len = 5000;
+        let mut rng = Rng::new(31 + n as u64);
+        let base: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let mut net_g = net(n);
+        let mut bufs_g = base.clone();
+        let rep_g = golden::dense(&mut net_g, &mut bufs_g);
+        let mut arena = Arena::for_nodes(n);
+        for w in [1usize, 2, 4] {
+            let mut net_a = net(n);
+            let mut bufs_a = base.clone();
+            let rep_a =
+                ring::dense::allreduce_in(&mut net_a, &mut bufs_a, &Executor::new(w), &mut arena);
+            assert_reports_identical(&rep_g, &rep_a, &format!("golden dense n={n} w={w}"));
+            for (g, a) in bufs_g.iter().zip(&bufs_a) {
+                assert_eq!(bits(g), bits(a), "golden dense n={n} w={w}: values");
+            }
+        }
+    }
+}
+
+#[test]
+fn arena_sparse_matches_pre_refactor_golden_bit_for_bit() {
+    for n in RING_SIZES {
+        let len = 4000;
+        let mut rng = Rng::new(37 + n as u64);
+        let inputs: Vec<SparseVec> = (0..n)
+            .map(|_| random_sparse(&mut rng, len, 0.02))
+            .collect();
+        let mut net_g = net(n);
+        let (sum_g, rep_g) = golden::sparse(&mut net_g, &inputs);
+        let mut arena = Arena::for_nodes(n);
+        for w in [1usize, 2, 4] {
+            let mut net_a = net(n);
+            let (sum_a, rep_a) =
+                ring::sparse::allreduce_in(&mut net_a, &inputs, &Executor::new(w), &mut arena);
+            assert_reports_identical(&rep_g, &rep_a, &format!("golden sparse n={n} w={w}"));
+            assert_eq!(bits(&sum_g), bits(&sum_a), "golden sparse n={n} w={w}: sum");
+        }
+    }
+}
+
+#[test]
+fn arena_support_matches_pre_refactor_golden_bit_for_bit() {
+    for n in RING_SIZES {
+        let len = 50_000;
+        let mut rng = Rng::new(41 + n as u64);
+        let supports: Vec<BitMask> = (0..n)
+            .map(|_| {
+                let mut m = BitMask::zeros(len);
+                for _ in 0..500 {
+                    m.set(rng.below(len));
+                }
+                m
+            })
+            .collect();
+        let mut net_g = net(n);
+        let rep_g = golden::support(&mut net_g, &supports);
+        let mut arena = Arena::for_nodes(n);
+        for w in [1usize, 2, 4] {
+            let mut net_a = net(n);
+            let rep_a = ring::sparse::allreduce_support_in(
+                &mut net_a,
+                &supports,
+                &Executor::new(w),
+                &mut arena,
+            );
+            assert_reports_identical(&rep_g, &rep_a, &format!("golden support n={n} w={w}"));
+        }
+    }
+}
+
+#[test]
+fn arena_masked_matches_pre_refactor_golden_bit_for_bit() {
+    for n in RING_SIZES {
+        let len = 20_000;
+        let mut rng = Rng::new(43 + n as u64);
+        let mut mask_a = BitMask::zeros(len);
+        let mut mask_b = BitMask::zeros(len);
+        for _ in 0..300 {
+            mask_a.set(rng.below(len));
+            mask_b.set(rng.below(len));
+        }
+        let values: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = values.iter().map(|v| v.as_slice()).collect();
+        let mut net_g = net(n);
+        let (shared_g, summed_g, rep_g) = golden::masked(&mut net_g, &[&mask_a, &mask_b], &refs);
+        let mut arena = Arena::for_nodes(n);
+        for w in [1usize, 2, 4] {
+            let mut net_x = net(n);
+            let (shared_x, summed_x, rep_x) = ring::masked::allreduce_in(
+                &mut net_x,
+                &[&mask_a, &mask_b],
+                &refs,
+                &Executor::new(w),
+                &mut arena,
+            );
+            assert_eq!(shared_g, shared_x, "golden masked n={n} w={w}: mask");
+            assert_reports_identical(&rep_g, &rep_x, &format!("golden masked n={n} w={w}"));
+            assert_eq!(bits(&summed_g), bits(&summed_x), "golden masked n={n} w={w}");
+        }
+    }
+}
+
+// ---- arena zero-alloc steady state ------------------------------------
+
+#[test]
+fn arena_schedules_have_zero_steady_state_reallocations() {
+    let n = 8;
+    let len = 6000;
+    let mut rng = Rng::new(53);
+    let base: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; len];
+            rng.fill_normal(&mut v, 0.0, 1.0);
+            v
+        })
+        .collect();
+    let inputs: Vec<SparseVec> = (0..n).map(|_| random_sparse(&mut rng, len, 0.02)).collect();
+    let supports: Vec<BitMask> = (0..n)
+        .map(|_| {
+            let mut m = BitMask::zeros(len);
+            for _ in 0..100 {
+                m.set(rng.below(len));
+            }
+            m
+        })
+        .collect();
+    let mut mask = BitMask::zeros(len);
+    for _ in 0..200 {
+        mask.set(rng.below(len));
+    }
+    let refs: Vec<&[f32]> = base.iter().map(|v| v.as_slice()).collect();
+
+    let exec = Executor::sequential();
+    let mut arena = Arena::for_nodes(n);
+    let run_all = |arena: &mut Arena| {
+        let mut nw = net(n);
+        let mut bufs = base.clone();
+        ring::dense::allreduce_in(&mut nw, &mut bufs, &exec, arena);
+        let mut nw = net(n);
+        ring::sparse::allreduce_in(&mut nw, &inputs, &exec, arena);
+        let mut nw = net(n);
+        ring::sparse::allreduce_support_in(&mut nw, &supports, &exec, arena);
+        let mut nw = net(n);
+        ring::masked::allreduce_in(&mut nw, &[&mask], &refs, &exec, arena);
+        let mut nw = net(n);
+        ring::masked::allreduce_bytes_only_in(&mut nw, &[&mask], arena);
+        let mut nw = net(n);
+        ring::dense::rounds_bytes_only(&mut nw, len, arena);
+    };
+    run_all(&mut arena); // warm-up
+    let warm = arena.grows();
+    assert!(warm > 0, "warm-up must populate the arena");
+    for pass in 0..3 {
+        run_all(&mut arena);
+        assert_eq!(
+            arena.grows(),
+            warm,
+            "steady-state pass {pass} reallocated arena buffers"
+        );
+    }
+}
+
+#[test]
+fn engine_arena_is_allocation_free_after_first_step() {
+    // Baseline and DGC have shape-stable arena footprints (the IWP
+    // support size is data-dependent per step, so it is pinned at the
+    // schedule level above instead).
+    for method in [Method::Baseline, Method::Dgc] {
+        let cfg = SimCfg {
+            nodes: 8,
+            method,
+            seed: 29,
+            link: LinkSpec::gigabit_ethernet(),
+            ..Default::default()
+        };
+        let mut engine = SimEngine::new(sim_layout(), cfg);
+        engine.step(0);
+        let warm = engine.arena().grows();
+        for s in 1..5 {
+            engine.step(s);
+            assert_eq!(
+                engine.arena().grows(),
+                warm,
+                "{method:?}: step {s} reallocated arena buffers"
+            );
+        }
+    }
 }
 
 #[test]

@@ -18,20 +18,21 @@ fn runtime() -> Option<Runtime> {
 }
 
 fn cfg(method: Method, steps: usize) -> Config {
-    let mut c = Config::default();
-    c.method = method;
-    c.steps = steps;
-    c.nodes = 4;
-    c.model = "mlp".into();
-    c.steps_per_epoch = 20;
-    c.warmup_epochs = 1;
-    c.seed = 7;
-    // Early-training importance on a fresh small model is O(1-10)
-    // (large CE gradients vs He-init weights), so the IWP threshold is
-    // correspondingly larger than the paper's ImageNet steady-state
-    // 0.005-0.1 range.
-    c.threshold = 200.0;
-    c
+    Config {
+        method,
+        steps,
+        nodes: 4,
+        model: "mlp".into(),
+        steps_per_epoch: 20,
+        warmup_epochs: 1,
+        seed: 7,
+        // Early-training importance on a fresh small model is O(1-10)
+        // (large CE gradients vs He-init weights), so the IWP threshold
+        // is correspondingly larger than the paper's ImageNet
+        // steady-state 0.005-0.1 range.
+        threshold: 200.0,
+        ..Config::default()
+    }
 }
 
 #[test]
