@@ -5,7 +5,7 @@
 //! sparse schedules across ring sizes and payloads, plus the support-only
 //! fast path the 96-node sims rely on.
 
-use ringiwp::net::{LinkSpec, RingNet};
+use ringiwp::net::{LinkSpec, RingNet, TopoKind, Topology};
 use ringiwp::ring;
 use ringiwp::ring::{Arena, Executor};
 use ringiwp::sparse::{BitMask, SparseVec};
@@ -136,6 +136,48 @@ fn main() {
             "{}",
             stats.row(&format!("support_allreduce n={nodes} len=25.6M d=1%"))
         );
+    }
+    println!();
+
+    // Topology sweep (DESIGN.md §10): the same dense reduce over the
+    // flat ring, a group-4 hierarchy, and the binomial tree — wall
+    // clock here, virtual wire time in BENCH_ring.json.
+    println!("== dense allreduce per topology ==");
+    let exec = Executor::sequential();
+    for (nodes, len) in [(8usize, 1 << 18), (16, 1 << 18)] {
+        let base: Vec<Vec<f32>> = (0..nodes)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        for kind in [TopoKind::Flat, TopoKind::Hier { group: 4 }, TopoKind::Tree] {
+            let topo = kind.build(nodes);
+            let mut arena = Arena::for_nodes(nodes);
+            let mut work = base.clone();
+            let mut virtual_s = 0.0;
+            // Restore the preallocated work buffers per sample (a
+            // memcpy, no allocation) so the row times the schedule, not
+            // a multi-MB clone.
+            let stats = bench(1, 5, || {
+                for (w, b) in work.iter_mut().zip(&base) {
+                    w.copy_from_slice(b);
+                }
+                let mut nw = net(nodes);
+                let rep =
+                    std::hint::black_box(topo.dense(&mut nw, &mut work, &exec, &mut arena));
+                virtual_s = rep.seconds;
+            });
+            println!(
+                "{}",
+                stats.row(&format!(
+                    "dense topo={} n={nodes} len={len}",
+                    kind.name()
+                ))
+            );
+            println!("    -> {virtual_s:.6} virtual wire seconds");
+        }
     }
     println!("\n(bench_ring done)");
 }

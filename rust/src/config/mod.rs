@@ -7,6 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::compress::Method;
+use crate::net::TopoKind;
 use crate::util::cli::Args;
 
 /// Everything a training / experiment run needs.
@@ -54,6 +55,10 @@ pub struct Config {
     /// (`ring::exec`, DESIGN.md §4). 1 = sequential oracle; results are
     /// bit-identical at any setting.
     pub parallelism: usize,
+    /// Communication topology of the reduce (`net::topo`, DESIGN.md
+    /// §10): `flat` | `hier:<group_size>` | `tree`. Flat is the paper's
+    /// testbed and the pre-topology behaviour, bit for bit.
+    pub topology: TopoKind,
     /// Artifact directory (`make artifacts` output).
     pub artifacts_dir: String,
     /// Output directory for CSVs and logs.
@@ -83,6 +88,7 @@ impl Default for Config {
             bandwidth_mbps: 117.0 * 1.048576, // gigabit usable, in MB/s
             latency_us: 100.0,
             parallelism: 1,
+            topology: TopoKind::Flat,
             artifacts_dir: "artifacts".into(),
             out_dir: "results".into(),
         }
@@ -120,6 +126,9 @@ impl Config {
         self.bandwidth_mbps = a.f64_or("bandwidth-mbps", self.bandwidth_mbps);
         self.latency_us = a.f64_or("latency-us", self.latency_us);
         self.parallelism = a.usize_or("parallelism", self.parallelism);
+        if let Some(t) = a.str_opt("topology") {
+            self.topology = TopoKind::parse(t)?;
+        }
         self.artifacts_dir = a.str_or("artifacts", &self.artifacts_dir);
         self.out_dir = a.str_or("out", &self.out_dir);
         self.validate()?;
@@ -149,6 +158,7 @@ impl Config {
                 "bandwidth_mbps" => self.bandwidth_mbps = v.parse()?,
                 "latency_us" => self.latency_us = v.parse()?,
                 "parallelism" => self.parallelism = v.parse()?,
+                "topology" => self.topology = TopoKind::parse(v)?,
                 "artifacts_dir" => self.artifacts_dir = v.clone(),
                 "out_dir" => self.out_dir = v.clone(),
                 other => anyhow::bail!("unknown config key `{other}`"),
@@ -176,6 +186,7 @@ impl Config {
         );
         anyhow::ensure!(self.steps_per_epoch > 0, "steps_per_epoch must be > 0");
         anyhow::ensure!(self.parallelism >= 1, "parallelism must be >= 1");
+        self.topology.validate()?;
         Ok(())
     }
 
@@ -283,6 +294,22 @@ mod tests {
             ..Config::default()
         };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn topology_knob_flows_from_flag_and_file() {
+        let a = Args::parse(
+            ["train", "--topology", "hier:4"].into_iter().map(String::from),
+        );
+        let cfg = Config::default().apply_args(&a).unwrap();
+        assert_eq!(cfg.topology, TopoKind::Hier { group: 4 });
+        let kv = parse_kv("topology = tree").unwrap();
+        assert_eq!(Config::default().apply_kv(&kv).unwrap().topology, TopoKind::Tree);
+        assert_eq!(Config::default().topology, TopoKind::Flat);
+        let a = Args::parse(
+            ["train", "--topology", "mesh"].into_iter().map(String::from),
+        );
+        assert!(Config::default().apply_args(&a).is_err());
     }
 
     #[test]

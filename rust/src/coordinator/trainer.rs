@@ -8,9 +8,8 @@ use crate::config::Config;
 use crate::data::{CharCorpus, SynthClassification};
 use crate::metrics::CompressionAccount;
 use crate::model::ParamLayout;
-use crate::net::RingNet;
+use crate::net::{RingNet, Topology};
 use crate::optim::{LrSchedule, MomentumSgd};
-use crate::ring;
 use crate::ring::{Arena, Executor};
 use crate::runtime::{Artifact, ImportanceKernel, Runtime};
 use crate::sparse::BitMask;
@@ -80,6 +79,9 @@ pub struct Trainer {
     account_scratch: CompressionAccount,
     /// Node-parallel executor for the reduce paths (`cfg.parallelism`).
     exec: Executor,
+    /// Communication topology of the reduce (`--topology`,
+    /// DESIGN.md §10).
+    topo: Box<dyn Topology>,
     /// Staging arena for the reduce hot paths (DESIGN.md §9).
     arena: Arena,
 }
@@ -157,6 +159,7 @@ impl Trainer {
 
         Ok(Trainer {
             exec: Executor::new(cfg.parallelism),
+            topo: cfg.topology.build(cfg.nodes),
             arena: Arena::for_nodes(cfg.nodes),
             net: RingNet::new(cfg.nodes, cfg.link_spec(), 0.05),
             stores: (0..cfg.nodes)
@@ -320,8 +323,9 @@ impl Trainer {
     // ---- reduce paths ------------------------------------------------
 
     fn reduce_dense(&mut self, lr: f32) -> anyhow::Result<()> {
-        let rep =
-            ring::dense::allreduce_in(&mut self.net, &mut self.grads, &self.exec, &mut self.arena);
+        let rep = self
+            .topo
+            .dense(&mut self.net, &mut self.grads, &self.exec, &mut self.arena);
         let n = self.cfg.nodes as f32;
         // grads[0] now holds the sum; average and apply with momentum.
         let avg: Vec<f32> = self.grads[0].iter().map(|&g| g / n).collect();
@@ -342,9 +346,9 @@ impl Trainer {
         // RNG stream; the ternary blobs are ~16x smaller than dense, so
         // holding all n is cheap), then decode + sum sequentially in
         // node order — the same f32 addition order as the sequential
-        // loop, one transient dense vector at a time — and allgather
-        // the quantized blobs.
-        let before: Vec<u64> = (0..n).map(|i| self.net.node_tx_bytes(i)).collect();
+        // loop, one transient dense vector at a time — and spread the
+        // quantized blobs over the configured topology (blob sizes are
+        // shape-determined, so every node's blob prices identically).
         let grads = &self.grads;
         let layout = &self.layout;
         let encoded: Vec<TernGrad> = self.exec.map_mut(&mut self.node_rngs, |node, rng| {
@@ -356,20 +360,10 @@ impl Trainer {
                 *s += v;
             }
         }
-        {
-            let Arena {
-                grows,
-                mk_blobs,
-                ag_sends,
-                ..
-            } = &mut self.arena;
-            let blobs = encoded.iter().map(|t| t.wire_bytes());
-            Arena::allgather_into(&mut self.net, grows, mk_blobs, ag_sends, blobs);
-        }
-        let wire = (0..n)
-            .map(|i| self.net.node_tx_bytes(i) - before[i])
-            .sum::<u64>()
-            / n as u64;
+        let rep =
+            self.topo
+                .spread_bytes(&mut self.net, encoded[0].wire_bytes(), n, &mut self.arena);
+        let wire = rep.total_bytes() / n as u64;
         let avg: Vec<f32> = sum.iter().map(|&g| g / n as f32).collect();
         self.opt.step(&mut self.params, &avg, lr);
         self.account_scratch.record_full(
@@ -391,8 +385,9 @@ impl Trainer {
             dgc.density = density;
             dgc.step(&grads[node])
         });
-        let (sum, rep) =
-            ring::sparse::allreduce_in(&mut self.net, &sparses, &self.exec, &mut self.arena);
+        let (sum, rep) = self
+            .topo
+            .sparse(&mut self.net, &sparses, &self.exec, &mut self.arena);
         let inv_n = 1.0 / n as f32;
         for (i, &v) in sum.iter().enumerate() {
             if v != 0.0 {
@@ -477,7 +472,7 @@ impl Trainer {
         // borrows `stores` while the net (a disjoint field) mutates.
         let mask_refs: Vec<&BitMask> = masks.iter().collect();
         let values: Vec<&[f32]> = self.stores.iter().map(|s| s.pending()).collect();
-        let (shared, summed, rep) = ring::masked::allreduce_in(
+        let (shared, summed, rep) = self.topo.masked(
             &mut self.net,
             &mask_refs,
             &values,

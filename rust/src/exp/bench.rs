@@ -25,8 +25,8 @@ use crate::compress::Method;
 use crate::exp::simrun::{SimCfg, SimEngine};
 use crate::metrics::bench::BenchReport;
 use crate::model::{zoo, LayerKind, ParamLayout};
-use crate::net::{CostModel, LinkSpec, RingNet};
-use crate::ring::{self, Arena, Executor, ReduceReport};
+use crate::net::{CostModel, LinkSpec, RingNet, TopoKind, Topology};
+use crate::ring::{Arena, Executor, ReduceReport};
 use crate::sparse::{BitMask, SparseVec};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -122,7 +122,16 @@ fn deterministic_sparse(rng: &mut Rng, len: usize) -> SparseVec {
     SparseVec::from_dense(&dense)
 }
 
-/// The ring transport sweep: dense / sparse / masked × ring sizes.
+/// Topologies the ring sweep covers (DESIGN.md §10): the flat ring,
+/// a group-of-4 hierarchy (4 divides every default ring size), and the
+/// binomial tree.
+pub const BENCH_TOPOLOGIES: [TopoKind; 3] =
+    [TopoKind::Flat, TopoKind::Hier { group: 4 }, TopoKind::Tree];
+
+/// The ring transport sweep: dense / sparse / masked × topologies ×
+/// ring sizes. Dense and masked rows carry the closed-form
+/// `CostModel::topo_*` predictions (`model_s`, `model_bytes`), which
+/// must equal the simulated `virtual_s` / `total_bytes` bit for bit.
 pub fn run_ring(cfg: &BenchCfg) -> BenchReport {
     let coords = cfg.ring_coords();
     let mut report = BenchReport::new("ring", cfg.config_json());
@@ -130,6 +139,10 @@ pub fn run_ring(cfg: &BenchCfg) -> BenchReport {
     for &n in &cfg.ring_sizes {
         let model = CostModel::new(n, cfg.link);
         let mut rng = Rng::new(cfg.seed ^ ((n as u64) << 20));
+        // Payloads are drawn once per ring size — in the pre-topology
+        // stream order (dense base, then sparse inputs, then the mask) —
+        // and shared by every topology, so rows differ only in the
+        // communication pattern.
         let base: Vec<Vec<f32>> = (0..n)
             .map(|_| {
                 let mut v = vec![0.0f32; coords];
@@ -137,112 +150,131 @@ pub fn run_ring(cfg: &BenchCfg) -> BenchReport {
                 v
             })
             .collect();
-
-        // -- dense ------------------------------------------------------
-        // The schedule reduces in place, so each sample restores `work`
-        // from `base` first (a memcpy, no allocation). ns_op therefore
-        // includes the restore + a fresh RingNet; both are identical on
-        // both sides of a baseline comparison, so the gate still tracks
-        // the schedule.
-        let mut arena = Arena::for_nodes(n);
-        let mut work = base.clone();
-        let run = |work: &mut [Vec<f32>], arena: &mut Arena| -> ReduceReport {
-            for (w, b) in work.iter_mut().zip(&base) {
-                w.copy_from_slice(b);
-            }
-            let mut net = RingNet::new(n, cfg.link, 1.0);
-            ring::dense::allreduce_in(&mut net, work, &exec, arena)
-        };
-        let rep = run(&mut work, &mut arena);
-        let ns = cfg.timing.then(|| {
-            timer::bench(0, cfg.repeats.max(1), || {
-                std::hint::black_box(run(&mut work, &mut arena));
-            })
-        });
-        report.push(ring_row(
-            &format!("ring/dense/n{n}/c{coords}"),
-            "dense",
-            n,
-            coords,
-            &rep,
-            Some(model.dense_seconds(coords)),
-            ns.map(|s| s.median_ns),
-        ));
-
-        // -- sparse (DGC-style per-node supports) -----------------------
         let inputs: Vec<SparseVec> =
             (0..n).map(|_| deterministic_sparse(&mut rng, coords)).collect();
-        let mut arena = Arena::for_nodes(n);
-        let run = |arena: &mut Arena| -> ReduceReport {
-            let mut net = RingNet::new(n, cfg.link, 1.0);
-            ring::sparse::allreduce_in(&mut net, &inputs, &exec, arena).1
-        };
-        let rep = run(&mut arena);
-        let ns = cfg.timing.then(|| {
-            timer::bench(0, cfg.repeats.max(1), || {
-                std::hint::black_box(run(&mut arena));
-            })
-        });
-        report.push(ring_row(
-            &format!("ring/sparse/n{n}/c{coords}"),
-            "sparse",
-            n,
-            coords,
-            &rep,
-            None,
-            ns.map(|s| s.median_ns),
-        ));
-
-        // -- masked (Algorithm 1's shared-mask transport) ---------------
         let mut mask = BitMask::zeros(coords);
         for _ in 0..one_percent(coords) {
             mask.set(rng.below(coords));
         }
         let refs: Vec<&[f32]> = base.iter().map(|v| v.as_slice()).collect();
         let support = mask.count();
-        let mut arena = Arena::for_nodes(n);
-        let run = |arena: &mut Arena| -> ReduceReport {
-            let mut net = RingNet::new(n, cfg.link, 1.0);
-            ring::masked::allreduce_in(&mut net, &[&mask], &refs, &exec, arena).2
-        };
-        let rep = run(&mut arena);
-        let ns = cfg.timing.then(|| {
-            timer::bench(0, cfg.repeats.max(1), || {
-                std::hint::black_box(run(&mut arena));
-            })
-        });
-        report.push(ring_row(
-            &format!("ring/masked/n{n}/c{coords}"),
-            "masked",
-            n,
-            coords,
-            &rep,
-            Some(model.masked_seconds(coords, 1, support)),
-            ns.map(|s| s.median_ns),
-        ));
+
+        for kind in BENCH_TOPOLOGIES {
+            let topo = kind.build(n);
+            let tname = kind.name();
+
+            // -- dense --------------------------------------------------
+            // The schedule reduces in place, so each sample restores
+            // `work` from `base` first (a memcpy, no allocation). ns_op
+            // therefore includes the restore + a fresh RingNet; both are
+            // identical on both sides of a baseline comparison, so the
+            // gate still tracks the schedule.
+            let mut arena = Arena::for_nodes(n);
+            let mut work = base.clone();
+            let run = |work: &mut [Vec<f32>], arena: &mut Arena| -> ReduceReport {
+                for (w, b) in work.iter_mut().zip(&base) {
+                    w.copy_from_slice(b);
+                }
+                let mut net = RingNet::new(n, cfg.link, 1.0);
+                topo.dense(&mut net, work, &exec, arena)
+            };
+            let rep = run(&mut work, &mut arena);
+            let ns = cfg.timing.then(|| {
+                timer::bench(0, cfg.repeats.max(1), || {
+                    std::hint::black_box(run(&mut work, &mut arena));
+                })
+            });
+            report.push(ring_row(
+                &format!("ring/dense/{tname}/n{n}/c{coords}"),
+                "dense",
+                &tname,
+                n,
+                coords,
+                &rep,
+                Some(model.topo_dense_seconds(kind, coords)),
+                Some(model.topo_dense_total_bytes(kind, coords)),
+                ns.map(|s| s.median_ns),
+            ));
+
+            // -- sparse (DGC-style per-node supports) -------------------
+            let mut arena = Arena::for_nodes(n);
+            let run = |arena: &mut Arena| -> ReduceReport {
+                let mut net = RingNet::new(n, cfg.link, 1.0);
+                topo.sparse(&mut net, &inputs, &exec, arena).1
+            };
+            let rep = run(&mut arena);
+            let ns = cfg.timing.then(|| {
+                timer::bench(0, cfg.repeats.max(1), || {
+                    std::hint::black_box(run(&mut arena));
+                })
+            });
+            report.push(ring_row(
+                &format!("ring/sparse/{tname}/n{n}/c{coords}"),
+                "sparse",
+                &tname,
+                n,
+                coords,
+                &rep,
+                None,
+                None,
+                ns.map(|s| s.median_ns),
+            ));
+
+            // -- masked (Algorithm 1's shared-mask transport) -----------
+            let mut arena = Arena::for_nodes(n);
+            let run = |arena: &mut Arena| -> ReduceReport {
+                let mut net = RingNet::new(n, cfg.link, 1.0);
+                topo.masked(&mut net, &[&mask], &refs, &exec, arena).2
+            };
+            let rep = run(&mut arena);
+            let ns = cfg.timing.then(|| {
+                timer::bench(0, cfg.repeats.max(1), || {
+                    std::hint::black_box(run(&mut arena));
+                })
+            });
+            report.push(ring_row(
+                &format!("ring/masked/{tname}/n{n}/c{coords}"),
+                "masked",
+                &tname,
+                n,
+                coords,
+                &rep,
+                Some(model.topo_masked_seconds(kind, coords, 1, support)),
+                Some(model.topo_masked_total_bytes(kind, coords, 1, support)),
+                ns.map(|s| s.median_ns),
+            ));
+        }
     }
     report
 }
 
+#[allow(clippy::too_many_arguments)]
 fn ring_row(
     id: &str,
     schedule: &str,
+    topology: &str,
     nodes: usize,
     coords: usize,
     rep: &ReduceReport,
     model_s: Option<f64>,
+    model_bytes: Option<u64>,
     ns_op: Option<f64>,
 ) -> Json {
     let mut fields = vec![
         ("id", Json::from(id)),
         ("schedule", Json::from(schedule)),
+        ("topology", Json::from(topology)),
         ("nodes", Json::from(nodes)),
         ("coords", Json::from(coords)),
         ("bytes_per_node", Json::from(rep.mean_bytes_per_node())),
+        ("total_bytes", Json::from(rep.total_bytes() as f64)),
         ("virtual_s", Json::from(rep.seconds)),
     ];
     if let Some(m) = model_s {
         fields.push(("model_s", Json::from(m)));
+    }
+    if let Some(b) = model_bytes {
+        fields.push(("model_bytes", Json::from(b as f64)));
     }
     if let Some(ns) = ns_op {
         fields.push(("ns_op", Json::from(ns)));
@@ -304,6 +336,13 @@ pub fn run_step(cfg: &BenchCfg) -> BenchReport {
                     method,
                     seed: cfg.seed,
                     link: cfg.link,
+                    // Pinned: the step sweep measures the 5 methods on
+                    // the paper's flat ring (the ring sweep carries the
+                    // topology axis). Inheriting RINGIWP_TOPOLOGY here
+                    // would make BENCH_step.json — and the baseline
+                    // gate's deterministic fields — environment-
+                    // dependent.
+                    topology: TopoKind::Flat,
                     ..Default::default()
                 };
                 // Deterministic metrics pass.
@@ -328,10 +367,12 @@ pub fn run_step(cfg: &BenchCfg) -> BenchReport {
                     .median_ns
                 });
                 let id = format!("step/{model_name}/{}/n{n}", method.name());
+                let topology = engine.topology().name();
                 let mut fields = vec![
                     ("id", Json::from(id.as_str())),
                     ("model", Json::from(*model_name)),
                     ("method", Json::from(method.name())),
+                    ("topology", Json::from(topology.as_str())),
                     ("nodes", Json::from(n)),
                     ("params", Json::from(layout.total_params())),
                     ("bytes_per_node", Json::from(wire_sum as f64 / steps as f64)),
@@ -371,7 +412,8 @@ mod tests {
         let a = run_ring(&cfg).to_json();
         let b = run_ring(&cfg).to_json();
         assert_eq!(canonical(&a), canonical(&b));
-        assert_eq!(a.get("rows").as_arr().unwrap().len(), 3 * 2);
+        // 3 schedules x 3 topologies x 2 ring sizes.
+        assert_eq!(a.get("rows").as_arr().unwrap().len(), 3 * 3 * 2);
     }
 
     #[test]
@@ -410,16 +452,27 @@ mod tests {
     fn ring_rows_carry_matching_cost_model_predictions() {
         let cfg = tiny_cfg();
         let j = run_ring(&cfg).to_json();
+        let mut predicted_rows = 0;
         for row in j.get("rows").as_arr().unwrap() {
+            let id = row.get("id").as_str().unwrap_or("?").to_string();
             if let Some(model_s) = row.get("model_s").as_f64() {
+                predicted_rows += 1;
                 let virtual_s = row.get("virtual_s").as_f64().unwrap();
                 assert_eq!(
                     model_s.to_bits(),
                     virtual_s.to_bits(),
-                    "cost model disagrees with simulation on {}",
-                    row.get("id").as_str().unwrap_or("?")
+                    "cost model time disagrees with simulation on {id}"
+                );
+                let model_bytes = row.get("model_bytes").as_f64().unwrap();
+                let total_bytes = row.get("total_bytes").as_f64().unwrap();
+                assert_eq!(
+                    model_bytes.to_bits(),
+                    total_bytes.to_bits(),
+                    "cost model bytes disagree with simulation on {id}"
                 );
             }
         }
+        // dense + masked rows for every topology x ring size.
+        assert_eq!(predicted_rows, 2 * 3 * 2);
     }
 }

@@ -1,69 +1,107 @@
-//! The §II density-growth claim: DGC's per-node top-k densifies as the
-//! ring grows ("top 1% … the worst case is 2%" per hop, compounding),
-//! while Algorithm 1's shared mask keeps density flat in N.
+//! The §II density-growth claim, swept across topologies: DGC's
+//! per-node top-k densifies as the reduce progresses ("top 1% … the
+//! worst case is 2%" per hop, compounding), while Algorithm 1's shared
+//! mask keeps density flat — and the *communication pattern* decides
+//! how much that densification costs on the wire (DESIGN.md §10,
+//! EXPERIMENTS.md §7).
 //!
-//! Output: density after a full scatter-reduce vs ring size, for DGC
-//! and IWP, plus the analytic 1-(1-d)^N model.
+//! Output: density after a full reduce vs ring size, for DGC and IWP
+//! under the flat ring, a group-8 hierarchy, and the binomial tree,
+//! plus per-step wire bytes/time and the analytic `1-(1-d)^N` model.
 
 use crate::compress::Method;
 use crate::csv_row;
 use crate::exp::simrun::{SimCfg, SimEngine};
 use crate::metrics::CsvWriter;
 use crate::model::zoo;
+use crate::net::TopoKind;
 use crate::ring::sparse::expected_final_density;
 
-/// Sweep ring sizes under DGC and IWP and write
+/// Topologies the density sweep compares (group 8 keeps at least two
+/// groups from 16 nodes up).
+pub const DENSITY_TOPOLOGIES: [TopoKind; 3] =
+    [TopoKind::Flat, TopoKind::Hier { group: 8 }, TopoKind::Tree];
+
+/// Sweep ring sizes × topologies under DGC and IWP and write
 /// `density_growth.csv` against the analytic `1-(1-d)^N` model.
 pub fn run(out_dir: &str, seed: u64) -> anyhow::Result<()> {
     let layout = zoo::resnet50();
     let ring_sizes = [4usize, 8, 16, 32, 64, 96];
     let mut csv = CsvWriter::create(
         format!("{out_dir}/density_growth.csv"),
-        &["nodes", "method", "final_density", "analytic_model"],
+        &[
+            "nodes",
+            "topology",
+            "method",
+            "final_density",
+            "analytic_model",
+            "wire_bytes_per_node",
+            "virtual_s",
+        ],
     )?;
-    println!("== DGC-vs-IWP density growth on the ring (ResNet50, d0=1%) ==");
+    println!("== DGC-vs-IWP density growth across topologies (ResNet50, d0=1%) ==");
     println!(
-        "{:>6} {:>16} {:>16} {:>16}",
-        "nodes", "dgc_density", "iwp_density", "model_1-(1-d)^N"
+        "{:>6} {:>9} {:>16} {:>16} {:>16} {:>14}",
+        "nodes", "topology", "dgc_density", "iwp_density", "model_1-(1-d)^N", "dgc_MB/node"
     );
     for &n in &ring_sizes {
-        let mut densities = Vec::new();
-        for method in [Method::Dgc, Method::IwpFixed] {
-            let cfg = SimCfg {
-                nodes: n,
-                method,
-                dgc_density: 0.01,
-                // Calibrated to ~1% per-broadcaster density on this
-                // model (hard threshold, single mask node) so both
-                // methods start from the paper's "top 1%" regime.
-                threshold: 0.04,
-                mask_nodes: 1,
-                random_select: false,
-                seed,
-                ..Default::default()
-            };
-            let mut engine = SimEngine::new(layout.clone(), cfg);
-            let mut last = 0.0;
-            for s in 0..2 {
-                last = engine.step(s).density;
+        for topology in DENSITY_TOPOLOGIES {
+            let mut densities = Vec::new();
+            let mut dgc_bytes = 0u64;
+            for method in [Method::Dgc, Method::IwpFixed] {
+                let cfg = SimCfg {
+                    nodes: n,
+                    method,
+                    dgc_density: 0.01,
+                    // Calibrated to ~1% per-broadcaster density on this
+                    // model (hard threshold, single mask node) so both
+                    // methods start from the paper's "top 1%" regime.
+                    threshold: 0.04,
+                    mask_nodes: 1,
+                    random_select: false,
+                    seed,
+                    topology,
+                    ..Default::default()
+                };
+                let mut engine = SimEngine::new(layout.clone(), cfg);
+                let (mut last_density, mut wire, mut secs) = (0.0, 0u64, 0.0);
+                for s in 0..2 {
+                    let r = engine.step(s);
+                    last_density = r.density;
+                    wire = r.wire_bytes_per_node;
+                    secs = r.seconds;
+                }
+                densities.push(last_density);
+                if method == Method::Dgc {
+                    dgc_bytes = wire;
+                }
+                csv_row!(
+                    csv,
+                    n,
+                    topology.name(),
+                    method.name(),
+                    last_density,
+                    expected_final_density(0.01, n),
+                    wire,
+                    secs
+                )?;
             }
-            densities.push(last);
-            csv_row!(
-                csv,
-                n,
-                method.name(),
-                last,
-                expected_final_density(0.01, n)
-            )?;
+            println!(
+                "{n:>6} {:>9} {:>15.4}% {:>15.4}% {:>15.4}% {:>14.2}",
+                topology.name(),
+                densities[0] * 100.0,
+                densities[1] * 100.0,
+                expected_final_density(0.01, n) * 100.0,
+                dgc_bytes as f64 / 1e6
+            );
         }
-        println!(
-            "{n:>6} {:>15.4}% {:>15.4}% {:>15.4}%",
-            densities[0] * 100.0,
-            densities[1] * 100.0,
-            expected_final_density(0.01, n) * 100.0
-        );
     }
     csv.flush()?;
-    println!("paper (Sec. II): DGC density grows towards dense as N grows;\n       IWP's shared mask is invariant in N");
+    println!(
+        "paper (Sec. II): DGC density grows towards dense as N grows;\n       \
+         IWP's shared mask is invariant in N — on every topology, but the\n       \
+         wire cost of the densified payload depends on the pattern\n       \
+         (EXPERIMENTS.md §7)"
+    );
     Ok(())
 }

@@ -16,8 +16,7 @@ use crate::compress::{dgc::Dgc, select, terngrad::TernGrad, warmup::Warmup, Meth
 use crate::grad::SynthGrads;
 use crate::metrics::CompressionAccount;
 use crate::model::ParamLayout;
-use crate::net::{LinkSpec, RingNet};
-use crate::ring;
+use crate::net::{LinkSpec, RingNet, TopoKind, Topology};
 use crate::ring::{Arena, Executor};
 use crate::sparse::BitMask;
 use crate::util::rng::Rng;
@@ -55,6 +54,10 @@ pub struct SimCfg {
     /// DESIGN.md §4). 1 = sequential oracle, bit-identical results at
     /// any width.
     pub parallelism: usize,
+    /// Communication topology the reduce runs over (`net::topo`,
+    /// DESIGN.md §10). Defaults to `RINGIWP_TOPOLOGY`, else the flat
+    /// ring — which is bit-identical to the pre-topology engine.
+    pub topology: TopoKind,
 }
 
 impl Default for SimCfg {
@@ -77,6 +80,7 @@ impl Default for SimCfg {
             seed: 17,
             link: LinkSpec::gigabit_ethernet(),
             parallelism: default_parallelism(),
+            topology: TopoKind::from_env(),
         }
     }
 }
@@ -121,6 +125,7 @@ pub struct SimEngine {
     /// Compression accounting over the whole run.
     pub account: CompressionAccount,
     exec: Executor,
+    topo: Box<dyn Topology>,
     arena: Arena,
     imp_scratch: Vec<f32>,
     /// Per-broadcaster (u, importance) scratch, max-layer sized. Both
@@ -175,6 +180,7 @@ impl SimEngine {
             ctl_rng: root.split(0xC011),
             account: CompressionAccount::new(),
             exec: Executor::new(cfg.parallelism),
+            topo: cfg.topology.build(cfg.nodes),
             arena: Arena::for_nodes(cfg.nodes),
             imp_scratch: vec![0.0; total],
             score_scratch: {
@@ -206,6 +212,12 @@ impl SimEngine {
     /// the (re)allocation counter the zero-alloc steady-state tests pin.
     pub fn arena(&self) -> &Arena {
         &self.arena
+    }
+
+    /// The communication topology this engine reduces over
+    /// (DESIGN.md §10).
+    pub fn topology(&self) -> TopoKind {
+        self.topo.kind()
     }
 
     /// The synthetic weight buffer importance is scored against.
@@ -264,14 +276,21 @@ impl SimEngine {
         let t0 = self.net.clock();
         let (wire, payload, density) = match self.cfg.method {
             Method::Baseline => {
-                // Account-only dense ring (moving 61M f32 per node through
-                // the data path buys nothing here; bytes are exact).
-                ring::dense::rounds_bytes_only(
+                // Account-only dense rounds under the configured topology
+                // (moving 61M f32 per node through the data path buys
+                // nothing here; bytes are exact). total/N is the exact
+                // per-node mean — for the flat ring it equals the paper's
+                // 2(N-1)/N · V reference.
+                let rep = self.topo.dense_bytes_only(
                     &mut self.net,
                     self.layout.total_params(),
                     &mut self.arena,
                 );
-                (self.dense_ref_bytes(), self.layout.dense_bytes(), 1.0)
+                (
+                    rep.total_bytes() / self.cfg.nodes as u64,
+                    self.layout.dense_bytes(),
+                    1.0,
+                )
             }
             Method::TernGrad => {
                 // Blob sizes are shape-determined (codes + scales), so one
@@ -279,24 +298,16 @@ impl SimEngine {
                 let n = self.cfg.nodes;
                 let t = TernGrad::encode(&self.grads[0], &self.layout, &mut self.rngs[0]);
                 let blob = t.wire_bytes();
-                let before = self.net.node_tx_bytes(0);
-                // Ternary values are not closed under addition, so a ring
-                // cannot scatter-REDUCE them — the quantized blobs must
-                // allgather (N-1 hops each). This is why quantization
-                // alone does not help rings (the paper's Sec. II point);
-                // the payload ratio below is TernGrad's native
-                // parameter-server number.
-                {
-                    let Arena {
-                        grows,
-                        mk_blobs,
-                        ag_sends,
-                        ..
-                    } = &mut self.arena;
-                    let blobs = (0..n).map(|_| blob);
-                    Arena::allgather_into(&mut self.net, grows, mk_blobs, ag_sends, blobs);
-                }
-                (self.net.node_tx_bytes(0) - before, blob, 1.0)
+                // Ternary values are not closed under addition, so no
+                // topology can scatter-REDUCE them — the quantized blobs
+                // must spread whole (every blob to every node). This is
+                // why quantization alone does not help rings (the
+                // paper's Sec. II point); the payload ratio below is
+                // TernGrad's native parameter-server number.
+                let rep = self
+                    .topo
+                    .spread_bytes(&mut self.net, blob, n, &mut self.arena);
+                (rep.total_bytes() / n as u64, blob, 1.0)
             }
             Method::Dgc => {
                 let density =
@@ -329,7 +340,7 @@ impl SimEngine {
                         m
                     },
                 ));
-                let rep = ring::sparse::allreduce_support_in(
+                let rep = self.topo.sparse_support(
                     &mut self.net,
                     &supports,
                     &self.exec,
@@ -426,11 +437,9 @@ impl SimEngine {
                 }
                 self.prev_stats = new_stats;
                 let mask_refs: Vec<&BitMask> = masks.iter().collect();
-                let (shared, rep) = ring::masked::allreduce_bytes_only_in(
-                    &mut self.net,
-                    &mask_refs,
-                    &mut self.arena,
-                );
+                let (shared, rep) =
+                    self.topo
+                        .masked_bytes_only(&mut self.net, &mask_refs, &mut self.arena);
                 let shared_ref = &shared;
                 self.exec.map_mut(&mut self.stores, |_, store| {
                     let _ = store.take_masked(shared_ref);
@@ -537,6 +546,39 @@ mod tests {
             (iwp_big / iwp_small.max(1e-9)) < 2.0,
             "IWP should stay sparse: {iwp_small} -> {iwp_big}"
         );
+    }
+
+    #[test]
+    fn topologies_trade_time_for_bytes() {
+        // Same Baseline workload on all three topologies: the tree moves
+        // the same 2(N-1)·V total as the ring but in full-payload rounds,
+        // so its virtual wire time is far worse — the constant-cost
+        // property the paper builds on is a *ring* property. The flat
+        // per-node mean stays at the 2(N-1)/N reference.
+        let layout = small_layout();
+        let run = |topology: TopoKind| -> (u64, f64) {
+            let mut c = cfg(Method::Baseline, 8);
+            c.topology = topology;
+            let mut e = SimEngine::new(layout.clone(), c);
+            let r = e.step(0);
+            assert_eq!(e.topology(), topology);
+            (r.wire_bytes_per_node, r.seconds)
+        };
+        let (flat_b, flat_s) = run(TopoKind::Flat);
+        let (tree_b, tree_s) = run(TopoKind::Tree);
+        let (hier_b, hier_s) = run(TopoKind::Hier { group: 4 });
+        let v = layout.dense_bytes();
+        assert_eq!(flat_b, 2 * 7 * v / 8, "flat stays at the 2(N-1)/N reference");
+        assert_eq!(tree_b, 2 * 7 * v / 8, "tree total is also 2(N-1)V");
+        // Flat: 2(N-1) rounds of V/N; tree: 2·log2(N) rounds of V. Both
+        // step times share the same fixed compute gap, so strict
+        // inequality isolates the wire-time difference.
+        assert!(
+            tree_s > flat_s,
+            "tree wire time {tree_s} should exceed flat {flat_s}"
+        );
+        // The hierarchy's chain broadcast also ships full payloads.
+        assert!(hier_b > 0 && hier_s > flat_s);
     }
 
     #[test]

@@ -28,17 +28,24 @@ SUBCOMMANDS:
                   iwp-layerwise|dgc      --nodes N --steps N --thr X --seed N
                   --mask-nodes R --no-random-select --config FILE --out DIR
                   --parallelism W (node-parallel executor width, default 1)
+                  --topology flat|hier:<group_size>|tree (reduce topology,
+                  DESIGN.md §10; default flat)
     exp         regenerate a paper experiment:
                   --id table1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|density|sweep|all
                   --out DIR (default results/) --steps N --nodes N --seed N
-                  (env RINGIWP_PARALLELISM=W widens the sim executor;
-                   results are bit-identical at any width)
+                  (env RINGIWP_PARALLELISM=W widens the sim executor —
+                   results are bit-identical at any width; env
+                   RINGIWP_TOPOLOGY=flat|hier:<g>|tree switches the sim
+                   reduce topology; `density` sweeps all three itself)
     bench       run the in-process perf harness (exp::bench) and emit
-                schema-versioned BENCH_ring.json / BENCH_step.json:
+                schema-versioned BENCH_ring.json / BENCH_step.json (ring
+                rows cover all three topologies):
                   --out DIR (default .) --quick --no-timing --repeats N
                   --ring-sizes 4,8,32,96 --seed N
                   --baseline FILE   gate ns/op + determinism against a
                                     checked-in baseline (bench/baseline.json)
+                  --strict-baseline fail (exit 1) when a baseline section
+                                    ships null instead of skipping the gate
                   --diff DIR_A DIR_B  compare two output dirs' payloads
                                     modulo volatile fields (exit 1 on drift)
     info        list artifacts, PJRT platform, zoo inventories
@@ -282,11 +289,17 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     println!("wrote {step_path} ({} rows)", step.len());
 
     // Regression gate against a checked-in baseline.
+    let strict = args.switch("strict-baseline");
+    anyhow::ensure!(
+        !strict || args.str_opt("baseline").is_some(),
+        "--strict-baseline requires --baseline FILE — without it no gate runs at all"
+    );
     if let Some(baseline_path) = args.str_opt("baseline") {
         let text = std::fs::read_to_string(baseline_path)?;
         let baseline = json::parse(&text).map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
         let max_regression = baseline.get("max_regression").as_f64().unwrap_or(0.2);
         let mut failures = Vec::new();
+        let mut unseeded = Vec::new();
         for (section, current) in [("ring", ring.to_json()), ("step", step.to_json())] {
             let base = baseline.get(section);
             if matches!(base, json::Json::Null) {
@@ -294,6 +307,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                     "baseline `{section}` section is null — gate skipped (seed it from a \
                      trusted CI run's BENCH_{section}.json artifact; see EXPERIMENTS.md §6)"
                 );
+                unseeded.push(section);
                 continue;
             }
             failures.extend(
@@ -301,6 +315,18 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                     .into_iter()
                     .map(|f| format!("[{section}] {f}")),
             );
+        }
+        // A gate that skipped a section must not read as protection:
+        // --strict-baseline (the CI setting) turns the silent skip into
+        // a failure carrying the seeding instruction — appended after
+        // any real regressions so those still get reported first.
+        if strict && !unseeded.is_empty() {
+            failures.push(format!(
+                "baseline {baseline_path} ships null section(s) {unseeded:?} — those gates \
+                 verified nothing. Seed them: download the `bench-json` artifact from a \
+                 trusted CI run of this commit and paste BENCH_ring.json / BENCH_step.json \
+                 verbatim into the `ring` / `step` keys (EXPERIMENTS.md §6), then re-run."
+            ));
         }
         if failures.is_empty() {
             println!(

@@ -1,4 +1,5 @@
-//! Closed-form wire-time cost model for ring schedules (DESIGN.md §9).
+//! Closed-form wire-time cost model for ring schedules (DESIGN.md §9)
+//! and for the topology subsystem's schedules (DESIGN.md §10).
 //!
 //! [`RingNet`](super::RingNet) *executes* schedules round by round;
 //! this module *predicts* the same byte and virtual-time totals from
@@ -10,8 +11,15 @@
 //! both numbers as a built-in sanity check. For the sparse DGC schedule
 //! (data-dependent densification) the model uses the paper's
 //! independence approximation and is an estimate, not an oracle.
+//!
+//! The per-topology predictions (`CostModel::topo_dense_seconds` and
+//! friends) consume the same net-free round plans the accounting-only
+//! simulation paths drive `RingNet` with (`net::topo`, DESIGN.md §10),
+//! so prediction and simulation agree bit for bit *by construction*
+//! for every topology, not just the flat ring.
 
-use super::LinkSpec;
+use super::topo::{hier_dense_plan, hier_spread_plan, tree_dense_plan, tree_spread_plan};
+use super::{LinkSpec, TopoKind};
 use crate::ring::chunk_ranges;
 use crate::sparse::{wire_bytes, WireFormat};
 
@@ -151,6 +159,127 @@ impl CostModel {
             t += self.round_seconds(seg_bytes(max_chunk, d_final));
         }
         t
+    }
+
+    // ---- per-topology predictions (DESIGN.md §10) ----------------------
+
+    /// Accumulate (total bytes, virtual seconds) over a round plan,
+    /// pricing each round exactly as [`RingNet::round`](super::RingNet::round)
+    /// does: the round lasts as long as its slowest transfer, folded in
+    /// node order.
+    fn run_plan(&self, plan: impl FnOnce(&mut dyn FnMut(&[u64]))) -> (u64, f64) {
+        let mut bytes = 0u64;
+        let mut t = 0.0f64;
+        let link = self.link;
+        plan(&mut |sends: &[u64]| {
+            let dur = sends
+                .iter()
+                .map(|&b| link.transfer_time(b))
+                .fold(0.0f64, f64::max);
+            bytes += sends.iter().sum::<u64>();
+            t += dur;
+        });
+        (bytes, t)
+    }
+
+    fn topo_dense(&self, topo: TopoKind, coords: usize) -> (u64, f64) {
+        match topo {
+            TopoKind::Flat => (self.dense_total_bytes(coords), self.dense_seconds(coords)),
+            TopoKind::Hier { group } => self.run_plan(|round| {
+                hier_dense_plan(self.nodes, group, coords, &mut Vec::new(), round)
+            }),
+            TopoKind::Tree => self.run_plan(|round| {
+                tree_dense_plan(self.nodes, coords, &mut Vec::new(), round)
+            }),
+        }
+    }
+
+    fn topo_spread(&self, topo: TopoKind, blob_bytes: u64, k: usize) -> (u64, f64) {
+        match topo {
+            TopoKind::Flat => (
+                self.allgather_total_bytes(blob_bytes, k),
+                self.allgather_seconds(blob_bytes, k),
+            ),
+            TopoKind::Hier { group } => self.run_plan(|round| {
+                hier_spread_plan(self.nodes, group, blob_bytes, k, &mut Vec::new(), round)
+            }),
+            TopoKind::Tree => self.run_plan(|round| {
+                tree_spread_plan(self.nodes, blob_bytes, k, &mut Vec::new(), round)
+            }),
+        }
+    }
+
+    /// Virtual seconds of the dense allreduce under `topo`. Matches the
+    /// simulated clock of the topology's exact and accounting-only
+    /// paths to the last bit (`TopoKind::Flat` delegates to
+    /// [`CostModel::dense_seconds`]).
+    pub fn topo_dense_seconds(&self, topo: TopoKind, coords: usize) -> f64 {
+        self.topo_dense(topo, coords).1
+    }
+
+    /// Total wire bytes of the dense allreduce under `topo`.
+    pub fn topo_dense_total_bytes(&self, topo: TopoKind, coords: usize) -> u64 {
+        self.topo_dense(topo, coords).0
+    }
+
+    /// Virtual seconds of spreading `k` blobs of `blob_bytes` (held by
+    /// nodes `0..k`) to every node under `topo` — the mask/quantized-
+    /// blob distribution primitive.
+    pub fn topo_spread_seconds(&self, topo: TopoKind, blob_bytes: u64, k: usize) -> f64 {
+        self.topo_spread(topo, blob_bytes, k).1
+    }
+
+    /// Total wire bytes of the blob spread under `topo`.
+    pub fn topo_spread_total_bytes(&self, topo: TopoKind, blob_bytes: u64, k: usize) -> u64 {
+        self.topo_spread(topo, blob_bytes, k).0
+    }
+
+    /// One accumulator over the masked schedule's full round sequence —
+    /// mask spread immediately followed by the dense rounds over the
+    /// compacted support, in the simulator's clock order (not
+    /// phase-by-phase: f64 addition does not reassociate).
+    fn topo_masked(&self, topo: TopoKind, coords: usize, k: usize, support: usize) -> (u64, f64) {
+        let n = self.nodes;
+        let mask_bytes = (coords.div_ceil(8)) as u64;
+        match topo {
+            TopoKind::Flat => (
+                self.masked_total_bytes(coords, k, support),
+                self.masked_seconds(coords, k, support),
+            ),
+            TopoKind::Hier { group } => self.run_plan(|round| {
+                hier_spread_plan(n, group, mask_bytes, k, &mut Vec::new(), &mut *round);
+                hier_dense_plan(n, group, support, &mut Vec::new(), round);
+            }),
+            TopoKind::Tree => self.run_plan(|round| {
+                tree_spread_plan(n, mask_bytes, k, &mut Vec::new(), &mut *round);
+                tree_dense_plan(n, support, &mut Vec::new(), round);
+            }),
+        }
+    }
+
+    /// Virtual seconds of the masked (Algorithm 1) schedule under
+    /// `topo`: mask spread followed by the dense schedule over the
+    /// `support`-coordinate compacted vectors, accumulated in the
+    /// simulator's round order so the prediction is bit-exact.
+    pub fn topo_masked_seconds(
+        &self,
+        topo: TopoKind,
+        coords: usize,
+        k: usize,
+        support: usize,
+    ) -> f64 {
+        self.topo_masked(topo, coords, k, support).1
+    }
+
+    /// Total wire bytes of the masked schedule under `topo`.
+    pub fn topo_masked_total_bytes(
+        &self,
+        topo: TopoKind,
+        coords: usize,
+        k: usize,
+        support: usize,
+    ) -> u64 {
+        self.topo_masked(topo, coords, k, support).0
     }
 }
 

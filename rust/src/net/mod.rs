@@ -16,10 +16,12 @@
 
 pub mod cost;
 pub mod link;
+pub mod topo;
 pub mod trace;
 
 pub use cost::CostModel;
 pub use link::LinkSpec;
+pub use topo::{TopoKind, Topology};
 pub use trace::Trace;
 
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,0 +1,223 @@
+//! The flat single-ring topology — the paper's testbed (DESIGN.md §10).
+//!
+//! [`FlatRing`] is a thin shim over the original `ring::{dense, sparse,
+//! masked}` arena entry points: every method delegates verbatim, so the
+//! flat topology is **bit-identical to the pre-refactor behaviour** by
+//! construction (the golden-reference tests in
+//! `rust/tests/parallel_equivalence.rs` keep pinning those entry points
+//! directly, and `rust/tests/topology_equivalence.rs` pins this shim to
+//! them).
+
+use super::{TopoKind, Topology};
+use crate::net::RingNet;
+use crate::ring::{self, Arena, Executor, ReduceReport};
+use crate::sparse::{BitMask, SparseVec};
+
+/// Single unidirectional ring over all N nodes: node `i` sends to
+/// `(i+1) % N` in every round (DESIGN.md §3, §10).
+#[derive(Debug, Clone, Copy)]
+pub struct FlatRing {
+    n: usize,
+}
+
+impl FlatRing {
+    /// A flat ring over `n >= 2` nodes.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2, "a ring needs at least 2 nodes");
+        FlatRing { n }
+    }
+}
+
+impl Topology for FlatRing {
+    fn kind(&self) -> TopoKind {
+        TopoKind::Flat
+    }
+
+    fn nodes(&self) -> usize {
+        self.n
+    }
+
+    fn reduce_hops(&self) -> usize {
+        self.n - 1
+    }
+
+    fn dense(
+        &self,
+        net: &mut RingNet,
+        bufs: &mut [Vec<f32>],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        assert_eq!(net.n_nodes(), self.n);
+        ring::dense::allreduce_in(net, bufs, exec, arena)
+    }
+
+    fn dense_bytes_only(
+        &self,
+        net: &mut RingNet,
+        coords: usize,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        assert_eq!(net.n_nodes(), self.n);
+        let before = snapshot(net);
+        let t0 = net.clock();
+        ring::dense::rounds_bytes_only(net, coords, arena);
+        report(net, &before, t0, Vec::new())
+    }
+
+    fn sparse(
+        &self,
+        net: &mut RingNet,
+        inputs: &[SparseVec],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> (Vec<f32>, ReduceReport) {
+        assert_eq!(net.n_nodes(), self.n);
+        ring::sparse::allreduce_in(net, inputs, exec, arena)
+    }
+
+    fn sparse_support(
+        &self,
+        net: &mut RingNet,
+        supports: &[BitMask],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        assert_eq!(net.n_nodes(), self.n);
+        ring::sparse::allreduce_support_in(net, supports, exec, arena)
+    }
+
+    fn masked(
+        &self,
+        net: &mut RingNet,
+        masks: &[&BitMask],
+        values: &[&[f32]],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> (BitMask, Vec<f32>, ReduceReport) {
+        assert_eq!(net.n_nodes(), self.n);
+        ring::masked::allreduce_in(net, masks, values, exec, arena)
+    }
+
+    fn masked_bytes_only(
+        &self,
+        net: &mut RingNet,
+        masks: &[&BitMask],
+        arena: &mut Arena,
+    ) -> (BitMask, ReduceReport) {
+        assert_eq!(net.n_nodes(), self.n);
+        ring::masked::allreduce_bytes_only_in(net, masks, arena)
+    }
+
+    fn spread_bytes(
+        &self,
+        net: &mut RingNet,
+        blob_bytes: u64,
+        k: usize,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        assert_eq!(net.n_nodes(), self.n);
+        let n = self.n;
+        let k = k.min(n);
+        let before = snapshot(net);
+        let t0 = net.clock();
+        {
+            let Arena {
+                grows,
+                mk_blobs,
+                ag_sends,
+                ..
+            } = arena;
+            let blobs = (0..n).map(|i| if i < k { blob_bytes } else { 0 });
+            Arena::allgather_into(net, grows, mk_blobs, ag_sends, blobs);
+        }
+        report(net, &before, t0, Vec::new())
+    }
+}
+
+/// Shared "delta since snapshot" report assembly for the accounting-only
+/// topology paths (the exact paths build theirs inline, like the ring
+/// schedules always have).
+pub(super) fn report(
+    net: &RingNet,
+    before: &[u64],
+    t0: f64,
+    density_per_hop: Vec<f64>,
+) -> ReduceReport {
+    ReduceReport {
+        bytes_per_node: (0..net.n_nodes())
+            .map(|i| net.node_tx_bytes(i) - before[i])
+            .collect(),
+        seconds: net.clock() - t0,
+        density_per_hop,
+    }
+}
+
+/// Per-node tx snapshot taken before a schedule starts.
+pub(super) fn snapshot(net: &RingNet) -> Vec<u64> {
+    (0..net.n_nodes()).map(|i| net.node_tx_bytes(i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkSpec;
+
+    fn net(n: usize) -> RingNet {
+        RingNet::new(n, LinkSpec::gigabit_ethernet(), 1.0)
+    }
+
+    #[test]
+    fn flat_dense_delegates_bit_for_bit() {
+        let n = 5;
+        let len = 777;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let base: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let exec = Executor::sequential();
+        let mut net_a = net(n);
+        let mut bufs_a = base.clone();
+        let rep_a = ring::dense::allreduce(&mut net_a, &mut bufs_a);
+        let topo = FlatRing::new(n);
+        let mut net_b = net(n);
+        let mut bufs_b = base;
+        let rep_b = topo.dense(&mut net_b, &mut bufs_b, &exec, &mut Arena::for_nodes(n));
+        assert_eq!(rep_a.bytes_per_node, rep_b.bytes_per_node);
+        assert_eq!(rep_a.seconds.to_bits(), rep_b.seconds.to_bits());
+        for (a, b) in bufs_a.iter().zip(&bufs_b) {
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn flat_spread_matches_ring_allgather() {
+        let n = 6;
+        let blob = 1234u64;
+        let mut net_a = net(n);
+        let t_a = net_a.allgather(&[blob, blob, blob, 0, 0, 0]);
+        let topo = FlatRing::new(n);
+        let mut net_b = net(n);
+        let rep = topo.spread_bytes(&mut net_b, blob, 3, &mut Arena::for_nodes(n));
+        assert_eq!(net_a.total_bytes(), rep.total_bytes());
+        assert_eq!(t_a.to_bits(), rep.seconds.to_bits());
+    }
+
+    #[test]
+    fn flat_dense_bytes_only_reports_delta() {
+        let n = 4;
+        let len = 1000;
+        let topo = FlatRing::new(n);
+        let mut nw = net(n);
+        let rep = topo.dense_bytes_only(&mut nw, len, &mut Arena::for_nodes(n));
+        assert_eq!(rep.total_bytes(), 2 * (n as u64 - 1) * (len as u64) * 4);
+        assert_eq!(rep.seconds.to_bits(), nw.clock().to_bits());
+    }
+}

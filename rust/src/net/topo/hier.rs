@@ -1,0 +1,1302 @@
+//! Hierarchical (two-level) ring topology — NCCL-style grouped
+//! allreduce (DESIGN.md §10).
+//!
+//! Nodes are split into contiguous groups of `group` nodes (the last
+//! group may be smaller). Every schedule runs four phases:
+//!
+//! ```text
+//! 1. intra-group ring reduce-scatter   (m-1 rounds, chunked per group)
+//! 2. gather owned chunks to the leader (m-1 one-sender subrounds)
+//! 3. inter-group ring over the leaders (2(G-1) rounds, G-chunked)
+//! 4. intra-group chain broadcast       (m-1 rounds of the full payload)
+//! ```
+//!
+//! With `group = 1` every node is a leader and only phase 3 runs — the
+//! scheme degenerates to the flat ring, bit for bit (pinned in
+//! `rust/tests/topology_equivalence.rs`). The closed-form cost of each
+//! phase and its derivation live in DESIGN.md §10; the net-free
+//! [`dense_plan`] / [`spread_plan`] round generators are shared with
+//! `net::cost::CostModel`, so the closed-form predictions match the
+//! simulated clock and byte counters to the last bit by construction.
+
+use std::ops::Range;
+use std::sync::atomic::AtomicU64;
+
+use super::flat::{report, snapshot};
+use super::{chunk_size, compact_to_support, or_masks, TopoKind, Topology};
+use crate::net::RingNet;
+use crate::ring::{chunk_ranges_aligned_into, chunk_ranges_into};
+use crate::ring::{Arena, Executor, ReduceReport};
+use crate::sparse::{wire_bytes, BitMask, SparseVec, WireFormat};
+
+/// Two-level hierarchy: rings inside fixed-size node groups, a ring of
+/// group leaders across groups (DESIGN.md §10).
+#[derive(Debug, Clone, Copy)]
+pub struct HierarchicalRing {
+    geom: Geom,
+    group: usize,
+}
+
+/// Group geometry: `n` nodes in contiguous groups of `g` (the last
+/// group holds the remainder). Group `k` spans `[k·g, k·g + m_k)` with
+/// `m_k = g` except possibly the last; its leader is node `k·g`.
+#[derive(Debug, Clone, Copy)]
+struct Geom {
+    n: usize,
+    g: usize,
+    gcount: usize,
+}
+
+impl Geom {
+    fn new(n: usize, group: usize) -> Self {
+        assert!(n >= 2, "a topology needs at least 2 nodes");
+        assert!(group >= 1, "hier group size must be >= 1");
+        let g = group.min(n);
+        Geom {
+            n,
+            g,
+            gcount: n.div_ceil(g),
+        }
+    }
+
+    /// First node of group `k`.
+    fn start(&self, k: usize) -> usize {
+        k * self.g
+    }
+
+    /// Size of group `k`.
+    fn m(&self, k: usize) -> usize {
+        if k + 1 == self.gcount {
+            self.n - self.start(k)
+        } else {
+            self.g
+        }
+    }
+
+    /// Largest group size (group 0 is always full).
+    fn max_m(&self) -> usize {
+        self.g
+    }
+
+    /// Size of the (possibly ragged) last group.
+    fn m_last(&self) -> usize {
+        self.n - (self.gcount - 1) * self.g
+    }
+
+    /// (group, position-in-group, group size) of node `i`.
+    fn kpm(&self, i: usize) -> (usize, usize, usize) {
+        let k = i / self.g;
+        (k, i % self.g, self.m(k))
+    }
+}
+
+/// Pick the chunk table for a group of size `m`: full-size groups share
+/// one partition, the ragged last group has its own.
+fn chunks_for<'a>(
+    ca: &'a [Range<usize>],
+    cb: &'a [Range<usize>],
+    g: usize,
+    m: usize,
+) -> &'a [Range<usize>] {
+    if m == g {
+        ca
+    } else {
+        cb
+    }
+}
+
+impl HierarchicalRing {
+    /// A hierarchy over `n >= 2` nodes in groups of `group >= 1`
+    /// (clamped to `n`; the last group holds the remainder).
+    pub fn new(n: usize, group: usize) -> Self {
+        HierarchicalRing {
+            geom: Geom::new(n, group),
+            group,
+        }
+    }
+}
+
+impl Topology for HierarchicalRing {
+    fn kind(&self) -> TopoKind {
+        TopoKind::Hier { group: self.group }
+    }
+
+    fn nodes(&self) -> usize {
+        self.geom.n
+    }
+
+    fn reduce_hops(&self) -> usize {
+        (self.geom.max_m() - 1) + (self.geom.gcount - 1)
+    }
+
+    fn dense(
+        &self,
+        net: &mut RingNet,
+        bufs: &mut [Vec<f32>],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        let Arena {
+            grows,
+            dense_staging,
+            dense_sends,
+            tp_chunks_a,
+            tp_chunks_b,
+            tp_chunks_c,
+            ..
+        } = arena;
+        dense_core(
+            net,
+            self.geom,
+            bufs,
+            exec,
+            grows,
+            dense_staging,
+            dense_sends,
+            tp_chunks_a,
+            tp_chunks_b,
+            tp_chunks_c,
+        )
+    }
+
+    fn dense_bytes_only(
+        &self,
+        net: &mut RingNet,
+        coords: usize,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        assert_eq!(net.n_nodes(), self.geom.n);
+        let Arena {
+            grows, dense_sends, ..
+        } = arena;
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let cap = dense_sends.capacity();
+        dense_plan(self.geom.n, self.group, coords, dense_sends, |s| {
+            net.round(s);
+        });
+        Arena::note(grows, dense_sends.capacity() != cap);
+        report(net, &before, t0, Vec::new())
+    }
+
+    fn sparse(
+        &self,
+        net: &mut RingNet,
+        inputs: &[SparseVec],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> (Vec<f32>, ReduceReport) {
+        let geom = self.geom;
+        let (n, g, gc) = (geom.n, geom.g, geom.gcount);
+        assert_eq!(net.n_nodes(), n);
+        assert_eq!(inputs.len(), n);
+        let len = inputs[0].len;
+        assert!(inputs.iter().all(|s| s.len == len));
+
+        let Arena {
+            grows,
+            sp_held,
+            sp_next,
+            sp_segs,
+            sp_sends,
+            tp_chunks_a,
+            tp_chunks_b,
+            tp_chunks_c,
+            tp_sums,
+            tp_lheld,
+            tp_lnext,
+            ..
+        } = arena;
+        let grows: &AtomicU64 = grows;
+        fill_chunks(grows, geom, len, false, tp_chunks_a, tp_chunks_b, tp_chunks_c);
+        let ca: &[Range<usize>] = tp_chunks_a;
+        let cb: &[Range<usize>] = tp_chunks_b;
+        let cc: &[Range<usize>] = tp_chunks_c;
+        Arena::slots(grows, sp_held, n, || SparseVec::empty(0));
+        Arena::slots(grows, sp_next, n, || SparseVec::empty(0));
+        Arena::slots(grows, sp_segs, n, || SparseVec::empty(0));
+        Arena::slots(grows, tp_sums, gc, || SparseVec::empty(0));
+        Arena::slots(grows, tp_lheld, gc, || SparseVec::empty(0));
+        Arena::slots(grows, tp_lnext, gc, || SparseVec::empty(0));
+
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let mut density_per_hop = Vec::with_capacity(self.reduce_hops());
+
+        // Phase 1 — intra-group ring reduce-scatter on sparse segments.
+        exec.map_mut(&mut sp_held[..n], |i, h| {
+            let (_, p, m) = geom.kpm(i);
+            Arena::note(grows, h.assign_window(&inputs[i], &chunks_for(ca, cb, g, m)[p]));
+        });
+        let (mut held, mut next) = (sp_held, sp_next);
+        for r in 0..geom.max_m() - 1 {
+            Arena::refill(
+                grows,
+                sp_sends,
+                (0..n).map(|i| {
+                    let (_, _, m) = geom.kpm(i);
+                    if r < m - 1 {
+                        held[i].wire_bytes()
+                    } else {
+                        0
+                    }
+                }),
+            );
+            net.round(sp_sends);
+            {
+                let held_ref: &[SparseVec] = held;
+                exec.map_mut2(&mut next[..n], &mut sp_segs[..n], |dst, nx, seg| {
+                    let (k, p, m) = geom.kpm(dst);
+                    if r < m - 1 {
+                        let src = geom.start(k) + (p + m - 1) % m;
+                        let c = (p + m - (r + 1)) % m;
+                        Arena::note(
+                            grows,
+                            seg.assign_window(&inputs[dst], &chunks_for(ca, cb, g, m)[c]),
+                        );
+                        Arena::note(grows, held_ref[src].merge_add_into(seg, nx));
+                    } else {
+                        // This group is done (or a singleton): its owned
+                        // segment just rides along unchanged.
+                        let hlen = held_ref[dst].len;
+                        Arena::note(grows, nx.assign_window(&held_ref[dst], &(0..hlen)));
+                    }
+                });
+            }
+            std::mem::swap(&mut held, &mut next);
+            let d = held[..n].iter().map(|s| s.density()).sum::<f64>() / n as f64;
+            density_per_hop.push(d);
+        }
+
+        // Phase 2 — gather owned segments to the leaders (accounting),
+        // then assemble per-group sparse sums on the coordinator.
+        for j in 1..geom.max_m() {
+            Arena::refill(
+                grows,
+                sp_sends,
+                (0..n).map(|i| {
+                    let (_, p, m) = geom.kpm(i);
+                    if p == j && j < m {
+                        held[i].wire_bytes()
+                    } else {
+                        0
+                    }
+                }),
+            );
+            net.round(sp_sends);
+        }
+        for k in 0..gc {
+            let (start, m) = (geom.start(k), geom.m(k));
+            let chunks = chunks_for(ca, cb, g, m);
+            let sum = &mut tp_sums[k];
+            let caps = (sum.idx.capacity(), sum.val.capacity());
+            sum.clear_to(len);
+            for (c, range) in chunks.iter().enumerate() {
+                let holder = start + (c + m - 1) % m;
+                for (&i2, &v) in held[holder].idx.iter().zip(&held[holder].val) {
+                    sum.idx.push((range.start + i2 as usize) as u32);
+                    sum.val.push(v);
+                }
+            }
+            Arena::note(grows, caps != (sum.idx.capacity(), sum.val.capacity()));
+        }
+
+        // Phase 3 — inter-group ring over the leaders (scatter-reduce).
+        let sums: &[SparseVec] = tp_sums;
+        let (mut lheld, mut lnext) = (tp_lheld, tp_lnext);
+        if gc >= 2 {
+            exec.map_mut(&mut lheld[..gc], |k, h| {
+                Arena::note(grows, h.assign_window(&sums[k], &cc[k]));
+            });
+            for r in 0..gc - 1 {
+                Arena::refill(
+                    grows,
+                    sp_sends,
+                    (0..n).map(|i| {
+                        let (k, p, _) = geom.kpm(i);
+                        if p == 0 {
+                            lheld[k].wire_bytes()
+                        } else {
+                            0
+                        }
+                    }),
+                );
+                net.round(sp_sends);
+                {
+                    let lheld_ref: &[SparseVec] = lheld;
+                    exec.map_mut2(&mut lnext[..gc], &mut sp_segs[..gc], |kd, nx, seg| {
+                        let src = (kd + gc - 1) % gc;
+                        let c = (kd + gc - (r + 1)) % gc;
+                        Arena::note(grows, seg.assign_window(&sums[kd], &cc[c]));
+                        Arena::note(grows, lheld_ref[src].merge_add_into(seg, nx));
+                    });
+                }
+                std::mem::swap(&mut lheld, &mut lnext);
+                let d = lheld[..gc].iter().map(|s| s.density()).sum::<f64>() / gc as f64;
+                density_per_hop.push(d);
+            }
+        }
+
+        // Assemble the global result + leader allgather accounting at
+        // the final densities (every leader must end with every chunk).
+        let mut result = vec![0.0f32; len];
+        let global_nnz;
+        if gc >= 2 {
+            global_nnz = lheld[..gc].iter().map(|s| s.nnz()).sum::<usize>();
+            for (k, h) in lheld[..gc].iter().enumerate() {
+                let range = cc[(k + 1) % gc].clone();
+                for (&i2, &v) in h.idx.iter().zip(&h.val) {
+                    result[range.start + i2 as usize] += v;
+                }
+            }
+            for r in 0..gc - 1 {
+                Arena::refill(
+                    grows,
+                    sp_sends,
+                    (0..n).map(|i| {
+                        let (k, p, _) = geom.kpm(i);
+                        if p != 0 {
+                            return 0;
+                        }
+                        // The fully-reduced chunk c travels in sparse
+                        // format; its holder's exact encoding prices it.
+                        let c = (k + 1 + gc - r) % gc;
+                        lheld[(c + gc - 1) % gc].wire_bytes()
+                    }),
+                );
+                net.round(sp_sends);
+            }
+        } else {
+            global_nnz = sums[0].nnz();
+            sums[0].scatter_add(&mut result);
+        }
+
+        // Phase 4 — intra-group chain broadcast of the global sparse sum.
+        let bcast = wire_bytes(WireFormat::cheapest(len, global_nnz), len, global_nnz);
+        for r in 0..geom.max_m() - 1 {
+            Arena::refill(
+                grows,
+                sp_sends,
+                (0..n).map(|i| {
+                    let (_, p, m) = geom.kpm(i);
+                    if p == r && r + 1 < m {
+                        bcast
+                    } else {
+                        0
+                    }
+                }),
+            );
+            net.round(sp_sends);
+        }
+
+        (result, report(net, &before, t0, density_per_hop))
+    }
+
+    fn sparse_support(
+        &self,
+        net: &mut RingNet,
+        supports: &[BitMask],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        let geom = self.geom;
+        let (n, g, gc) = (geom.n, geom.g, geom.gcount);
+        assert_eq!(net.n_nodes(), n);
+        assert_eq!(supports.len(), n);
+        let len = supports[0].len();
+        assert!(supports.iter().all(|s| s.len() == len));
+
+        let Arena {
+            grows,
+            su_held,
+            su_next,
+            su_sends,
+            tp_chunks_a,
+            tp_chunks_b,
+            tp_chunks_c,
+            tp_wsums,
+            tp_wheld,
+            tp_wnext,
+            ..
+        } = arena;
+        let grows: &AtomicU64 = grows;
+        fill_chunks(grows, geom, len, true, tp_chunks_a, tp_chunks_b, tp_chunks_c);
+        let ca: &[Range<usize>] = tp_chunks_a;
+        let cb: &[Range<usize>] = tp_chunks_b;
+        let cc: &[Range<usize>] = tp_chunks_c;
+        Arena::slots(grows, su_held, n, Vec::new);
+        Arena::slots(grows, su_next, n, Vec::new);
+        Arena::slots(grows, tp_wsums, gc, Vec::new);
+        Arena::slots(grows, tp_wheld, gc, Vec::new);
+        Arena::slots(grows, tp_wnext, gc, Vec::new);
+
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let mut density_per_hop = Vec::with_capacity(self.reduce_hops());
+        let seg_bytes = |words: &[u64], chunk_len: usize| -> u64 {
+            let nnz = BitMask::popcount_words(words);
+            wire_bytes(WireFormat::cheapest(chunk_len, nnz), chunk_len, nnz)
+        };
+
+        // Phase 1 — intra-group reduce-scatter on support word blocks.
+        exec.map_mut(&mut su_held[..n], |i, h| {
+            let (_, p, m) = geom.kpm(i);
+            let chunk = chunks_for(ca, cb, g, m)[p].clone();
+            Arena::note(grows, Arena::refill_slice(h, supports[i].word_slice(chunk)));
+        });
+        let (mut held, mut next) = (su_held, su_next);
+        for r in 0..geom.max_m() - 1 {
+            Arena::refill(
+                grows,
+                su_sends,
+                (0..n).map(|i| {
+                    let (_, p, m) = geom.kpm(i);
+                    if r < m - 1 {
+                        let c = (p + m - r) % m;
+                        seg_bytes(&held[i], chunks_for(ca, cb, g, m)[c].len())
+                    } else {
+                        0
+                    }
+                }),
+            );
+            net.round(su_sends);
+            {
+                let held_ref: &[Vec<u64>] = held;
+                exec.map_mut(&mut next[..n], |dst, nx| {
+                    let (k, p, m) = geom.kpm(dst);
+                    if r < m - 1 {
+                        let src = geom.start(k) + (p + m - 1) % m;
+                        let c = (p + m - (r + 1)) % m;
+                        let own = supports[dst].word_slice(chunks_for(ca, cb, g, m)[c].clone());
+                        Arena::note(grows, Arena::refill_slice(nx, &held_ref[src]));
+                        for (w, o) in nx.iter_mut().zip(own) {
+                            *w |= o;
+                        }
+                    } else {
+                        Arena::note(grows, Arena::refill_slice(nx, &held_ref[dst]));
+                    }
+                });
+            }
+            std::mem::swap(&mut held, &mut next);
+            let (mut nnz, mut tot) = (0usize, 0usize);
+            for (i, h) in held[..n].iter().enumerate() {
+                let (_, p, m) = geom.kpm(i);
+                let c = if r < m - 1 {
+                    (p + m - (r + 1)) % m
+                } else {
+                    (p + 1) % m
+                };
+                nnz += BitMask::popcount_words(h);
+                tot += chunks_for(ca, cb, g, m)[c].len();
+            }
+            density_per_hop.push(nnz as f64 / tot.max(1) as f64);
+        }
+
+        // Phase 2 — gather to leaders + per-group word-union assembly.
+        for j in 1..geom.max_m() {
+            Arena::refill(
+                grows,
+                su_sends,
+                (0..n).map(|i| {
+                    let (_, p, m) = geom.kpm(i);
+                    if p == j && j < m {
+                        let c = (p + 1) % m;
+                        seg_bytes(&held[i], chunks_for(ca, cb, g, m)[c].len())
+                    } else {
+                        0
+                    }
+                }),
+            );
+            net.round(su_sends);
+        }
+        for k in 0..gc {
+            let (start, m) = (geom.start(k), geom.m(k));
+            let chunks = chunks_for(ca, cb, g, m);
+            let sum = &mut tp_wsums[k];
+            let cap = sum.capacity();
+            sum.clear();
+            for (c, _range) in chunks.iter().enumerate() {
+                let holder = start + (c + m - 1) % m;
+                sum.extend_from_slice(&held[holder]);
+            }
+            Arena::note(grows, sum.capacity() != cap);
+        }
+
+        // Phase 3 — inter-group ring over leaders' word windows.
+        let wsums: &[Vec<u64>] = tp_wsums;
+        let word_window = |words: &[u64], range: &Range<usize>| -> &[u64] {
+            if range.is_empty() {
+                // Degenerate trailing chunks of the aligned partition are
+                // `len..len` — same guard as `BitMask::word_slice`.
+                return &[];
+            }
+            &words[range.start / 64..range.end.div_ceil(64)]
+        };
+        let (mut lheld, mut lnext) = (tp_wheld, tp_wnext);
+        if gc >= 2 {
+            exec.map_mut(&mut lheld[..gc], |k, h| {
+                Arena::note(grows, Arena::refill_slice(h, word_window(&wsums[k], &cc[k])));
+            });
+            for r in 0..gc - 1 {
+                Arena::refill(
+                    grows,
+                    su_sends,
+                    (0..n).map(|i| {
+                        let (k, p, _) = geom.kpm(i);
+                        if p == 0 {
+                            let c = (k + gc - r) % gc;
+                            seg_bytes(&lheld[k], cc[c].len())
+                        } else {
+                            0
+                        }
+                    }),
+                );
+                net.round(su_sends);
+                {
+                    let lheld_ref: &[Vec<u64>] = lheld;
+                    exec.map_mut(&mut lnext[..gc], |kd, nx| {
+                        let src = (kd + gc - 1) % gc;
+                        let c = (kd + gc - (r + 1)) % gc;
+                        let own = word_window(&wsums[kd], &cc[c]);
+                        Arena::note(grows, Arena::refill_slice(nx, &lheld_ref[src]));
+                        for (w, o) in nx.iter_mut().zip(own) {
+                            *w |= o;
+                        }
+                    });
+                }
+                std::mem::swap(&mut lheld, &mut lnext);
+                let (mut nnz, mut tot) = (0usize, 0usize);
+                for (k, h) in lheld[..gc].iter().enumerate() {
+                    let c = (k + gc - (r + 1)) % gc;
+                    nnz += BitMask::popcount_words(h);
+                    tot += cc[c].len();
+                }
+                density_per_hop.push(nnz as f64 / tot.max(1) as f64);
+            }
+            // Leader allgather accounting at the final densities.
+            for r in 0..gc - 1 {
+                Arena::refill(
+                    grows,
+                    su_sends,
+                    (0..n).map(|i| {
+                        let (k, p, _) = geom.kpm(i);
+                        if p != 0 {
+                            return 0;
+                        }
+                        let c = (k + 1 + gc - r) % gc;
+                        let holder = (c + gc - 1) % gc;
+                        seg_bytes(&lheld[holder], cc[c].len())
+                    }),
+                );
+                net.round(su_sends);
+            }
+        }
+
+        // Phase 4 — chain broadcast of the global support union.
+        let global_nnz = if gc >= 2 {
+            lheld[..gc]
+                .iter()
+                .map(|h| BitMask::popcount_words(h))
+                .sum::<usize>()
+        } else {
+            BitMask::popcount_words(&wsums[0])
+        };
+        let bcast = wire_bytes(WireFormat::cheapest(len, global_nnz), len, global_nnz);
+        for r in 0..geom.max_m() - 1 {
+            Arena::refill(
+                grows,
+                su_sends,
+                (0..n).map(|i| {
+                    let (_, p, m) = geom.kpm(i);
+                    if p == r && r + 1 < m {
+                        bcast
+                    } else {
+                        0
+                    }
+                }),
+            );
+            net.round(su_sends);
+        }
+
+        report(net, &before, t0, density_per_hop)
+    }
+
+    fn masked(
+        &self,
+        net: &mut RingNet,
+        masks: &[&BitMask],
+        values: &[&[f32]],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> (BitMask, Vec<f32>, ReduceReport) {
+        let geom = self.geom;
+        let n = geom.n;
+        assert_eq!(net.n_nodes(), n);
+        assert_eq!(values.len(), n);
+        assert!(!masks.is_empty(), "need at least one mask broadcaster");
+        let len = masks[0].len();
+        assert!(values.iter().all(|v| v.len() == len));
+
+        let mask_bytes = masks[0].wire_bytes();
+        let k = masks.len().min(n);
+        let before = snapshot(net);
+        let t0 = net.clock();
+
+        // Mask spread: gather to leaders, leader ring, chain broadcast.
+        {
+            let Arena {
+                grows, ag_sends, ..
+            } = &mut *arena;
+            let cap = ag_sends.capacity();
+            spread_plan(n, self.group, mask_bytes, k, ag_sends, |s| {
+                net.round(s);
+            });
+            Arena::note(grows, ag_sends.capacity() != cap);
+        }
+        let shared = or_masks(masks, len);
+
+        // Compact every node's values to the shared support, then run
+        // the hierarchical dense schedule over the compacted vectors.
+        let Arena {
+            grows,
+            mk_support,
+            mk_compact,
+            dense_staging,
+            dense_sends,
+            tp_chunks_a,
+            tp_chunks_b,
+            tp_chunks_c,
+            ..
+        } = arena;
+        let grows: &AtomicU64 = grows;
+        compact_to_support(&shared, values, exec, grows, mk_support, mk_compact);
+        dense_core(
+            net,
+            geom,
+            &mut mk_compact[..n],
+            exec,
+            grows,
+            dense_staging,
+            dense_sends,
+            tp_chunks_a,
+            tp_chunks_b,
+            tp_chunks_c,
+        );
+
+        let rep = report(
+            net,
+            &before,
+            t0,
+            vec![shared.density(); self.reduce_hops()],
+        );
+        (shared, mk_compact[0].clone(), rep)
+    }
+
+    fn masked_bytes_only(
+        &self,
+        net: &mut RingNet,
+        masks: &[&BitMask],
+        arena: &mut Arena,
+    ) -> (BitMask, ReduceReport) {
+        let n = self.geom.n;
+        assert_eq!(net.n_nodes(), n);
+        assert!(!masks.is_empty());
+        let len = masks[0].len();
+        let mask_bytes = masks[0].wire_bytes();
+        let k = masks.len().min(n);
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let Arena {
+            grows,
+            ag_sends,
+            dense_sends,
+            ..
+        } = arena;
+        let cap = ag_sends.capacity();
+        spread_plan(n, self.group, mask_bytes, k, ag_sends, |s| {
+            net.round(s);
+        });
+        Arena::note(grows, ag_sends.capacity() != cap);
+        let shared = or_masks(masks, len);
+        let cap = dense_sends.capacity();
+        dense_plan(n, self.group, shared.count(), dense_sends, |s| {
+            net.round(s);
+        });
+        Arena::note(grows, dense_sends.capacity() != cap);
+        let rep = report(
+            net,
+            &before,
+            t0,
+            vec![shared.density(); self.reduce_hops()],
+        );
+        (shared, rep)
+    }
+
+    fn spread_bytes(
+        &self,
+        net: &mut RingNet,
+        blob_bytes: u64,
+        k: usize,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        let n = self.geom.n;
+        assert_eq!(net.n_nodes(), n);
+        let Arena {
+            grows, ag_sends, ..
+        } = arena;
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let cap = ag_sends.capacity();
+        spread_plan(n, self.group, blob_bytes, k, ag_sends, |s| {
+            net.round(s);
+        });
+        Arena::note(grows, ag_sends.capacity() != cap);
+        report(net, &before, t0, Vec::new())
+    }
+}
+
+/// Refill the three chunk tables for `len` coordinates: intra-group
+/// full-size (`ca`), intra-group ragged-last (`cb`), inter-group leader
+/// (`cc`). `aligned` selects the word-aligned partition the support-only
+/// path requires.
+fn fill_chunks(
+    grows: &AtomicU64,
+    geom: Geom,
+    len: usize,
+    aligned: bool,
+    ca: &mut Vec<Range<usize>>,
+    cb: &mut Vec<Range<usize>>,
+    cc: &mut Vec<Range<usize>>,
+) {
+    let fill = |out: &mut Vec<Range<usize>>, m: usize| -> bool {
+        let cap = out.capacity();
+        if aligned {
+            chunk_ranges_aligned_into(len, m, out);
+        } else {
+            chunk_ranges_into(len, m, out);
+        }
+        out.capacity() != cap
+    };
+    Arena::note(grows, fill(ca, geom.max_m()));
+    Arena::note(grows, fill(cb, geom.m_last()));
+    Arena::note(grows, fill(cc, geom.gcount));
+}
+
+/// The exact hierarchical dense schedule over explicit scratch parts
+/// (so the masked schedule can run it while holding its own arena
+/// fields — the same split the flat `dense::allreduce_parts` uses).
+#[allow(clippy::too_many_arguments)]
+fn dense_core(
+    net: &mut RingNet,
+    geom: Geom,
+    bufs: &mut [Vec<f32>],
+    exec: &Executor,
+    grows: &AtomicU64,
+    staging: &mut Vec<Vec<f32>>,
+    sends: &mut Vec<u64>,
+    ca: &mut Vec<Range<usize>>,
+    cb: &mut Vec<Range<usize>>,
+    cc: &mut Vec<Range<usize>>,
+) -> ReduceReport {
+    let (n, g, gc) = (geom.n, geom.g, geom.gcount);
+    assert_eq!(net.n_nodes(), n);
+    assert_eq!(bufs.len(), n, "one buffer per node");
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len));
+    if len == 0 {
+        return ReduceReport {
+            bytes_per_node: vec![0; n],
+            ..Default::default()
+        };
+    }
+
+    fill_chunks(grows, geom, len, false, ca, cb, cc);
+    let ca: &[Range<usize>] = ca;
+    let cb: &[Range<usize>] = cb;
+    let cc: &[Range<usize>] = cc;
+    Arena::slots(grows, staging, n, Vec::new);
+    let before = snapshot(net);
+    let t0 = net.clock();
+
+    // Phase 1 — intra-group ring reduce-scatter: within each group of
+    // size m, position p sends chunk (p - r) mod m to p+1, which
+    // accumulates it (the flat scatter-reduce, group-local).
+    for r in 0..geom.max_m() - 1 {
+        Arena::refill(
+            grows,
+            sends,
+            (0..n).map(|i| {
+                let (_, p, m) = geom.kpm(i);
+                if r < m - 1 {
+                    (chunks_for(ca, cb, g, m)[(p + m - r) % m].len() * 4) as u64
+                } else {
+                    0
+                }
+            }),
+        );
+        net.round(sends);
+        {
+            let bufs_src: &[Vec<f32>] = bufs;
+            exec.map_mut(&mut staging[..n], |i, stage| {
+                let (_, p, m) = geom.kpm(i);
+                if r < m - 1 {
+                    let c = (p + m - r) % m;
+                    Arena::note(
+                        grows,
+                        Arena::refill_slice(
+                            stage,
+                            &bufs_src[i][chunks_for(ca, cb, g, m)[c].clone()],
+                        ),
+                    );
+                }
+            });
+        }
+        let staged: &[Vec<f32>] = staging;
+        exec.map_mut(bufs, |dst, buf| {
+            let (k, p, m) = geom.kpm(dst);
+            if r < m - 1 {
+                let src_pos = (p + m - 1) % m;
+                let src = geom.start(k) + src_pos;
+                let c = (src_pos + m - r) % m;
+                let range = chunks_for(ca, cb, g, m)[c].clone();
+                for (k2, idx) in range.enumerate() {
+                    buf[idx] += staged[src][k2];
+                }
+            }
+        });
+    }
+
+    // Phase 2 — gather: member j of each group sends its owned chunk
+    // ((j+1) mod m) to the leader, one member per subround (the leader's
+    // ingress link serializes the gather).
+    for j in 1..geom.max_m() {
+        Arena::refill(
+            grows,
+            sends,
+            (0..n).map(|i| {
+                let (_, p, m) = geom.kpm(i);
+                if p == j && j < m {
+                    (chunks_for(ca, cb, g, m)[(j + 1) % m].len() * 4) as u64
+                } else {
+                    0
+                }
+            }),
+        );
+        net.round(sends);
+        {
+            let bufs_src: &[Vec<f32>] = bufs;
+            exec.map_mut(&mut staging[..n], |i, stage| {
+                let (_, p, m) = geom.kpm(i);
+                if p == j && j < m {
+                    let c = (j + 1) % m;
+                    Arena::note(
+                        grows,
+                        Arena::refill_slice(
+                            stage,
+                            &bufs_src[i][chunks_for(ca, cb, g, m)[c].clone()],
+                        ),
+                    );
+                }
+            });
+        }
+        let staged: &[Vec<f32>] = staging;
+        exec.map_mut(bufs, |dst, buf| {
+            let (k, p, m) = geom.kpm(dst);
+            if p == 0 && j < m {
+                let c = (j + 1) % m;
+                let range = chunks_for(ca, cb, g, m)[c].clone();
+                for (k2, idx) in range.enumerate() {
+                    buf[idx] = staged[geom.start(k) + j][k2];
+                }
+            }
+        });
+    }
+
+    // Phase 3 — inter-group ring over the leaders: the flat dense
+    // schedule restricted to the G leader nodes over a G-chunking.
+    if gc >= 2 {
+        for r in 0..gc - 1 {
+            Arena::refill(
+                grows,
+                sends,
+                (0..n).map(|i| {
+                    let (k, p, _) = geom.kpm(i);
+                    if p == 0 {
+                        (cc[(k + gc - r) % gc].len() * 4) as u64
+                    } else {
+                        0
+                    }
+                }),
+            );
+            net.round(sends);
+            {
+                let bufs_src: &[Vec<f32>] = bufs;
+                exec.map_mut(&mut staging[..n], |i, stage| {
+                    let (k, p, _) = geom.kpm(i);
+                    if p == 0 {
+                        let c = (k + gc - r) % gc;
+                        Arena::note(
+                            grows,
+                            Arena::refill_slice(stage, &bufs_src[i][cc[c].clone()]),
+                        );
+                    }
+                });
+            }
+            let staged: &[Vec<f32>] = staging;
+            exec.map_mut(bufs, |dst, buf| {
+                let (kd, p, _) = geom.kpm(dst);
+                if p == 0 {
+                    let ks = (kd + gc - 1) % gc;
+                    let c = (ks + gc - r) % gc;
+                    let range = cc[c].clone();
+                    for (k2, idx) in range.enumerate() {
+                        buf[idx] += staged[geom.start(ks)][k2];
+                    }
+                }
+            });
+        }
+        for r in 0..gc - 1 {
+            Arena::refill(
+                grows,
+                sends,
+                (0..n).map(|i| {
+                    let (k, p, _) = geom.kpm(i);
+                    if p == 0 {
+                        (cc[(k + 1 + gc - r) % gc].len() * 4) as u64
+                    } else {
+                        0
+                    }
+                }),
+            );
+            net.round(sends);
+            {
+                let bufs_src: &[Vec<f32>] = bufs;
+                exec.map_mut(&mut staging[..n], |i, stage| {
+                    let (k, p, _) = geom.kpm(i);
+                    if p == 0 {
+                        let c = (k + 1 + gc - r) % gc;
+                        Arena::note(
+                            grows,
+                            Arena::refill_slice(stage, &bufs_src[i][cc[c].clone()]),
+                        );
+                    }
+                });
+            }
+            let staged: &[Vec<f32>] = staging;
+            exec.map_mut(bufs, |dst, buf| {
+                let (kd, p, _) = geom.kpm(dst);
+                if p == 0 {
+                    let ks = (kd + gc - 1) % gc;
+                    let c = (ks + 1 + gc - r) % gc;
+                    let range = cc[c].clone();
+                    for (k2, idx) in range.enumerate() {
+                        buf[idx] = staged[geom.start(ks)][k2];
+                    }
+                }
+            });
+        }
+    }
+
+    // Phase 4 — intra-group chain broadcast: position r forwards the
+    // full reduced vector to position r+1.
+    for r in 0..geom.max_m() - 1 {
+        Arena::refill(
+            grows,
+            sends,
+            (0..n).map(|i| {
+                let (_, p, m) = geom.kpm(i);
+                if p == r && r + 1 < m {
+                    (len * 4) as u64
+                } else {
+                    0
+                }
+            }),
+        );
+        net.round(sends);
+        {
+            let bufs_src: &[Vec<f32>] = bufs;
+            exec.map_mut(&mut staging[..n], |i, stage| {
+                let (_, p, m) = geom.kpm(i);
+                if p == r && r + 1 < m {
+                    Arena::note(grows, Arena::refill_slice(stage, &bufs_src[i][..]));
+                }
+            });
+        }
+        let staged: &[Vec<f32>] = staging;
+        exec.map_mut(bufs, |dst, buf| {
+            let (k, p, _) = geom.kpm(dst);
+            if p == r + 1 {
+                buf.copy_from_slice(&staged[geom.start(k) + r]);
+            }
+        });
+    }
+
+    ReduceReport {
+        bytes_per_node: (0..n)
+            .map(|i| net.node_tx_bytes(i) - before[i])
+            .collect(),
+        seconds: net.clock() - t0,
+        density_per_hop: Vec::new(),
+    }
+}
+
+/// Net-free round plan of the hierarchical dense schedule: emits every
+/// round's per-node send vector in simulation order. `dense_bytes_only`
+/// drives `RingNet::round` with it and `CostModel::topo_dense_*`
+/// accumulates cost from it, so prediction and simulation agree to the
+/// last bit by construction (DESIGN.md §10). Emits nothing for
+/// `len == 0`, matching the exact path's early return.
+pub(crate) fn dense_plan(
+    n: usize,
+    group: usize,
+    len: usize,
+    sends: &mut Vec<u64>,
+    mut round: impl FnMut(&[u64]),
+) {
+    let geom = Geom::new(n, group);
+    let gc = geom.gcount;
+    if len == 0 {
+        return;
+    }
+    let cs = |m: usize, c: usize| (chunk_size(len, m, c) * 4) as u64;
+    for r in 0..geom.max_m() - 1 {
+        refill(sends, 0..n, |i| {
+            let (_, p, m) = geom.kpm(i);
+            if r < m - 1 {
+                cs(m, (p + m - r) % m)
+            } else {
+                0
+            }
+        });
+        round(sends);
+    }
+    for j in 1..geom.max_m() {
+        refill(sends, 0..n, |i| {
+            let (_, p, m) = geom.kpm(i);
+            if p == j && j < m {
+                cs(m, (j + 1) % m)
+            } else {
+                0
+            }
+        });
+        round(sends);
+    }
+    if gc >= 2 {
+        for r in 0..gc - 1 {
+            refill(sends, 0..n, |i| {
+                let (k, p, _) = geom.kpm(i);
+                if p == 0 {
+                    cs(gc, (k + gc - r) % gc)
+                } else {
+                    0
+                }
+            });
+            round(sends);
+        }
+        for r in 0..gc - 1 {
+            refill(sends, 0..n, |i| {
+                let (k, p, _) = geom.kpm(i);
+                if p == 0 {
+                    cs(gc, (k + 1 + gc - r) % gc)
+                } else {
+                    0
+                }
+            });
+            round(sends);
+        }
+    }
+    for r in 0..geom.max_m() - 1 {
+        refill(sends, 0..n, |i| {
+            let (_, p, m) = geom.kpm(i);
+            if p == r && r + 1 < m {
+                (len * 4) as u64
+            } else {
+                0
+            }
+        });
+        round(sends);
+    }
+}
+
+/// Net-free round plan of the hierarchical blob spread: nodes `0..k`
+/// hold one `blob`-byte blob each; gather to leaders, ring the group
+/// aggregates across leaders, chain-broadcast the full set.
+pub(crate) fn spread_plan(
+    n: usize,
+    group: usize,
+    blob: u64,
+    k: usize,
+    sends: &mut Vec<u64>,
+    mut round: impl FnMut(&[u64]),
+) {
+    let geom = Geom::new(n, group);
+    let gc = geom.gcount;
+    let k = k.min(n);
+    // Blob bytes group `q` holds after the gather: its members in 0..k.
+    let group_total = |q: usize| -> u64 {
+        let start = geom.start(q);
+        let end = start + geom.m(q);
+        blob * (end.min(k).saturating_sub(start)) as u64
+    };
+    let total: u64 = blob * k as u64;
+    for j in 1..geom.max_m() {
+        refill(sends, 0..n, |i| {
+            let (_, p, m) = geom.kpm(i);
+            if p == j && j < m && i < k {
+                blob
+            } else {
+                0
+            }
+        });
+        round(sends);
+    }
+    if gc >= 2 {
+        for r in 0..gc - 1 {
+            refill(sends, 0..n, |i| {
+                let (q, p, _) = geom.kpm(i);
+                if p == 0 {
+                    group_total((q + gc - r) % gc)
+                } else {
+                    0
+                }
+            });
+            round(sends);
+        }
+    }
+    for r in 0..geom.max_m() - 1 {
+        refill(sends, 0..n, |i| {
+            let (_, p, m) = geom.kpm(i);
+            if p == r && r + 1 < m {
+                total
+            } else {
+                0
+            }
+        });
+        round(sends);
+    }
+}
+
+/// Refill `sends` from a per-node closure, reusing capacity.
+fn refill(sends: &mut Vec<u64>, nodes: std::ops::Range<usize>, f: impl Fn(usize) -> u64) {
+    sends.clear();
+    sends.extend(nodes.map(f));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkSpec;
+
+    fn net(n: usize) -> RingNet {
+        RingNet::new(n, LinkSpec::new(1e9, 0.0), 1.0)
+    }
+
+    #[test]
+    fn geometry_partitions_exactly() {
+        let g = Geom::new(10, 4);
+        assert_eq!(g.gcount, 3);
+        assert_eq!((g.m(0), g.m(1), g.m(2)), (4, 4, 2));
+        assert_eq!(g.m_last(), 2);
+        assert_eq!(g.kpm(9), (2, 1, 2));
+        let g = Geom::new(8, 16); // group > n clamps to one group
+        assert_eq!(g.gcount, 1);
+        assert_eq!(g.m(0), 8);
+    }
+
+    #[test]
+    fn dense_reduces_to_sum() {
+        for (n, group) in [(6usize, 2usize), (7, 3), (8, 8), (5, 1)] {
+            let len = 37;
+            let base: Vec<Vec<f32>> = (0..n)
+                .map(|i| (0..len).map(|j| (i * len + j) as f32).collect())
+                .collect();
+            let mut expect = vec![0.0f32; len];
+            for b in &base {
+                for (e, &v) in expect.iter_mut().zip(b) {
+                    *e += v;
+                }
+            }
+            let topo = HierarchicalRing::new(n, group);
+            let mut nw = net(n);
+            let mut bufs = base;
+            topo.dense(
+                &mut nw,
+                &mut bufs,
+                &Executor::sequential(),
+                &mut Arena::for_nodes(n),
+            );
+            for (node, b) in bufs.iter().enumerate() {
+                for (j, (&x, &e)) in b.iter().zip(&expect).enumerate() {
+                    assert_eq!(x, e, "n={n} g={group} node={node} coord={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_bytes_only_matches_exact_accounting() {
+        for (n, group, len) in [(6usize, 2usize, 500usize), (9, 4, 1234), (8, 3, 64)] {
+            let topo = HierarchicalRing::new(n, group);
+            let mut net_a = net(n);
+            let mut bufs = vec![vec![1.0f32; len]; n];
+            let rep = topo.dense(
+                &mut net_a,
+                &mut bufs,
+                &Executor::sequential(),
+                &mut Arena::for_nodes(n),
+            );
+            let mut net_b = net(n);
+            let rep_b = topo.dense_bytes_only(&mut net_b, len, &mut Arena::for_nodes(n));
+            assert_eq!(rep.bytes_per_node, rep_b.bytes_per_node, "n={n} g={group}");
+            assert_eq!(rep.seconds.to_bits(), rep_b.seconds.to_bits());
+            assert_eq!(net_a.rounds(), net_b.rounds());
+        }
+    }
+
+    #[test]
+    fn sparse_result_matches_direct_sum() {
+        let (n, group, len) = (7usize, 3usize, 90usize);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let inputs: Vec<SparseVec> = (0..n)
+            .map(|_| {
+                let mut dense = vec![0.0f32; len];
+                for v in dense.iter_mut() {
+                    if rng.uniform() < 0.2 {
+                        *v = (rng.below(9) as f32) - 4.0; // exact integers
+                    }
+                }
+                SparseVec::from_dense(&dense)
+            })
+            .collect();
+        let mut expect = vec![0.0f32; len];
+        for s in &inputs {
+            s.scatter_add(&mut expect);
+        }
+        let topo = HierarchicalRing::new(n, group);
+        let mut nw = net(n);
+        let (got, rep) = topo.sparse(
+            &mut nw,
+            &inputs,
+            &Executor::sequential(),
+            &mut Arena::for_nodes(n),
+        );
+        assert_eq!(got, expect);
+        assert_eq!(rep.density_per_hop.len(), topo.reduce_hops());
+    }
+
+    #[test]
+    fn spread_total_bytes_account_every_link() {
+        // 3 blobs of 100 B on an 8-node, group-4 hierarchy: gather moves
+        // each non-leader blob once, the leader ring moves each group
+        // aggregate G-1 times, broadcast moves the full 300 B set m-1
+        // times per group.
+        let (n, group, blob, k) = (8usize, 4usize, 100u64, 3usize);
+        let topo = HierarchicalRing::new(n, group);
+        let mut nw = net(n);
+        let rep = topo.spread_bytes(&mut nw, blob, k, &mut Arena::for_nodes(n));
+        // gather: blobs at nodes 1,2 (leaders 0 and 4 keep theirs) = 200;
+        // leader ring: group totals 300 and 0, each crossing G-1=1 link = 300;
+        // broadcast: 300 B x (4-1) senders x 2 groups = 1800.
+        assert_eq!(rep.total_bytes(), 200 + 300 + 1800);
+    }
+}

@@ -1,0 +1,354 @@
+//! Topology subsystem — pluggable allreduce communication patterns
+//! (DESIGN.md §10).
+//!
+//! The paper's scaling claim ("breaks the restriction as the node
+//! increase") was only testable on a single flat ring; RedSync and DGC
+//! (PAPERS.md) both show that the *communication pattern* — flat ring
+//! vs. hierarchical rings vs. tree — changes which compression schemes
+//! survive at scale. This module extracts the transport behind every
+//! schedule into a [`Topology`] trait with three implementations:
+//!
+//! * [`FlatRing`] — the original single unidirectional ring
+//!   (bit-identical to the pre-refactor `ring::*` entry points, which
+//!   it delegates to).
+//! * [`HierarchicalRing`] — the NCCL-style two-level scheme:
+//!   intra-group ring reduce-scatter → gather to group leaders →
+//!   inter-group ring over the leaders → intra-group chain broadcast.
+//! * [`TreeAllreduce`] — binomial-tree reduce + broadcast, the dense
+//!   baseline DGC-style schemes assume.
+//!
+//! All topologies run on the same [`RingNet`] virtual network: a
+//! "round" is one synchronous phase in which node `i` transmits
+//! `sends[i]` bytes to *some* peer; the round lasts as long as its
+//! slowest transfer and the per-node egress counters absorb the bytes.
+//! The contract every implementation obeys — determinism, disjoint
+//! mutation, coordinator-ordered reduction, per-node tx accounting —
+//! is written out in DESIGN.md §10 and enforced bit-exactly by
+//! `rust/tests/topology_equivalence.rs`.
+
+mod flat;
+mod hier;
+mod tree;
+
+pub use flat::FlatRing;
+pub use hier::HierarchicalRing;
+pub use tree::TreeAllreduce;
+
+pub(crate) use hier::{dense_plan as hier_dense_plan, spread_plan as hier_spread_plan};
+pub(crate) use tree::{dense_plan as tree_dense_plan, spread_plan as tree_spread_plan};
+
+use super::RingNet;
+use crate::ring::{Arena, Executor, ReduceReport};
+use crate::sparse::{BitMask, SparseVec};
+
+/// Which topology to run a reduce over — the `--topology` /
+/// `RINGIWP_TOPOLOGY` knob (DESIGN.md §10). [`TopoKind::build`] turns a
+/// kind into a live [`Topology`] for a given node count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TopoKind {
+    /// Single unidirectional ring over all N nodes (the paper's
+    /// testbed; the pre-refactor behaviour, bit-identical).
+    #[default]
+    Flat,
+    /// Two-level hierarchy: rings inside fixed-size groups, a ring of
+    /// group leaders across groups.
+    Hier {
+        /// Nodes per group (contiguous blocks; the last group may be
+        /// smaller when `group` does not divide N).
+        group: usize,
+    },
+    /// Binomial-tree reduce to node 0 + broadcast back out.
+    Tree,
+}
+
+impl TopoKind {
+    /// Parse `flat | hier:<group_size> | tree` (the CLI / env grammar).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.trim();
+        if s == "flat" {
+            return Ok(TopoKind::Flat);
+        }
+        if s == "tree" {
+            return Ok(TopoKind::Tree);
+        }
+        if let Some(g) = s.strip_prefix("hier:") {
+            let group: usize = g
+                .parse()
+                .map_err(|_| anyhow::anyhow!("hier:<group_size> expects an integer, got `{g}`"))?;
+            anyhow::ensure!(group >= 1, "hier group size must be >= 1");
+            return Ok(TopoKind::Hier { group });
+        }
+        anyhow::bail!("unknown topology `{s}` (flat | hier:<group_size> | tree)")
+    }
+
+    /// Canonical name, re-parseable by [`TopoKind::parse`]
+    /// (`flat`, `hier:4`, `tree`).
+    pub fn name(&self) -> String {
+        match self {
+            TopoKind::Flat => "flat".to_string(),
+            TopoKind::Hier { group } => format!("hier:{group}"),
+            TopoKind::Tree => "tree".to_string(),
+        }
+    }
+
+    /// Reject configurations no topology can run.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if let TopoKind::Hier { group } = self {
+            anyhow::ensure!(*group >= 1, "hier group size must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Environment default: `RINGIWP_TOPOLOGY`, else [`TopoKind::Flat`]
+    /// (mirrors `RINGIWP_PARALLELISM` for the experiment harnesses).
+    /// A set-but-malformed value panics with the parse error rather
+    /// than silently measuring the wrong topology — the same strictness
+    /// as the `--topology` flag.
+    pub fn from_env() -> Self {
+        match std::env::var("RINGIWP_TOPOLOGY") {
+            Ok(s) => TopoKind::parse(&s)
+                .unwrap_or_else(|e| panic!("RINGIWP_TOPOLOGY={s}: {e}")),
+            Err(_) => TopoKind::Flat,
+        }
+    }
+
+    /// Build the live topology for an `n`-node network (`n >= 2`).
+    pub fn build(&self, n: usize) -> Box<dyn Topology> {
+        assert!(n >= 2, "a topology needs at least 2 nodes");
+        match *self {
+            TopoKind::Flat => Box::new(FlatRing::new(n)),
+            TopoKind::Hier { group } => Box::new(HierarchicalRing::new(n, group)),
+            TopoKind::Tree => Box::new(TreeAllreduce::new(n)),
+        }
+    }
+}
+
+impl std::fmt::Display for TopoKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// One allreduce communication pattern over the virtual network
+/// (DESIGN.md §10). Every method:
+///
+/// * drives the net in synchronous rounds only (`RingNet::round`), so
+///   byte and virtual-time accounting stay exact;
+/// * mutates per-node state disjointly inside executor regions and
+///   performs all cross-node reductions on the coordinating thread in
+///   node order, so results are **bit-identical at any `parallelism`**
+///   (the DESIGN.md §4 contract, re-stated per topology in §10);
+/// * threads its scratch through the caller's [`Arena`], so warmed
+///   steady-state loops allocate nothing (DESIGN.md §9).
+pub trait Topology: std::fmt::Debug + Send + Sync {
+    /// The kind this topology was built from.
+    fn kind(&self) -> TopoKind;
+
+    /// Node count the topology was built for (must match the net's).
+    fn nodes(&self) -> usize;
+
+    /// Number of reduce-phase hops — the length of
+    /// `ReduceReport::density_per_hop` this topology produces
+    /// (flat: `N-1`; hier: `(m_max-1) + (G-1)`; tree: `ceil(log2 N)`).
+    fn reduce_hops(&self) -> usize;
+
+    /// Dense allreduce: on return every `bufs[i]` holds the element-wise
+    /// **sum** across nodes (callers divide by N to average).
+    fn dense(
+        &self,
+        net: &mut RingNet,
+        bufs: &mut [Vec<f32>],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> ReduceReport;
+
+    /// Accounting-only dense allreduce: models the exact round sequence
+    /// of [`Topology::dense`] on the net without moving values. Byte and
+    /// time totals are identical to the exact path over the same
+    /// coordinate count — and to the closed-form
+    /// `CostModel::topo_dense_*` predictions, bit for bit.
+    fn dense_bytes_only(
+        &self,
+        net: &mut RingNet,
+        coords: usize,
+        arena: &mut Arena,
+    ) -> ReduceReport;
+
+    /// Sparse allreduce of per-node supports (DGC-style). Returns the
+    /// summed dense result plus accounting; travelling payloads stay in
+    /// sparse wire format, so `density_per_hop` records the
+    /// densification trajectory of this topology.
+    fn sparse(
+        &self,
+        net: &mut RingNet,
+        inputs: &[SparseVec],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> (Vec<f32>, ReduceReport);
+
+    /// Support-only sparse allreduce — the large-model fast path: only
+    /// bit-mask supports travel, wire bytes are modelled from each
+    /// payload's nnz with the shared codec chooser.
+    fn sparse_support(
+        &self,
+        net: &mut RingNet,
+        supports: &[BitMask],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> ReduceReport;
+
+    /// Algorithm 1's shared-mask allreduce: spread the `masks` blobs to
+    /// every node, OR them into the shared mask, then run the dense
+    /// schedule over the values compacted to the shared support.
+    fn masked(
+        &self,
+        net: &mut RingNet,
+        masks: &[&BitMask],
+        values: &[&[f32]],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> (BitMask, Vec<f32>, ReduceReport);
+
+    /// Accounting-only [`Topology::masked`]: mask spread + compacted
+    /// dense rounds modelled on the net without moving values.
+    fn masked_bytes_only(
+        &self,
+        net: &mut RingNet,
+        masks: &[&BitMask],
+        arena: &mut Arena,
+    ) -> (BitMask, ReduceReport);
+
+    /// Blob spread (allgather-equivalent) accounting: nodes `0..k` each
+    /// hold a `blob_bytes` blob that must reach every node (TernGrad
+    /// quantized gradients, Algorithm 1's broadcaster masks). Flat uses
+    /// the N-1-round ring rotation; hier gathers to leaders, rings the
+    /// leaders, and chain-broadcasts; tree gathers to the root and
+    /// broadcasts down.
+    fn spread_bytes(
+        &self,
+        net: &mut RingNet,
+        blob_bytes: u64,
+        k: usize,
+        arena: &mut Arena,
+    ) -> ReduceReport;
+}
+
+/// OR-combine broadcaster masks into the shared mask (identical on
+/// every node and on every topology — the combine is pure data, only
+/// the *distribution* of the blobs is topology-specific).
+pub(crate) fn or_masks(masks: &[&BitMask], len: usize) -> BitMask {
+    let mut shared = BitMask::zeros(len);
+    for m in masks {
+        assert_eq!(m.len(), len);
+        shared.or_assign(m);
+    }
+    shared
+}
+
+/// Compact every node's values to the shared support into the arena's
+/// per-node compaction slots (Algorithm 1's phase 3 — shared by the
+/// hierarchical and tree masked schedules; the flat shim keeps using
+/// `ring::masked`'s own copy verbatim for bit-identity).
+pub(crate) fn compact_to_support(
+    shared: &BitMask,
+    values: &[&[f32]],
+    exec: &Executor,
+    grows: &std::sync::atomic::AtomicU64,
+    mk_support: &mut Vec<usize>,
+    mk_compact: &mut Vec<Vec<f32>>,
+) {
+    let n = values.len();
+    Arena::refill(grows, mk_support, shared.iter_set());
+    Arena::slots(grows, mk_compact, n, Vec::new);
+    let support: &[usize] = mk_support;
+    exec.map_mut(&mut mk_compact[..n], |node, c| {
+        let cap = c.capacity();
+        c.clear();
+        c.extend(support.iter().map(|&i| values[node][i]));
+        Arena::note(grows, c.capacity() != cap);
+    });
+}
+
+/// `ceil(log2 n)` — binomial-tree round count for `n >= 1`.
+pub(crate) fn ceil_log2(n: usize) -> usize {
+    assert!(n >= 1);
+    (usize::BITS - (n - 1).leading_zeros()) as usize
+}
+
+/// Size of chunk `i` of the balanced `chunk_ranges(len, m)` partition,
+/// without materializing the table (the net-free cost-model plans use
+/// this; `chunk_ranges` assigns `len/m + 1` to the first `len % m`
+/// chunks and `len/m` to the rest).
+pub(crate) fn chunk_size(len: usize, m: usize, i: usize) -> usize {
+    len / m + usize::from(i < len % m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_roundtrips() {
+        for (s, k) in [
+            ("flat", TopoKind::Flat),
+            ("tree", TopoKind::Tree),
+            ("hier:4", TopoKind::Hier { group: 4 }),
+            ("hier:1", TopoKind::Hier { group: 1 }),
+        ] {
+            let parsed = TopoKind::parse(s).unwrap();
+            assert_eq!(parsed, k);
+            assert_eq!(TopoKind::parse(&parsed.name()).unwrap(), parsed);
+        }
+        assert!(TopoKind::parse("ring").is_err());
+        assert!(TopoKind::parse("hier:").is_err());
+        assert!(TopoKind::parse("hier:0").is_err());
+        assert!(TopoKind::parse("hier:x").is_err());
+    }
+
+    #[test]
+    fn build_produces_matching_kind() {
+        for kind in [TopoKind::Flat, TopoKind::Hier { group: 3 }, TopoKind::Tree] {
+            let t = kind.build(8);
+            assert_eq!(t.kind(), kind);
+            assert_eq!(t.nodes(), 8);
+            assert!(t.reduce_hops() >= 1);
+        }
+    }
+
+    #[test]
+    fn reduce_hop_counts() {
+        assert_eq!(TopoKind::Flat.build(8).reduce_hops(), 7);
+        assert_eq!(TopoKind::Tree.build(8).reduce_hops(), 3);
+        assert_eq!(TopoKind::Tree.build(9).reduce_hops(), 4);
+        // hier: (m_max - 1) + (G - 1) = (4-1) + (2-1) = 4.
+        assert_eq!(TopoKind::Hier { group: 4 }.build(8).reduce_hops(), 4);
+        // group 1: every node is a leader -> pure flat ring hop count.
+        assert_eq!(TopoKind::Hier { group: 1 }.build(8).reduce_hops(), 7);
+    }
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(96), 7);
+    }
+
+    #[test]
+    fn chunk_size_matches_chunk_ranges() {
+        for (len, m) in [(10usize, 3usize), (9, 3), (2, 4), (0, 5), (6000, 7)] {
+            let r = crate::ring::chunk_ranges(len, m);
+            for (i, c) in r.iter().enumerate() {
+                assert_eq!(chunk_size(len, m, i), c.len(), "len={len} m={m} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2")]
+    fn build_rejects_degenerate() {
+        let _ = TopoKind::Flat.build(1);
+    }
+}

@@ -1,0 +1,730 @@
+//! Binomial-tree allreduce topology (DESIGN.md §10).
+//!
+//! The dense baseline DGC-style schemes assume: a reduce up a binomial
+//! tree rooted at node 0 followed by a broadcast back down. With
+//! `R = ceil(log2 N)` rounds each way the wall-clock is logarithmic in
+//! N, but every travelling payload is the **full** vector — per-link
+//! bytes do not shrink with N the way the ring's chunked rotation does,
+//! which is exactly the trade the cross-topology sweeps measure:
+//!
+//! ```text
+//! round r (reduce):    i  ──full payload──▶  i - 2^r      for every i
+//!                      with i ≡ 2^r (mod 2^(r+1))
+//! round r (broadcast): j  ──full payload──▶  j + 2^r      for every j
+//!                      with j ≡ 0 (mod 2^(r+1)), j + 2^r < N
+//! ```
+//!
+//! For sparse payloads the accumulated vector *densifies up the tree*
+//! (each merge unions two subtrees' supports), giving DGC-style
+//! schemes a different densification trajectory than the ring —
+//! `ReduceReport::density_per_hop` records the mean density of the
+//! live accumulators after each reduce round. The net-free
+//! [`dense_plan`] / [`spread_plan`] round generators are shared with
+//! `net::cost::CostModel` for bit-exact prediction (DESIGN.md §10).
+
+use std::sync::atomic::AtomicU64;
+
+use super::flat::{report, snapshot};
+use super::{ceil_log2, compact_to_support, or_masks, TopoKind, Topology};
+use crate::net::RingNet;
+use crate::ring::{Arena, Executor, ReduceReport};
+use crate::sparse::{wire_bytes, BitMask, SparseVec, WireFormat};
+
+/// Binomial-tree reduce + broadcast rooted at node 0 (DESIGN.md §10).
+#[derive(Debug, Clone, Copy)]
+pub struct TreeAllreduce {
+    n: usize,
+    rounds: usize,
+}
+
+impl TreeAllreduce {
+    /// A binomial tree over `n >= 2` nodes.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2, "a topology needs at least 2 nodes");
+        TreeAllreduce {
+            n,
+            rounds: ceil_log2(n),
+        }
+    }
+
+    /// Is `i` a sender in reduce round `r`?
+    #[inline]
+    fn up_sender(i: usize, r: usize) -> bool {
+        i % (2 << r) == (1 << r)
+    }
+
+    /// Is `i` a receiver in reduce round `r` (its partner `i + 2^r`
+    /// exists)?
+    #[inline]
+    fn up_receiver(i: usize, r: usize, n: usize) -> bool {
+        i % (2 << r) == 0 && i + (1 << r) < n
+    }
+
+    /// Is `i` a sender in broadcast round `r`?
+    #[inline]
+    fn down_sender(i: usize, r: usize, n: usize) -> bool {
+        i % (2 << r) == 0 && i + (1 << r) < n
+    }
+}
+
+impl Topology for TreeAllreduce {
+    fn kind(&self) -> TopoKind {
+        TopoKind::Tree
+    }
+
+    fn nodes(&self) -> usize {
+        self.n
+    }
+
+    fn reduce_hops(&self) -> usize {
+        self.rounds
+    }
+
+    fn dense(
+        &self,
+        net: &mut RingNet,
+        bufs: &mut [Vec<f32>],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        let Arena {
+            grows,
+            dense_staging,
+            dense_sends,
+            ..
+        } = arena;
+        dense_core(net, self.n, self.rounds, bufs, exec, grows, dense_staging, dense_sends)
+    }
+
+    fn dense_bytes_only(
+        &self,
+        net: &mut RingNet,
+        coords: usize,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        assert_eq!(net.n_nodes(), self.n);
+        let Arena {
+            grows, dense_sends, ..
+        } = arena;
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let cap = dense_sends.capacity();
+        dense_plan(self.n, coords, dense_sends, |s| {
+            net.round(s);
+        });
+        Arena::note(grows, dense_sends.capacity() != cap);
+        report(net, &before, t0, Vec::new())
+    }
+
+    fn sparse(
+        &self,
+        net: &mut RingNet,
+        inputs: &[SparseVec],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> (Vec<f32>, ReduceReport) {
+        let n = self.n;
+        assert_eq!(net.n_nodes(), n);
+        assert_eq!(inputs.len(), n);
+        let len = inputs[0].len;
+        assert!(inputs.iter().all(|s| s.len == len));
+
+        let Arena {
+            grows,
+            sp_held,
+            sp_next,
+            sp_sends,
+            ..
+        } = arena;
+        let grows: &AtomicU64 = grows;
+        Arena::slots(grows, sp_held, n, || SparseVec::empty(0));
+        Arena::slots(grows, sp_next, n, || SparseVec::empty(0));
+
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let mut density_per_hop = Vec::with_capacity(self.rounds);
+
+        // Reduce: accumulated sparse vectors merge (union + add) up the
+        // tree; the sender's payload is its whole accumulated subtree.
+        exec.map_mut(&mut sp_held[..n], |i, h| {
+            Arena::note(grows, h.assign_window(&inputs[i], &(0..len)));
+        });
+        let (mut held, mut next) = (sp_held, sp_next);
+        for r in 0..self.rounds {
+            Arena::refill(
+                grows,
+                sp_sends,
+                (0..n).map(|i| {
+                    if Self::up_sender(i, r) {
+                        held[i].wire_bytes()
+                    } else {
+                        0
+                    }
+                }),
+            );
+            net.round(sp_sends);
+            {
+                let held_ref: &[SparseVec] = held;
+                exec.map_mut(&mut next[..n], |i, nx| {
+                    if Self::up_receiver(i, r, n) {
+                        let src = i + (1 << r);
+                        Arena::note(grows, held_ref[src].merge_add_into(&held_ref[i], nx));
+                    } else if Self::up_sender(i, r) {
+                        nx.clear_to(len); // payload delivered upward
+                    } else {
+                        let hlen = held_ref[i].len;
+                        Arena::note(grows, nx.assign_window(&held_ref[i], &(0..hlen)));
+                    }
+                });
+            }
+            std::mem::swap(&mut held, &mut next);
+            // Mean density of the live accumulators (nodes still holding
+            // a partial: indices ≡ 0 mod 2^(r+1)).
+            let (mut dsum, mut live) = (0.0f64, 0usize);
+            for i in (0..n).filter(|i| i % (2 << r) == 0) {
+                dsum += held[i].density();
+                live += 1;
+            }
+            density_per_hop.push(dsum / live.max(1) as f64);
+        }
+
+        // Broadcast accounting: the root's full reduced sparse vector
+        // travels back down the tree.
+        let result = held[0].to_dense();
+        let root_bytes = held[0].wire_bytes();
+        for r in (0..self.rounds).rev() {
+            Arena::refill(
+                grows,
+                sp_sends,
+                (0..n).map(|i| {
+                    if Self::down_sender(i, r, n) {
+                        root_bytes
+                    } else {
+                        0
+                    }
+                }),
+            );
+            net.round(sp_sends);
+        }
+
+        (result, report(net, &before, t0, density_per_hop))
+    }
+
+    fn sparse_support(
+        &self,
+        net: &mut RingNet,
+        supports: &[BitMask],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        let n = self.n;
+        assert_eq!(net.n_nodes(), n);
+        assert_eq!(supports.len(), n);
+        let len = supports[0].len();
+        assert!(supports.iter().all(|s| s.len() == len));
+
+        let Arena {
+            grows,
+            su_held,
+            su_next,
+            su_sends,
+            ..
+        } = arena;
+        let grows: &AtomicU64 = grows;
+        Arena::slots(grows, su_held, n, Vec::new);
+        Arena::slots(grows, su_next, n, Vec::new);
+
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let mut density_per_hop = Vec::with_capacity(self.rounds);
+        let seg_bytes = |words: &[u64]| -> u64 {
+            let nnz = BitMask::popcount_words(words);
+            wire_bytes(WireFormat::cheapest(len, nnz), len, nnz)
+        };
+
+        exec.map_mut(&mut su_held[..n], |i, h| {
+            Arena::note(
+                grows,
+                Arena::refill_slice(h, supports[i].word_slice(0..len)),
+            );
+        });
+        let (mut held, mut next) = (su_held, su_next);
+        for r in 0..self.rounds {
+            Arena::refill(
+                grows,
+                su_sends,
+                (0..n).map(|i| {
+                    if Self::up_sender(i, r) {
+                        seg_bytes(&held[i])
+                    } else {
+                        0
+                    }
+                }),
+            );
+            net.round(su_sends);
+            {
+                let held_ref: &[Vec<u64>] = held;
+                exec.map_mut(&mut next[..n], |i, nx| {
+                    if Self::up_receiver(i, r, n) {
+                        let src = i + (1 << r);
+                        Arena::note(grows, Arena::refill_slice(nx, &held_ref[i]));
+                        for (w, o) in nx.iter_mut().zip(&held_ref[src]) {
+                            *w |= o;
+                        }
+                    } else if Self::up_sender(i, r) {
+                        nx.clear();
+                    } else {
+                        Arena::note(grows, Arena::refill_slice(nx, &held_ref[i]));
+                    }
+                });
+            }
+            std::mem::swap(&mut held, &mut next);
+            let (mut nnz, mut live) = (0usize, 0usize);
+            for i in (0..n).filter(|i| i % (2 << r) == 0) {
+                nnz += BitMask::popcount_words(&held[i]);
+                live += 1;
+            }
+            density_per_hop.push(nnz as f64 / (live * len).max(1) as f64);
+        }
+
+        let root_bytes = seg_bytes(&held[0]);
+        for r in (0..self.rounds).rev() {
+            Arena::refill(
+                grows,
+                su_sends,
+                (0..n).map(|i| {
+                    if Self::down_sender(i, r, n) {
+                        root_bytes
+                    } else {
+                        0
+                    }
+                }),
+            );
+            net.round(su_sends);
+        }
+
+        report(net, &before, t0, density_per_hop)
+    }
+
+    fn masked(
+        &self,
+        net: &mut RingNet,
+        masks: &[&BitMask],
+        values: &[&[f32]],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> (BitMask, Vec<f32>, ReduceReport) {
+        let n = self.n;
+        assert_eq!(net.n_nodes(), n);
+        assert_eq!(values.len(), n);
+        assert!(!masks.is_empty(), "need at least one mask broadcaster");
+        let len = masks[0].len();
+        assert!(values.iter().all(|v| v.len() == len));
+
+        let mask_bytes = masks[0].wire_bytes();
+        let k = masks.len().min(n);
+        let before = snapshot(net);
+        let t0 = net.clock();
+
+        {
+            let Arena {
+                grows, ag_sends, ..
+            } = &mut *arena;
+            let cap = ag_sends.capacity();
+            spread_plan(n, mask_bytes, k, ag_sends, |s| {
+                net.round(s);
+            });
+            Arena::note(grows, ag_sends.capacity() != cap);
+        }
+        let shared = or_masks(masks, len);
+
+        let Arena {
+            grows,
+            mk_support,
+            mk_compact,
+            dense_staging,
+            dense_sends,
+            ..
+        } = arena;
+        let grows: &AtomicU64 = grows;
+        compact_to_support(&shared, values, exec, grows, mk_support, mk_compact);
+        dense_core(
+            net,
+            n,
+            self.rounds,
+            &mut mk_compact[..n],
+            exec,
+            grows,
+            dense_staging,
+            dense_sends,
+        );
+
+        let rep = report(
+            net,
+            &before,
+            t0,
+            vec![shared.density(); self.rounds],
+        );
+        (shared, mk_compact[0].clone(), rep)
+    }
+
+    fn masked_bytes_only(
+        &self,
+        net: &mut RingNet,
+        masks: &[&BitMask],
+        arena: &mut Arena,
+    ) -> (BitMask, ReduceReport) {
+        let n = self.n;
+        assert_eq!(net.n_nodes(), n);
+        assert!(!masks.is_empty());
+        let len = masks[0].len();
+        let mask_bytes = masks[0].wire_bytes();
+        let k = masks.len().min(n);
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let Arena {
+            grows,
+            ag_sends,
+            dense_sends,
+            ..
+        } = arena;
+        let cap = ag_sends.capacity();
+        spread_plan(n, mask_bytes, k, ag_sends, |s| {
+            net.round(s);
+        });
+        Arena::note(grows, ag_sends.capacity() != cap);
+        let shared = or_masks(masks, len);
+        let cap = dense_sends.capacity();
+        dense_plan(n, shared.count(), dense_sends, |s| {
+            net.round(s);
+        });
+        Arena::note(grows, dense_sends.capacity() != cap);
+        let rep = report(
+            net,
+            &before,
+            t0,
+            vec![shared.density(); self.rounds],
+        );
+        (shared, rep)
+    }
+
+    fn spread_bytes(
+        &self,
+        net: &mut RingNet,
+        blob_bytes: u64,
+        k: usize,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        let n = self.n;
+        assert_eq!(net.n_nodes(), n);
+        let Arena {
+            grows, ag_sends, ..
+        } = arena;
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let cap = ag_sends.capacity();
+        spread_plan(n, blob_bytes, k, ag_sends, |s| {
+            net.round(s);
+        });
+        Arena::note(grows, ag_sends.capacity() != cap);
+        report(net, &before, t0, Vec::new())
+    }
+}
+
+/// The exact binomial dense schedule over explicit scratch parts (the
+/// masked schedule runs it on compacted values while holding its own
+/// arena fields).
+#[allow(clippy::too_many_arguments)]
+fn dense_core(
+    net: &mut RingNet,
+    n: usize,
+    rounds: usize,
+    bufs: &mut [Vec<f32>],
+    exec: &Executor,
+    grows: &AtomicU64,
+    staging: &mut Vec<Vec<f32>>,
+    sends: &mut Vec<u64>,
+) -> ReduceReport {
+    assert_eq!(net.n_nodes(), n);
+    assert_eq!(bufs.len(), n, "one buffer per node");
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len));
+    if len == 0 {
+        return ReduceReport {
+            bytes_per_node: vec![0; n],
+            ..Default::default()
+        };
+    }
+    Arena::slots(grows, staging, n, Vec::new);
+    let before = snapshot(net);
+    let t0 = net.clock();
+    let payload = (len * 4) as u64;
+
+    // Reduce up the tree: each sender ships its full accumulated buffer.
+    for r in 0..rounds {
+        Arena::refill(
+            grows,
+            sends,
+            (0..n).map(|i| {
+                if TreeAllreduce::up_sender(i, r) {
+                    payload
+                } else {
+                    0
+                }
+            }),
+        );
+        net.round(sends);
+        {
+            let bufs_src: &[Vec<f32>] = bufs;
+            exec.map_mut(&mut staging[..n], |i, stage| {
+                if TreeAllreduce::up_sender(i, r) {
+                    Arena::note(grows, Arena::refill_slice(stage, &bufs_src[i][..]));
+                }
+            });
+        }
+        let staged: &[Vec<f32>] = staging;
+        exec.map_mut(bufs, |dst, buf| {
+            if TreeAllreduce::up_receiver(dst, r, n) {
+                let src = dst + (1 << r);
+                for (b, s) in buf.iter_mut().zip(&staged[src]) {
+                    *b += s;
+                }
+            }
+        });
+    }
+
+    // Broadcast the root's fully reduced buffer back down.
+    for r in (0..rounds).rev() {
+        Arena::refill(
+            grows,
+            sends,
+            (0..n).map(|i| {
+                if TreeAllreduce::down_sender(i, r, n) {
+                    payload
+                } else {
+                    0
+                }
+            }),
+        );
+        net.round(sends);
+        {
+            let bufs_src: &[Vec<f32>] = bufs;
+            exec.map_mut(&mut staging[..n], |i, stage| {
+                if TreeAllreduce::down_sender(i, r, n) {
+                    Arena::note(grows, Arena::refill_slice(stage, &bufs_src[i][..]));
+                }
+            });
+        }
+        let staged: &[Vec<f32>] = staging;
+        exec.map_mut(bufs, |dst, buf| {
+            let s1 = 1usize << r;
+            if dst % (2 << r) == s1 {
+                buf.copy_from_slice(&staged[dst - s1]);
+            }
+        });
+    }
+
+    ReduceReport {
+        bytes_per_node: (0..n)
+            .map(|i| net.node_tx_bytes(i) - before[i])
+            .collect(),
+        seconds: net.clock() - t0,
+        density_per_hop: Vec::new(),
+    }
+}
+
+/// Net-free round plan of the binomial dense schedule (shared with
+/// `CostModel::topo_dense_*` — DESIGN.md §10). Emits nothing for
+/// `len == 0`, matching the exact path's early return.
+pub(crate) fn dense_plan(
+    n: usize,
+    len: usize,
+    sends: &mut Vec<u64>,
+    mut round: impl FnMut(&[u64]),
+) {
+    if len == 0 {
+        return;
+    }
+    let rounds = ceil_log2(n);
+    let payload = (len * 4) as u64;
+    for r in 0..rounds {
+        sends.clear();
+        sends.extend((0..n).map(|i| {
+            if TreeAllreduce::up_sender(i, r) {
+                payload
+            } else {
+                0
+            }
+        }));
+        round(sends);
+    }
+    for r in (0..rounds).rev() {
+        sends.clear();
+        sends.extend((0..n).map(|i| {
+            if TreeAllreduce::down_sender(i, r, n) {
+                payload
+            } else {
+                0
+            }
+        }));
+        round(sends);
+    }
+}
+
+/// Net-free round plan of the binomial blob spread: nodes `0..k` hold
+/// one `blob`-byte blob each; gather to the root (payload = the blobs
+/// of the sender's subtree `[i, i + 2^r)`), then broadcast the full set
+/// down.
+pub(crate) fn spread_plan(
+    n: usize,
+    blob: u64,
+    k: usize,
+    sends: &mut Vec<u64>,
+    mut round: impl FnMut(&[u64]),
+) {
+    let rounds = ceil_log2(n);
+    let k = k.min(n);
+    let total = blob * k as u64;
+    for r in 0..rounds {
+        let s1 = 1usize << r;
+        sends.clear();
+        sends.extend((0..n).map(|i| {
+            if TreeAllreduce::up_sender(i, r) {
+                blob * ((i + s1).min(k).saturating_sub(i)) as u64
+            } else {
+                0
+            }
+        }));
+        round(sends);
+    }
+    for r in (0..rounds).rev() {
+        sends.clear();
+        sends.extend((0..n).map(|i| {
+            if TreeAllreduce::down_sender(i, r, n) {
+                total
+            } else {
+                0
+            }
+        }));
+        round(sends);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkSpec;
+
+    fn net(n: usize) -> RingNet {
+        RingNet::new(n, LinkSpec::new(1e9, 0.0), 1.0)
+    }
+
+    #[test]
+    fn dense_reduces_to_sum() {
+        for n in [2usize, 3, 5, 8, 9] {
+            let len = 23;
+            let base: Vec<Vec<f32>> = (0..n)
+                .map(|i| (0..len).map(|j| (i * len + j) as f32).collect())
+                .collect();
+            let mut expect = vec![0.0f32; len];
+            for b in &base {
+                for (e, &v) in expect.iter_mut().zip(b) {
+                    *e += v;
+                }
+            }
+            let topo = TreeAllreduce::new(n);
+            let mut nw = net(n);
+            let mut bufs = base;
+            topo.dense(
+                &mut nw,
+                &mut bufs,
+                &Executor::sequential(),
+                &mut Arena::for_nodes(n),
+            );
+            for (node, b) in bufs.iter().enumerate() {
+                assert_eq!(b, &expect, "n={n} node={node}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_round_count_is_logarithmic() {
+        let (n, len) = (8usize, 100usize);
+        let topo = TreeAllreduce::new(n);
+        let mut nw = net(n);
+        let mut bufs = vec![vec![1.0f32; len]; n];
+        topo.dense(
+            &mut nw,
+            &mut bufs,
+            &Executor::sequential(),
+            &mut Arena::for_nodes(n),
+        );
+        assert_eq!(nw.rounds(), 2 * 3); // 2 * ceil(log2 8)
+        // Total bytes: every non-root sends the payload up once, and
+        // every non-root receives it once on the way down.
+        assert_eq!(nw.total_bytes(), 2 * (n as u64 - 1) * (len as u64 * 4));
+    }
+
+    #[test]
+    fn dense_bytes_only_matches_exact_accounting() {
+        for (n, len) in [(5usize, 77usize), (8, 1000), (2, 3)] {
+            let topo = TreeAllreduce::new(n);
+            let mut net_a = net(n);
+            let mut bufs = vec![vec![1.0f32; len]; n];
+            let rep = topo.dense(
+                &mut net_a,
+                &mut bufs,
+                &Executor::sequential(),
+                &mut Arena::for_nodes(n),
+            );
+            let mut net_b = net(n);
+            let rep_b = topo.dense_bytes_only(&mut net_b, len, &mut Arena::for_nodes(n));
+            assert_eq!(rep.bytes_per_node, rep_b.bytes_per_node, "n={n}");
+            assert_eq!(rep.seconds.to_bits(), rep_b.seconds.to_bits());
+        }
+    }
+
+    #[test]
+    fn sparse_densifies_up_the_tree() {
+        let (n, len) = (8usize, 4000usize);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let inputs: Vec<SparseVec> = (0..n)
+            .map(|_| {
+                let mut dense = vec![0.0f32; len];
+                for _ in 0..40 {
+                    dense[rng.below(len)] = 1.0;
+                }
+                SparseVec::from_dense(&dense)
+            })
+            .collect();
+        let topo = TreeAllreduce::new(n);
+        let mut nw = net(n);
+        let (result, rep) = topo.sparse(
+            &mut nw,
+            &inputs,
+            &Executor::sequential(),
+            &mut Arena::for_nodes(n),
+        );
+        assert_eq!(rep.density_per_hop.len(), 3);
+        assert!(
+            rep.density_per_hop[2] > rep.density_per_hop[0],
+            "{:?}",
+            rep.density_per_hop
+        );
+        let mut expect = vec![0.0f32; len];
+        for s in &inputs {
+            s.scatter_add(&mut expect);
+        }
+        assert_eq!(result, expect);
+    }
+
+    #[test]
+    fn spread_bytes_gather_and_broadcast() {
+        // n=4, blob=10, k=4: up r0 senders 1,3 send 10 each; up r1
+        // sender 2 sends 20; down r1: 0 sends 40; down r0: 0,2 send 40.
+        let topo = TreeAllreduce::new(4);
+        let mut nw = net(4);
+        let rep = topo.spread_bytes(&mut nw, 10, 4, &mut Arena::for_nodes(4));
+        assert_eq!(rep.total_bytes(), 10 + 10 + 20 + 40 + 80);
+    }
+}

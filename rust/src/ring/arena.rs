@@ -63,6 +63,21 @@ pub struct Arena {
     pub(crate) mk_compact: Vec<Vec<f32>>,
     pub(crate) mk_chunk_bytes: Vec<u64>,
     pub(crate) ag_sends: Vec<u64>,
+    // -- topology schedules (`net::topo`, DESIGN.md §10) --
+    // Chunk partitions: full-size intra-group, ragged last group, and
+    // the inter-group leader partition.
+    pub(crate) tp_chunks_a: Vec<Range<usize>>,
+    pub(crate) tp_chunks_b: Vec<Range<usize>>,
+    pub(crate) tp_chunks_c: Vec<Range<usize>>,
+    // Hierarchical sparse: per-group assembled sums and the leader-ring
+    // travelling-segment ping-pong tables.
+    pub(crate) tp_sums: Vec<SparseVec>,
+    pub(crate) tp_lheld: Vec<SparseVec>,
+    pub(crate) tp_lnext: Vec<SparseVec>,
+    // Hierarchical support-only: word-block mirrors of the above.
+    pub(crate) tp_wsums: Vec<Vec<u64>>,
+    pub(crate) tp_wheld: Vec<Vec<u64>>,
+    pub(crate) tp_wnext: Vec<Vec<u64>>,
 }
 
 impl Arena {
@@ -93,6 +108,15 @@ impl Arena {
         a.dense_chunks.reserve(n);
         a.sp_chunks.reserve(n);
         a.su_chunks.reserve(n);
+        a.tp_chunks_a.reserve(n);
+        a.tp_chunks_b.reserve(n);
+        a.tp_chunks_c.reserve(n);
+        a.tp_sums.resize_with(n, || SparseVec::empty(0));
+        a.tp_lheld.resize_with(n, || SparseVec::empty(0));
+        a.tp_lnext.resize_with(n, || SparseVec::empty(0));
+        a.tp_wsums.resize_with(n, Vec::new);
+        a.tp_wheld.resize_with(n, Vec::new);
+        a.tp_wnext.resize_with(n, Vec::new);
         a
     }
 

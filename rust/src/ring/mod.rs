@@ -20,6 +20,12 @@
 //! and an `_exec` variant taking a [`exec::Executor`] that fans the
 //! per-node work (staging copies, sparse merges, mask compaction) out
 //! across worker threads with bit-identical results (DESIGN.md §4).
+//!
+//! These are the **flat-ring** schedules. The topology subsystem
+//! (`net::topo`, DESIGN.md §10) wraps them behind the
+//! [`Topology`](crate::net::Topology) trait alongside hierarchical and
+//! binomial-tree implementations; `FlatRing` delegates here verbatim,
+//! so the flat topology stays bit-identical to these entry points.
 
 pub mod arena;
 pub mod dense;

@@ -161,6 +161,11 @@ impl BitMask {
     /// ring fast path uses `chunk_ranges_aligned` so chunk supports are
     /// direct word slices). `range.start` must be a multiple of 64.
     pub fn word_slice(&self, range: std::ops::Range<usize>) -> &[u64] {
+        if range.is_empty() {
+            // Degenerate trailing chunks of `chunk_ranges_aligned` are
+            // `len..len`, whose start need not be word-aligned.
+            return &[];
+        }
         assert_eq!(range.start % 64, 0, "unaligned word_slice start");
         assert!(range.end <= self.len);
         &self.words[range.start / 64..range.end.div_ceil(64)]
