@@ -3,8 +3,10 @@
 //! encoding, residual accumulation — the per-step L3 costs that must
 //! stay far below the PJRT train-step time (DESIGN.md §8).
 
-use ringiwp::compress::importance::{score_and_mask, EPS};
+use ringiwp::compress::fuse;
+use ringiwp::compress::importance::{score_and_mask, LayerStats, EPS};
 use ringiwp::compress::residual::ResidualStore;
+use ringiwp::compress::select;
 use ringiwp::compress::terngrad::TernGrad;
 use ringiwp::model::{LayerKind, ParamLayout};
 use ringiwp::sparse::{BitMask, SparseVec};
@@ -72,6 +74,56 @@ fn main() {
         store.accumulate(std::hint::black_box(&g));
     });
     println!("{}", stats.row("residual accumulate 2M coords"));
+
+    // The fused one-pass IWP kernel vs the multi-pass chain it replaces
+    // (DESIGN.md §11): same math, one memory sweep instead of three.
+    println!("\n== fused vs multi-pass IWP step (2M coords) ==");
+    for random_select in [false, true] {
+        let label = if random_select { "random" } else { "hard" };
+        let thrs = vec![0.01f32; layout.n_layers()];
+        let mut m_store = ResidualStore::new(len, 0.9);
+        let mut m_rng = Rng::new(11);
+        let mut m_u = vec![1.0f32; len];
+        let stats = bench(2, 8, || {
+            m_store.accumulate(std::hint::black_box(&g));
+            select::fill_u(&mut m_rng, random_select, &mut m_u);
+            let mut mask = BitMask::zeros(len);
+            std::hint::black_box(score_and_mask(
+                m_store.pending(),
+                &w,
+                &m_u,
+                thrs[0],
+                EPS,
+                &mut imp,
+                &mut mask,
+            ));
+        });
+        println!("{}", stats.row(&format!("multipass chain ({label})")));
+
+        let mut f_store = ResidualStore::new(len, 0.9);
+        let mut f_rng = Rng::new(11);
+        let mut f_mask = BitMask::zeros(len);
+        let mut f_stats: Vec<LayerStats> = Vec::new();
+        let stats = bench(2, 8, || {
+            fuse::score_select_compact(
+                &layout,
+                &thrs,
+                &w,
+                std::hint::black_box(&g),
+                EPS,
+                random_select,
+                &mut f_rng,
+                &mut f_store,
+                &mut f_mask,
+                &mut f_stats,
+            );
+        });
+        println!("{}", stats.row(&format!("fuse::score_select_compact ({label})")));
+        println!(
+            "    -> {:.0} Mcoord/s",
+            stats.per_sec(len as f64) / 1e6
+        );
+    }
 
     println!("\n(bench_compress done)");
 }

@@ -5,7 +5,7 @@
 //! sparse schedules across ring sizes and payloads, plus the support-only
 //! fast path the 96-node sims rely on.
 
-use ringiwp::net::{LinkSpec, RingNet, TopoKind, Topology};
+use ringiwp::net::{LinkSpec, PipeInner, RingNet, TopoKind, Topology};
 use ringiwp::ring;
 use ringiwp::ring::{Arena, Executor};
 use ringiwp::sparse::{BitMask, SparseVec};
@@ -139,9 +139,10 @@ fn main() {
     }
     println!();
 
-    // Topology sweep (DESIGN.md §10): the same dense reduce over the
-    // flat ring, a group-4 hierarchy, and the binomial tree — wall
-    // clock here, virtual wire time in BENCH_ring.json.
+    // Topology sweep (DESIGN.md §10-§11): the same dense reduce over
+    // the flat ring, a group-4 hierarchy, the binomial tree, and the
+    // 4-chunk pipelined flat ring — wall clock here, virtual wire time
+    // in BENCH_ring.json.
     println!("== dense allreduce per topology ==");
     let exec = Executor::sequential();
     for (nodes, len) in [(8usize, 1 << 18), (16, 1 << 18)] {
@@ -152,7 +153,15 @@ fn main() {
                 v
             })
             .collect();
-        for kind in [TopoKind::Flat, TopoKind::Hier { group: 4 }, TopoKind::Tree] {
+        for kind in [
+            TopoKind::Flat,
+            TopoKind::Hier { group: 4 },
+            TopoKind::Tree,
+            TopoKind::Pipeline {
+                chunks: 4,
+                inner: PipeInner::Flat,
+            },
+        ] {
             let topo = kind.build(nodes);
             let mut arena = Arena::for_nodes(nodes);
             let mut work = base.clone();

@@ -48,12 +48,14 @@ impl Dgc {
         self.store.accumulate(grad);
         let k = ((self.store.len() as f64) * self.density).ceil() as usize;
         let sparse = SparseVec::top_k(self.store.pending(), k);
-        // Momentum factor masking on the transmitted support.
+        // Momentum factor masking on the transmitted support — the
+        // values already live in `sparse`, so zero without extracting
+        // (no per-step Vec, DESIGN.md §11).
         let mut mask = crate::sparse::BitMask::zeros(self.store.len());
         for &i in &sparse.idx {
             mask.set(i as usize);
         }
-        let _ = self.store.take_masked(&mask);
+        self.store.clear_masked(&mask);
         sparse
     }
 

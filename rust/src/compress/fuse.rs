@@ -1,0 +1,338 @@
+//! Fused one-pass compression kernels (DESIGN.md §11).
+//!
+//! The multi-pass reference chain costs 3 dense sweeps per IWP step on a
+//! broadcaster node — residual accumulation ([`ResidualStore::accumulate`]),
+//! selection-uniform fill ([`super::select::fill_u`]), and importance
+//! scoring ([`super::importance::score_and_mask`]) — plus a per-layer
+//! mask merge and, after the wire phase, a support-sized residual take
+//! and a separate support compaction. Every pass streams the full 25M+
+//! parameter buffers through the cache again.
+//!
+//! This module fuses the chain into two sweeps with **bit-identical**
+//! results (pinned by `rust/tests/fused_equivalence.rs` against the
+//! retained multi-pass reference for every IWP method × threshold
+//! policy × selection mode):
+//!
+//! * [`score_select_compact`] — the pre-wire kernel: one sweep computes
+//!   the momentum-corrected residual update (Eq. 3), the importance
+//!   `I = |r|/(|w|+ε)`, the per-layer stats rows, and the branch-free
+//!   selection compare `I > u·thr` (drawing `u` inline in the exact
+//!   stream order `fill_u` consumes), packing selection bits a word at
+//!   a time into the caller's reusable mask. Dense passes per step
+//!   drop from ≥3 to 1.
+//! * [`take_compact`] — the post-wire kernel: one sweep over the shared
+//!   support pops each selected coordinate's accumulated residual into
+//!   the compacted payload (in support order) and zeroes residual and
+//!   velocity (momentum factor masking) — fusing
+//!   `ResidualStore::take_masked` with the masked schedule's support
+//!   compaction, into caller-owned scratch with zero steady-state
+//!   allocation. The shipped engines take the no-output sibling
+//!   [`ResidualStore::clear_masked`] instead (the topology schedule
+//!   compacts internally and the accounting engines discard sent
+//!   values); `take_compact` is the value-carrying variant for
+//!   coordinators that compact outside the schedule, pinned by the
+//!   same bit-exactness tests.
+//!
+//! Bit-exactness argument: every fused operation is element-local and
+//! executes in the same element order as the reference chain, so f32
+//! results, f64 stat accumulation order, and RNG draw order are all
+//! unchanged; only the number of memory passes differs. The importance
+//! buffer the reference materializes is never read downstream (only its
+//! per-layer stats are), so the fused kernel skips it entirely.
+
+use super::importance::LayerStats;
+use super::residual::ResidualStore;
+use crate::model::ParamLayout;
+use crate::sparse::BitMask;
+use crate::util::rng::Rng;
+
+/// Block size of the fused inner loops: the residual/importance phase
+/// runs over fixed-size blocks (register/L1-resident, autovectorizable —
+/// no RNG or f64 carry inside), and the scalar stats/selection phase
+/// consumes each block while it is still hot.
+const BLOCK: usize = 64;
+
+/// The pre-wire fused kernel: residual accumulation + importance scoring
+/// + randomized selection + mask packing, one sweep (DESIGN.md §11).
+///
+/// Per coordinate `i` of each layer `l` (threshold `thrs[l]`):
+///
+/// ```text
+/// v_i  = m·v_i + g_i ;  r_i += v_i            (Eq. 3, momentum correction)
+/// I_i  = |r_i| / (|w_i| + ε)                  (the L1 kernel's score)
+/// u_i  = uniform()  (or 1.0 when !random_select)
+/// select i  iff  I_i > u_i·thr                (Sec. III-C, P = I/thr)
+/// ```
+///
+/// `mask_out` is **fully overwritten** (word-packed; stale bits cannot
+/// survive), `stats_out` is cleared and refilled with one
+/// [`LayerStats`] row per layer. Bit-identical to the reference chain
+/// `accumulate` → `fill_u` → `score_and_mask` → per-layer mask merge.
+#[allow(clippy::too_many_arguments)]
+pub fn score_select_compact(
+    layout: &ParamLayout,
+    thrs: &[f32],
+    weights: &[f32],
+    grad: &[f32],
+    eps: f32,
+    random_select: bool,
+    rng: &mut Rng,
+    store: &mut ResidualStore,
+    mask_out: &mut BitMask,
+    stats_out: &mut Vec<LayerStats>,
+) {
+    let total = layout.total_params();
+    assert_eq!(weights.len(), total);
+    assert_eq!(grad.len(), total);
+    assert_eq!(store.len(), total);
+    assert_eq!(mask_out.len(), total);
+    assert_eq!(thrs.len(), layout.n_layers());
+    stats_out.clear();
+
+    let momentum = store.momentum();
+    let (vel, res) = store.parts_mut();
+    let words = mask_out.words_mut();
+    // Layers partition 0..total contiguously, so the global coordinate
+    // index runs sequentially across the layer loop and selection bits
+    // pack into one running word accumulator (flushed at every word
+    // boundary; the trailing partial word keeps its high bits zero).
+    let mut word = 0u64;
+    let mut imp_block = [0.0f32; BLOCK];
+    for (li, layer) in layout.layers().iter().enumerate() {
+        let thr = thrs[li];
+        let range = layer.range();
+        let mut st = LayerStats {
+            n: layer.size as f64,
+            ..Default::default()
+        };
+        let mut i = range.start;
+        while i < range.end {
+            let end = (i + BLOCK).min(range.end);
+            // Phase 1 — residual update + importance, element-independent.
+            for (k, j) in (i..end).enumerate() {
+                let v = momentum * vel[j] + grad[j];
+                vel[j] = v;
+                let pending = res[j] + v;
+                res[j] = pending;
+                imp_block[k] = pending.abs() / (weights[j].abs() + eps);
+            }
+            // Phase 2 — stats (f64, element order), selection, bit pack.
+            for (k, j) in (i..end).enumerate() {
+                let imp = imp_block[k];
+                let di = imp as f64;
+                st.sum += di;
+                st.sumsq += di * di;
+                let u = if random_select { rng.uniform() } else { 1.0 };
+                if imp > u * thr {
+                    word |= 1u64 << (j % 64);
+                    st.n_selected += 1.0;
+                }
+                if j % 64 == 63 {
+                    words[j / 64] = word;
+                    word = 0;
+                }
+            }
+            i = end;
+        }
+        stats_out.push(st);
+    }
+    if total % 64 != 0 {
+        words[total / 64] = word;
+    }
+}
+
+/// The post-wire fused kernel: masked residual take + support compaction,
+/// one sweep (DESIGN.md §11).
+///
+/// For every set bit `i` of `shared` (ascending): push the accumulated
+/// residual `r_i` onto `out` and zero `r_i` and `v_i` (momentum factor
+/// masking). `out` is cleared and refilled in place (support order —
+/// exactly the masked schedule's compaction order); returns whether the
+/// buffer had to grow, so arena owners can feed their reallocation
+/// counters. Bit-identical to `take_masked` + `compact_to_support` on
+/// the transmitting node.
+pub fn take_compact(store: &mut ResidualStore, shared: &BitMask, out: &mut Vec<f32>) -> bool {
+    assert_eq!(shared.len(), store.len());
+    let (vel, res) = store.parts_mut();
+    let cap = out.capacity();
+    out.clear();
+    for i in shared.iter_set() {
+        out.push(res[i]);
+        res[i] = 0.0;
+        vel[i] = 0.0;
+    }
+    out.capacity() != cap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::importance::{score_and_mask, EPS};
+    use crate::compress::select;
+    use crate::model::{LayerKind, ParamLayout};
+    use crate::util::prop::forall;
+
+    fn layout3() -> ParamLayout {
+        ParamLayout::new(
+            "fuse_t",
+            vec![
+                // 71 params: layer boundaries straddle word boundaries.
+                ("conv".into(), vec![5, 2, 3], LayerKind::Conv),
+                ("bn".into(), vec![27], LayerKind::BatchNorm),
+                ("fc".into(), vec![7, 2], LayerKind::Fc),
+            ],
+        )
+    }
+
+    /// The retained multi-pass reference: accumulate, then per layer
+    /// fill_u + score_and_mask + merge into the global mask.
+    #[allow(clippy::too_many_arguments)]
+    fn multipass(
+        layout: &ParamLayout,
+        thrs: &[f32],
+        weights: &[f32],
+        grad: &[f32],
+        random_select: bool,
+        rng: &mut Rng,
+        store: &mut ResidualStore,
+    ) -> (BitMask, Vec<LayerStats>) {
+        let total = layout.total_params();
+        store.accumulate(grad);
+        let mut mask = BitMask::zeros(total);
+        let mut stats = Vec::new();
+        let mut u = vec![1.0f32; total];
+        let mut imp = vec![0.0f32; total];
+        let pending: Vec<f32> = store.pending().to_vec();
+        for (li, layer) in layout.layers().iter().enumerate() {
+            let r = layer.range();
+            select::fill_u(rng, random_select, &mut u[..layer.size]);
+            let mut layer_mask = BitMask::zeros(layer.size);
+            let st = score_and_mask(
+                &pending[r.clone()],
+                &weights[r.clone()],
+                &u[..layer.size],
+                thrs[li],
+                EPS,
+                &mut imp[..layer.size],
+                &mut layer_mask,
+            );
+            for i in layer_mask.iter_set() {
+                mask.set(r.start + i);
+            }
+            stats.push(st);
+        }
+        (mask, stats)
+    }
+
+    fn stat_bits(s: &LayerStats) -> (u64, u64, u64, u64) {
+        (
+            s.sum.to_bits(),
+            s.sumsq.to_bits(),
+            s.n_selected.to_bits(),
+            s.n.to_bits(),
+        )
+    }
+
+    #[test]
+    fn fused_matches_multipass_reference_bitwise() {
+        let layout = layout3();
+        let total = layout.total_params();
+        for random_select in [false, true] {
+            forall("fused == multipass", 40, |gen| {
+                let g = gen.vec_normal(total, 0.0, 1.0);
+                let w = gen.vec_normal(total, 0.0, 0.5);
+                let thrs: Vec<f32> =
+                    (0..layout.n_layers()).map(|_| gen.f32_in(0.0, 0.2)).collect();
+                let seed = gen.usize_in(0, 1 << 20) as u64;
+                let mut rng_a = Rng::new(seed);
+                let mut rng_b = Rng::new(seed);
+                let mut store_a = ResidualStore::new(total, 0.9);
+                let mut store_b = ResidualStore::new(total, 0.9);
+                // Two steps: the second exercises warm velocity/residual.
+                for _ in 0..2 {
+                    let (mask_a, stats_a) = multipass(
+                        &layout,
+                        &thrs,
+                        &w,
+                        &g,
+                        random_select,
+                        &mut rng_a,
+                        &mut store_a,
+                    );
+                    let mut mask_b = BitMask::zeros(total);
+                    let mut stats_b = Vec::new();
+                    score_select_compact(
+                        &layout,
+                        &thrs,
+                        &w,
+                        &g,
+                        EPS,
+                        random_select,
+                        &mut rng_b,
+                        &mut store_b,
+                        &mut mask_b,
+                        &mut stats_b,
+                    );
+                    assert_eq!(mask_a, mask_b, "masks diverged");
+                    assert_eq!(stats_a.len(), stats_b.len());
+                    for (sa, sb) in stats_a.iter().zip(&stats_b) {
+                        assert_eq!(stat_bits(sa), stat_bits(sb), "stats diverged");
+                    }
+                    let bits = |s: &ResidualStore| -> Vec<u32> {
+                        s.pending().iter().map(|v| v.to_bits()).collect()
+                    };
+                    assert_eq!(bits(&store_a), bits(&store_b), "residuals diverged");
+                    // RNG streams must stay in lockstep across steps.
+                    assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn fused_overwrites_stale_mask_bits() {
+        let layout = layout3();
+        let total = layout.total_params();
+        let mut mask = BitMask::zeros(total);
+        for i in 0..total {
+            mask.set(i); // all-ones: any stale bit must be cleared
+        }
+        let mut store = ResidualStore::new(total, 0.0);
+        let mut rng = Rng::new(7);
+        let thrs = vec![f32::INFINITY; layout.n_layers()];
+        let g = vec![1.0f32; total];
+        let w = vec![1.0f32; total];
+        let mut stats = Vec::new();
+        score_select_compact(
+            &layout, &thrs, &w, &g, EPS, false, &mut rng, &mut store, &mut mask, &mut stats,
+        );
+        assert_eq!(mask.count(), 0, "infinite threshold must select nothing");
+    }
+
+    #[test]
+    fn take_compact_matches_take_masked_plus_compaction() {
+        forall("take_compact == take_masked", 40, |gen| {
+            let n = gen.usize_in(1, 200);
+            let g = gen.vec_normal(n, 0.0, 1.0);
+            let mut a = ResidualStore::new(n, 0.9);
+            let mut b = ResidualStore::new(n, 0.9);
+            a.accumulate(&g);
+            b.accumulate(&g);
+            let mut mask = BitMask::zeros(n);
+            for i in 0..n {
+                if gen.bool() {
+                    mask.set(i);
+                }
+            }
+            let sent_a = a.take_masked(&mask);
+            let mut sent_b = Vec::new();
+            take_compact(&mut b, &mask, &mut sent_b);
+            let fb = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+            assert_eq!(fb(&sent_a), fb(&sent_b));
+            assert_eq!(fb(a.pending()), fb(b.pending()));
+            // Warm buffer reuse: a second call must not grow.
+            b.accumulate(&g);
+            assert!(!take_compact(&mut b, &mask, &mut sent_b));
+        });
+    }
+}

@@ -125,20 +125,26 @@ pub fn score_and_mask(
 /// Per-layer stats over a whole model buffer (no masking) — the Fig. 2/3/4
 /// measurement pass.
 pub fn layer_stats(layout: &ParamLayout, imp: &[f32]) -> Vec<LayerStats> {
+    let mut out = Vec::new();
+    layer_stats_into(layout, imp, &mut out);
+    out
+}
+
+/// [`layer_stats`] into a caller-owned buffer — the per-step measurement
+/// hooks (`SimEngine::importance_snapshot`) reuse one buffer instead of
+/// allocating per call.
+pub fn layer_stats_into(layout: &ParamLayout, imp: &[f32], out: &mut Vec<LayerStats>) {
     assert_eq!(imp.len(), layout.total_params());
-    layout
-        .layers()
-        .iter()
-        .map(|layer| {
-            let mut s = LayerStats::default();
-            for &v in &imp[layer.range()] {
-                s.sum += v as f64;
-                s.sumsq += (v as f64) * (v as f64);
-            }
-            s.n = layer.size as f64;
-            s
-        })
-        .collect()
+    out.clear();
+    out.extend(layout.layers().iter().map(|layer| {
+        let mut s = LayerStats::default();
+        for &v in &imp[layer.range()] {
+            s.sum += v as f64;
+            s.sumsq += (v as f64) * (v as f64);
+        }
+        s.n = layer.size as f64;
+        s
+    }));
 }
 
 #[cfg(test)]

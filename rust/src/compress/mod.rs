@@ -8,11 +8,16 @@
 //! * `select` — random gradient selection, `P(update) = I/thr` (Sec. III-C).
 //! * `residual` — local accumulation with momentum (Eq. 3) + momentum
 //!   factor masking.
+//! * `fuse` — single-pass fused kernels over the chain above: one sweep
+//!   for accumulate + score + select (and one support-sized sweep for
+//!   take + compact), bit-identical to the multi-pass reference
+//!   (DESIGN.md §11) — the engines' hot path.
 //! * `clip` / `warmup` — DGC-inherited tricks the paper also applies.
 //! * `terngrad` / `dgc` — the baselines the paper compares against.
 
 pub mod clip;
 pub mod dgc;
+pub mod fuse;
 pub mod importance;
 pub mod residual;
 pub mod select;

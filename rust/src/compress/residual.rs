@@ -60,6 +60,19 @@ impl ResidualStore {
         &self.res
     }
 
+    /// The momentum factor this store was built with.
+    pub fn momentum(&self) -> f32 {
+        self.momentum
+    }
+
+    /// Split borrow of `(velocity, residual)` for the fused one-pass
+    /// kernels (`compress::fuse`, DESIGN.md §11), which interleave the
+    /// [`ResidualStore::accumulate`] update with importance scoring in a
+    /// single sweep.
+    pub(crate) fn parts_mut(&mut self) -> (&mut [f32], &mut [f32]) {
+        (&mut self.vel, &mut self.res)
+    }
+
     /// Extract the selected coordinates for transmission, zeroing their
     /// residual AND velocity (momentum factor masking). `mask.get(i)` true
     /// means coordinate i is transmitted this step.
@@ -72,6 +85,20 @@ impl ResidualStore {
             self.vel[i] = 0.0;
         }
         out
+    }
+
+    /// [`ResidualStore::take_masked`] without materializing the sent
+    /// values: zeroes residual and velocity on the mask support in one
+    /// sweep. The accounting-only engines (`exp::simrun`) discard the
+    /// transmitted values, so this replaces a per-node `Vec` allocation
+    /// per step on their hot path. For the value-carrying fusion see
+    /// `compress::fuse::take_compact`.
+    pub fn clear_masked(&mut self, mask: &crate::sparse::BitMask) {
+        assert_eq!(mask.len(), self.res.len());
+        for i in mask.iter_set() {
+            self.res[i] = 0.0;
+            self.vel[i] = 0.0;
+        }
     }
 
     /// Take everything (dense baseline path).
@@ -165,6 +192,34 @@ mod tests {
                     pending
                 );
             }
+        });
+    }
+
+    #[test]
+    fn clear_masked_equals_take_masked_discarded() {
+        forall("clear_masked == take_masked modulo output", 30, |gen| {
+            let n = gen.usize_in(1, 80);
+            let g = gen.vec_normal(n, 0.0, 1.0);
+            let mut a = ResidualStore::new(n, 0.9);
+            let mut b = ResidualStore::new(n, 0.9);
+            a.accumulate(&g);
+            b.accumulate(&g);
+            let mut mask = BitMask::zeros(n);
+            for i in 0..n {
+                if gen.bool() {
+                    mask.set(i);
+                }
+            }
+            let _ = a.take_masked(&mask);
+            b.clear_masked(&mask);
+            let bits = |s: &ResidualStore| -> Vec<u32> {
+                s.pending().iter().map(|v| v.to_bits()).collect()
+            };
+            assert_eq!(bits(&a), bits(&b));
+            // Velocity agreement is observable through the next step.
+            a.accumulate(&g);
+            b.accumulate(&g);
+            assert_eq!(bits(&a), bits(&b));
         });
     }
 

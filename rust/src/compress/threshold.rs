@@ -73,27 +73,40 @@ impl ThresholdPolicy {
         epoch: usize,
         warmup_mult: f32,
     ) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.layer_thresholds_into(layout, stats, epoch, warmup_mult, &mut out);
+        out
+    }
+
+    /// [`ThresholdPolicy::layer_thresholds`] into a caller-owned buffer
+    /// (the per-step engines reuse one buffer instead of allocating).
+    pub fn layer_thresholds_into(
+        &self,
+        layout: &ParamLayout,
+        stats: &[LayerStats],
+        epoch: usize,
+        warmup_mult: f32,
+        out: &mut Vec<f32>,
+    ) {
         assert_eq!(stats.len(), layout.n_layers());
+        out.clear();
         match self {
             ThresholdPolicy::Fixed(thr) => {
-                vec![(thr * warmup_mult).max(0.0); layout.n_layers()]
+                out.resize(layout.n_layers(), (thr * warmup_mult).max(0.0));
             }
             ThresholdPolicy::Layerwise(cfg) => {
                 let alpha = cfg.alpha_at(epoch);
-                stats
-                    .iter()
-                    .map(|s| {
-                        let vm = s.var_over_mean() as f32;
-                        let thr = if vm > cfg.c {
-                            alpha + cfg.beta * vm
-                        } else {
-                            alpha - cfg.beta * vm
-                        };
-                        // A threshold can never go negative (that would
-                        // transmit everything regardless of importance).
-                        (thr * warmup_mult).max(0.0)
-                    })
-                    .collect()
+                out.extend(stats.iter().map(|s| {
+                    let vm = s.var_over_mean() as f32;
+                    let thr = if vm > cfg.c {
+                        alpha + cfg.beta * vm
+                    } else {
+                        alpha - cfg.beta * vm
+                    };
+                    // A threshold can never go negative (that would
+                    // transmit everything regardless of importance).
+                    (thr * warmup_mult).max(0.0)
+                }));
             }
         }
     }

@@ -76,6 +76,14 @@ pub struct Trainer {
     /// Scratch: per-node gradient buffers.
     grads: Vec<Vec<f32>>,
     u_buf: Vec<f32>,
+    /// Reusable per-broadcaster selection masks (`clear_all`-ed and
+    /// refilled by the kernel every step — DESIGN.md §11).
+    mask_slots: Vec<BitMask>,
+    /// Reusable per-layer threshold table (Eq. 4 controller output).
+    thrs_buf: Vec<f32>,
+    /// Reusable stats accumulator: merged per broadcaster, swapped into
+    /// `prev_stats` only once the whole (fallible) kernel loop succeeds.
+    stats_scratch: Vec<LayerStats>,
     account_scratch: CompressionAccount,
     /// Node-parallel executor for the reduce paths (`cfg.parallelism`).
     exec: Executor,
@@ -173,6 +181,11 @@ impl Trainer {
             prev_stats: vec![LayerStats::default(); layout.n_layers()],
             grads: vec![vec![0.0; total]; cfg.nodes],
             u_buf: vec![1.0; total],
+            mask_slots: (0..cfg.mask_nodes.min(cfg.nodes))
+                .map(|_| BitMask::zeros(total))
+                .collect(),
+            thrs_buf: Vec::with_capacity(layout.n_layers()),
+            stats_scratch: vec![LayerStats::default(); layout.n_layers()],
             account_scratch: CompressionAccount::new(),
             node_rngs,
             ctl_rng,
@@ -327,9 +340,9 @@ impl Trainer {
             .topo
             .dense(&mut self.net, &mut self.grads, &self.exec, &mut self.arena);
         let n = self.cfg.nodes as f32;
-        // grads[0] now holds the sum; average and apply with momentum.
-        let avg: Vec<f32> = self.grads[0].iter().map(|&g| g / n).collect();
-        self.opt.step(&mut self.params, &avg, lr);
+        // grads[0] now holds the sum; the optimizer averages inline (one
+        // pass, no materialized average buffer — bit-identical).
+        self.opt.step_mean(&mut self.params, &self.grads[0], n, lr);
         self.account_scratch.record_full(
             self.dense_ref_bytes(),
             rep.mean_bytes_per_node() as u64,
@@ -364,8 +377,7 @@ impl Trainer {
             self.topo
                 .spread_bytes(&mut self.net, encoded[0].wire_bytes(), n, &mut self.arena);
         let wire = rep.total_bytes() / n as u64;
-        let avg: Vec<f32> = sum.iter().map(|&g| g / n as f32).collect();
-        self.opt.step(&mut self.params, &avg, lr);
+        self.opt.step_mean(&mut self.params, &sum, n as f32, lr);
         self.account_scratch.record_full(
             self.dense_ref_bytes(),
             wire,
@@ -421,11 +433,16 @@ impl Trainer {
             });
         }
 
-        // Per-layer thresholds from trailing stats (Eq. 4 controller).
+        // Per-layer thresholds from trailing stats (Eq. 4 controller),
+        // refilled into the reusable table.
         let wmult = self.warmup.multiplier(epoch);
-        let thrs =
-            self.policy
-                .layer_thresholds(&self.layout, &self.prev_stats, epoch, wmult);
+        self.policy.layer_thresholds_into(
+            &self.layout,
+            &self.prev_stats,
+            epoch,
+            wmult,
+            &mut self.thrs_buf,
+        );
 
         // Random broadcaster nodes (Alg. 1 line 6).
         let broadcasters = self
@@ -433,44 +450,49 @@ impl Trainer {
             .choose_distinct(n, self.cfg.mask_nodes.min(n));
 
         // Each broadcaster scores its pending residuals with the L1
-        // kernel, layer by layer, and builds its mask. This loop stays
+        // kernel, layer by layer, packing selection bits straight into a
+        // reusable model-wide mask slot (`score_into` — no per-layer
+        // mask or importance allocation, DESIGN.md §11). This loop stays
         // sequential: the PJRT kernel executes through a single loaded
         // artifact handle (parallelizing across PJRT clients is the
         // ROADMAP async direction); the CPU-mirror engine in
-        // `exp::simrun` fans the same scoring out per broadcaster.
-        let total = self.layout.total_params();
-        let mut masks: Vec<BitMask> = Vec::with_capacity(broadcasters.len());
-        let mut new_stats = vec![LayerStats::default(); self.layout.n_layers()];
+        // `exp::simrun` runs the fully fused `fuse::score_select_compact`
+        // fan-out instead. Stats accumulate in a scratch buffer so a
+        // kernel error mid-loop leaves `prev_stats` (and therefore the
+        // next step's Eq.-4 thresholds) untouched.
+        for s in self.stats_scratch.iter_mut() {
+            *s = LayerStats::default();
+        }
         let kernel = self
             .kernel
             .as_mut()
             .expect("IWP methods always load the kernel");
-        for &b in &broadcasters {
+        for (bi, &b) in broadcasters.iter().enumerate() {
             select::fill_u(&mut self.node_rngs[b], self.cfg.random_select, &mut self.u_buf);
             let pending = self.stores[b].pending();
             let weights = &self.params;
-            let mut mask = BitMask::zeros(total);
+            let mask = &mut self.mask_slots[bi];
+            mask.clear_all();
             for (li, layer) in self.layout.layers().iter().enumerate() {
                 let r = layer.range();
-                let (m, _imp, st) = kernel.score(
+                let st = kernel.score_into(
                     &pending[r.clone()],
                     &weights[r.clone()],
                     &self.u_buf[r.clone()],
-                    thrs[li],
+                    self.thrs_buf[li],
                     crate::compress::importance::EPS,
+                    r.start,
+                    mask,
                 )?;
-                for i in m.iter_set() {
-                    mask.set(r.start + i);
-                }
-                new_stats[li].merge(&st);
+                self.stats_scratch[li].merge(&st);
             }
-            masks.push(mask);
         }
-        self.prev_stats = new_stats;
+        std::mem::swap(&mut self.prev_stats, &mut self.stats_scratch);
 
         // Shared-mask ring all-reduce (Alg. 1 lines 7–12). `values`
         // borrows `stores` while the net (a disjoint field) mutates.
-        let mask_refs: Vec<&BitMask> = masks.iter().collect();
+        let mask_refs: Vec<&BitMask> =
+            self.mask_slots[..broadcasters.len()].iter().collect();
         let values: Vec<&[f32]> = self.stores.iter().map(|s| s.pending()).collect();
         let (shared, summed, rep) = self.topo.masked(
             &mut self.net,
@@ -480,27 +502,31 @@ impl Trainer {
             &mut self.arena,
         );
 
-        // Zero transmitted residual + velocity on every node.
+        // Fused residual take (momentum factor masking): zero residual +
+        // velocity on the shared support in one sweep per node — no
+        // per-node sent-values Vec (the compacted payload the schedule
+        // reduced already lives in the arena).
         let shared_ref = &shared;
         self.exec.map_mut(&mut self.stores, |_, store| {
-            let _ = store.take_masked(shared_ref);
+            store.clear_masked(shared_ref);
         });
 
-        // Sparse SGD update on the shared support (Alg. 1 line 13).
-        let support: Vec<usize> = shared.iter_set().collect();
+        // Sparse SGD update on the shared support (Alg. 1 line 13),
+        // driven by the mask iterator with the 1/N scaling fused in.
         let inv_n = 1.0 / n as f32;
-        let scaled: Vec<f32> = summed.iter().map(|&v| v * inv_n).collect();
-        self.opt.step_sparse(&mut self.params, &support, &scaled, lr);
+        self.opt
+            .step_sparse_mask(&mut self.params, &shared, &summed, inv_n, lr);
 
+        let nnz = shared.count();
         let total = self.layout.total_params();
         self.account_scratch.record_full(
             self.dense_ref_bytes(),
             rep.mean_bytes_per_node() as u64,
             self.layout.dense_bytes(),
             crate::sparse::wire_bytes(
-                crate::sparse::WireFormat::cheapest(total, support.len()),
+                crate::sparse::WireFormat::cheapest(total, nnz),
                 total,
-                support.len(),
+                nnz,
             ),
             shared.density(),
         );

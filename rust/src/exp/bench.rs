@@ -25,7 +25,8 @@ use crate::compress::Method;
 use crate::exp::simrun::{SimCfg, SimEngine};
 use crate::metrics::bench::BenchReport;
 use crate::model::{zoo, LayerKind, ParamLayout};
-use crate::net::{CostModel, LinkSpec, RingNet, TopoKind, Topology};
+use crate::net::topo::pipeline;
+use crate::net::{CostModel, LinkSpec, PipeInner, RingNet, TopoKind, Topology};
 use crate::ring::{Arena, Executor, ReduceReport};
 use crate::sparse::{BitMask, SparseVec};
 use crate::util::json::Json;
@@ -122,11 +123,18 @@ fn deterministic_sparse(rng: &mut Rng, len: usize) -> SparseVec {
     SparseVec::from_dense(&dense)
 }
 
-/// Topologies the ring sweep covers (DESIGN.md §10): the flat ring,
-/// a group-of-4 hierarchy (4 divides every default ring size), and the
-/// binomial tree.
-pub const BENCH_TOPOLOGIES: [TopoKind; 3] =
-    [TopoKind::Flat, TopoKind::Hier { group: 4 }, TopoKind::Tree];
+/// Topologies the ring sweep covers (DESIGN.md §10, §11): the flat
+/// ring, a group-of-4 hierarchy (4 divides every default ring size),
+/// the binomial tree, and the 4-chunk layer-pipelined flat ring.
+pub const BENCH_TOPOLOGIES: [TopoKind; 4] = [
+    TopoKind::Flat,
+    TopoKind::Hier { group: 4 },
+    TopoKind::Tree,
+    TopoKind::Pipeline {
+        chunks: 4,
+        inner: PipeInner::Flat,
+    },
+];
 
 /// The ring transport sweep: dense / sparse / masked × topologies ×
 /// ring sizes. Dense and masked rows carry the closed-form
@@ -232,6 +240,28 @@ pub fn run_ring(cfg: &BenchCfg) -> BenchReport {
                     std::hint::black_box(run(&mut arena));
                 })
             });
+            // Masked predictions: the pipelined wrapper's makespan is
+            // per-chunk-support-dependent (DESIGN.md §11), so its rows
+            // price through `pipelined_masked_*`.
+            let (masked_model_s, masked_model_bytes) = match kind {
+                TopoKind::Pipeline { chunks, inner } => {
+                    let sups = pipeline::chunk_supports(&mask, chunks);
+                    (
+                        model.pipelined_masked_seconds(inner.kind(), chunks, coords, 1, &sups),
+                        model.pipelined_masked_total_bytes(
+                            inner.kind(),
+                            chunks,
+                            coords,
+                            1,
+                            &sups,
+                        ),
+                    )
+                }
+                _ => (
+                    model.topo_masked_seconds(kind, coords, 1, support),
+                    model.topo_masked_total_bytes(kind, coords, 1, support),
+                ),
+            };
             report.push(ring_row(
                 &format!("ring/masked/{tname}/n{n}/c{coords}"),
                 "masked",
@@ -239,8 +269,8 @@ pub fn run_ring(cfg: &BenchCfg) -> BenchReport {
                 n,
                 coords,
                 &rep,
-                Some(model.topo_masked_seconds(kind, coords, 1, support)),
-                Some(model.topo_masked_total_bytes(kind, coords, 1, support)),
+                Some(masked_model_s),
+                Some(masked_model_bytes),
                 ns.map(|s| s.median_ns),
             ));
         }
@@ -412,8 +442,8 @@ mod tests {
         let a = run_ring(&cfg).to_json();
         let b = run_ring(&cfg).to_json();
         assert_eq!(canonical(&a), canonical(&b));
-        // 3 schedules x 3 topologies x 2 ring sizes.
-        assert_eq!(a.get("rows").as_arr().unwrap().len(), 3 * 3 * 2);
+        // 3 schedules x 4 topologies x 2 ring sizes.
+        assert_eq!(a.get("rows").as_arr().unwrap().len(), 3 * 4 * 2);
     }
 
     #[test]
@@ -473,6 +503,6 @@ mod tests {
             }
         }
         // dense + masked rows for every topology x ring size.
-        assert_eq!(predicted_rows, 2 * 3 * 2);
+        assert_eq!(predicted_rows, 2 * 4 * 2);
     }
 }

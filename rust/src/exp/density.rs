@@ -6,21 +6,40 @@
 //! EXPERIMENTS.md §7).
 //!
 //! Output: density after a full reduce vs ring size, for DGC and IWP
-//! under the flat ring, a group-8 hierarchy, and the binomial tree,
-//! plus per-step wire bytes/time and the analytic `1-(1-d)^N` model.
+//! under the flat ring, a group-8 hierarchy, the binomial tree, and
+//! the layer-pipelined flat ring at chunk depths 1 (serial anchor) and
+//! 8 (overlapped — DESIGN.md §11; only the pipeline rows price
+//! selection prep, so compare them to each other), plus per-step wire
+//! bytes/time and the analytic `1-(1-d)^N` model.
 
 use crate::compress::Method;
 use crate::csv_row;
 use crate::exp::simrun::{SimCfg, SimEngine};
 use crate::metrics::CsvWriter;
 use crate::model::zoo;
-use crate::net::TopoKind;
+use crate::net::{PipeInner, TopoKind};
 use crate::ring::sparse::expected_final_density;
 
 /// Topologies the density sweep compares (group 8 keeps at least two
-/// groups from 16 nodes up).
-pub const DENSITY_TOPOLOGIES: [TopoKind; 3] =
-    [TopoKind::Flat, TopoKind::Hier { group: 8 }, TopoKind::Tree];
+/// groups from 16 nodes up). The two pipeline rows expose the
+/// prep-overlap wire-time trade of DESIGN.md §11 on the same workload:
+/// compare `pipeline:8:flat` against the `pipeline:1:flat` serial
+/// anchor, which prices the same selection prep without overlap — the
+/// base-topology rows do not price prep at all, so their `virtual_s`
+/// is not directly comparable to the pipeline rows'.
+pub const DENSITY_TOPOLOGIES: [TopoKind; 5] = [
+    TopoKind::Flat,
+    TopoKind::Hier { group: 8 },
+    TopoKind::Tree,
+    TopoKind::Pipeline {
+        chunks: 1,
+        inner: PipeInner::Flat,
+    },
+    TopoKind::Pipeline {
+        chunks: 8,
+        inner: PipeInner::Flat,
+    },
+];
 
 /// Sweep ring sizes × topologies under DGC and IWP and write
 /// `density_growth.csv` against the analytic `1-(1-d)^N` model.

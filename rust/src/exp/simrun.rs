@@ -9,10 +9,10 @@
 //! the CPU mirror of the L1 kernel (bit-identical semantics, cross-
 //! validated in `tests/runtime_smoke.rs`).
 
-use crate::compress::importance::{score_and_mask, LayerStats, EPS};
+use crate::compress::importance::{LayerStats, EPS};
 use crate::compress::residual::ResidualStore;
 use crate::compress::threshold::{ThresholdCfg, ThresholdPolicy};
-use crate::compress::{dgc::Dgc, select, terngrad::TernGrad, warmup::Warmup, Method};
+use crate::compress::{dgc::Dgc, fuse, terngrad::TernGrad, warmup::Warmup, Method};
 use crate::grad::SynthGrads;
 use crate::metrics::CompressionAccount;
 use crate::model::ParamLayout;
@@ -128,12 +128,27 @@ pub struct SimEngine {
     topo: Box<dyn Topology>,
     arena: Arena,
     imp_scratch: Vec<f32>,
-    /// Per-broadcaster (u, importance) scratch, max-layer sized. Both
-    /// buffers are fully overwritten before every read (`fill_u` writes
-    /// both branches; `score_and_mask` fills `imp_out` densely), so
-    /// reuse is bit-identical to fresh allocation.
-    score_scratch: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Cached per-layer stats buffer behind `importance_snapshot`
+    /// (refilled in place — no per-call allocation).
+    snap_stats: Vec<LayerStats>,
+    /// Reusable per-layer threshold table (Eq. 4 controller output).
+    thrs_buf: Vec<f32>,
+    /// Per-node scratch for the fused scoring fan-out (DESIGN.md §11):
+    /// masks are fully word-overwritten by `fuse::score_select_compact`
+    /// and RNG streams are cloned in/out per step, so slot reuse is
+    /// bit-identical to fresh allocation.
+    scratch: Vec<NodeScratch>,
     grads: Vec<Vec<f32>>,
+}
+
+/// Reusable per-node slot for the fused IWP scoring fan-out: the cloned
+/// RNG stream, the broadcaster's selection mask, and its per-layer stats
+/// rows. `bcast` marks whether this node broadcasts this step.
+struct NodeScratch {
+    bcast: bool,
+    rng: Rng,
+    mask: BitMask,
+    stats: Vec<LayerStats>,
 }
 
 impl SimEngine {
@@ -183,13 +198,16 @@ impl SimEngine {
             topo: cfg.topology.build(cfg.nodes),
             arena: Arena::for_nodes(cfg.nodes),
             imp_scratch: vec![0.0; total],
-            score_scratch: {
-                let max_layer = layout.layers().iter().map(|l| l.size).max().unwrap_or(0);
-                let broadcasters = cfg.mask_nodes.min(cfg.nodes.min(Self::SIM_NODE_CAP));
-                (0..broadcasters)
-                    .map(|_| (vec![1.0; max_layer], vec![0.0; max_layer]))
-                    .collect()
-            },
+            snap_stats: Vec::with_capacity(layout.n_layers()),
+            thrs_buf: Vec::with_capacity(layout.n_layers()),
+            scratch: (0..cfg.nodes.min(Self::SIM_NODE_CAP))
+                .map(|_| NodeScratch {
+                    bcast: false,
+                    rng: Rng::new(0),
+                    mask: BitMask::zeros(total),
+                    stats: Vec::with_capacity(layout.n_layers()),
+                })
+                .collect(),
             grads: vec![vec![0.0; total]; cfg.nodes.min(Self::SIM_NODE_CAP)],
             policy,
             warmup,
@@ -232,14 +250,20 @@ impl SimEngine {
 
     /// Importance scores of node 0's current pending gradient, per layer
     /// (Figs. 2–4 measurement hook). Call after at least one `step`.
-    pub fn importance_snapshot(&mut self) -> (&[f32], Vec<LayerStats>) {
+    /// Both returned slices are engine-owned scratch refilled in place —
+    /// the per-call `Vec<LayerStats>` allocation is gone.
+    pub fn importance_snapshot(&mut self) -> (&[f32], &[LayerStats]) {
         let pending = self.stores[0].pending();
         let w = &self.synth.weights;
         for i in 0..pending.len() {
             self.imp_scratch[i] = pending[i].abs() / (w[i].abs() + EPS);
         }
-        let stats = crate::compress::importance::layer_stats(&self.layout, &self.imp_scratch);
-        (&self.imp_scratch, stats)
+        crate::compress::importance::layer_stats_into(
+            &self.layout,
+            &self.imp_scratch,
+            &mut self.snap_stats,
+        );
+        (&self.imp_scratch, &self.snap_stats)
     }
 
     /// One synchronous step: generate per-node gradients, compress,
@@ -359,90 +383,87 @@ impl SimEngine {
                 )
             }
             Method::IwpFixed | Method::IwpLayerwise => {
-                {
-                    // Residual accumulation: one store per node, fanned out.
-                    let grads = &self.grads;
-                    self.exec.map_mut(&mut self.stores, |node, store| {
-                        store.accumulate(&grads[node]);
-                    });
-                }
                 let wmult = self.warmup.multiplier(epoch);
-                let thrs = self.policy.layer_thresholds(
+                self.policy.layer_thresholds_into(
                     &self.layout,
                     &self.prev_stats,
                     epoch,
                     wmult,
+                    &mut self.thrs_buf,
                 );
                 // Broadcasters drawn from the materialized (exchangeable)
                 // node states.
                 let broadcasters = self
                     .ctl_rng
                     .choose_distinct(sim_nodes, self.cfg.mask_nodes.min(sim_nodes));
-                let total = self.layout.total_params();
-                // Each broadcaster scores independently: its RNG stream is
-                // cloned out, scoring runs with a warm broadcaster-local
-                // scratch slot (layer-sized windows, filled in layer
-                // order — the same draw sequence as one flat fill), and
-                // the stream is written back so cross-step RNG evolution
-                // matches the sequential path exactly.
-                let mut brngs: Vec<Rng> =
-                    broadcasters.iter().map(|&b| self.rngs[b].clone()).collect();
-                let stores = &self.stores;
-                let weights = &self.synth.weights;
-                let layout = &self.layout;
-                let bidx = &broadcasters;
-                let random_select = self.cfg.random_select;
-                let n_bcast = broadcasters.len();
-                let scored: Vec<(BitMask, Vec<LayerStats>)> = self.exec.map_mut2(
-                    &mut brngs,
-                    &mut self.score_scratch[..n_bcast],
-                    |bi, rng, scratch| {
-                        let (u, imp) = scratch;
-                        let pending = stores[bidx[bi]].pending();
-                        let mut mask = BitMask::zeros(total);
-                        let mut stats = Vec::with_capacity(layout.n_layers());
-                        for (li, layer) in layout.layers().iter().enumerate() {
-                            let r = layer.range();
-                            select::fill_u(rng, random_select, &mut u[..layer.size]);
-                            let mut layer_mask = BitMask::zeros(layer.size);
-                            let st = score_and_mask(
-                                &pending[r.clone()],
-                                &weights[r.clone()],
-                                &u[..layer.size],
-                                thrs[li],
-                                EPS,
-                                &mut imp[..layer.size],
-                                &mut layer_mask,
-                            );
-                            for i in layer_mask.iter_set() {
-                                mask.set(r.start + i);
+                // Fused single-pass fan-out (DESIGN.md §11): every node
+                // folds its gradient into its residual store; broadcaster
+                // nodes additionally score, select, and pack their mask
+                // in the *same* sweep (`fuse::score_select_compact`),
+                // replacing the accumulate → fill_u → score_and_mask →
+                // mask-merge chain. Broadcaster RNG streams are cloned
+                // out and written back, so cross-step evolution matches
+                // the multi-pass reference exactly.
+                for scr in self.scratch.iter_mut() {
+                    scr.bcast = false;
+                }
+                for &b in &broadcasters {
+                    self.scratch[b].bcast = true;
+                    self.scratch[b].rng = self.rngs[b].clone();
+                }
+                {
+                    let grads = &self.grads;
+                    let weights = &self.synth.weights;
+                    let layout = &self.layout;
+                    let thrs: &[f32] = &self.thrs_buf;
+                    let random_select = self.cfg.random_select;
+                    self.exec.map_mut2(
+                        &mut self.stores,
+                        &mut self.scratch,
+                        |node, store, scr| {
+                            if scr.bcast {
+                                fuse::score_select_compact(
+                                    layout,
+                                    thrs,
+                                    weights,
+                                    &grads[node],
+                                    EPS,
+                                    random_select,
+                                    &mut scr.rng,
+                                    store,
+                                    &mut scr.mask,
+                                    &mut scr.stats,
+                                );
+                            } else {
+                                store.accumulate(&grads[node]);
                             }
-                            stats.push(st);
-                        }
-                        (mask, stats)
-                    },
-                );
-                for (bi, &b) in broadcasters.iter().enumerate() {
-                    self.rngs[b] = brngs[bi].clone();
+                        },
+                    );
                 }
-                // Merge stats in broadcaster order (same f64 addition
-                // order as the sequential loop).
-                let mut new_stats = vec![LayerStats::default(); self.layout.n_layers()];
-                let mut masks = Vec::with_capacity(scored.len());
-                for (mask, stats) in scored {
-                    for (li, st) in stats.iter().enumerate() {
-                        new_stats[li].merge(st);
+                // Write RNG streams back and merge stats in broadcaster
+                // order (the same f64 addition order as the reference).
+                for s in self.prev_stats.iter_mut() {
+                    *s = LayerStats::default();
+                }
+                for &b in &broadcasters {
+                    self.rngs[b] = self.scratch[b].rng.clone();
+                    for (li, st) in self.scratch[b].stats.iter().enumerate() {
+                        self.prev_stats[li].merge(st);
                     }
-                    masks.push(mask);
                 }
-                self.prev_stats = new_stats;
-                let mask_refs: Vec<&BitMask> = masks.iter().collect();
+                let mask_refs: Vec<&BitMask> = broadcasters
+                    .iter()
+                    .map(|&b| &self.scratch[b].mask)
+                    .collect();
                 let (shared, rep) =
                     self.topo
                         .masked_bytes_only(&mut self.net, &mask_refs, &mut self.arena);
+                // Fused residual take: zero residual + velocity on the
+                // shared support in one sweep, no per-node Vec (the
+                // accounting engine discards the transmitted values).
                 let shared_ref = &shared;
                 self.exec.map_mut(&mut self.stores, |_, store| {
-                    let _ = store.take_masked(shared_ref);
+                    store.clear_masked(shared_ref);
                 });
                 // Paper-metric payload: encode(sparse(G)) per node — the
                 // selected values under the cheapest codec.
@@ -587,7 +608,8 @@ mod tests {
         let rep = e.step(0);
         assert!(rep.wire_bytes_per_node > 0);
         assert!(rep.density < 1.0);
+        let n_layers = e.layout().n_layers();
         let (_imp, stats) = e.importance_snapshot();
-        assert_eq!(stats.len(), e.layout().n_layers());
+        assert_eq!(stats.len(), n_layers);
     }
 }

@@ -28,24 +28,30 @@ SUBCOMMANDS:
                   iwp-layerwise|dgc      --nodes N --steps N --thr X --seed N
                   --mask-nodes R --no-random-select --config FILE --out DIR
                   --parallelism W (node-parallel executor width, default 1)
-                  --topology flat|hier:<group_size>|tree (reduce topology,
-                  DESIGN.md §10; default flat)
+                  --topology flat|hier:<group_size>|tree|
+                  pipeline:<chunks>[:<inner>] (reduce topology, DESIGN.md
+                  §10-§11; default flat)
     exp         regenerate a paper experiment:
                   --id table1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|density|sweep|all
                   --out DIR (default results/) --steps N --nodes N --seed N
                   (env RINGIWP_PARALLELISM=W widens the sim executor —
                    results are bit-identical at any width; env
-                   RINGIWP_TOPOLOGY=flat|hier:<g>|tree switches the sim
-                   reduce topology; `density` sweeps all three itself)
+                   RINGIWP_TOPOLOGY=flat|hier:<g>|tree|pipeline:<k>[:<inner>]
+                   switches the sim reduce topology; `density` sweeps its
+                   own topology set itself)
     bench       run the in-process perf harness (exp::bench) and emit
                 schema-versioned BENCH_ring.json / BENCH_step.json (ring
-                rows cover all three topologies):
+                rows cover the topology sweep incl. pipeline:4:flat):
                   --out DIR (default .) --quick --no-timing --repeats N
                   --ring-sizes 4,8,32,96 --seed N
                   --baseline FILE   gate ns/op + determinism against a
                                     checked-in baseline (bench/baseline.json)
+                                    and print a per-row ns/op diff summary
                   --strict-baseline fail (exit 1) when a baseline section
                                     ships null instead of skipping the gate
+                  --seed-baseline FILE  fill the baseline file's null ring/
+                                    step sections with this run's payloads
+                                    (already-seeded sections are untouched)
                   --diff DIR_A DIR_B  compare two output dirs' payloads
                                     modulo volatile fields (exit 1 on drift)
     info        list artifacts, PJRT platform, zoo inventories
@@ -220,7 +226,7 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use ringiwp::exp::bench::{run_ring, run_step, BenchCfg};
-    use ringiwp::metrics::bench::{canonical, compare, commit};
+    use ringiwp::metrics::bench::{canonical, commit, compare, ns_op_summary};
     use ringiwp::util::json;
 
     // Diff mode: compare two output directories' payloads modulo the
@@ -288,6 +294,37 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     step.write(&step_path)?;
     println!("wrote {step_path} ({} rows)", step.len());
 
+    // Seed mode: fill a baseline file's null sections with this run's
+    // payloads (EXPERIMENTS.md §6) — already-seeded sections stay put,
+    // so a committed baseline is never silently clobbered.
+    let mut seeded_this_run = Vec::new();
+    if let Some(seed_path) = args.str_opt("seed-baseline") {
+        let text = std::fs::read_to_string(seed_path)?;
+        let parsed = json::parse(&text).map_err(|e| anyhow::anyhow!("{seed_path}: {e}"))?;
+        let json::Json::Obj(mut map) = parsed else {
+            anyhow::bail!("{seed_path}: baseline must be a JSON object");
+        };
+        anyhow::ensure!(
+            cfg.timing,
+            "seed runs must be timed (drop --no-timing) so the ns/op gate is not vacuous"
+        );
+        for (section, payload) in [("ring", ring.to_json()), ("step", step.to_json())] {
+            if matches!(
+                map.get(section),
+                None | Some(json::Json::Null)
+            ) {
+                map.insert(section.to_string(), payload);
+                seeded_this_run.push(section);
+            }
+        }
+        if seeded_this_run.is_empty() {
+            println!("seed-baseline: {seed_path} already fully seeded — no changes");
+        } else {
+            std::fs::write(seed_path, format!("{}\n", json::Json::Obj(map)))?;
+            println!("seed-baseline: wrote {seeded_this_run:?} section(s) into {seed_path}");
+        }
+    }
+
     // Regression gate against a checked-in baseline.
     let strict = args.switch("strict-baseline");
     anyhow::ensure!(
@@ -295,6 +332,23 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "--strict-baseline requires --baseline FILE — without it no gate runs at all"
     );
     if let Some(baseline_path) = args.str_opt("baseline") {
+        // Gating a run against sections it just seeded from itself would
+        // compare this run to this run and print a vacuous PASS — seed
+        // and gate must be separate invocations (as CI does). Paths are
+        // canonicalized so alternate spellings of the same file cannot
+        // sneak past the guard.
+        let same_file = args.str_opt("seed-baseline").is_some_and(|sp| {
+            match (std::fs::canonicalize(sp), std::fs::canonicalize(baseline_path)) {
+                (Ok(a), Ok(b)) => a == b,
+                _ => sp == baseline_path,
+            }
+        });
+        anyhow::ensure!(
+            seeded_this_run.is_empty() || !same_file,
+            "--baseline {baseline_path} was seeded by this very run (sections \
+             {seeded_this_run:?}) — a self-referential gate verifies nothing. Re-run the \
+             gate as a separate invocation against the now-seeded file."
+        );
         let text = std::fs::read_to_string(baseline_path)?;
         let baseline = json::parse(&text).map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
         let max_regression = baseline.get("max_regression").as_f64().unwrap_or(0.2);
@@ -304,11 +358,21 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             let base = baseline.get(section);
             if matches!(base, json::Json::Null) {
                 println!(
-                    "baseline `{section}` section is null — gate skipped (seed it from a \
-                     trusted CI run's BENCH_{section}.json artifact; see EXPERIMENTS.md §6)"
+                    "baseline `{section}` section is null — gate skipped (seed it with \
+                     `ringiwp bench --seed-baseline {baseline_path}` or from a trusted CI \
+                     run's BENCH_{section}.json artifact; see EXPERIMENTS.md §6)"
                 );
                 unseeded.push(section);
                 continue;
+            }
+            // Human-readable ns/op diff next to the pass/fail verdict,
+            // worst regression first (EXPERIMENTS.md §6).
+            let summary = ns_op_summary(base, &current);
+            if !summary.is_empty() {
+                println!("ns/op vs baseline [{section}]:");
+                for line in &summary {
+                    println!("  {line}");
+                }
             }
             failures.extend(
                 compare(base, &current, max_regression)
@@ -323,7 +387,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         if strict && !unseeded.is_empty() {
             failures.push(format!(
                 "baseline {baseline_path} ships null section(s) {unseeded:?} — those gates \
-                 verified nothing. Seed them: download the `bench-json` artifact from a \
+                 verified nothing. Seed them: run `ringiwp bench --quick --seed-baseline \
+                 {baseline_path}` on the reference machine (CI does this in its own \
+                 workspace before gating), or download the `bench-json` artifact from a \
                  trusted CI run of this commit and paste BENCH_ring.json / BENCH_step.json \
                  verbatim into the `ring` / `step` keys (EXPERIMENTS.md §6), then re-run."
             ));

@@ -213,6 +213,42 @@ pub fn compare(baseline: &Json, current: &Json, max_regression: f64) -> Vec<Stri
     failures
 }
 
+/// Human-readable ns/op comparison of `current` against `baseline`,
+/// one line per row both payloads time, sorted worst regression first —
+/// the bench-smoke job prints this next to the pass/fail gate so a CI
+/// log shows *where* the time went, not just whether it regressed
+/// (EXPERIMENTS.md §6). Rows missing `ns_op` on either side are
+/// skipped; returns an empty Vec when nothing is comparable.
+pub fn ns_op_summary(baseline: &Json, current: &Json) -> Vec<String> {
+    let base_rows = rows_by_id(baseline);
+    let cur_rows = rows_by_id(current);
+    let mut rows: Vec<(f64, String)> = Vec::new();
+    for (id, brow) in &base_rows {
+        let Some(crow) = cur_rows.get(id) else {
+            continue;
+        };
+        let (Some(b_ns), Some(c_ns)) = (brow.get("ns_op").as_f64(), crow.get("ns_op").as_f64())
+        else {
+            continue;
+        };
+        if b_ns <= 0.0 {
+            continue;
+        }
+        let delta = c_ns / b_ns - 1.0;
+        rows.push((
+            delta,
+            format!(
+                "{:>+7.1}%  {:>12.0} -> {:>12.0} ns/op  {id}",
+                delta * 100.0,
+                b_ns,
+                c_ns
+            ),
+        ));
+    }
+    rows.sort_by(|a, b| b.0.total_cmp(&a.0));
+    rows.into_iter().map(|(_, line)| line).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -320,6 +356,19 @@ mod tests {
         let fails = compare(&base, &cur, 0.2);
         assert_eq!(fails.len(), 1);
         assert!(fails[0].contains("profile mismatch"));
+    }
+
+    #[test]
+    fn ns_op_summary_sorts_worst_regression_first() {
+        let base = payload(vec![row("a", 1000.0, 1.0), row("b", 1000.0, 1.0)]);
+        let cur = payload(vec![row("a", 1100.0, 1.0), row("b", 2000.0, 1.0)]);
+        let lines = ns_op_summary(&base, &cur);
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].ends_with(" b") && lines[0].contains("+100.0%"), "{lines:?}");
+        assert!(lines[1].ends_with(" a") && lines[1].contains("+10.0%"), "{lines:?}");
+        // Untimed payloads produce no lines rather than garbage.
+        let quiet = payload(vec![Json::obj(vec![("id", Json::from("a"))])]);
+        assert!(ns_op_summary(&quiet, &cur).is_empty());
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod trace;
 
 pub use cost::CostModel;
 pub use link::LinkSpec;
-pub use topo::{TopoKind, Topology};
+pub use topo::{PipeInner, TopoKind, Topology};
 pub use trace::Trace;
 
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -16,6 +16,11 @@
 //!   inter-group ring over the leaders → intra-group chain broadcast.
 //! * [`TreeAllreduce`] — binomial-tree reduce + broadcast, the dense
 //!   baseline DGC-style schemes assume.
+//! * [`PipelineRing`] — the layer-pipelined wrapper over any of the
+//!   above (`pipeline:<chunks>[:<inner>]`, DESIGN.md §11): payload
+//!   chunks flow through the inner topology back-to-back while the
+//!   virtual clock overlaps each chunk's compression prep with the
+//!   previous chunk's wire rounds.
 //!
 //! All topologies run on the same [`RingNet`] virtual network: a
 //! "round" is one synchronous phase in which node `i` transmits
@@ -28,10 +33,12 @@
 
 mod flat;
 mod hier;
+pub mod pipeline;
 mod tree;
 
 pub use flat::FlatRing;
 pub use hier::HierarchicalRing;
+pub use pipeline::PipelineRing;
 pub use tree::TreeAllreduce;
 
 pub(crate) use hier::{dense_plan as hier_dense_plan, spread_plan as hier_spread_plan};
@@ -42,8 +49,8 @@ use crate::ring::{Arena, Executor, ReduceReport};
 use crate::sparse::{BitMask, SparseVec};
 
 /// Which topology to run a reduce over — the `--topology` /
-/// `RINGIWP_TOPOLOGY` knob (DESIGN.md §10). [`TopoKind::build`] turns a
-/// kind into a live [`Topology`] for a given node count.
+/// `RINGIWP_TOPOLOGY` knob (DESIGN.md §10, §11). [`TopoKind::build`]
+/// turns a kind into a live [`Topology`] for a given node count.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum TopoKind {
     /// Single unidirectional ring over all N nodes (the paper's
@@ -59,10 +66,60 @@ pub enum TopoKind {
     },
     /// Binomial-tree reduce to node 0 + broadcast back out.
     Tree,
+    /// Layer-pipelined wrapper (`pipeline:<chunks>[:<inner>]`,
+    /// DESIGN.md §11): splits the payload into `chunks` pieces and
+    /// overlaps per-chunk compression prep with the previous chunk's
+    /// wire rounds on the inner topology.
+    Pipeline {
+        /// Number of pipeline chunks (1 = the serial, phase-ordered
+        /// reference with the same prep accounting).
+        chunks: usize,
+        /// The wrapped base topology the chunk rounds run on.
+        inner: PipeInner,
+    },
+}
+
+/// Base (non-pipelined) topology inside a [`TopoKind::Pipeline`]
+/// wrapper — pipelines do not nest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipeInner {
+    /// Flat single ring.
+    Flat,
+    /// Two-level hierarchy with the given group size.
+    Hier {
+        /// Nodes per group, as in [`TopoKind::Hier`].
+        group: usize,
+    },
+    /// Binomial tree.
+    Tree,
+}
+
+impl PipeInner {
+    /// The equivalent standalone [`TopoKind`].
+    pub fn kind(self) -> TopoKind {
+        match self {
+            PipeInner::Flat => TopoKind::Flat,
+            PipeInner::Hier { group } => TopoKind::Hier { group },
+            PipeInner::Tree => TopoKind::Tree,
+        }
+    }
+
+    /// Downcast a base kind; `None` for [`TopoKind::Pipeline`] (no
+    /// nesting).
+    pub fn from_kind(kind: TopoKind) -> Option<Self> {
+        match kind {
+            TopoKind::Flat => Some(PipeInner::Flat),
+            TopoKind::Hier { group } => Some(PipeInner::Hier { group }),
+            TopoKind::Tree => Some(PipeInner::Tree),
+            TopoKind::Pipeline { .. } => None,
+        }
+    }
 }
 
 impl TopoKind {
-    /// Parse `flat | hier:<group_size> | tree` (the CLI / env grammar).
+    /// Parse `flat | hier:<group_size> | tree |
+    /// pipeline:<chunks>[:<inner>]` (the CLI / env grammar; the inner
+    /// spec defaults to `flat`).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         let s = s.trim();
         if s == "flat" {
@@ -78,23 +135,49 @@ impl TopoKind {
             anyhow::ensure!(group >= 1, "hier group size must be >= 1");
             return Ok(TopoKind::Hier { group });
         }
-        anyhow::bail!("unknown topology `{s}` (flat | hier:<group_size> | tree)")
+        if let Some(rest) = s.strip_prefix("pipeline:") {
+            let (c, inner_s) = match rest.split_once(':') {
+                Some((c, inner_s)) => (c, inner_s),
+                None => (rest, "flat"),
+            };
+            let chunks: usize = c.parse().map_err(|_| {
+                anyhow::anyhow!("pipeline:<chunks> expects an integer, got `{c}`")
+            })?;
+            anyhow::ensure!(chunks >= 1, "pipeline chunk count must be >= 1");
+            let inner = PipeInner::from_kind(TopoKind::parse(inner_s)?)
+                .ok_or_else(|| anyhow::anyhow!("pipeline topologies cannot nest"))?;
+            return Ok(TopoKind::Pipeline { chunks, inner });
+        }
+        anyhow::bail!(
+            "unknown topology `{s}` (flat | hier:<group_size> | tree | \
+             pipeline:<chunks>[:<inner>])"
+        )
     }
 
     /// Canonical name, re-parseable by [`TopoKind::parse`]
-    /// (`flat`, `hier:4`, `tree`).
+    /// (`flat`, `hier:4`, `tree`, `pipeline:8:flat`).
     pub fn name(&self) -> String {
         match self {
             TopoKind::Flat => "flat".to_string(),
             TopoKind::Hier { group } => format!("hier:{group}"),
             TopoKind::Tree => "tree".to_string(),
+            TopoKind::Pipeline { chunks, inner } => {
+                format!("pipeline:{chunks}:{}", inner.kind().name())
+            }
         }
     }
 
     /// Reject configurations no topology can run.
     pub fn validate(&self) -> anyhow::Result<()> {
-        if let TopoKind::Hier { group } = self {
-            anyhow::ensure!(*group >= 1, "hier group size must be >= 1");
+        match self {
+            TopoKind::Hier { group } => {
+                anyhow::ensure!(*group >= 1, "hier group size must be >= 1");
+            }
+            TopoKind::Pipeline { chunks, inner } => {
+                anyhow::ensure!(*chunks >= 1, "pipeline chunk count must be >= 1");
+                inner.kind().validate()?;
+            }
+            _ => {}
         }
         Ok(())
     }
@@ -119,6 +202,9 @@ impl TopoKind {
             TopoKind::Flat => Box::new(FlatRing::new(n)),
             TopoKind::Hier { group } => Box::new(HierarchicalRing::new(n, group)),
             TopoKind::Tree => Box::new(TreeAllreduce::new(n)),
+            TopoKind::Pipeline { chunks, inner } => {
+                Box::new(PipelineRing::new(n, chunks, inner))
+            }
         }
     }
 }
@@ -294,6 +380,27 @@ mod tests {
             ("tree", TopoKind::Tree),
             ("hier:4", TopoKind::Hier { group: 4 }),
             ("hier:1", TopoKind::Hier { group: 1 }),
+            (
+                "pipeline:4",
+                TopoKind::Pipeline {
+                    chunks: 4,
+                    inner: PipeInner::Flat,
+                },
+            ),
+            (
+                "pipeline:2:hier:3",
+                TopoKind::Pipeline {
+                    chunks: 2,
+                    inner: PipeInner::Hier { group: 3 },
+                },
+            ),
+            (
+                "pipeline:8:tree",
+                TopoKind::Pipeline {
+                    chunks: 8,
+                    inner: PipeInner::Tree,
+                },
+            ),
         ] {
             let parsed = TopoKind::parse(s).unwrap();
             assert_eq!(parsed, k);
@@ -303,11 +410,22 @@ mod tests {
         assert!(TopoKind::parse("hier:").is_err());
         assert!(TopoKind::parse("hier:0").is_err());
         assert!(TopoKind::parse("hier:x").is_err());
+        assert!(TopoKind::parse("pipeline:0").is_err());
+        assert!(TopoKind::parse("pipeline:x").is_err());
+        assert!(TopoKind::parse("pipeline:2:pipeline:2:flat").is_err());
     }
 
     #[test]
     fn build_produces_matching_kind() {
-        for kind in [TopoKind::Flat, TopoKind::Hier { group: 3 }, TopoKind::Tree] {
+        for kind in [
+            TopoKind::Flat,
+            TopoKind::Hier { group: 3 },
+            TopoKind::Tree,
+            TopoKind::Pipeline {
+                chunks: 4,
+                inner: PipeInner::Hier { group: 3 },
+            },
+        ] {
             let t = kind.build(8);
             assert_eq!(t.kind(), kind);
             assert_eq!(t.nodes(), 8);

@@ -1,0 +1,540 @@
+//! Layer-pipelined allreduce wrapper (DESIGN.md §11).
+//!
+//! Every base topology is strictly phase-serialized: the whole model is
+//! scored/compacted, *then* the whole blob goes through its wire
+//! rounds. DGC (1712.01887) and RedSync (1808.04357) both observe that
+//! the real wall-clock win is overlapping selection with transmission.
+//! [`PipelineRing`] models exactly that: the payload splits into
+//! `chunks` contiguous pieces (fixed-size; pick `chunks` ≈ the layer
+//! count for per-layer pipelining) and chunk `l+1`'s compression prep
+//! runs while chunk `l` is in its ring rounds:
+//!
+//! ```text
+//! prep:  |p0|p1|p2|p3|                      (one compute resource)
+//! wire:      |--w0--|--w1--|--w2--|--w3--|  (rounds serialize on the net)
+//!        makespan = max_l ( Σ_{j<=l} p_j  +  Σ_{j>=l} w_j )
+//! ```
+//!
+//! Wire rounds still serialize (chunks share the same links), so the
+//! win is hiding the selection pass: serial cost `P + W` becomes
+//! `≈ P/k + W` when wire-bound, at the price of `(k-1)` extra rounds'
+//! latency per phase. Break-even: pipelining pays off iff the hidden
+//! prep per chunk exceeds the added round latency (DESIGN.md §11 gives
+//! the closed form; `CostModel::pipelined_masked_seconds` predicts the
+//! makespan bit-exactly against this simulation).
+//!
+//! Contract (mirrors §10): values are **bit-identical to the wrapped
+//! topology** on exactly-representable payloads (per-chunk sums add the
+//! same node values per coordinate; pinned in
+//! `rust/tests/topology_equivalence.rs`), executor-parallel per-chunk
+//! with the §4 bit-identical guarantee, arena-threaded with zero
+//! steady-state allocation. The per-node-support schedules
+//! ([`Topology::sparse`], [`Topology::sparse_support`]) and opaque blob
+//! spreads delegate to the wrapped topology unchanged — their payloads
+//! are data-dependent blobs with no prep stage to overlap.
+//!
+//! Prep cost is only modeled where a compression stage exists: the
+//! masked (Algorithm 1) schedules. Dense pipelining carries no prep —
+//! `pipeline:<k>` on the Baseline only adds round latency, which the
+//! sweeps in EXPERIMENTS.md §8 make visible deliberately. Base
+//! topologies never price prep (their selection pass runs outside the
+//! virtual clock), so compare `pipeline:<k>` against `pipeline:1`,
+//! the serial reference with identical prep accounting.
+
+use super::flat::{report, snapshot};
+use super::{
+    chunk_size, hier_dense_plan, hier_spread_plan, or_masks, tree_dense_plan, tree_spread_plan,
+    PipeInner, TopoKind, Topology,
+};
+use crate::net::RingNet;
+use crate::ring::{Arena, Executor, ReduceReport};
+use crate::sparse::{BitMask, SparseVec};
+
+/// Virtual seconds of fused compression prep (score + select + compact,
+/// `compress::fuse`) per coordinate: calibrated to ~1 G coords/s — one
+/// single-pass sweep over f32 data at memory-bandwidth-bound throughput
+/// on one core (the BENCH_step fused-kernel ns/op magnitude).
+pub const PREP_SECONDS_PER_COORD: f64 = 1e-9;
+
+/// Prep time of one `coords`-coordinate pipeline chunk.
+pub fn prep_seconds(coords: usize) -> f64 {
+    coords as f64 * PREP_SECONDS_PER_COORD
+}
+
+/// Per-chunk support counts of `mask` under the balanced `chunks`-way
+/// partition — the data the pipelined cost model needs
+/// (`CostModel::pipelined_masked_*`). One pass over the set bits.
+pub fn chunk_supports(mask: &BitMask, chunks: usize) -> Vec<usize> {
+    assert!(chunks >= 1);
+    let len = mask.len();
+    let mut out = vec![0usize; chunks];
+    let mut ci = 0usize;
+    let mut end = chunk_size(len, chunks, 0);
+    for i in mask.iter_set() {
+        while i >= end {
+            ci += 1;
+            end += chunk_size(len, chunks, ci);
+        }
+        out[ci] += 1;
+    }
+    out
+}
+
+/// Layer-pipelined wrapper over a base topology (DESIGN.md §11):
+/// `pipeline:<chunks>[:<inner>]`.
+#[derive(Debug)]
+pub struct PipelineRing {
+    n: usize,
+    chunks: usize,
+    inner_base: PipeInner,
+    inner: Box<dyn Topology>,
+}
+
+impl PipelineRing {
+    /// A `chunks`-stage pipeline over `inner` for `n >= 2` nodes.
+    pub fn new(n: usize, chunks: usize, inner: PipeInner) -> Self {
+        assert!(n >= 2, "a topology needs at least 2 nodes");
+        assert!(chunks >= 1, "pipeline chunk count must be >= 1");
+        PipelineRing {
+            n,
+            chunks,
+            inner_base: inner,
+            inner: inner.kind().build(n),
+        }
+    }
+
+    /// Accounting-only dense rounds of the wrapped topology — the same
+    /// arena buffers and round sequences its own `dense_bytes_only`
+    /// drives, without assembling a per-call report.
+    fn dense_rounds_only(&self, net: &mut RingNet, coords: usize, arena: &mut Arena) {
+        match self.inner_base {
+            PipeInner::Flat => crate::ring::dense::rounds_bytes_only(net, coords, arena),
+            PipeInner::Hier { group } => {
+                let Arena {
+                    grows, dense_sends, ..
+                } = arena;
+                let cap = dense_sends.capacity();
+                hier_dense_plan(self.n, group, coords, dense_sends, |s| {
+                    net.round(s);
+                });
+                Arena::note(grows, dense_sends.capacity() != cap);
+            }
+            PipeInner::Tree => {
+                let Arena {
+                    grows, dense_sends, ..
+                } = arena;
+                let cap = dense_sends.capacity();
+                tree_dense_plan(self.n, coords, dense_sends, |s| {
+                    net.round(s);
+                });
+                Arena::note(grows, dense_sends.capacity() != cap);
+            }
+        }
+    }
+
+    /// Accounting-only blob spread of the wrapped topology (mask chunks
+    /// are opaque blobs — the combine is pure data, §10).
+    fn spread_rounds_only(&self, net: &mut RingNet, blob: u64, k: usize, arena: &mut Arena) {
+        let n = self.n;
+        match self.inner_base {
+            PipeInner::Flat => {
+                let Arena {
+                    grows,
+                    mk_blobs,
+                    ag_sends,
+                    ..
+                } = arena;
+                let blobs = (0..n).map(|i| if i < k { blob } else { 0 });
+                Arena::allgather_into(net, grows, mk_blobs, ag_sends, blobs);
+            }
+            PipeInner::Hier { group } => {
+                let Arena {
+                    grows, ag_sends, ..
+                } = arena;
+                let cap = ag_sends.capacity();
+                hier_spread_plan(n, group, blob, k, ag_sends, |s| {
+                    net.round(s);
+                });
+                Arena::note(grows, ag_sends.capacity() != cap);
+            }
+            PipeInner::Tree => {
+                let Arena {
+                    grows, ag_sends, ..
+                } = arena;
+                let cap = ag_sends.capacity();
+                tree_spread_plan(n, blob, k, ag_sends, |s| {
+                    net.round(s);
+                });
+                Arena::note(grows, ag_sends.capacity() != cap);
+            }
+        }
+    }
+}
+
+impl Topology for PipelineRing {
+    fn kind(&self) -> TopoKind {
+        TopoKind::Pipeline {
+            chunks: self.chunks,
+            inner: self.inner_base,
+        }
+    }
+
+    fn nodes(&self) -> usize {
+        self.n
+    }
+
+    fn reduce_hops(&self) -> usize {
+        self.inner.reduce_hops()
+    }
+
+    fn dense(
+        &self,
+        net: &mut RingNet,
+        bufs: &mut [Vec<f32>],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        let n = self.n;
+        assert_eq!(net.n_nodes(), n);
+        assert_eq!(bufs.len(), n, "one buffer per node");
+        let len = bufs[0].len();
+        assert!(bufs.iter().all(|b| b.len() == len));
+        let before = snapshot(net);
+        let t0 = net.clock();
+        // Per-chunk staging is taken out of the arena so the inner
+        // schedule can borrow the rest of it per chunk.
+        let mut work = std::mem::take(&mut arena.pl_bufs);
+        Arena::slots(&arena.grows, &mut work, n, Vec::new);
+        let mut start = 0usize;
+        for ci in 0..self.chunks {
+            let clen = chunk_size(len, self.chunks, ci);
+            let range = start..start + clen;
+            start = range.end;
+            if clen == 0 {
+                continue;
+            }
+            {
+                let grows = &arena.grows;
+                let bufs_src: &[Vec<f32>] = bufs;
+                exec.map_mut(&mut work[..n], |i, wv| {
+                    Arena::note(
+                        grows,
+                        Arena::refill_slice(wv, &bufs_src[i][range.clone()]),
+                    );
+                });
+            }
+            self.inner.dense(net, &mut work[..n], exec, arena);
+            let staged: &[Vec<f32>] = &work;
+            exec.map_mut(bufs, |i, buf| {
+                buf[range.clone()].copy_from_slice(&staged[i]);
+            });
+        }
+        arena.pl_bufs = work;
+        report(net, &before, t0, Vec::new())
+    }
+
+    fn dense_bytes_only(
+        &self,
+        net: &mut RingNet,
+        coords: usize,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        assert_eq!(net.n_nodes(), self.n);
+        let before = snapshot(net);
+        let t0 = net.clock();
+        for ci in 0..self.chunks {
+            let clen = chunk_size(coords, self.chunks, ci);
+            if clen == 0 {
+                continue;
+            }
+            self.dense_rounds_only(net, clen, arena);
+        }
+        report(net, &before, t0, Vec::new())
+    }
+
+    fn sparse(
+        &self,
+        net: &mut RingNet,
+        inputs: &[SparseVec],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> (Vec<f32>, ReduceReport) {
+        // Per-node-support payloads are data-dependent blobs with no
+        // prep stage to overlap — delegated verbatim (mod docs).
+        self.inner.sparse(net, inputs, exec, arena)
+    }
+
+    fn sparse_support(
+        &self,
+        net: &mut RingNet,
+        supports: &[BitMask],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        self.inner.sparse_support(net, supports, exec, arena)
+    }
+
+    fn masked(
+        &self,
+        net: &mut RingNet,
+        masks: &[&BitMask],
+        values: &[&[f32]],
+        exec: &Executor,
+        arena: &mut Arena,
+    ) -> (BitMask, Vec<f32>, ReduceReport) {
+        let n = self.n;
+        assert_eq!(net.n_nodes(), n);
+        assert_eq!(values.len(), n);
+        assert!(!masks.is_empty(), "need at least one mask broadcaster");
+        let len = masks[0].len();
+        assert!(values.iter().all(|v| v.len() == len));
+        let k = masks.len().min(n);
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let shared = or_masks(masks, len);
+        let mut summed: Vec<f32> = Vec::with_capacity(shared.count());
+        let mut work = std::mem::take(&mut arena.pl_bufs);
+        let mut support = std::mem::take(&mut arena.mk_support);
+        Arena::slots(&arena.grows, &mut work, n, Vec::new);
+        let mut set_iter = shared.iter_set().peekable();
+        let mut prep_done = 0.0f64;
+        let mut start = 0usize;
+        for ci in 0..self.chunks {
+            let clen = chunk_size(len, self.chunks, ci);
+            let end = start + clen;
+            start = end;
+            // Chunk ci's scoring/compaction overlaps the previous
+            // chunk's wire rounds: the wire may not start before this
+            // chunk's prep finishes on the (single) compute resource.
+            prep_done += prep_seconds(clen);
+            let target = t0 + prep_done;
+            if net.clock() < target {
+                net.advance(target - net.clock());
+            }
+            if clen == 0 {
+                continue;
+            }
+            // Chunk mask spread (its bit-slice travels as one blob).
+            self.spread_rounds_only(net, (clen.div_ceil(8)) as u64, k, arena);
+            {
+                let grows = &arena.grows;
+                Arena::refill(
+                    grows,
+                    &mut support,
+                    std::iter::from_fn(|| set_iter.next_if(|&i| i < end)),
+                );
+            }
+            if support.is_empty() {
+                continue;
+            }
+            // Compact every node's values to this chunk's support and
+            // run the wrapped dense schedule over the compacted pieces.
+            {
+                let grows = &arena.grows;
+                let support_ref: &[usize] = &support;
+                exec.map_mut(&mut work[..n], |node, wv| {
+                    let cap = wv.capacity();
+                    wv.clear();
+                    wv.extend(support_ref.iter().map(|&i| values[node][i]));
+                    Arena::note(grows, wv.capacity() != cap);
+                });
+            }
+            self.inner.dense(net, &mut work[..n], exec, arena);
+            summed.extend_from_slice(&work[0]);
+        }
+        arena.pl_bufs = work;
+        arena.mk_support = support;
+        let rep = report(net, &before, t0, vec![shared.density(); self.reduce_hops()]);
+        (shared, summed, rep)
+    }
+
+    fn masked_bytes_only(
+        &self,
+        net: &mut RingNet,
+        masks: &[&BitMask],
+        arena: &mut Arena,
+    ) -> (BitMask, ReduceReport) {
+        let n = self.n;
+        assert_eq!(net.n_nodes(), n);
+        assert!(!masks.is_empty());
+        let len = masks[0].len();
+        let k = masks.len().min(n);
+        let before = snapshot(net);
+        let t0 = net.clock();
+        let shared = or_masks(masks, len);
+        let mut set_iter = shared.iter_set().peekable();
+        let mut prep_done = 0.0f64;
+        let mut start = 0usize;
+        for ci in 0..self.chunks {
+            let clen = chunk_size(len, self.chunks, ci);
+            let end = start + clen;
+            start = end;
+            prep_done += prep_seconds(clen);
+            let target = t0 + prep_done;
+            if net.clock() < target {
+                net.advance(target - net.clock());
+            }
+            if clen == 0 {
+                continue;
+            }
+            self.spread_rounds_only(net, (clen.div_ceil(8)) as u64, k, arena);
+            let mut sup = 0usize;
+            while set_iter.next_if(|&i| i < end).is_some() {
+                sup += 1;
+            }
+            if sup == 0 {
+                continue;
+            }
+            self.dense_rounds_only(net, sup, arena);
+        }
+        let rep = report(net, &before, t0, vec![shared.density(); self.reduce_hops()]);
+        (shared, rep)
+    }
+
+    fn spread_bytes(
+        &self,
+        net: &mut RingNet,
+        blob_bytes: u64,
+        k: usize,
+        arena: &mut Arena,
+    ) -> ReduceReport {
+        // Opaque blobs cannot chunk — delegated verbatim (mod docs).
+        self.inner.spread_bytes(net, blob_bytes, k, arena)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkSpec;
+    use crate::util::rng::Rng;
+
+    fn net(n: usize) -> RingNet {
+        RingNet::new(n, LinkSpec::gigabit_ethernet(), 1.0)
+    }
+
+    fn int_bufs(rng: &mut Rng, n: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..len).map(|_| rng.below(17) as f32 - 8.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn chunk_supports_partitions_the_count() {
+        let len = 1000;
+        let mut rng = Rng::new(9);
+        let mut mask = BitMask::zeros(len);
+        for _ in 0..120 {
+            mask.set(rng.below(len));
+        }
+        for chunks in [1usize, 3, 7, 64] {
+            let sups = chunk_supports(&mask, chunks);
+            assert_eq!(sups.len(), chunks);
+            assert_eq!(sups.iter().sum::<usize>(), mask.count(), "chunks={chunks}");
+        }
+        // Hand-checked bucketing: bits 0 and 999 land in the outer chunks.
+        let mut m2 = BitMask::zeros(len);
+        m2.set(0);
+        m2.set(999);
+        let sups = chunk_supports(&m2, 4);
+        assert_eq!(sups, vec![1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn pipeline_dense_sums_match_wrapped_topology_bitwise() {
+        let (n, len) = (6usize, 1003usize);
+        let mut rng = Rng::new(21);
+        let base = int_bufs(&mut rng, n, len);
+        for inner in [PipeInner::Flat, PipeInner::Hier { group: 2 }, PipeInner::Tree] {
+            let wrapped = inner.kind().build(n);
+            let mut net_w = net(n);
+            let mut bufs_w = base.clone();
+            wrapped.dense(
+                &mut net_w,
+                &mut bufs_w,
+                &Executor::sequential(),
+                &mut Arena::for_nodes(n),
+            );
+            for chunks in [1usize, 4] {
+                let pipe = PipelineRing::new(n, chunks, inner);
+                let mut net_p = net(n);
+                let mut bufs_p = base.clone();
+                pipe.dense(
+                    &mut net_p,
+                    &mut bufs_p,
+                    &Executor::sequential(),
+                    &mut Arena::for_nodes(n),
+                );
+                for (w, p) in bufs_w.iter().zip(&bufs_p) {
+                    let wb: Vec<u32> = w.iter().map(|v| v.to_bits()).collect();
+                    let pb: Vec<u32> = p.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(wb, pb, "inner={inner:?} chunks={chunks}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_bytes_only_matches_exact_accounting() {
+        let (n, len) = (5usize, 4000usize);
+        let mut rng = Rng::new(31);
+        let mut mask = BitMask::zeros(len);
+        for _ in 0..150 {
+            mask.set(rng.below(len));
+        }
+        let values = int_bufs(&mut rng, n, len);
+        let refs: Vec<&[f32]> = values.iter().map(|v| v.as_slice()).collect();
+        for inner in [PipeInner::Flat, PipeInner::Hier { group: 2 }, PipeInner::Tree] {
+            for chunks in [1usize, 3, 8] {
+                let pipe = PipelineRing::new(n, chunks, inner);
+                let mut net_a = net(n);
+                let (shared_a, _, rep_a) = pipe.masked(
+                    &mut net_a,
+                    &[&mask],
+                    &refs,
+                    &Executor::sequential(),
+                    &mut Arena::for_nodes(n),
+                );
+                let mut net_b = net(n);
+                let (shared_b, rep_b) =
+                    pipe.masked_bytes_only(&mut net_b, &[&mask], &mut Arena::for_nodes(n));
+                assert_eq!(shared_a, shared_b, "inner={inner:?} chunks={chunks}");
+                assert_eq!(
+                    rep_a.bytes_per_node, rep_b.bytes_per_node,
+                    "inner={inner:?} chunks={chunks}"
+                );
+                assert_eq!(
+                    rep_a.seconds.to_bits(),
+                    rep_b.seconds.to_bits(),
+                    "inner={inner:?} chunks={chunks}"
+                );
+                assert_eq!(net_a.rounds(), net_b.rounds());
+            }
+        }
+    }
+
+    #[test]
+    fn serial_pipeline_pays_full_prep_upfront() {
+        // chunks=1 is the phase-serialized reference: its makespan is
+        // the wrapped topology's wire time plus the whole prep pass.
+        let (n, len) = (4usize, 50_000usize);
+        let mut rng = Rng::new(41);
+        let mut mask = BitMask::zeros(len);
+        for _ in 0..500 {
+            mask.set(rng.below(len));
+        }
+        let flat = TopoKind::Flat.build(n);
+        let mut net_f = net(n);
+        let (_, rep_f) = flat.masked_bytes_only(&mut net_f, &[&mask], &mut Arena::for_nodes(n));
+        let pipe = PipelineRing::new(n, 1, PipeInner::Flat);
+        let mut net_p = net(n);
+        let (_, rep_p) = pipe.masked_bytes_only(&mut net_p, &[&mask], &mut Arena::for_nodes(n));
+        assert_eq!(rep_f.total_bytes(), rep_p.total_bytes());
+        let gap = rep_p.seconds - rep_f.seconds;
+        let prep = prep_seconds(len);
+        assert!(
+            (gap - prep).abs() < 1e-12,
+            "serial pipeline should add exactly the prep pass: {gap} vs {prep}"
+        );
+    }
+}

@@ -42,6 +42,24 @@ impl MomentumSgd {
         }
     }
 
+    /// [`MomentumSgd::step`] over an unaveraged reduce **sum**: the mean
+    /// `sum[i] / nodes` is formed inline instead of in a caller-allocated
+    /// average buffer — bit-identical to `step` on the materialized
+    /// average, one dense pass and zero allocations (DESIGN.md §11).
+    pub fn step_mean(&mut self, params: &mut [f32], sum: &[f32], nodes: f32, lr: f32) {
+        assert!(params.len() == sum.len() && params.len() == self.velocity.len());
+        if self.momentum == 0.0 {
+            for i in 0..params.len() {
+                params[i] -= lr * (sum[i] / nodes);
+            }
+        } else {
+            for i in 0..params.len() {
+                self.velocity[i] = self.momentum * self.velocity[i] + sum[i] / nodes;
+                params[i] -= lr * self.velocity[i];
+            }
+        }
+    }
+
     /// Sparse update on a known support (Alg. 1 line 13 after a masked
     /// reduce): `indices[j]` gets `values[j]`. Momentum is intentionally
     /// NOT applied here — compressed paths carry it in the residual store.
@@ -49,6 +67,26 @@ impl MomentumSgd {
         assert_eq!(indices.len(), values.len());
         for (&i, &v) in indices.iter().zip(values) {
             params[i] -= lr * v;
+        }
+    }
+
+    /// [`MomentumSgd::step_sparse`] driven by a mask's set-bit iterator
+    /// with the post-reduce `1/N` scaling fused in — the trainer's IWP
+    /// update without materializing the support index table or a scaled
+    /// value buffer (DESIGN.md §11). `values[j]` pairs with the j-th set
+    /// bit of `mask`; bit-identical to scaling into a scratch buffer and
+    /// calling `step_sparse` on the collected support.
+    pub fn step_sparse_mask(
+        &mut self,
+        params: &mut [f32],
+        mask: &crate::sparse::BitMask,
+        values: &[f32],
+        scale: f32,
+        lr: f32,
+    ) {
+        debug_assert_eq!(mask.count(), values.len());
+        for (j, i) in mask.iter_set().enumerate() {
+            params[i] -= lr * (values[j] * scale);
         }
     }
 }
@@ -80,6 +118,47 @@ mod tests {
         let mut p = vec![1.0f32; 4];
         opt.step_sparse(&mut p, &[1, 3], &[10.0, 20.0], 0.1);
         assert_eq!(p, vec![1.0, 0.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn step_mean_is_bit_identical_to_materialized_average() {
+        for momentum in [0.0f32, 0.9] {
+            let sum = vec![3.0f32, -1.5, 0.25, 7.0];
+            let n = 4.0f32;
+            let mut a = MomentumSgd::new(4, momentum);
+            let mut b = MomentumSgd::new(4, momentum);
+            let mut pa = vec![1.0f32; 4];
+            let mut pb = vec![1.0f32; 4];
+            for _ in 0..3 {
+                let avg: Vec<f32> = sum.iter().map(|&g| g / n).collect();
+                a.step(&mut pa, &avg, 0.1);
+                b.step_mean(&mut pb, &sum, n, 0.1);
+            }
+            let bits = |p: &[f32]| -> Vec<u32> { p.iter().map(|v| v.to_bits()).collect() };
+            assert_eq!(bits(&pa), bits(&pb), "momentum={momentum}");
+        }
+    }
+
+    #[test]
+    fn step_sparse_mask_is_bit_identical_to_scaled_support() {
+        use crate::sparse::BitMask;
+        let len = 10;
+        let mut mask = BitMask::zeros(len);
+        mask.set(1);
+        mask.set(4);
+        mask.set(9);
+        let summed = vec![3.0f32, -6.0, 0.5];
+        let scale = 1.0 / 3.0f32;
+        let mut a = MomentumSgd::new(len, 0.9);
+        let mut b = MomentumSgd::new(len, 0.9);
+        let mut pa = vec![1.0f32; len];
+        let mut pb = vec![1.0f32; len];
+        let support: Vec<usize> = mask.iter_set().collect();
+        let scaled: Vec<f32> = summed.iter().map(|&v| v * scale).collect();
+        a.step_sparse(&mut pa, &support, &scaled, 0.05);
+        b.step_sparse_mask(&mut pb, &mask, &summed, scale, 0.05);
+        let bits = |p: &[f32]| -> Vec<u32> { p.iter().map(|v| v.to_bits()).collect() };
+        assert_eq!(bits(&pa), bits(&pb));
     }
 
     #[test]

@@ -78,6 +78,10 @@ pub struct Arena {
     pub(crate) tp_wsums: Vec<Vec<u64>>,
     pub(crate) tp_wheld: Vec<Vec<u64>>,
     pub(crate) tp_wnext: Vec<Vec<u64>>,
+    // Layer-pipelined wrapper (`net::topo::pipeline`, DESIGN.md §11):
+    // per-node chunk staging the wrapper hands to the inner topology's
+    // schedule while the rest of the arena stays free for that schedule.
+    pub(crate) pl_bufs: Vec<Vec<f32>>,
 }
 
 impl Arena {
@@ -117,6 +121,7 @@ impl Arena {
         a.tp_wsums.resize_with(n, Vec::new);
         a.tp_wheld.resize_with(n, Vec::new);
         a.tp_wnext.resize_with(n, Vec::new);
+        a.pl_bufs.resize_with(n, Vec::new);
         a
     }
 

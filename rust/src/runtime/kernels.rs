@@ -47,10 +47,61 @@ impl ImportanceKernel {
         thr: f32,
         eps: f32,
     ) -> anyhow::Result<(BitMask, Vec<f32>, LayerStats)> {
-        assert!(g.len() == w.len() && g.len() == u.len());
         let len = g.len();
         let mut mask = BitMask::zeros(len);
         let mut imp = vec![0.0f32; len];
+        let stats = self.score_tiles(g, w, u, thr, eps, &mut |off, take, mask_f32, imp_f32| {
+            for (k, (&m, &v)) in mask_f32[..take].iter().zip(&imp_f32[..take]).enumerate() {
+                if m != 0.0 {
+                    mask.set(off + k);
+                }
+                imp[off + k] = v;
+            }
+        })?;
+        Ok((mask, imp, stats))
+    }
+
+    /// [`ImportanceKernel::score`] for a layer window at global offset
+    /// `base`: sets selection bits directly into the caller's model-wide
+    /// mask and skips the importance materialization (the trainer only
+    /// consumes the stats rows) — no per-call allocation (DESIGN.md
+    /// §11). Bits in `[base, base + g.len())` must be clear on entry;
+    /// callers reuse a `clear_all`-ed per-broadcaster slot.
+    #[allow(clippy::too_many_arguments)]
+    pub fn score_into(
+        &mut self,
+        g: &[f32],
+        w: &[f32],
+        u: &[f32],
+        thr: f32,
+        eps: f32,
+        base: usize,
+        mask_out: &mut BitMask,
+    ) -> anyhow::Result<LayerStats> {
+        self.score_tiles(g, w, u, thr, eps, &mut |off, take, mask_f32, _imp_f32| {
+            for (k, &m) in mask_f32[..take].iter().enumerate() {
+                if m != 0.0 {
+                    mask_out.set(base + off + k);
+                }
+            }
+        })
+    }
+
+    /// Shared tiling loop: runs the kernel artifacts over `g/w/u` and
+    /// hands each tile's `(offset, take, mask_f32, imp_f32)` to `sink`,
+    /// accumulating the padding-corrected stats.
+    #[allow(clippy::too_many_arguments)]
+    fn score_tiles(
+        &mut self,
+        g: &[f32],
+        w: &[f32],
+        u: &[f32],
+        thr: f32,
+        eps: f32,
+        sink: &mut dyn FnMut(usize, usize, &[f32], &[f32]),
+    ) -> anyhow::Result<LayerStats> {
+        assert!(g.len() == w.len() && g.len() == u.len());
+        let len = g.len();
         let mut stats = LayerStats::default();
 
         let thr_buf = [thr];
@@ -78,12 +129,7 @@ impl ImportanceKernel {
             };
             let out = art.run_f32(&[gs, ws, us, &thr_buf, &eps_buf])?;
             let (mask_f32, imp_f32, st) = (&out[0], &out[1], &out[2]);
-            for k in 0..take {
-                if mask_f32[k] != 0.0 {
-                    mask.set(off + k);
-                }
-                imp[off + k] = imp_f32[k];
-            }
+            sink(off, take, mask_f32, imp_f32);
             // Kernel stats include the padded coordinates (importance 0,
             // unselected) — only `n` needs correcting.
             stats.sum += st[0] as f64;
@@ -92,6 +138,6 @@ impl ImportanceKernel {
             stats.n += take as f64;
             off += take;
         }
-        Ok((mask, imp, stats))
+        Ok(stats)
     }
 }

@@ -100,6 +100,20 @@ impl BitMask {
         }
     }
 
+    /// Clear every bit in place, keeping the allocation (the fused
+    /// scoring paths reuse per-broadcaster mask slots across steps —
+    /// `compress::fuse`, DESIGN.md §11).
+    pub fn clear_all(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Raw mutable word view for bulk writers that fully overwrite the
+    /// mask (the fused kernel packs selection bits word-at-a-time instead
+    /// of calling [`BitMask::set`] per coordinate).
+    pub(crate) fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
     /// Iterate set indices in ascending order.
     pub fn iter_set(&self) -> impl Iterator<Item = usize> + '_ {
         self.words.iter().enumerate().flat_map(move |(wi, &w)| {

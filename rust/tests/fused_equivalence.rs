@@ -1,0 +1,211 @@
+//! The fused one-pass kernel contract (DESIGN.md §11), pinned at the
+//! engine level: `SimEngine`'s IWP step — which runs
+//! `fuse::score_select_compact` + `ResidualStore::clear_masked` — must
+//! reproduce the retained multi-pass reference chain
+//! (`accumulate` → `fill_u` → `score_and_mask` → per-layer mask merge →
+//! `take_masked`) **bit for bit**: step reports, trailing layer stats,
+//! and residual states. The kernel-level pins (every selection mode,
+//! warm/cold stores, RNG lockstep) live in `compress::fuse`'s unit
+//! tests; this file replays the whole engine chain against a from-
+//! scratch multi-pass reimplementation for both IWP methods × both
+//! threshold policies × both selection modes.
+
+use ringiwp::compress::importance::{score_and_mask, LayerStats, EPS};
+use ringiwp::compress::residual::ResidualStore;
+use ringiwp::compress::select;
+use ringiwp::compress::threshold::{ThresholdCfg, ThresholdPolicy};
+use ringiwp::compress::Method;
+use ringiwp::exp::simrun::{SimCfg, SimEngine};
+use ringiwp::grad::SynthGrads;
+use ringiwp::model::{LayerKind, ParamLayout};
+use ringiwp::net::{LinkSpec, RingNet, TopoKind};
+use ringiwp::ring::{masked, Arena};
+use ringiwp::sparse::BitMask;
+use ringiwp::util::rng::Rng;
+
+fn layout() -> ParamLayout {
+    ParamLayout::new(
+        "fused_eq",
+        vec![
+            ("conv1".into(), vec![16, 8, 3, 3], LayerKind::Conv),
+            ("bn1".into(), vec![32], LayerKind::BatchNorm),
+            ("fc".into(), vec![200, 10], LayerKind::Fc),
+        ],
+    )
+}
+
+/// The engine's IWP step, re-derived from the retained multi-pass
+/// primitives (the exact pre-fusion chain, flat topology, sequential).
+/// Returns per-step `(wire_bytes_per_node, density bits, seconds bits)`
+/// plus the final trailing stats.
+fn multipass_reference(
+    cfg: &SimCfg,
+    layout: &ParamLayout,
+    steps: usize,
+) -> (Vec<(u64, u64, u64)>, Vec<LayerStats>) {
+    let total = layout.total_params();
+    let nodes = cfg.nodes;
+    let sim_nodes = nodes.min(4); // SimEngine::SIM_NODE_CAP
+    let synth = SynthGrads::new(layout.clone(), cfg.seed ^ 0x5EED);
+    let mut root = Rng::new(cfg.seed);
+    let mut rngs: Vec<Rng> = (0..nodes).map(|i| root.split(i as u64)).collect();
+    let mut ctl_rng = root.split(0xC011);
+    let mut stores: Vec<ResidualStore> = (0..sim_nodes)
+        .map(|_| ResidualStore::new(total, cfg.momentum))
+        .collect();
+    let policy = match cfg.method {
+        Method::IwpLayerwise => ThresholdPolicy::Layerwise(ThresholdCfg {
+            alpha: cfg.threshold,
+            beta: cfg.beta,
+            c: cfg.c,
+            ..Default::default()
+        }),
+        _ => ThresholdPolicy::Fixed(cfg.threshold),
+    };
+    let mut net = RingNet::new(nodes, cfg.link, 0.05);
+    let mut arena = Arena::for_nodes(nodes);
+    let mut prev_stats = vec![LayerStats::default(); layout.n_layers()];
+    let mut grads = vec![vec![0.0f32; total]; sim_nodes];
+    let mut reports = Vec::new();
+
+    for step in 0..steps {
+        let epoch = step / cfg.steps_per_epoch.max(1);
+        for (node, grad) in grads.iter_mut().enumerate() {
+            synth.gen_step_node(step, node, grad);
+            for v in grad.iter_mut() {
+                *v *= 0.85 + 0.3 * rngs[node].uniform();
+            }
+        }
+        let t0 = net.clock();
+        for (node, store) in stores.iter_mut().enumerate() {
+            store.accumulate(&grads[node]);
+        }
+        let thrs = policy.layer_thresholds(layout, &prev_stats, epoch, 1.0);
+        let broadcasters = ctl_rng.choose_distinct(sim_nodes, cfg.mask_nodes.min(sim_nodes));
+        let mut masks = Vec::new();
+        let mut new_stats = vec![LayerStats::default(); layout.n_layers()];
+        let mut u = vec![1.0f32; total];
+        let mut imp = vec![0.0f32; total];
+        for &b in &broadcasters {
+            let pending: Vec<f32> = stores[b].pending().to_vec();
+            let mut mask = BitMask::zeros(total);
+            for (li, layer) in layout.layers().iter().enumerate() {
+                let r = layer.range();
+                select::fill_u(&mut rngs[b], cfg.random_select, &mut u[..layer.size]);
+                let mut layer_mask = BitMask::zeros(layer.size);
+                let st = score_and_mask(
+                    &pending[r.clone()],
+                    &synth.weights[r.clone()],
+                    &u[..layer.size],
+                    thrs[li],
+                    EPS,
+                    &mut imp[..layer.size],
+                    &mut layer_mask,
+                );
+                for i in layer_mask.iter_set() {
+                    mask.set(r.start + i);
+                }
+                new_stats[li].merge(&st);
+            }
+            masks.push(mask);
+        }
+        prev_stats = new_stats;
+        let mask_refs: Vec<&BitMask> = masks.iter().collect();
+        let (shared, rep) = masked::allreduce_bytes_only_in(&mut net, &mask_refs, &mut arena);
+        for store in stores.iter_mut() {
+            let _ = store.take_masked(&shared);
+        }
+        net.advance(0.35);
+        reports.push((
+            rep.mean_bytes_per_node() as u64,
+            shared.density().to_bits(),
+            (net.clock() - t0).to_bits(),
+        ));
+    }
+    (reports, prev_stats)
+}
+
+fn engine_run(
+    cfg: &SimCfg,
+    layout: &ParamLayout,
+    steps: usize,
+) -> (Vec<(u64, u64, u64)>, Vec<LayerStats>) {
+    let mut engine = SimEngine::new(layout.clone(), cfg.clone());
+    let mut reports = Vec::new();
+    for s in 0..steps {
+        let r = engine.step(s);
+        reports.push((r.wire_bytes_per_node, r.density.to_bits(), r.seconds.to_bits()));
+    }
+    (reports, engine.prev_stats.clone())
+}
+
+fn stat_bits(s: &LayerStats) -> (u64, u64, u64, u64) {
+    (
+        s.sum.to_bits(),
+        s.sumsq.to_bits(),
+        s.n_selected.to_bits(),
+        s.n.to_bits(),
+    )
+}
+
+#[test]
+fn fused_engine_step_matches_multipass_reference_bitwise() {
+    let layout = layout();
+    for method in [Method::IwpFixed, Method::IwpLayerwise] {
+        for random_select in [true, false] {
+            let cfg = SimCfg {
+                nodes: 4,
+                method,
+                threshold: 0.04,
+                random_select,
+                seed: 91,
+                link: LinkSpec::gigabit_ethernet(),
+                parallelism: 1,
+                topology: TopoKind::Flat,
+                ..Default::default()
+            };
+            let (ref_reports, ref_stats) = multipass_reference(&cfg, &layout, 4);
+            let (eng_reports, eng_stats) = engine_run(&cfg, &layout, 4);
+            assert_eq!(
+                ref_reports, eng_reports,
+                "{method:?} random_select={random_select}: step reports diverged"
+            );
+            assert_eq!(ref_stats.len(), eng_stats.len());
+            for (li, (a, b)) in ref_stats.iter().zip(&eng_stats).enumerate() {
+                assert_eq!(
+                    stat_bits(a),
+                    stat_bits(b),
+                    "{method:?} random_select={random_select}: layer {li} stats diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_engine_is_bit_identical_across_parallelism() {
+    // The §4 contract survives the fusion: fused scoring fans out per
+    // broadcaster node with cloned-out RNG streams, so any executor
+    // width replays the sequential reports exactly.
+    let layout = layout();
+    for method in [Method::IwpFixed, Method::IwpLayerwise] {
+        let cfg = |w: usize| SimCfg {
+            nodes: 4,
+            method,
+            threshold: 0.04,
+            seed: 23,
+            link: LinkSpec::gigabit_ethernet(),
+            parallelism: w,
+            topology: TopoKind::Flat,
+            ..Default::default()
+        };
+        let (seq, seq_stats) = engine_run(&cfg(1), &layout, 3);
+        for w in [2usize, 4] {
+            let (par, par_stats) = engine_run(&cfg(w), &layout, 3);
+            assert_eq!(seq, par, "{method:?} w={w}");
+            for (a, b) in seq_stats.iter().zip(&par_stats) {
+                assert_eq!(stat_bits(a), stat_bits(b), "{method:?} w={w}");
+            }
+        }
+    }
+}

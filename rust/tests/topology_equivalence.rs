@@ -18,7 +18,7 @@
 use ringiwp::compress::Method;
 use ringiwp::exp::simrun::{SimCfg, SimEngine};
 use ringiwp::model::{LayerKind, ParamLayout};
-use ringiwp::net::{CostModel, LinkSpec, RingNet, TopoKind, Topology};
+use ringiwp::net::{CostModel, LinkSpec, PipeInner, RingNet, TopoKind, Topology};
 use ringiwp::ring::{self, Arena, Executor, ReduceReport};
 use ringiwp::sparse::{BitMask, SparseVec};
 use ringiwp::util::rng::Rng;
@@ -478,6 +478,214 @@ fn hier_group_one_degenerates_to_the_flat_ring() {
     }
 }
 
+// ---- the layer-pipelined wrapper (DESIGN.md §11) -----------------------
+
+/// Pipeline variants the dedicated sweeps cover: every base topology,
+/// serial (`chunks = 1`) and genuinely chunked.
+fn pipeline_kinds() -> Vec<TopoKind> {
+    let mut out = Vec::new();
+    for inner in [PipeInner::Flat, PipeInner::Hier { group: 3 }, PipeInner::Tree] {
+        for chunks in [1usize, 3] {
+            out.push(TopoKind::Pipeline { chunks, inner });
+        }
+    }
+    out
+}
+
+#[test]
+fn pipeline_values_match_wrapped_topology_bitwise() {
+    // The §11 contract: `pipeline:<k>` reduces to the same values as its
+    // wrapped topology on exactly-representable payloads (per-chunk sums
+    // add the same node values per coordinate), at every parallelism.
+    for n in [6usize, 9] {
+        let len = 2003;
+        let mut rng = Rng::new(900 + n as u64);
+        let base = int_bufs(&mut rng, n, len);
+        let mut mask_a = BitMask::zeros(len);
+        let mut mask_b = BitMask::zeros(len);
+        for _ in 0..150 {
+            mask_a.set(rng.below(len));
+            mask_b.set(rng.below(len));
+        }
+        let values = int_bufs(&mut rng, n, len);
+        let refs: Vec<&[f32]> = values.iter().map(|v| v.as_slice()).collect();
+        let inputs = int_sparse(&mut rng, n, len, 0.05);
+        for kind in pipeline_kinds() {
+            let TopoKind::Pipeline { inner, .. } = kind else {
+                unreachable!()
+            };
+            let wrapped = inner.kind().build(n);
+            let pipe = kind.build(n);
+            // Wrapped-topology oracles (sequential).
+            let mut net_w = net(n);
+            let mut bufs_w = base.clone();
+            wrapped.dense(
+                &mut net_w,
+                &mut bufs_w,
+                &Executor::sequential(),
+                &mut Arena::for_nodes(n),
+            );
+            let mut net_m = net(n);
+            let (shared_w, summed_w, _) = wrapped.masked(
+                &mut net_m,
+                &[&mask_a, &mask_b],
+                &refs,
+                &Executor::sequential(),
+                &mut Arena::for_nodes(n),
+            );
+            let mut net_s = net(n);
+            let (sum_w, rep_sw) = wrapped.sparse(
+                &mut net_s,
+                &inputs,
+                &Executor::sequential(),
+                &mut Arena::for_nodes(n),
+            );
+            for w in WORKERS {
+                let ctx = format!("{} n={n} w={w}", kind.name());
+                let mut nw = net(n);
+                let mut bufs = base.clone();
+                pipe.dense(&mut nw, &mut bufs, &Executor::new(w), &mut Arena::for_nodes(n));
+                for (a, b) in bufs_w.iter().zip(&bufs) {
+                    assert_eq!(bits(a), bits(b), "{ctx}: dense values");
+                }
+                let mut nw = net(n);
+                let (shared, summed, rep) = pipe.masked(
+                    &mut nw,
+                    &[&mask_a, &mask_b],
+                    &refs,
+                    &Executor::new(w),
+                    &mut Arena::for_nodes(n),
+                );
+                assert_eq!(shared_w, shared, "{ctx}: shared mask");
+                assert_eq!(bits(&summed_w), bits(&summed), "{ctx}: masked sums");
+                assert_eq!(rep.density_per_hop.len(), pipe.reduce_hops(), "{ctx}");
+                // Per-node-support schedules delegate verbatim.
+                let mut nw = net(n);
+                let (sum_p, rep_sp) = pipe.sparse(
+                    &mut nw,
+                    &inputs,
+                    &Executor::new(w),
+                    &mut Arena::for_nodes(n),
+                );
+                assert_eq!(bits(&sum_w), bits(&sum_p), "{ctx}: sparse sums");
+                assert_eq!(rep_sw.bytes_per_node, rep_sp.bytes_per_node, "{ctx}: sparse bytes");
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_bytes_only_and_spread_match_exact_paths() {
+    for n in [5usize, 8] {
+        let len = 3000;
+        let mut rng = Rng::new(950 + n as u64);
+        let base = int_bufs(&mut rng, n, len);
+        let mut mask = BitMask::zeros(len);
+        for _ in 0..200 {
+            mask.set(rng.below(len));
+        }
+        let refs: Vec<&[f32]> = base.iter().map(|v| v.as_slice()).collect();
+        for kind in pipeline_kinds() {
+            let TopoKind::Pipeline { inner, .. } = kind else {
+                unreachable!()
+            };
+            let pipe = kind.build(n);
+            let ctx = format!("{} n={n}", kind.name());
+            // dense
+            let mut net_a = net(n);
+            let mut bufs = base.clone();
+            let rep_a = pipe.dense(
+                &mut net_a,
+                &mut bufs,
+                &Executor::sequential(),
+                &mut Arena::for_nodes(n),
+            );
+            let mut net_b = net(n);
+            let rep_b = pipe.dense_bytes_only(&mut net_b, len, &mut Arena::for_nodes(n));
+            assert_eq!(rep_a.bytes_per_node, rep_b.bytes_per_node, "{ctx}: dense");
+            assert_eq!(rep_a.seconds.to_bits(), rep_b.seconds.to_bits(), "{ctx}");
+            assert_eq!(net_a.rounds(), net_b.rounds(), "{ctx}");
+            // masked
+            let mut net_c = net(n);
+            let (shared_c, _, rep_c) = pipe.masked(
+                &mut net_c,
+                &[&mask],
+                &refs,
+                &Executor::sequential(),
+                &mut Arena::for_nodes(n),
+            );
+            let mut net_d = net(n);
+            let (shared_d, rep_d) =
+                pipe.masked_bytes_only(&mut net_d, &[&mask], &mut Arena::for_nodes(n));
+            assert_eq!(shared_c, shared_d, "{ctx}: masked mask");
+            assert_eq!(rep_c.bytes_per_node, rep_d.bytes_per_node, "{ctx}: masked");
+            assert_eq!(rep_c.seconds.to_bits(), rep_d.seconds.to_bits(), "{ctx}");
+            // blob spread delegates to the wrapped topology verbatim.
+            let wrapped = inner.kind().build(n);
+            for k in [1usize, 3] {
+                let mut net_e = net(n);
+                let rep_e = pipe.spread_bytes(&mut net_e, 777, k, &mut Arena::for_nodes(n));
+                let mut net_f = net(n);
+                let rep_f = wrapped.spread_bytes(&mut net_f, 777, k, &mut Arena::for_nodes(n));
+                assert_eq!(rep_e.bytes_per_node, rep_f.bytes_per_node, "{ctx} k={k}");
+                assert_eq!(rep_e.seconds.to_bits(), rep_f.seconds.to_bits(), "{ctx} k={k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_schedules_have_zero_steady_state_reallocations() {
+    let n = 8;
+    let len = 4000;
+    let mut rng = Rng::new(57);
+    let base = int_bufs(&mut rng, n, len);
+    let mut mask = BitMask::zeros(len);
+    for _ in 0..200 {
+        mask.set(rng.below(len));
+    }
+    let refs: Vec<&[f32]> = base.iter().map(|v| v.as_slice()).collect();
+    let exec = Executor::sequential();
+    for kind in [
+        TopoKind::Pipeline {
+            chunks: 4,
+            inner: PipeInner::Flat,
+        },
+        TopoKind::Pipeline {
+            chunks: 3,
+            inner: PipeInner::Hier { group: 3 },
+        },
+    ] {
+        let topo = kind.build(n);
+        let mut arena = Arena::for_nodes(n);
+        let run_all = |arena: &mut Arena| {
+            let mut nw = net(n);
+            let mut bufs = base.clone();
+            topo.dense(&mut nw, &mut bufs, &exec, arena);
+            let mut nw = net(n);
+            topo.dense_bytes_only(&mut nw, len, arena);
+            let mut nw = net(n);
+            topo.masked(&mut nw, &[&mask], &refs, &exec, arena);
+            let mut nw = net(n);
+            topo.masked_bytes_only(&mut nw, &[&mask], arena);
+            let mut nw = net(n);
+            topo.spread_bytes(&mut nw, 999, 3, arena);
+        };
+        run_all(&mut arena); // warm-up
+        let warm = arena.grows();
+        assert!(warm > 0, "{}: warm-up must populate the arena", kind.name());
+        for pass in 0..3 {
+            run_all(&mut arena);
+            assert_eq!(
+                arena.grows(),
+                warm,
+                "{}: steady-state pass {pass} reallocated",
+                kind.name()
+            );
+        }
+    }
+}
+
 // ---- arena zero-alloc steady state on the new paths --------------------
 
 #[test]
@@ -568,7 +776,14 @@ fn run_engine(
 
 #[test]
 fn sim_engine_is_bit_identical_across_parallelism_on_every_topology() {
-    for topology in [TopoKind::Hier { group: 3 }, TopoKind::Tree] {
+    for topology in [
+        TopoKind::Hier { group: 3 },
+        TopoKind::Tree,
+        TopoKind::Pipeline {
+            chunks: 3,
+            inner: PipeInner::Flat,
+        },
+    ] {
         for method in [
             Method::Baseline,
             Method::TernGrad,
