@@ -26,7 +26,7 @@ fn sim_step_median_ns(layout_name: &str, nodes: usize, workers: usize) -> f64 {
     let layout = zoo::by_name(layout_name).expect("zoo layout");
     let cfg = SimCfg {
         nodes,
-        method: Method::IwpFixed,
+        method: Method::IwpFixed.spec(),
         link: LinkSpec::gigabit_ethernet(),
         parallelism: workers,
         seed: 42,

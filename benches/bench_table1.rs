@@ -1,21 +1,16 @@
-//! End-to-end per-step cost of every Table-I method on the ResNet50
-//! inventory (the workload the paper's evaluation runs) — one bench per
-//! paper table row family, plus the Fig. 7/8 trace workload.
+//! End-to-end per-step cost of every registered compression pipeline on
+//! the ResNet50 inventory (the workload the paper's evaluation runs) —
+//! one bench per paper table row family plus the two new stage
+//! compositions (DESIGN.md §12), and the Fig. 7/8 trace workload.
 
-use ringiwp::compress::Method;
+use ringiwp::exp::bench::step_specs;
 use ringiwp::exp::simrun::{SimCfg, SimEngine};
 use ringiwp::model::zoo;
 use ringiwp::util::timer::bench;
 
 fn main() {
-    println!("bench_table1 — SimEngine step time per method (ResNet50, 16-node ring)\n");
-    for method in [
-        Method::Baseline,
-        Method::TernGrad,
-        Method::IwpFixed,
-        Method::IwpLayerwise,
-        Method::Dgc,
-    ] {
+    println!("bench_table1 — SimEngine step time per pipeline (ResNet50, 16-node ring)\n");
+    for method in step_specs() {
         let cfg = SimCfg {
             nodes: 16,
             method,

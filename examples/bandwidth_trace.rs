@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     for method in [Method::Baseline, Method::IwpFixed] {
         let cfg = SimCfg {
             nodes,
-            method,
+            method: method.spec(),
             seed,
             ..Default::default()
         };

@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = Config {
         nodes: 8,
         model: "mlp".into(),
-        method: Method::IwpLayerwise,
+        method: Method::IwpLayerwise.spec(),
         steps: 60,
         seed: 42,
         ..Config::default()

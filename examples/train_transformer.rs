@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let cfg = Config {
         model: "tfm_tiny".into(),
-        method: Method::IwpLayerwise,
+        method: Method::IwpLayerwise.spec(),
         nodes: 4,
         steps: 300,
         lr: 0.08,        // stable for plain SGD + sparse updates at this scale

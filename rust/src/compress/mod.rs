@@ -14,18 +14,31 @@
 //!   (DESIGN.md §11) — the engines' hot path.
 //! * `clip` / `warmup` — DGC-inherited tricks the paper also applies.
 //! * `terngrad` / `dgc` — the baselines the paper compares against.
+//! * `spec` / `pipeline` — the compressor strategy subsystem
+//!   (DESIGN.md §12): a string-spec grammar naming every point in the
+//!   scoring × policy × selection × store × quantization family, and
+//!   the [`Compressor`] trait both engines reduce through. The legacy
+//!   [`Method`] enum survives as the Table-I alias layer; each value
+//!   maps to a canonical spec ([`Method::spec`]) that runs
+//!   bit-identically to the pre-refactor engines.
 
 pub mod clip;
 pub mod dgc;
 pub mod fuse;
 pub mod importance;
+pub mod pipeline;
 pub mod residual;
 pub mod select;
+pub mod spec;
 pub mod terngrad;
 pub mod threshold;
 pub mod warmup;
 
-/// The training methods of Table I (plus DGC for the §II density claim).
+pub use pipeline::{Compressor, SimCtx, StageCfg, TrainCtx, WireOutcome};
+pub use spec::{DgcSelect, IwpPolicy, MethodSpec, SpecHead};
+
+/// The training methods of Table I (plus DGC for the §II density claim)
+/// — the legacy alias layer over the spec grammar (`compress::spec`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
     /// Dense synchronous SGD over ring all-reduce.
@@ -86,6 +99,20 @@ impl Method {
             Method::IwpLayerwise,
             Method::Dgc,
         ]
+    }
+
+    /// The canonical [`MethodSpec`] this legacy value maps to
+    /// (`baseline -> dense`, `dgc -> dgc:topk`, …) — pinned bit-for-bit
+    /// against the pre-refactor engines by
+    /// `rust/tests/compressor_equivalence.rs`.
+    pub fn spec(self) -> MethodSpec {
+        MethodSpec::bare(match self {
+            Method::Baseline => SpecHead::Dense,
+            Method::TernGrad => SpecHead::Terngrad,
+            Method::IwpFixed => SpecHead::Iwp(IwpPolicy::Fixed),
+            Method::IwpLayerwise => SpecHead::Iwp(IwpPolicy::Layerwise),
+            Method::Dgc => SpecHead::Dgc(DgcSelect::TopK),
+        })
     }
 }
 

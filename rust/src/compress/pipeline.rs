@@ -1,0 +1,1119 @@
+//! The `Compressor` strategy subsystem (DESIGN.md §12).
+//!
+//! PR 3 turned three hard-coded networks into the composable
+//! `net::topo::Topology` trait; this module does the same for
+//! compression. Every Table-I method — and every new stage composition
+//! the spec grammar (`compress::spec`) can name — is a [`Compressor`]:
+//! per-node state (residual stores, DGC states, trailing layer stats)
+//! plus two entry points, one per engine:
+//!
+//! * [`Compressor::sim_step`] — the accounting path (`exp::simrun`):
+//!   exact wire/payload/density bookkeeping over the virtual net, no
+//!   parameter updates.
+//! * [`Compressor::train_reduce`] — the value-carrying path
+//!   (`coordinator::Trainer`): reduce real gradients and update the
+//!   parameters/optimizer.
+//!
+//! Both paths are **arena-threaded** (zero steady-state allocation in
+//! the *transport* — `Arena::grows()` stays flat, DESIGN.md §9; the
+//! per-node support-synthesis and `+tern` scratch still allocate
+//! method-local buffers per step, exactly like the legacy DGC arm did)
+//! and **executor-parallel** under the §4 bit-identical contract:
+//! per-node state mutates only inside disjoint executor closures,
+//! cross-node reductions happen on the coordinating thread in node
+//! order. The five legacy `Method` values run
+//! bit-identically to the pre-refactor engines
+//! (`rust/tests/compressor_equivalence.rs` pins them against an inline
+//! legacy reference, and the existing parallel/topology/fused
+//! equivalence suites keep passing unchanged).
+//!
+//! Stage composition: a spec head picks the transport class, stages
+//! plug in along it —
+//!
+//! ```text
+//!   warmup schedule ──► threshold policy ──► scoring + selection ──► store ──► wire
+//!   (Warmup)            (ThresholdPolicy:     (fuse::score_select_     (Residual-  (Topology::
+//!                        fixed | layerwise |   compact / L1 kernel /    Store /     masked | sparse |
+//!                        vargated)             Dgc top-k)               Dgc)        spread | dense)
+//! ```
+//!
+//! so e.g. `dgc:layerwise` is the Eq. 4 threshold policy composed with
+//! the per-node (DGC) transport, and `iwp:fixed+tern` appends ternary
+//! quantization to the shared-mask payload.
+
+use super::dgc::Dgc;
+use super::fuse;
+use super::importance::{LayerStats, EPS};
+use super::residual::ResidualStore;
+use super::select;
+use super::spec::{DgcSelect, IwpPolicy, MethodSpec, SpecHead};
+use super::terngrad::{TernBlob, TernGrad};
+use super::threshold::{ThresholdCfg, ThresholdPolicy};
+use super::warmup::Warmup;
+use crate::model::ParamLayout;
+use crate::net::{RingNet, Topology};
+use crate::optim::MomentumSgd;
+use crate::ring::{Arena, Executor};
+use crate::runtime::ImportanceKernel;
+use crate::sparse::{wire_bytes, BitMask, SparseVec, WireFormat};
+use crate::util::rng::Rng;
+
+/// What one compression + reduce step put on the wire — the engines
+/// turn this into their accounting rows (`CompressionAccount`).
+#[derive(Debug, Clone, Copy)]
+pub struct WireOutcome {
+    /// Mean wire bytes transmitted per node this step.
+    pub wire_bytes_per_node: u64,
+    /// Paper-metric payload bytes: `size[encode(sparse(G))]` per node.
+    pub payload_bytes: u64,
+    /// Transmitted gradient density this step.
+    pub density: f64,
+    /// Selected support size (own selection for per-node methods, the
+    /// shared support for masked methods, the full coordinate count for
+    /// dense paths) — the `CostModel` cross-validation input.
+    pub support_nnz: u64,
+    /// Virtual seconds the wire phase occupied (net-clock delta over
+    /// this step's rounds, excluding the engines' compute gap) — equals
+    /// the matching `CostModel` prediction bit-for-bit on a fresh clock.
+    pub wire_seconds: f64,
+}
+
+/// Per-step context of the accounting engine (`exp::simrun::SimEngine`).
+pub struct SimCtx<'a> {
+    /// Epoch index of this step (drives warm-up / density schedules).
+    pub epoch: usize,
+    /// Ring size N (node *states* may be capped below this — see
+    /// `SimEngine`'s exchangeable-node argument).
+    pub nodes: usize,
+    /// Model layout under simulation.
+    pub layout: &'a ParamLayout,
+    /// Synthetic weight buffer importance is scored against.
+    pub weights: &'a [f32],
+    /// Materialized per-node gradients (first `grads_needed` are live).
+    pub grads: &'a [Vec<f32>],
+    /// The virtual network (byte counters, clock).
+    pub net: &'a mut RingNet,
+    /// Communication topology of the reduce.
+    pub topo: &'a dyn Topology,
+    /// Node-parallel executor (§4 bit-identical contract).
+    pub exec: &'a Executor,
+    /// Staging arena for the transport hot paths.
+    pub arena: &'a mut Arena,
+    /// Per-node RNG streams (all N; streams beyond the materialized
+    /// states feed exchangeable-support synthesis).
+    pub rngs: &'a mut [Rng],
+    /// Control stream (broadcaster draws, Alg. 1 line 6).
+    pub ctl_rng: &'a mut Rng,
+}
+
+/// Per-step context of the training engine (`coordinator::Trainer`).
+pub struct TrainCtx<'a> {
+    /// Epoch index of this step.
+    pub epoch: usize,
+    /// Learning rate at this step.
+    pub lr: f32,
+    /// Ring size N (== materialized node states in the trainer).
+    pub nodes: usize,
+    /// Model layout under training.
+    pub layout: &'a ParamLayout,
+    /// Flat parameter buffer (replicas are identical).
+    pub params: &'a mut [f32],
+    /// Per-node local gradients; dense reduces mutate them in place.
+    pub grads: &'a mut [Vec<f32>],
+    /// The virtual network.
+    pub net: &'a mut RingNet,
+    /// Communication topology of the reduce.
+    pub topo: &'a dyn Topology,
+    /// Node-parallel executor.
+    pub exec: &'a Executor,
+    /// Staging arena.
+    pub arena: &'a mut Arena,
+    /// Per-node RNG streams.
+    pub node_rngs: &'a mut [Rng],
+    /// Control stream (broadcaster draws).
+    pub ctl_rng: &'a mut Rng,
+    /// Global optimizer (momentum only on dense paths — Eq. 1 vs Eq. 3).
+    pub opt: &'a mut MomentumSgd,
+    /// The PJRT L1 importance kernel (loaded iff the spec scores with
+    /// it — `MethodSpec::needs_kernel`).
+    pub kernel: Option<&'a mut ImportanceKernel>,
+}
+
+/// One compression pipeline: per-node state behind the two engine entry
+/// points. See the module docs for the contract; build instances with
+/// [`build`].
+pub trait Compressor: Send {
+    /// The validated spec this pipeline was built from.
+    fn spec(&self) -> MethodSpec;
+
+    /// How many of the engine's `materialized` per-node gradient
+    /// buffers this step consumes (the 25M+-param fills dominate wall
+    /// time, so engines only synthesize what the pipeline reads).
+    fn grads_needed(&self, materialized: usize) -> usize;
+
+    /// Accounting-only step over the virtual net (no value movement
+    /// beyond what exact byte accounting needs).
+    fn sim_step(&mut self, ctx: &mut SimCtx<'_>) -> WireOutcome;
+
+    /// Value-carrying reduce + parameter update.
+    fn train_reduce(&mut self, ctx: &mut TrainCtx<'_>) -> anyhow::Result<WireOutcome>;
+
+    /// Node `node`'s accumulated pending update (importance-snapshot
+    /// hook); `None` when the pipeline keeps no residual state.
+    fn pending(&self, node: usize) -> Option<&[f32]>;
+
+    /// Trailing per-layer importance stats (Eq. 4 controller input,
+    /// Fig. 4 data); empty when the pipeline does not score.
+    fn prev_stats(&self) -> &[LayerStats];
+}
+
+/// Build-time knobs a pipeline draws from the engine's config (the
+/// spec's stage overrides apply on top — see [`build`]).
+#[derive(Debug, Clone, Copy)]
+pub struct StageCfg {
+    /// Ring size N.
+    pub nodes: usize,
+    /// Materialized node states (N for the trainer; `SimEngine` caps at
+    /// its exchangeable-node limit).
+    pub state_nodes: usize,
+    /// Importance threshold (α for layer-adaptive policies).
+    pub threshold: f32,
+    /// Eq. 4 dispersion gain β.
+    pub beta: f32,
+    /// Eq. 4 crossover C.
+    pub c: f32,
+    /// Number of random mask-broadcast nodes r (Alg. 1).
+    pub mask_nodes: usize,
+    /// Randomized selection default (spec `+sel`/`+nosel` overrides).
+    pub random_select: bool,
+    /// Residual-store momentum (spec `+nomcorr` zeroes it).
+    pub momentum: f32,
+    /// DGC baseline per-node density.
+    pub dgc_density: f64,
+    /// Warm-up epochs default (spec `+warmup:<e>` overrides).
+    pub warmup_epochs: usize,
+}
+
+impl StageCfg {
+    fn effective_warmup(&self, spec: &MethodSpec) -> (usize, Warmup) {
+        let epochs = spec.warmup.unwrap_or(self.warmup_epochs);
+        let warmup = if epochs > 0 {
+            Warmup {
+                epochs,
+                start_mult: 0.1,
+            }
+        } else {
+            Warmup::none()
+        };
+        (epochs, warmup)
+    }
+
+    fn store_momentum(&self, spec: &MethodSpec) -> f32 {
+        if spec.mcorr == Some(false) {
+            0.0
+        } else {
+            self.momentum
+        }
+    }
+}
+
+/// Build the [`Compressor`] a validated spec names, with per-node state
+/// sized for `cfg.state_nodes`.
+pub fn build(spec: MethodSpec, cfg: &StageCfg, layout: &ParamLayout) -> Box<dyn Compressor> {
+    match spec.head {
+        SpecHead::Dense => Box::new(DenseCompressor { spec }),
+        SpecHead::Terngrad => Box::new(TernaryCompressor { spec }),
+        SpecHead::Iwp(policy) => Box::new(SharedMaskCompressor::new(spec, policy, cfg, layout)),
+        SpecHead::Dgc(sel) => Box::new(PerNodeCompressor::new(spec, sel, cfg, layout)),
+    }
+}
+
+/// Reusable per-node slot for the fused scoring fan-outs (DESIGN.md
+/// §11): a cloned RNG stream, the node's selection mask, and its
+/// per-layer stats rows. `bcast` marks shared-mask broadcasters.
+struct NodeScratch {
+    bcast: bool,
+    rng: Rng,
+    mask: BitMask,
+    stats: Vec<LayerStats>,
+}
+
+fn node_scratch(n: usize, total: usize, layers: usize) -> Vec<NodeScratch> {
+    (0..n)
+        .map(|_| NodeScratch {
+            bcast: false,
+            rng: Rng::new(0),
+            mask: BitMask::zeros(total),
+            stats: Vec::with_capacity(layers),
+        })
+        .collect()
+}
+
+/// Exchangeable stand-in supports for the node states beyond the
+/// accounting engine's materialized cap: one random k-subset per
+/// remaining RNG stream (supports across disjoint data shards are
+/// near-independent — the same assumption behind the paper's 1%->2%
+/// worst-case argument). Shared by both `dgc:*` selection variants.
+fn exchangeable_supports(
+    exec: &Executor,
+    rngs: &mut [Rng],
+    k: usize,
+    total: usize,
+) -> Vec<BitMask> {
+    exec.map_mut(rngs, |_, rng| {
+        let mut m = BitMask::zeros(total);
+        for _ in 0..k {
+            m.set(rng.below(total));
+        }
+        m
+    })
+}
+
+// ---- dense (baseline) --------------------------------------------------
+
+/// `dense`: synchronous SGD, full gradients on the wire.
+struct DenseCompressor {
+    spec: MethodSpec,
+}
+
+impl Compressor for DenseCompressor {
+    fn spec(&self) -> MethodSpec {
+        self.spec
+    }
+
+    fn grads_needed(&self, _materialized: usize) -> usize {
+        0
+    }
+
+    fn sim_step(&mut self, ctx: &mut SimCtx<'_>) -> WireOutcome {
+        // Account-only dense rounds under the configured topology
+        // (moving 61M f32 per node through the data path buys nothing
+        // here; bytes are exact). total/N is the exact per-node mean —
+        // for the flat ring it equals the paper's 2(N-1)/N · V
+        // reference.
+        let t0 = ctx.net.clock();
+        let total = ctx.layout.total_params();
+        let rep = ctx.topo.dense_bytes_only(ctx.net, total, ctx.arena);
+        WireOutcome {
+            wire_bytes_per_node: rep.total_bytes() / ctx.nodes as u64,
+            payload_bytes: ctx.layout.dense_bytes(),
+            density: 1.0,
+            support_nnz: total as u64,
+            wire_seconds: ctx.net.clock() - t0,
+        }
+    }
+
+    fn train_reduce(&mut self, ctx: &mut TrainCtx<'_>) -> anyhow::Result<WireOutcome> {
+        let t0 = ctx.net.clock();
+        let rep = ctx.topo.dense(ctx.net, ctx.grads, ctx.exec, ctx.arena);
+        let n = ctx.nodes as f32;
+        // grads[0] now holds the sum; the optimizer averages inline (one
+        // pass, no materialized average buffer — bit-identical).
+        ctx.opt.step_mean(ctx.params, &ctx.grads[0], n, ctx.lr);
+        Ok(WireOutcome {
+            wire_bytes_per_node: rep.mean_bytes_per_node() as u64,
+            payload_bytes: ctx.layout.dense_bytes(),
+            density: 1.0,
+            support_nnz: ctx.layout.total_params() as u64,
+            wire_seconds: ctx.net.clock() - t0,
+        })
+    }
+
+    fn pending(&self, _node: usize) -> Option<&[f32]> {
+        None
+    }
+
+    fn prev_stats(&self) -> &[LayerStats] {
+        &[]
+    }
+}
+
+// ---- terngrad ----------------------------------------------------------
+
+/// `terngrad`: per-layer ternary quantization, blobs spread whole.
+struct TernaryCompressor {
+    spec: MethodSpec,
+}
+
+impl Compressor for TernaryCompressor {
+    fn spec(&self) -> MethodSpec {
+        self.spec
+    }
+
+    fn grads_needed(&self, materialized: usize) -> usize {
+        // Blob sizes are shape-determined, so one representative
+        // encoding prices every node's blob.
+        materialized.min(1)
+    }
+
+    fn sim_step(&mut self, ctx: &mut SimCtx<'_>) -> WireOutcome {
+        let t0 = ctx.net.clock();
+        let n = ctx.nodes;
+        let t = TernGrad::encode(&ctx.grads[0], ctx.layout, &mut ctx.rngs[0]);
+        let blob = t.wire_bytes();
+        // Ternary values are not closed under addition, so no topology
+        // can scatter-REDUCE them — the quantized blobs must spread
+        // whole (every blob to every node). This is why quantization
+        // alone does not help rings (the paper's Sec. II point); the
+        // payload ratio below is TernGrad's native parameter-server
+        // number.
+        let rep = ctx.topo.spread_bytes(ctx.net, blob, n, ctx.arena);
+        WireOutcome {
+            wire_bytes_per_node: rep.total_bytes() / n as u64,
+            payload_bytes: blob,
+            density: 1.0,
+            support_nnz: ctx.layout.total_params() as u64,
+            wire_seconds: ctx.net.clock() - t0,
+        }
+    }
+
+    fn train_reduce(&mut self, ctx: &mut TrainCtx<'_>) -> anyhow::Result<WireOutcome> {
+        let t0 = ctx.net.clock();
+        let n = ctx.nodes;
+        // Encode per node in parallel (each node consumes only its own
+        // RNG stream), then decode + sum sequentially in node order —
+        // the same f32 addition order as the sequential loop — and
+        // spread the quantized blobs over the configured topology.
+        let encoded: Vec<TernGrad> = {
+            let grads: &[Vec<f32>] = ctx.grads;
+            let layout = ctx.layout;
+            ctx.exec.map_mut(ctx.node_rngs, |node, rng| {
+                TernGrad::encode(&grads[node], layout, rng)
+            })
+        };
+        let mut sum = vec![0.0f32; ctx.layout.total_params()];
+        for t in &encoded {
+            for (s, v) in sum.iter_mut().zip(t.decode(ctx.layout)) {
+                *s += v;
+            }
+        }
+        let rep = ctx
+            .topo
+            .spread_bytes(ctx.net, encoded[0].wire_bytes(), n, ctx.arena);
+        ctx.opt.step_mean(ctx.params, &sum, n as f32, ctx.lr);
+        Ok(WireOutcome {
+            wire_bytes_per_node: rep.total_bytes() / n as u64,
+            payload_bytes: encoded[0].wire_bytes(),
+            density: 1.0,
+            support_nnz: ctx.layout.total_params() as u64,
+            wire_seconds: ctx.net.clock() - t0,
+        })
+    }
+
+    fn pending(&self, _node: usize) -> Option<&[f32]> {
+        None
+    }
+
+    fn prev_stats(&self) -> &[LayerStats] {
+        &[]
+    }
+}
+
+// ---- shared-mask (IWP family) ------------------------------------------
+
+/// `iwp:*`: importance scoring × threshold policy × randomized
+/// broadcaster masks × residual store, over the shared-mask (Alg. 1)
+/// transport — optionally `+tern`-quantizing the compacted payload.
+struct SharedMaskCompressor {
+    spec: MethodSpec,
+    policy: ThresholdPolicy,
+    warmup: Warmup,
+    random_select: bool,
+    mask_nodes: usize,
+    stores: Vec<ResidualStore>,
+    prev_stats: Vec<LayerStats>,
+    thrs_buf: Vec<f32>,
+    /// Sim-side fused fan-out slots (cloned-out RNGs, masks, stats).
+    scratch: Vec<NodeScratch>,
+    /// Train-side kernel scratch, allocated on first `train_reduce`
+    /// (the accounting engine must not pay a model-sized `u` buffer).
+    u_buf: Vec<f32>,
+    mask_slots: Vec<BitMask>,
+    stats_scratch: Vec<LayerStats>,
+    /// `+tern` per-node compacted payloads (train side, lazy).
+    tern_payloads: Vec<Vec<f32>>,
+}
+
+impl SharedMaskCompressor {
+    fn new(spec: MethodSpec, policy: IwpPolicy, cfg: &StageCfg, layout: &ParamLayout) -> Self {
+        let total = layout.total_params();
+        let policy = match policy {
+            IwpPolicy::Fixed => ThresholdPolicy::Fixed(cfg.threshold),
+            IwpPolicy::Layerwise => ThresholdPolicy::Layerwise(ThresholdCfg {
+                alpha: cfg.threshold,
+                beta: cfg.beta,
+                c: cfg.c,
+                ..Default::default()
+            }),
+            IwpPolicy::VarGate { gate, boost } => ThresholdPolicy::VarGated {
+                alpha: cfg.threshold,
+                gate,
+                boost,
+            },
+        };
+        let (_, warmup) = cfg.effective_warmup(&spec);
+        SharedMaskCompressor {
+            policy,
+            warmup,
+            random_select: spec.random_select.unwrap_or(cfg.random_select),
+            mask_nodes: cfg.mask_nodes,
+            stores: (0..cfg.state_nodes)
+                .map(|_| ResidualStore::new(total, cfg.store_momentum(&spec)))
+                .collect(),
+            prev_stats: vec![LayerStats::default(); layout.n_layers()],
+            thrs_buf: Vec::with_capacity(layout.n_layers()),
+            scratch: node_scratch(cfg.state_nodes, total, layout.n_layers()),
+            u_buf: Vec::new(),
+            mask_slots: Vec::new(),
+            stats_scratch: Vec::new(),
+            tern_payloads: Vec::new(),
+            spec,
+        }
+    }
+
+    fn ensure_train_scratch(&mut self, total: usize, layers: usize) {
+        if self.u_buf.len() != total {
+            self.u_buf = vec![1.0; total];
+        }
+        let k = self.mask_nodes.min(self.stores.len());
+        if self.mask_slots.len() != k {
+            self.mask_slots = (0..k).map(|_| BitMask::zeros(total)).collect();
+        }
+        if self.stats_scratch.len() != layers {
+            self.stats_scratch = vec![LayerStats::default(); layers];
+        }
+    }
+
+    /// Mask spread + whole-blob spread of the `+tern` stage: OR the
+    /// broadcaster masks locally, spread them, then spread every node's
+    /// ternary-encoded compacted payload (not closed under addition —
+    /// no scatter-reduce). Returns `(shared, blob_bytes, total_bytes)`.
+    fn tern_wire(
+        &self,
+        ctx_net: &mut RingNet,
+        topo: &dyn Topology,
+        arena: &mut Arena,
+        mask_refs: &[&BitMask],
+        nodes: usize,
+        total: usize,
+    ) -> (BitMask, u64, u64) {
+        let mut shared = BitMask::zeros(total);
+        for m in mask_refs {
+            shared.or_assign(m);
+        }
+        let rep_mask = topo.spread_bytes(ctx_net, shared.wire_bytes(), mask_refs.len(), arena);
+        let blob = TernBlob::wire_bytes_for(shared.count());
+        let rep_blob = topo.spread_bytes(ctx_net, blob, nodes, arena);
+        (shared, blob, rep_mask.total_bytes() + rep_blob.total_bytes())
+    }
+}
+
+impl Compressor for SharedMaskCompressor {
+    fn spec(&self) -> MethodSpec {
+        self.spec
+    }
+
+    fn grads_needed(&self, materialized: usize) -> usize {
+        materialized
+    }
+
+    fn sim_step(&mut self, ctx: &mut SimCtx<'_>) -> WireOutcome {
+        let t0 = ctx.net.clock();
+        let total = ctx.layout.total_params();
+        let sim_nodes = self.stores.len();
+        let wmult = self.warmup.multiplier(ctx.epoch);
+        self.policy.layer_thresholds_into(
+            ctx.layout,
+            &self.prev_stats,
+            ctx.epoch,
+            wmult,
+            &mut self.thrs_buf,
+        );
+        // Broadcasters drawn from the materialized (exchangeable) node
+        // states (Alg. 1 line 6).
+        let broadcasters = ctx
+            .ctl_rng
+            .choose_distinct(sim_nodes, self.mask_nodes.min(sim_nodes));
+        // Fused single-pass fan-out (DESIGN.md §11): every node folds
+        // its gradient into its residual store; broadcaster nodes
+        // additionally score, select, and pack their mask in the *same*
+        // sweep. Broadcaster RNG streams are cloned out and written
+        // back, so cross-step evolution matches the multi-pass
+        // reference exactly.
+        for scr in self.scratch.iter_mut() {
+            scr.bcast = false;
+        }
+        for &b in &broadcasters {
+            self.scratch[b].bcast = true;
+            self.scratch[b].rng = ctx.rngs[b].clone();
+        }
+        {
+            let grads = ctx.grads;
+            let weights = ctx.weights;
+            let layout = ctx.layout;
+            let thrs: &[f32] = &self.thrs_buf;
+            let random_select = self.random_select;
+            ctx.exec.map_mut2(
+                &mut self.stores,
+                &mut self.scratch,
+                |node, store, scr| {
+                    if scr.bcast {
+                        fuse::score_select_compact(
+                            layout,
+                            thrs,
+                            weights,
+                            &grads[node],
+                            EPS,
+                            random_select,
+                            &mut scr.rng,
+                            store,
+                            &mut scr.mask,
+                            &mut scr.stats,
+                        );
+                    } else {
+                        store.accumulate(&grads[node]);
+                    }
+                },
+            );
+        }
+        // Write RNG streams back and merge stats in broadcaster order
+        // (the same f64 addition order as the reference).
+        for s in self.prev_stats.iter_mut() {
+            *s = LayerStats::default();
+        }
+        for &b in &broadcasters {
+            ctx.rngs[b] = self.scratch[b].rng.clone();
+            for (li, st) in self.scratch[b].stats.iter().enumerate() {
+                self.prev_stats[li].merge(st);
+            }
+        }
+        let mask_refs: Vec<&BitMask> = broadcasters
+            .iter()
+            .map(|&b| &self.scratch[b].mask)
+            .collect();
+        let (shared, wire, payload) = if self.spec.tern {
+            let (shared, blob, total_bytes) = self.tern_wire(
+                ctx.net,
+                ctx.topo,
+                ctx.arena,
+                &mask_refs,
+                ctx.nodes,
+                total,
+            );
+            (shared, total_bytes / ctx.nodes as u64, blob)
+        } else {
+            let (shared, rep) = ctx.topo.masked_bytes_only(ctx.net, &mask_refs, ctx.arena);
+            let nnz = shared.count();
+            let payload = wire_bytes(WireFormat::cheapest(total, nnz), total, nnz);
+            (shared, rep.mean_bytes_per_node() as u64, payload)
+        };
+        // Fused residual take: zero residual + velocity on the shared
+        // support in one sweep, no per-node Vec (the accounting engine
+        // discards the transmitted values).
+        let shared_ref = &shared;
+        ctx.exec.map_mut(&mut self.stores, |_, store| {
+            store.clear_masked(shared_ref);
+        });
+        WireOutcome {
+            wire_bytes_per_node: wire,
+            payload_bytes: payload,
+            density: shared.density(),
+            support_nnz: shared.count() as u64,
+            wire_seconds: ctx.net.clock() - t0,
+        }
+    }
+
+    fn train_reduce(&mut self, ctx: &mut TrainCtx<'_>) -> anyhow::Result<WireOutcome> {
+        let t0 = ctx.net.clock();
+        let n = ctx.nodes;
+        let total = ctx.layout.total_params();
+        // Residual accumulation (momentum correction) on every node,
+        // fanned out across the executor (disjoint per-node stores).
+        {
+            let grads: &[Vec<f32>] = ctx.grads;
+            ctx.exec.map_mut(&mut self.stores, |node, store| {
+                store.accumulate(&grads[node]);
+            });
+        }
+
+        // Per-layer thresholds from trailing stats, refilled into the
+        // reusable table.
+        let wmult = self.warmup.multiplier(ctx.epoch);
+        self.policy.layer_thresholds_into(
+            ctx.layout,
+            &self.prev_stats,
+            ctx.epoch,
+            wmult,
+            &mut self.thrs_buf,
+        );
+
+        // Random broadcaster nodes (Alg. 1 line 6).
+        let broadcasters = ctx.ctl_rng.choose_distinct(n, self.mask_nodes.min(n));
+        self.ensure_train_scratch(total, ctx.layout.n_layers());
+
+        // Each broadcaster scores its pending residuals with the L1
+        // kernel, layer by layer, packing selection bits straight into
+        // a reusable model-wide mask slot (DESIGN.md §11). This loop
+        // stays sequential: the PJRT kernel executes through a single
+        // loaded artifact handle. Stats accumulate in a scratch buffer
+        // so a kernel error mid-loop leaves `prev_stats` untouched.
+        for s in self.stats_scratch.iter_mut() {
+            *s = LayerStats::default();
+        }
+        let kernel = ctx
+            .kernel
+            .as_mut()
+            .expect("shared-mask specs always load the kernel");
+        for (bi, &b) in broadcasters.iter().enumerate() {
+            select::fill_u(&mut ctx.node_rngs[b], self.random_select, &mut self.u_buf);
+            let pending = self.stores[b].pending();
+            let weights: &[f32] = ctx.params;
+            let mask = &mut self.mask_slots[bi];
+            mask.clear_all();
+            for (li, layer) in ctx.layout.layers().iter().enumerate() {
+                let r = layer.range();
+                let st = kernel.score_into(
+                    &pending[r.clone()],
+                    &weights[r.clone()],
+                    &self.u_buf[r.clone()],
+                    self.thrs_buf[li],
+                    EPS,
+                    r.start,
+                    mask,
+                )?;
+                self.stats_scratch[li].merge(&st);
+            }
+        }
+        std::mem::swap(&mut self.prev_stats, &mut self.stats_scratch);
+
+        let inv_n = 1.0 / n as f32;
+        let outcome = if self.spec.tern {
+            // `+tern`: once the shared mask is known, each node's
+            // compacted residuals quantize ternary and spread whole
+            // (not closed under addition), decode-summing at full
+            // precision on every node.
+            let mask_refs: Vec<&BitMask> =
+                self.mask_slots[..broadcasters.len()].iter().collect();
+            let mut shared = BitMask::zeros(total);
+            for m in &mask_refs {
+                shared.or_assign(m);
+            }
+            // Fused take + compact per node (momentum factor masking).
+            if self.tern_payloads.len() != self.stores.len() {
+                self.tern_payloads = vec![Vec::new(); self.stores.len()];
+            }
+            let shared_ref = &shared;
+            ctx.exec.map_mut2(
+                &mut self.stores,
+                &mut self.tern_payloads,
+                |_, store, buf| {
+                    fuse::take_compact(store, shared_ref, buf);
+                },
+            );
+            let blobs: Vec<TernBlob> = {
+                let payloads: &[Vec<f32>] = &self.tern_payloads;
+                ctx.exec.map_mut(ctx.node_rngs, |node, rng| {
+                    TernBlob::encode(&payloads[node], rng)
+                })
+            };
+            let rep_mask =
+                ctx.topo
+                    .spread_bytes(ctx.net, shared.wire_bytes(), mask_refs.len(), ctx.arena);
+            let rep_blob =
+                ctx.topo
+                    .spread_bytes(ctx.net, blobs[0].wire_bytes(), n, ctx.arena);
+            // Decode + sum in node order, then the sparse update on the
+            // shared support with the 1/N scaling fused in.
+            let mut summed = vec![0.0f32; shared.count()];
+            for b in &blobs {
+                b.add_decoded_into(&mut summed);
+            }
+            ctx.opt
+                .step_sparse_mask(ctx.params, &shared, &summed, inv_n, ctx.lr);
+            WireOutcome {
+                wire_bytes_per_node: (rep_mask.total_bytes() + rep_blob.total_bytes())
+                    / n as u64,
+                payload_bytes: blobs[0].wire_bytes(),
+                density: shared.density(),
+                support_nnz: shared.count() as u64,
+                wire_seconds: ctx.net.clock() - t0,
+            }
+        } else {
+            // Shared-mask ring all-reduce (Alg. 1 lines 7–12).
+            let mask_refs: Vec<&BitMask> =
+                self.mask_slots[..broadcasters.len()].iter().collect();
+            let values: Vec<&[f32]> = self.stores.iter().map(|s| s.pending()).collect();
+            let (shared, summed, rep) =
+                ctx.topo
+                    .masked(ctx.net, &mask_refs, &values, ctx.exec, ctx.arena);
+            // Fused residual take (momentum factor masking): zero
+            // residual + velocity on the shared support in one sweep
+            // per node.
+            let shared_ref = &shared;
+            ctx.exec.map_mut(&mut self.stores, |_, store| {
+                store.clear_masked(shared_ref);
+            });
+            // Sparse SGD update on the shared support (Alg. 1 line 13).
+            ctx.opt
+                .step_sparse_mask(ctx.params, &shared, &summed, inv_n, ctx.lr);
+            let nnz = shared.count();
+            WireOutcome {
+                wire_bytes_per_node: rep.mean_bytes_per_node() as u64,
+                payload_bytes: wire_bytes(WireFormat::cheapest(total, nnz), total, nnz),
+                density: shared.density(),
+                support_nnz: nnz as u64,
+                wire_seconds: ctx.net.clock() - t0,
+            }
+        };
+        Ok(outcome)
+    }
+
+    fn pending(&self, node: usize) -> Option<&[f32]> {
+        self.stores.get(node).map(|s| s.pending())
+    }
+
+    fn prev_stats(&self) -> &[LayerStats] {
+        &self.prev_stats
+    }
+}
+
+// ---- per-node supports (DGC family) ------------------------------------
+
+/// `dgc:*`: per-node support selection (magnitude top-k or Eq. 4
+/// thresholded importance) over the sparse (densifying) transport.
+struct PerNodeCompressor {
+    spec: MethodSpec,
+    select: DgcSelect,
+    base_density: f64,
+    warmup_epochs: usize,
+    /// Top-k state (empty for the thresholded variant).
+    dgcs: Vec<Dgc>,
+    /// Thresholded-variant state (empty for top-k).
+    stores: Vec<ResidualStore>,
+    policy: ThresholdPolicy,
+    warmup: Warmup,
+    prev_stats: Vec<LayerStats>,
+    thrs_buf: Vec<f32>,
+    scratch: Vec<NodeScratch>,
+}
+
+impl PerNodeCompressor {
+    fn new(spec: MethodSpec, select: DgcSelect, cfg: &StageCfg, layout: &ParamLayout) -> Self {
+        let total = layout.total_params();
+        let (warmup_epochs, warmup) = cfg.effective_warmup(&spec);
+        let momentum = cfg.store_momentum(&spec);
+        let (dgcs, stores, scratch, prev_stats) = match select {
+            DgcSelect::TopK => (
+                (0..cfg.state_nodes)
+                    .map(|_| Dgc::new(total, cfg.dgc_density, momentum))
+                    .collect(),
+                Vec::new(),
+                Vec::new(),
+                Vec::new(),
+            ),
+            DgcSelect::Layerwise => (
+                Vec::new(),
+                (0..cfg.state_nodes)
+                    .map(|_| ResidualStore::new(total, momentum))
+                    .collect(),
+                node_scratch(cfg.state_nodes, total, layout.n_layers()),
+                vec![LayerStats::default(); layout.n_layers()],
+            ),
+        };
+        PerNodeCompressor {
+            spec,
+            select,
+            base_density: cfg.dgc_density,
+            warmup_epochs,
+            dgcs,
+            stores,
+            policy: ThresholdPolicy::Layerwise(ThresholdCfg {
+                alpha: cfg.threshold,
+                beta: cfg.beta,
+                c: cfg.c,
+                ..Default::default()
+            }),
+            warmup,
+            prev_stats,
+            thrs_buf: Vec::with_capacity(layout.n_layers()),
+            scratch,
+        }
+    }
+
+    /// Thresholded per-node selection: one fused sweep per node
+    /// (accumulate + score + hard-threshold select + stats), then the
+    /// node-order stats merge and momentum factor masking on each
+    /// node's *own* support. Shared by both engine paths.
+    fn thresholded_select(
+        &mut self,
+        epoch: usize,
+        layout: &ParamLayout,
+        weights: &[f32],
+        grads: &[Vec<f32>],
+        exec: &Executor,
+    ) {
+        let wmult = self.warmup.multiplier(epoch);
+        self.policy
+            .layer_thresholds_into(layout, &self.prev_stats, epoch, wmult, &mut self.thrs_buf);
+        {
+            let thrs: &[f32] = &self.thrs_buf;
+            exec.map_mut2(&mut self.stores, &mut self.scratch, |node, store, scr| {
+                fuse::score_select_compact(
+                    layout,
+                    thrs,
+                    weights,
+                    &grads[node],
+                    EPS,
+                    false, // per-node selection is a hard threshold
+                    &mut scr.rng,
+                    store,
+                    &mut scr.mask,
+                    &mut scr.stats,
+                );
+            });
+        }
+        for s in self.prev_stats.iter_mut() {
+            *s = LayerStats::default();
+        }
+        for scr in &self.scratch {
+            for (li, st) in scr.stats.iter().enumerate() {
+                self.prev_stats[li].merge(st);
+            }
+        }
+    }
+}
+
+impl Compressor for PerNodeCompressor {
+    fn spec(&self) -> MethodSpec {
+        self.spec
+    }
+
+    fn grads_needed(&self, materialized: usize) -> usize {
+        materialized
+    }
+
+    fn sim_step(&mut self, ctx: &mut SimCtx<'_>) -> WireOutcome {
+        let t0 = ctx.net.clock();
+        let total = ctx.layout.total_params();
+        match self.select {
+            DgcSelect::TopK => {
+                let density =
+                    Dgc::density_at_epoch(self.base_density, ctx.epoch, self.warmup_epochs);
+                let k = ((total as f64) * density).ceil() as usize;
+                let sim_nodes = self.dgcs.len();
+                // Real top-k supports for materialized nodes; the
+                // exchangeable stand-ins fill in beyond the cap. Both
+                // halves are per-node-independent, so they fan out.
+                let grads = ctx.grads;
+                let mut supports: Vec<BitMask> =
+                    ctx.exec.map_mut(&mut self.dgcs, |node, dgc| {
+                        dgc.density = density;
+                        let sv = dgc.step(&grads[node]);
+                        let mut m = BitMask::zeros(total);
+                        for &i in &sv.idx {
+                            m.set(i as usize);
+                        }
+                        m
+                    });
+                supports.extend(exchangeable_supports(
+                    ctx.exec,
+                    &mut ctx.rngs[sim_nodes..],
+                    k,
+                    total,
+                ));
+                let rep =
+                    ctx.topo
+                        .sparse_support(ctx.net, &supports, ctx.exec, ctx.arena);
+                // Paper-metric payload: each node's own encoded top-k.
+                let payload = wire_bytes(WireFormat::cheapest(total, k), total, k);
+                WireOutcome {
+                    wire_bytes_per_node: rep.mean_bytes_per_node() as u64,
+                    payload_bytes: payload,
+                    density: rep.density_per_hop.last().copied().unwrap_or(density),
+                    support_nnz: k as u64,
+                    wire_seconds: ctx.net.clock() - t0,
+                }
+            }
+            DgcSelect::Layerwise => {
+                let sim_nodes = self.stores.len();
+                self.thresholded_select(
+                    ctx.epoch,
+                    ctx.layout,
+                    ctx.weights,
+                    ctx.grads,
+                    ctx.exec,
+                );
+                // Momentum factor masking on each node's own support.
+                ctx.exec
+                    .map_mut2(&mut self.stores, &mut self.scratch, |_, store, scr| {
+                        store.clear_masked(&scr.mask);
+                    });
+                // Materialized supports travel as-is; exchangeable
+                // k-subsets (k = mean materialized nnz) stand in for
+                // the capped nodes, as in the top-k path.
+                let counts: Vec<usize> =
+                    self.scratch.iter().map(|s| s.mask.count()).collect();
+                let k = counts.iter().sum::<usize>() / sim_nodes.max(1);
+                let mut supports: Vec<BitMask> =
+                    self.scratch.iter().map(|s| s.mask.clone()).collect();
+                supports.extend(exchangeable_supports(
+                    ctx.exec,
+                    &mut ctx.rngs[sim_nodes..],
+                    k,
+                    total,
+                ));
+                let rep =
+                    ctx.topo
+                        .sparse_support(ctx.net, &supports, ctx.exec, ctx.arena);
+                let own = counts.first().copied().unwrap_or(0);
+                let payload = wire_bytes(WireFormat::cheapest(total, own), total, own);
+                WireOutcome {
+                    wire_bytes_per_node: rep.mean_bytes_per_node() as u64,
+                    payload_bytes: payload,
+                    density: rep
+                        .density_per_hop
+                        .last()
+                        .copied()
+                        .unwrap_or(own as f64 / total.max(1) as f64),
+                    support_nnz: own as u64,
+                    wire_seconds: ctx.net.clock() - t0,
+                }
+            }
+        }
+    }
+
+    fn train_reduce(&mut self, ctx: &mut TrainCtx<'_>) -> anyhow::Result<WireOutcome> {
+        let t0 = ctx.net.clock();
+        let n = ctx.nodes;
+        let total = ctx.layout.total_params();
+        let sparses: Vec<SparseVec> = match self.select {
+            DgcSelect::TopK => {
+                let density =
+                    Dgc::density_at_epoch(self.base_density, ctx.epoch, self.warmup_epochs);
+                let grads: &[Vec<f32>] = ctx.grads;
+                ctx.exec.map_mut(&mut self.dgcs, |node, dgc| {
+                    dgc.density = density;
+                    dgc.step(&grads[node])
+                })
+            }
+            DgcSelect::Layerwise => {
+                {
+                    let weights: &[f32] = ctx.params;
+                    let grads: &[Vec<f32>] = ctx.grads;
+                    self.thresholded_select(ctx.epoch, ctx.layout, weights, grads, ctx.exec);
+                }
+                let sparses: Vec<SparseVec> = self
+                    .stores
+                    .iter()
+                    .zip(&self.scratch)
+                    .map(|(store, scr)| SparseVec::from_mask(store.pending(), &scr.mask))
+                    .collect();
+                ctx.exec
+                    .map_mut2(&mut self.stores, &mut self.scratch, |_, store, scr| {
+                        store.clear_masked(&scr.mask);
+                    });
+                sparses
+            }
+        };
+        let (sum, rep) = ctx.topo.sparse(ctx.net, &sparses, ctx.exec, ctx.arena);
+        let inv_n = 1.0 / n as f32;
+        for (i, &v) in sum.iter().enumerate() {
+            if v != 0.0 {
+                ctx.params[i] -= ctx.lr * v * inv_n;
+            }
+        }
+        let k = sparses[0].nnz();
+        Ok(WireOutcome {
+            wire_bytes_per_node: rep.mean_bytes_per_node() as u64,
+            payload_bytes: wire_bytes(WireFormat::cheapest(total, k), total, k),
+            density: rep
+                .density_per_hop
+                .last()
+                .copied()
+                .unwrap_or(k as f64 / total.max(1) as f64),
+            support_nnz: k as u64,
+            wire_seconds: ctx.net.clock() - t0,
+        })
+    }
+
+    fn pending(&self, node: usize) -> Option<&[f32]> {
+        self.stores.get(node).map(|s| s.pending())
+    }
+
+    fn prev_stats(&self) -> &[LayerStats] {
+        &self.prev_stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Method;
+    use crate::model::LayerKind;
+
+    fn layout() -> ParamLayout {
+        ParamLayout::new(
+            "pipe_t",
+            vec![
+                ("conv".into(), vec![8, 4, 3], LayerKind::Conv),
+                ("fc".into(), vec![16, 4], LayerKind::Fc),
+            ],
+        )
+    }
+
+    fn cfg() -> StageCfg {
+        StageCfg {
+            nodes: 4,
+            state_nodes: 4,
+            threshold: 0.05,
+            beta: 0.002,
+            c: 1.0,
+            mask_nodes: 2,
+            random_select: true,
+            momentum: 0.9,
+            dgc_density: 0.01,
+            warmup_epochs: 0,
+        }
+    }
+
+    #[test]
+    fn every_registry_spec_builds() {
+        for e in crate::compress::spec::REGISTRY {
+            let spec = MethodSpec::parse(e.spec).unwrap();
+            let c = build(spec, &cfg(), &layout());
+            assert_eq!(c.spec(), spec, "{}", e.spec);
+        }
+    }
+
+    #[test]
+    fn grads_needed_matches_transport_class() {
+        let l = layout();
+        assert_eq!(build(Method::Baseline.spec(), &cfg(), &l).grads_needed(4), 0);
+        assert_eq!(build(Method::TernGrad.spec(), &cfg(), &l).grads_needed(4), 1);
+        assert_eq!(build(Method::IwpFixed.spec(), &cfg(), &l).grads_needed(4), 4);
+        assert_eq!(build(Method::Dgc.spec(), &cfg(), &l).grads_needed(4), 4);
+    }
+
+    #[test]
+    fn stage_overrides_flow_into_state() {
+        let l = layout();
+        // +nomcorr zeroes the residual-store momentum: after one
+        // accumulate of g the pending value is g (vs g with momentum
+        // too on step one — observable on step two).
+        let c = build(
+            MethodSpec::parse("iwp:fixed+nomcorr").unwrap(),
+            &cfg(),
+            &l,
+        );
+        assert!(c.pending(0).is_some());
+        // Dense/ternary pipelines keep no residual state.
+        assert!(build(Method::Baseline.spec(), &cfg(), &l).pending(0).is_none());
+        assert!(build(Method::TernGrad.spec(), &cfg(), &l).pending(0).is_none());
+        // Scoring pipelines expose trailing stats rows, one per layer
+        // (after the first step; initialized to defaults).
+        let c = build(MethodSpec::parse("dgc:layerwise").unwrap(), &cfg(), &l);
+        assert_eq!(c.prev_stats().len(), l.n_layers());
+        let c = build(Method::Dgc.spec(), &cfg(), &l);
+        assert!(c.prev_stats().is_empty());
+    }
+}

@@ -1,0 +1,504 @@
+//! Method-spec grammar and registry (DESIGN.md §12).
+//!
+//! The paper's IWP method is one point in a family — scoring × threshold
+//! policy × selection × residual store × optional quantization. This
+//! module names every point in that family with a string spec, mirroring
+//! the topology grammar (`net::topo::TopoKind::parse`):
+//!
+//! ```text
+//! <head>[+<stage>]*
+//!
+//! head  := dense | terngrad
+//!        | iwp:fixed | iwp:layerwise | iwp:vargate[:<gate>[:<boost>]]
+//!        | dgc:topk  | dgc:layerwise
+//! stage := warmup:<epochs> | mcorr | nomcorr | sel | nosel | tern
+//! ```
+//!
+//! Every legacy `Method` enum value maps to a canonical spec
+//! ([`super::Method::spec`]) and runs bit-identically to the
+//! pre-refactor engine (`rust/tests/compressor_equivalence.rs`). The
+//! CLI flag (`--method`), the config-file key (`method = …`), and the
+//! `RINGIWP_METHOD` environment default all route through the single
+//! validated entry point [`MethodSpec::parse`].
+
+use super::Method;
+
+/// Default var/mean gate of `iwp:vargate` (trailing dispersion above
+/// this marks a layer as noisy — Tsuzuku et al., 1802.06058 adapted to
+/// trailing layer stats).
+pub const VARGATE_GATE: f32 = 1.0;
+/// Default threshold boost `iwp:vargate` applies to noisy layers.
+pub const VARGATE_BOOST: f32 = 4.0;
+
+/// Threshold policy of the shared-mask (IWP) family.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum IwpPolicy {
+    /// One global threshold (Table I "Fix Threshold").
+    Fixed,
+    /// The Eq. 4 per-layer controller.
+    Layerwise,
+    /// Variance-gated step rule: layers whose trailing var/mean exceeds
+    /// `gate` compress `boost`× harder (`iwp:vargate[:g[:b]]`).
+    VarGate {
+        /// Trailing var/mean above which a layer counts as noisy.
+        gate: f32,
+        /// Threshold multiplier applied to noisy layers.
+        boost: f32,
+    },
+}
+
+/// Per-node support-selection rule of the DGC family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DgcSelect {
+    /// Magnitude top-k at the configured density (the legacy baseline).
+    TopK,
+    /// Importance over Eq. 4 layerwise thresholds — IWP scoring on DGC
+    /// transport (per-node masks, densifies on rings).
+    Layerwise,
+}
+
+/// Head of a method spec: scoring × selection × transport class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SpecHead {
+    /// Dense synchronous SGD — full gradients on the wire.
+    Dense,
+    /// TernGrad ternary quantization; blobs spread whole.
+    Terngrad,
+    /// Shared-mask importance pruning (Algorithm 1 transport).
+    Iwp(IwpPolicy),
+    /// Per-node-support selection (DGC transport).
+    Dgc(DgcSelect),
+}
+
+/// A fully parsed, validated compression-pipeline spec: one head plus
+/// stage overrides. Built only through [`MethodSpec::parse`] or
+/// [`super::Method::spec`], so an in-hand value is always valid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MethodSpec {
+    /// Scoring/selection/transport family.
+    pub head: SpecHead,
+    /// `+warmup:<epochs>` — overrides the config's warm-up epochs.
+    pub warmup: Option<usize>,
+    /// `+mcorr` / `+nomcorr` — momentum-corrected residual store.
+    /// `None` means the default (on for sparsifying heads); parse
+    /// normalizes a redundant `+mcorr` back to `None`.
+    pub mcorr: Option<bool>,
+    /// `+sel` / `+nosel` — randomized-selection override (`None` defers
+    /// to the config's `random_select`).
+    pub random_select: Option<bool>,
+    /// `+tern` — ternary-quantize the compacted shared-mask payload;
+    /// the quantized blobs spread whole (not closed under addition).
+    pub tern: bool,
+}
+
+/// One row of the spec registry (`ringiwp methods`).
+#[derive(Debug, Clone, Copy)]
+pub struct SpecEntry {
+    /// Canonical spec string (re-parseable).
+    pub spec: &'static str,
+    /// Legacy `Method` alias, if this head replaces one.
+    pub legacy: Option<&'static str>,
+    /// One-line description.
+    pub desc: &'static str,
+}
+
+/// Registered heads, in `ringiwp methods` display order.
+pub const REGISTRY: [SpecEntry; 7] = [
+    SpecEntry {
+        spec: "dense",
+        legacy: Some("baseline"),
+        desc: "dense synchronous SGD; full gradients on the wire",
+    },
+    SpecEntry {
+        spec: "terngrad",
+        legacy: Some("terngrad"),
+        desc: "ternary quantization; blobs spread whole (Wen et al. 2017)",
+    },
+    SpecEntry {
+        spec: "iwp:fixed",
+        legacy: Some("iwp-fixed"),
+        desc: "importance pruning, one global threshold (Table I \"Fix Threshold\")",
+    },
+    SpecEntry {
+        spec: "iwp:layerwise",
+        legacy: Some("iwp-layerwise"),
+        desc: "importance pruning, Eq. 4 per-layer thresholds",
+    },
+    SpecEntry {
+        spec: "iwp:vargate",
+        legacy: None,
+        desc: "variance-gated IWP: layers with trailing var/mean > gate compress boost x \
+               harder (default gate 1, boost 4; Tsuzuku et al. 2018)",
+    },
+    SpecEntry {
+        spec: "dgc:topk",
+        legacy: Some("dgc"),
+        desc: "per-node magnitude top-k (Lin et al. 2017); densifies on rings",
+    },
+    SpecEntry {
+        spec: "dgc:layerwise",
+        legacy: None,
+        desc: "per-node importance selection under Eq. 4 thresholds (IWP scoring x DGC \
+               transport)",
+    },
+];
+
+/// Stage grammar, in `ringiwp methods` display order.
+pub const STAGES: [(&str, &str); 6] = [
+    ("+warmup:<epochs>", "override warm-up epochs (threshold/density ramp; iwp/dgc heads)"),
+    ("+mcorr", "momentum-corrected residual store (Eq. 3; the default for iwp/dgc heads)"),
+    ("+nomcorr", "raw residual accumulation (momentum correction off; iwp/dgc heads)"),
+    ("+sel", "randomized selection P = I/thr on (Sec. III-C; iwp heads)"),
+    ("+nosel", "hard thresholding (randomized selection off; iwp heads)"),
+    ("+tern", "ternary-quantize the compacted shared-mask payload; blobs spread whole (iwp heads)"),
+];
+
+impl MethodSpec {
+    /// A bare head with no stage overrides.
+    pub fn bare(head: SpecHead) -> Self {
+        MethodSpec {
+            head,
+            warmup: None,
+            mcorr: None,
+            random_select: None,
+            tern: false,
+        }
+    }
+
+    /// Parse a method spec — the single validated entry point behind
+    /// the `--method` flag, the `method =` config key, and the
+    /// `RINGIWP_METHOD` environment default. Accepts the legacy
+    /// `Method` aliases (`baseline`, `iwp-fixed`, …) as head synonyms.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.trim();
+        let mut parts = s.split('+');
+        let head_s = parts.next().unwrap_or("").trim();
+        let head = parse_head(head_s)?;
+        let mut spec = MethodSpec::bare(head);
+        for stage in parts {
+            let stage = stage.trim();
+            match stage {
+                "mcorr" => set_once(&mut spec.mcorr, true, "mcorr/nomcorr")?,
+                "nomcorr" => set_once(&mut spec.mcorr, false, "mcorr/nomcorr")?,
+                "sel" => set_once(&mut spec.random_select, true, "sel/nosel")?,
+                "nosel" => set_once(&mut spec.random_select, false, "sel/nosel")?,
+                "tern" => {
+                    anyhow::ensure!(!spec.tern, "duplicate `+tern` stage");
+                    spec.tern = true;
+                }
+                other => {
+                    if let Some(e) = other.strip_prefix("warmup:") {
+                        let epochs: usize = e.parse().map_err(|_| {
+                            anyhow::anyhow!("+warmup:<epochs> expects an integer, got `{e}`")
+                        })?;
+                        anyhow::ensure!(
+                            spec.warmup.is_none(),
+                            "duplicate `+warmup` stage"
+                        );
+                        spec.warmup = Some(epochs);
+                    } else {
+                        anyhow::bail!(
+                            "unknown stage `+{other}` (warmup:<epochs> | mcorr | nomcorr | \
+                             sel | nosel | tern)"
+                        );
+                    }
+                }
+            }
+        }
+        spec.validate()?;
+        // Momentum correction is the spec-level default for sparsifying
+        // heads; after validation, normalize a redundant `+mcorr` so
+        // specs compare equal.
+        if spec.mcorr == Some(true) {
+            spec.mcorr = None;
+        }
+        Ok(spec)
+    }
+
+    /// Reject stage/head combinations that have no meaning.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let sparsifying = matches!(self.head, SpecHead::Iwp(_) | SpecHead::Dgc(_));
+        if !sparsifying {
+            anyhow::ensure!(
+                self.warmup.is_none() && self.mcorr.is_none(),
+                "`+warmup`/`+mcorr`/`+nomcorr` only apply to iwp/dgc heads"
+            );
+        }
+        let iwp = matches!(self.head, SpecHead::Iwp(_));
+        anyhow::ensure!(
+            self.random_select.is_none() || iwp,
+            "`+sel`/`+nosel` (randomized selection, Sec. III-C) only applies to iwp heads"
+        );
+        anyhow::ensure!(
+            !self.tern || iwp,
+            "`+tern` quantizes the compacted shared-mask payload and only applies to iwp \
+             heads (the standalone `terngrad` head quantizes the full gradient)"
+        );
+        if let SpecHead::Iwp(IwpPolicy::VarGate { gate, boost }) = self.head {
+            anyhow::ensure!(
+                gate >= 0.0 && gate.is_finite(),
+                "vargate gate must be finite and >= 0"
+            );
+            anyhow::ensure!(
+                boost >= 1.0 && boost.is_finite(),
+                "vargate boost must be finite and >= 1"
+            );
+        }
+        Ok(())
+    }
+
+    /// Canonical spec string, re-parseable by [`MethodSpec::parse`]
+    /// (`iwp:layerwise`, `dgc:topk`, `iwp:fixed+warmup:4+nosel+tern`).
+    pub fn name(&self) -> String {
+        let mut out = match self.head {
+            SpecHead::Dense => "dense".to_string(),
+            SpecHead::Terngrad => "terngrad".to_string(),
+            SpecHead::Iwp(IwpPolicy::Fixed) => "iwp:fixed".to_string(),
+            SpecHead::Iwp(IwpPolicy::Layerwise) => "iwp:layerwise".to_string(),
+            SpecHead::Iwp(IwpPolicy::VarGate { gate, boost }) => {
+                if gate == VARGATE_GATE && boost == VARGATE_BOOST {
+                    "iwp:vargate".to_string()
+                } else {
+                    format!("iwp:vargate:{gate}:{boost}")
+                }
+            }
+            SpecHead::Dgc(DgcSelect::TopK) => "dgc:topk".to_string(),
+            SpecHead::Dgc(DgcSelect::Layerwise) => "dgc:layerwise".to_string(),
+        };
+        if let Some(e) = self.warmup {
+            out.push_str(&format!("+warmup:{e}"));
+        }
+        if self.mcorr == Some(false) {
+            out.push_str("+nomcorr");
+        }
+        match self.random_select {
+            Some(true) => out.push_str("+sel"),
+            Some(false) => out.push_str("+nosel"),
+            None => {}
+        }
+        if self.tern {
+            out.push_str("+tern");
+        }
+        out
+    }
+
+    /// Human label: the paper's Table-I label for legacy specs, the
+    /// canonical spec string for everything else.
+    pub fn table_label(&self) -> String {
+        match self.legacy() {
+            Some(m) => m.table_label().to_string(),
+            None => self.name(),
+        }
+    }
+
+    /// The legacy `Method` this spec is the canonical replacement of —
+    /// `None` for the new compositions and any stage-overridden spec.
+    pub fn legacy(&self) -> Option<Method> {
+        if self.warmup.is_some() || self.mcorr.is_some() || self.random_select.is_some()
+            || self.tern
+        {
+            return None;
+        }
+        match self.head {
+            SpecHead::Dense => Some(Method::Baseline),
+            SpecHead::Terngrad => Some(Method::TernGrad),
+            SpecHead::Iwp(IwpPolicy::Fixed) => Some(Method::IwpFixed),
+            SpecHead::Iwp(IwpPolicy::Layerwise) => Some(Method::IwpLayerwise),
+            SpecHead::Dgc(DgcSelect::TopK) => Some(Method::Dgc),
+            _ => None,
+        }
+    }
+
+    /// Whether this spec's trainer path scores through the PJRT L1
+    /// importance kernel (the shared-mask family does).
+    pub fn needs_kernel(&self) -> bool {
+        matches!(self.head, SpecHead::Iwp(_))
+    }
+
+    /// Whether the *global optimizer* carries the momentum (dense paths)
+    /// rather than the per-node residual store (momentum correction,
+    /// Eq. 3 — the sparsifying paths).
+    pub fn optimizer_momentum(&self) -> bool {
+        matches!(self.head, SpecHead::Dense | SpecHead::Terngrad)
+    }
+
+    /// Environment default: `RINGIWP_METHOD`, else `fallback` (mirrors
+    /// `RINGIWP_TOPOLOGY`). A set-but-malformed value panics with the
+    /// parse error rather than silently running the wrong method.
+    pub fn from_env_or(fallback: MethodSpec) -> Self {
+        match std::env::var("RINGIWP_METHOD") {
+            Ok(s) => MethodSpec::parse(&s)
+                .unwrap_or_else(|e| panic!("RINGIWP_METHOD={s}: {e}")),
+            Err(_) => fallback,
+        }
+    }
+}
+
+impl std::fmt::Display for MethodSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+fn set_once(slot: &mut Option<bool>, value: bool, what: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(slot.is_none(), "conflicting/duplicate `{what}` stages");
+    *slot = Some(value);
+    Ok(())
+}
+
+fn parse_head(s: &str) -> anyhow::Result<SpecHead> {
+    Ok(match s {
+        "dense" | "baseline" => SpecHead::Dense,
+        "terngrad" => SpecHead::Terngrad,
+        "iwp:fixed" | "iwp-fixed" | "fixed" => SpecHead::Iwp(IwpPolicy::Fixed),
+        "iwp:layerwise" | "iwp-layerwise" | "layerwise" => SpecHead::Iwp(IwpPolicy::Layerwise),
+        "dgc:topk" | "dgc" | "topk" => SpecHead::Dgc(DgcSelect::TopK),
+        "dgc:layerwise" => SpecHead::Dgc(DgcSelect::Layerwise),
+        other => {
+            if let Some(rest) = other.strip_prefix("iwp:vargate") {
+                let (gate, boost) = match rest {
+                    "" => (VARGATE_GATE, VARGATE_BOOST),
+                    _ => {
+                        let rest = rest.strip_prefix(':').ok_or_else(|| {
+                            anyhow::anyhow!("unknown method head `{other}`")
+                        })?;
+                        match rest.split_once(':') {
+                            Some((g, b)) => (parse_f32(g, "gate")?, parse_f32(b, "boost")?),
+                            None => (parse_f32(rest, "gate")?, VARGATE_BOOST),
+                        }
+                    }
+                };
+                return Ok(SpecHead::Iwp(IwpPolicy::VarGate { gate, boost }));
+            }
+            anyhow::bail!(
+                "unknown method `{other}` — heads: dense | terngrad | iwp:fixed | \
+                 iwp:layerwise | iwp:vargate[:<gate>[:<boost>]] | dgc:topk | \
+                 dgc:layerwise (run `ringiwp methods` for the registry)"
+            )
+        }
+    })
+}
+
+fn parse_f32(s: &str, what: &str) -> anyhow::Result<f32> {
+    s.parse::<f32>()
+        .map_err(|_| anyhow::anyhow!("vargate {what} expects a number, got `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_entries_roundtrip_through_parse() {
+        for e in REGISTRY {
+            let spec = MethodSpec::parse(e.spec).unwrap();
+            assert_eq!(spec.name(), e.spec, "registry spec must be canonical");
+            assert_eq!(MethodSpec::parse(&spec.name()).unwrap(), spec);
+            match e.legacy {
+                Some(alias) => {
+                    assert_eq!(MethodSpec::parse(alias).unwrap(), spec, "alias {alias}");
+                    assert_eq!(spec.legacy(), Some(Method::parse(alias).unwrap()));
+                }
+                None => assert_eq!(spec.legacy(), None),
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_methods_map_to_pinned_canonical_specs() {
+        let table = [
+            (Method::Baseline, "dense"),
+            (Method::TernGrad, "terngrad"),
+            (Method::IwpFixed, "iwp:fixed"),
+            (Method::IwpLayerwise, "iwp:layerwise"),
+            (Method::Dgc, "dgc:topk"),
+        ];
+        for (m, canon) in table {
+            assert_eq!(m.spec().name(), canon);
+            assert_eq!(m.spec().legacy(), Some(m));
+        }
+    }
+
+    #[test]
+    fn stages_parse_and_canonicalize() {
+        let s = MethodSpec::parse("iwp:layerwise+warmup:4+mcorr").unwrap();
+        assert_eq!(s.warmup, Some(4));
+        // Redundant +mcorr normalizes away; canonical name is minimal.
+        assert_eq!(s.mcorr, None);
+        assert_eq!(s.name(), "iwp:layerwise+warmup:4");
+        let s = MethodSpec::parse("iwp:fixed+nosel+tern").unwrap();
+        assert_eq!(s.random_select, Some(false));
+        assert!(s.tern);
+        assert_eq!(s.name(), "iwp:fixed+nosel+tern");
+        assert_eq!(MethodSpec::parse(&s.name()).unwrap(), s);
+        let s = MethodSpec::parse("dgc:layerwise+nomcorr+warmup:2").unwrap();
+        assert_eq!(s.mcorr, Some(false));
+        assert_eq!(s.name(), "dgc:layerwise+warmup:2+nomcorr");
+    }
+
+    #[test]
+    fn vargate_parameters_parse_and_roundtrip() {
+        let s = MethodSpec::parse("iwp:vargate").unwrap();
+        assert_eq!(
+            s.head,
+            SpecHead::Iwp(IwpPolicy::VarGate {
+                gate: VARGATE_GATE,
+                boost: VARGATE_BOOST
+            })
+        );
+        let s = MethodSpec::parse("iwp:vargate:2.5").unwrap();
+        assert_eq!(
+            s.head,
+            SpecHead::Iwp(IwpPolicy::VarGate {
+                gate: 2.5,
+                boost: VARGATE_BOOST
+            })
+        );
+        let s = MethodSpec::parse("iwp:vargate:0.5:8").unwrap();
+        assert_eq!(s.name(), "iwp:vargate:0.5:8");
+        assert_eq!(MethodSpec::parse(&s.name()).unwrap(), s);
+    }
+
+    #[test]
+    fn grammar_rejects() {
+        for bad in [
+            "nope",
+            "iwp",
+            "iwp:",
+            "iwp:vargate:",
+            "iwp:vargate:x",
+            "iwp:vargate:1:0.5", // boost < 1
+            "dgc:",
+            "dgc:nope",
+            "dense+warmup:2",     // warmup on a dense head
+            "terngrad+mcorr",     // store stage on a quantization head
+            "dgc:topk+sel",       // randomized selection is an iwp stage
+            "dgc:topk+tern",      // tern is an iwp stage
+            "iwp:fixed+warmup:x", // malformed epochs
+            "iwp:fixed+warmup:1+warmup:2",
+            "iwp:fixed+sel+nosel",
+            "iwp:fixed+mcorr+nomcorr",
+            "iwp:fixed+tern+tern",
+            "iwp:fixed+bogus",
+        ] {
+            assert!(MethodSpec::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn env_fallback_applies_when_unset() {
+        // RINGIWP_METHOD is never set in the test environment; tests
+        // must not set it either (SimCfg::default() reads it
+        // concurrently).
+        if std::env::var("RINGIWP_METHOD").is_err() {
+            let fb = Method::IwpFixed.spec();
+            assert_eq!(MethodSpec::from_env_or(fb), fb);
+        }
+    }
+
+    #[test]
+    fn display_matches_name() {
+        let s = MethodSpec::parse("iwp:fixed+nosel").unwrap();
+        assert_eq!(format!("{s}"), s.name());
+    }
+}

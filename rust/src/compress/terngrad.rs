@@ -83,6 +83,79 @@ impl TernGrad {
     }
 }
 
+/// Single-scale ternary quantization of a compacted support payload —
+/// the `+tern` pipeline stage (DESIGN.md §12). Once the shared mask is
+/// known, each node's compacted residuals quantize against one shared
+/// scale `s = max|v|` (the support is a cross-layer slice, so per-layer
+/// scaler sharing does not apply); the same unbiased stochastic
+/// rounding as [`TernGrad`]. Ternary values are not closed under
+/// addition, so the blobs spread whole and decode-sum at full precision
+/// on every node.
+#[derive(Debug, Clone)]
+pub struct TernBlob {
+    /// Coordinate count of the encoded payload (the shared support nnz).
+    pub len: usize,
+    /// Shared scale s = max|v|.
+    pub scale: f32,
+    /// 2-bit codes packed 4/byte: 0 -> 0, 1 -> +1, 2 -> -1.
+    pub codes: Vec<u8>,
+}
+
+impl TernBlob {
+    /// Quantize a compacted payload (stochastic, unbiased).
+    pub fn encode(values: &[f32], rng: &mut Rng) -> Self {
+        let mut codes = vec![0u8; values.len().div_ceil(4)];
+        let scale = values.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if scale > 0.0 {
+            for (i, &v) in values.iter().enumerate() {
+                let p = v.abs() / scale;
+                let code = if rng.uniform() < p {
+                    if v >= 0.0 {
+                        CODE_POS
+                    } else {
+                        CODE_NEG
+                    }
+                } else {
+                    CODE_ZERO
+                };
+                codes[i / 4] |= code << ((i % 4) * 2);
+            }
+        }
+        TernBlob {
+            len: values.len(),
+            scale,
+            codes,
+        }
+    }
+
+    /// Add the decoded payload into `acc` (the receive-side decode-sum;
+    /// `acc` is support-length, aligned with the encode input).
+    pub fn add_decoded_into(&self, acc: &mut [f32]) {
+        assert_eq!(acc.len(), self.len);
+        for (i, a) in acc.iter_mut().enumerate() {
+            let code = (self.codes[i / 4] >> ((i % 4) * 2)) & 0b11;
+            *a += match code {
+                CODE_POS => self.scale,
+                CODE_NEG => -self.scale,
+                _ => 0.0,
+            };
+        }
+    }
+
+    /// Bytes on the wire for an `nnz`-coordinate payload: header +
+    /// packed codes + one f32 scale. Shape-determined, so the
+    /// accounting engines and [`crate::net::CostModel`] price blobs
+    /// without encoding.
+    pub fn wire_bytes_for(nnz: usize) -> u64 {
+        crate::sparse::HEADER_BYTES + nnz.div_ceil(4) as u64 + 4
+    }
+
+    /// Bytes this blob occupies on the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        Self::wire_bytes_for(self.len)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +232,34 @@ mod tests {
         let g = vec![0.0f32; 16];
         let t = TernGrad::encode(&g, &l, &mut rng);
         assert!(t.decode(&l).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn tern_blob_is_unbiased_and_shape_priced() {
+        let mut rng = Rng::new(9);
+        let values = vec![0.5f32, -0.25, 1.0, 0.0, 0.75];
+        let trials = 20_000;
+        let mut acc = vec![0.0f32; 5];
+        for _ in 0..trials {
+            let b = TernBlob::encode(&values, &mut rng);
+            assert_eq!(b.wire_bytes(), TernBlob::wire_bytes_for(5));
+            b.add_decoded_into(&mut acc);
+        }
+        for (i, &a) in acc.iter().enumerate() {
+            let mean = a as f64 / trials as f64;
+            assert!(
+                (mean - values[i] as f64).abs() < 0.02,
+                "coord {i}: E={mean} vs v={}",
+                values[i]
+            );
+        }
+        // 5 coords -> 2 code bytes + 4 scale + 9 header.
+        assert_eq!(TernBlob::wire_bytes_for(5), 2 + 4 + 9);
+        // Zero payload encodes to zero and decodes to zero.
+        let z = TernBlob::encode(&[0.0; 8], &mut rng);
+        let mut acc = vec![1.0f32; 8];
+        z.add_decoded_into(&mut acc);
+        assert!(acc.iter().all(|&v| v == 1.0));
     }
 
     #[test]

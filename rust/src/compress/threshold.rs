@@ -59,6 +59,20 @@ pub enum ThresholdPolicy {
     Fixed(f32),
     /// Eq. 4 per-layer thresholds.
     Layerwise(ThresholdCfg),
+    /// Variance-gated step rule (`iwp:vargate`, DESIGN.md §12 —
+    /// Tsuzuku et al., 1802.06058 adapted to trailing layer stats):
+    /// where Eq. 4 adjusts thresholds *linearly* in var/mean, this is a
+    /// hard gate — a layer whose trailing var/mean exceeds `gate` is
+    /// treated as noisy and compressed `boost`× harder; confident
+    /// layers keep the base threshold.
+    VarGated {
+        /// Base threshold α for confident layers.
+        alpha: f32,
+        /// Trailing var/mean above which a layer counts as noisy.
+        gate: f32,
+        /// Threshold multiplier for noisy layers (`>= 1`).
+        boost: f32,
+    },
 }
 
 impl ThresholdPolicy {
@@ -105,6 +119,13 @@ impl ThresholdPolicy {
                     };
                     // A threshold can never go negative (that would
                     // transmit everything regardless of importance).
+                    (thr * warmup_mult).max(0.0)
+                }));
+            }
+            ThresholdPolicy::VarGated { alpha, gate, boost } => {
+                out.extend(stats.iter().map(|s| {
+                    let vm = s.var_over_mean() as f32;
+                    let thr = if vm > *gate { alpha * boost } else { *alpha };
                     (thr * warmup_mult).max(0.0)
                 }));
             }
@@ -179,6 +200,28 @@ mod tests {
         let p = ThresholdPolicy::Fixed(0.1);
         let thr = p.layer_thresholds(&layout2(), &[stats_with_vm(0.0); 2], 0, 0.25);
         assert_eq!(thr, vec![0.025, 0.025]);
+    }
+
+    #[test]
+    fn vargated_boosts_noisy_layers_only() {
+        let p = ThresholdPolicy::VarGated {
+            alpha: 0.01,
+            gate: 1.0,
+            boost: 4.0,
+        };
+        let thr = p.layer_thresholds(
+            &layout2(),
+            &[stats_with_vm(4.0), stats_with_vm(0.5)],
+            0,
+            1.0,
+        );
+        // Layer 0: vm=4 > gate -> alpha * boost = 0.04.
+        assert!((thr[0] - 0.04).abs() < 1e-7, "{}", thr[0]);
+        // Layer 1: vm=0.5 <= gate -> base alpha.
+        assert!((thr[1] - 0.01).abs() < 1e-7, "{}", thr[1]);
+        // Warm-up scaling multiplies on top, like every policy.
+        let thr = p.layer_thresholds(&layout2(), &[stats_with_vm(4.0); 2], 0, 0.5);
+        assert!((thr[0] - 0.02).abs() < 1e-7);
     }
 
     #[test]

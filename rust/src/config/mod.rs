@@ -6,7 +6,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::compress::Method;
+use crate::compress::{Method, MethodSpec};
 use crate::net::TopoKind;
 use crate::util::cli::Args;
 
@@ -17,8 +17,13 @@ pub struct Config {
     pub nodes: usize,
     /// `mlp` | `tfm_tiny` | zoo names for synthetic runs.
     pub model: String,
-    /// Compression method (Table I rows).
-    pub method: Method,
+    /// Compression pipeline (`compress::spec` grammar, DESIGN.md §12:
+    /// heads `dense | terngrad | iwp:* | dgc:*` plus `+stage` suffixes;
+    /// legacy Table-I names are accepted as aliases). The CLI flag, the
+    /// config-file key, and the `RINGIWP_METHOD` environment default
+    /// all parse through [`MethodSpec::parse`] — one validated entry
+    /// point. Precedence: flag > config file > env > built-in default.
+    pub method: MethodSpec,
     /// Importance threshold (α for layerwise).
     pub threshold: f32,
     /// Eq. 4 dispersion gain β.
@@ -70,7 +75,7 @@ impl Default for Config {
         Config {
             nodes: 4,
             model: "mlp".into(),
-            method: Method::IwpLayerwise,
+            method: MethodSpec::from_env_or(Method::IwpLayerwise.spec()),
             threshold: 0.01,
             beta: 0.002,
             c: 1.0,
@@ -105,7 +110,7 @@ impl Config {
         self.nodes = a.usize_or("nodes", self.nodes);
         self.model = a.str_or("model", &self.model);
         if let Some(m) = a.str_opt("method") {
-            self.method = Method::parse(m)?;
+            self.method = MethodSpec::parse(m)?;
         }
         self.threshold = a.f64_or("thr", self.threshold as f64) as f32;
         self.beta = a.f64_or("beta", self.beta as f64) as f32;
@@ -140,7 +145,7 @@ impl Config {
             match k.as_str() {
                 "nodes" => self.nodes = v.parse()?,
                 "model" => self.model = v.clone(),
-                "method" => self.method = Method::parse(v)?,
+                "method" => self.method = MethodSpec::parse(v)?,
                 "threshold" | "thr" => self.threshold = v.parse()?,
                 "beta" => self.beta = v.parse()?,
                 "c" => self.c = v.parse()?,
@@ -186,6 +191,7 @@ impl Config {
         );
         anyhow::ensure!(self.steps_per_epoch > 0, "steps_per_epoch must be > 0");
         anyhow::ensure!(self.parallelism >= 1, "parallelism must be >= 1");
+        self.method.validate()?;
         self.topology.validate()?;
         Ok(())
     }
@@ -237,7 +243,32 @@ mod tests {
         assert_eq!(kv["nodes"], "8");
         let cfg = Config::default().apply_kv(&kv).unwrap();
         assert_eq!(cfg.nodes, 8);
-        assert_eq!(cfg.method, Method::Dgc);
+        assert_eq!(cfg.method, Method::Dgc.spec());
+    }
+
+    #[test]
+    fn method_spec_grammar_flows_from_flag_and_file() {
+        // Flag, config-file key, and env default all route through the
+        // one validated entry point (`MethodSpec::parse`), so the new
+        // spec grammar works everywhere the legacy names did.
+        let a = Args::parse(
+            ["train", "--method", "iwp:vargate+nosel"]
+                .into_iter()
+                .map(String::from),
+        );
+        let cfg = Config::default().apply_args(&a).unwrap();
+        assert_eq!(cfg.method, MethodSpec::parse("iwp:vargate+nosel").unwrap());
+        let kv = parse_kv("method = dgc:layerwise+warmup:2").unwrap();
+        let cfg = Config::default().apply_kv(&kv).unwrap();
+        assert_eq!(cfg.method.name(), "dgc:layerwise+warmup:2");
+        // Malformed specs are rejected at the same entry point.
+        let a = Args::parse(
+            ["train", "--method", "iwp:fixed+bogus"]
+                .into_iter()
+                .map(String::from),
+        );
+        assert!(Config::default().apply_args(&a).is_err());
+        assert!(Config::default().apply_kv(&parse_kv("method = mesh").unwrap()).is_err());
     }
 
     #[test]
@@ -260,7 +291,7 @@ mod tests {
         );
         let cfg = Config::default().apply_args(&a).unwrap();
         assert_eq!(cfg.nodes, 16);
-        assert_eq!(cfg.method, Method::IwpFixed);
+        assert_eq!(cfg.method, Method::IwpFixed.spec());
         assert!((cfg.threshold - 0.05).abs() < 1e-7);
     }
 

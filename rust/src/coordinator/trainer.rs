@@ -1,9 +1,14 @@
 //! End-to-end N-node trainer over the simulated ring.
+//!
+//! Since the compressor subsystem (DESIGN.md §12) the trainer owns the
+//! task/data side (PJRT forward/backward, eval, clipping, optimizer,
+//! net, topology) and reduces every step through the configured
+//! [`Compressor`] pipeline — no per-method match arms remain here; the
+//! legacy `Method` values run bit-identically through their canonical
+//! specs (`rust/tests/compressor_equivalence.rs`).
 
-use crate::compress::importance::LayerStats;
-use crate::compress::residual::ResidualStore;
-use crate::compress::threshold::{ThresholdCfg, ThresholdPolicy};
-use crate::compress::{clip, dgc::Dgc, select, terngrad::TernGrad, warmup::Warmup, Method};
+use crate::compress::pipeline::{self, StageCfg, TrainCtx};
+use crate::compress::{clip, Compressor};
 use crate::config::Config;
 use crate::data::{CharCorpus, SynthClassification};
 use crate::metrics::CompressionAccount;
@@ -12,7 +17,6 @@ use crate::net::{RingNet, Topology};
 use crate::optim::{LrSchedule, MomentumSgd};
 use crate::ring::{Arena, Executor};
 use crate::runtime::{Artifact, ImportanceKernel, Runtime};
-use crate::sparse::BitMask;
 use crate::util::rng::Rng;
 
 /// What a training run produces (feeds Table I, Figs. 5–8, E2E log).
@@ -59,31 +63,14 @@ pub struct Trainer {
     task: Task,
     /// Flat parameter buffer (replicas are identical; see mod docs).
     params: Vec<f32>,
-    /// Per-node residual stores (IWP methods).
-    stores: Vec<ResidualStore>,
-    /// Per-node DGC state.
-    dgcs: Vec<Dgc>,
     opt: MomentumSgd,
     lr: LrSchedule,
     net: RingNet,
-    policy: ThresholdPolicy,
-    warmup: Warmup,
-    /// Trailing per-layer importance stats (layerwise controller input).
-    prev_stats: Vec<LayerStats>,
     /// Per-node data RNG streams + one control stream.
     node_rngs: Vec<Rng>,
     ctl_rng: Rng,
     /// Scratch: per-node gradient buffers.
     grads: Vec<Vec<f32>>,
-    u_buf: Vec<f32>,
-    /// Reusable per-broadcaster selection masks (`clear_all`-ed and
-    /// refilled by the kernel every step — DESIGN.md §11).
-    mask_slots: Vec<BitMask>,
-    /// Reusable per-layer threshold table (Eq. 4 controller output).
-    thrs_buf: Vec<f32>,
-    /// Reusable stats accumulator: merged per broadcaster, swapped into
-    /// `prev_stats` only once the whole (fallible) kernel loop succeeds.
-    stats_scratch: Vec<LayerStats>,
     account_scratch: CompressionAccount,
     /// Node-parallel executor for the reduce paths (`cfg.parallelism`).
     exec: Executor,
@@ -92,6 +79,9 @@ pub struct Trainer {
     topo: Box<dyn Topology>,
     /// Staging arena for the reduce hot paths (DESIGN.md §9).
     arena: Arena,
+    /// The configured compression pipeline — owns every method-specific
+    /// piece of per-node state (DESIGN.md §12).
+    comp: Box<dyn Compressor>,
 }
 
 impl Trainer {
@@ -127,9 +117,11 @@ impl Trainer {
         };
         let art = rt.load(art_name)?;
         let layout = art.meta.layout()?;
-        let kernel = match cfg.method {
-            Method::IwpFixed | Method::IwpLayerwise => Some(ImportanceKernel::load(rt)?),
-            _ => None,
+        let spec = cfg.method;
+        let kernel = if spec.needs_kernel() {
+            Some(ImportanceKernel::load(rt)?)
+        } else {
+            None
         };
         let total = layout.total_params();
 
@@ -140,57 +132,42 @@ impl Trainer {
         let node_rngs: Vec<Rng> = (0..cfg.nodes).map(|i| root.split(i as u64)).collect();
         let ctl_rng = root.split(0xC011);
 
-        let policy = match cfg.method {
-            Method::IwpLayerwise => ThresholdPolicy::Layerwise(ThresholdCfg {
-                alpha: cfg.threshold,
-                beta: cfg.beta,
-                c: cfg.c,
-                ..Default::default()
-            }),
-            _ => ThresholdPolicy::Fixed(cfg.threshold),
-        };
-        let warmup = if cfg.warmup_epochs > 0 {
-            Warmup {
-                epochs: cfg.warmup_epochs,
-                start_mult: 0.1,
-            }
-        } else {
-            Warmup::none()
-        };
-
         // Compressed paths carry momentum in the residual store (momentum
         // correction); the global optimizer momentum is for dense paths.
-        let (opt_momentum, store_momentum) = match cfg.method {
-            Method::Baseline | Method::TernGrad => (cfg.momentum, 0.0),
-            _ => (0.0, cfg.momentum),
+        let opt_momentum = if spec.optimizer_momentum() {
+            cfg.momentum
+        } else {
+            0.0
         };
+        let comp = pipeline::build(
+            spec,
+            &StageCfg {
+                nodes: cfg.nodes,
+                state_nodes: cfg.nodes,
+                threshold: cfg.threshold,
+                beta: cfg.beta,
+                c: cfg.c,
+                mask_nodes: cfg.mask_nodes,
+                random_select: cfg.random_select,
+                momentum: cfg.momentum,
+                dgc_density: cfg.dgc_density,
+                warmup_epochs: cfg.warmup_epochs,
+            },
+            &layout,
+        );
 
         Ok(Trainer {
             exec: Executor::new(cfg.parallelism),
             topo: cfg.topology.build(cfg.nodes),
             arena: Arena::for_nodes(cfg.nodes),
             net: RingNet::new(cfg.nodes, cfg.link_spec(), 0.05),
-            stores: (0..cfg.nodes)
-                .map(|_| ResidualStore::new(total, store_momentum))
-                .collect(),
-            dgcs: (0..cfg.nodes)
-                .map(|_| Dgc::new(total, cfg.dgc_density, cfg.momentum))
-                .collect(),
             opt: MomentumSgd::new(total, opt_momentum),
             lr: LrSchedule::with_warmup(cfg.lr, cfg.steps_per_epoch / 2),
-            prev_stats: vec![LayerStats::default(); layout.n_layers()],
             grads: vec![vec![0.0; total]; cfg.nodes],
-            u_buf: vec![1.0; total],
-            mask_slots: (0..cfg.mask_nodes.min(cfg.nodes))
-                .map(|_| BitMask::zeros(total))
-                .collect(),
-            thrs_buf: Vec::with_capacity(layout.n_layers()),
-            stats_scratch: vec![LayerStats::default(); layout.n_layers()],
             account_scratch: CompressionAccount::new(),
             node_rngs,
             ctl_rng,
-            policy,
-            warmup,
+            comp,
             task,
             params,
             layout,
@@ -318,219 +295,39 @@ impl Trainer {
             });
         }
 
-        // ---- reduce + update (method-specific) -----------------------
-        match self.cfg.method {
-            Method::Baseline => self.reduce_dense(lr)?,
-            Method::TernGrad => self.reduce_terngrad(lr)?,
-            Method::Dgc => self.reduce_dgc(lr, epoch)?,
-            Method::IwpFixed | Method::IwpLayerwise => self.reduce_iwp(lr, epoch)?,
-        }
+        // ---- reduce + update through the configured pipeline ---------
+        let out = {
+            let mut ctx = TrainCtx {
+                epoch,
+                lr,
+                nodes: n,
+                layout: &self.layout,
+                params: &mut self.params,
+                grads: &mut self.grads,
+                net: &mut self.net,
+                topo: &*self.topo,
+                exec: &self.exec,
+                arena: &mut self.arena,
+                node_rngs: &mut self.node_rngs,
+                ctl_rng: &mut self.ctl_rng,
+                opt: &mut self.opt,
+                kernel: self.kernel.as_mut(),
+            };
+            self.comp.train_reduce(&mut ctx)?
+        };
+        self.account_scratch.record_full(
+            self.dense_ref_bytes(),
+            out.wire_bytes_per_node,
+            self.layout.dense_bytes(),
+            out.payload_bytes,
+            out.density,
+        );
 
         // Small compute-phase gap so I/O traces show the paper's idle
         // valleys between bursts (virtual time, trace realism only).
         self.net.advance(0.01);
 
         Ok(loss_sum / n as f64)
-    }
-
-    // ---- reduce paths ------------------------------------------------
-
-    fn reduce_dense(&mut self, lr: f32) -> anyhow::Result<()> {
-        let rep = self
-            .topo
-            .dense(&mut self.net, &mut self.grads, &self.exec, &mut self.arena);
-        let n = self.cfg.nodes as f32;
-        // grads[0] now holds the sum; the optimizer averages inline (one
-        // pass, no materialized average buffer — bit-identical).
-        self.opt.step_mean(&mut self.params, &self.grads[0], n, lr);
-        self.account_scratch.record_full(
-            self.dense_ref_bytes(),
-            rep.mean_bytes_per_node() as u64,
-            self.layout.dense_bytes(),
-            self.layout.dense_bytes(),
-            1.0,
-        );
-        Ok(())
-    }
-
-    fn reduce_terngrad(&mut self, lr: f32) -> anyhow::Result<()> {
-        let n = self.cfg.nodes;
-        // Encode per node in parallel (each node consumes only its own
-        // RNG stream; the ternary blobs are ~16x smaller than dense, so
-        // holding all n is cheap), then decode + sum sequentially in
-        // node order — the same f32 addition order as the sequential
-        // loop, one transient dense vector at a time — and spread the
-        // quantized blobs over the configured topology (blob sizes are
-        // shape-determined, so every node's blob prices identically).
-        let grads = &self.grads;
-        let layout = &self.layout;
-        let encoded: Vec<TernGrad> = self.exec.map_mut(&mut self.node_rngs, |node, rng| {
-            TernGrad::encode(&grads[node], layout, rng)
-        });
-        let mut sum = vec![0.0f32; self.layout.total_params()];
-        for t in &encoded {
-            for (s, v) in sum.iter_mut().zip(t.decode(&self.layout)) {
-                *s += v;
-            }
-        }
-        let rep =
-            self.topo
-                .spread_bytes(&mut self.net, encoded[0].wire_bytes(), n, &mut self.arena);
-        let wire = rep.total_bytes() / n as u64;
-        self.opt.step_mean(&mut self.params, &sum, n as f32, lr);
-        self.account_scratch.record_full(
-            self.dense_ref_bytes(),
-            wire,
-            self.layout.dense_bytes(),
-            encoded[0].wire_bytes(),
-            1.0,
-        );
-        Ok(())
-    }
-
-    fn reduce_dgc(&mut self, lr: f32, epoch: usize) -> anyhow::Result<()> {
-        let n = self.cfg.nodes;
-        let density =
-            Dgc::density_at_epoch(self.cfg.dgc_density, epoch, self.cfg.warmup_epochs);
-        let grads = &self.grads;
-        let sparses: Vec<_> = self.exec.map_mut(&mut self.dgcs, |node, dgc| {
-            dgc.density = density;
-            dgc.step(&grads[node])
-        });
-        let (sum, rep) = self
-            .topo
-            .sparse(&mut self.net, &sparses, &self.exec, &mut self.arena);
-        let inv_n = 1.0 / n as f32;
-        for (i, &v) in sum.iter().enumerate() {
-            if v != 0.0 {
-                self.params[i] -= lr * v * inv_n;
-            }
-        }
-        let k = sparses[0].nnz();
-        let total = self.layout.total_params();
-        self.account_scratch.record_full(
-            self.dense_ref_bytes(),
-            rep.mean_bytes_per_node() as u64,
-            self.layout.dense_bytes(),
-            crate::sparse::wire_bytes(
-                crate::sparse::WireFormat::cheapest(total, k),
-                total,
-                k,
-            ),
-            rep.density_per_hop.last().copied().unwrap_or(density),
-        );
-        Ok(())
-    }
-
-    fn reduce_iwp(&mut self, lr: f32, epoch: usize) -> anyhow::Result<()> {
-        let n = self.cfg.nodes;
-        // Residual accumulation (momentum correction) on every node,
-        // fanned out across the executor (disjoint per-node stores).
-        {
-            let grads = &self.grads;
-            self.exec.map_mut(&mut self.stores, |node, store| {
-                store.accumulate(&grads[node]);
-            });
-        }
-
-        // Per-layer thresholds from trailing stats (Eq. 4 controller),
-        // refilled into the reusable table.
-        let wmult = self.warmup.multiplier(epoch);
-        self.policy.layer_thresholds_into(
-            &self.layout,
-            &self.prev_stats,
-            epoch,
-            wmult,
-            &mut self.thrs_buf,
-        );
-
-        // Random broadcaster nodes (Alg. 1 line 6).
-        let broadcasters = self
-            .ctl_rng
-            .choose_distinct(n, self.cfg.mask_nodes.min(n));
-
-        // Each broadcaster scores its pending residuals with the L1
-        // kernel, layer by layer, packing selection bits straight into a
-        // reusable model-wide mask slot (`score_into` — no per-layer
-        // mask or importance allocation, DESIGN.md §11). This loop stays
-        // sequential: the PJRT kernel executes through a single loaded
-        // artifact handle (parallelizing across PJRT clients is the
-        // ROADMAP async direction); the CPU-mirror engine in
-        // `exp::simrun` runs the fully fused `fuse::score_select_compact`
-        // fan-out instead. Stats accumulate in a scratch buffer so a
-        // kernel error mid-loop leaves `prev_stats` (and therefore the
-        // next step's Eq.-4 thresholds) untouched.
-        for s in self.stats_scratch.iter_mut() {
-            *s = LayerStats::default();
-        }
-        let kernel = self
-            .kernel
-            .as_mut()
-            .expect("IWP methods always load the kernel");
-        for (bi, &b) in broadcasters.iter().enumerate() {
-            select::fill_u(&mut self.node_rngs[b], self.cfg.random_select, &mut self.u_buf);
-            let pending = self.stores[b].pending();
-            let weights = &self.params;
-            let mask = &mut self.mask_slots[bi];
-            mask.clear_all();
-            for (li, layer) in self.layout.layers().iter().enumerate() {
-                let r = layer.range();
-                let st = kernel.score_into(
-                    &pending[r.clone()],
-                    &weights[r.clone()],
-                    &self.u_buf[r.clone()],
-                    self.thrs_buf[li],
-                    crate::compress::importance::EPS,
-                    r.start,
-                    mask,
-                )?;
-                self.stats_scratch[li].merge(&st);
-            }
-        }
-        std::mem::swap(&mut self.prev_stats, &mut self.stats_scratch);
-
-        // Shared-mask ring all-reduce (Alg. 1 lines 7–12). `values`
-        // borrows `stores` while the net (a disjoint field) mutates.
-        let mask_refs: Vec<&BitMask> =
-            self.mask_slots[..broadcasters.len()].iter().collect();
-        let values: Vec<&[f32]> = self.stores.iter().map(|s| s.pending()).collect();
-        let (shared, summed, rep) = self.topo.masked(
-            &mut self.net,
-            &mask_refs,
-            &values,
-            &self.exec,
-            &mut self.arena,
-        );
-
-        // Fused residual take (momentum factor masking): zero residual +
-        // velocity on the shared support in one sweep per node — no
-        // per-node sent-values Vec (the compacted payload the schedule
-        // reduced already lives in the arena).
-        let shared_ref = &shared;
-        self.exec.map_mut(&mut self.stores, |_, store| {
-            store.clear_masked(shared_ref);
-        });
-
-        // Sparse SGD update on the shared support (Alg. 1 line 13),
-        // driven by the mask iterator with the 1/N scaling fused in.
-        let inv_n = 1.0 / n as f32;
-        self.opt
-            .step_sparse_mask(&mut self.params, &shared, &summed, inv_n, lr);
-
-        let nnz = shared.count();
-        let total = self.layout.total_params();
-        self.account_scratch.record_full(
-            self.dense_ref_bytes(),
-            rep.mean_bytes_per_node() as u64,
-            self.layout.dense_bytes(),
-            crate::sparse::wire_bytes(
-                crate::sparse::WireFormat::cheapest(total, nnz),
-                total,
-                nnz,
-            ),
-            shared.density(),
-        );
-        Ok(())
     }
 }
 

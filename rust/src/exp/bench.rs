@@ -12,16 +12,18 @@
 //!   carry the simulated virtual seconds *and* the closed-form
 //!   `net::cost` prediction (`model_s`), which must agree.
 //! * **step** — the full `SimEngine` step (gradient synthesis →
-//!   compression → ring transport → accounting) for all 5 methods ×
-//!   ring sizes × AlexNet/ResNet50 inventories (scaled-down stand-ins
-//!   under the `quick` profile so the CI smoke run stays fast).
+//!   compression → ring transport → accounting) for all 7 pipelines
+//!   ([`step_specs`]: the 5 legacy methods plus `iwp:vargate` and
+//!   `dgc:layerwise`, DESIGN.md §12) × ring sizes × AlexNet/ResNet50
+//!   inventories (scaled-down stand-ins under the `quick` profile so
+//!   the CI smoke run stays fast).
 //!
 //! Measured wall time (`ns_op`, the CI regression gate's input) is the
 //! only non-replayable field; `metrics::bench::canonical` strips it
 //! (plus provenance) for the determinism checks, and `timing: false`
 //! omits it entirely.
 
-use crate::compress::Method;
+use crate::compress::{Method, MethodSpec};
 use crate::exp::simrun::{SimCfg, SimEngine};
 use crate::metrics::bench::BenchReport;
 use crate::model::{zoo, LayerKind, ParamLayout};
@@ -342,15 +344,22 @@ fn micro_resnet50() -> ParamLayout {
     )
 }
 
-const METHODS: [Method; 5] = [
-    Method::Baseline,
-    Method::TernGrad,
-    Method::Dgc,
-    Method::IwpFixed,
-    Method::IwpLayerwise,
-];
+/// Step-sweep pipelines: the five legacy Table-I methods (canonical
+/// specs) plus the two shipped stage compositions — variance-gated IWP
+/// and DGC transport under Eq. 4 layerwise thresholds (DESIGN.md §12).
+pub fn step_specs() -> [MethodSpec; 7] {
+    [
+        Method::Baseline.spec(),
+        Method::TernGrad.spec(),
+        Method::Dgc.spec(),
+        Method::IwpFixed.spec(),
+        Method::IwpLayerwise.spec(),
+        MethodSpec::parse("iwp:vargate").expect("registry spec"),
+        MethodSpec::parse("dgc:layerwise").expect("registry spec"),
+    ]
+}
 
-/// The engine step sweep: 5 methods × ring sizes × AlexNet/ResNet50.
+/// The engine step sweep: 7 pipelines × ring sizes × AlexNet/ResNet50.
 pub fn run_step(cfg: &BenchCfg) -> BenchReport {
     let mut report = BenchReport::new("step", cfg.config_json());
     let models: Vec<(&str, ParamLayout)> = if cfg.quick {
@@ -359,14 +368,14 @@ pub fn run_step(cfg: &BenchCfg) -> BenchReport {
         vec![("alexnet", zoo::alexnet()), ("resnet50", zoo::resnet50())]
     };
     for (model_name, layout) in &models {
-        for method in METHODS {
+        for method in step_specs() {
             for &n in &cfg.ring_sizes {
                 let sim = SimCfg {
                     nodes: n,
                     method,
                     seed: cfg.seed,
                     link: cfg.link,
-                    // Pinned: the step sweep measures the 5 methods on
+                    // Pinned: the step sweep measures the pipelines on
                     // the paper's flat ring (the ring sweep carries the
                     // topology axis). Inheriting RINGIWP_TOPOLOGY here
                     // would make BENCH_step.json — and the baseline
@@ -398,10 +407,11 @@ pub fn run_step(cfg: &BenchCfg) -> BenchReport {
                 });
                 let id = format!("step/{model_name}/{}/n{n}", method.name());
                 let topology = engine.topology().name();
+                let method_name = method.name();
                 let mut fields = vec![
                     ("id", Json::from(id.as_str())),
                     ("model", Json::from(*model_name)),
-                    ("method", Json::from(method.name())),
+                    ("method", Json::from(method_name.as_str())),
                     ("topology", Json::from(topology.as_str())),
                     ("nodes", Json::from(n)),
                     ("params", Json::from(layout.total_params())),
@@ -455,8 +465,30 @@ mod tests {
         let a = run_step(&cfg).to_json();
         let b = run_step(&cfg).to_json();
         assert_eq!(canonical(&a), canonical(&b));
-        // 2 models x 5 methods x 1 ring size.
-        assert_eq!(a.get("rows").as_arr().unwrap().len(), 10);
+        // 2 models x 7 pipelines x 1 ring size.
+        assert_eq!(a.get("rows").as_arr().unwrap().len(), 14);
+    }
+
+    #[test]
+    fn step_sweep_covers_the_new_compositions() {
+        let cfg = BenchCfg {
+            ring_sizes: vec![4],
+            ..tiny_cfg()
+        };
+        let j = run_step(&cfg).to_json();
+        let methods: Vec<String> = j
+            .get("rows")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|r| r.get("method").as_str().map(String::from))
+            .collect();
+        for want in ["iwp:vargate", "dgc:layerwise"] {
+            assert!(
+                methods.iter().any(|m| m == want),
+                "step sweep must carry `{want}` rows (got {methods:?})"
+            );
+        }
     }
 
     #[test]

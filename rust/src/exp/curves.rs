@@ -35,7 +35,7 @@ pub fn run(
     for method in methods {
         let cfg = Config {
             model: model.into(),
-            method,
+            method: method.spec(),
             steps,
             seed,
             threshold: 200.0, // see table1::accuracy_rows on scaling

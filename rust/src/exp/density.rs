@@ -1,18 +1,21 @@
-//! The §II density-growth claim, swept across topologies: DGC's
-//! per-node top-k densifies as the reduce progresses ("top 1% … the
-//! worst case is 2%" per hop, compounding), while Algorithm 1's shared
-//! mask keeps density flat — and the *communication pattern* decides
-//! how much that densification costs on the wire (DESIGN.md §10,
-//! EXPERIMENTS.md §7).
+//! The §II density-growth claim, swept across topologies AND selection
+//! pipelines: per-node selection (DGC transport — magnitude top-k or
+//! the `dgc:layerwise` thresholded composition, DESIGN.md §12)
+//! densifies as the reduce progresses ("top 1% … the worst case is 2%"
+//! per hop, compounding), while Algorithm 1's shared mask (plain
+//! `iwp:fixed` or the variance-gated `iwp:vargate` composition) keeps
+//! density flat — and the *communication pattern* decides how much that
+//! densification costs on the wire (DESIGN.md §10, EXPERIMENTS.md §7,
+//! §9).
 //!
-//! Output: density after a full reduce vs ring size, for DGC and IWP
-//! under the flat ring, a group-8 hierarchy, the binomial tree, and
-//! the layer-pipelined flat ring at chunk depths 1 (serial anchor) and
-//! 8 (overlapped — DESIGN.md §11; only the pipeline rows price
-//! selection prep, so compare them to each other), plus per-step wire
-//! bytes/time and the analytic `1-(1-d)^N` model.
+//! Output: density after a full reduce vs ring size, for all four
+//! pipelines under the flat ring, a group-8 hierarchy, the binomial
+//! tree, and the layer-pipelined flat ring at chunk depths 1 (serial
+//! anchor) and 8 (overlapped — DESIGN.md §11; only the pipeline rows
+//! price selection prep, so compare them to each other), plus per-step
+//! wire bytes/time and the analytic `1-(1-d)^N` model.
 
-use crate::compress::Method;
+use crate::compress::MethodSpec;
 use crate::csv_row;
 use crate::exp::simrun::{SimCfg, SimEngine};
 use crate::metrics::CsvWriter;
@@ -41,7 +44,12 @@ pub const DENSITY_TOPOLOGIES: [TopoKind; 5] = [
     },
 ];
 
-/// Sweep ring sizes × topologies under DGC and IWP and write
+/// Selection pipelines the sweep compares: both DGC-transport variants
+/// (densifying per-node masks) against both shared-mask variants
+/// (ring-size-invariant density).
+pub const DENSITY_SPECS: [&str; 4] = ["dgc:topk", "dgc:layerwise", "iwp:fixed", "iwp:vargate"];
+
+/// Sweep ring sizes × topologies × pipelines and write
 /// `density_growth.csv` against the analytic `1-(1-d)^N` model.
 pub fn run(out_dir: &str, seed: u64) -> anyhow::Result<()> {
     let layout = zoo::resnet50();
@@ -58,23 +66,30 @@ pub fn run(out_dir: &str, seed: u64) -> anyhow::Result<()> {
             "virtual_s",
         ],
     )?;
-    println!("== DGC-vs-IWP density growth across topologies (ResNet50, d0=1%) ==");
+    println!("== per-node vs shared-mask density growth across topologies (ResNet50, d0=1%) ==");
     println!(
-        "{:>6} {:>9} {:>16} {:>16} {:>16} {:>14}",
-        "nodes", "topology", "dgc_density", "iwp_density", "model_1-(1-d)^N", "dgc_MB/node"
+        "{:>6} {:>15} {:>11} {:>11} {:>11} {:>11} {:>16} {:>12}",
+        "nodes",
+        "topology",
+        "dgc:topk",
+        "dgc:lw",
+        "iwp:fixed",
+        "iwp:vargate",
+        "model(1-(1-d)^N)",
+        "topk_MB/node"
     );
     for &n in &ring_sizes {
         for topology in DENSITY_TOPOLOGIES {
             let mut densities = Vec::new();
             let mut dgc_bytes = 0u64;
-            for method in [Method::Dgc, Method::IwpFixed] {
+            for (mi, spec) in DENSITY_SPECS.iter().copied().enumerate() {
                 let cfg = SimCfg {
                     nodes: n,
-                    method,
+                    method: MethodSpec::parse(spec).expect("registry spec"),
                     dgc_density: 0.01,
                     // Calibrated to ~1% per-broadcaster density on this
-                    // model (hard threshold, single mask node) so both
-                    // methods start from the paper's "top 1%" regime.
+                    // model (hard threshold, single mask node) so every
+                    // pipeline starts from the paper's "top 1%" regime.
                     threshold: 0.04,
                     mask_nodes: 1,
                     random_select: false,
@@ -91,14 +106,14 @@ pub fn run(out_dir: &str, seed: u64) -> anyhow::Result<()> {
                     secs = r.seconds;
                 }
                 densities.push(last_density);
-                if method == Method::Dgc {
+                if mi == 0 {
                     dgc_bytes = wire;
                 }
                 csv_row!(
                     csv,
                     n,
                     topology.name(),
-                    method.name(),
+                    spec,
                     last_density,
                     expected_final_density(0.01, n),
                     wire,
@@ -106,10 +121,12 @@ pub fn run(out_dir: &str, seed: u64) -> anyhow::Result<()> {
                 )?;
             }
             println!(
-                "{n:>6} {:>9} {:>15.4}% {:>15.4}% {:>15.4}% {:>14.2}",
+                "{n:>6} {:>15} {:>10.4}% {:>10.4}% {:>10.4}% {:>10.4}% {:>15.4}% {:>12.2}",
                 topology.name(),
                 densities[0] * 100.0,
                 densities[1] * 100.0,
+                densities[2] * 100.0,
+                densities[3] * 100.0,
                 expected_final_density(0.01, n) * 100.0,
                 dgc_bytes as f64 / 1e6
             );
@@ -117,10 +134,10 @@ pub fn run(out_dir: &str, seed: u64) -> anyhow::Result<()> {
     }
     csv.flush()?;
     println!(
-        "paper (Sec. II): DGC density grows towards dense as N grows;\n       \
-         IWP's shared mask is invariant in N — on every topology, but the\n       \
-         wire cost of the densified payload depends on the pattern\n       \
-         (EXPERIMENTS.md §7)"
+        "paper (Sec. II): per-node selection (both dgc:* pipelines) densifies towards\n       \
+         dense as N grows; the shared mask (both iwp:* pipelines) is invariant in N —\n       \
+         on every topology, but the wire cost of the densified payload depends on the\n       \
+         pattern (EXPERIMENTS.md §7, §9)"
     );
     Ok(())
 }

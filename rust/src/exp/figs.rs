@@ -18,7 +18,7 @@ pub fn run_fig2_fig3(out_dir: &str, steps: usize, seed: u64) -> anyhow::Result<(
     let layout = zoo::resnet50();
     let cfg = SimCfg {
         nodes: 8,
-        method: Method::IwpFixed,
+        method: Method::IwpFixed.spec(),
         seed,
         ..Default::default()
     };
@@ -77,7 +77,7 @@ pub fn run_fig4(out_dir: &str, steps: usize, seed: u64) -> anyhow::Result<()> {
         .expect("resnet50 has a first downsample layer");
     let cfg = SimCfg {
         nodes: 8,
-        method: Method::IwpLayerwise,
+        method: Method::IwpLayerwise.spec(),
         seed,
         ..Default::default()
     };

@@ -22,7 +22,7 @@ pub fn run(out_dir: &str, nodes: usize, steps: usize, seed: u64) -> anyhow::Resu
     for (fig, method) in [("fig7", Method::Baseline), ("fig8", Method::IwpFixed)] {
         let cfg = SimCfg {
             nodes,
-            method,
+            method: method.spec(),
             seed,
             ..Default::default()
         };

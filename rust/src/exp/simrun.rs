@@ -7,18 +7,20 @@
 //! The engine mirrors `coordinator::Trainer`'s reduce paths 1:1 but
 //! sources gradients from `grad::SynthGrads` and scores importance with
 //! the CPU mirror of the L1 kernel (bit-identical semantics, cross-
-//! validated in `tests/runtime_smoke.rs`).
+//! validated in `tests/runtime_smoke.rs`). Since the compressor
+//! subsystem (DESIGN.md §12) both engines reduce through the
+//! [`Compressor`] trait: the engine owns the gradient streams, the
+//! virtual net, the topology, and the accounting; the configured
+//! compression pipeline owns every method-specific piece of state.
 
 use crate::compress::importance::{LayerStats, EPS};
-use crate::compress::residual::ResidualStore;
-use crate::compress::threshold::{ThresholdCfg, ThresholdPolicy};
-use crate::compress::{dgc::Dgc, fuse, terngrad::TernGrad, warmup::Warmup, Method};
+use crate::compress::pipeline::{self, SimCtx, StageCfg};
+use crate::compress::{Compressor, Method, MethodSpec};
 use crate::grad::SynthGrads;
 use crate::metrics::CompressionAccount;
 use crate::model::ParamLayout;
 use crate::net::{LinkSpec, RingNet, TopoKind, Topology};
 use crate::ring::{Arena, Executor};
-use crate::sparse::BitMask;
 use crate::util::rng::Rng;
 
 /// Engine configuration (subset of `config::Config` relevant here).
@@ -26,9 +28,10 @@ use crate::util::rng::Rng;
 pub struct SimCfg {
     /// Simulated ring size N.
     pub nodes: usize,
-    /// Compression method under test.
-    pub method: Method,
-    /// Importance threshold (α for the layerwise controller).
+    /// Compression pipeline under test (`compress::spec` grammar;
+    /// legacy `Method` values convert via [`Method::spec`]).
+    pub method: MethodSpec,
+    /// Importance threshold (α for the layer-adaptive controllers).
     pub threshold: f32,
     /// Eq. 4 dispersion gain β.
     pub beta: f32,
@@ -64,7 +67,7 @@ impl Default for SimCfg {
     fn default() -> Self {
         SimCfg {
             nodes: 96, // the paper's cluster size
-            method: Method::IwpFixed,
+            method: MethodSpec::from_env_or(Method::IwpFixed.spec()),
             // Paper sweeps 0.005–0.1; the headline 64x/58.8x ratios live
             // at the aggressive end once random selection (P = I/thr)
             // adds its expected sub-threshold traffic.
@@ -103,8 +106,16 @@ pub struct StepReport {
     pub wire_bytes_per_node: u64,
     /// Transmitted gradient density this step.
     pub density: f64,
-    /// Virtual seconds this step occupied on the net.
+    /// Virtual seconds this step occupied on the net (wire + the fixed
+    /// compute gap).
     pub seconds: f64,
+    /// Virtual seconds of the wire phase alone — equal to the matching
+    /// `CostModel` prediction bit-for-bit on a fresh clock
+    /// (DESIGN.md §12).
+    pub wire_seconds: f64,
+    /// Selected support size this step (see
+    /// `compress::WireOutcome::support_nnz`).
+    pub support_nnz: u64,
 }
 
 /// The simulation engine.
@@ -113,13 +124,7 @@ pub struct SimEngine {
     pub cfg: SimCfg,
     layout: ParamLayout,
     synth: SynthGrads,
-    stores: Vec<ResidualStore>,
-    dgcs: Vec<Dgc>,
     net: RingNet,
-    policy: ThresholdPolicy,
-    warmup: Warmup,
-    /// Trailing per-layer stats (layerwise controller input, Fig. 4 data).
-    pub prev_stats: Vec<LayerStats>,
     rngs: Vec<Rng>,
     ctl_rng: Rng,
     /// Compression accounting over the whole run.
@@ -127,28 +132,14 @@ pub struct SimEngine {
     exec: Executor,
     topo: Box<dyn Topology>,
     arena: Arena,
+    /// The configured compression pipeline — owns every method-specific
+    /// piece of per-node state (DESIGN.md §12).
+    comp: Box<dyn Compressor>,
     imp_scratch: Vec<f32>,
     /// Cached per-layer stats buffer behind `importance_snapshot`
     /// (refilled in place — no per-call allocation).
     snap_stats: Vec<LayerStats>,
-    /// Reusable per-layer threshold table (Eq. 4 controller output).
-    thrs_buf: Vec<f32>,
-    /// Per-node scratch for the fused scoring fan-out (DESIGN.md §11):
-    /// masks are fully word-overwritten by `fuse::score_select_compact`
-    /// and RNG streams are cloned in/out per step, so slot reuse is
-    /// bit-identical to fresh allocation.
-    scratch: Vec<NodeScratch>,
     grads: Vec<Vec<f32>>,
-}
-
-/// Reusable per-node slot for the fused IWP scoring fan-out: the cloned
-/// RNG stream, the broadcaster's selection mask, and its per-layer stats
-/// rows. `bcast` marks whether this node broadcasts this step.
-struct NodeScratch {
-    bcast: bool,
-    rng: Rng,
-    mask: BitMask,
-    stats: Vec<LayerStats>,
 }
 
 impl SimEngine {
@@ -164,53 +155,36 @@ impl SimEngine {
     pub fn new(layout: ParamLayout, cfg: SimCfg) -> Self {
         let total = layout.total_params();
         let mut root = Rng::new(cfg.seed);
-        let policy = match cfg.method {
-            Method::IwpLayerwise => ThresholdPolicy::Layerwise(ThresholdCfg {
-                alpha: cfg.threshold,
+        let state_nodes = cfg.nodes.min(Self::SIM_NODE_CAP);
+        let comp = pipeline::build(
+            cfg.method,
+            &StageCfg {
+                nodes: cfg.nodes,
+                state_nodes,
+                threshold: cfg.threshold,
                 beta: cfg.beta,
                 c: cfg.c,
-                ..Default::default()
-            }),
-            _ => ThresholdPolicy::Fixed(cfg.threshold),
-        };
-        let warmup = if cfg.warmup_epochs > 0 {
-            Warmup {
-                epochs: cfg.warmup_epochs,
-                start_mult: 0.1,
-            }
-        } else {
-            Warmup::none()
-        };
+                mask_nodes: cfg.mask_nodes,
+                random_select: cfg.random_select,
+                momentum: cfg.momentum,
+                dgc_density: cfg.dgc_density,
+                warmup_epochs: cfg.warmup_epochs,
+            },
+            &layout,
+        );
         SimEngine {
             synth: SynthGrads::new(layout.clone(), cfg.seed ^ 0x5EED),
-            stores: (0..cfg.nodes.min(Self::SIM_NODE_CAP))
-                .map(|_| ResidualStore::new(total, cfg.momentum))
-                .collect(),
-            dgcs: (0..cfg.nodes.min(Self::SIM_NODE_CAP))
-                .map(|_| Dgc::new(total, cfg.dgc_density, cfg.momentum))
-                .collect(),
             net: RingNet::new(cfg.nodes, cfg.link, 0.05),
-            prev_stats: vec![LayerStats::default(); layout.n_layers()],
             rngs: (0..cfg.nodes).map(|i| root.split(i as u64)).collect(),
             ctl_rng: root.split(0xC011),
             account: CompressionAccount::new(),
             exec: Executor::new(cfg.parallelism),
             topo: cfg.topology.build(cfg.nodes),
             arena: Arena::for_nodes(cfg.nodes),
+            comp,
             imp_scratch: vec![0.0; total],
             snap_stats: Vec::with_capacity(layout.n_layers()),
-            thrs_buf: Vec::with_capacity(layout.n_layers()),
-            scratch: (0..cfg.nodes.min(Self::SIM_NODE_CAP))
-                .map(|_| NodeScratch {
-                    bcast: false,
-                    rng: Rng::new(0),
-                    mask: BitMask::zeros(total),
-                    stats: Vec::with_capacity(layout.n_layers()),
-                })
-                .collect(),
-            grads: vec![vec![0.0; total]; cfg.nodes.min(Self::SIM_NODE_CAP)],
-            policy,
-            warmup,
+            grads: vec![vec![0.0; total]; state_nodes],
             layout,
             cfg,
         }
@@ -243,6 +217,13 @@ impl SimEngine {
         &self.synth.weights
     }
 
+    /// Trailing per-layer stats of the configured pipeline (the
+    /// layerwise controller input, Fig. 4 data); empty for
+    /// non-scoring pipelines.
+    pub fn prev_stats(&self) -> &[LayerStats] {
+        self.comp.prev_stats()
+    }
+
     fn dense_ref_bytes(&self) -> u64 {
         let n = self.cfg.nodes as u64;
         2 * (n - 1) * self.layout.dense_bytes() / n
@@ -253,10 +234,16 @@ impl SimEngine {
     /// Both returned slices are engine-owned scratch refilled in place —
     /// the per-call `Vec<LayerStats>` allocation is gone.
     pub fn importance_snapshot(&mut self) -> (&[f32], &[LayerStats]) {
-        let pending = self.stores[0].pending();
         let w = &self.synth.weights;
-        for i in 0..pending.len() {
-            self.imp_scratch[i] = pending[i].abs() / (w[i].abs() + EPS);
+        match self.comp.pending(0) {
+            Some(pending) => {
+                for i in 0..pending.len() {
+                    self.imp_scratch[i] = pending[i].abs() / (w[i].abs() + EPS);
+                }
+            }
+            // Residual-free pipelines (dense, terngrad) have no pending
+            // update — all-zero importance, as before the refactor.
+            None => self.imp_scratch.iter_mut().for_each(|v| *v = 0.0),
         }
         crate::compress::importance::layer_stats_into(
             &self.layout,
@@ -272,13 +259,9 @@ impl SimEngine {
     pub fn step(&mut self, step: usize) -> StepReport {
         let epoch = step / self.cfg.steps_per_epoch.max(1);
         let sim_nodes = self.grads.len();
-        // Only materialize the gradient streams this method consumes
+        // Only materialize the gradient streams this pipeline consumes
         // (25M+-param fills dominate wall time otherwise).
-        let needed = match self.cfg.method {
-            Method::Baseline => 0,
-            Method::TernGrad => 1,
-            _ => sim_nodes,
-        };
+        let needed = self.comp.grads_needed(sim_nodes);
         {
             // Counter-based synthesis + per-node jitter streams: each
             // node touches only its own buffer and RNG, so the fan-out
@@ -298,184 +281,21 @@ impl SimEngine {
         }
 
         let t0 = self.net.clock();
-        let (wire, payload, density) = match self.cfg.method {
-            Method::Baseline => {
-                // Account-only dense rounds under the configured topology
-                // (moving 61M f32 per node through the data path buys
-                // nothing here; bytes are exact). total/N is the exact
-                // per-node mean — for the flat ring it equals the paper's
-                // 2(N-1)/N · V reference.
-                let rep = self.topo.dense_bytes_only(
-                    &mut self.net,
-                    self.layout.total_params(),
-                    &mut self.arena,
-                );
-                (
-                    rep.total_bytes() / self.cfg.nodes as u64,
-                    self.layout.dense_bytes(),
-                    1.0,
-                )
-            }
-            Method::TernGrad => {
-                // Blob sizes are shape-determined (codes + scales), so one
-                // representative encoding prices every node's blob.
-                let n = self.cfg.nodes;
-                let t = TernGrad::encode(&self.grads[0], &self.layout, &mut self.rngs[0]);
-                let blob = t.wire_bytes();
-                // Ternary values are not closed under addition, so no
-                // topology can scatter-REDUCE them — the quantized blobs
-                // must spread whole (every blob to every node). This is
-                // why quantization alone does not help rings (the
-                // paper's Sec. II point); the payload ratio below is
-                // TernGrad's native parameter-server number.
-                let rep = self
-                    .topo
-                    .spread_bytes(&mut self.net, blob, n, &mut self.arena);
-                (rep.total_bytes() / n as u64, blob, 1.0)
-            }
-            Method::Dgc => {
-                let density =
-                    Dgc::density_at_epoch(self.cfg.dgc_density, epoch, self.cfg.warmup_epochs);
-                let total = self.layout.total_params();
-                let k = ((total as f64) * density).ceil() as usize;
-                // Real top-k supports for materialized nodes; exchangeable
-                // random k-subsets for the rest (supports across disjoint
-                // data shards are near-independent — the same assumption
-                // behind the paper's 1%->2% worst-case argument). Both
-                // halves are per-node-independent, so they fan out.
-                let grads = &self.grads;
-                let mut supports: Vec<BitMask> =
-                    self.exec.map_mut(&mut self.dgcs, |node, dgc| {
-                        dgc.density = density;
-                        let sv = dgc.step(&grads[node]);
-                        let mut m = BitMask::zeros(total);
-                        for &i in &sv.idx {
-                            m.set(i as usize);
-                        }
-                        m
-                    });
-                supports.extend(self.exec.map_mut(
-                    &mut self.rngs[sim_nodes..],
-                    |_, rng| {
-                        let mut m = BitMask::zeros(total);
-                        for _ in 0..k {
-                            m.set(rng.below(total));
-                        }
-                        m
-                    },
-                ));
-                let rep = self.topo.sparse_support(
-                    &mut self.net,
-                    &supports,
-                    &self.exec,
-                    &mut self.arena,
-                );
-                // Paper-metric payload: each node's own encoded top-k.
-                let payload = crate::sparse::wire_bytes(
-                    crate::sparse::WireFormat::cheapest(total, k),
-                    total,
-                    k,
-                );
-                (
-                    rep.mean_bytes_per_node() as u64,
-                    payload,
-                    rep.density_per_hop.last().copied().unwrap_or(density),
-                )
-            }
-            Method::IwpFixed | Method::IwpLayerwise => {
-                let wmult = self.warmup.multiplier(epoch);
-                self.policy.layer_thresholds_into(
-                    &self.layout,
-                    &self.prev_stats,
-                    epoch,
-                    wmult,
-                    &mut self.thrs_buf,
-                );
-                // Broadcasters drawn from the materialized (exchangeable)
-                // node states.
-                let broadcasters = self
-                    .ctl_rng
-                    .choose_distinct(sim_nodes, self.cfg.mask_nodes.min(sim_nodes));
-                // Fused single-pass fan-out (DESIGN.md §11): every node
-                // folds its gradient into its residual store; broadcaster
-                // nodes additionally score, select, and pack their mask
-                // in the *same* sweep (`fuse::score_select_compact`),
-                // replacing the accumulate → fill_u → score_and_mask →
-                // mask-merge chain. Broadcaster RNG streams are cloned
-                // out and written back, so cross-step evolution matches
-                // the multi-pass reference exactly.
-                for scr in self.scratch.iter_mut() {
-                    scr.bcast = false;
-                }
-                for &b in &broadcasters {
-                    self.scratch[b].bcast = true;
-                    self.scratch[b].rng = self.rngs[b].clone();
-                }
-                {
-                    let grads = &self.grads;
-                    let weights = &self.synth.weights;
-                    let layout = &self.layout;
-                    let thrs: &[f32] = &self.thrs_buf;
-                    let random_select = self.cfg.random_select;
-                    self.exec.map_mut2(
-                        &mut self.stores,
-                        &mut self.scratch,
-                        |node, store, scr| {
-                            if scr.bcast {
-                                fuse::score_select_compact(
-                                    layout,
-                                    thrs,
-                                    weights,
-                                    &grads[node],
-                                    EPS,
-                                    random_select,
-                                    &mut scr.rng,
-                                    store,
-                                    &mut scr.mask,
-                                    &mut scr.stats,
-                                );
-                            } else {
-                                store.accumulate(&grads[node]);
-                            }
-                        },
-                    );
-                }
-                // Write RNG streams back and merge stats in broadcaster
-                // order (the same f64 addition order as the reference).
-                for s in self.prev_stats.iter_mut() {
-                    *s = LayerStats::default();
-                }
-                for &b in &broadcasters {
-                    self.rngs[b] = self.scratch[b].rng.clone();
-                    for (li, st) in self.scratch[b].stats.iter().enumerate() {
-                        self.prev_stats[li].merge(st);
-                    }
-                }
-                let mask_refs: Vec<&BitMask> = broadcasters
-                    .iter()
-                    .map(|&b| &self.scratch[b].mask)
-                    .collect();
-                let (shared, rep) =
-                    self.topo
-                        .masked_bytes_only(&mut self.net, &mask_refs, &mut self.arena);
-                // Fused residual take: zero residual + velocity on the
-                // shared support in one sweep, no per-node Vec (the
-                // accounting engine discards the transmitted values).
-                let shared_ref = &shared;
-                self.exec.map_mut(&mut self.stores, |_, store| {
-                    store.clear_masked(shared_ref);
-                });
-                // Paper-metric payload: encode(sparse(G)) per node — the
-                // selected values under the cheapest codec.
-                let nnz = shared.count();
-                let total = self.layout.total_params();
-                let payload = crate::sparse::wire_bytes(
-                    crate::sparse::WireFormat::cheapest(total, nnz),
-                    total,
-                    nnz,
-                );
-                (rep.mean_bytes_per_node() as u64, payload, shared.density())
-            }
+        let out = {
+            let mut ctx = SimCtx {
+                epoch,
+                nodes: self.cfg.nodes,
+                layout: &self.layout,
+                weights: &self.synth.weights,
+                grads: &self.grads,
+                net: &mut self.net,
+                topo: &*self.topo,
+                exec: &self.exec,
+                arena: &mut self.arena,
+                rngs: &mut self.rngs,
+                ctl_rng: &mut self.ctl_rng,
+            };
+            self.comp.sim_step(&mut ctx)
         };
         // Compute-phase gap (ResNet50 on a 1080ti: ~0.35 s/step at the
         // paper's batch size — gives Fig. 7/8 their burst/idle shape).
@@ -483,15 +303,17 @@ impl SimEngine {
 
         self.account.record_full(
             self.dense_ref_bytes(),
-            wire,
+            out.wire_bytes_per_node,
             self.layout.dense_bytes(),
-            payload,
-            density,
+            out.payload_bytes,
+            out.density,
         );
         StepReport {
-            wire_bytes_per_node: wire,
-            density,
+            wire_bytes_per_node: out.wire_bytes_per_node,
+            density: out.density,
             seconds: self.net.clock() - t0,
+            wire_seconds: out.wire_seconds,
+            support_nnz: out.support_nnz,
         }
     }
 }
@@ -516,7 +338,16 @@ mod tests {
     fn cfg(method: Method, nodes: usize) -> SimCfg {
         SimCfg {
             nodes,
-            method,
+            method: method.spec(),
+            link: LinkSpec::new(1e9, 0.0),
+            ..Default::default()
+        }
+    }
+
+    fn spec_cfg(spec: &str, nodes: usize) -> SimCfg {
+        SimCfg {
+            nodes,
+            method: MethodSpec::parse(spec).unwrap(),
             link: LinkSpec::new(1e9, 0.0),
             ..Default::default()
         }
@@ -611,5 +442,71 @@ mod tests {
         let n_layers = e.layout().n_layers();
         let (_imp, stats) = e.importance_snapshot();
         assert_eq!(stats.len(), n_layers);
+    }
+
+    #[test]
+    fn new_compositions_run_end_to_end() {
+        // The two shipped stage compositions (DESIGN.md §12) and the
+        // ternary payload stage, through the full engine.
+        let layout = small_layout();
+        for spec in ["iwp:vargate", "dgc:layerwise", "iwp:fixed+tern"] {
+            let mut e = SimEngine::new(layout.clone(), spec_cfg(spec, 8));
+            for s in 0..3 {
+                let r = e.step(s);
+                assert!(r.wire_bytes_per_node > 0, "{spec}");
+                assert!(r.density < 1.0, "{spec}: density {}", r.density);
+                assert!(r.wire_seconds > 0.0 && r.wire_seconds < r.seconds, "{spec}");
+            }
+            assert!(e.account.ratio() > 1.0, "{spec}: {}", e.account.ratio());
+        }
+    }
+
+    #[test]
+    fn dgc_layerwise_densifies_like_topk_but_scores_like_iwp() {
+        // The composition point: per-node masks densify with ring size
+        // (DGC transport) even though selection is Eq.-4 thresholded
+        // importance (IWP scoring).
+        let layout = small_layout();
+        let density_at = |nodes: usize| -> f64 {
+            let mut c = spec_cfg("dgc:layerwise", nodes);
+            c.threshold = 0.05;
+            let mut e = SimEngine::new(layout.clone(), c);
+            let mut last = 0.0;
+            for s in 0..3 {
+                last = e.step(s).density;
+            }
+            last
+        };
+        let small = density_at(4);
+        let big = density_at(32);
+        assert!(
+            big > small * 1.5,
+            "per-node thresholded masks should densify: {small} -> {big}"
+        );
+        // And the pipeline exposes trailing stats (it scores).
+        let mut e = SimEngine::new(layout, spec_cfg("dgc:layerwise", 4));
+        e.step(0);
+        assert_eq!(e.prev_stats().len(), e.layout().n_layers());
+        assert!(e.prev_stats()[0].n > 0.0);
+    }
+
+    #[test]
+    fn warmup_stage_loosens_early_thresholds() {
+        // `+warmup:<e>` scales thresholds down early: epoch-0 density
+        // must be at least the no-warmup density, converging once the
+        // ramp ends.
+        let layout = small_layout();
+        let density0 = |spec: &str| -> f64 {
+            let mut c = spec_cfg(spec, 8);
+            c.steps_per_epoch = 1;
+            let mut e = SimEngine::new(layout.clone(), c);
+            e.step(0).density
+        };
+        let plain = density0("iwp:fixed+nosel");
+        let warm = density0("iwp:fixed+nosel+warmup:4");
+        assert!(
+            warm > plain,
+            "warm-up must loosen epoch-0 selection: {warm} vs {plain}"
+        );
     }
 }

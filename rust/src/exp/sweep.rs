@@ -35,7 +35,7 @@ pub fn run(rt: Option<&Runtime>, out_dir: &str, steps: usize, seed: u64) -> anyh
         for &thr in &PAPER_THRESHOLDS {
             let cfg = SimCfg {
                 nodes: 96,
-                method: Method::IwpFixed,
+                method: Method::IwpFixed.spec(),
                 threshold: thr,
                 seed,
                 ..Default::default()
@@ -61,7 +61,7 @@ pub fn run(rt: Option<&Runtime>, out_dir: &str, steps: usize, seed: u64) -> anyh
     for r in [1usize, 2, 4, 8] {
         let cfg = SimCfg {
             nodes: 32,
-            method: Method::IwpFixed,
+            method: Method::IwpFixed.spec(),
             mask_nodes: r,
             seed,
             ..Default::default()
@@ -88,7 +88,7 @@ pub fn run(rt: Option<&Runtime>, out_dir: &str, steps: usize, seed: u64) -> anyh
         )?;
         for random_select in [true, false] {
             let cfg = Config {
-                method: Method::IwpFixed,
+                method: Method::IwpFixed.spec(),
                 steps: 80,
                 seed,
                 threshold: 200.0, // see table1::accuracy_rows on scaling

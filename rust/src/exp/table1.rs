@@ -37,7 +37,7 @@ pub fn ratio_rows(
         ] {
             let cfg = SimCfg {
                 nodes,
-                method,
+                method: method.spec(),
                 threshold,
                 seed,
                 ..Default::default()
@@ -74,7 +74,7 @@ pub fn accuracy_rows(
         ] {
             let cfg = Config {
                 model: model.into(),
-                method,
+                method: method.spec(),
                 steps,
                 seed,
                 nodes: 4,

@@ -5,6 +5,7 @@
 //!   train   — run the N-node simulated-ring trainer on a real model
 //!   exp     — regenerate a paper table/figure (table1, fig2, …, all)
 //!   bench   — emit machine-readable BENCH_*.json perf payloads
+//!   methods — list the registered compression-pipeline specs
 //!   info    — show artifacts, platform, model inventories
 //!   help    — this text
 
@@ -24,8 +25,14 @@ USAGE:
 
 SUBCOMMANDS:
     train       train a real model (PJRT) on the simulated N-node ring
-                  --model mlp|tfm_tiny   --method baseline|terngrad|iwp-fixed|
-                  iwp-layerwise|dgc      --nodes N --steps N --thr X --seed N
+                  --model mlp|tfm_tiny
+                  --method <spec> (compression pipeline, DESIGN.md §12:
+                  dense|terngrad|iwp:fixed|iwp:layerwise|
+                  iwp:vargate[:<gate>[:<boost>]]|dgc:topk|dgc:layerwise
+                  plus +warmup:<e>/+mcorr/+nomcorr/+sel/+nosel/+tern
+                  stages; legacy names like iwp-fixed are aliases; env
+                  RINGIWP_METHOD sets the default; see `ringiwp methods`)
+                  --nodes N --steps N --thr X --seed N
                   --mask-nodes R --no-random-select --config FILE --out DIR
                   --parallelism W (node-parallel executor width, default 1)
                   --topology flat|hier:<group_size>|tree|
@@ -54,6 +61,8 @@ SUBCOMMANDS:
                                     (already-seeded sections are untouched)
                   --diff DIR_A DIR_B  compare two output dirs' payloads
                                     modulo volatile fields (exit 1 on drift)
+    methods     list the registered compression-pipeline specs with
+                one-line descriptions (the --method registry)
     info        list artifacts, PJRT platform, zoo inventories
     help        print this message
 
@@ -110,6 +119,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("train") => cmd_train(args),
         Some("exp") => cmd_exp(args),
         Some("bench") => cmd_bench(args),
+        Some("methods") => cmd_methods(),
         Some("info") => cmd_info(args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -406,6 +416,30 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             anyhow::bail!("{} bench regression(s) vs {baseline_path}", failures.len());
         }
     }
+    Ok(())
+}
+
+fn cmd_methods() -> anyhow::Result<()> {
+    use ringiwp::compress::spec::{REGISTRY, STAGES};
+    println!(
+        "registered method specs (--method <spec>, config `method = <spec>`, \
+         env RINGIWP_METHOD):\n"
+    );
+    for e in REGISTRY {
+        let legacy = e.legacy.map(|l| format!("[alias: {l}]")).unwrap_or_default();
+        println!("  {:<28} {:<22} {}", e.spec, legacy, e.desc);
+    }
+    println!("\nstages (append to iwp/dgc heads with `+`):\n");
+    for (stage, desc) in STAGES {
+        println!("  {stage:<18} {desc}");
+    }
+    println!(
+        "\nexamples:\n  \
+         ringiwp train --method iwp:layerwise+warmup:4\n  \
+         ringiwp train --method iwp:vargate:2:8+nosel\n  \
+         ringiwp train --method iwp:fixed+tern\n  \
+         RINGIWP_METHOD=dgc:layerwise ringiwp exp --id density"
+    );
     Ok(())
 }
 

@@ -84,6 +84,16 @@ impl From<&str> for CsvCell {
         CsvCell::Str(s.to_string())
     }
 }
+impl From<String> for CsvCell {
+    fn from(s: String) -> Self {
+        CsvCell::Str(s)
+    }
+}
+impl From<&String> for CsvCell {
+    fn from(s: &String) -> Self {
+        CsvCell::Str(s.clone())
+    }
+}
 impl From<f64> for CsvCell {
     fn from(v: f64) -> Self {
         CsvCell::F64(v)

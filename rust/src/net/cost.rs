@@ -451,6 +451,50 @@ impl CostModel {
     ) -> u64 {
         self.topo_masked(topo, coords, k, support).0
     }
+
+    /// One accumulator over the `+tern` masked pipeline stage's round
+    /// sequence (DESIGN.md §12): spread the `k` broadcaster masks, then
+    /// spread every node's ternary-encoded compacted payload *whole*
+    /// (ternary values are not closed under addition, so no topology
+    /// can scatter-reduce them). Rounds fold in the simulator's clock
+    /// order, so on a fresh clock the prediction equals the engine's
+    /// wire phase bit for bit. Pipeline wrappers delegate blob spreads
+    /// to their inner topology, exactly as the simulation does.
+    fn masked_tern(&self, topo: TopoKind, coords: usize, k: usize, nnz: usize) -> (u64, f64) {
+        let base = match topo {
+            TopoKind::Pipeline { inner, .. } => inner.kind(),
+            t => t,
+        };
+        let mask_bytes = (coords.div_ceil(8)) as u64;
+        let blob = crate::compress::terngrad::TernBlob::wire_bytes_for(nnz);
+        let (mut bytes, mut t) = (0u64, 0.0f64);
+        self.base_spread_rounds(base, mask_bytes, k, &mut |b, d| {
+            bytes += b;
+            t += d;
+        });
+        self.base_spread_rounds(base, blob, self.nodes, &mut |b, d| {
+            bytes += b;
+            t += d;
+        });
+        (bytes, t)
+    }
+
+    /// Virtual seconds of the `+tern` masked stage under `topo` for an
+    /// `nnz`-coordinate shared support and `k` broadcaster masks.
+    pub fn masked_tern_seconds(&self, topo: TopoKind, coords: usize, k: usize, nnz: usize) -> f64 {
+        self.masked_tern(topo, coords, k, nnz).1
+    }
+
+    /// Total wire bytes of the `+tern` masked stage under `topo`.
+    pub fn masked_tern_total_bytes(
+        &self,
+        topo: TopoKind,
+        coords: usize,
+        k: usize,
+        nnz: usize,
+    ) -> u64 {
+        self.masked_tern(topo, coords, k, nnz).0
+    }
 }
 
 #[cfg(test)]
@@ -633,6 +677,27 @@ mod tests {
                     "{name} chunks={chunks}: pipelined {piped} should beat serial {serial}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn masked_tern_composes_two_spreads() {
+        // The `+tern` stage's byte total is exactly the mask spread plus
+        // the whole-blob spread, on every base topology (times are
+        // accumulated on one clock, so they are checked against the
+        // engine in `tests/compressor_equivalence.rs` instead).
+        let n = 6;
+        let model = CostModel::new(n, link());
+        let (coords, k, nnz) = (10_000usize, 2usize, 300usize);
+        let mask_bytes = (coords.div_ceil(8)) as u64;
+        let blob = crate::compress::terngrad::TernBlob::wire_bytes_for(nnz);
+        for topo in [TopoKind::Flat, TopoKind::Hier { group: 3 }, TopoKind::Tree] {
+            assert_eq!(
+                model.masked_tern_total_bytes(topo, coords, k, nnz),
+                model.topo_spread_total_bytes(topo, mask_bytes, k)
+                    + model.topo_spread_total_bytes(topo, blob, n),
+                "{topo:?}"
+            );
         }
     }
 

@@ -1,0 +1,427 @@
+//! The compressor-subsystem golden suite (DESIGN.md §12).
+//!
+//! The refactor's contract: every legacy `Method` enum value, running
+//! through its canonical `Compressor` spec, is **bit-identical** to the
+//! pre-refactor engine. This file keeps an inline reimplementation of
+//! the pre-refactor `SimEngine::step` match arms (built from the same
+//! retained primitives — `fuse`, `ResidualStore`, `Dgc`, `TernGrad`,
+//! the `Topology` accounting entry points) as the checked-in golden
+//! oracle, and replays it against the trait-driven engine across
+//! methods × topologies × ring sizes. The stage grammar's semantics
+//! (`+nosel`, `+nomcorr`) are pinned against their config-knob
+//! equivalents, and the new compositions cross-validate against the
+//! `CostModel` byte/wire-time predictions bit for bit.
+
+use ringiwp::compress::fuse;
+use ringiwp::compress::importance::{LayerStats, EPS};
+use ringiwp::compress::residual::ResidualStore;
+use ringiwp::compress::terngrad::{TernBlob, TernGrad};
+use ringiwp::compress::threshold::{ThresholdCfg, ThresholdPolicy};
+use ringiwp::compress::{dgc::Dgc, Method, MethodSpec};
+use ringiwp::exp::simrun::{SimCfg, SimEngine};
+use ringiwp::grad::SynthGrads;
+use ringiwp::metrics::CompressionAccount;
+use ringiwp::model::{LayerKind, ParamLayout};
+use ringiwp::net::{CostModel, LinkSpec, RingNet, TopoKind};
+use ringiwp::ring::Arena;
+use ringiwp::sparse::{wire_bytes, BitMask, WireFormat};
+use ringiwp::util::rng::Rng;
+
+const SIM_NODE_CAP: usize = 4; // SimEngine::SIM_NODE_CAP
+
+fn layout() -> ParamLayout {
+    ParamLayout::new(
+        "comp_eq",
+        vec![
+            ("conv1".into(), vec![24, 12, 3, 3], LayerKind::Conv),
+            ("bn1".into(), vec![48], LayerKind::BatchNorm),
+            ("fc".into(), vec![300, 10], LayerKind::Fc),
+            ("bias".into(), vec![10], LayerKind::Bias),
+        ],
+    )
+}
+
+fn base_cfg(method: Method, nodes: usize, topology: TopoKind) -> SimCfg {
+    SimCfg {
+        nodes,
+        method: method.spec(),
+        topology,
+        parallelism: 1,
+        link: LinkSpec::gigabit_ethernet(),
+        seed: 71,
+        ..Default::default()
+    }
+}
+
+type Reports = Vec<(u64, u64, u64)>;
+
+fn engine_run(cfg: &SimCfg, steps: usize) -> (Reports, u64) {
+    let mut engine = SimEngine::new(layout(), cfg.clone());
+    let mut reports = Vec::new();
+    for s in 0..steps {
+        let r = engine.step(s);
+        reports.push((r.wire_bytes_per_node, r.density.to_bits(), r.seconds.to_bits()));
+    }
+    (reports, engine.account.ratio().to_bits())
+}
+
+/// The pre-refactor `SimEngine::step`, reimplemented inline from the
+/// retained primitives: the golden oracle the trait-driven engine must
+/// reproduce bit for bit (sequential path; the executor contract is
+/// pinned separately by the parallel/topology equivalence suites).
+fn legacy_engine_run(cfg: &SimCfg, steps: usize) -> (Reports, u64) {
+    let layout = layout();
+    let total = layout.total_params();
+    let nodes = cfg.nodes;
+    let sim_nodes = nodes.min(SIM_NODE_CAP);
+    let method = cfg.method.legacy().expect("legacy method");
+    let synth = SynthGrads::new(layout.clone(), cfg.seed ^ 0x5EED);
+    let mut root = Rng::new(cfg.seed);
+    let mut rngs: Vec<Rng> = (0..nodes).map(|i| root.split(i as u64)).collect();
+    let mut ctl_rng = root.split(0xC011);
+    let mut stores: Vec<ResidualStore> = (0..sim_nodes)
+        .map(|_| ResidualStore::new(total, cfg.momentum))
+        .collect();
+    let mut dgcs: Vec<Dgc> = (0..sim_nodes)
+        .map(|_| Dgc::new(total, cfg.dgc_density, cfg.momentum))
+        .collect();
+    let policy = match method {
+        Method::IwpLayerwise => ThresholdPolicy::Layerwise(ThresholdCfg {
+            alpha: cfg.threshold,
+            beta: cfg.beta,
+            c: cfg.c,
+            ..Default::default()
+        }),
+        _ => ThresholdPolicy::Fixed(cfg.threshold),
+    };
+    let topo = cfg.topology.build(nodes);
+    let mut net = RingNet::new(nodes, cfg.link, 0.05);
+    let mut arena = Arena::for_nodes(nodes);
+    let exec = ringiwp::ring::Executor::sequential();
+    let mut prev_stats = vec![LayerStats::default(); layout.n_layers()];
+    let mut grads = vec![vec![0.0f32; total]; sim_nodes];
+    let mut account = CompressionAccount::new();
+    let dense_ref = 2 * (nodes as u64 - 1) * layout.dense_bytes() / nodes as u64;
+    let mut reports = Vec::new();
+
+    for step in 0..steps {
+        let epoch = step / cfg.steps_per_epoch.max(1);
+        let needed = match method {
+            Method::Baseline => 0,
+            Method::TernGrad => 1,
+            _ => sim_nodes,
+        };
+        for node in 0..needed {
+            synth.gen_step_node(step, node, &mut grads[node]);
+            for v in grads[node].iter_mut() {
+                *v *= 0.85 + 0.3 * rngs[node].uniform();
+            }
+        }
+        let t0 = net.clock();
+        let (wire, payload, density) = match method {
+            Method::Baseline => {
+                let rep = topo.dense_bytes_only(&mut net, total, &mut arena);
+                (
+                    rep.total_bytes() / nodes as u64,
+                    layout.dense_bytes(),
+                    1.0,
+                )
+            }
+            Method::TernGrad => {
+                let t = TernGrad::encode(&grads[0], &layout, &mut rngs[0]);
+                let blob = t.wire_bytes();
+                let rep = topo.spread_bytes(&mut net, blob, nodes, &mut arena);
+                (rep.total_bytes() / nodes as u64, blob, 1.0)
+            }
+            Method::Dgc => {
+                let d = Dgc::density_at_epoch(cfg.dgc_density, epoch, cfg.warmup_epochs);
+                let k = ((total as f64) * d).ceil() as usize;
+                let mut supports: Vec<BitMask> = Vec::new();
+                for (node, dgc) in dgcs.iter_mut().enumerate() {
+                    dgc.density = d;
+                    let sv = dgc.step(&grads[node]);
+                    let mut m = BitMask::zeros(total);
+                    for &i in &sv.idx {
+                        m.set(i as usize);
+                    }
+                    supports.push(m);
+                }
+                for rng in rngs[sim_nodes..].iter_mut() {
+                    let mut m = BitMask::zeros(total);
+                    for _ in 0..k {
+                        m.set(rng.below(total));
+                    }
+                    supports.push(m);
+                }
+                let rep = topo.sparse_support(&mut net, &supports, &exec, &mut arena);
+                let payload = wire_bytes(WireFormat::cheapest(total, k), total, k);
+                (
+                    rep.mean_bytes_per_node() as u64,
+                    payload,
+                    rep.density_per_hop.last().copied().unwrap_or(d),
+                )
+            }
+            Method::IwpFixed | Method::IwpLayerwise => {
+                let thrs = policy.layer_thresholds(&layout, &prev_stats, epoch, 1.0);
+                let broadcasters =
+                    ctl_rng.choose_distinct(sim_nodes, cfg.mask_nodes.min(sim_nodes));
+                let mut masks: Vec<Option<BitMask>> = vec![None; sim_nodes];
+                let mut stats: Vec<Vec<LayerStats>> = vec![Vec::new(); sim_nodes];
+                let mut bcast_rngs: Vec<Option<Rng>> = vec![None; sim_nodes];
+                for &b in &broadcasters {
+                    bcast_rngs[b] = Some(rngs[b].clone());
+                }
+                // Node-index-order fan-out, exactly as the engine's
+                // sequential executor visits the (store, scratch) pairs.
+                for node in 0..sim_nodes {
+                    if let Some(rng) = bcast_rngs[node].as_mut() {
+                        let mut mask = BitMask::zeros(total);
+                        let mut st = Vec::new();
+                        fuse::score_select_compact(
+                            &layout,
+                            &thrs,
+                            &synth.weights,
+                            &grads[node],
+                            EPS,
+                            cfg.random_select,
+                            rng,
+                            &mut stores[node],
+                            &mut mask,
+                            &mut st,
+                        );
+                        masks[node] = Some(mask);
+                        stats[node] = st;
+                    } else {
+                        stores[node].accumulate(&grads[node]);
+                    }
+                }
+                for s in prev_stats.iter_mut() {
+                    *s = LayerStats::default();
+                }
+                for &b in &broadcasters {
+                    rngs[b] = bcast_rngs[b].take().unwrap();
+                    for (li, st) in stats[b].iter().enumerate() {
+                        prev_stats[li].merge(st);
+                    }
+                }
+                let mask_refs: Vec<&BitMask> = broadcasters
+                    .iter()
+                    .map(|&b| masks[b].as_ref().unwrap())
+                    .collect();
+                let (shared, rep) = topo.masked_bytes_only(&mut net, &mask_refs, &mut arena);
+                for store in stores.iter_mut() {
+                    store.clear_masked(&shared);
+                }
+                let nnz = shared.count();
+                let payload = wire_bytes(WireFormat::cheapest(total, nnz), total, nnz);
+                (
+                    rep.mean_bytes_per_node() as u64,
+                    payload,
+                    shared.density(),
+                )
+            }
+        };
+        net.advance(0.35);
+        account.record_full(dense_ref, wire, layout.dense_bytes(), payload, density);
+        reports.push((wire, density.to_bits(), (net.clock() - t0).to_bits()));
+    }
+    (reports, account.ratio().to_bits())
+}
+
+#[test]
+fn legacy_methods_are_bit_identical_to_their_compressor_specs() {
+    for topology in [TopoKind::Flat, TopoKind::Hier { group: 3 }, TopoKind::Tree] {
+        for method in Method::all() {
+            for nodes in [4usize, 9] {
+                let cfg = base_cfg(method, nodes, topology);
+                let (golden, golden_ratio) = legacy_engine_run(&cfg, 3);
+                let (got, got_ratio) = engine_run(&cfg, 3);
+                assert_eq!(
+                    golden, got,
+                    "{method:?} {} nodes={nodes}: step reports diverged from the \
+                     pre-refactor golden",
+                    topology.name()
+                );
+                assert_eq!(
+                    golden_ratio, got_ratio,
+                    "{method:?} {} nodes={nodes}: accounting diverged",
+                    topology.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn canonical_spec_strings_are_pinned() {
+    let table = [
+        (Method::Baseline, "dense"),
+        (Method::TernGrad, "terngrad"),
+        (Method::IwpFixed, "iwp:fixed"),
+        (Method::IwpLayerwise, "iwp:layerwise"),
+        (Method::Dgc, "dgc:topk"),
+    ];
+    for (m, canon) in table {
+        assert_eq!(m.spec().name(), canon);
+        assert_eq!(MethodSpec::parse(canon).unwrap(), m.spec());
+        // Legacy aliases parse to the same spec value.
+        assert_eq!(MethodSpec::parse(m.name()).unwrap(), m.spec());
+    }
+}
+
+#[test]
+fn nosel_stage_equals_random_select_knob() {
+    // `iwp:fixed+nosel` with the config knob on must equal plain
+    // `iwp:fixed` with the knob off, bit for bit — the stage and the
+    // knob are the same pipeline point.
+    let mut with_stage = base_cfg(Method::IwpFixed, 8, TopoKind::Flat);
+    with_stage.method = MethodSpec::parse("iwp:fixed+nosel").unwrap();
+    with_stage.random_select = true;
+    let mut with_knob = base_cfg(Method::IwpFixed, 8, TopoKind::Flat);
+    with_knob.random_select = false;
+    assert_eq!(engine_run(&with_stage, 3), engine_run(&with_knob, 3));
+}
+
+#[test]
+fn nomcorr_stage_equals_zero_momentum_knob() {
+    let mut with_stage = base_cfg(Method::IwpFixed, 8, TopoKind::Flat);
+    with_stage.method = MethodSpec::parse("iwp:fixed+nomcorr").unwrap();
+    let mut with_knob = base_cfg(Method::IwpFixed, 8, TopoKind::Flat);
+    with_knob.momentum = 0.0;
+    assert_eq!(engine_run(&with_stage, 3), engine_run(&with_knob, 3));
+}
+
+#[test]
+fn warmup_stage_equals_warmup_knob() {
+    let mut with_stage = base_cfg(Method::IwpFixed, 8, TopoKind::Flat);
+    with_stage.method = MethodSpec::parse("iwp:fixed+warmup:2").unwrap();
+    with_stage.steps_per_epoch = 1;
+    let mut with_knob = base_cfg(Method::IwpFixed, 8, TopoKind::Flat);
+    with_knob.warmup_epochs = 2;
+    with_knob.steps_per_epoch = 1;
+    assert_eq!(engine_run(&with_stage, 3), engine_run(&with_knob, 3));
+}
+
+#[test]
+fn new_compositions_are_bit_identical_across_parallelism_and_topology() {
+    for spec in ["iwp:vargate", "dgc:layerwise", "iwp:fixed+tern"] {
+        for topology in [TopoKind::Flat, TopoKind::Hier { group: 3 }, TopoKind::Tree] {
+            let cfg = |w: usize| -> SimCfg {
+                let mut c = base_cfg(Method::IwpFixed, 9, topology);
+                c.method = MethodSpec::parse(spec).unwrap();
+                c.parallelism = w;
+                c
+            };
+            let seq = engine_run(&cfg(1), 3);
+            for w in [2usize, 4] {
+                assert_eq!(
+                    seq,
+                    engine_run(&cfg(w), 3),
+                    "{spec} {} w={w}: §4 contract violated",
+                    topology.name()
+                );
+            }
+        }
+    }
+}
+
+/// Wire bytes/time of the new compositions, cross-validated against the
+/// closed-form `CostModel` — bit for bit on a fresh clock (step 0): the
+/// masked transport prices `iwp:vargate` for free, and the two-spread
+/// `+tern` stage prices through `masked_tern_*` (DESIGN.md §12).
+#[test]
+fn new_compositions_cross_validate_against_cost_model() {
+    let lay = layout();
+    let total = lay.total_params();
+    for topology in [TopoKind::Flat, TopoKind::Hier { group: 4 }, TopoKind::Tree] {
+        // -- variance-gated IWP over the masked transport -------------
+        let mut cfg = base_cfg(Method::IwpFixed, 8, topology);
+        cfg.method = MethodSpec::parse("iwp:vargate").unwrap();
+        let model = CostModel::new(cfg.nodes, cfg.link);
+        let k = cfg.mask_nodes.min(SIM_NODE_CAP);
+        let mut engine = SimEngine::new(lay.clone(), cfg.clone());
+        let r = engine.step(0);
+        let support = r.support_nnz as usize;
+        assert!(support > 0, "{}: nothing selected", topology.name());
+        assert_eq!(
+            model.topo_masked_seconds(topology, total, k, support).to_bits(),
+            r.wire_seconds.to_bits(),
+            "{}: vargate wire time drifted from the masked prediction",
+            topology.name()
+        );
+        assert_eq!(
+            model.topo_masked_total_bytes(topology, total, k, support),
+            engine.net().total_bytes(),
+            "{}: vargate wire bytes drifted",
+            topology.name()
+        );
+
+        // -- ternary payload stage ------------------------------------
+        let mut cfg = base_cfg(Method::IwpFixed, 8, topology);
+        cfg.method = MethodSpec::parse("iwp:fixed+tern").unwrap();
+        let mut engine = SimEngine::new(lay.clone(), cfg);
+        let r = engine.step(0);
+        let nnz = r.support_nnz as usize;
+        assert!(nnz > 0);
+        assert_eq!(
+            model.masked_tern_seconds(topology, total, k, nnz).to_bits(),
+            r.wire_seconds.to_bits(),
+            "{}: +tern wire time drifted from the two-spread prediction",
+            topology.name()
+        );
+        assert_eq!(
+            model.masked_tern_total_bytes(topology, total, k, nnz),
+            engine.net().total_bytes(),
+            "{}: +tern wire bytes drifted",
+            topology.name()
+        );
+        // The ternary payload is 2 bits/coord + scale, far below the
+        // f32 sparse payload at the same support.
+        assert!(r.wire_bytes_per_node > 0);
+        assert!(
+            TernBlob::wire_bytes_for(nnz)
+                < wire_bytes(WireFormat::cheapest(total, nnz), total, nnz)
+        );
+
+        // -- dense stays priced for free too --------------------------
+        let cfg = base_cfg(Method::Baseline, 8, topology);
+        let mut engine = SimEngine::new(lay.clone(), cfg);
+        let r = engine.step(0);
+        assert_eq!(
+            model.topo_dense_seconds(topology, total).to_bits(),
+            r.wire_seconds.to_bits(),
+            "{}: dense wire time drifted",
+            topology.name()
+        );
+        assert_eq!(
+            model.topo_dense_total_bytes(topology, total),
+            engine.net().total_bytes()
+        );
+    }
+}
+
+#[test]
+fn vargate_tightens_noisy_layers_relative_to_fixed() {
+    // Once trailing stats exist (step >= 1), layers whose var/mean
+    // exceeds the gate compress harder than under the fixed policy at
+    // the same alpha — vargate can only select a subset coordinate-wise
+    // (thr_vargate >= thr_fixed per layer under +nosel).
+    let mut fixed = base_cfg(Method::IwpFixed, 8, TopoKind::Flat);
+    fixed.method = MethodSpec::parse("iwp:fixed+nosel").unwrap();
+    let mut gated = base_cfg(Method::IwpFixed, 8, TopoKind::Flat);
+    gated.method = MethodSpec::parse("iwp:vargate+nosel").unwrap();
+    let run = |cfg: &SimCfg| -> f64 {
+        let mut e = SimEngine::new(layout(), cfg.clone());
+        let mut last = 0.0;
+        for s in 0..3 {
+            last = e.step(s).density;
+        }
+        last
+    };
+    let d_fixed = run(&fixed);
+    let d_gated = run(&gated);
+    assert!(
+        d_gated <= d_fixed,
+        "vargate must not select more than fixed at the same alpha: {d_gated} vs {d_fixed}"
+    );
+}

@@ -88,9 +88,48 @@ fn cli_flags_flow_into_config() {
             .map(String::from),
     );
     let c = Config::default().apply_args(&a).unwrap();
-    assert_eq!(c.method, Method::Dgc);
+    assert_eq!(c.method, Method::Dgc.spec());
     assert!((c.dgc_density - 0.05).abs() < 1e-12);
     assert_eq!(c.seed, 9);
+}
+
+#[test]
+fn method_spec_grammar_flows_and_rejects_through_every_entry_point() {
+    use ringiwp::compress::MethodSpec;
+    // New-grammar specs through the CLI flag…
+    let a = Args::parse(
+        ["train", "--method", "iwp:vargate:2:8+nosel+tern"]
+            .into_iter()
+            .map(String::from),
+    );
+    let c = Config::default().apply_args(&a).unwrap();
+    assert_eq!(c.method, MethodSpec::parse("iwp:vargate:2:8+nosel+tern").unwrap());
+    assert_eq!(c.method.name(), "iwp:vargate:2:8+nosel+tern");
+    // …and the config file key (one shared entry point: MethodSpec::parse).
+    let path = std::env::temp_dir().join("ringiwp_methodspec_test.conf");
+    std::fs::write(&path, "method = dgc:layerwise+warmup:3\n").unwrap();
+    let a = Args::parse(
+        ["train", "--config", path.to_str().unwrap()]
+            .into_iter()
+            .map(String::from),
+    );
+    let c = Config::default().apply_args(&a).unwrap();
+    assert_eq!(c.method.name(), "dgc:layerwise+warmup:3");
+    // Rejects are uniform across entry points too.
+    std::fs::write(&path, "method = dense+tern\n").unwrap();
+    let a = Args::parse(
+        ["train", "--config", path.to_str().unwrap()]
+            .into_iter()
+            .map(String::from),
+    );
+    assert!(Config::default().apply_args(&a).is_err());
+    let _ = std::fs::remove_file(path);
+    for bad in ["iwp:vargate:", "dgc:topk+sel", "terngrad+warmup:1"] {
+        let a = Args::parse(
+            ["train", "--method", bad].into_iter().map(String::from),
+        );
+        assert!(Config::default().apply_args(&a).is_err(), "`{bad}`");
+    }
 }
 
 #[test]
@@ -104,7 +143,7 @@ fn config_file_roundtrip() {
     );
     let c = Config::default().apply_args(&a).unwrap();
     assert_eq!(c.nodes, 12);
-    assert_eq!(c.method, Method::TernGrad);
+    assert_eq!(c.method, Method::TernGrad.spec());
     assert!((c.lr - 0.2).abs() < 1e-7);
     let _ = std::fs::remove_file(path);
 }

@@ -53,14 +53,15 @@ fn multipass_reference(
     let mut stores: Vec<ResidualStore> = (0..sim_nodes)
         .map(|_| ResidualStore::new(total, cfg.momentum))
         .collect();
-    let policy = match cfg.method {
-        Method::IwpLayerwise => ThresholdPolicy::Layerwise(ThresholdCfg {
+    let policy = if cfg.method == Method::IwpLayerwise.spec() {
+        ThresholdPolicy::Layerwise(ThresholdCfg {
             alpha: cfg.threshold,
             beta: cfg.beta,
             c: cfg.c,
             ..Default::default()
-        }),
-        _ => ThresholdPolicy::Fixed(cfg.threshold),
+        })
+    } else {
+        ThresholdPolicy::Fixed(cfg.threshold)
     };
     let mut net = RingNet::new(nodes, cfg.link, 0.05);
     let mut arena = Arena::for_nodes(nodes);
@@ -136,7 +137,7 @@ fn engine_run(
         let r = engine.step(s);
         reports.push((r.wire_bytes_per_node, r.density.to_bits(), r.seconds.to_bits()));
     }
-    (reports, engine.prev_stats.clone())
+    (reports, engine.prev_stats().to_vec())
 }
 
 fn stat_bits(s: &LayerStats) -> (u64, u64, u64, u64) {
@@ -155,7 +156,7 @@ fn fused_engine_step_matches_multipass_reference_bitwise() {
         for random_select in [true, false] {
             let cfg = SimCfg {
                 nodes: 4,
-                method,
+                method: method.spec(),
                 threshold: 0.04,
                 random_select,
                 seed: 91,
@@ -191,7 +192,7 @@ fn fused_engine_is_bit_identical_across_parallelism() {
     for method in [Method::IwpFixed, Method::IwpLayerwise] {
         let cfg = |w: usize| SimCfg {
             nodes: 4,
-            method,
+            method: method.spec(),
             threshold: 0.04,
             seed: 23,
             link: LinkSpec::gigabit_ethernet(),

@@ -245,7 +245,7 @@ fn sim_layout() -> ParamLayout {
 fn run_engine(method: Method, nodes: usize, parallelism: usize) -> (Vec<(u64, u64, u64)>, f64) {
     let cfg = SimCfg {
         nodes,
-        method,
+        method: method.spec(),
         parallelism,
         link: LinkSpec::gigabit_ethernet(),
         seed: 23,
@@ -685,7 +685,7 @@ fn engine_arena_is_allocation_free_after_first_step() {
     for method in [Method::Baseline, Method::Dgc] {
         let cfg = SimCfg {
             nodes: 8,
-            method,
+            method: method.spec(),
             seed: 29,
             link: LinkSpec::gigabit_ethernet(),
             ..Default::default()

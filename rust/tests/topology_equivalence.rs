@@ -758,7 +758,7 @@ fn run_engine(
 ) -> (Vec<(u64, u64, u64)>, f64) {
     let cfg = SimCfg {
         nodes,
-        method,
+        method: method.spec(),
         parallelism,
         topology,
         link: LinkSpec::gigabit_ethernet(),
@@ -827,7 +827,7 @@ fn sim_engine_flat_topology_equals_legacy_default() {
         let (explicit, er) = run_engine(method, 8, 1, TopoKind::Flat);
         let cfg = SimCfg {
             nodes: 8,
-            method,
+            method: method.spec(),
             parallelism: 1,
             link: LinkSpec::gigabit_ethernet(),
             seed: 23,

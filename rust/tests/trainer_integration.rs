@@ -18,6 +18,10 @@ fn runtime() -> Option<Runtime> {
 }
 
 fn cfg(method: Method, steps: usize) -> Config {
+    spec_cfg(method.spec(), steps)
+}
+
+fn spec_cfg(method: ringiwp::compress::MethodSpec, steps: usize) -> Config {
     Config {
         method,
         steps,
@@ -95,6 +99,51 @@ fn terngrad_runs_and_learns() {
     let last = out.losses.last().unwrap().1;
     assert!(last < out.losses[0].1, "loss did not decrease");
     assert!(out.account.ratio() > 2.0, "{}", out.account.ratio());
+}
+
+#[test]
+fn new_compositions_train_end_to_end() {
+    // The compressor-subsystem compositions (DESIGN.md §12) through the
+    // real trainer: variance-gated IWP, DGC transport under layerwise
+    // thresholds, and the ternary-payload stage.
+    let Some(rt) = runtime() else { return };
+    for spec in ["iwp:vargate", "dgc:layerwise", "iwp:fixed+tern"] {
+        let spec = ringiwp::compress::MethodSpec::parse(spec).unwrap();
+        let mut t = Trainer::new(spec_cfg(spec, 30), &rt).unwrap();
+        let out = t.run().unwrap();
+        assert!(
+            out.losses.last().unwrap().1.is_finite(),
+            "{spec}: loss diverged"
+        );
+        assert!(out.account.ratio() > 1.0, "{spec}: {}", out.account.ratio());
+        assert!(out.account.mean_density() < 1.0, "{spec}");
+    }
+}
+
+#[test]
+fn trainer_replays_bit_identically_for_a_fixed_spec() {
+    // Two trainers built from the same spec must replay identical
+    // losses and accounting, bit for bit — pins the pipeline's state
+    // init and RNG routing as deterministic at the trainer level.
+    // (Alias == canonical-spec equivalence is a *parse-time* property:
+    // `MethodSpec::parse("iwp-fixed") == parse("iwp:fixed")` is pinned
+    // by the spec.rs unit tests and `tests/compressor_equivalence.rs`,
+    // so both would reach this constructor as the same value.)
+    let Some(rt) = runtime() else { return };
+    let spec = ringiwp::compress::MethodSpec::parse("iwp:fixed").unwrap();
+    let out_a = Trainer::new(cfg(Method::IwpFixed, 20), &rt)
+        .unwrap()
+        .run()
+        .unwrap();
+    let out_b = Trainer::new(spec_cfg(spec, 20), &rt).unwrap().run().unwrap();
+    let bits = |v: &[(usize, f64)]| -> Vec<(usize, u64)> {
+        v.iter().map(|&(s, l)| (s, l.to_bits())).collect()
+    };
+    assert_eq!(bits(&out_a.losses), bits(&out_b.losses));
+    assert_eq!(
+        out_a.account.total_wire_bytes(),
+        out_b.account.total_wire_bytes()
+    );
 }
 
 #[test]
