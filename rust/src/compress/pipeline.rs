@@ -51,7 +51,7 @@ use super::terngrad::{TernBlob, TernGrad};
 use super::threshold::{ThresholdCfg, ThresholdPolicy};
 use super::warmup::Warmup;
 use crate::model::ParamLayout;
-use crate::net::{RingNet, Topology};
+use crate::net::{RingNet, Topology, WireRing};
 use crate::optim::MomentumSgd;
 use crate::ring::{Arena, Executor};
 use crate::runtime::ImportanceKernel;
@@ -104,6 +104,12 @@ pub struct SimCtx<'a> {
     pub rngs: &'a mut [Rng],
     /// Control stream (broadcaster draws, Alg. 1 line 6).
     pub ctl_rng: &'a mut Rng,
+    /// Real socket ring (DESIGN.md §13). When set, every traveling
+    /// payload — dense chunks, broadcaster masks, supports, ternary
+    /// blobs — is encoded, spread over actual sockets, and only the
+    /// *decoded* copy feeds the computation below, so the virtual
+    /// accounting stays bit-identical iff the wire is faithful.
+    pub wire: Option<&'a mut WireRing>,
 }
 
 /// Per-step context of the training engine (`coordinator::Trainer`).
@@ -292,7 +298,14 @@ impl Compressor for DenseCompressor {
         // for the flat ring it equals the paper's 2(N-1)/N · V
         // reference.
         let t0 = ctx.net.clock();
-        let total = ctx.layout.total_params();
+        let total = match ctx.wire.as_deref_mut() {
+            // Wire path: the weight buffer allgathers in real chunks
+            // around the socket ring; the *decoded* coordinate count
+            // (== total iff codec and relay are faithful) drives the
+            // accounting.
+            Some(w) => w.exchange_dense(ctx.weights).expect("wire dense exchange failed"),
+            None => ctx.layout.total_params(),
+        };
         let rep = ctx.topo.dense_bytes_only(ctx.net, total, ctx.arena);
         WireOutcome {
             wire_bytes_per_node: rep.total_bytes() / ctx.nodes as u64,
@@ -350,6 +363,12 @@ impl Compressor for TernaryCompressor {
         let t0 = ctx.net.clock();
         let n = ctx.nodes;
         let t = TernGrad::encode(&ctx.grads[0], ctx.layout, &mut ctx.rngs[0]);
+        // Wire path: the representative blob spreads over real
+        // sockets; its decoded shape prices every node's blob.
+        let t = match ctx.wire.as_deref_mut() {
+            Some(w) => w.spread_tern_grad(&t).expect("wire ternary spread failed"),
+            None => t,
+        };
         let blob = t.wire_bytes();
         // Ternary values are not closed under addition, so no topology
         // can scatter-REDUCE them — the quantized blobs must spread
@@ -488,11 +507,14 @@ impl SharedMaskCompressor {
     /// broadcaster masks locally, spread them, then spread every node's
     /// ternary-encoded compacted payload (not closed under addition —
     /// no scatter-reduce). Returns `(shared, blob_bytes, total_bytes)`.
+    /// On the wire path a support-shaped blob spreads over real
+    /// sockets and its *decoded* length prices the blobs.
     fn tern_wire(
         &self,
         ctx_net: &mut RingNet,
         topo: &dyn Topology,
         arena: &mut Arena,
+        wire: Option<&mut WireRing>,
         mask_refs: &[&BitMask],
         nodes: usize,
         total: usize,
@@ -502,7 +524,20 @@ impl SharedMaskCompressor {
             shared.or_assign(m);
         }
         let rep_mask = topo.spread_bytes(ctx_net, shared.wire_bytes(), mask_refs.len(), arena);
-        let blob = TernBlob::wire_bytes_for(shared.count());
+        let nnz = match wire {
+            Some(w) => {
+                let probe = TernBlob {
+                    len: shared.count(),
+                    scale: 0.0,
+                    codes: vec![0u8; shared.count().div_ceil(4)],
+                };
+                w.spread_tern_blob(&probe)
+                    .expect("wire ternary blob spread failed")
+                    .len
+            }
+            None => shared.count(),
+        };
+        let blob = TernBlob::wire_bytes_for(nnz);
         let rep_blob = topo.spread_bytes(ctx_net, blob, nodes, arena);
         (shared, blob, rep_mask.total_bytes() + rep_blob.total_bytes())
     }
@@ -587,15 +622,33 @@ impl Compressor for SharedMaskCompressor {
                 self.prev_stats[li].merge(st);
             }
         }
-        let mask_refs: Vec<&BitMask> = broadcasters
-            .iter()
-            .map(|&b| &self.scratch[b].mask)
-            .collect();
+        // Wire path: each broadcaster's mask spreads over real sockets
+        // (Alg. 1's mask AllGather) and the *decoded* copies feed the
+        // OR, the byte accounting, and the residual clear below — a
+        // codec bit flip would corrupt the shared support and diverge
+        // every subsequent step.
+        let decoded_masks: Option<Vec<BitMask>> = ctx.wire.as_deref_mut().map(|w| {
+            broadcasters
+                .iter()
+                .map(|&b| {
+                    w.spread_mask(b, &self.scratch[b].mask)
+                        .expect("wire mask spread failed")
+                })
+                .collect()
+        });
+        let mask_refs: Vec<&BitMask> = match &decoded_masks {
+            Some(ms) => ms.iter().collect(),
+            None => broadcasters
+                .iter()
+                .map(|&b| &self.scratch[b].mask)
+                .collect(),
+        };
         let (shared, wire, payload) = if self.spec.tern {
             let (shared, blob, total_bytes) = self.tern_wire(
                 ctx.net,
                 ctx.topo,
                 ctx.arena,
+                ctx.wire.as_deref_mut(),
                 &mask_refs,
                 ctx.nodes,
                 total,
@@ -921,6 +974,15 @@ impl Compressor for PerNodeCompressor {
                     k,
                     total,
                 ));
+                // Wire path: every support allgathers over real
+                // sockets; the decoded masks drive the densification
+                // measurement below.
+                let supports = match ctx.wire.as_deref_mut() {
+                    Some(w) => w
+                        .allgather_supports(&supports)
+                        .expect("wire support allgather failed"),
+                    None => supports,
+                };
                 let rep =
                     ctx.topo
                         .sparse_support(ctx.net, &supports, ctx.exec, ctx.arena);
@@ -962,6 +1024,12 @@ impl Compressor for PerNodeCompressor {
                     k,
                     total,
                 ));
+                let supports = match ctx.wire.as_deref_mut() {
+                    Some(w) => w
+                        .allgather_supports(&supports)
+                        .expect("wire support allgather failed"),
+                    None => supports,
+                };
                 let rep =
                     ctx.topo
                         .sparse_support(ctx.net, &supports, ctx.exec, ctx.arena);

@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::compress::{Method, MethodSpec};
-use crate::net::TopoKind;
+use crate::net::{TopoKind, TransportKind};
 use crate::util::cli::Args;
 
 /// Everything a training / experiment run needs.
@@ -64,6 +64,11 @@ pub struct Config {
     /// §10): `flat` | `hier:<group_size>` | `tree`. Flat is the paper's
     /// testbed and the pre-topology behaviour, bit for bit.
     pub topology: TopoKind,
+    /// Payload transport (`net::wire`, DESIGN.md §13): `sim` keeps
+    /// everything virtual; `uds` | `tcp` route every traveling payload
+    /// through a real socket ring whose decoded frames must reproduce
+    /// the simulator bit for bit. Defaults from `RINGIWP_TRANSPORT`.
+    pub transport: TransportKind,
     /// Artifact directory (`make artifacts` output).
     pub artifacts_dir: String,
     /// Output directory for CSVs and logs.
@@ -94,6 +99,7 @@ impl Default for Config {
             latency_us: 100.0,
             parallelism: 1,
             topology: TopoKind::Flat,
+            transport: TransportKind::from_env(),
             artifacts_dir: "artifacts".into(),
             out_dir: "results".into(),
         }
@@ -134,6 +140,9 @@ impl Config {
         if let Some(t) = a.str_opt("topology") {
             self.topology = TopoKind::parse(t)?;
         }
+        if let Some(t) = a.str_opt("transport") {
+            self.transport = TransportKind::parse(t)?;
+        }
         self.artifacts_dir = a.str_or("artifacts", &self.artifacts_dir);
         self.out_dir = a.str_or("out", &self.out_dir);
         self.validate()?;
@@ -164,6 +173,7 @@ impl Config {
                 "latency_us" => self.latency_us = v.parse()?,
                 "parallelism" => self.parallelism = v.parse()?,
                 "topology" => self.topology = TopoKind::parse(v)?,
+                "transport" => self.transport = TransportKind::parse(v)?,
                 "artifacts_dir" => self.artifacts_dir = v.clone(),
                 "out_dir" => self.out_dir = v.clone(),
                 other => anyhow::bail!("unknown config key `{other}`"),
@@ -339,6 +349,26 @@ mod tests {
         assert_eq!(Config::default().topology, TopoKind::Flat);
         let a = Args::parse(
             ["train", "--topology", "mesh"].into_iter().map(String::from),
+        );
+        assert!(Config::default().apply_args(&a).is_err());
+    }
+
+    #[test]
+    fn transport_knob_flows_from_flag_and_file() {
+        let a = Args::parse(
+            ["train", "--transport", "uds"].into_iter().map(String::from),
+        );
+        let cfg = Config::default().apply_args(&a).unwrap();
+        assert_eq!(cfg.transport, TransportKind::Uds);
+        let kv = parse_kv("transport = tcp").unwrap();
+        assert_eq!(
+            Config::default().apply_kv(&kv).unwrap().transport,
+            TransportKind::Tcp
+        );
+        let a = Args::parse(
+            ["train", "--transport", "carrier-pigeon"]
+                .into_iter()
+                .map(String::from),
         );
         assert!(Config::default().apply_args(&a).is_err());
     }

@@ -22,13 +22,19 @@
 //! only non-replayable field; `metrics::bench::canonical` strips it
 //! (plus provenance) for the determinism checks, and `timing: false`
 //! omits it entirely.
+//!
+//! `--transport uds|tcp` routes the step sweep through the real socket
+//! ring (`net::wire`, DESIGN.md §13). Every deterministic row field is
+//! bit-identical to the `sim` transport by the transport-equivalence
+//! oracle; only `ns_op` (and the rows' `transport` label) moves. The
+//! ring sweep drives schedules below the engine seam and stays virtual.
 
 use crate::compress::{Method, MethodSpec};
-use crate::exp::simrun::{SimCfg, SimEngine};
+use crate::exp::simrun::{SimCfg, SimEngine, WireEngine};
 use crate::metrics::bench::BenchReport;
 use crate::model::{zoo, LayerKind, ParamLayout};
 use crate::net::topo::pipeline;
-use crate::net::{CostModel, LinkSpec, PipeInner, RingNet, TopoKind, Topology};
+use crate::net::{CostModel, LinkSpec, PipeInner, RingNet, TopoKind, Topology, TransportKind};
 use crate::ring::{Arena, Executor, ReduceReport};
 use crate::sparse::{BitMask, SparseVec};
 use crate::util::json::Json;
@@ -51,6 +57,11 @@ pub struct BenchCfg {
     pub seed: u64,
     /// Link bandwidth/latency parameterizing the virtual wire time.
     pub link: LinkSpec,
+    /// Step-sweep transport (`--transport`): `sim` stays virtual; `uds`
+    /// / `tcp` route payloads through a real in-process socket ring.
+    /// Pinned to `sim` by default (not `RINGIWP_TRANSPORT`) so baseline
+    /// payloads are environment-independent, like the topology pin.
+    pub transport: TransportKind,
 }
 
 impl Default for BenchCfg {
@@ -62,6 +73,7 @@ impl Default for BenchCfg {
             ring_sizes: vec![4, 8, 32, 96],
             seed: 42,
             link: LinkSpec::gigabit_ethernet(),
+            transport: TransportKind::Sim,
         }
     }
 }
@@ -108,6 +120,7 @@ impl BenchCfg {
             ("seed", Json::from(self.seed.to_string().as_str())),
             ("bandwidth_bps", Json::from(self.link.bandwidth_bps)),
             ("latency_s", Json::from(self.link.latency_s)),
+            ("transport", Json::from(self.transport.name())),
         ])
     }
 }
@@ -382,44 +395,83 @@ pub fn run_step(cfg: &BenchCfg) -> BenchReport {
                     // gate's deterministic fields — environment-
                     // dependent.
                     topology: TopoKind::Flat,
+                    // Pinned for the same reason: the wire is the
+                    // harness's own in-process ring, never an external
+                    // RINGIWP_WIRE_DIR rendezvous.
+                    transport: cfg.transport,
+                    wire_dir: None,
                     ..Default::default()
                 };
-                // Deterministic metrics pass.
-                let mut engine = SimEngine::new(layout.clone(), sim.clone());
+                // Deterministic metrics pass — over the real socket
+                // ring when a wire transport is selected (bit-identical
+                // fields by the transport-equivalence oracle).
                 let steps = cfg.metric_steps();
                 let (mut wire_sum, mut secs, mut density) = (0u64, 0.0f64, 0.0f64);
-                for s in 0..steps {
-                    let r = engine.step(s);
-                    wire_sum += r.wire_bytes_per_node;
-                    secs += r.seconds;
-                    density = r.density;
-                }
+                let (wire_ratio, payload_ratio, topology) = if cfg.transport.is_wire() {
+                    let mut engine =
+                        WireEngine::new(layout.clone(), sim.clone()).expect("wire ring");
+                    for s in 0..steps {
+                        let r = engine.step(s).report;
+                        wire_sum += r.wire_bytes_per_node;
+                        secs += r.seconds;
+                        density = r.density;
+                    }
+                    let acct = &engine.sim().account;
+                    (
+                        acct.ratio(),
+                        acct.payload_ratio(),
+                        engine.sim().topology().name(),
+                    )
+                } else {
+                    let mut engine = SimEngine::new(layout.clone(), sim.clone());
+                    for s in 0..steps {
+                        let r = engine.step(s);
+                        wire_sum += r.wire_bytes_per_node;
+                        secs += r.seconds;
+                        density = r.density;
+                    }
+                    (
+                        engine.account.ratio(),
+                        engine.account.payload_ratio(),
+                        engine.topology().name(),
+                    )
+                };
                 // Timing pass on a fresh engine (the metrics pass above
                 // doubles as its cache/branch warm-up).
                 let ns = cfg.timing.then(|| {
-                    let mut e = SimEngine::new(layout.clone(), sim.clone());
                     let mut s = 0usize;
-                    timer::bench(1, cfg.repeats.max(1), || {
-                        std::hint::black_box(e.step(s));
-                        s += 1;
-                    })
-                    .median_ns
+                    if cfg.transport.is_wire() {
+                        let mut e =
+                            WireEngine::new(layout.clone(), sim.clone()).expect("wire ring");
+                        timer::bench(1, cfg.repeats.max(1), || {
+                            std::hint::black_box(e.step(s));
+                            s += 1;
+                        })
+                        .median_ns
+                    } else {
+                        let mut e = SimEngine::new(layout.clone(), sim.clone());
+                        timer::bench(1, cfg.repeats.max(1), || {
+                            std::hint::black_box(e.step(s));
+                            s += 1;
+                        })
+                        .median_ns
+                    }
                 });
                 let id = format!("step/{model_name}/{}/n{n}", method.name());
-                let topology = engine.topology().name();
                 let method_name = method.name();
                 let mut fields = vec![
                     ("id", Json::from(id.as_str())),
                     ("model", Json::from(*model_name)),
                     ("method", Json::from(method_name.as_str())),
                     ("topology", Json::from(topology.as_str())),
+                    ("transport", Json::from(cfg.transport.name())),
                     ("nodes", Json::from(n)),
                     ("params", Json::from(layout.total_params())),
                     ("bytes_per_node", Json::from(wire_sum as f64 / steps as f64)),
                     ("virtual_s", Json::from(secs)),
                     ("density", Json::from(density)),
-                    ("wire_ratio", Json::from(engine.account.ratio())),
-                    ("payload_ratio", Json::from(engine.account.payload_ratio())),
+                    ("wire_ratio", Json::from(wire_ratio)),
+                    ("payload_ratio", Json::from(payload_ratio)),
                 ];
                 if let Some(ns) = ns {
                     fields.push(("ns_op", Json::from(ns)));
@@ -488,6 +540,40 @@ mod tests {
                 methods.iter().any(|m| m == want),
                 "step sweep must carry `{want}` rows (got {methods:?})"
             );
+        }
+    }
+
+    #[test]
+    fn step_rows_over_uds_match_sim_bit_for_bit() {
+        // Bench-level statement of the transport oracle (the full
+        // matrix lives in rust/tests/transport_equivalence.rs): same
+        // cfg, transport flipped — every deterministic row field is
+        // bit-identical, only the `transport` label moves.
+        let sim_cfg = BenchCfg {
+            ring_sizes: vec![4],
+            ..tiny_cfg()
+        };
+        let uds_cfg = BenchCfg {
+            transport: TransportKind::Uds,
+            ..sim_cfg.clone()
+        };
+        let a = run_step(&sim_cfg).to_json();
+        let b = run_step(&uds_cfg).to_json();
+        let (ra, rb) = (a.get("rows").as_arr().unwrap(), b.get("rows").as_arr().unwrap());
+        assert_eq!(ra.len(), rb.len());
+        for (x, y) in ra.iter().zip(rb) {
+            let id = x.get("id").as_str().unwrap().to_string();
+            assert_eq!(id, y.get("id").as_str().unwrap());
+            assert_eq!(x.get("transport").as_str(), Some("sim"));
+            assert_eq!(y.get("transport").as_str(), Some("uds"));
+            for field in ["bytes_per_node", "virtual_s", "density", "wire_ratio", "payload_ratio"]
+            {
+                assert_eq!(
+                    x.get(field).as_f64().unwrap().to_bits(),
+                    y.get(field).as_f64().unwrap().to_bits(),
+                    "{id}: `{field}` drifts across transports"
+                );
+            }
         }
     }
 

@@ -19,7 +19,7 @@ use crate::compress::{Compressor, Method, MethodSpec};
 use crate::grad::SynthGrads;
 use crate::metrics::CompressionAccount;
 use crate::model::ParamLayout;
-use crate::net::{LinkSpec, RingNet, TopoKind, Topology};
+use crate::net::{LinkSpec, RingNet, TopoKind, Topology, TransportKind, WireError, WireRing};
 use crate::ring::{Arena, Executor};
 use crate::util::rng::Rng;
 
@@ -61,6 +61,15 @@ pub struct SimCfg {
     /// DESIGN.md §10). Defaults to `RINGIWP_TOPOLOGY`, else the flat
     /// ring — which is bit-identical to the pre-topology engine.
     pub topology: TopoKind,
+    /// Transport the engine runs on (`net::wire`, DESIGN.md §13):
+    /// `sim` stays in-process; `uds`/`tcp` route every traveling
+    /// payload through real sockets via [`WireEngine`]. Defaults to
+    /// `RINGIWP_TRANSPORT`, else `sim`.
+    pub transport: TransportKind,
+    /// Rendezvous directory of an external `ringiwp serve` ring; when
+    /// set (flag or `RINGIWP_WIRE_DIR`), [`WireEngine`] attaches to
+    /// the serve ranks instead of spawning in-process ones.
+    pub wire_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for SimCfg {
@@ -84,6 +93,8 @@ impl Default for SimCfg {
             link: LinkSpec::gigabit_ethernet(),
             parallelism: default_parallelism(),
             topology: TopoKind::from_env(),
+            transport: TransportKind::from_env(),
+            wire_dir: std::env::var_os("RINGIWP_WIRE_DIR").map(std::path::PathBuf::from),
         }
     }
 }
@@ -253,10 +264,27 @@ impl SimEngine {
         (&self.imp_scratch, &self.snap_stats)
     }
 
+    /// Install a per-hop link table (e.g. the wire handshake's,
+    /// DESIGN.md §13). A uniform table equal to `cfg.link` leaves
+    /// every report bit-identical.
+    pub fn set_links(&mut self, links: Vec<LinkSpec>) {
+        self.net.set_links(links);
+    }
+
     /// One synchronous step: generate per-node gradients, compress,
     /// ring-reduce, account. Per-node work fans out over the configured
     /// executor; reports are bit-identical at any `parallelism`.
     pub fn step(&mut self, step: usize) -> StepReport {
+        self.step_wired(step, None)
+    }
+
+    /// [`SimEngine::step`] with an optional real socket ring: when
+    /// `wire` is set, the configured pipeline routes every traveling
+    /// payload through it and consumes only the decoded frames
+    /// (`compress::pipeline::SimCtx::wire`), so the report stays
+    /// bit-identical to the pure simulation iff the transport is
+    /// faithful — the `transport_equivalence` oracle contract.
+    pub fn step_wired(&mut self, step: usize, wire: Option<&mut WireRing>) -> StepReport {
         let epoch = step / self.cfg.steps_per_epoch.max(1);
         let sim_nodes = self.grads.len();
         // Only materialize the gradient streams this pipeline consumes
@@ -294,6 +322,7 @@ impl SimEngine {
                 arena: &mut self.arena,
                 rngs: &mut self.rngs,
                 ctl_rng: &mut self.ctl_rng,
+                wire,
             };
             self.comp.sim_step(&mut ctx)
         };
@@ -315,6 +344,92 @@ impl SimEngine {
             wire_seconds: out.wire_seconds,
             support_nnz: out.support_nnz,
         }
+    }
+}
+
+/// One [`WireEngine`] step: the oracle-comparable virtual report plus
+/// the real-transport measurements next to it.
+#[derive(Debug, Clone)]
+pub struct WireStepReport {
+    /// The step report — bit-identical to [`SimEngine::step`] on the
+    /// same seeds when the transport is faithful.
+    pub report: StepReport,
+    /// Real wall-clock seconds this step spent (compare against
+    /// `report.wire_seconds`, the `CostModel` virtual prediction).
+    pub wall_seconds: f64,
+    /// Real bytes that traversed ring edges this step (frame length ×
+    /// hops — includes frame headers, so it sits above the virtual
+    /// payload accounting).
+    pub real_bytes: u64,
+}
+
+/// The socket-transport engine (DESIGN.md §13): a [`SimEngine`]
+/// compute core with every traveling payload routed through a
+/// [`WireRing`]. The simulator stays the bit-exact oracle — this
+/// engine must reproduce its `StepReport`s exactly
+/// (`rust/tests/transport_equivalence.rs`) while recording real
+/// wall-clock and real wire bytes next to the virtual accounting.
+pub struct WireEngine {
+    sim: SimEngine,
+    ring: WireRing,
+}
+
+impl WireEngine {
+    /// Build the engine for `cfg.transport` (`uds` or `tcp`): spawn an
+    /// in-process socket ring, or attach to external `ringiwp serve`
+    /// ranks when `cfg.wire_dir` is set. The handshake's per-hop link
+    /// table (uniform `cfg.link` today) is installed into the virtual
+    /// net — bit-for-bit equal to the global-link default.
+    pub fn new(layout: ParamLayout, cfg: SimCfg) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            cfg.transport.is_wire(),
+            "WireEngine needs --transport uds|tcp (got `{}`)",
+            cfg.transport
+        );
+        let links = vec![cfg.link; cfg.nodes];
+        let ring = match &cfg.wire_dir {
+            Some(dir) => WireRing::connect_external(dir, cfg.transport, links)?,
+            None => WireRing::new_in_process(cfg.transport, links)?,
+        };
+        let mut sim = SimEngine::new(layout, cfg);
+        sim.set_links(ring.links().to_vec());
+        Ok(WireEngine { sim, ring })
+    }
+
+    /// The underlying simulation core (accounting, layout, snapshots).
+    pub fn sim(&self) -> &SimEngine {
+        &self.sim
+    }
+
+    /// Mutable access to the core (e.g. `importance_snapshot`).
+    pub fn sim_mut(&mut self) -> &mut SimEngine {
+        &mut self.sim
+    }
+
+    /// The socket ring under this engine.
+    pub fn ring(&self) -> &WireRing {
+        &self.ring
+    }
+
+    /// One step over real sockets. Panics (via the pipeline's
+    /// `expect`) if the wire corrupts a payload mid-step; transport
+    ///-level failures before that surface as typed [`WireError`]s in
+    /// [`WireEngine::shutdown`].
+    pub fn step(&mut self, step: usize) -> WireStepReport {
+        let t0 = std::time::Instant::now();
+        let b0 = self.ring.real_bytes();
+        self.ring.begin_step(step as u32);
+        let report = self.sim.step_wired(step, Some(&mut self.ring));
+        WireStepReport {
+            report,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            real_bytes: self.ring.real_bytes() - b0,
+        }
+    }
+
+    /// Tear the socket ring down (also runs on drop).
+    pub fn shutdown(&mut self) -> Result<(), WireError> {
+        self.ring.shutdown()
     }
 }
 
@@ -488,6 +603,50 @@ mod tests {
         e.step(0);
         assert_eq!(e.prev_stats().len(), e.layout().n_layers());
         assert!(e.prev_stats()[0].n > 0.0);
+    }
+
+    #[test]
+    fn wire_engine_matches_sim_engine_bit_for_bit() {
+        // The in-module smoke version of the transport-equivalence
+        // oracle (the full matrix lives in
+        // rust/tests/transport_equivalence.rs): a UDS WireEngine must
+        // reproduce SimEngine's StepReports exactly.
+        let layout = small_layout();
+        for spec in ["baseline", "iwp:fixed", "terngrad"] {
+            let mut c = spec_cfg(spec, 4);
+            c.transport = TransportKind::Uds;
+            c.wire_dir = None;
+            let mut sim = SimEngine::new(layout.clone(), c.clone());
+            let mut wire = WireEngine::new(layout.clone(), c).unwrap();
+            for s in 0..3 {
+                let a = sim.step(s);
+                let b = wire.step(s);
+                assert_eq!(
+                    a.wire_bytes_per_node, b.report.wire_bytes_per_node,
+                    "{spec} step {s}"
+                );
+                assert_eq!(a.support_nnz, b.report.support_nnz, "{spec} step {s}");
+                assert_eq!(a.density.to_bits(), b.report.density.to_bits(), "{spec}");
+                assert_eq!(a.seconds.to_bits(), b.report.seconds.to_bits(), "{spec}");
+                assert_eq!(
+                    a.wire_seconds.to_bits(),
+                    b.report.wire_seconds.to_bits(),
+                    "{spec}"
+                );
+                assert!(b.wall_seconds >= 0.0);
+                assert!(b.real_bytes > 0, "{spec}: frames must traverse the ring");
+            }
+            wire.shutdown().unwrap();
+        }
+    }
+
+    #[test]
+    fn wire_engine_rejects_sim_transport() {
+        let c = SimCfg {
+            transport: TransportKind::Sim,
+            ..cfg(Method::Baseline, 4)
+        };
+        assert!(WireEngine::new(small_layout(), c).is_err());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //!   train   — run the N-node simulated-ring trainer on a real model
 //!   exp     — regenerate a paper table/figure (table1, fig2, …, all)
 //!   bench   — emit machine-readable BENCH_*.json perf payloads
+//!   serve   — run one wire-transport rank (net::wire, DESIGN.md §13)
 //!   methods — list the registered compression-pipeline specs
 //!   info    — show artifacts, platform, model inventories
 //!   help    — this text
@@ -61,6 +62,18 @@ SUBCOMMANDS:
                                     (already-seeded sections are untouched)
                   --diff DIR_A DIR_B  compare two output dirs' payloads
                                     modulo volatile fields (exit 1 on drift)
+                  --transport sim|uds|tcp  run the step suite over the
+                                    real socket ring (net::wire) instead
+                                    of the virtual-only transport; rows
+                                    carry a `transport` column either way
+                                    (env RINGIWP_TRANSPORT sets the
+                                    default; DESIGN.md §13)
+    serve       run one wire-transport rank until its coordinator
+                connects (EXPERIMENTS.md §10):
+                  --rank N --nodes N  this rank's id / ring size
+                  --dir DIR           rendezvous directory (default wire)
+                  --transport uds|tcp (default uds)
+                  --once              serve one session then exit
     methods     list the registered compression-pipeline specs with
                 one-line descriptions (the --method registry)
     info        list artifacts, PJRT platform, zoo inventories
@@ -119,6 +132,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("train") => cmd_train(args),
         Some("exp") => cmd_exp(args),
         Some("bench") => cmd_bench(args),
+        Some("serve") => cmd_serve(args),
         Some("methods") => cmd_methods(),
         Some("info") => cmd_info(args),
         Some("help") | None => {
@@ -270,6 +284,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         seed: args.u64_or("seed", 42),
         ..Default::default()
     };
+    if let Some(t) = args.str_opt("transport") {
+        cfg.transport = ringiwp::net::TransportKind::parse(t)?;
+    }
     if let Some(sizes) = args.str_opt("ring-sizes") {
         cfg.ring_sizes = sizes
             .split(',')
@@ -416,6 +433,39 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             anyhow::bail!("{} bench regression(s) vs {baseline_path}", failures.len());
         }
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use ringiwp::net::wire::serve_rank;
+    use ringiwp::net::TransportKind;
+
+    let rank = args
+        .str_opt("rank")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --rank N"))?
+        .parse::<u16>()
+        .map_err(|_| anyhow::anyhow!("--rank expects a small integer"))?;
+    let nodes = args
+        .str_opt("nodes")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --nodes N"))?
+        .parse::<u16>()
+        .map_err(|_| anyhow::anyhow!("--nodes expects a small integer"))?;
+    anyhow::ensure!(nodes >= 2, "serve needs --nodes >= 2");
+    anyhow::ensure!(rank < nodes, "--rank must be < --nodes");
+    let dir = args.str_or("dir", "wire");
+    let transport = TransportKind::parse(&args.str_or("transport", "uds"))?;
+    anyhow::ensure!(
+        transport.is_wire(),
+        "serve needs a socket transport (--transport uds|tcp)"
+    );
+    let once = args.switch("once");
+    std::fs::create_dir_all(&dir)?;
+    println!(
+        "serve: rank {rank}/{nodes} over {transport} in {dir} \
+         (coordinator: set RINGIWP_WIRE_DIR={dir} RINGIWP_TRANSPORT={transport})"
+    );
+    let sessions = serve_rank(std::path::Path::new(&dir), rank, nodes, transport, once)?;
+    println!("serve: rank {rank} served {sessions} session(s)");
     Ok(())
 }
 

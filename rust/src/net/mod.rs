@@ -13,16 +13,23 @@
 //!   connection",
 //! * per-node transmit traces are bucketed over virtual time to produce
 //!   the KB/s plots of Figs. 7/8.
+//!
+//! The virtual network is also the bit-exact oracle for the real
+//! socket transport (`net::wire`, DESIGN.md §13): `WireEngine` runs
+//! the same accounting through this module while moving actual frames
+//! over Unix domain sockets or loopback TCP.
 
 pub mod cost;
 pub mod link;
 pub mod topo;
 pub mod trace;
+pub mod wire;
 
 pub use cost::CostModel;
 pub use link::LinkSpec;
 pub use topo::{PipeInner, TopoKind, Topology};
 pub use trace::Trace;
+pub use wire::{TransportKind, WireError, WireRing};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -43,6 +50,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub struct RingNet {
     n: usize,
     spec: LinkSpec,
+    /// Per-hop link parameters (entry `i` = node `i`'s outgoing edge),
+    /// the heterogeneous-link seam of ROADMAP item 3. `None` means
+    /// every hop uses `spec` — bit-for-bit today's uniform behavior
+    /// (and a uniform `Some` table is equally bit-identical, which the
+    /// wire handshake relies on).
+    links: Option<Vec<LinkSpec>>,
     clock: f64,
     /// Cumulative bytes sent on each node's outgoing link (atomic so
     /// concurrent per-node senders can account without a lock).
@@ -57,6 +70,7 @@ impl Clone for RingNet {
         RingNet {
             n: self.n,
             spec: self.spec,
+            links: self.links.clone(),
             clock: self.clock,
             tx_bytes: self
                 .tx_bytes
@@ -77,10 +91,36 @@ impl RingNet {
         RingNet {
             n,
             spec,
+            links: None,
             clock: 0.0,
             tx_bytes: (0..n).map(|_| AtomicU64::new(0)).collect(),
             trace: Trace::new(n, trace_bucket_s),
             rounds: 0,
+        }
+    }
+
+    /// Build a ring with an explicit per-hop link table (entry `i` =
+    /// node `i`'s outgoing edge). `links[0]` doubles as the headline
+    /// `spec` for reporting.
+    pub fn with_links(links: Vec<LinkSpec>, trace_bucket_s: f64) -> Self {
+        let mut net = Self::new(links.len(), links[0], trace_bucket_s);
+        net.links = Some(links);
+        net
+    }
+
+    /// Install a per-hop link table (e.g. from the wire handshake,
+    /// DESIGN.md §13). Must cover every hop.
+    pub fn set_links(&mut self, links: Vec<LinkSpec>) {
+        assert_eq!(links.len(), self.n, "one link per ring hop");
+        self.links = Some(links);
+    }
+
+    /// Link parameters of node `node`'s outgoing edge.
+    #[inline]
+    pub fn link_of(&self, node: usize) -> &LinkSpec {
+        match &self.links {
+            Some(ls) => &ls[node],
+            None => &self.spec,
         }
     }
 
@@ -99,7 +139,8 @@ impl RingNet {
         self.rounds
     }
 
-    /// The homogeneous link parameters of this ring.
+    /// The headline link parameters of this ring (the uniform link,
+    /// or hop 0 when a per-hop table is installed).
     pub fn spec(&self) -> &LinkSpec {
         &self.spec
     }
@@ -120,14 +161,15 @@ impl RingNet {
         assert_eq!(bytes.len(), self.n);
         let dur = bytes
             .iter()
-            .map(|&b| self.spec.transfer_time(b))
+            .enumerate()
+            .map(|(i, &b)| self.link_of(i).transfer_time(b))
             .fold(0.0f64, f64::max);
         for (i, &b) in bytes.iter().enumerate() {
             if b > 0 {
                 self.record_tx(i, b);
                 // Spread the bytes over this node's actual transfer window.
                 self.trace
-                    .add(self.clock, self.spec.transfer_time(b), i, b);
+                    .add(self.clock, self.link_of(i).transfer_time(b), i, b);
             }
         }
         self.clock += dur;
@@ -268,6 +310,45 @@ mod tests {
     #[should_panic(expected = "at least 2")]
     fn rejects_degenerate_ring() {
         let _ = RingNet::new(1, gigabit(), 1.0);
+    }
+
+    #[test]
+    fn uniform_link_table_is_bit_identical_to_global_link() {
+        let spec = gigabit();
+        let mut plain = RingNet::new(4, spec, 1.0);
+        let mut tabled = RingNet::with_links(vec![spec; 4], 1.0);
+        let mut a = 0.0f64;
+        let mut b = 0.0f64;
+        for bytes in [[10u64, 2000, 0, 77], [5, 5, 5, 5]] {
+            a += plain.round(&bytes);
+            b += tabled.round(&bytes);
+        }
+        a += plain.allgather(&[100, 200, 300, 400]);
+        b += tabled.allgather(&[100, 200, 300, 400]);
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_eq!(plain.clock().to_bits(), tabled.clock().to_bits());
+        assert_eq!(plain.total_bytes(), tabled.total_bytes());
+    }
+
+    #[test]
+    fn heterogeneous_links_slow_their_own_hop() {
+        // Hop 1 is 10x slower: a round where node 1 sends dominates.
+        let fast = LinkSpec::new(1000.0, 0.0);
+        let slow = LinkSpec::new(100.0, 0.0);
+        let mut net = RingNet::with_links(vec![fast, slow, fast], 1.0);
+        let dur = net.round(&[100, 100, 100]);
+        assert!((dur - 1.0).abs() < 1e-9, "{dur}"); // 100 B / 100 Bps
+        assert_eq!(net.link_of(1).bandwidth_bps, 100.0);
+        let mut uniform = RingNet::new(3, fast, 1.0);
+        uniform.set_links(vec![fast, slow, fast]);
+        assert_eq!(uniform.round(&[100, 100, 100]).to_bits(), dur.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "one link per ring hop")]
+    fn set_links_rejects_wrong_arity() {
+        let mut net = RingNet::new(3, gigabit(), 1.0);
+        net.set_links(vec![gigabit(); 2]);
     }
 
     #[test]

@@ -1,0 +1,380 @@
+//! Payload codecs for the four traveling representations plus the
+//! handshake bodies (DESIGN.md §13).
+//!
+//! Each codec is a pure `encode → Vec<u8>` / `decode → Result<T>`
+//! pair, byte-exact under roundtrip (f32/f64 travel as IEEE-754 bit
+//! patterns via `to_le_bytes`, so NaN payloads and negative zeros
+//! survive untouched). Decoders validate every length field against
+//! the bytes actually present and return typed [`WireError`]s —
+//! `tests/wire_codec.rs` drives the edge shapes (empty support,
+//! unaligned trailing mask words, single-element layers) and the
+//! malformed inputs.
+//!
+//! Layouts (all little-endian):
+//!
+//! ```text
+//! dense    : len u32 | len × f32
+//! support  : len u32 | ceil(len/8) mask bytes   (BitMask::encode_u8)
+//! masked   : len u32 | nnz u32 | ceil(len/8) mask bytes | nnz × f32
+//! terngrad : len u32 | n_scales u32 | n_scales × f32 | ceil(len/4) codes
+//! ternblob : len u32 | scale f32 | ceil(len/4) codes
+//! hello    : rank u16 | n u16
+//! helloack : n_links u32 | n_links × (bandwidth f64 | latency f64)
+//! ```
+
+use super::frame::WireError;
+use crate::compress::terngrad::{TernBlob, TernGrad};
+use crate::net::LinkSpec;
+use crate::sparse::BitMask;
+
+/// Byte cursor with typed truncation errors.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Truncated {
+                need: self.pos + n,
+                got: self.buf.len(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Bytes not yet consumed — bounds pre-allocation so a garbage
+    /// length field cannot reserve gigabytes before the take fails.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// All bytes consumed? Trailing garbage is corruption, not slack.
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Corrupt(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Guard a decoded length field before allocating.
+fn checked_len(len: u32, what: &str) -> Result<usize, WireError> {
+    if len > super::frame::MAX_PAYLOAD {
+        return Err(WireError::Corrupt(format!(
+            "{what} length {len} exceeds cap"
+        )));
+    }
+    Ok(len as usize)
+}
+
+// ---------------------------------------------------------------- dense
+
+/// Encode a dense f32 chunk.
+pub fn encode_dense(values: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + 4 * values.len());
+    out.extend_from_slice(&(values.len() as u32).to_le_bytes());
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a dense f32 chunk.
+pub fn decode_dense(buf: &[u8]) -> Result<Vec<f32>, WireError> {
+    let mut c = Cursor::new(buf);
+    let len = checked_len(c.u32()?, "dense")?;
+    let mut out = Vec::with_capacity(len.min(c.remaining() / 4));
+    for _ in 0..len {
+        out.push(c.f32()?);
+    }
+    c.finish()?;
+    Ok(out)
+}
+
+// -------------------------------------------------------------- support
+
+/// Encode a sparse support bitmask segment.
+pub fn encode_support(mask: &BitMask) -> Vec<u8> {
+    let bytes = mask.encode_u8();
+    let mut out = Vec::with_capacity(4 + bytes.len());
+    out.extend_from_slice(&(mask.len() as u32).to_le_bytes());
+    out.extend_from_slice(&bytes);
+    out
+}
+
+/// Decode a sparse support bitmask segment.
+pub fn decode_support(buf: &[u8]) -> Result<BitMask, WireError> {
+    let mut c = Cursor::new(buf);
+    let len = checked_len(c.u32()?, "support")?;
+    let mask_bytes = c.take(len.div_ceil(8))?;
+    c.finish()?;
+    BitMask::decode_u8(mask_bytes, len)
+        .map_err(|e| WireError::Corrupt(format!("support mask: {e}")))
+}
+
+// --------------------------------------------------------------- masked
+
+/// Encode a word-packed mask plus its compacted values. `values` must
+/// hold exactly `mask.count()` entries in support order.
+pub fn encode_masked(mask: &BitMask, values: &[f32]) -> Vec<u8> {
+    assert_eq!(
+        values.len(),
+        mask.count(),
+        "masked payload: values must match mask support"
+    );
+    let mask_bytes = mask.encode_u8();
+    let mut out = Vec::with_capacity(8 + mask_bytes.len() + 4 * values.len());
+    out.extend_from_slice(&(mask.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(values.len() as u32).to_le_bytes());
+    out.extend_from_slice(&mask_bytes);
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a masked blob into (mask, compacted values).
+pub fn decode_masked(buf: &[u8]) -> Result<(BitMask, Vec<f32>), WireError> {
+    let mut c = Cursor::new(buf);
+    let len = checked_len(c.u32()?, "masked")?;
+    let nnz = checked_len(c.u32()?, "masked nnz")?;
+    let mask_bytes = c.take(len.div_ceil(8))?;
+    let mask = BitMask::decode_u8(mask_bytes, len)
+        .map_err(|e| WireError::Corrupt(format!("masked mask: {e}")))?;
+    if mask.count() != nnz {
+        return Err(WireError::Corrupt(format!(
+            "masked payload: mask popcount {} != declared nnz {nnz}",
+            mask.count()
+        )));
+    }
+    let mut values = Vec::with_capacity(nnz.min(c.remaining() / 4));
+    for _ in 0..nnz {
+        values.push(c.f32()?);
+    }
+    c.finish()?;
+    Ok((mask, values))
+}
+
+// ------------------------------------------------------------- ternary
+
+/// Encode a per-layer-scaled [`TernGrad`].
+pub fn encode_tern_grad(t: &TernGrad) -> Vec<u8> {
+    debug_assert_eq!(t.codes.len(), t.len.div_ceil(4));
+    let mut out = Vec::with_capacity(8 + 4 * t.scales.len() + t.codes.len());
+    out.extend_from_slice(&(t.len as u32).to_le_bytes());
+    out.extend_from_slice(&(t.scales.len() as u32).to_le_bytes());
+    for s in &t.scales {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    out.extend_from_slice(&t.codes);
+    out
+}
+
+/// Decode a [`TernGrad`].
+pub fn decode_tern_grad(buf: &[u8]) -> Result<TernGrad, WireError> {
+    let mut c = Cursor::new(buf);
+    let len = checked_len(c.u32()?, "terngrad")?;
+    let n_scales = checked_len(c.u32()?, "terngrad scales")?;
+    let mut scales = Vec::with_capacity(n_scales.min(c.remaining() / 4));
+    for _ in 0..n_scales {
+        scales.push(c.f32()?);
+    }
+    let codes = c.take(len.div_ceil(4))?.to_vec();
+    c.finish()?;
+    Ok(TernGrad { len, scales, codes })
+}
+
+/// Encode a single-scale [`TernBlob`].
+pub fn encode_tern_blob(t: &TernBlob) -> Vec<u8> {
+    debug_assert_eq!(t.codes.len(), t.len.div_ceil(4));
+    let mut out = Vec::with_capacity(8 + t.codes.len());
+    out.extend_from_slice(&(t.len as u32).to_le_bytes());
+    out.extend_from_slice(&t.scale.to_le_bytes());
+    out.extend_from_slice(&t.codes);
+    out
+}
+
+/// Decode a [`TernBlob`].
+pub fn decode_tern_blob(buf: &[u8]) -> Result<TernBlob, WireError> {
+    let mut c = Cursor::new(buf);
+    let len = checked_len(c.u32()?, "ternblob")?;
+    let scale = c.f32()?;
+    let codes = c.take(len.div_ceil(4))?.to_vec();
+    c.finish()?;
+    Ok(TernBlob { len, scale, codes })
+}
+
+// ------------------------------------------------------------ handshake
+
+/// Encode a Hello body (rank + ring size; protocol version lives in
+/// the frame header, so skew is caught before the body is read).
+pub fn encode_hello(rank: u16, n: u16) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4);
+    out.extend_from_slice(&rank.to_le_bytes());
+    out.extend_from_slice(&n.to_le_bytes());
+    out
+}
+
+/// Decode a Hello body into (rank, ring size).
+pub fn decode_hello(buf: &[u8]) -> Result<(u16, u16), WireError> {
+    let mut c = Cursor::new(buf);
+    let rank = c.u16()?;
+    let n = c.u16()?;
+    c.finish()?;
+    Ok((rank, n))
+}
+
+/// Encode a HelloAck body carrying every hop's link parameters (the
+/// heterogeneous-link seam of ROADMAP item 3; entry `i` is rank `i`'s
+/// egress edge).
+pub fn encode_hello_ack(links: &[LinkSpec]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + 16 * links.len());
+    out.extend_from_slice(&(links.len() as u32).to_le_bytes());
+    for l in links {
+        out.extend_from_slice(&l.bandwidth_bps.to_le_bytes());
+        out.extend_from_slice(&l.latency_s.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a HelloAck body into per-hop link parameters.
+pub fn decode_hello_ack(buf: &[u8]) -> Result<Vec<LinkSpec>, WireError> {
+    let mut c = Cursor::new(buf);
+    let n = checked_len(c.u32()?, "helloack")?;
+    let mut links = Vec::with_capacity(n.min(c.remaining() / 16));
+    for _ in 0..n {
+        let bandwidth = c.f64()?;
+        let latency = c.f64()?;
+        if !(bandwidth > 0.0) || !(latency >= 0.0) {
+            return Err(WireError::Corrupt(format!(
+                "helloack link: bandwidth {bandwidth}, latency {latency}"
+            )));
+        }
+        links.push(LinkSpec::new(bandwidth, latency));
+    }
+    c.finish()?;
+    Ok(links)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip_bitexact() {
+        let v = vec![0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, -3.25e7];
+        let decoded = decode_dense(&encode_dense(&v)).unwrap();
+        assert_eq!(decoded.len(), v.len());
+        for (a, b) in v.iter().zip(&decoded) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(decode_dense(&encode_dense(&[])).unwrap().is_empty());
+    }
+
+    #[test]
+    fn support_roundtrip_unaligned_tail() {
+        // 67 bits: unaligned trailing mask word.
+        let mut m = BitMask::zeros(67);
+        for i in [0, 1, 31, 32, 63, 64, 66] {
+            m.set(i);
+        }
+        let d = decode_support(&encode_support(&m)).unwrap();
+        assert_eq!(d.len(), 67);
+        assert_eq!(d.count(), m.count());
+        for i in 0..67 {
+            assert_eq!(d.get(i), m.get(i), "bit {i}");
+        }
+    }
+
+    #[test]
+    fn masked_roundtrip_and_nnz_check() {
+        let mut m = BitMask::zeros(10);
+        m.set(2);
+        m.set(7);
+        let vals = vec![1.25f32, -2.5];
+        let (dm, dv) = decode_masked(&encode_masked(&m, &vals)).unwrap();
+        assert_eq!(dm.count(), 2);
+        assert_eq!(dv, vals);
+        // Declared nnz inconsistent with mask popcount is corrupt.
+        let mut bytes = encode_masked(&m, &vals);
+        bytes[4] = 3; // nnz field
+        assert!(matches!(decode_masked(&bytes), Err(WireError::Corrupt(_))));
+    }
+
+    #[test]
+    fn tern_roundtrips() {
+        let g = TernGrad {
+            len: 9,
+            scales: vec![0.5, 2.0],
+            codes: vec![0b01_10_00_01, 0b00_00_10_01, 0b10],
+        };
+        let d = decode_tern_grad(&encode_tern_grad(&g)).unwrap();
+        assert_eq!(d.len, g.len);
+        assert_eq!(d.codes, g.codes);
+        assert_eq!(d.scales, g.scales);
+        let b = TernBlob {
+            len: 5,
+            scale: 1.5,
+            codes: vec![0b10_01_00_01, 0b01],
+        };
+        let db = decode_tern_blob(&encode_tern_blob(&b)).unwrap();
+        assert_eq!((db.len, db.scale, &db.codes), (b.len, b.scale, &b.codes));
+    }
+
+    #[test]
+    fn handshake_roundtrips() {
+        assert_eq!(decode_hello(&encode_hello(3, 9)).unwrap(), (3, 9));
+        let links = vec![LinkSpec::new(1e9, 1e-4), LinkSpec::new(2e8, 0.0)];
+        let d = decode_hello_ack(&encode_hello_ack(&links)).unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].bandwidth_bps, 1e9);
+        assert_eq!(d[1].latency_s, 0.0);
+    }
+
+    #[test]
+    fn truncation_and_trailing_are_typed() {
+        let bytes = encode_dense(&[1.0, 2.0]);
+        assert!(matches!(
+            decode_dense(&bytes[..bytes.len() - 1]),
+            Err(WireError::Truncated { .. })
+        ));
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(matches!(decode_dense(&long), Err(WireError::Corrupt(_))));
+        assert!(matches!(
+            decode_support(&[1, 0, 0]),
+            Err(WireError::Truncated { .. })
+        ));
+    }
+}

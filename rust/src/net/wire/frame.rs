@@ -1,0 +1,367 @@
+//! Versioned, length-prefixed wire frames (DESIGN.md §13).
+//!
+//! Every message on a real ring edge travels as one frame: a fixed
+//! 20-byte little-endian header followed by `payload_len` payload
+//! bytes. The header carries everything the relay loop needs without
+//! touching the payload — kind, origin rank, remaining hop count
+//! (`ttl`), and the step epoch — so forwarding is a header rewrite
+//! plus a byte copy, never a re-encode.
+//!
+//! ```text
+//! offset  size  field        notes
+//! ------  ----  -----------  ----------------------------------------
+//!      0     4  magic        b"RIWP"
+//!      4     2  version      u16 LE, currently 1; mismatch is typed
+//!      6     1  kind         Dense|Sparse|Masked|Tern|Hello|HelloAck|Shutdown
+//!      7     1  flags        bit0 = FLAG_TERN_BLOB (Tern payload is a
+//!                            single-scale TernBlob, not a TernGrad)
+//!      8     2  origin       u16 LE, rank that injected the frame
+//!     10     2  ttl          u16 LE, ring-edge traversals remaining
+//!     12     4  epoch        u32 LE, step/handshake epoch stamp
+//!     16     4  payload_len  u32 LE
+//!     20     …  payload      codec-encoded (see `super::codec`)
+//! ```
+//!
+//! Decoding is total: malformed input returns a typed [`WireError`],
+//! never a panic — the transport-equivalence suite and
+//! `tests/wire_codec.rs` exercise truncation, bad magic, bad kind and
+//! version skew explicitly.
+
+use std::io::{Read, Write};
+
+/// Frame magic: ASCII "RIWP".
+pub const MAGIC: [u8; 4] = *b"RIWP";
+
+/// Current wire protocol version. Bump on any header or payload layout
+/// change; peers reject mismatches with [`WireError::Version`].
+pub const VERSION: u16 = 1;
+
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 20;
+
+/// Hard cap on a single frame payload (guards against garbage
+/// `payload_len` allocating gigabytes on a corrupt stream).
+pub const MAX_PAYLOAD: u32 = 1 << 30;
+
+/// Flag bit 0: the Tern payload is a single-scale `TernBlob` rather
+/// than a per-layer-scaled `TernGrad`.
+pub const FLAG_TERN_BLOB: u8 = 1;
+
+/// Frame kinds — the four payload codecs plus control traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Kind {
+    /// Dense f32 chunk.
+    Dense = 1,
+    /// Sparse support bitmask segment.
+    Sparse = 2,
+    /// Word-packed mask + compacted values blob.
+    Masked = 3,
+    /// Ternary blob (TernGrad or, with [`FLAG_TERN_BLOB`], TernBlob).
+    Tern = 4,
+    /// Handshake: rank → coordinator (version, rank, ring size).
+    Hello = 5,
+    /// Handshake reply: coordinator → rank (per-hop link parameters).
+    HelloAck = 6,
+    /// Orderly session teardown.
+    Shutdown = 7,
+}
+
+impl Kind {
+    /// Decode a kind byte.
+    pub fn from_u8(b: u8) -> Result<Kind, WireError> {
+        Ok(match b {
+            1 => Kind::Dense,
+            2 => Kind::Sparse,
+            3 => Kind::Masked,
+            4 => Kind::Tern,
+            5 => Kind::Hello,
+            6 => Kind::HelloAck,
+            7 => Kind::Shutdown,
+            other => return Err(WireError::BadKind(other)),
+        })
+    }
+}
+
+/// Typed transport failures. Everything a peer can receive off a
+/// socket decodes to one of these — the engines `expect` only on
+/// programmer errors, never on wire input.
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    /// Header does not start with `b"RIWP"`.
+    #[error("bad frame magic (expected \"RIWP\")")]
+    BadMagic,
+    /// Peer speaks a different protocol version.
+    #[error("wire protocol version mismatch: got {got}, want {want}")]
+    Version {
+        /// Version advertised by the peer.
+        got: u16,
+        /// Version this build speaks ([`VERSION`]).
+        want: u16,
+    },
+    /// Unknown kind byte.
+    #[error("unknown frame kind byte {0}")]
+    BadKind(u8),
+    /// Stream ended (or buffer was shorter) than the header promised.
+    #[error("truncated frame: needed {need} bytes, got {got}")]
+    Truncated {
+        /// Bytes the header/codec required.
+        need: usize,
+        /// Bytes actually available.
+        got: usize,
+    },
+    /// Structurally valid frame whose contents are inconsistent
+    /// (payload/shape mismatch, diverging relay copies, epoch skew).
+    #[error("corrupt frame: {0}")]
+    Corrupt(String),
+    /// Underlying socket failure (includes read timeouts).
+    #[error("wire i/o: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// One decoded wire frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    /// Payload kind.
+    pub kind: Kind,
+    /// Flag bits ([`FLAG_TERN_BLOB`]).
+    pub flags: u8,
+    /// Rank that injected the frame into the ring.
+    pub origin: u16,
+    /// Ring-edge traversals remaining (relays forward while > 1).
+    pub ttl: u16,
+    /// Step epoch stamp; receivers reject cross-epoch frames.
+    pub epoch: u32,
+    /// Codec-encoded payload bytes.
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Build a frame with no flags set.
+    pub fn new(kind: Kind, origin: u16, ttl: u16, epoch: u32, payload: Vec<u8>) -> Self {
+        Frame {
+            kind,
+            flags: 0,
+            origin,
+            ttl,
+            epoch,
+            payload,
+        }
+    }
+
+    /// Encode header + payload into a fresh buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + self.payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(self.kind as u8);
+        out.push(self.flags);
+        out.extend_from_slice(&self.origin.to_le_bytes());
+        out.extend_from_slice(&self.ttl.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Total encoded size in bytes.
+    pub fn encoded_len(&self) -> usize {
+        HEADER_LEN + self.payload.len()
+    }
+
+    /// Decode a frame from an in-memory buffer. The buffer must contain
+    /// exactly one frame (trailing bytes are rejected as corrupt).
+    pub fn decode(buf: &[u8]) -> Result<Frame, WireError> {
+        if buf.len() < HEADER_LEN {
+            return Err(WireError::Truncated {
+                need: HEADER_LEN,
+                got: buf.len(),
+            });
+        }
+        let (frame, used) = Self::decode_prefix(buf)?;
+        if used != buf.len() {
+            return Err(WireError::Corrupt(format!(
+                "{} trailing bytes after frame",
+                buf.len() - used
+            )));
+        }
+        Ok(frame)
+    }
+
+    /// Decode one frame from the front of `buf`, returning it and the
+    /// number of bytes consumed.
+    pub fn decode_prefix(buf: &[u8]) -> Result<(Frame, usize), WireError> {
+        if buf.len() < HEADER_LEN {
+            return Err(WireError::Truncated {
+                need: HEADER_LEN,
+                got: buf.len(),
+            });
+        }
+        let (kind, flags, origin, ttl, epoch, payload_len) = parse_header(&buf[..HEADER_LEN])?;
+        let total = HEADER_LEN + payload_len as usize;
+        if buf.len() < total {
+            return Err(WireError::Truncated {
+                need: total,
+                got: buf.len(),
+            });
+        }
+        let payload = buf[HEADER_LEN..total].to_vec();
+        Ok((
+            Frame {
+                kind,
+                flags,
+                origin,
+                ttl,
+                epoch,
+                payload,
+            },
+            total,
+        ))
+    }
+
+    /// Write the frame to a stream (single buffered write).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<(), WireError> {
+        w.write_all(&self.encode())?;
+        Ok(())
+    }
+
+    /// Read one frame off a stream. A clean EOF before any header byte
+    /// maps to [`WireError::Io`] with `UnexpectedEof`; a partial header
+    /// or payload does too (the socket layer cannot distinguish a
+    /// truncated frame from a dropped connection).
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+        let mut header = [0u8; HEADER_LEN];
+        r.read_exact(&mut header)?;
+        let (kind, flags, origin, ttl, epoch, payload_len) = parse_header(&header)?;
+        let mut payload = vec![0u8; payload_len as usize];
+        r.read_exact(&mut payload)?;
+        Ok(Frame {
+            kind,
+            flags,
+            origin,
+            ttl,
+            epoch,
+            payload,
+        })
+    }
+}
+
+/// Validate and split a 20-byte header.
+fn parse_header(h: &[u8]) -> Result<(Kind, u8, u16, u16, u32, u32), WireError> {
+    debug_assert_eq!(h.len(), HEADER_LEN);
+    if h[0..4] != MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    if version != VERSION {
+        return Err(WireError::Version {
+            got: version,
+            want: VERSION,
+        });
+    }
+    let kind = Kind::from_u8(h[6])?;
+    let flags = h[7];
+    let origin = u16::from_le_bytes([h[8], h[9]]);
+    let ttl = u16::from_le_bytes([h[10], h[11]]);
+    let epoch = u32::from_le_bytes([h[12], h[13], h[14], h[15]]);
+    let payload_len = u32::from_le_bytes([h[16], h[17], h[18], h[19]]);
+    if payload_len > MAX_PAYLOAD {
+        return Err(WireError::Corrupt(format!(
+            "payload_len {payload_len} exceeds cap {MAX_PAYLOAD}"
+        )));
+    }
+    Ok((kind, flags, origin, ttl, epoch, payload_len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Frame {
+        Frame {
+            kind: Kind::Masked,
+            flags: FLAG_TERN_BLOB,
+            origin: 3,
+            ttl: 8,
+            epoch: 42,
+            payload: vec![1, 2, 3, 4, 5],
+        }
+    }
+
+    #[test]
+    fn roundtrip_buffer() {
+        let f = sample();
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), f.encoded_len());
+        assert_eq!(Frame::decode(&bytes).unwrap(), f);
+    }
+
+    #[test]
+    fn roundtrip_stream() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(Frame::read_from(&mut cursor).unwrap(), f);
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut bytes = sample().encode();
+        bytes[0] = b'X';
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::BadMagic)));
+    }
+
+    #[test]
+    fn version_bump_is_typed() {
+        let mut bytes = sample().encode();
+        bytes[4] = (VERSION + 1) as u8;
+        match Frame::decode(&bytes) {
+            Err(WireError::Version { got, want }) => {
+                assert_eq!(got, VERSION + 1);
+                assert_eq!(want, VERSION);
+            }
+            other => panic!("expected Version error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_is_typed() {
+        let bytes = sample().encode();
+        for cut in [0, 3, HEADER_LEN - 1, HEADER_LEN, bytes.len() - 1] {
+            assert!(
+                matches!(Frame::decode(&bytes[..cut]), Err(WireError::Truncated { .. })),
+                "cut={cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_kind_and_trailing_bytes_are_typed() {
+        let mut bytes = sample().encode();
+        bytes[6] = 99;
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::BadKind(99))));
+        let mut bytes = sample().encode();
+        bytes.push(0);
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::Corrupt(_))));
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let f = Frame::new(Kind::Shutdown, 0, 0, 7, Vec::new());
+        assert_eq!(Frame::decode(&f.encode()).unwrap(), f);
+    }
+
+    #[test]
+    fn decode_prefix_consumes_exactly_one_frame() {
+        let a = sample();
+        let b = Frame::new(Kind::Dense, 1, 2, 3, vec![9]);
+        let mut bytes = a.encode();
+        bytes.extend_from_slice(&b.encode());
+        let (fa, used) = Frame::decode_prefix(&bytes).unwrap();
+        assert_eq!(fa, a);
+        let (fb, used2) = Frame::decode_prefix(&bytes[used..]).unwrap();
+        assert_eq!(fb, b);
+        assert_eq!(used + used2, bytes.len());
+    }
+}

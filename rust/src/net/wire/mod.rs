@@ -1,0 +1,539 @@
+//! Real socket ring transport (DESIGN.md §13).
+//!
+//! Everything below `net::wire` moves actual bytes: rank sessions
+//! relay length-prefixed [`frame::Frame`]s over Unix domain sockets
+//! (or loopback TCP behind `--transport tcp`), and the coordinator —
+//! [`WireRing`] — drives the collectives the compression pipelines
+//! need: dense chunk allgather, mask/ternary spreads, per-node support
+//! allgather. The in-process simulator stays the bit-exact oracle:
+//! `WireEngine` (`exp::simrun`) runs the identical compute core but
+//! routes every traveling payload through this module, consuming only
+//! the *decoded* frames, so any codec or relay corruption diverges the
+//! `StepReport` and the `transport_equivalence` suite catches it.
+//!
+//! Two wirings:
+//!
+//! * **in-process** — [`WireRing::new_in_process`] builds every ring
+//!   edge and control channel from connected socket pairs and spawns
+//!   the rank threads itself (the default for `--transport uds|tcp`);
+//! * **external** — `ringiwp serve --rank R` processes rendezvous with
+//!   the coordinator through a filesystem directory
+//!   ([`WireRing::connect_external`] + [`peer::serve_rank`]), selected
+//!   by `RINGIWP_WIRE_DIR`.
+//!
+//! The handshake (Hello → HelloAck) carries per-hop [`LinkSpec`]s —
+//! the heterogeneous-link seam of ROADMAP item 3 — and defaults to
+//! today's uniform link bit-for-bit.
+
+pub mod codec;
+pub mod frame;
+pub mod peer;
+
+pub use frame::{Frame, Kind, WireError, FLAG_TERN_BLOB, VERSION};
+pub use peer::{serve_rank, WireListener, WireStream};
+
+use std::path::Path;
+
+use crate::compress::terngrad::{TernBlob, TernGrad};
+use crate::net::LinkSpec;
+use crate::sparse::BitMask;
+use peer::{RankSession, READ_TIMEOUT};
+
+/// Which transport the engines run on (`--transport`, `RINGIWP_TRANSPORT`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Single-process virtual network (the default; the oracle).
+    Sim,
+    /// Unix domain sockets.
+    Uds,
+    /// Loopback TCP sockets.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse a CLI/config transport name.
+    pub fn parse(s: &str) -> anyhow::Result<TransportKind> {
+        Ok(match s {
+            "sim" => TransportKind::Sim,
+            "uds" => TransportKind::Uds,
+            "tcp" => TransportKind::Tcp,
+            other => anyhow::bail!("unknown transport `{other}` (sim|uds|tcp)"),
+        })
+    }
+
+    /// Canonical CLI/CSV name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Sim => "sim",
+            TransportKind::Uds => "uds",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    /// True for transports that move real bytes over sockets.
+    pub fn is_wire(&self) -> bool {
+        !matches!(self, TransportKind::Sim)
+    }
+
+    /// Transport from `RINGIWP_TRANSPORT` (default `sim`); panics on a
+    /// malformed value, mirroring `TopoKind::from_env`.
+    pub fn from_env() -> TransportKind {
+        match std::env::var("RINGIWP_TRANSPORT") {
+            Ok(s) => TransportKind::parse(&s)
+                .unwrap_or_else(|e| panic!("RINGIWP_TRANSPORT: {e}")),
+            Err(_) => TransportKind::Sim,
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Coordinator handle over an `n`-rank socket ring.
+///
+/// Every collective is a sequence of *spreads*: a frame injected at
+/// its origin rank travels `n-1` real ring edges, each relay hands the
+/// coordinator a ttl-normalized copy, and the coordinator verifies all
+/// copies byte-identical (and epoch-stamped) before handing the
+/// decoded payload to the engine. Injection happens on a scoped
+/// thread while the caller drains deliveries, so frames larger than a
+/// socket buffer cannot deadlock the ring.
+#[derive(Debug)]
+pub struct WireRing {
+    n: usize,
+    transport: TransportKind,
+    epoch: u32,
+    /// Injection halves, indexed by rank.
+    ctl_w: Vec<WireStream>,
+    /// Delivery halves, indexed by rank.
+    ctl_r: Vec<WireStream>,
+    /// In-process rank sessions (empty when ranks are external).
+    sessions: Vec<RankSession>,
+    /// Per-hop link parameters from the handshake (entry `i` = rank
+    /// `i`'s egress edge).
+    links: Vec<LinkSpec>,
+    /// Real bytes that traversed ring edges (frame length × hops).
+    real_bytes: u64,
+}
+
+impl WireRing {
+    /// Build an in-process ring: socket pairs for every control
+    /// channel and ring edge, rank threads spawned here, handshake run
+    /// synchronously before any data frame.
+    pub fn new_in_process(
+        transport: TransportKind,
+        links: Vec<LinkSpec>,
+    ) -> Result<WireRing, WireError> {
+        let n = links.len();
+        assert!(n >= 2, "ring needs at least 2 ranks");
+        assert!(transport.is_wire(), "in-process ring needs a socket transport");
+        let mut ctl_coord = Vec::with_capacity(n);
+        let mut ctl_rank = Vec::with_capacity(n);
+        for r in 0..n {
+            let (mut coord, mut rank_side) = WireStream::pair(transport)?;
+            // Same handshake frames an external rank sends (peer::serve_rank).
+            Frame::new(
+                Kind::Hello,
+                r as u16,
+                0,
+                0,
+                codec::encode_hello(r as u16, n as u16),
+            )
+            .write_to(&mut rank_side)?;
+            let hello = Frame::read_from(&mut coord)?;
+            let (rank, rn) = codec::decode_hello(&hello.payload)?;
+            if hello.kind != Kind::Hello || rank as usize != r || rn as usize != n {
+                return Err(WireError::Corrupt(format!(
+                    "handshake: expected Hello({r}, {n}), got {:?}({rank}, {rn})",
+                    hello.kind
+                )));
+            }
+            Frame::new(Kind::HelloAck, r as u16, 0, 0, codec::encode_hello_ack(&links))
+                .write_to(&mut coord)?;
+            let ack = Frame::read_from(&mut rank_side)?;
+            let acked = codec::decode_hello_ack(&ack.payload)?;
+            if ack.kind != Kind::HelloAck || acked.len() != n {
+                return Err(WireError::Corrupt("handshake: bad HelloAck".into()));
+            }
+            ctl_coord.push(coord);
+            ctl_rank.push(rank_side);
+        }
+        // Ring edges: edge r carries rank r → rank (r+1) mod n.
+        let mut succs = Vec::with_capacity(n);
+        let mut preds: Vec<Option<WireStream>> = (0..n).map(|_| None).collect();
+        for r in 0..n {
+            let (w, rd) = WireStream::pair(transport)?;
+            succs.push(w);
+            preds[(r + 1) % n] = Some(rd);
+        }
+        let mut sessions = Vec::with_capacity(n);
+        for (r, ((ctl, succ), pred)) in ctl_rank
+            .into_iter()
+            .zip(succs)
+            .zip(preds.iter_mut().map(|p| p.take().expect("pred wired")))
+            .enumerate()
+        {
+            sessions.push(peer::spawn_rank(r as u16, ctl, pred, succ)?);
+        }
+        Self::finish(n, transport, ctl_coord, sessions, links)
+    }
+
+    /// Attach to `n` external `ringiwp serve` ranks rendezvousing in
+    /// `dir`: bind the `ctl` endpoint, accept every rank's Hello
+    /// (identified by its payload, not accept order), and reply with
+    /// the per-hop link table.
+    pub fn connect_external(
+        dir: &Path,
+        transport: TransportKind,
+        links: Vec<LinkSpec>,
+    ) -> Result<WireRing, WireError> {
+        let n = links.len();
+        assert!(n >= 2, "ring needs at least 2 ranks");
+        assert!(transport.is_wire(), "external ring needs a socket transport");
+        let listener = WireListener::bind(dir, "ctl", transport)?;
+        let mut by_rank: Vec<Option<WireStream>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let mut s = listener.accept()?;
+            let hello = Frame::read_from(&mut s)?;
+            if hello.kind != Kind::Hello {
+                return Err(WireError::Corrupt(format!(
+                    "expected Hello, got {:?}",
+                    hello.kind
+                )));
+            }
+            let (rank, rn) = codec::decode_hello(&hello.payload)?;
+            if rn as usize != n {
+                return Err(WireError::Corrupt(format!(
+                    "rank {rank} joined with ring size {rn}, coordinator has {n}"
+                )));
+            }
+            if rank as usize >= n {
+                return Err(WireError::Corrupt(format!("rank {rank} out of range")));
+            }
+            if by_rank[rank as usize].replace(s).is_some() {
+                return Err(WireError::Corrupt(format!("rank {rank} joined twice")));
+            }
+        }
+        let mut ctl_coord = Vec::with_capacity(n);
+        for (r, slot) in by_rank.iter_mut().enumerate() {
+            let mut s = slot.take().expect("all ranks joined");
+            Frame::new(Kind::HelloAck, r as u16, 0, 0, codec::encode_hello_ack(&links))
+                .write_to(&mut s)?;
+            ctl_coord.push(s);
+        }
+        Self::finish(n, transport, ctl_coord, Vec::new(), links)
+    }
+
+    /// Split ctl streams into directional halves and arm read timeouts.
+    fn finish(
+        n: usize,
+        transport: TransportKind,
+        ctl: Vec<WireStream>,
+        sessions: Vec<RankSession>,
+        links: Vec<LinkSpec>,
+    ) -> Result<WireRing, WireError> {
+        let mut ctl_w = Vec::with_capacity(n);
+        let mut ctl_r = Vec::with_capacity(n);
+        for s in ctl {
+            let r = s.try_clone()?;
+            r.set_read_timeout(Some(READ_TIMEOUT))?;
+            ctl_w.push(s);
+            ctl_r.push(r);
+        }
+        Ok(WireRing {
+            n,
+            transport,
+            epoch: 0,
+            ctl_w,
+            ctl_r,
+            sessions,
+            links,
+            real_bytes: 0,
+        })
+    }
+
+    /// Ring size.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Transport flavor.
+    pub fn transport(&self) -> TransportKind {
+        self.transport
+    }
+
+    /// Per-hop link parameters delivered by the handshake.
+    pub fn links(&self) -> &[LinkSpec] {
+        &self.links
+    }
+
+    /// Total real bytes that traversed ring edges so far.
+    pub fn real_bytes(&self) -> u64 {
+        self.real_bytes
+    }
+
+    /// Stamp subsequent frames with this step's epoch; copies with a
+    /// different stamp are rejected as corrupt.
+    pub fn begin_step(&mut self, epoch: u32) {
+        self.epoch = epoch;
+    }
+
+    /// Spread one frame from `origin` across all `n-1` ring edges,
+    /// collect every relay's delivered copy in hop order, verify the
+    /// copies byte-identical, and return the payload.
+    fn spread(
+        &mut self,
+        origin: usize,
+        kind: Kind,
+        flags: u8,
+        payload: Vec<u8>,
+    ) -> Result<Vec<u8>, WireError> {
+        assert!(origin < self.n, "origin {origin} out of range");
+        let ttl = (self.n - 1) as u16;
+        let epoch = self.epoch;
+        let frame = Frame {
+            kind,
+            flags,
+            origin: origin as u16,
+            ttl,
+            epoch,
+            payload,
+        };
+        self.real_bytes += frame.encoded_len() as u64 * ttl as u64;
+        let n = self.n;
+        let ctl_w = &mut self.ctl_w[origin];
+        let ctl_r = &mut self.ctl_r;
+        let mut copies: Vec<Frame> = Vec::with_capacity(ttl as usize);
+        // Inject on a scoped thread while this thread drains the
+        // deliveries — a frame larger than the socket buffers would
+        // otherwise deadlock the write against the unread copies.
+        let collected: Result<(), WireError> = std::thread::scope(|s| {
+            let inject = s.spawn(move || -> Result<(), WireError> {
+                frame.write_to(ctl_w)?;
+                std::io::Write::flush(ctl_w)?;
+                Ok(())
+            });
+            for hop in 1..=ttl as usize {
+                copies.push(Frame::read_from(&mut ctl_r[(origin + hop) % n])?);
+            }
+            inject
+                .join()
+                .unwrap_or_else(|_| Err(WireError::Corrupt("inject thread panicked".into())))
+        });
+        collected?;
+        for (i, c) in copies.iter().enumerate() {
+            if c.epoch != epoch {
+                return Err(WireError::Corrupt(format!(
+                    "hop {} delivered epoch {} during epoch {epoch}",
+                    i + 1,
+                    c.epoch
+                )));
+            }
+            if c.kind != kind || c.flags != flags || c.origin != origin as u16 || c.ttl != 0 {
+                return Err(WireError::Corrupt(format!(
+                    "hop {} delivered mismatched header", i + 1
+                )));
+            }
+            if c.payload != copies[0].payload {
+                return Err(WireError::Corrupt(format!(
+                    "hop {} delivered diverging payload", i + 1
+                )));
+            }
+        }
+        Ok(copies.swap_remove(0).payload)
+    }
+
+    /// Ring allgather of the dense buffer: `n` contiguous chunks, each
+    /// injected at its owner rank and spread around the ring, then
+    /// reassembled and verified bit-equal to the input. Returns the
+    /// decoded coordinate count (which the engine — not the input —
+    /// feeds into the dense accounting).
+    pub fn exchange_dense(&mut self, values: &[f32]) -> Result<usize, WireError> {
+        let n = self.n;
+        let base = values.len() / n;
+        let rem = values.len() % n;
+        let mut decoded_total = 0usize;
+        let mut offset = 0usize;
+        for origin in 0..n {
+            let len = base + usize::from(origin < rem);
+            let chunk = &values[offset..offset + len];
+            let out = self.spread(origin, Kind::Dense, 0, codec::encode_dense(chunk))?;
+            let got = codec::decode_dense(&out)?;
+            if got.len() != len
+                || got
+                    .iter()
+                    .zip(chunk)
+                    .any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                return Err(WireError::Corrupt(format!(
+                    "dense chunk {origin} decoded differently than sent"
+                )));
+            }
+            decoded_total += got.len();
+            offset += len;
+        }
+        Ok(decoded_total)
+    }
+
+    /// Spread one broadcaster's mask (Algorithm 1's mask AllGather
+    /// step) and return the decoded copy the downstream OR consumes.
+    pub fn spread_mask(&mut self, origin: usize, mask: &BitMask) -> Result<BitMask, WireError> {
+        let out = self.spread(origin, Kind::Sparse, 0, codec::encode_support(mask))?;
+        codec::decode_support(&out)
+    }
+
+    /// Spread a shared mask together with its compacted values and
+    /// return both decoded.
+    pub fn spread_masked(
+        &mut self,
+        origin: usize,
+        mask: &BitMask,
+        values: &[f32],
+    ) -> Result<(BitMask, Vec<f32>), WireError> {
+        let out = self.spread(origin, Kind::Masked, 0, codec::encode_masked(mask, values))?;
+        codec::decode_masked(&out)
+    }
+
+    /// Spread a per-layer-scaled ternary gradient; returns the decoded
+    /// copy (whose shape feeds the byte accounting).
+    pub fn spread_tern_grad(&mut self, t: &TernGrad) -> Result<TernGrad, WireError> {
+        let out = self.spread(0, Kind::Tern, 0, codec::encode_tern_grad(t))?;
+        codec::decode_tern_grad(&out)
+    }
+
+    /// Spread a single-scale ternary blob ([`FLAG_TERN_BLOB`] set).
+    pub fn spread_tern_blob(&mut self, t: &TernBlob) -> Result<TernBlob, WireError> {
+        let out = self.spread(0, Kind::Tern, FLAG_TERN_BLOB, codec::encode_tern_blob(t))?;
+        codec::decode_tern_blob(&out)
+    }
+
+    /// AllGather every rank's support mask: rank `r`'s mask spreads
+    /// from origin `r mod n`; returns the decoded masks in input
+    /// order. Inputs beyond the ring size (exchangeable-node supports,
+    /// DESIGN.md §9) spread from their index mod `n`.
+    pub fn allgather_supports(
+        &mut self,
+        supports: &[BitMask],
+    ) -> Result<Vec<BitMask>, WireError> {
+        let mut out = Vec::with_capacity(supports.len());
+        for (i, m) in supports.iter().enumerate() {
+            let origin = i % self.n;
+            let decoded = self.spread(origin, Kind::Sparse, 0, codec::encode_support(m))?;
+            out.push(codec::decode_support(&decoded)?);
+        }
+        Ok(out)
+    }
+
+    /// Tear the ring down: one Shutdown around the ring stops every
+    /// relay, a ttl-0 Shutdown on each control channel stops every
+    /// uplink, then in-process sessions are joined. Idempotent.
+    pub fn shutdown(&mut self) -> Result<(), WireError> {
+        if self.ctl_w.is_empty() {
+            return Ok(());
+        }
+        let epoch = self.epoch;
+        Frame::new(Kind::Shutdown, 0, self.n as u16, epoch, Vec::new())
+            .write_to(&mut self.ctl_w[0])?;
+        for w in self.ctl_w.iter_mut() {
+            Frame::new(Kind::Shutdown, 0, 0, epoch, Vec::new()).write_to(w)?;
+        }
+        self.ctl_w.clear();
+        self.ctl_r.clear();
+        for s in self.sessions.drain(..) {
+            s.join()?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for WireRing {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(n: usize) -> Vec<LinkSpec> {
+        vec![LinkSpec::new(1e9, 0.0); n]
+    }
+
+    #[test]
+    fn transport_kind_parse_name_roundtrip() {
+        for k in [TransportKind::Sim, TransportKind::Uds, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
+            assert_eq!(format!("{k}"), k.name());
+        }
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+        assert!(!TransportKind::Sim.is_wire());
+        assert!(TransportKind::Uds.is_wire());
+    }
+
+    #[test]
+    fn dense_exchange_roundtrips_and_accounts() {
+        let mut ring = WireRing::new_in_process(TransportKind::Uds, uniform(4)).unwrap();
+        ring.begin_step(1);
+        let v: Vec<f32> = (0..37).map(|i| i as f32 * 0.5 - 9.0).collect();
+        assert_eq!(ring.exchange_dense(&v).unwrap(), 37);
+        assert!(ring.real_bytes() > 0);
+        ring.shutdown().unwrap();
+    }
+
+    #[test]
+    fn mask_and_tern_spreads_decode_bitexact() {
+        let mut ring = WireRing::new_in_process(TransportKind::Uds, uniform(3)).unwrap();
+        ring.begin_step(2);
+        let mut m = BitMask::zeros(70);
+        for i in [0, 13, 64, 69] {
+            m.set(i);
+        }
+        let d = ring.spread_mask(1, &m).unwrap();
+        assert_eq!(d.count(), 4);
+        for i in 0..70 {
+            assert_eq!(d.get(i), m.get(i));
+        }
+        let blob = TernBlob {
+            len: 5,
+            scale: 0.75,
+            codes: vec![0b10_01_00_01, 0b01],
+        };
+        let db = ring.spread_tern_blob(&blob).unwrap();
+        assert_eq!((db.len, db.scale, db.codes), (blob.len, blob.scale, blob.codes));
+        ring.shutdown().unwrap();
+    }
+
+    #[test]
+    fn allgather_supports_preserves_order() {
+        let mut ring = WireRing::new_in_process(TransportKind::Uds, uniform(2)).unwrap();
+        ring.begin_step(0);
+        let mut a = BitMask::zeros(9);
+        a.set(1);
+        let mut b = BitMask::zeros(9);
+        b.set(8);
+        let out = ring.allgather_supports(&[a, b]).unwrap();
+        assert!(out[0].get(1) && !out[0].get(8));
+        assert!(out[1].get(8) && !out[1].get(1));
+        ring.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tcp_in_process_ring_works() {
+        let mut ring = WireRing::new_in_process(TransportKind::Tcp, uniform(2)).unwrap();
+        ring.begin_step(3);
+        assert_eq!(ring.exchange_dense(&[1.0, 2.0, 3.0]).unwrap(), 3);
+        ring.shutdown().unwrap();
+    }
+
+    #[test]
+    fn handshake_carries_links() {
+        let links = vec![LinkSpec::new(1e9, 1e-4), LinkSpec::new(5e8, 2e-4)];
+        let ring = WireRing::new_in_process(TransportKind::Uds, links).unwrap();
+        assert_eq!(ring.links().len(), 2);
+        assert_eq!(ring.links()[1].bandwidth_bps, 5e8);
+    }
+}

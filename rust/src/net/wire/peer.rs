@@ -1,0 +1,405 @@
+//! Socket plumbing and per-rank relay sessions (DESIGN.md §13).
+//!
+//! A wire ring is `n` rank sessions plus one coordinator. Rank `r`
+//! owns three streams:
+//!
+//! * `ctl`  — full-duplex to the coordinator: injections arrive on the
+//!   read side, delivered copies leave on the write side;
+//! * `pred` — read half of ring edge `(r-1) mod n → r`;
+//! * `succ` — write half of ring edge `r → (r+1) mod n`.
+//!
+//! Each session runs two threads ([`spawn_rank`]):
+//!
+//! * **uplink** reads frames off `ctl` and writes them to `succ` (a
+//!   `Shutdown` with `ttl == 0` stops the thread instead);
+//! * **relay** reads frames off `pred`; for data frames it writes a
+//!   `ttl`-zeroed copy back to the coordinator over `ctl` and, while
+//!   `ttl > 1`, forwards the frame to `succ` with `ttl - 1`. A
+//!   `Shutdown` frame is forwarded (while `ttl > 1`) but never
+//!   delivered, and stops the thread.
+//!
+//! `succ` is shared between the two threads behind a mutex; `ctl` is
+//! split by `try_clone` so the directions never contend. A frame
+//! injected at `origin` with `ttl = t` therefore traverses `t` real
+//! ring edges and produces exactly `t` delivered copies — one from
+//! each of ranks `origin+1 … origin+t (mod n)` — which the
+//! coordinator collects in deterministic hop order and verifies
+//! byte-identical (`net::wire::WireRing`).
+//!
+//! Two wirings share this module: in-process rings build their edges
+//! from socket pairs ([`WireStream::pair`]), and external rings
+//! rendezvous through a filesystem directory ([`serve_rank`] +
+//! `WireRing::connect_external`): rank `r` listens at
+//! `<dir>/rank-<r>.sock`, the coordinator at `<dir>/ctl.sock` (`.port`
+//! files carrying a loopback TCP port replace `.sock` files under
+//! `--transport tcp`).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::codec;
+use super::frame::{Frame, Kind, WireError};
+use super::TransportKind;
+
+/// How long connect-with-retry waits for a peer to bind.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Coordinator-side read timeout: a hung rank surfaces as a typed
+/// [`WireError::Io`] (`WouldBlock`/`TimedOut`) instead of a hung run.
+pub const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One connected stream of either transport flavor.
+#[derive(Debug)]
+pub enum WireStream {
+    /// Unix domain socket.
+    Unix(UnixStream),
+    /// Loopback (or remote) TCP socket, `TCP_NODELAY` set.
+    Tcp(TcpStream),
+}
+
+impl WireStream {
+    /// Clone the underlying socket (independent file descriptor over
+    /// the same connection — used to split ctl into read/write halves).
+    pub fn try_clone(&self) -> Result<WireStream, WireError> {
+        Ok(match self {
+            WireStream::Unix(s) => WireStream::Unix(s.try_clone()?),
+            WireStream::Tcp(s) => WireStream::Tcp(s.try_clone()?),
+        })
+    }
+
+    /// Set (or clear) the blocking-read timeout.
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> Result<(), WireError> {
+        match self {
+            WireStream::Unix(s) => s.set_read_timeout(d)?,
+            WireStream::Tcp(s) => s.set_read_timeout(d)?,
+        }
+        Ok(())
+    }
+
+    /// Connected socket pair for in-process rings. For TCP the pair is
+    /// built through an ephemeral loopback listener.
+    pub fn pair(kind: TransportKind) -> Result<(WireStream, WireStream), WireError> {
+        match kind {
+            TransportKind::Sim => Err(WireError::Corrupt(
+                "transport `sim` has no socket pairs".into(),
+            )),
+            TransportKind::Uds => {
+                let (a, b) = UnixStream::pair()?;
+                Ok((WireStream::Unix(a), WireStream::Unix(b)))
+            }
+            TransportKind::Tcp => {
+                let listener = TcpListener::bind("127.0.0.1:0")?;
+                let addr = listener.local_addr()?;
+                let a = TcpStream::connect(addr)?;
+                let (b, _) = listener.accept()?;
+                a.set_nodelay(true)?;
+                b.set_nodelay(true)?;
+                Ok((WireStream::Tcp(a), WireStream::Tcp(b)))
+            }
+        }
+    }
+}
+
+impl Read for WireStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            WireStream::Unix(s) => s.read(buf),
+            WireStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for WireStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            WireStream::Unix(s) => s.write(buf),
+            WireStream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            WireStream::Unix(s) => s.flush(),
+            WireStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Rendezvous listener for external (serve-mode) rings.
+#[derive(Debug)]
+pub enum WireListener {
+    /// Filesystem Unix socket at `<dir>/<name>.sock`.
+    Unix(UnixListener),
+    /// Loopback TCP listener, its port advertised in `<dir>/<name>.port`.
+    Tcp(TcpListener),
+}
+
+impl WireListener {
+    /// Bind the rendezvous point `<dir>/<name>` for the given
+    /// transport, replacing any stale socket/port file.
+    pub fn bind(dir: &Path, name: &str, kind: TransportKind) -> Result<WireListener, WireError> {
+        match kind {
+            TransportKind::Sim => Err(WireError::Corrupt(
+                "transport `sim` has no listeners".into(),
+            )),
+            TransportKind::Uds => {
+                let path = sock_path(dir, name);
+                let _ = std::fs::remove_file(&path);
+                Ok(WireListener::Unix(UnixListener::bind(&path)?))
+            }
+            TransportKind::Tcp => {
+                let listener = TcpListener::bind("127.0.0.1:0")?;
+                let port = listener.local_addr()?.port();
+                let path = port_path(dir, name);
+                let tmp = path.with_extension("port.tmp");
+                std::fs::write(&tmp, port.to_string())?;
+                std::fs::rename(&tmp, &path)?;
+                Ok(WireListener::Tcp(listener))
+            }
+        }
+    }
+
+    /// Accept one connection.
+    pub fn accept(&self) -> Result<WireStream, WireError> {
+        Ok(match self {
+            WireListener::Unix(l) => WireStream::Unix(l.accept()?.0),
+            WireListener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nodelay(true)?;
+                WireStream::Tcp(s)
+            }
+        })
+    }
+}
+
+fn sock_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.sock"))
+}
+
+fn port_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.port"))
+}
+
+/// Connect to rendezvous point `<dir>/<name>`, retrying until the
+/// peer binds or [`CONNECT_TIMEOUT`] expires.
+pub fn connect_retry(dir: &Path, name: &str, kind: TransportKind) -> Result<WireStream, WireError> {
+    let start = Instant::now();
+    loop {
+        let attempt: std::io::Result<WireStream> = match kind {
+            TransportKind::Sim => {
+                return Err(WireError::Corrupt("transport `sim` has no sockets".into()))
+            }
+            TransportKind::Uds => UnixStream::connect(sock_path(dir, name)).map(WireStream::Unix),
+            TransportKind::Tcp => std::fs::read_to_string(port_path(dir, name)).and_then(|p| {
+                let port: u16 = p.trim().parse().map_err(|_| {
+                    std::io::Error::new(std::io::ErrorKind::InvalidData, "bad port file")
+                })?;
+                let s = TcpStream::connect(("127.0.0.1", port))?;
+                s.set_nodelay(true)?;
+                Ok(WireStream::Tcp(s))
+            }),
+        };
+        match attempt {
+            Ok(s) => return Ok(s),
+            Err(e) if start.elapsed() >= CONNECT_TIMEOUT => {
+                return Err(WireError::Io(std::io::Error::new(
+                    e.kind(),
+                    format!("connecting to {name} in {}: {e}", dir.display()),
+                )))
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Join handles for one rank session's two threads.
+#[derive(Debug)]
+pub struct RankSession {
+    uplink: std::thread::JoinHandle<Result<(), WireError>>,
+    relay: std::thread::JoinHandle<Result<(), WireError>>,
+}
+
+impl RankSession {
+    /// Wait for both threads; first error wins.
+    pub fn join(self) -> Result<(), WireError> {
+        let u = self
+            .uplink
+            .join()
+            .unwrap_or_else(|_| Err(WireError::Corrupt("uplink thread panicked".into())));
+        let r = self
+            .relay
+            .join()
+            .unwrap_or_else(|_| Err(WireError::Corrupt("relay thread panicked".into())));
+        u?;
+        r
+    }
+}
+
+/// Spawn the uplink + relay threads for one rank session. `ctl` is
+/// split internally; `succ` is shared behind a mutex.
+pub fn spawn_rank(
+    rank: u16,
+    ctl: WireStream,
+    pred: WireStream,
+    succ: WireStream,
+) -> Result<RankSession, WireError> {
+    let mut ctl_r = ctl.try_clone()?; // uplink reads injections
+    let mut ctl_w = ctl; // relay writes deliveries
+    let succ = std::sync::Arc::new(Mutex::new(succ));
+
+    let succ_up = succ.clone();
+    let uplink = std::thread::Builder::new()
+        .name(format!("riwp-uplink-{rank}"))
+        .spawn(move || -> Result<(), WireError> {
+            loop {
+                let f = Frame::read_from(&mut ctl_r)?;
+                if f.kind == Kind::Shutdown && f.ttl == 0 {
+                    return Ok(());
+                }
+                let mut s = succ_up.lock().expect("succ mutex poisoned");
+                f.write_to(&mut *s)?;
+                s.flush()?;
+            }
+        })?;
+
+    let mut pred = pred;
+    let relay = std::thread::Builder::new()
+        .name(format!("riwp-relay-{rank}"))
+        .spawn(move || -> Result<(), WireError> {
+            loop {
+                let f = Frame::read_from(&mut pred)?;
+                let forward = f.ttl > 1;
+                if forward {
+                    let fwd = Frame {
+                        ttl: f.ttl - 1,
+                        payload: f.payload.clone(),
+                        ..f
+                    };
+                    let mut s = succ.lock().expect("succ mutex poisoned");
+                    fwd.write_to(&mut *s)?;
+                    s.flush()?;
+                }
+                if f.kind == Kind::Shutdown {
+                    return Ok(());
+                }
+                // Deliver a ttl-normalized copy so every hop's copy of
+                // the same injection is byte-identical at the
+                // coordinator.
+                let delivered = Frame { ttl: 0, ..f };
+                delivered.write_to(&mut ctl_w)?;
+                ctl_w.flush()?;
+            }
+        })?;
+
+    Ok(RankSession { uplink, relay })
+}
+
+/// Run rank `rank` of an `n`-node external ring rendezvousing in
+/// `dir`: handshake with the coordinator, wire the ring edges, then
+/// relay until the coordinator shuts the session down. Loops over
+/// sessions (re-connecting after each shutdown) unless `once` is set.
+/// Returns the number of sessions served.
+pub fn serve_rank(
+    dir: &Path,
+    rank: u16,
+    n: u16,
+    kind: TransportKind,
+    once: bool,
+) -> Result<u32, WireError> {
+    assert!(n >= 2, "ring needs at least 2 ranks");
+    assert!(rank < n, "rank {rank} out of range for n={n}");
+    let listener = WireListener::bind(dir, &format!("rank-{rank}"), kind)?;
+    let mut sessions = 0u32;
+    loop {
+        // Handshake: Hello(rank, n) → coordinator, HelloAck back.
+        let mut ctl = connect_retry(dir, "ctl", kind)?;
+        Frame::new(Kind::Hello, rank, 0, 0, codec::encode_hello(rank, n)).write_to(&mut ctl)?;
+        ctl.flush()?;
+        let ack = Frame::read_from(&mut ctl)?;
+        if ack.kind != Kind::HelloAck {
+            return Err(WireError::Corrupt(format!(
+                "expected HelloAck, got {:?}",
+                ack.kind
+            )));
+        }
+        let links = codec::decode_hello_ack(&ack.payload)?;
+        if links.len() != n as usize {
+            return Err(WireError::Corrupt(format!(
+                "HelloAck carries {} links for an n={n} ring",
+                links.len()
+            )));
+        }
+        // Ring edges: connect succ first (connects complete against a
+        // bound listener's backlog without an accept), then accept pred.
+        let succ = connect_retry(dir, &format!("rank-{}", (rank + 1) % n), kind)?;
+        let pred = listener.accept()?;
+        spawn_rank(rank, ctl, pred, succ)?.join()?;
+        sessions += 1;
+        if once {
+            return Ok(sessions);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_pair_roundtrips_frames() {
+        for kind in [TransportKind::Uds, TransportKind::Tcp] {
+            let (mut a, mut b) = WireStream::pair(kind).unwrap();
+            let f = Frame::new(Kind::Dense, 1, 2, 3, vec![7; 33]);
+            f.write_to(&mut a).unwrap();
+            assert_eq!(Frame::read_from(&mut b).unwrap(), f, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sim_transport_has_no_sockets() {
+        assert!(WireStream::pair(TransportKind::Sim).is_err());
+    }
+
+    #[test]
+    fn relay_delivers_and_forwards_with_decrement() {
+        // 2-rank micro-ring driven by hand: coordinator ctl pairs plus
+        // one edge in each direction.
+        let (ctl0_coord, ctl0_rank) = WireStream::pair(TransportKind::Uds).unwrap();
+        let (ctl1_coord, ctl1_rank) = WireStream::pair(TransportKind::Uds).unwrap();
+        let (edge01_w, edge01_r) = WireStream::pair(TransportKind::Uds).unwrap();
+        let (edge10_w, edge10_r) = WireStream::pair(TransportKind::Uds).unwrap();
+        let s0 = spawn_rank(0, ctl0_rank, edge10_r, edge01_w).unwrap();
+        let s1 = spawn_rank(1, ctl1_rank, edge01_r, edge10_w).unwrap();
+
+        let mut ctl0 = ctl0_coord;
+        let mut ctl1 = ctl1_coord;
+        // Inject at rank 0 with ttl=2: rank 1 delivers + forwards,
+        // rank 0 delivers.
+        let f = Frame::new(Kind::Tern, 0, 2, 9, vec![1, 2, 3]);
+        f.write_to(&mut ctl0).unwrap();
+        let d1 = Frame::read_from(&mut ctl1).unwrap();
+        let d0 = Frame::read_from(&mut ctl0).unwrap();
+        for d in [&d1, &d0] {
+            assert_eq!(d.ttl, 0);
+            assert_eq!(d.epoch, 9);
+            assert_eq!(d.payload, vec![1, 2, 3]);
+        }
+        // Teardown: ring Shutdown stops both relays, ttl=0 Shutdowns
+        // stop both uplinks.
+        Frame::new(Kind::Shutdown, 0, 2, 9, Vec::new())
+            .write_to(&mut ctl0)
+            .unwrap();
+        Frame::new(Kind::Shutdown, 0, 0, 9, Vec::new())
+            .write_to(&mut ctl0)
+            .unwrap();
+        Frame::new(Kind::Shutdown, 0, 0, 9, Vec::new())
+            .write_to(&mut ctl1)
+            .unwrap();
+        s0.join().unwrap();
+        s1.join().unwrap();
+    }
+}

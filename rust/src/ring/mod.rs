@@ -26,6 +26,12 @@
 //! [`Topology`](crate::net::Topology) trait alongside hierarchical and
 //! binomial-tree implementations; `FlatRing` delegates here verbatim,
 //! so the flat topology stays bit-identical to these entry points.
+//!
+//! They are also the specification for the **real** transport: the
+//! socket ring (`net::wire`, DESIGN.md §13) frames and relays each
+//! schedule's traveling payloads over actual UDS/TCP connections, and
+//! the transport-equivalence oracle pins its step reports bit-exact
+//! to the virtual schedules here.
 
 pub mod arena;
 pub mod dense;

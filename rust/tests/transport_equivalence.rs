@@ -1,0 +1,283 @@
+//! Transport-equivalence oracle suite (DESIGN.md §13).
+//!
+//! The single-process simulator is the specification; the real socket
+//! transport is the implementation under test. For every bench
+//! pipeline × topology × ring size, a `WireEngine` running over
+//! loopback sockets must produce `StepReport`s **bit-identical** to
+//! `SimEngine` on the same seeds — the engines share every compute
+//! path and differ only in whether traveling payloads cross real ring
+//! edges, so any framing, codec, relay or epoch bug diverges the
+//! reports and fails here.
+//!
+//! Every socket-touching test runs under a hard watchdog: a deadlocked
+//! ring fails the test in bounded time instead of hanging the suite
+//! (CI adds an outer `timeout` as the backstop).
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+use ringiwp::exp::bench::step_specs;
+use ringiwp::exp::simrun::{SimCfg, SimEngine, StepReport, WireEngine};
+use ringiwp::model::{LayerKind, ParamLayout};
+use ringiwp::net::wire::{serve_rank, Frame, Kind, WireStream};
+use ringiwp::net::{LinkSpec, TopoKind, TransportKind, WireError};
+
+/// Hard per-test deadline: generous next to the observed runtime,
+/// tiny next to a hung socket read (whose own timeout is 30 s).
+const WATCHDOG: Duration = Duration::from_secs(180);
+
+/// Run `f` on its own thread and fail loudly if it outlives the
+/// watchdog; panics inside `f` propagate to the harness unchanged.
+fn with_watchdog<F>(label: &str, f: F)
+where
+    F: FnOnce() + Send + 'static,
+{
+    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    let worker = std::thread::Builder::new()
+        .name(format!("watchdog-{label}"))
+        .spawn(move || {
+            f();
+            let _ = tx.send(());
+        })
+        .expect("spawn watchdog worker");
+    match rx.recv_timeout(WATCHDOG) {
+        Ok(()) | Err(RecvTimeoutError::Disconnected) => {
+            if let Err(panic) = worker.join() {
+                std::panic::resume_unwind(panic);
+            }
+        }
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("{label}: still running after {WATCHDOG:?} — ring deadlock");
+        }
+    }
+}
+
+/// Small but structurally honest inventory: conv + batchnorm + fc, an
+/// unaligned layer boundary, and a single-element bias layer (the
+/// codec edge shape).
+fn layout() -> ParamLayout {
+    ParamLayout::new(
+        "equiv",
+        vec![
+            ("conv".into(), vec![32, 16, 3, 3], LayerKind::Conv),
+            ("bn".into(), vec![67], LayerKind::BatchNorm),
+            ("fc".into(), vec![128, 10], LayerKind::Fc),
+            ("bias".into(), vec![1], LayerKind::Bias),
+        ],
+    )
+}
+
+fn cfg(spec: &str, nodes: usize, topology: TopoKind, transport: TransportKind) -> SimCfg {
+    SimCfg {
+        nodes,
+        method: ringiwp::compress::MethodSpec::parse(spec).expect("registry spec"),
+        link: LinkSpec::new(1e9, 1e-5),
+        topology,
+        transport,
+        wire_dir: None,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+fn assert_reports_identical(ctx: &str, step: usize, a: &StepReport, b: &StepReport) {
+    assert_eq!(
+        a.wire_bytes_per_node, b.wire_bytes_per_node,
+        "{ctx} step {step}: wire_bytes_per_node"
+    );
+    assert_eq!(a.support_nnz, b.support_nnz, "{ctx} step {step}: support_nnz");
+    assert_eq!(
+        a.density.to_bits(),
+        b.density.to_bits(),
+        "{ctx} step {step}: density ({} vs {})",
+        a.density,
+        b.density
+    );
+    assert_eq!(
+        a.seconds.to_bits(),
+        b.seconds.to_bits(),
+        "{ctx} step {step}: seconds ({} vs {})",
+        a.seconds,
+        b.seconds
+    );
+    assert_eq!(
+        a.wire_seconds.to_bits(),
+        b.wire_seconds.to_bits(),
+        "{ctx} step {step}: wire_seconds ({} vs {})",
+        a.wire_seconds,
+        b.wire_seconds
+    );
+}
+
+/// The oracle check for one (spec, topology, ring size) cell: run both
+/// engines `steps` steps and require bit-identical reports, matching
+/// accounting, and a matching importance snapshot at the end.
+fn assert_cell_equivalent(spec: &str, topology: TopoKind, n: usize, transport: TransportKind) {
+    let ctx = format!("{spec}/{}/n{n}/{transport}", topology.name());
+    let steps = 2;
+    let mut sim = SimEngine::new(layout(), cfg(spec, n, topology, TransportKind::Sim));
+    let mut wire = WireEngine::new(layout(), cfg(spec, n, topology, transport))
+        .unwrap_or_else(|e| panic!("{ctx}: wire ring construction failed: {e}"));
+    for s in 0..steps {
+        let a = sim.step(s);
+        let w = wire.step(s);
+        assert_reports_identical(&ctx, s, &a, &w.report);
+        assert!(
+            w.real_bytes > 0,
+            "{ctx} step {s}: no bytes crossed the real ring"
+        );
+        assert!(w.wall_seconds >= 0.0);
+    }
+    assert_eq!(
+        sim.account.ratio().to_bits(),
+        wire.sim().account.ratio().to_bits(),
+        "{ctx}: compression ratio diverged"
+    );
+    let (imp_a, stats_a) = sim.importance_snapshot();
+    let imp_a: Vec<u32> = imp_a.iter().map(|v| v.to_bits()).collect();
+    let n_stats_a = stats_a.len();
+    let (imp_b, stats_b) = wire.sim_mut().importance_snapshot();
+    assert_eq!(n_stats_a, stats_b.len(), "{ctx}: stats arity");
+    for (i, (a, b)) in imp_a.iter().zip(imp_b).enumerate() {
+        assert_eq!(*a, b.to_bits(), "{ctx}: importance[{i}] diverged");
+    }
+    wire.shutdown().unwrap_or_else(|e| panic!("{ctx}: shutdown: {e}"));
+}
+
+fn matrix_over(topology: &'static str) {
+    with_watchdog(topology, move || {
+        let topo = TopoKind::parse(topology).unwrap();
+        for spec in step_specs() {
+            for n in [4usize, 9] {
+                assert_cell_equivalent(&spec.name(), topo, n, TransportKind::Uds);
+            }
+        }
+    });
+}
+
+// One test per topology so the matrix arms run concurrently under the
+// default test harness and a failure names its topology directly.
+
+#[test]
+fn uds_matches_sim_on_flat_ring() {
+    matrix_over("flat");
+}
+
+#[test]
+fn uds_matches_sim_on_hierarchical_ring() {
+    matrix_over("hier:4");
+}
+
+#[test]
+fn uds_matches_sim_on_tree() {
+    matrix_over("tree");
+}
+
+#[test]
+fn uds_matches_sim_on_pipelined_ring() {
+    matrix_over("pipeline:4:flat");
+}
+
+#[test]
+fn uds_matches_sim_on_ternary_blob_composition() {
+    // `iwp:fixed+tern` is the one pipeline whose wire path ships the
+    // single-scale TernBlob (FLAG_TERN_BLOB); it is not in the bench
+    // spec set, so cover it explicitly.
+    with_watchdog("tern-blob", || {
+        assert_cell_equivalent("iwp:fixed+tern", TopoKind::Flat, 4, TransportKind::Uds);
+    });
+}
+
+#[test]
+fn tcp_matches_sim_smoke() {
+    // The TCP flavor shares every wire code path except the socket
+    // constructor, so one (spec, size) smoke cell suffices.
+    with_watchdog("tcp", || {
+        assert_cell_equivalent("iwp:layerwise", TopoKind::Flat, 4, TransportKind::Tcp);
+        assert_cell_equivalent("baseline", TopoKind::Flat, 4, TransportKind::Tcp);
+    });
+}
+
+#[test]
+fn external_serve_ranks_match_sim() {
+    // The serve-mode wiring (`ringiwp serve --rank R` ⇄
+    // `WireRing::connect_external`): real rendezvous through a
+    // directory, ranks on their own threads standing in for separate
+    // processes — same sockets, same handshake, same frames.
+    with_watchdog("serve", || {
+        let n = 4usize;
+        let dir = std::env::temp_dir().join(format!("riwp-equiv-serve-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ranks: Vec<_> = (0..n as u16)
+            .map(|r| {
+                let dir = dir.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-rank-{r}"))
+                    .spawn(move || serve_rank(&dir, r, n as u16, TransportKind::Uds, true))
+                    .unwrap()
+            })
+            .collect();
+
+        let mut wire_cfg = cfg("iwp:fixed", n, TopoKind::Flat, TransportKind::Uds);
+        wire_cfg.wire_dir = Some(dir.clone());
+        let mut sim = SimEngine::new(layout(), cfg("iwp:fixed", n, TopoKind::Flat, TransportKind::Sim));
+        let mut wire = WireEngine::new(layout(), wire_cfg).expect("connect to serve ranks");
+        for s in 0..2 {
+            let a = sim.step(s);
+            let w = wire.step(s);
+            assert_reports_identical("serve/iwp:fixed/n4", s, &a, &w.report);
+        }
+        wire.shutdown().unwrap();
+        for r in ranks {
+            let sessions = r.join().expect("serve rank thread").expect("serve rank exit");
+            assert_eq!(sessions, 1, "once-mode rank must serve exactly one session");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn version_bumped_frame_is_rejected_across_a_real_socket() {
+    // The acceptance criterion at the socket layer: a peer speaking a
+    // bumped protocol version is rejected with the typed error, read
+    // off an actual Unix socket rather than an in-memory buffer.
+    with_watchdog("version-skew", || {
+        let (mut a, mut b) = WireStream::pair(TransportKind::Uds).unwrap();
+        let mut bytes = Frame::new(Kind::Dense, 0, 1, 0, vec![0, 0, 0, 0]).encode();
+        let bumped = ringiwp::net::wire::VERSION + 1;
+        bytes[4..6].copy_from_slice(&bumped.to_le_bytes());
+        std::io::Write::write_all(&mut a, &bytes).unwrap();
+        std::io::Write::flush(&mut a).unwrap();
+        match Frame::read_from(&mut b) {
+            Err(WireError::Version { got, want }) => {
+                assert_eq!(got, bumped);
+                assert_eq!(want, ringiwp::net::wire::VERSION);
+            }
+            other => panic!("expected typed Version error, got {other:?}"),
+        }
+    });
+}
+
+#[test]
+fn wire_real_seconds_and_bytes_sit_next_to_virtual_accounting() {
+    // EXPERIMENTS.md §10's measurement contract: the wire engine
+    // reports real wall seconds and real (header-inclusive) bytes
+    // alongside the untouched virtual prediction — real bytes must
+    // exceed the virtual payload bytes it frames.
+    with_watchdog("real-vs-virtual", || {
+        let mut wire =
+            WireEngine::new(layout(), cfg("baseline", 4, TopoKind::Flat, TransportKind::Uds))
+                .unwrap();
+        let w = wire.step(0);
+        assert!(w.report.wire_seconds > 0.0, "virtual prediction present");
+        assert!(w.wall_seconds > 0.0, "real clock present");
+        assert!(
+            w.real_bytes > w.report.wire_bytes_per_node,
+            "real bytes ({}) must exceed one node's virtual payload ({})",
+            w.real_bytes,
+            w.report.wire_bytes_per_node
+        );
+        wire.shutdown().unwrap();
+    });
+}
