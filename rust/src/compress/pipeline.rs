@@ -51,11 +51,12 @@ use super::terngrad::{TernBlob, TernGrad};
 use super::threshold::{ThresholdCfg, ThresholdPolicy};
 use super::warmup::Warmup;
 use crate::model::ParamLayout;
+use crate::net::tuner::{Observation, Tuner, TunerMode, WirePick};
 use crate::net::{RingNet, Topology, WireRing};
 use crate::optim::MomentumSgd;
 use crate::ring::{Arena, Executor};
 use crate::runtime::ImportanceKernel;
-use crate::sparse::{wire_bytes, BitMask, SparseVec, WireFormat};
+use crate::sparse::{values_only_bytes, wire_bytes, BitMask, SparseVec, WireFormat};
 use crate::util::rng::Rng;
 
 /// What one compression + reduce step put on the wire — the engines
@@ -110,6 +111,13 @@ pub struct SimCtx<'a> {
     /// *decoded* copy feeds the computation below, so the virtual
     /// accounting stays bit-identical iff the wire is faithful.
     pub wire: Option<&'a mut WireRing>,
+    /// Online autotuner (DESIGN.md §14). When set, shared-mask
+    /// pipelines feed it the observed support each step; in
+    /// [`TunerMode::On`] the picked strategy executes instead of the
+    /// configured static one, in [`TunerMode::LogOnly`] the pick is
+    /// only recorded. Other pipelines ignore it (`Config::validate`
+    /// rejects the flag combination up front).
+    pub tuner: Option<&'a mut Tuner>,
 }
 
 /// Per-step context of the training engine (`coordinator::Trainer`).
@@ -143,6 +151,9 @@ pub struct TrainCtx<'a> {
     /// The PJRT L1 importance kernel (loaded iff the spec scores with
     /// it — `MethodSpec::needs_kernel`).
     pub kernel: Option<&'a mut ImportanceKernel>,
+    /// Online autotuner (DESIGN.md §14) — same contract as
+    /// [`SimCtx::tuner`].
+    pub tuner: Option<&'a mut Tuner>,
 }
 
 /// One compression pipeline: per-node state behind the two engine entry
@@ -449,8 +460,13 @@ struct SharedMaskCompressor {
     u_buf: Vec<f32>,
     mask_slots: Vec<BitMask>,
     stats_scratch: Vec<LayerStats>,
-    /// `+tern` per-node compacted payloads (train side, lazy).
+    /// Per-node compacted payloads for the whole-blob wire formats
+    /// (`+tern`, and the tuner's gather pick) — train side, lazy.
     tern_payloads: Vec<Vec<f32>>,
+    /// All-ones mask for the tuner's dense-pick residual flush
+    /// (`clear_masked` over the full support; lazy — `take_all` would
+    /// allocate a model-sized Vec per node per step).
+    full_mask: BitMask,
 }
 
 impl SharedMaskCompressor {
@@ -486,6 +502,7 @@ impl SharedMaskCompressor {
             mask_slots: Vec::new(),
             stats_scratch: Vec::new(),
             tern_payloads: Vec::new(),
+            full_mask: BitMask::zeros(0),
             spec,
         }
     }
@@ -643,6 +660,141 @@ impl Compressor for SharedMaskCompressor {
                 .map(|&b| &self.scratch[b].mask)
                 .collect(),
         };
+        // Autotuner seam (DESIGN.md §14): OR the (decoded) broadcaster
+        // masks into the observation and price the strategy grid. Pure
+        // data in, pure decision out — the masks already traveled
+        // above, so the decision is identical across transports. In
+        // log-only mode the decision is traced and the static strategy
+        // below runs untouched (bit-identical to tuner-off).
+        let tuned_pick: Option<usize> = match ctx.tuner.as_deref_mut() {
+            Some(tuner) => {
+                let mut shared_obs = BitMask::zeros(total);
+                for m in &mask_refs {
+                    shared_obs.or_assign(m);
+                }
+                let d = tuner.decide(&Observation {
+                    coords: total,
+                    k: mask_refs.len(),
+                    shared: &shared_obs,
+                });
+                (tuner.mode() == TunerMode::On).then_some(d.index)
+            }
+            None => None,
+        };
+        if let Some(idx) = tuned_pick {
+            // Execute the picked strategy. Masked picks run through
+            // their prebuilt pipelined topology (selection prep charged
+            // on the clock internally); the other formats charge the
+            // same prep up front (`net.advance`) — the prep-inclusive
+            // objective every candidate was priced under.
+            let tuner = ctx.tuner.as_deref().expect("pick implies a tuner");
+            let strat = *tuner.strategy(idx);
+            let topo = tuner.strategy_topo(idx);
+            let outcome = match strat.wire {
+                WirePick::Masked => {
+                    let (shared, rep) = topo.masked_bytes_only(ctx.net, &mask_refs, ctx.arena);
+                    let nnz = shared.count();
+                    let shared_ref = &shared;
+                    ctx.exec.map_mut(&mut self.stores, |_, store| {
+                        store.clear_masked(shared_ref);
+                    });
+                    WireOutcome {
+                        wire_bytes_per_node: rep.mean_bytes_per_node() as u64,
+                        payload_bytes: wire_bytes(WireFormat::cheapest(total, nnz), total, nnz),
+                        density: shared.density(),
+                        support_nnz: nnz as u64,
+                        wire_seconds: ctx.net.clock() - t0,
+                    }
+                }
+                WirePick::Dense => {
+                    // The full pending residual flushes dense (the
+                    // wire path exchanges real chunks, like the dense
+                    // pipeline's accounting step).
+                    let decoded = match ctx.wire.as_deref_mut() {
+                        Some(w) => {
+                            w.exchange_dense(ctx.weights).expect("wire dense exchange failed")
+                        }
+                        None => total,
+                    };
+                    ctx.net.advance(crate::net::topo::pipeline::prep_seconds(total));
+                    let rep = topo.dense_bytes_only(ctx.net, decoded, ctx.arena);
+                    if self.full_mask.len() != total {
+                        let mut m = BitMask::zeros(total);
+                        for i in 0..total {
+                            m.set(i);
+                        }
+                        self.full_mask = m;
+                    }
+                    let full = &self.full_mask;
+                    ctx.exec.map_mut(&mut self.stores, |_, store| {
+                        store.clear_masked(full);
+                    });
+                    WireOutcome {
+                        wire_bytes_per_node: rep.total_bytes() / ctx.nodes as u64,
+                        payload_bytes: ctx.layout.dense_bytes(),
+                        density: 1.0,
+                        support_nnz: decoded as u64,
+                        wire_seconds: ctx.net.clock() - t0,
+                    }
+                }
+                WirePick::Gather => {
+                    // Sparse allgather: masks, then every node's whole
+                    // f32 blob (4·nnz — the blob size is fully
+                    // determined by the decoded shared mask, so the
+                    // virtual pricing needs no extra socket traffic).
+                    ctx.net.advance(crate::net::topo::pipeline::prep_seconds(total));
+                    let mut shared = BitMask::zeros(total);
+                    for m in &mask_refs {
+                        shared.or_assign(m);
+                    }
+                    let rep_mask = topo.spread_bytes(
+                        ctx.net,
+                        shared.wire_bytes(),
+                        mask_refs.len(),
+                        ctx.arena,
+                    );
+                    let nnz = shared.count();
+                    let blob = values_only_bytes(nnz);
+                    let rep_blob = topo.spread_bytes(ctx.net, blob, ctx.nodes, ctx.arena);
+                    let shared_ref = &shared;
+                    ctx.exec.map_mut(&mut self.stores, |_, store| {
+                        store.clear_masked(shared_ref);
+                    });
+                    WireOutcome {
+                        wire_bytes_per_node: (rep_mask.total_bytes() + rep_blob.total_bytes())
+                            / ctx.nodes as u64,
+                        payload_bytes: blob,
+                        density: shared.density(),
+                        support_nnz: nnz as u64,
+                        wire_seconds: ctx.net.clock() - t0,
+                    }
+                }
+                WirePick::Tern => {
+                    ctx.net.advance(crate::net::topo::pipeline::prep_seconds(total));
+                    let (shared, blob, total_bytes) = self.tern_wire(
+                        ctx.net,
+                        topo,
+                        ctx.arena,
+                        ctx.wire.as_deref_mut(),
+                        &mask_refs,
+                        ctx.nodes,
+                        total,
+                    );
+                    let shared_ref = &shared;
+                    ctx.exec.map_mut(&mut self.stores, |_, store| {
+                        store.clear_masked(shared_ref);
+                    });
+                    WireOutcome {
+                        wire_bytes_per_node: total_bytes / ctx.nodes as u64,
+                        payload_bytes: blob,
+                        density: shared.density(),
+                        support_nnz: shared.count() as u64,
+                        wire_seconds: ctx.net.clock() - t0,
+                    }
+                }
+            };
+            return outcome;
+        }
         let (shared, wire, payload) = if self.spec.tern {
             let (shared, blob, total_bytes) = self.tern_wire(
                 ctx.net,
@@ -740,6 +892,178 @@ impl Compressor for SharedMaskCompressor {
         std::mem::swap(&mut self.prev_stats, &mut self.stats_scratch);
 
         let inv_n = 1.0 / n as f32;
+        // Autotuner seam (DESIGN.md §14), mirroring `sim_step`: OR the
+        // broadcaster masks, price the grid, and in On mode execute the
+        // pick. Decisions are computed on the coordinating thread from
+        // pure data, so they are identical at any `--parallelism`.
+        let tuned_pick: Option<usize> = match ctx.tuner.as_deref_mut() {
+            Some(tuner) => {
+                let mut shared_obs = BitMask::zeros(total);
+                for m in &self.mask_slots[..broadcasters.len()] {
+                    shared_obs.or_assign(m);
+                }
+                let d = tuner.decide(&Observation {
+                    coords: total,
+                    k: broadcasters.len(),
+                    shared: &shared_obs,
+                });
+                (tuner.mode() == TunerMode::On).then_some(d.index)
+            }
+            None => None,
+        };
+        if let Some(idx) = tuned_pick {
+            let tuner = ctx.tuner.as_deref().expect("pick implies a tuner");
+            let strat = *tuner.strategy(idx);
+            let topo = tuner.strategy_topo(idx);
+            let outcome = match strat.wire {
+                WirePick::Masked => {
+                    // Alg. 1 over the picked (pipelined) topology.
+                    let mask_refs: Vec<&BitMask> =
+                        self.mask_slots[..broadcasters.len()].iter().collect();
+                    let values: Vec<&[f32]> =
+                        self.stores.iter().map(|s| s.pending()).collect();
+                    let (shared, summed, rep) =
+                        topo.masked(ctx.net, &mask_refs, &values, ctx.exec, ctx.arena);
+                    let shared_ref = &shared;
+                    ctx.exec.map_mut(&mut self.stores, |_, store| {
+                        store.clear_masked(shared_ref);
+                    });
+                    ctx.opt
+                        .step_sparse_mask(ctx.params, &shared, &summed, inv_n, ctx.lr);
+                    let nnz = shared.count();
+                    WireOutcome {
+                        wire_bytes_per_node: rep.mean_bytes_per_node() as u64,
+                        payload_bytes: wire_bytes(WireFormat::cheapest(total, nnz), total, nnz),
+                        density: shared.density(),
+                        support_nnz: nnz as u64,
+                        wire_seconds: ctx.net.clock() - t0,
+                    }
+                }
+                WirePick::Dense => {
+                    // Flush the full pending residual dense. The update
+                    // stays the masked paths' plain sparse-SGD rule
+                    // (momentum lives in the residual stores, Eq. 3),
+                    // applied over the full support.
+                    ctx.net.advance(crate::net::topo::pipeline::prep_seconds(total));
+                    let mut bufs: Vec<Vec<f32>> =
+                        ctx.exec.map_mut(&mut self.stores, |_, store| store.take_all());
+                    let rep = topo.dense(ctx.net, &mut bufs, ctx.exec, ctx.arena);
+                    if self.full_mask.len() != total {
+                        let mut m = BitMask::zeros(total);
+                        for i in 0..total {
+                            m.set(i);
+                        }
+                        self.full_mask = m;
+                    }
+                    ctx.opt.step_sparse_mask(
+                        ctx.params,
+                        &self.full_mask,
+                        &bufs[0],
+                        inv_n,
+                        ctx.lr,
+                    );
+                    WireOutcome {
+                        wire_bytes_per_node: rep.mean_bytes_per_node() as u64,
+                        payload_bytes: ctx.layout.dense_bytes(),
+                        density: 1.0,
+                        support_nnz: total as u64,
+                        wire_seconds: ctx.net.clock() - t0,
+                    }
+                }
+                WirePick::Gather => {
+                    // Sparse allgather: per-node compacted payloads
+                    // travel whole; receivers sum in node order.
+                    ctx.net.advance(crate::net::topo::pipeline::prep_seconds(total));
+                    let mut shared = BitMask::zeros(total);
+                    for m in &self.mask_slots[..broadcasters.len()] {
+                        shared.or_assign(m);
+                    }
+                    if self.tern_payloads.len() != self.stores.len() {
+                        self.tern_payloads = vec![Vec::new(); self.stores.len()];
+                    }
+                    let shared_ref = &shared;
+                    ctx.exec.map_mut2(
+                        &mut self.stores,
+                        &mut self.tern_payloads,
+                        |_, store, buf| {
+                            fuse::take_compact(store, shared_ref, buf);
+                        },
+                    );
+                    let rep_mask = topo.spread_bytes(
+                        ctx.net,
+                        shared.wire_bytes(),
+                        broadcasters.len(),
+                        ctx.arena,
+                    );
+                    let blob = values_only_bytes(shared.count());
+                    let rep_blob = topo.spread_bytes(ctx.net, blob, n, ctx.arena);
+                    let mut summed = vec![0.0f32; shared.count()];
+                    for p in &self.tern_payloads {
+                        for (s, v) in summed.iter_mut().zip(p) {
+                            *s += v;
+                        }
+                    }
+                    ctx.opt
+                        .step_sparse_mask(ctx.params, &shared, &summed, inv_n, ctx.lr);
+                    WireOutcome {
+                        wire_bytes_per_node: (rep_mask.total_bytes() + rep_blob.total_bytes())
+                            / n as u64,
+                        payload_bytes: blob,
+                        density: shared.density(),
+                        support_nnz: shared.count() as u64,
+                        wire_seconds: ctx.net.clock() - t0,
+                    }
+                }
+                WirePick::Tern => {
+                    // The `+tern` stage body over the picked topology.
+                    ctx.net.advance(crate::net::topo::pipeline::prep_seconds(total));
+                    let mut shared = BitMask::zeros(total);
+                    for m in &self.mask_slots[..broadcasters.len()] {
+                        shared.or_assign(m);
+                    }
+                    if self.tern_payloads.len() != self.stores.len() {
+                        self.tern_payloads = vec![Vec::new(); self.stores.len()];
+                    }
+                    let shared_ref = &shared;
+                    ctx.exec.map_mut2(
+                        &mut self.stores,
+                        &mut self.tern_payloads,
+                        |_, store, buf| {
+                            fuse::take_compact(store, shared_ref, buf);
+                        },
+                    );
+                    let blobs: Vec<TernBlob> = {
+                        let payloads: &[Vec<f32>] = &self.tern_payloads;
+                        ctx.exec.map_mut(ctx.node_rngs, |node, rng| {
+                            TernBlob::encode(&payloads[node], rng)
+                        })
+                    };
+                    let rep_mask = topo.spread_bytes(
+                        ctx.net,
+                        shared.wire_bytes(),
+                        broadcasters.len(),
+                        ctx.arena,
+                    );
+                    let rep_blob =
+                        topo.spread_bytes(ctx.net, blobs[0].wire_bytes(), n, ctx.arena);
+                    let mut summed = vec![0.0f32; shared.count()];
+                    for b in &blobs {
+                        b.add_decoded_into(&mut summed);
+                    }
+                    ctx.opt
+                        .step_sparse_mask(ctx.params, &shared, &summed, inv_n, ctx.lr);
+                    WireOutcome {
+                        wire_bytes_per_node: (rep_mask.total_bytes() + rep_blob.total_bytes())
+                            / n as u64,
+                        payload_bytes: blobs[0].wire_bytes(),
+                        density: shared.density(),
+                        support_nnz: shared.count() as u64,
+                        wire_seconds: ctx.net.clock() - t0,
+                    }
+                }
+            };
+            return Ok(outcome);
+        }
         let outcome = if self.spec.tern {
             // `+tern`: once the shared mask is known, each node's
             // compacted residuals quantize ternary and spread whole

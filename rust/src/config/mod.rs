@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::compress::{Method, MethodSpec};
-use crate::net::{TopoKind, TransportKind};
+use crate::net::{TopoKind, TransportKind, TunerMode};
 use crate::util::cli::Args;
 
 /// Everything a training / experiment run needs.
@@ -69,6 +69,12 @@ pub struct Config {
     /// through a real socket ring whose decoded frames must reproduce
     /// the simulator bit for bit. Defaults from `RINGIWP_TRANSPORT`.
     pub transport: TransportKind,
+    /// Online protocol autotuner (`net::tuner`, DESIGN.md §14):
+    /// `off` | `on` | `log-only`. `on` replaces the static wire-format
+    /// / topology / chunking choice with the per-step `CostModel`
+    /// argmin; `log-only` records the decisions while the static
+    /// strategy keeps executing. Defaults from `RINGIWP_TUNER`.
+    pub tuner: TunerMode,
     /// Artifact directory (`make artifacts` output).
     pub artifacts_dir: String,
     /// Output directory for CSVs and logs.
@@ -100,6 +106,7 @@ impl Default for Config {
             parallelism: 1,
             topology: TopoKind::Flat,
             transport: TransportKind::from_env(),
+            tuner: TunerMode::from_env(),
             artifacts_dir: "artifacts".into(),
             out_dir: "results".into(),
         }
@@ -143,6 +150,9 @@ impl Config {
         if let Some(t) = a.str_opt("transport") {
             self.transport = TransportKind::parse(t)?;
         }
+        if let Some(t) = a.str_opt("tuner") {
+            self.tuner = TunerMode::parse(t)?;
+        }
         self.artifacts_dir = a.str_or("artifacts", &self.artifacts_dir);
         self.out_dir = a.str_or("out", &self.out_dir);
         self.validate()?;
@@ -174,6 +184,7 @@ impl Config {
                 "parallelism" => self.parallelism = v.parse()?,
                 "topology" => self.topology = TopoKind::parse(v)?,
                 "transport" => self.transport = TransportKind::parse(v)?,
+                "tuner" => self.tuner = TunerMode::parse(v)?,
                 "artifacts_dir" => self.artifacts_dir = v.clone(),
                 "out_dir" => self.out_dir = v.clone(),
                 other => anyhow::bail!("unknown config key `{other}`"),
@@ -203,6 +214,15 @@ impl Config {
         anyhow::ensure!(self.parallelism >= 1, "parallelism must be >= 1");
         self.method.validate()?;
         self.topology.validate()?;
+        if self.tuner != TunerMode::Off {
+            anyhow::ensure!(
+                matches!(self.method.head, crate::compress::SpecHead::Iwp(_)),
+                "--tuner {} needs a shared-mask method (iwp:*); `{}` has no \
+                 mask observation to tune on",
+                self.tuner.name(),
+                self.method.name()
+            );
+        }
         Ok(())
     }
 
@@ -371,6 +391,38 @@ mod tests {
                 .map(String::from),
         );
         assert!(Config::default().apply_args(&a).is_err());
+    }
+
+    #[test]
+    fn tuner_knob_flows_from_flag_and_file() {
+        let a = Args::parse(
+            ["train", "--tuner", "on"].into_iter().map(String::from),
+        );
+        let cfg = Config::default().apply_args(&a).unwrap();
+        assert_eq!(cfg.tuner, TunerMode::On);
+        let kv = parse_kv("tuner = log-only").unwrap();
+        assert_eq!(
+            Config::default().apply_kv(&kv).unwrap().tuner,
+            TunerMode::LogOnly
+        );
+        // Malformed mode is rejected at the shared parse entry point.
+        let a = Args::parse(
+            ["train", "--tuner", "sometimes"].into_iter().map(String::from),
+        );
+        assert!(Config::default().apply_args(&a).is_err());
+        // The tuner observes shared masks — non-IWP methods can't run it.
+        let c = Config {
+            tuner: TunerMode::On,
+            method: Method::Baseline.spec(),
+            ..Config::default()
+        };
+        assert!(c.validate().is_err());
+        let c = Config {
+            tuner: TunerMode::On,
+            method: Method::IwpFixed.spec(),
+            ..Config::default()
+        };
+        c.validate().unwrap();
     }
 
     #[test]

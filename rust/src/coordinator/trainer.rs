@@ -13,7 +13,7 @@ use crate::config::Config;
 use crate::data::{CharCorpus, SynthClassification};
 use crate::metrics::CompressionAccount;
 use crate::model::ParamLayout;
-use crate::net::{RingNet, Topology};
+use crate::net::{RingNet, Topology, Tuner, TunerMode};
 use crate::optim::{LrSchedule, MomentumSgd};
 use crate::ring::{Arena, Executor};
 use crate::runtime::{Artifact, ImportanceKernel, Runtime};
@@ -82,6 +82,8 @@ pub struct Trainer {
     /// The configured compression pipeline — owns every method-specific
     /// piece of per-node state (DESIGN.md §12).
     comp: Box<dyn Compressor>,
+    /// Online autotuner (`--tuner`, DESIGN.md §14); `None` when off.
+    tuner: Option<Tuner>,
 }
 
 impl Trainer {
@@ -168,6 +170,8 @@ impl Trainer {
             node_rngs,
             ctl_rng,
             comp,
+            tuner: (cfg.tuner != TunerMode::Off)
+                .then(|| Tuner::new(cfg.tuner, cfg.nodes, cfg.link_spec())),
             task,
             params,
             layout,
@@ -180,6 +184,11 @@ impl Trainer {
     /// The model layout under training.
     pub fn layout(&self) -> &ParamLayout {
         &self.layout
+    }
+
+    /// The online autotuner — `None` when `--tuner off` (DESIGN.md §14).
+    pub fn tuner(&self) -> Option<&Tuner> {
+        self.tuner.as_ref()
     }
 
     /// Dense per-node wire reference: 2(N-1)/N of the gradient bytes —
@@ -312,6 +321,7 @@ impl Trainer {
                 ctl_rng: &mut self.ctl_rng,
                 opt: &mut self.opt,
                 kernel: self.kernel.as_mut(),
+                tuner: self.tuner.as_mut(),
             };
             self.comp.train_reduce(&mut ctx)?
         };

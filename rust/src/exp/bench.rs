@@ -34,7 +34,10 @@ use crate::exp::simrun::{SimCfg, SimEngine, WireEngine};
 use crate::metrics::bench::BenchReport;
 use crate::model::{zoo, LayerKind, ParamLayout};
 use crate::net::topo::pipeline;
-use crate::net::{CostModel, LinkSpec, PipeInner, RingNet, TopoKind, Topology, TransportKind};
+use crate::net::{
+    CostModel, LinkSpec, Observation, PipeInner, RingNet, TopoKind, Topology, TransportKind,
+    Tuner, TunerMode,
+};
 use crate::ring::{Arena, Executor, ReduceReport};
 use crate::sparse::{BitMask, SparseVec};
 use crate::util::json::Json;
@@ -155,6 +158,8 @@ pub const BENCH_TOPOLOGIES: [TopoKind; 4] = [
 /// ring sizes. Dense and masked rows carry the closed-form
 /// `CostModel::topo_*` predictions (`model_s`, `model_bytes`), which
 /// must equal the simulated `virtual_s` / `total_bytes` bit for bit.
+/// One `tuned` row per ring size records the `net::tuner` argmin pick
+/// over the candidate grid on the bench mask (DESIGN.md §14).
 pub fn run_ring(cfg: &BenchCfg) -> BenchReport {
     let coords = cfg.ring_coords();
     let mut report = BenchReport::new("ring", cfg.config_json());
@@ -289,6 +294,42 @@ pub fn run_ring(cfg: &BenchCfg) -> BenchReport {
                 ns.map(|s| s.median_ns),
             ));
         }
+
+        // -- tuned (net::tuner argmin over the candidate grid) ----------
+        // One decision on the bench mask per ring size: the row records
+        // which strategy the autotuner would run here and its predicted
+        // prep-inclusive wire-seconds (DESIGN.md §14). The decision is
+        // pure arithmetic over the CostModel closed forms, so every
+        // field but ns_op replays bit-for-bit.
+        let mut tuner = Tuner::new(TunerMode::On, n, cfg.link);
+        let obs = Observation {
+            coords,
+            k: 1,
+            shared: &mask,
+        };
+        let d = tuner.decide(&obs);
+        let strat = *tuner.strategy(d.index);
+        let ns = cfg.timing.then(|| {
+            timer::bench(0, cfg.repeats.max(1), || {
+                std::hint::black_box(tuner.decide(&obs));
+            })
+            .median_ns
+        });
+        let id = format!("ring/tuned/n{n}/c{coords}");
+        let pick = strat.name();
+        let mut fields = vec![
+            ("id", Json::from(id.as_str())),
+            ("schedule", Json::from("tuned")),
+            ("topology", Json::from(strat.topo.name().as_str())),
+            ("nodes", Json::from(n)),
+            ("coords", Json::from(coords)),
+            ("pick", Json::from(pick.as_str())),
+            ("predicted_s", Json::from(d.predicted_s)),
+        ];
+        if let Some(ns) = ns {
+            fields.push(("ns_op", Json::from(ns)));
+        }
+        report.push(Json::obj(fields));
     }
     report
 }
@@ -372,7 +413,8 @@ pub fn step_specs() -> [MethodSpec; 7] {
     ]
 }
 
-/// The engine step sweep: 7 pipelines × ring sizes × AlexNet/ResNet50.
+/// The engine step sweep: 7 pipelines plus the autotuned arm (`tuned`,
+/// `--tuner on` over `iwp:fixed`) × ring sizes × AlexNet/ResNet50.
 pub fn run_step(cfg: &BenchCfg) -> BenchReport {
     let mut report = BenchReport::new("step", cfg.config_json());
     let models: Vec<(&str, ParamLayout)> = if cfg.quick {
@@ -381,11 +423,25 @@ pub fn run_step(cfg: &BenchCfg) -> BenchReport {
         vec![("alexnet", zoo::alexnet()), ("resnet50", zoo::resnet50())]
     };
     for (model_name, layout) in &models {
-        for method in step_specs() {
+        // The static pipelines, plus one autotuned arm: the canonical
+        // IWP observation stream with each step's CostModel-argmin
+        // strategy executing (`--tuner on`, DESIGN.md §14). Its row id
+        // reads `step/<model>/tuned/n<N>`.
+        let mut arms: Vec<(MethodSpec, TunerMode, String)> = step_specs()
+            .into_iter()
+            .map(|m| {
+                let label = m.name();
+                (m, TunerMode::Off, label)
+            })
+            .collect();
+        arms.push((Method::IwpFixed.spec(), TunerMode::On, "tuned".into()));
+        for (method, tuner_mode, label) in &arms {
+            let (method, tuner_mode) = (*method, *tuner_mode);
             for &n in &cfg.ring_sizes {
                 let sim = SimCfg {
                     nodes: n,
                     method,
+                    tuner: tuner_mode,
                     seed: cfg.seed,
                     link: cfg.link,
                     // Pinned: the step sweep measures the pipelines on
@@ -407,7 +463,13 @@ pub fn run_step(cfg: &BenchCfg) -> BenchReport {
                 // fields by the transport-equivalence oracle).
                 let steps = cfg.metric_steps();
                 let (mut wire_sum, mut secs, mut density) = (0u64, 0.0f64, 0.0f64);
-                let (wire_ratio, payload_ratio, topology) = if cfg.transport.is_wire() {
+                let tuned_summary = |t: Option<&Tuner>| {
+                    t.map(|t| {
+                        let last = t.trace().last().expect("stepped tuner has decisions");
+                        (last.pick.clone(), t.switches())
+                    })
+                };
+                let (wire_ratio, payload_ratio, topology, tuned) = if cfg.transport.is_wire() {
                     let mut engine =
                         WireEngine::new(layout.clone(), sim.clone()).expect("wire ring");
                     for s in 0..steps {
@@ -421,6 +483,7 @@ pub fn run_step(cfg: &BenchCfg) -> BenchReport {
                         acct.ratio(),
                         acct.payload_ratio(),
                         engine.sim().topology().name(),
+                        tuned_summary(engine.sim().tuner()),
                     )
                 } else {
                     let mut engine = SimEngine::new(layout.clone(), sim.clone());
@@ -434,6 +497,7 @@ pub fn run_step(cfg: &BenchCfg) -> BenchReport {
                         engine.account.ratio(),
                         engine.account.payload_ratio(),
                         engine.topology().name(),
+                        tuned_summary(engine.tuner()),
                     )
                 };
                 // Timing pass on a fresh engine (the metrics pass above
@@ -457,12 +521,11 @@ pub fn run_step(cfg: &BenchCfg) -> BenchReport {
                         .median_ns
                     }
                 });
-                let id = format!("step/{model_name}/{}/n{n}", method.name());
-                let method_name = method.name();
+                let id = format!("step/{model_name}/{label}/n{n}");
                 let mut fields = vec![
                     ("id", Json::from(id.as_str())),
                     ("model", Json::from(*model_name)),
-                    ("method", Json::from(method_name.as_str())),
+                    ("method", Json::from(label.as_str())),
                     ("topology", Json::from(topology.as_str())),
                     ("transport", Json::from(cfg.transport.name())),
                     ("nodes", Json::from(n)),
@@ -473,6 +536,10 @@ pub fn run_step(cfg: &BenchCfg) -> BenchReport {
                     ("wire_ratio", Json::from(wire_ratio)),
                     ("payload_ratio", Json::from(payload_ratio)),
                 ];
+                if let Some((last_pick, switches)) = tuned {
+                    fields.push(("tuned_last_pick", Json::from(last_pick.as_str())));
+                    fields.push(("tuned_switches", Json::from(switches)));
+                }
                 if let Some(ns) = ns {
                     fields.push(("ns_op", Json::from(ns)));
                 }
@@ -504,8 +571,9 @@ mod tests {
         let a = run_ring(&cfg).to_json();
         let b = run_ring(&cfg).to_json();
         assert_eq!(canonical(&a), canonical(&b));
-        // 3 schedules x 4 topologies x 2 ring sizes.
-        assert_eq!(a.get("rows").as_arr().unwrap().len(), 3 * 4 * 2);
+        // 3 schedules x 4 topologies x 2 ring sizes, plus one tuned
+        // decision row per ring size.
+        assert_eq!(a.get("rows").as_arr().unwrap().len(), 3 * 4 * 2 + 2);
     }
 
     #[test]
@@ -517,8 +585,8 @@ mod tests {
         let a = run_step(&cfg).to_json();
         let b = run_step(&cfg).to_json();
         assert_eq!(canonical(&a), canonical(&b));
-        // 2 models x 7 pipelines x 1 ring size.
-        assert_eq!(a.get("rows").as_arr().unwrap().len(), 14);
+        // 2 models x (7 pipelines + the tuned arm) x 1 ring size.
+        assert_eq!(a.get("rows").as_arr().unwrap().len(), 16);
     }
 
     #[test]
@@ -574,6 +642,40 @@ mod tests {
                     "{id}: `{field}` drifts across transports"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn both_sweeps_carry_tuned_rows() {
+        let cfg = BenchCfg {
+            ring_sizes: vec![4],
+            ..tiny_cfg()
+        };
+        let r = run_ring(&cfg).to_json();
+        let tuned: Vec<_> = r
+            .get("rows")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|x| x.get("schedule").as_str() == Some("tuned"))
+            .collect();
+        assert_eq!(tuned.len(), 1, "one ring tuned row per ring size");
+        assert!(tuned[0].get("pick").as_str().unwrap().contains('/'));
+        assert!(tuned[0].get("predicted_s").as_f64().unwrap() > 0.0);
+
+        let s = run_step(&cfg).to_json();
+        let tuned: Vec<_> = s
+            .get("rows")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|x| x.get("method").as_str() == Some("tuned"))
+            .collect();
+        assert_eq!(tuned.len(), 2, "one step tuned row per model");
+        for row in tuned {
+            assert!(row.get("tuned_last_pick").as_str().unwrap().contains('/'));
+            assert!(row.get("tuned_switches").as_f64().unwrap() >= 0.0);
+            assert!(row.get("virtual_s").as_f64().unwrap() > 0.0);
         }
     }
 

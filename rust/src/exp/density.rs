@@ -13,14 +13,16 @@
 //! tree, and the layer-pipelined flat ring at chunk depths 1 (serial
 //! anchor) and 8 (overlapped — DESIGN.md §11; only the pipeline rows
 //! price selection prep, so compare them to each other), plus per-step
-//! wire bytes/time and the analytic `1-(1-d)^N` model.
+//! wire bytes/time and the analytic `1-(1-d)^N` model. A final `tuned`
+//! row per ring size runs the shared-mask stream under `--tuner on`
+//! (DESIGN.md §14), recording what the autotuner picks at that scale.
 
 use crate::compress::MethodSpec;
 use crate::csv_row;
 use crate::exp::simrun::{SimCfg, SimEngine};
 use crate::metrics::CsvWriter;
 use crate::model::zoo;
-use crate::net::{PipeInner, TopoKind};
+use crate::net::{PipeInner, TopoKind, TunerMode};
 use crate::ring::sparse::expected_final_density;
 
 /// Topologies the density sweep compares (group 8 keeps at least two
@@ -131,6 +133,49 @@ pub fn run(out_dir: &str, seed: u64) -> anyhow::Result<()> {
                 dgc_bytes as f64 / 1e6
             );
         }
+
+        // Autotuned arm (DESIGN.md §14): the same shared-mask stream
+        // with each step's CostModel-argmin strategy executing. The
+        // `topology` column carries the literal `tuned`; the pick the
+        // tuner settled on at this ring size is printed alongside.
+        let cfg = SimCfg {
+            nodes: n,
+            method: MethodSpec::parse("iwp:fixed").expect("registry spec"),
+            threshold: 0.04,
+            mask_nodes: 1,
+            random_select: false,
+            seed,
+            tuner: TunerMode::On,
+            ..Default::default()
+        };
+        let mut engine = SimEngine::new(layout.clone(), cfg);
+        let (mut last_density, mut wire, mut secs) = (0.0, 0u64, 0.0);
+        for s in 0..2 {
+            let r = engine.step(s);
+            last_density = r.density;
+            wire = r.wire_bytes_per_node;
+            secs = r.seconds;
+        }
+        let pick = engine
+            .tuner()
+            .and_then(|t| t.trace().last())
+            .map(|r| r.pick.clone())
+            .unwrap_or_default();
+        csv_row!(
+            csv,
+            n,
+            "tuned",
+            "iwp:fixed",
+            last_density,
+            expected_final_density(0.01, n),
+            wire,
+            secs
+        )?;
+        println!(
+            "{n:>6} {:>15} {:>10.4}% (autotuned iwp:fixed — pick {pick})",
+            "tuned",
+            last_density * 100.0
+        );
     }
     csv.flush()?;
     println!(

@@ -19,7 +19,9 @@ use crate::compress::{Compressor, Method, MethodSpec};
 use crate::grad::SynthGrads;
 use crate::metrics::CompressionAccount;
 use crate::model::ParamLayout;
-use crate::net::{LinkSpec, RingNet, TopoKind, Topology, TransportKind, WireError, WireRing};
+use crate::net::{
+    LinkSpec, RingNet, TopoKind, Topology, TransportKind, Tuner, TunerMode, WireError, WireRing,
+};
 use crate::ring::{Arena, Executor};
 use crate::util::rng::Rng;
 
@@ -70,6 +72,12 @@ pub struct SimCfg {
     /// set (flag or `RINGIWP_WIRE_DIR`), [`WireEngine`] attaches to
     /// the serve ranks instead of spawning in-process ones.
     pub wire_dir: Option<std::path::PathBuf>,
+    /// Online protocol autotuner (`net::tuner`, DESIGN.md §14):
+    /// `off` keeps the static strategy, `log-only` prices the grid and
+    /// records decisions while still running the static path, `on`
+    /// executes each step's argmin pick. Defaults to `RINGIWP_TUNER`,
+    /// else `off`.
+    pub tuner: TunerMode,
 }
 
 impl Default for SimCfg {
@@ -95,6 +103,7 @@ impl Default for SimCfg {
             topology: TopoKind::from_env(),
             transport: TransportKind::from_env(),
             wire_dir: std::env::var_os("RINGIWP_WIRE_DIR").map(std::path::PathBuf::from),
+            tuner: TunerMode::from_env(),
         }
     }
 }
@@ -146,6 +155,9 @@ pub struct SimEngine {
     /// The configured compression pipeline — owns every method-specific
     /// piece of per-node state (DESIGN.md §12).
     comp: Box<dyn Compressor>,
+    /// Online autotuner (DESIGN.md §14); `None` when `cfg.tuner` is
+    /// `off`. Owns the candidate grid and the decision trace.
+    tuner: Option<Tuner>,
     imp_scratch: Vec<f32>,
     /// Cached per-layer stats buffer behind `importance_snapshot`
     /// (refilled in place — no per-call allocation).
@@ -193,6 +205,8 @@ impl SimEngine {
             topo: cfg.topology.build(cfg.nodes),
             arena: Arena::for_nodes(cfg.nodes),
             comp,
+            tuner: (cfg.tuner != TunerMode::Off)
+                .then(|| Tuner::new(cfg.tuner, cfg.nodes, cfg.link)),
             imp_scratch: vec![0.0; total],
             snap_stats: Vec::with_capacity(layout.n_layers()),
             grads: vec![vec![0.0; total]; state_nodes],
@@ -221,6 +235,12 @@ impl SimEngine {
     /// (DESIGN.md §10).
     pub fn topology(&self) -> TopoKind {
         self.topo.kind()
+    }
+
+    /// The online autotuner — `None` when `--tuner off`; otherwise the
+    /// decision trace and switch counter live here (DESIGN.md §14).
+    pub fn tuner(&self) -> Option<&Tuner> {
+        self.tuner.as_ref()
     }
 
     /// The synthetic weight buffer importance is scored against.
@@ -323,6 +343,7 @@ impl SimEngine {
                 rngs: &mut self.rngs,
                 ctl_rng: &mut self.ctl_rng,
                 wire,
+                tuner: self.tuner.as_mut(),
             };
             self.comp.sim_step(&mut ctx)
         };
@@ -647,6 +668,51 @@ mod tests {
             ..cfg(Method::Baseline, 4)
         };
         assert!(WireEngine::new(small_layout(), c).is_err());
+    }
+
+    #[test]
+    fn tuner_log_only_is_bit_identical_to_off() {
+        // LogOnly decides + records but still executes the static path,
+        // so every report must match `--tuner off` bit for bit.
+        let layout = small_layout();
+        let base = cfg(Method::IwpFixed, 8);
+        let mut off = SimEngine::new(layout.clone(), base.clone());
+        let mut log = SimEngine::new(
+            layout,
+            SimCfg {
+                tuner: TunerMode::LogOnly,
+                ..base
+            },
+        );
+        for s in 0..4 {
+            let a = off.step(s);
+            let b = log.step(s);
+            assert_eq!(a.wire_bytes_per_node, b.wire_bytes_per_node, "step {s}");
+            assert_eq!(a.density.to_bits(), b.density.to_bits(), "step {s}");
+            assert_eq!(a.wire_seconds.to_bits(), b.wire_seconds.to_bits(), "step {s}");
+            assert_eq!(a.support_nnz, b.support_nnz, "step {s}");
+        }
+        assert!(off.tuner().is_none());
+        let t = log.tuner().unwrap();
+        assert_eq!(t.trace().len(), 4, "one decision per step");
+    }
+
+    #[test]
+    fn tuner_on_runs_and_records_decisions() {
+        let mut c = cfg(Method::IwpFixed, 8);
+        c.tuner = TunerMode::On;
+        let mut e = SimEngine::new(small_layout(), c);
+        for s in 0..4 {
+            let r = e.step(s);
+            assert!(r.wire_bytes_per_node > 0, "step {s}");
+            assert!(r.wire_seconds > 0.0, "step {s}");
+        }
+        let t = e.tuner().unwrap();
+        assert_eq!(t.trace().len(), 4);
+        for row in t.trace().rows() {
+            assert_eq!(row.considered.len(), t.candidates().len());
+            assert!(row.predicted_s.is_finite());
+        }
     }
 
     #[test]

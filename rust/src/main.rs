@@ -39,6 +39,11 @@ SUBCOMMANDS:
                   --topology flat|hier:<group_size>|tree|
                   pipeline:<chunks>[:<inner>] (reduce topology, DESIGN.md
                   §10-§11; default flat)
+                  --tuner off|on|log-only (online protocol autotuner,
+                  DESIGN.md §14: each step picks the CostModel-argmin
+                  wire format + topology + chunking from the observed
+                  shared mask; log-only records decisions without acting;
+                  env RINGIWP_TUNER sets the default; needs iwp:* methods)
     exp         regenerate a paper experiment:
                   --id table1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|density|sweep|all
                   --out DIR (default results/) --steps N --nodes N --seed N
@@ -49,7 +54,9 @@ SUBCOMMANDS:
                    own topology set itself)
     bench       run the in-process perf harness (exp::bench) and emit
                 schema-versioned BENCH_ring.json / BENCH_step.json (ring
-                rows cover the topology sweep incl. pipeline:4:flat):
+                rows cover the topology sweep incl. pipeline:4:flat, and
+                both suites carry autotuner `tuned` rows next to the
+                static strategies):
                   --out DIR (default .) --quick --no-timing --repeats N
                   --ring-sizes 4,8,32,96 --seed N
                   --baseline FILE   gate ns/op + determinism against a
@@ -179,6 +186,20 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         out.peak_kbps
     );
     println!("wall time: {wall:.1}s ({:.2} s/step)", wall / steps as f64);
+
+    // Autotuner decision trace (DESIGN.md §14): one line per step, the
+    // format the EXPERIMENTS.md §11 walkthroughs grep for.
+    if let Some(t) = trainer.tuner() {
+        println!(
+            "\nautotuner ({}): {} decisions, {} switches",
+            t.mode().name(),
+            t.trace().len(),
+            t.switches()
+        );
+        for row in t.trace().rows() {
+            println!("  {}", row.log_line());
+        }
+    }
 
     // Persist curves.
     std::fs::create_dir_all(&out_dir)?;

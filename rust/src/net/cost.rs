@@ -485,6 +485,59 @@ impl CostModel {
         self.masked_tern(topo, coords, k, nnz).1
     }
 
+    /// One accumulator over the sparse-allgather ("gather") wire
+    /// format's round sequence (DESIGN.md §14): spread the `k`
+    /// broadcaster masks, then spread every node's compacted f32
+    /// payload *whole* (`4·nnz` bytes — receivers decode the shared
+    /// mask, so no index stream travels) and sum locally. The
+    /// RedSync-style alternative to the masked schedule's reduce
+    /// rounds: no scatter-reduce, `N·(N−1)` blob crossings, wins at
+    /// tiny supports on latency-dominated links. Rounds fold in the
+    /// simulator's clock order (fresh-clock bit-exactness, like
+    /// [`CostModel::masked_tern_seconds`]); pipeline wrappers delegate
+    /// blob spreads to their inner topology.
+    fn masked_gather(&self, topo: TopoKind, coords: usize, k: usize, nnz: usize) -> (u64, f64) {
+        let base = match topo {
+            TopoKind::Pipeline { inner, .. } => inner.kind(),
+            t => t,
+        };
+        let mask_bytes = (coords.div_ceil(8)) as u64;
+        let blob = crate::sparse::values_only_bytes(nnz);
+        let (mut bytes, mut t) = (0u64, 0.0f64);
+        self.base_spread_rounds(base, mask_bytes, k, &mut |b, d| {
+            bytes += b;
+            t += d;
+        });
+        self.base_spread_rounds(base, blob, self.nodes, &mut |b, d| {
+            bytes += b;
+            t += d;
+        });
+        (bytes, t)
+    }
+
+    /// Virtual seconds of the sparse-allgather format under `topo` for
+    /// an `nnz`-coordinate shared support and `k` broadcaster masks.
+    pub fn masked_gather_seconds(
+        &self,
+        topo: TopoKind,
+        coords: usize,
+        k: usize,
+        nnz: usize,
+    ) -> f64 {
+        self.masked_gather(topo, coords, k, nnz).1
+    }
+
+    /// Total wire bytes of the sparse-allgather format under `topo`.
+    pub fn masked_gather_total_bytes(
+        &self,
+        topo: TopoKind,
+        coords: usize,
+        k: usize,
+        nnz: usize,
+    ) -> u64 {
+        self.masked_gather(topo, coords, k, nnz).0
+    }
+
     /// Total wire bytes of the `+tern` masked stage under `topo`.
     pub fn masked_tern_total_bytes(
         &self,
@@ -697,6 +750,41 @@ mod tests {
                 model.topo_spread_total_bytes(topo, mask_bytes, k)
                     + model.topo_spread_total_bytes(topo, blob, n),
                 "{topo:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn masked_gather_composes_two_spreads() {
+        // The gather format's byte total is exactly the mask spread plus
+        // the whole-values spread (4·nnz per node), on every base
+        // topology — mirroring `masked_tern_composes_two_spreads`.
+        let n = 6;
+        let model = CostModel::new(n, link());
+        let (coords, k, nnz) = (10_000usize, 2usize, 300usize);
+        let mask_bytes = (coords.div_ceil(8)) as u64;
+        let blob = crate::sparse::values_only_bytes(nnz);
+        for topo in [TopoKind::Flat, TopoKind::Hier { group: 3 }, TopoKind::Tree] {
+            assert_eq!(
+                model.masked_gather_total_bytes(topo, coords, k, nnz),
+                model.topo_spread_total_bytes(topo, mask_bytes, k)
+                    + model.topo_spread_total_bytes(topo, blob, n),
+                "{topo:?}"
+            );
+            assert_eq!(
+                model
+                    .masked_gather_seconds(
+                        TopoKind::Pipeline {
+                            chunks: 4,
+                            inner: crate::net::PipeInner::Tree
+                        },
+                        coords,
+                        k,
+                        nnz
+                    )
+                    .to_bits(),
+                model.masked_gather_seconds(TopoKind::Tree, coords, k, nnz).to_bits(),
+                "pipeline wrappers delegate gather spreads to the inner topology"
             );
         }
     }

@@ -23,12 +23,14 @@ pub mod cost;
 pub mod link;
 pub mod topo;
 pub mod trace;
+pub mod tuner;
 pub mod wire;
 
 pub use cost::CostModel;
 pub use link::LinkSpec;
 pub use topo::{PipeInner, TopoKind, Topology};
-pub use trace::Trace;
+pub use trace::{DecisionRow, DecisionTrace, Trace};
+pub use tuner::{Decision, Observation, Strategy, Tuner, TunerMode, WirePick};
 pub use wire::{TransportKind, WireError, WireRing};
 
 use std::sync::atomic::{AtomicU64, Ordering};

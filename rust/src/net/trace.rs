@@ -1,5 +1,9 @@
 //! Time-bucketed per-node transmit traces — the data behind the paper's
-//! Networks-I/O plots (Figs. 7/8, KB/s over wall time).
+//! Networks-I/O plots (Figs. 7/8, KB/s over wall time) — plus the
+//! autotuner's decision trace (DESIGN.md §14): one row per
+//! [`Tuner::decide`](super::tuner::Tuner::decide) call, carrying the
+//! observation, the pick, and every candidate's prediction, so a run's
+//! strategy trajectory can be audited (and replayed) offline.
 
 /// Bytes-per-bucket trace for every node.
 #[derive(Debug, Clone)]
@@ -110,6 +114,105 @@ impl Trace {
     }
 }
 
+/// One autotuner decision (DESIGN.md §14): what was observed, what was
+/// picked, and what every candidate would have cost. `considered`
+/// pairs candidate names with their predicted prep-inclusive
+/// wire-seconds in grid order, so cumulative static-strategy costs can
+/// be re-derived from the trace alone (the never-worse oracle test
+/// does exactly that).
+#[derive(Debug, Clone)]
+pub struct DecisionRow {
+    /// 0-based decision index (one per engine step).
+    pub step: usize,
+    /// Observed shared-support density (`nnz / coords`).
+    pub density: f64,
+    /// Observed shared-support size in coordinates.
+    pub support_nnz: usize,
+    /// Canonical name of the picked strategy, e.g. `masked/pipeline:4:flat`.
+    pub pick: String,
+    /// Predicted prep-inclusive wire-seconds of the pick.
+    pub predicted_s: f64,
+    /// True when hysteresis kept the incumbent.
+    pub held: bool,
+    /// `(strategy name, predicted seconds)` for every candidate.
+    pub considered: Vec<(String, f64)>,
+}
+
+impl DecisionRow {
+    /// One-line summary, the format `log-only` walkthroughs grep for
+    /// (EXPERIMENTS.md §11).
+    pub fn log_line(&self) -> String {
+        format!(
+            "step {:>4}  density {:.5}  nnz {:>8}  pick {:<28} predicted {:.6e}s{}",
+            self.step,
+            self.density,
+            self.support_nnz,
+            self.pick,
+            self.predicted_s,
+            if self.held { "  (held)" } else { "" }
+        )
+    }
+}
+
+/// Append-only log of autotuner decisions.
+#[derive(Debug, Clone, Default)]
+pub struct DecisionTrace {
+    rows: Vec<DecisionRow>,
+}
+
+impl DecisionTrace {
+    /// Empty trace.
+    pub fn new() -> Self {
+        DecisionTrace::default()
+    }
+
+    /// Append one decision.
+    pub fn push(&mut self, row: DecisionRow) {
+        self.rows.push(row);
+    }
+
+    /// All decisions in step order.
+    pub fn rows(&self) -> &[DecisionRow] {
+        &self.rows
+    }
+
+    /// Number of decisions recorded.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no decision has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// The most recent decision.
+    pub fn last(&self) -> Option<&DecisionRow> {
+        self.rows.last()
+    }
+
+    /// Number of strategy changes between consecutive decisions — the
+    /// quantity hysteresis bounds (0 on a constant observation stream).
+    pub fn switches(&self) -> usize {
+        self.rows
+            .windows(2)
+            .filter(|w| w[0].pick != w[1].pick)
+            .count()
+    }
+
+    /// Sum of the picked strategies' predicted seconds — the tuner's
+    /// cumulative cost, comparable against [`DecisionTrace::static_total`].
+    pub fn picked_total(&self) -> f64 {
+        self.rows.iter().map(|r| r.predicted_s).sum()
+    }
+
+    /// Cumulative predicted seconds had candidate `index` run every
+    /// step — the static-strategy baseline re-derived from the trace.
+    pub fn static_total(&self, index: usize) -> f64 {
+        self.rows.iter().map(|r| r.considered[index].1).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,5 +268,40 @@ mod tests {
         let mut t = Trace::new(1, 1.0);
         t.add(0.0, 1.0, 0, 0);
         assert_eq!(t.n_buckets(), 0);
+    }
+
+    fn decision(step: usize, pick: &str, picked: f64, other: f64) -> DecisionRow {
+        DecisionRow {
+            step,
+            density: 0.01,
+            support_nnz: 100,
+            pick: pick.to_string(),
+            predicted_s: picked,
+            held: false,
+            considered: vec![("a".into(), picked), ("b".into(), other)],
+        }
+    }
+
+    #[test]
+    fn decision_trace_counts_switches_and_totals() {
+        let mut t = DecisionTrace::new();
+        assert!(t.is_empty());
+        t.push(decision(0, "a", 1.0, 4.0));
+        t.push(decision(1, "a", 2.0, 5.0));
+        t.push(decision(2, "b", 0.5, 6.0));
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.switches(), 1);
+        assert_eq!(t.last().unwrap().step, 2);
+        assert!((t.picked_total() - 3.5).abs() < 1e-12);
+        assert!((t.static_total(0) - 3.5).abs() < 1e-12);
+        assert!((t.static_total(1) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decision_log_line_mentions_the_pick() {
+        let row = decision(7, "masked/pipeline:4:flat", 1e-3, 2e-3);
+        let line = row.log_line();
+        assert!(line.contains("masked/pipeline:4:flat"));
+        assert!(line.contains("step"));
     }
 }

@@ -1,0 +1,534 @@
+//! Online protocol autotuner (DESIGN.md §14).
+//!
+//! Every IWP step already measures the two quantities the closed-form
+//! [`CostModel`] needs — the shared-support size (`support_nnz`) and
+//! the payload length — and PR 2–6 pinned the model bit-exact against
+//! simulation for every topology × wire format. The tuner closes the
+//! loop: each step it prices the whole strategy grid (wire format ×
+//! topology × pipeline chunk count) against the *observed* support and
+//! switches the live strategy to the argmin predicted wire-seconds,
+//! with hysteresis to avoid thrashing and a decision trace
+//! ([`DecisionTrace`](super::trace::DecisionTrace)) recording every
+//! considered candidate for offline audit.
+//!
+//! The candidate objective is the **prep-inclusive makespan**: the
+//! fused selection pass (`pipeline::prep_seconds`) runs every step no
+//! matter which strategy wins — the tuner's own observation depends on
+//! it — so every candidate is priced as one prep pass plus its wire
+//! rounds. Pipelined masked candidates overlap the prep with earlier
+//! chunks' rounds ([`CostModel::pipelined_masked_seconds`]); the
+//! non-pipelined formats (dense / sparse-allgather / `+tern`) pay it
+//! up front. `masked` over `pipeline:1:<base>` *is* the serial
+//! prep-then-rounds reference, so the grid needs no separate
+//! un-pipelined masked rows.
+//!
+//! Predictions equal the engine's measured `wire_seconds` on a fresh
+//! clock (the cross-validation contract of DESIGN.md §10–§11); mid-run
+//! the clock delta can differ from the prediction in the last ulp
+//! because f64 addition does not reassociate across a moving origin.
+//! Every *decision* is a pure function of the observation, so picks
+//! are deterministic across `--parallelism` and transports.
+
+use super::topo::{pipeline, PipeInner, Topology};
+use super::trace::{DecisionRow, DecisionTrace};
+use super::{CostModel, LinkSpec, TopoKind};
+use crate::sparse::BitMask;
+
+/// How the tuner participates in a run (`--tuner`, `RINGIWP_TUNER`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TunerMode {
+    /// No tuner: the configured static strategy runs (the default).
+    #[default]
+    Off,
+    /// Decide *and* execute: each step runs the argmin strategy.
+    On,
+    /// Decide but do not act: the static strategy executes
+    /// (bit-identical to [`TunerMode::Off`]) while the decision trace
+    /// records what the tuner *would* have picked — the audit mode.
+    LogOnly,
+}
+
+impl TunerMode {
+    /// Parse `off | on | log-only`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.trim() {
+            "off" => Ok(TunerMode::Off),
+            "on" => Ok(TunerMode::On),
+            "log-only" => Ok(TunerMode::LogOnly),
+            other => anyhow::bail!(
+                "unknown tuner mode '{other}' (expected off | on | log-only)"
+            ),
+        }
+    }
+
+    /// Canonical name (round-trips through [`TunerMode::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TunerMode::Off => "off",
+            TunerMode::On => "on",
+            TunerMode::LogOnly => "log-only",
+        }
+    }
+
+    /// Read `RINGIWP_TUNER` (experiment harnesses); unset means
+    /// [`TunerMode::Off`], malformed values panic with the parse error.
+    pub fn from_env() -> Self {
+        match std::env::var("RINGIWP_TUNER") {
+            Ok(s) => {
+                TunerMode::parse(&s).unwrap_or_else(|e| panic!("RINGIWP_TUNER={s}: {e}"))
+            }
+            Err(_) => TunerMode::Off,
+        }
+    }
+}
+
+/// The wire format axis of the strategy grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WirePick {
+    /// Algorithm 1: spread the `k` broadcaster masks, then dense rounds
+    /// over the compacted shared support (always via the pipelined
+    /// wrapper; chunk count 1 is the serial reference).
+    Masked,
+    /// Full dense allreduce — wins when the support densifies.
+    Dense,
+    /// Sparse allgather (RedSync-style): spread the masks, then every
+    /// node's compacted f32 payload travels *whole* (`4·nnz` bytes) and
+    /// receivers sum locally — no reduce rounds, wins at tiny supports
+    /// on latency-dominated links.
+    Gather,
+    /// The `+tern` stage: masks, then whole ternary-quantized blobs
+    /// (ternary is not closed under addition, DESIGN.md §12).
+    Tern,
+}
+
+impl WirePick {
+    /// Canonical short name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WirePick::Masked => "masked",
+            WirePick::Dense => "dense",
+            WirePick::Gather => "gather",
+            WirePick::Tern => "tern",
+        }
+    }
+}
+
+/// One candidate in the tuner's grid: a wire format over a topology
+/// (masked candidates carry a `pipeline:<chunks>:<inner>` kind; the
+/// other formats a base kind).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Strategy {
+    /// Wire format.
+    pub wire: WirePick,
+    /// Topology the format runs over.
+    pub topo: TopoKind,
+}
+
+impl Strategy {
+    /// Canonical name, e.g. `masked/pipeline:4:flat` or `dense/tree`.
+    pub fn name(&self) -> String {
+        format!("{}/{}", self.wire.name(), self.topo.name())
+    }
+}
+
+/// What the compressor observed this step — everything a prediction
+/// needs. Pure data: building one has no network side effects, so
+/// observations (and therefore decisions) are transport-independent.
+#[derive(Debug)]
+pub struct Observation<'a> {
+    /// Payload length in f32 coordinates.
+    pub coords: usize,
+    /// Number of broadcaster masks spread (Algorithm 1's `k`).
+    pub k: usize,
+    /// The shared support this step (OR of the broadcaster masks).
+    pub shared: &'a BitMask,
+}
+
+/// The outcome of one [`Tuner::decide`] call.
+#[derive(Debug, Clone, Copy)]
+pub struct Decision {
+    /// Index into the candidate grid ([`Tuner::strategy`]).
+    pub index: usize,
+    /// Predicted prep-inclusive wire-seconds of the pick.
+    pub predicted_s: f64,
+    /// True when hysteresis kept the incumbent (including re-picking
+    /// it on a tie); false on the first step and on every switch.
+    pub held: bool,
+}
+
+/// The online strategy selector. Owns the closed-form model, the
+/// candidate grid, prebuilt [`Topology`] instances for every candidate
+/// (so a pick is executable without per-step construction), and the
+/// decision trace. Not part of the zero-alloc steady-state contract:
+/// pricing the grid allocates small per-step vectors.
+pub struct Tuner {
+    mode: TunerMode,
+    model: CostModel,
+    candidates: Vec<Strategy>,
+    topos: Vec<Box<dyn Topology>>,
+    /// Relative improvement a challenger must show to displace the
+    /// incumbent: switch only if `pred[argmin] < pred[incumbent] *
+    /// (1 - margin)`. At the default `0.0` the rule is *strict
+    /// improvement*, so the pick's prediction still equals the grid
+    /// minimum bit-for-bit (holding is only possible on exact ties).
+    margin: f64,
+    incumbent: Option<usize>,
+    step: usize,
+    switches: usize,
+    trace: DecisionTrace,
+}
+
+impl Tuner {
+    /// Tuner for an `n`-node ring over homogeneous `link`s, with the
+    /// default candidate grid and hysteresis margin 0.
+    pub fn new(mode: TunerMode, nodes: usize, link: LinkSpec) -> Self {
+        let candidates = Self::default_candidates(nodes);
+        let topos = candidates.iter().map(|s| s.topo.build(nodes)).collect();
+        Tuner {
+            mode,
+            model: CostModel::new(nodes, link),
+            candidates,
+            topos,
+            margin: 0.0,
+            incumbent: None,
+            step: 0,
+            switches: 0,
+            trace: DecisionTrace::new(),
+        }
+    }
+
+    /// Override the hysteresis margin (see the field doc). Margins
+    /// above 0 trade per-step optimality for fewer switches; the
+    /// never-worse guarantee is margin-0 only.
+    pub fn with_margin(mut self, margin: f64) -> Self {
+        assert!((0.0..1.0).contains(&margin), "margin in [0, 1)");
+        self.margin = margin;
+        self
+    }
+
+    /// The default grid: masked over `pipeline:<chunks>:<inner>` for
+    /// chunks ∈ {1,2,4,8} × inner ∈ {flat, hier:g, tree} (12 rows;
+    /// chunks=1 is the serial masked reference), plus dense / gather /
+    /// tern over each base topology (9 rows). The hier group size is
+    /// `min(4, nodes)` so the grid stays valid on tiny rings.
+    pub fn default_candidates(nodes: usize) -> Vec<Strategy> {
+        let group = 4.min(nodes);
+        let inners = [PipeInner::Flat, PipeInner::Hier { group }, PipeInner::Tree];
+        let mut out = Vec::new();
+        for inner in inners {
+            for chunks in [1usize, 2, 4, 8] {
+                out.push(Strategy {
+                    wire: WirePick::Masked,
+                    topo: TopoKind::Pipeline { chunks, inner },
+                });
+            }
+        }
+        for inner in inners {
+            let base = inner.kind();
+            for wire in [WirePick::Dense, WirePick::Gather, WirePick::Tern] {
+                out.push(Strategy { wire, topo: base });
+            }
+        }
+        out
+    }
+
+    /// The mode this tuner was built with.
+    pub fn mode(&self) -> TunerMode {
+        self.mode
+    }
+
+    /// The candidate grid.
+    pub fn candidates(&self) -> &[Strategy] {
+        &self.candidates
+    }
+
+    /// Candidate `index` of the grid.
+    pub fn strategy(&self, index: usize) -> &Strategy {
+        &self.candidates[index]
+    }
+
+    /// The prebuilt topology instance executing candidate `index`.
+    pub fn strategy_topo(&self, index: usize) -> &dyn Topology {
+        &*self.topos[index]
+    }
+
+    /// Number of strategy switches so far (the first pick is not a
+    /// switch).
+    pub fn switches(&self) -> usize {
+        self.switches
+    }
+
+    /// The decision trace accumulated so far.
+    pub fn trace(&self) -> &DecisionTrace {
+        &self.trace
+    }
+
+    /// Predicted prep-inclusive wire-seconds of candidate `index`
+    /// under `obs` — a pure function of `(index, obs)`, identical f64
+    /// operations every call, so recomputing it reproduces a logged
+    /// decision bit-for-bit.
+    pub fn predict(&self, index: usize, obs: &Observation) -> f64 {
+        let s = &self.candidates[index];
+        match s.wire {
+            WirePick::Masked => {
+                let TopoKind::Pipeline { chunks, inner } = s.topo else {
+                    unreachable!("masked candidates are pipelined by construction")
+                };
+                let sups = pipeline::chunk_supports(obs.shared, chunks);
+                self.model
+                    .pipelined_masked_seconds(inner.kind(), chunks, obs.coords, obs.k, &sups)
+            }
+            WirePick::Dense => {
+                pipeline::prep_seconds(obs.coords)
+                    + self.model.topo_dense_seconds(s.topo, obs.coords)
+            }
+            WirePick::Gather => {
+                pipeline::prep_seconds(obs.coords)
+                    + self
+                        .model
+                        .masked_gather_seconds(s.topo, obs.coords, obs.k, obs.shared.count())
+            }
+            WirePick::Tern => {
+                pipeline::prep_seconds(obs.coords)
+                    + self
+                        .model
+                        .masked_tern_seconds(s.topo, obs.coords, obs.k, obs.shared.count())
+            }
+        }
+    }
+
+    /// Price every candidate under `obs`, apply hysteresis against the
+    /// incumbent, record the full considered list in the trace, and
+    /// return the pick. Deterministic: ties break toward the lowest
+    /// grid index, and the incumbent survives exact ties.
+    pub fn decide(&mut self, obs: &Observation) -> Decision {
+        assert_eq!(
+            obs.shared.len(),
+            obs.coords,
+            "observation mask length must equal the payload length"
+        );
+        let preds: Vec<f64> = (0..self.candidates.len())
+            .map(|i| self.predict(i, obs))
+            .collect();
+        let mut argmin = 0usize;
+        for (i, &p) in preds.iter().enumerate() {
+            if p < preds[argmin] {
+                argmin = i;
+            }
+        }
+        let (pick, held) = match self.incumbent {
+            // Keep the incumbent unless the challenger strictly clears
+            // the margin. At margin 0 this branch is reachable only on
+            // an exact tie, so preds[pick] == preds[argmin] either way.
+            Some(inc) if !(preds[argmin] < preds[inc] * (1.0 - self.margin)) => (inc, true),
+            _ => (argmin, false),
+        };
+        if let Some(inc) = self.incumbent {
+            if pick != inc {
+                self.switches += 1;
+            }
+        }
+        self.incumbent = Some(pick);
+        let row = DecisionRow {
+            step: self.step,
+            density: obs.shared.density(),
+            support_nnz: obs.shared.count(),
+            pick: self.candidates[pick].name(),
+            predicted_s: preds[pick],
+            held,
+            considered: self
+                .candidates
+                .iter()
+                .zip(&preds)
+                .map(|(s, &p)| (s.name(), p))
+                .collect(),
+        };
+        log::debug!(
+            "tuner step {}: {} predicted {:.3e}s (held={held}, nnz={})",
+            row.step,
+            row.pick,
+            row.predicted_s,
+            row.support_nnz
+        );
+        self.trace.push(row);
+        self.step += 1;
+        Decision {
+            index: pick,
+            predicted_s: preds[pick],
+            held,
+        }
+    }
+}
+
+impl std::fmt::Debug for Tuner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tuner")
+            .field("mode", &self.mode)
+            .field("candidates", &self.candidates.len())
+            .field("margin", &self.margin)
+            .field("incumbent", &self.incumbent)
+            .field("step", &self.step)
+            .field("switches", &self.switches)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn obs_mask(len: usize, nnz: usize, seed: u64) -> BitMask {
+        let mut rng = Rng::new(seed);
+        let mut m = BitMask::zeros(len);
+        for _ in 0..nnz {
+            m.set(rng.below(len));
+        }
+        m
+    }
+
+    #[test]
+    fn mode_parse_roundtrips_and_rejects() {
+        for m in [TunerMode::Off, TunerMode::On, TunerMode::LogOnly] {
+            assert_eq!(TunerMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(TunerMode::parse("sometimes").is_err());
+        assert_eq!(TunerMode::default(), TunerMode::Off);
+    }
+
+    #[test]
+    fn default_grid_covers_the_strategy_space() {
+        let c = Tuner::default_candidates(8);
+        assert_eq!(c.len(), 21, "12 masked-pipelined + 9 base-format rows");
+        assert_eq!(
+            c.iter().filter(|s| s.wire == WirePick::Masked).count(),
+            12
+        );
+        for wire in [WirePick::Dense, WirePick::Gather, WirePick::Tern] {
+            assert_eq!(c.iter().filter(|s| s.wire == wire).count(), 3);
+        }
+        // Names are unique (the trace keys on them).
+        let mut names: Vec<String> = c.iter().map(|s| s.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), c.len());
+        // Tiny rings clamp the hier group.
+        assert!(Tuner::default_candidates(2)
+            .iter()
+            .all(|s| s.topo.validate().is_ok()));
+    }
+
+    #[test]
+    fn pick_is_the_argmin_at_margin_zero() {
+        let mut tuner = Tuner::new(TunerMode::On, 6, LinkSpec::gigabit_ethernet());
+        for (step, nnz) in [(0usize, 40usize), (1, 400), (2, 3800), (3, 12)] {
+            let mask = obs_mask(4000, nnz, 7 + step as u64);
+            let obs = Observation {
+                coords: 4000,
+                k: 2,
+                shared: &mask,
+            };
+            let d = tuner.decide(&obs);
+            let min = (0..tuner.candidates().len())
+                .map(|i| tuner.predict(i, &obs))
+                .fold(f64::INFINITY, f64::min);
+            assert_eq!(
+                d.predicted_s.to_bits(),
+                min.to_bits(),
+                "step {step}: pick prediction must equal the grid minimum"
+            );
+        }
+    }
+
+    #[test]
+    fn constant_stream_never_switches() {
+        let mut tuner = Tuner::new(TunerMode::On, 5, LinkSpec::gigabit_ethernet());
+        let mask = obs_mask(9000, 150, 3);
+        for step in 0..12 {
+            let d = tuner.decide(&Observation {
+                coords: 9000,
+                k: 3,
+                shared: &mask,
+            });
+            assert_eq!(d.held, step > 0, "first pick is fresh, rest are held");
+        }
+        assert_eq!(tuner.switches(), 0);
+        assert_eq!(tuner.trace().switches(), 0);
+        assert_eq!(tuner.trace().len(), 12);
+    }
+
+    #[test]
+    fn margin_damps_switching_but_keeps_first_pick() {
+        // A wide margin holds the incumbent even when a challenger is
+        // (slightly) better; the first pick is still the argmin.
+        let mut free = Tuner::new(TunerMode::On, 6, LinkSpec::gigabit_ethernet());
+        let mut held = Tuner::new(TunerMode::On, 6, LinkSpec::gigabit_ethernet())
+            .with_margin(0.9);
+        for nnz in [20usize, 30, 2500, 25, 2600] {
+            let mask = obs_mask(5000, nnz, nnz as u64);
+            let obs = Observation {
+                coords: 5000,
+                k: 2,
+                shared: &mask,
+            };
+            free.decide(&obs);
+            held.decide(&obs);
+        }
+        assert!(held.switches() <= free.switches());
+        assert_eq!(
+            held.trace().rows()[0].pick,
+            free.trace().rows()[0].pick,
+            "margin only affects steps after the first"
+        );
+    }
+
+    #[test]
+    fn crossovers_match_the_design_table() {
+        // DESIGN.md §14 anchors, pinned through the tuner's own
+        // predict(): (a) at full density the masked schedule is exactly
+        // dense plus a mask spread, so dense/flat beats the serial
+        // masked reference; (b) at a tiny support both mask-based
+        // formats beat dense; (c) gather degrades past dense as the
+        // support approaches the payload (4·nnz blobs spread whole).
+        let tuner = Tuner::new(TunerMode::On, 8, LinkSpec::gigabit_ethernet());
+        let coords = 40_000;
+        let idx = |wire: WirePick, topo: TopoKind| {
+            tuner
+                .candidates()
+                .iter()
+                .position(|s| s.wire == wire && s.topo == topo)
+                .unwrap()
+        };
+        let dense_flat = idx(WirePick::Dense, TopoKind::Flat);
+        let masked_serial = idx(
+            WirePick::Masked,
+            TopoKind::Pipeline {
+                chunks: 1,
+                inner: PipeInner::Flat,
+            },
+        );
+        let gather_flat = idx(WirePick::Gather, TopoKind::Flat);
+        let mut full = BitMask::zeros(coords);
+        for i in 0..coords {
+            full.set(i);
+        }
+        let mut tiny = BitMask::zeros(coords);
+        for i in 0..40 {
+            tiny.set(i);
+        }
+        let obs_full = Observation {
+            coords,
+            k: 3,
+            shared: &full,
+        };
+        let obs_tiny = Observation {
+            coords,
+            k: 3,
+            shared: &tiny,
+        };
+        assert!(tuner.predict(dense_flat, &obs_full) < tuner.predict(masked_serial, &obs_full));
+        assert!(tuner.predict(gather_flat, &obs_tiny) < tuner.predict(dense_flat, &obs_tiny));
+        assert!(tuner.predict(gather_flat, &obs_full) > tuner.predict(dense_flat, &obs_full));
+        assert!(tuner.predict(masked_serial, &obs_tiny) < tuner.predict(dense_flat, &obs_tiny));
+    }
+}

@@ -1,0 +1,296 @@
+//! Autotuner oracle suite (DESIGN.md §14).
+//!
+//! The `CostModel` closed forms are the specification; `net::tuner` is
+//! the implementation under test. Three contracts:
+//!
+//! * **Argmin bit-exactness** — at the default margin (0), every
+//!   decision's predicted cost equals the minimum over the candidate
+//!   grid bit for bit, recomputed independently here from the same
+//!   observation.
+//! * **Never-worse** — over AlexNet/ResNet50-shaped density
+//!   trajectories, the tuner's cumulative predicted wire-seconds is
+//!   ≤ every static strategy's cumulative prediction (both re-derived
+//!   from the decision trace's `considered` columns, summed in the
+//!   same fold order, so f64 rounding cannot flip the inequality).
+//! * **Determinism** — decisions are pure data: identical across
+//!   `--parallelism` widths and across the sim/uds transports (masks
+//!   travel and decode *before* the tuner observes them).
+//!
+//! The socket-touching test runs under a hard watchdog so a deadlocked
+//! ring fails in bounded time instead of hanging the suite.
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+use ringiwp::compress::MethodSpec;
+use ringiwp::exp::simrun::{SimCfg, SimEngine, WireEngine};
+use ringiwp::model::{LayerKind, ParamLayout};
+use ringiwp::net::{LinkSpec, Observation, TransportKind, Tuner, TunerMode};
+use ringiwp::sparse::BitMask;
+use ringiwp::util::rng::Rng;
+
+const WATCHDOG: Duration = Duration::from_secs(180);
+
+fn with_watchdog<F>(label: &str, f: F)
+where
+    F: FnOnce() + Send + 'static,
+{
+    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    let worker = std::thread::Builder::new()
+        .name(format!("watchdog-{label}"))
+        .spawn(move || {
+            f();
+            let _ = tx.send(());
+        })
+        .expect("spawn watchdog worker");
+    match rx.recv_timeout(WATCHDOG) {
+        Ok(()) | Err(RecvTimeoutError::Disconnected) => {
+            if let Err(panic) = worker.join() {
+                std::panic::resume_unwind(panic);
+            }
+        }
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("{label}: still running after {WATCHDOG:?} — ring deadlock");
+        }
+    }
+}
+
+/// AlexNet-shaped micro inventory: conv stack into heavy fc layers —
+/// the fc-dominated density trajectory of the real 61M inventory.
+fn alexnet_micro() -> ParamLayout {
+    ParamLayout::new(
+        "alexnet_micro",
+        vec![
+            ("conv1".into(), vec![16, 3, 3, 3], LayerKind::Conv),
+            ("conv2".into(), vec![32, 16, 3, 3], LayerKind::Conv),
+            ("fc1".into(), vec![256, 64], LayerKind::Fc),
+            ("fc2".into(), vec![64, 10], LayerKind::Fc),
+            ("bias".into(), vec![10], LayerKind::Bias),
+        ],
+    )
+}
+
+/// ResNet50-shaped micro inventory: conv/batchnorm alternation.
+fn resnet50_micro() -> ParamLayout {
+    ParamLayout::new(
+        "resnet50_micro",
+        vec![
+            ("conv1".into(), vec![16, 3, 7, 7], LayerKind::Conv),
+            ("bn1".into(), vec![32], LayerKind::BatchNorm),
+            ("block1".into(), vec![32, 16, 3, 3], LayerKind::Conv),
+            ("bn2".into(), vec![64], LayerKind::BatchNorm),
+            ("block2".into(), vec![64, 32, 3, 3], LayerKind::Conv),
+            ("fc".into(), vec![128, 10], LayerKind::Fc),
+        ],
+    )
+}
+
+fn cfg(nodes: usize, tuner: TunerMode) -> SimCfg {
+    SimCfg {
+        nodes,
+        method: MethodSpec::parse("iwp:fixed").expect("registry spec"),
+        link: LinkSpec::gigabit_ethernet(),
+        transport: TransportKind::Sim,
+        wire_dir: None,
+        seed: 42,
+        tuner,
+        ..Default::default()
+    }
+}
+
+const STEPS: usize = 6;
+
+/// Argmin bit-exactness + never-worse, over both model trajectories.
+/// Runs in log-only mode: the static path executes (so the density
+/// trajectory is the canonical one) while the trace records what the
+/// tuner priced and picked each step.
+#[test]
+fn picks_are_the_argmin_and_never_worse_on_both_trajectories() {
+    for layout in [alexnet_micro(), resnet50_micro()] {
+        let model = layout.model.clone();
+        let mut e = SimEngine::new(layout, cfg(8, TunerMode::LogOnly));
+        for s in 0..STEPS {
+            e.step(s);
+        }
+        let t = e.tuner().expect("log-only builds a tuner");
+        let trace = t.trace();
+        assert_eq!(trace.len(), STEPS, "{model}: one decision per step");
+        for row in trace.rows() {
+            // The pick's predicted cost IS the grid minimum, bit for bit
+            // (margin 0 holds the incumbent only on exact ties).
+            let min = row
+                .considered
+                .iter()
+                .map(|(_, s)| *s)
+                .fold(f64::INFINITY, f64::min);
+            assert_eq!(
+                row.predicted_s.to_bits(),
+                min.to_bits(),
+                "{model} step {}: pick `{}` predicted {} but grid min is {}",
+                row.step,
+                row.pick,
+                row.predicted_s,
+                min
+            );
+            assert!(row.support_nnz > 0, "{model}: IWP masks are never empty");
+        }
+        // Cumulative never-worse against every static strategy.
+        let picked = trace.picked_total();
+        for (i, s) in t.candidates().iter().enumerate() {
+            let static_total = trace.static_total(i);
+            assert!(
+                picked <= static_total,
+                "{model}: tuner total {picked} exceeds static `{}` total {static_total}",
+                s.name()
+            );
+        }
+    }
+}
+
+/// On-mode decisions (which feed back into execution and the observed
+/// trajectory) are still the per-step argmin of their own trace rows.
+#[test]
+fn on_mode_executes_its_own_argmin() {
+    let mut e = SimEngine::new(alexnet_micro(), cfg(8, TunerMode::On));
+    for s in 0..STEPS {
+        let r = e.step(s);
+        assert!(r.wire_bytes_per_node > 0, "step {s}");
+    }
+    let t = e.tuner().expect("tuner on");
+    assert_eq!(t.trace().len(), STEPS);
+    for row in t.trace().rows() {
+        let min = row
+            .considered
+            .iter()
+            .map(|(_, s)| *s)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(row.predicted_s.to_bits(), min.to_bits(), "step {}", row.step);
+    }
+}
+
+/// Hysteresis contract: a margin holds the incumbent against small
+/// oscillations — an observation stream that flips between two nearby
+/// supports must not flip the strategy back and forth.
+#[test]
+fn hysteresis_margin_prevents_flip_flop() {
+    let coords = 40_000;
+    let mut rng = Rng::new(7);
+    let mk = |nnz: usize, rng: &mut Rng| {
+        let mut m = BitMask::zeros(coords);
+        while m.count() < nnz {
+            m.set(rng.below(coords));
+        }
+        m
+    };
+    let a = mk(400, &mut rng);
+    let b = mk(440, &mut rng);
+    let mut damped =
+        Tuner::new(TunerMode::On, 8, LinkSpec::gigabit_ethernet()).with_margin(0.5);
+    for step in 0..10 {
+        let m = if step % 2 == 0 { &a } else { &b };
+        damped.decide(&Observation {
+            coords,
+            k: 1,
+            shared: m,
+        });
+    }
+    assert_eq!(
+        damped.switches(),
+        0,
+        "a 50% margin must hold the incumbent across ±10% support wobble"
+    );
+    assert_eq!(damped.trace().switches(), 0);
+}
+
+/// Decisions and reports are bit-identical at any executor width — the
+/// §4 contract extends through the tuner (decisions are computed from
+/// pure data on the coordinating thread).
+#[test]
+fn tuned_run_is_bit_identical_across_parallelism() {
+    let run = |parallelism: usize| {
+        let mut c = cfg(8, TunerMode::On);
+        c.parallelism = parallelism;
+        let mut e = SimEngine::new(resnet50_micro(), c);
+        let reports: Vec<_> = (0..STEPS).map(|s| e.step(s)).collect();
+        let picks: Vec<String> = e
+            .tuner()
+            .unwrap()
+            .trace()
+            .rows()
+            .iter()
+            .map(|r| r.pick.clone())
+            .collect();
+        (reports, picks)
+    };
+    let (seq, seq_picks) = run(1);
+    let (par, par_picks) = run(4);
+    assert_eq!(seq_picks, par_picks, "picks must not depend on executor width");
+    for (s, (a, b)) in seq.iter().zip(&par).enumerate() {
+        assert_eq!(a.wire_bytes_per_node, b.wire_bytes_per_node, "step {s}");
+        assert_eq!(a.support_nnz, b.support_nnz, "step {s}");
+        assert_eq!(a.density.to_bits(), b.density.to_bits(), "step {s}");
+        assert_eq!(a.wire_seconds.to_bits(), b.wire_seconds.to_bits(), "step {s}");
+        assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "step {s}");
+    }
+}
+
+/// Transport invariance: masks spread and decode *before* the tuner
+/// observes them, so a UDS ring must produce the same decisions and
+/// bit-identical reports as the pure simulation — even while the tuner
+/// switches wire formats underneath.
+#[test]
+fn tuned_run_over_uds_matches_sim_bit_for_bit() {
+    with_watchdog("tuned-uds", || {
+        let layout = alexnet_micro();
+        let mut c = cfg(4, TunerMode::On);
+        c.transport = TransportKind::Uds;
+        let mut sim = SimEngine::new(layout.clone(), c.clone());
+        let mut wire = WireEngine::new(layout, c).expect("uds ring");
+        for s in 0..STEPS {
+            let a = sim.step(s);
+            let b = wire.step(s).report;
+            assert_eq!(a.wire_bytes_per_node, b.wire_bytes_per_node, "step {s}");
+            assert_eq!(a.support_nnz, b.support_nnz, "step {s}");
+            assert_eq!(a.density.to_bits(), b.density.to_bits(), "step {s}");
+            assert_eq!(a.wire_seconds.to_bits(), b.wire_seconds.to_bits(), "step {s}");
+        }
+        let sp: Vec<String> = sim
+            .tuner()
+            .unwrap()
+            .trace()
+            .rows()
+            .iter()
+            .map(|r| r.pick.clone())
+            .collect();
+        let wp: Vec<String> = wire
+            .sim()
+            .tuner()
+            .unwrap()
+            .trace()
+            .rows()
+            .iter()
+            .map(|r| r.pick.clone())
+            .collect();
+        assert_eq!(sp, wp, "picks must not depend on the transport");
+        wire.shutdown().expect("clean shutdown");
+    });
+}
+
+/// Log-only is a pure observer: every report is bit-identical to a
+/// tuner-off run on the same seeds.
+#[test]
+fn log_only_is_bit_identical_to_off() {
+    let layout = resnet50_micro();
+    let mut off = SimEngine::new(layout.clone(), cfg(8, TunerMode::Off));
+    let mut log = SimEngine::new(layout, cfg(8, TunerMode::LogOnly));
+    for s in 0..STEPS {
+        let a = off.step(s);
+        let b = log.step(s);
+        assert_eq!(a.wire_bytes_per_node, b.wire_bytes_per_node, "step {s}");
+        assert_eq!(a.support_nnz, b.support_nnz, "step {s}");
+        assert_eq!(a.density.to_bits(), b.density.to_bits(), "step {s}");
+        assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "step {s}");
+    }
+    assert!(off.tuner().is_none());
+    assert_eq!(log.tuner().unwrap().trace().len(), STEPS);
+}
