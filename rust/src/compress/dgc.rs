@@ -63,6 +63,19 @@ impl Dgc {
     pub fn residual_norm(&self) -> f64 {
         self.store.residual_norm()
     }
+
+    /// The underlying residual store (elastic-membership migration:
+    /// a departing node's pending DGC momentum is handed off or
+    /// rescaled through here — DESIGN.md §15).
+    pub fn store(&self) -> &ResidualStore {
+        &self.store
+    }
+
+    /// Mutable access to the underlying residual store (see
+    /// [`Dgc::store`]).
+    pub fn store_mut(&mut self) -> &mut ResidualStore {
+        &mut self.store
+    }
 }
 
 #[cfg(test)]

@@ -52,7 +52,7 @@ use super::threshold::{ThresholdCfg, ThresholdPolicy};
 use super::warmup::Warmup;
 use crate::model::ParamLayout;
 use crate::net::tuner::{Observation, Tuner, TunerMode, WirePick};
-use crate::net::{RingNet, Topology, WireRing};
+use crate::net::{RecoveryMode, RingNet, Topology, WireRing};
 use crate::optim::MomentumSgd;
 use crate::ring::{Arena, Executor};
 use crate::runtime::ImportanceKernel;
@@ -182,6 +182,92 @@ pub trait Compressor: Send {
     /// Trailing per-layer importance stats (Eq. 4 controller input,
     /// Fig. 4 data); empty when the pipeline does not score.
     fn prev_stats(&self) -> &[LayerStats];
+
+    /// Ring position `node` crashed: migrate its per-node state ahead
+    /// of the survivor re-ring (elastic membership, DESIGN.md §15).
+    /// `nodes_after` is the post-crash ring size and `states_after` the
+    /// post-crash materialized state count (engines below their
+    /// exchangeable-node cap keep the two equal).
+    /// [`RecoveryMode::Handoff`] merges the departing node's pending
+    /// store into its surviving ring successor;
+    /// [`RecoveryMode::DropRescale`] drops it and rescales every
+    /// survivor by `(nodes_after + 1) / nodes_after`. Stateless
+    /// pipelines (dense, terngrad) carry no membership state — the
+    /// default is a no-op.
+    fn remove_node(
+        &mut self,
+        _node: usize,
+        _mode: RecoveryMode,
+        _nodes_after: usize,
+        _states_after: usize,
+    ) {
+    }
+
+    /// One fresh node joined at the end of the ring before `epoch`
+    /// runs (DESIGN.md §15): its state starts zeroed (a join never
+    /// resurrects stale residuals), and pipelines with a warm-up
+    /// schedule re-enter it from `epoch` so the newcomer's empty store
+    /// does not destabilize selection. Default: no-op.
+    fn add_node(&mut self, _epoch: usize, _nodes_after: usize, _states_after: usize) {}
+
+    /// Clone out node `node`'s residual store (state migration seam —
+    /// the recovery-algebra suites rebuild a fresh smaller ring from
+    /// exported survivor state). `None` for stateless pipelines.
+    fn export_node(&self, _node: usize) -> Option<ResidualStore> {
+        None
+    }
+
+    /// Install a residual store into node `node`'s state slot (the
+    /// inverse of [`Compressor::export_node`]). No-op for stateless
+    /// pipelines.
+    fn install_node(&mut self, _node: usize, _store: ResidualStore) {}
+}
+
+/// Survivor re-ring over a vector of per-node residual stores
+/// (DESIGN.md §15): remove `node`, then either hand its pending state
+/// to its ring successor (the post-removal slot at `node % len`) or
+/// rescale every survivor by `(nodes_after + 1) / nodes_after`. A
+/// `node` beyond the materialized states (the accounting engine's
+/// exchangeable cap) has no store to hand off — handoff is then a
+/// no-op, while rescale still applies: the materialized stores stand
+/// in for the full membership, so the expectation argument is
+/// unchanged.
+fn elastic_remove(
+    stores: &mut Vec<ResidualStore>,
+    node: usize,
+    mode: RecoveryMode,
+    nodes_after: usize,
+) {
+    if node < stores.len() {
+        let departing = stores.remove(node);
+        if mode == RecoveryMode::Handoff && !stores.is_empty() {
+            let len = stores.len();
+            stores[node % len].merge_from(&departing);
+        }
+    }
+    if mode == RecoveryMode::DropRescale {
+        let factor = (nodes_after + 1) as f32 / nodes_after as f32;
+        for s in stores.iter_mut() {
+            s.rescale(factor);
+        }
+    }
+}
+
+/// Grow (fresh zero state) or shrink a store vector to the
+/// post-event materialized count.
+fn resize_stores(stores: &mut Vec<ResidualStore>, states: usize, total: usize, momentum: f32) {
+    while stores.len() < states {
+        stores.push(ResidualStore::new(total, momentum));
+    }
+    stores.truncate(states);
+}
+
+/// Keep the fused fan-out scratch aligned with the store vector.
+fn resize_scratch(scratch: &mut Vec<NodeScratch>, states: usize, total: usize, layers: usize) {
+    while scratch.len() < states {
+        scratch.extend(node_scratch(1, total, layers));
+    }
+    scratch.truncate(states);
 }
 
 /// Build-time knobs a pipeline draws from the engine's config (the
@@ -448,6 +534,9 @@ struct SharedMaskCompressor {
     spec: MethodSpec,
     policy: ThresholdPolicy,
     warmup: Warmup,
+    /// Epoch the warm-up schedule (re)started at — 0 until a mid-epoch
+    /// join re-enters warm-up (DESIGN.md §15).
+    epoch_base: usize,
     random_select: bool,
     mask_nodes: usize,
     stores: Vec<ResidualStore>,
@@ -490,6 +579,7 @@ impl SharedMaskCompressor {
         SharedMaskCompressor {
             policy,
             warmup,
+            epoch_base: 0,
             random_select: spec.random_select.unwrap_or(cfg.random_select),
             mask_nodes: cfg.mask_nodes,
             stores: (0..cfg.state_nodes)
@@ -573,11 +663,15 @@ impl Compressor for SharedMaskCompressor {
         let t0 = ctx.net.clock();
         let total = ctx.layout.total_params();
         let sim_nodes = self.stores.len();
-        let wmult = self.warmup.multiplier(ctx.epoch);
+        // Warm-up (and every epoch-driven schedule) counts from the
+        // last warm-up (re)entry — identical to the raw epoch until a
+        // join rebases it (DESIGN.md §15).
+        let eff_epoch = ctx.epoch.saturating_sub(self.epoch_base);
+        let wmult = self.warmup.multiplier(eff_epoch);
         self.policy.layer_thresholds_into(
             ctx.layout,
             &self.prev_stats,
-            ctx.epoch,
+            eff_epoch,
             wmult,
             &mut self.thrs_buf,
         );
@@ -842,12 +936,14 @@ impl Compressor for SharedMaskCompressor {
         }
 
         // Per-layer thresholds from trailing stats, refilled into the
-        // reusable table.
-        let wmult = self.warmup.multiplier(ctx.epoch);
+        // reusable table. Epoch counts from the last warm-up (re)entry
+        // (DESIGN.md §15).
+        let eff_epoch = ctx.epoch.saturating_sub(self.epoch_base);
+        let wmult = self.warmup.multiplier(eff_epoch);
         self.policy.layer_thresholds_into(
             ctx.layout,
             &self.prev_stats,
-            ctx.epoch,
+            eff_epoch,
             wmult,
             &mut self.thrs_buf,
         );
@@ -1152,6 +1248,44 @@ impl Compressor for SharedMaskCompressor {
     fn prev_stats(&self) -> &[LayerStats] {
         &self.prev_stats
     }
+
+    fn remove_node(
+        &mut self,
+        node: usize,
+        mode: RecoveryMode,
+        nodes_after: usize,
+        states_after: usize,
+    ) {
+        let total = self.stores[0].len();
+        let momentum = self.stores[0].momentum();
+        let layers = self.prev_stats.len();
+        elastic_remove(&mut self.stores, node, mode, nodes_after);
+        resize_stores(&mut self.stores, states_after, total, momentum);
+        resize_scratch(&mut self.scratch, states_after, total, layers);
+    }
+
+    fn add_node(&mut self, epoch: usize, _nodes_after: usize, states_after: usize) {
+        let total = self.stores[0].len();
+        let momentum = self.stores[0].momentum();
+        let layers = self.prev_stats.len();
+        resize_stores(&mut self.stores, states_after, total, momentum);
+        resize_scratch(&mut self.scratch, states_after, total, layers);
+        // Warm-up re-entry: the threshold ramp restarts at the join
+        // epoch so the newcomer's empty store does not destabilize
+        // selection (its state is fresh — no stale residuals return).
+        if self.warmup.epochs > 0 {
+            self.epoch_base = epoch;
+        }
+    }
+
+    fn export_node(&self, node: usize) -> Option<ResidualStore> {
+        self.stores.get(node).cloned()
+    }
+
+    fn install_node(&mut self, node: usize, store: ResidualStore) {
+        assert_eq!(store.len(), self.stores[node].len());
+        self.stores[node] = store;
+    }
 }
 
 // ---- per-node supports (DGC family) ------------------------------------
@@ -1163,6 +1297,9 @@ struct PerNodeCompressor {
     select: DgcSelect,
     base_density: f64,
     warmup_epochs: usize,
+    /// Epoch the warm-up schedule (re)started at — 0 until a mid-epoch
+    /// join re-enters warm-up (DESIGN.md §15).
+    epoch_base: usize,
     /// Top-k state (empty for the thresholded variant).
     dgcs: Vec<Dgc>,
     /// Thresholded-variant state (empty for top-k).
@@ -1202,6 +1339,7 @@ impl PerNodeCompressor {
             select,
             base_density: cfg.dgc_density,
             warmup_epochs,
+            epoch_base: 0,
             dgcs,
             stores,
             policy: ThresholdPolicy::Layerwise(ThresholdCfg {
@@ -1229,6 +1367,8 @@ impl PerNodeCompressor {
         grads: &[Vec<f32>],
         exec: &Executor,
     ) {
+        // Epoch counts from the last warm-up (re)entry (DESIGN.md §15).
+        let epoch = epoch.saturating_sub(self.epoch_base);
         let wmult = self.warmup.multiplier(epoch);
         self.policy
             .layer_thresholds_into(layout, &self.prev_stats, epoch, wmult, &mut self.thrs_buf);
@@ -1274,8 +1414,11 @@ impl Compressor for PerNodeCompressor {
         let total = ctx.layout.total_params();
         match self.select {
             DgcSelect::TopK => {
-                let density =
-                    Dgc::density_at_epoch(self.base_density, ctx.epoch, self.warmup_epochs);
+                let density = Dgc::density_at_epoch(
+                    self.base_density,
+                    ctx.epoch.saturating_sub(self.epoch_base),
+                    self.warmup_epochs,
+                );
                 let k = ((total as f64) * density).ceil() as usize;
                 let sim_nodes = self.dgcs.len();
                 // Real top-k supports for materialized nodes; the
@@ -1380,8 +1523,11 @@ impl Compressor for PerNodeCompressor {
         let total = ctx.layout.total_params();
         let sparses: Vec<SparseVec> = match self.select {
             DgcSelect::TopK => {
-                let density =
-                    Dgc::density_at_epoch(self.base_density, ctx.epoch, self.warmup_epochs);
+                let density = Dgc::density_at_epoch(
+                    self.base_density,
+                    ctx.epoch.saturating_sub(self.epoch_base),
+                    self.warmup_epochs,
+                );
                 let grads: &[Vec<f32>] = ctx.grads;
                 ctx.exec.map_mut(&mut self.dgcs, |node, dgc| {
                     dgc.density = density;
@@ -1429,11 +1575,102 @@ impl Compressor for PerNodeCompressor {
     }
 
     fn pending(&self, node: usize) -> Option<&[f32]> {
-        self.stores.get(node).map(|s| s.pending())
+        match self.select {
+            DgcSelect::TopK => self.dgcs.get(node).map(|d| d.store().pending()),
+            DgcSelect::Layerwise => self.stores.get(node).map(|s| s.pending()),
+        }
     }
 
     fn prev_stats(&self) -> &[LayerStats] {
         &self.prev_stats
+    }
+
+    fn remove_node(
+        &mut self,
+        node: usize,
+        mode: RecoveryMode,
+        nodes_after: usize,
+        states_after: usize,
+    ) {
+        match self.select {
+            DgcSelect::TopK => {
+                let total = self.dgcs[0].store().len();
+                let momentum = self.dgcs[0].store().momentum();
+                if node < self.dgcs.len() {
+                    let departing = self.dgcs.remove(node);
+                    if mode == RecoveryMode::Handoff && !self.dgcs.is_empty() {
+                        let len = self.dgcs.len();
+                        self.dgcs[node % len]
+                            .store_mut()
+                            .merge_from(departing.store());
+                    }
+                }
+                if mode == RecoveryMode::DropRescale {
+                    let factor = (nodes_after + 1) as f32 / nodes_after as f32;
+                    for d in self.dgcs.iter_mut() {
+                        d.store_mut().rescale(factor);
+                    }
+                }
+                while self.dgcs.len() < states_after {
+                    self.dgcs.push(Dgc::new(total, self.base_density, momentum));
+                }
+                self.dgcs.truncate(states_after);
+            }
+            DgcSelect::Layerwise => {
+                let total = self.stores[0].len();
+                let momentum = self.stores[0].momentum();
+                let layers = self.prev_stats.len();
+                elastic_remove(&mut self.stores, node, mode, nodes_after);
+                resize_stores(&mut self.stores, states_after, total, momentum);
+                resize_scratch(&mut self.scratch, states_after, total, layers);
+            }
+        }
+    }
+
+    fn add_node(&mut self, epoch: usize, _nodes_after: usize, states_after: usize) {
+        match self.select {
+            DgcSelect::TopK => {
+                let total = self.dgcs[0].store().len();
+                let momentum = self.dgcs[0].store().momentum();
+                while self.dgcs.len() < states_after {
+                    self.dgcs.push(Dgc::new(total, self.base_density, momentum));
+                }
+                self.dgcs.truncate(states_after);
+            }
+            DgcSelect::Layerwise => {
+                let total = self.stores[0].len();
+                let momentum = self.stores[0].momentum();
+                let layers = self.prev_stats.len();
+                resize_stores(&mut self.stores, states_after, total, momentum);
+                resize_scratch(&mut self.scratch, states_after, total, layers);
+            }
+        }
+        // Warm-up re-entry at the join epoch (DESIGN.md §15): the DGC
+        // density ramp and the threshold ramp both restart, and the
+        // newcomer's store starts zeroed — no stale residuals return.
+        if self.warmup_epochs > 0 {
+            self.epoch_base = epoch;
+        }
+    }
+
+    fn export_node(&self, node: usize) -> Option<ResidualStore> {
+        match self.select {
+            DgcSelect::TopK => self.dgcs.get(node).map(|d| d.store().clone()),
+            DgcSelect::Layerwise => self.stores.get(node).cloned(),
+        }
+    }
+
+    fn install_node(&mut self, node: usize, store: ResidualStore) {
+        match self.select {
+            DgcSelect::TopK => {
+                assert_eq!(store.len(), self.dgcs[node].store().len());
+                *self.dgcs[node].store_mut() = store;
+            }
+            DgcSelect::Layerwise => {
+                assert_eq!(store.len(), self.stores[node].len());
+                self.stores[node] = store;
+            }
+        }
     }
 }
 
@@ -1484,6 +1721,148 @@ mod tests {
         assert_eq!(build(Method::TernGrad.spec(), &cfg(), &l).grads_needed(4), 1);
         assert_eq!(build(Method::IwpFixed.spec(), &cfg(), &l).grads_needed(4), 4);
         assert_eq!(build(Method::Dgc.spec(), &cfg(), &l).grads_needed(4), 4);
+    }
+
+    /// A store with known integral pending values (`seed + i`) —
+    /// integral f32s add exactly, so the conservation asserts below
+    /// hold bit-for-bit, not just to tolerance.
+    fn filled_store(total: usize, seed: f32) -> ResidualStore {
+        let mut s = ResidualStore::new(total, 0.0);
+        let g: Vec<f32> = (0..total).map(|i| seed + i as f32).collect();
+        s.accumulate(&g);
+        s
+    }
+
+    #[test]
+    fn remove_node_handoff_merges_into_ring_successor() {
+        let l = layout();
+        let total = l.total_params();
+        let mut c = build(Method::IwpFixed.spec(), &cfg(), &l);
+        for node in 0..4 {
+            c.install_node(node, filled_store(total, 1.0 + node as f32));
+        }
+        let before: f64 = (0..4)
+            .map(|n| c.export_node(n).unwrap().residual_sum())
+            .sum();
+        let expect: Vec<f32> = {
+            let a = c.export_node(1).unwrap();
+            let b = c.export_node(2).unwrap();
+            a.pending().iter().zip(b.pending()).map(|(x, y)| x + y).collect()
+        };
+        c.remove_node(1, RecoveryMode::Handoff, 3, 3);
+        // Node 1's mass landed on its ring successor — post-removal
+        // slot 1 % 3 = 1, the store that was node 2.
+        assert_eq!(c.pending(1).unwrap(), &expect[..]);
+        let after: f64 = (0..3)
+            .map(|n| c.export_node(n).unwrap().residual_sum())
+            .sum();
+        assert_eq!(before, after, "handoff must conserve total pending mass");
+        assert!(c.export_node(3).is_none(), "state shrank to 3 slots");
+    }
+
+    #[test]
+    fn remove_node_rescale_scales_survivors_exactly() {
+        let l = layout();
+        let total = l.total_params();
+        let mut c = build(Method::IwpFixed.spec(), &cfg(), &l);
+        for node in 0..4 {
+            c.install_node(node, filled_store(total, 1.0 + node as f32));
+        }
+        let base: Vec<Vec<f32>> = (0..4)
+            .map(|n| c.export_node(n).unwrap().pending().to_vec())
+            .collect();
+        // nodes_after = 4 -> factor 5/4 = 1.25, exact on integral f32s.
+        c.remove_node(0, RecoveryMode::DropRescale, 4, 4);
+        for slot in 0..3 {
+            let got = c.pending(slot).unwrap();
+            for (g, b) in got.iter().zip(&base[slot + 1]) {
+                assert_eq!(g.to_bits(), (b * 1.25).to_bits());
+            }
+        }
+        // The slot backfilled to the post-event state count is fresh.
+        assert_eq!(c.export_node(3).unwrap().residual_sum(), 0.0);
+    }
+
+    #[test]
+    fn exchangeable_crash_beyond_cap_leaves_handoff_state_untouched() {
+        // A crash of a node beyond the materialized cap has no store to
+        // migrate: handoff must leave every materialized store
+        // bit-identical (rescale would still apply — the expectation
+        // argument, DESIGN.md §15).
+        let l = layout();
+        let total = l.total_params();
+        let mut c = build(Method::IwpFixed.spec(), &cfg(), &l);
+        for node in 0..4 {
+            c.install_node(node, filled_store(total, 1.0 + node as f32));
+        }
+        let base: Vec<Vec<f32>> = (0..4)
+            .map(|n| c.export_node(n).unwrap().pending().to_vec())
+            .collect();
+        c.remove_node(6, RecoveryMode::Handoff, 7, 4);
+        for (slot, b) in base.iter().enumerate() {
+            assert_eq!(c.pending(slot).unwrap(), &b[..], "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn add_node_zeroes_new_store_and_rebases_warmup() {
+        let l = layout();
+        let mut sc = cfg();
+        sc.state_nodes = 3;
+        let spec = MethodSpec::parse("iwp:fixed+warmup:4").unwrap();
+        let mut c = SharedMaskCompressor::new(spec, IwpPolicy::Fixed, &sc, &l);
+        c.stores[0].accumulate(&vec![1.0; l.total_params()]);
+        c.add_node(5, 4, 4);
+        assert_eq!(c.stores.len(), 4);
+        assert_eq!(
+            c.stores[3].residual_sum(),
+            0.0,
+            "a join never resurrects stale residuals"
+        );
+        assert_eq!(c.epoch_base, 5, "warm-up re-enters at the join epoch");
+        // Without a warm-up schedule there is nothing to re-enter.
+        let spec = MethodSpec::parse("iwp:fixed").unwrap();
+        let mut c2 = SharedMaskCompressor::new(spec, IwpPolicy::Fixed, &cfg(), &l);
+        c2.add_node(5, 5, 4);
+        assert_eq!(c2.epoch_base, 0);
+    }
+
+    #[test]
+    fn dgc_topk_handoff_merges_into_successor_store() {
+        let l = layout();
+        let total = l.total_params();
+        let mut c = build(Method::Dgc.spec(), &cfg(), &l);
+        for node in 0..4 {
+            c.install_node(node, filled_store(total, 1.0 + node as f32));
+        }
+        let expect: Vec<f32> = {
+            let a = c.export_node(2).unwrap();
+            let b = c.export_node(3).unwrap();
+            a.pending().iter().zip(b.pending()).map(|(x, y)| x + y).collect()
+        };
+        // Remove slot 2: survivors [0, 1, 3]; successor 2 % 3 = 2, the
+        // store that was node 3.
+        c.remove_node(2, RecoveryMode::Handoff, 3, 3);
+        assert_eq!(c.pending(2).unwrap(), &expect[..]);
+    }
+
+    #[test]
+    fn export_install_roundtrip_is_bit_exact() {
+        let l = layout();
+        let total = l.total_params();
+        for spec in ["iwp:fixed", "dgc", "dgc:layerwise"] {
+            let mut c = build(MethodSpec::parse(spec).unwrap(), &cfg(), &l);
+            let store = filled_store(total, 7.0);
+            c.install_node(1, store.clone());
+            let out = c.export_node(1).unwrap();
+            let bits = |s: &ResidualStore| -> Vec<u32> {
+                s.pending().iter().map(|v| v.to_bits()).collect()
+            };
+            assert_eq!(bits(&out), bits(&store), "{spec}");
+        }
+        // Stateless pipelines have nothing to migrate.
+        assert!(build(Method::Baseline.spec(), &cfg(), &l).export_node(0).is_none());
+        assert!(build(Method::TernGrad.spec(), &cfg(), &l).export_node(0).is_none());
     }
 
     #[test]

@@ -113,6 +113,42 @@ impl ResidualStore {
     pub fn residual_norm(&self) -> f64 {
         self.res.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
     }
+
+    /// Sum of the unsent residual (the conserved quantity the recovery
+    /// invariants track — DESIGN.md §15), accumulated in f64 index
+    /// order.
+    pub fn residual_sum(&self) -> f64 {
+        self.res.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Fold another store's pending state into this one (residual-state
+    /// *handoff*, DESIGN.md §15): a departing node's unsent residuals
+    /// are pending gradient mass, so its neighbor inherits them —
+    /// coordinate-wise f32 addition of both the residual and the
+    /// velocity, preserving total pending mass exactly up to f32
+    /// rounding. Both stores must cover the same coordinates.
+    pub fn merge_from(&mut self, other: &ResidualStore) {
+        assert_eq!(other.res.len(), self.res.len(), "handoff needs equal lengths");
+        for i in 0..self.res.len() {
+            self.res[i] += other.res[i];
+            self.vel[i] += other.vel[i];
+        }
+    }
+
+    /// Scale all pending state by `factor` (the *drop-and-rescale*
+    /// recovery mode, DESIGN.md §15): when a node's store is dropped,
+    /// survivors rescale by N/(N−1) so the expected gradient sum is
+    /// preserved. Velocity scales too, keeping the momentum recursion
+    /// consistent with the rescaled residual.
+    pub fn rescale(&mut self, factor: f32) {
+        assert!(factor.is_finite() && factor > 0.0);
+        for v in self.res.iter_mut() {
+            *v *= factor;
+        }
+        for v in self.vel.iter_mut() {
+            *v *= factor;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -230,5 +266,33 @@ mod tests {
         let all = s.take_all();
         assert_eq!(all, vec![1.0, 2.0, 3.0]);
         assert_eq!(s.residual_norm(), 0.0);
+    }
+
+    #[test]
+    fn merge_from_adds_residual_and_velocity() {
+        let mut a = ResidualStore::new(3, 0.5);
+        let mut b = ResidualStore::new(3, 0.5);
+        a.accumulate(&[1.0, 2.0, 3.0]);
+        b.accumulate(&[0.5, 0.25, 0.125]);
+        let total = a.residual_sum() + b.residual_sum();
+        a.merge_from(&b);
+        assert_eq!(a.pending(), &[1.5, 2.25, 3.125]);
+        assert_eq!(a.residual_sum(), total);
+        // Velocity merged too: the next accumulate compounds both
+        // streams' momentum (0.5 * (1.0 + 0.5) at coord 0).
+        a.accumulate(&[0.0, 0.0, 0.0]);
+        assert!((a.pending()[0] - (1.5 + 0.75)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rescale_is_exact_on_exact_factors() {
+        // 1.25 = 5/4 is exactly representable, and powers of two scale
+        // without rounding — the drop-and-rescale invariant's
+        // documented exactness regime (DESIGN.md §15).
+        let mut s = ResidualStore::new(4, 0.0);
+        s.accumulate(&[4.0, -8.0, 0.5, 16.0]);
+        s.rescale(1.25);
+        assert_eq!(s.pending(), &[5.0, -10.0, 0.625, 20.0]);
+        assert_eq!(s.residual_sum(), (5.0 - 10.0 + 0.625 + 20.0) as f64);
     }
 }

@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::compress::{Method, MethodSpec};
-use crate::net::{TopoKind, TransportKind, TunerMode};
+use crate::net::{ChaosPlan, RecoveryMode, TopoKind, TransportKind, TunerMode};
 use crate::util::cli::Args;
 
 /// Everything a training / experiment run needs.
@@ -75,6 +75,11 @@ pub struct Config {
     /// argmin; `log-only` records the decisions while the static
     /// strategy keeps executing. Defaults from `RINGIWP_TUNER`.
     pub tuner: TunerMode,
+    /// Deterministic fault-injection schedule (`net::chaos`, DESIGN.md
+    /// §15): `--chaos <grammar>` | `--chaos-seed N` | `RINGIWP_CHAOS`.
+    /// Only `ringiwp chaos` executes plans — `train`/`exp`/`bench`
+    /// refuse them rather than silently reporting faulted results.
+    pub chaos: Option<ChaosPlan>,
     /// Artifact directory (`make artifacts` output).
     pub artifacts_dir: String,
     /// Output directory for CSVs and logs.
@@ -107,6 +112,7 @@ impl Default for Config {
             topology: TopoKind::Flat,
             transport: TransportKind::from_env(),
             tuner: TunerMode::from_env(),
+            chaos: ChaosPlan::from_env(),
             artifacts_dir: "artifacts".into(),
             out_dir: "results".into(),
         }
@@ -153,6 +159,22 @@ impl Config {
         if let Some(t) = a.str_opt("tuner") {
             self.tuner = TunerMode::parse(t)?;
         }
+        if let Some(g) = a.str_opt("chaos") {
+            self.chaos = Some(ChaosPlan::parse(g).map_err(|e| anyhow::anyhow!(e))?);
+        }
+        // Seeded generation runs after --nodes/--steps so the schedule
+        // covers the ring and step range actually being run.
+        if let Some(s) = a.str_opt("chaos-seed") {
+            let seed: u64 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--chaos-seed expects an integer"))?;
+            self.chaos = Some(ChaosPlan::generate(seed, self.nodes, self.steps));
+        }
+        if let Some(m) = a.str_opt("chaos-mode") {
+            let mode = RecoveryMode::parse(m)
+                .ok_or_else(|| anyhow::anyhow!("--chaos-mode expects handoff|rescale"))?;
+            self.chaos.get_or_insert_with(ChaosPlan::none).mode = mode;
+        }
         self.artifacts_dir = a.str_or("artifacts", &self.artifacts_dir);
         self.out_dir = a.str_or("out", &self.out_dir);
         self.validate()?;
@@ -185,6 +207,9 @@ impl Config {
                 "topology" => self.topology = TopoKind::parse(v)?,
                 "transport" => self.transport = TransportKind::parse(v)?,
                 "tuner" => self.tuner = TunerMode::parse(v)?,
+                "chaos" => {
+                    self.chaos = Some(ChaosPlan::parse(v).map_err(|e| anyhow::anyhow!(e))?)
+                }
                 "artifacts_dir" => self.artifacts_dir = v.clone(),
                 "out_dir" => self.out_dir = v.clone(),
                 other => anyhow::bail!("unknown config key `{other}`"),
@@ -212,6 +237,9 @@ impl Config {
         );
         anyhow::ensure!(self.steps_per_epoch > 0, "steps_per_epoch must be > 0");
         anyhow::ensure!(self.parallelism >= 1, "parallelism must be >= 1");
+        if let Some(p) = &self.chaos {
+            p.validate(self.nodes).map_err(|e| anyhow::anyhow!(e))?;
+        }
         self.method.validate()?;
         self.topology.validate()?;
         if self.tuner != TunerMode::Off {
@@ -423,6 +451,45 @@ mod tests {
             ..Config::default()
         };
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn chaos_knobs_flow_and_validate() {
+        let a = Args::parse(
+            ["train", "--chaos", "mode=rescale,crash@2:1"]
+                .into_iter()
+                .map(String::from),
+        );
+        let cfg = Config::default().apply_args(&a).unwrap();
+        let plan = cfg.chaos.unwrap();
+        assert_eq!(plan.mode, RecoveryMode::DropRescale);
+        assert_eq!(plan.events.len(), 1);
+        // Seeded generation covers the configured ring and step range.
+        let a = Args::parse(
+            ["chaos", "--nodes", "6", "--chaos-seed", "9"]
+                .into_iter()
+                .map(String::from),
+        );
+        let cfg = Config::default().apply_args(&a).unwrap();
+        assert_eq!(cfg.chaos, Some(ChaosPlan::generate(9, 6, cfg.steps)));
+        // --chaos-mode overrides whatever the plan said.
+        let a = Args::parse(
+            ["chaos", "--chaos", "crash@1:0", "--chaos-mode", "rescale"]
+                .into_iter()
+                .map(String::from),
+        );
+        let cfg = Config::default().apply_args(&a).unwrap();
+        assert_eq!(cfg.chaos.unwrap().mode, RecoveryMode::DropRescale);
+        // Plans referencing absent nodes are rejected at validate.
+        let a = Args::parse(
+            ["train", "--nodes", "4", "--chaos", "crash@1:7"]
+                .into_iter()
+                .map(String::from),
+        );
+        assert!(Config::default().apply_args(&a).is_err());
+        // The config-file key flows through the same parser.
+        let kv = parse_kv("chaos = crash@3:0").unwrap();
+        assert!(Config::default().apply_kv(&kv).unwrap().chaos.is_some());
     }
 
     #[test]

@@ -1,0 +1,407 @@
+//! Chaos sweep harness behind `ringiwp chaos` (DESIGN.md §15,
+//! EXPERIMENTS.md §12).
+//!
+//! One run replays a deterministic [`ChaosPlan`] against every
+//! configured compression pipeline × reduce topology × recovery mode,
+//! checking the recovery invariants *around* every membership event:
+//!
+//! * **residual conservation** — a single-crash step preserves the
+//!   total pending gradient mass under `handoff` (merge into the ring
+//!   successor), and rescales it by exactly N/(N−1) under `rescale`
+//!   (modulo f32 arithmetic; exchangeable crashes beyond the
+//!   materialized-state cap leave handoff state untouched);
+//! * **bounded staleness** — every pending residual stays finite after
+//!   every step, faulty or not;
+//! * **mask/support consistency** — reported support sizes and
+//!   densities stay within the model's coordinate budget.
+//!
+//! Everything observable is folded into an FNV-1a digest of the
+//! [`StepReport`] stream, so `ringiwp chaos --seed N` run twice prints
+//! byte-identical output — the goldenable contract the CI smoke pins
+//! with `cmp`.
+
+use crate::compress::MethodSpec;
+use crate::exp::bench::step_specs;
+use crate::exp::simrun::{SimCfg, SimEngine, StepReport, WireEngine};
+use crate::model::{LayerKind, ParamLayout};
+use crate::net::{ChaosEvent, ChaosPlan, LinkSpec, RecoveryMode, TopoKind, TransportKind, TunerMode};
+
+/// Sweep configuration (the `ringiwp chaos` flag surface).
+#[derive(Debug, Clone)]
+pub struct ChaosCfg {
+    /// Starting ring size.
+    pub nodes: usize,
+    /// Engine steps per configuration (extended to cover the plan).
+    pub steps: usize,
+    /// The fault schedule (its `mode` field is overridden per sweep arm).
+    pub plan: ChaosPlan,
+    /// Recovery modes to sweep.
+    pub modes: Vec<RecoveryMode>,
+    /// Compression pipelines to sweep.
+    pub specs: Vec<MethodSpec>,
+    /// Reduce topologies to sweep.
+    pub topologies: Vec<TopoKind>,
+    /// `sim` checks the virtual engine; `uds`/`tcp` run the same sweep
+    /// through real socket rings (re-ringing on every membership event).
+    pub transport: TransportKind,
+    /// Engine seed (gradient + selection streams).
+    pub seed: u64,
+}
+
+impl Default for ChaosCfg {
+    fn default() -> Self {
+        ChaosCfg {
+            nodes: 5,
+            steps: 10,
+            plan: ChaosPlan::none(),
+            modes: vec![RecoveryMode::Handoff, RecoveryMode::DropRescale],
+            specs: step_specs().to_vec(),
+            topologies: sweep_topologies().to_vec(),
+            transport: TransportKind::Sim,
+            seed: 17,
+        }
+    }
+}
+
+/// The topology sweep: one representative of every family
+/// (DESIGN.md §10–§11).
+pub fn sweep_topologies() -> [TopoKind; 4] {
+    [
+        TopoKind::Flat,
+        TopoKind::Hier { group: 2 },
+        TopoKind::Tree,
+        TopoKind::parse("pipeline:2:flat").expect("static topo spec"),
+    ]
+}
+
+/// Small 3-layer inventory the sweep runs over — big enough for every
+/// pipeline's selection paths, small enough for 56 engine builds.
+pub fn harness_layout() -> ParamLayout {
+    ParamLayout::new(
+        "chaos_harness",
+        vec![
+            ("conv".into(), vec![16, 8, 3, 3], LayerKind::Conv),
+            ("bn".into(), vec![32], LayerKind::BatchNorm),
+            ("fc".into(), vec![64, 10], LayerKind::Fc),
+        ],
+    )
+}
+
+/// Deterministic sweep result.
+#[derive(Debug)]
+pub struct ChaosSummary {
+    /// One report line per swept configuration (stable order).
+    pub lines: Vec<String>,
+    /// FNV-1a digest over every configuration's `StepReport` stream.
+    pub digest: u64,
+    /// Configurations swept.
+    pub configs: usize,
+    /// Single-crash recovery events whose conservation invariant was
+    /// checked (pipelines without pending state contribute none).
+    pub recovery_events: usize,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+fn fnv_report(h: &mut u64, r: &StepReport) {
+    fnv(h, &r.wire_bytes_per_node.to_le_bytes());
+    fnv(h, &r.density.to_bits().to_le_bytes());
+    fnv(h, &r.seconds.to_bits().to_le_bytes());
+    fnv(h, &r.wire_seconds.to_bits().to_le_bytes());
+    fnv(h, &r.support_nnz.to_le_bytes());
+}
+
+/// Either engine flavor behind one `apply_chaos`/`step` surface.
+enum Engine {
+    Sim(SimEngine),
+    Wire(WireEngine),
+}
+
+impl Engine {
+    fn build(layout: ParamLayout, cfg: SimCfg) -> anyhow::Result<Engine> {
+        if cfg.transport.is_wire() {
+            Ok(Engine::Wire(WireEngine::new(layout, cfg)?))
+        } else {
+            Ok(Engine::Sim(SimEngine::new(layout, cfg)))
+        }
+    }
+
+    fn sim(&self) -> &SimEngine {
+        match self {
+            Engine::Sim(e) => e,
+            Engine::Wire(w) => w.sim(),
+        }
+    }
+
+    fn apply_chaos(&mut self, step: usize) -> bool {
+        match self {
+            Engine::Sim(e) => e.apply_chaos(step),
+            Engine::Wire(w) => w.apply_chaos(step),
+        }
+    }
+
+    fn step(&mut self, step: usize) -> StepReport {
+        match self {
+            Engine::Sim(e) => e.step(step),
+            Engine::Wire(w) => w.step(step).report,
+        }
+    }
+}
+
+/// Per-store pending-mass sums (f64, index order); `None` for
+/// residual-free pipelines (dense, terngrad).
+fn pending_sums(e: &SimEngine) -> Option<Vec<f64>> {
+    let states = e.cfg.nodes.min(SimEngine::SIM_NODE_CAP);
+    let mut sums = Vec::with_capacity(states);
+    for i in 0..states {
+        sums.push(e.pending(i)?.iter().map(|&v| v as f64).sum());
+    }
+    Some(sums)
+}
+
+/// Absolute pending mass — the scale conservation tolerances hang off.
+fn pending_scale(e: &SimEngine) -> f64 {
+    let states = e.cfg.nodes.min(SimEngine::SIM_NODE_CAP);
+    (0..states)
+        .filter_map(|i| e.pending(i))
+        .flat_map(|p| p.iter())
+        .map(|&v| v.abs() as f64)
+        .sum()
+}
+
+/// Run the sweep; every invariant violation is a typed error naming the
+/// configuration and step it fired at.
+pub fn run(cfg: &ChaosCfg) -> anyhow::Result<ChaosSummary> {
+    cfg.plan
+        .validate(cfg.nodes)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let steps = cfg.steps.max(cfg.plan.max_step() + 2);
+    let layout = harness_layout();
+    let mut summary = ChaosSummary {
+        lines: Vec::new(),
+        digest: FNV_OFFSET,
+        configs: 0,
+        recovery_events: 0,
+    };
+    for &mode in &cfg.modes {
+        let mut plan = cfg.plan.clone();
+        plan.mode = mode;
+        for &spec in &cfg.specs {
+            for &topo in &cfg.topologies {
+                let (digest, events) =
+                    run_one(cfg, plan.clone(), spec, topo, steps, layout.clone())
+                        .map_err(|e| {
+                            e.context(format!(
+                                "chaos config mode={mode} spec={} topo={}",
+                                spec.name(),
+                                topo.name()
+                            ))
+                        })?;
+                summary.lines.push(format!(
+                    "mode={:<8} spec={:<16} topo={:<16} steps={steps} checked={events} \
+                     digest={digest:016x}",
+                    mode.name(),
+                    spec.name(),
+                    topo.name(),
+                ));
+                fnv(&mut summary.digest, &digest.to_le_bytes());
+                summary.configs += 1;
+                summary.recovery_events += events;
+            }
+        }
+    }
+    Ok(summary)
+}
+
+fn run_one(
+    cfg: &ChaosCfg,
+    plan: ChaosPlan,
+    spec: MethodSpec,
+    topo: TopoKind,
+    steps: usize,
+    layout: ParamLayout,
+) -> anyhow::Result<(u64, usize)> {
+    let mode = plan.mode;
+    let sim_cfg = SimCfg {
+        nodes: cfg.nodes,
+        method: spec,
+        mask_nodes: cfg.nodes.min(3),
+        steps_per_epoch: 3,
+        warmup_epochs: 1,
+        seed: cfg.seed,
+        link: LinkSpec::new(1e9, 0.0),
+        parallelism: 1,
+        topology: topo,
+        transport: cfg.transport,
+        wire_dir: None,
+        tuner: TunerMode::Off,
+        chaos: Some(plan.clone()),
+        ..Default::default()
+    };
+    let total = layout.total_params() as u64;
+    let mut engine = Engine::build(layout, sim_cfg)?;
+    let mut digest = FNV_OFFSET;
+    let mut events = 0usize;
+    let mut expected_n = cfg.nodes;
+    for step in 0..steps {
+        let firing: Vec<ChaosEvent> = plan.events_at(step).copied().collect();
+        // Conservation is checked on single-crash steps (seeded plans
+        // schedule at most one event per step); compound steps still get
+        // the membership + staleness + consistency checks below.
+        let crash = match firing[..] {
+            [ChaosEvent::Crash { node, .. }] => Some(node),
+            _ => None,
+        };
+        let before = crash.and_then(|_| pending_sums(engine.sim()));
+        let scale = pending_scale(engine.sim());
+        engine.apply_chaos(step);
+        for ev in &firing {
+            match ev {
+                ChaosEvent::Crash { .. } => expected_n -= 1,
+                ChaosEvent::Join { .. } => expected_n += 1,
+                _ => {}
+            }
+        }
+        anyhow::ensure!(
+            engine.sim().cfg.nodes == expected_n,
+            "step {step}: membership {} after events, expected {expected_n}",
+            engine.sim().cfg.nodes
+        );
+        if let (Some(node), Some(before)) = (crash, before) {
+            let after = pending_sums(engine.sim())
+                .ok_or_else(|| anyhow::anyhow!("pending state vanished across recovery"))?;
+            let sum_before: f64 = before.iter().sum();
+            let sum_after: f64 = after.iter().sum();
+            let nodes_after = engine.sim().cfg.nodes;
+            let tol = 1e-4 * (1.0 + scale);
+            let expected = match mode {
+                // Handoff merges the departing store into its ring
+                // successor: total mass is conserved. An exchangeable
+                // crash (node beyond the materialized-state cap) owns no
+                // store, so handoff leaves every survivor untouched.
+                RecoveryMode::Handoff => sum_before,
+                // Rescale drops the departing store and scales every
+                // survivor by N/(N−1); exchangeable crashes have no
+                // store to drop but still rescale.
+                RecoveryMode::DropRescale => {
+                    let factor = (nodes_after + 1) as f64 / nodes_after as f64;
+                    let departed = before.get(node).copied().unwrap_or(0.0);
+                    (sum_before - departed) * factor
+                }
+            };
+            anyhow::ensure!(
+                (sum_after - expected).abs() <= tol,
+                "step {step}: crash@{node} mode={mode} pending mass {sum_after} \
+                 (expected {expected}, tol {tol})"
+            );
+            events += 1;
+        }
+        let r = engine.step(step);
+        anyhow::ensure!(
+            r.density.is_finite() && (0.0..=1.0 + 1e-9).contains(&r.density),
+            "step {step}: density {} out of range",
+            r.density
+        );
+        anyhow::ensure!(
+            r.support_nnz <= total,
+            "step {step}: support {} exceeds {total} coordinates",
+            r.support_nnz
+        );
+        anyhow::ensure!(
+            r.seconds > 0.0 && r.wire_seconds.is_finite() && r.wire_seconds >= 0.0,
+            "step {step}: degenerate timing {}/{}",
+            r.seconds,
+            r.wire_seconds
+        );
+        // Bounded staleness: no recovery path may inject NaN/inf into a
+        // surviving residual store.
+        let states = engine.sim().cfg.nodes.min(SimEngine::SIM_NODE_CAP);
+        for i in 0..states {
+            if let Some(p) = engine.sim().pending(i) {
+                anyhow::ensure!(
+                    p.iter().all(|v| v.is_finite()),
+                    "step {step}: node {i} pending state went non-finite"
+                );
+            }
+        }
+        fnv_report(&mut digest, &r);
+    }
+    Ok((digest, events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Method;
+
+    fn tiny(transport: TransportKind) -> ChaosCfg {
+        ChaosCfg {
+            nodes: 5,
+            steps: 8,
+            plan: ChaosPlan::parse("crash@2:1,slow@3:0:4,join@5,heal@6,crash@7:2").unwrap(),
+            specs: vec![Method::IwpFixed.spec(), Method::Dgc.spec()],
+            topologies: vec![TopoKind::Flat],
+            transport,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let cfg = tiny(TransportKind::Sim);
+        let a = run(&cfg).unwrap();
+        let b = run(&cfg).unwrap();
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.lines, b.lines);
+        assert_eq!(a.configs, 4, "2 specs x 1 topo x 2 modes");
+    }
+
+    #[test]
+    fn conservation_is_checked_on_every_crash() {
+        let s = run(&tiny(TransportKind::Sim)).unwrap();
+        // Both pipelines keep pending state: 4 runs x 2 single-crash
+        // steps each.
+        assert_eq!(s.recovery_events, 8);
+    }
+
+    #[test]
+    fn wire_sweep_reproduces_the_sim_digest() {
+        let mut cfg = tiny(TransportKind::Sim);
+        cfg.specs = vec![Method::IwpFixed.spec()];
+        cfg.modes = vec![RecoveryMode::Handoff];
+        let sim = run(&cfg).unwrap();
+        cfg.transport = TransportKind::Uds;
+        let uds = run(&cfg).unwrap();
+        assert_eq!(sim.digest, uds.digest, "sim is the oracle across re-rings");
+    }
+
+    #[test]
+    fn generated_plans_survive_the_residual_pipelines() {
+        for seed in [1u64, 2, 3] {
+            let cfg = ChaosCfg {
+                plan: ChaosPlan::generate(seed, 5, 8),
+                specs: vec![Method::IwpLayerwise.spec(), Method::Dgc.spec()],
+                topologies: vec![TopoKind::Flat, TopoKind::Tree],
+                ..Default::default()
+            };
+            run(&cfg).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn invalid_plans_are_rejected_up_front() {
+        let cfg = ChaosCfg {
+            plan: ChaosPlan::parse("crash@1:9").unwrap(),
+            ..Default::default()
+        };
+        assert!(run(&cfg).is_err());
+    }
+}

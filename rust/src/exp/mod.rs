@@ -5,6 +5,7 @@
 //! `ringiwp exp all` runs the whole battery.
 
 pub mod bench;
+pub mod chaosrun;
 pub mod curves;
 pub mod density;
 pub mod figs;

@@ -20,7 +20,8 @@ use crate::grad::SynthGrads;
 use crate::metrics::CompressionAccount;
 use crate::model::ParamLayout;
 use crate::net::{
-    LinkSpec, RingNet, TopoKind, Topology, TransportKind, Tuner, TunerMode, WireError, WireRing,
+    ChaosEvent, ChaosPlan, LinkSpec, RecoveryMode, RingNet, TopoKind, Topology, TransportKind,
+    Tuner, TunerMode, WireError, WireRing,
 };
 use crate::ring::{Arena, Executor};
 use crate::util::rng::Rng;
@@ -78,6 +79,12 @@ pub struct SimCfg {
     /// executes each step's argmin pick. Defaults to `RINGIWP_TUNER`,
     /// else `off`.
     pub tuner: TunerMode,
+    /// Deterministic fault-injection schedule (`net::chaos`, DESIGN.md
+    /// §15): crashes, stragglers, heals, and joins replayed at fixed
+    /// step indices. `None` — and an empty plan — leave every report
+    /// bit-identical to the pre-chaos engine. Defaults to
+    /// `RINGIWP_CHAOS`, else `None`.
+    pub chaos: Option<ChaosPlan>,
 }
 
 impl Default for SimCfg {
@@ -104,6 +111,7 @@ impl Default for SimCfg {
             transport: TransportKind::from_env(),
             wire_dir: std::env::var_os("RINGIWP_WIRE_DIR").map(std::path::PathBuf::from),
             tuner: TunerMode::from_env(),
+            chaos: ChaosPlan::from_env(),
         }
     }
 }
@@ -163,6 +171,16 @@ pub struct SimEngine {
     /// (refilled in place — no per-call allocation).
     snap_stats: Vec<LayerStats>,
     grads: Vec<Vec<f32>>,
+    /// Current per-hop link table (entry `i` = node `i`'s outgoing
+    /// edge) — the elastic-membership source of truth the virtual net,
+    /// the tuner, and wire re-rings all read (DESIGN.md §15).
+    links: Vec<LinkSpec>,
+    /// Seed stream for mid-epoch joiners' gradient jitter (split after
+    /// every build-time stream, so pre-chaos runs stay bit-identical).
+    join_rng: Rng,
+    /// First step whose chaos events have not fired yet — the cursor
+    /// that makes [`SimEngine::apply_chaos`] idempotent.
+    next_chaos_step: usize,
 }
 
 impl SimEngine {
@@ -172,7 +190,9 @@ impl SimEngine {
     /// residual states (IWP), one representative TernGrad encoder, and
     /// per-node *supports* (DGC — synthesized as exchangeable draws
     /// beyond the cap). Keeps 96-node x 61M-param sims in memory.
-    const SIM_NODE_CAP: usize = 4;
+    /// Public so the chaos harnesses know how many [`SimEngine::pending`]
+    /// stores exist at a given membership (DESIGN.md §15).
+    pub const SIM_NODE_CAP: usize = 4;
 
     /// Build an engine over `layout` with configuration `cfg`.
     pub fn new(layout: ParamLayout, cfg: SimCfg) -> Self {
@@ -200,6 +220,12 @@ impl SimEngine {
             net: RingNet::new(cfg.nodes, cfg.link, 0.05),
             rngs: (0..cfg.nodes).map(|i| root.split(i as u64)).collect(),
             ctl_rng: root.split(0xC011),
+            links: vec![cfg.link; cfg.nodes],
+            // Split LAST: root's state advances past the per-node and
+            // control streams, so adding this stream changes nothing
+            // about them — pre-chaos runs stay bit-identical.
+            join_rng: root.split(0x1014),
+            next_chaos_step: 0,
             account: CompressionAccount::new(),
             exec: Executor::new(cfg.parallelism),
             topo: cfg.topology.build(cfg.nodes),
@@ -288,13 +314,145 @@ impl SimEngine {
     /// DESIGN.md §13). A uniform table equal to `cfg.link` leaves
     /// every report bit-identical.
     pub fn set_links(&mut self, links: Vec<LinkSpec>) {
+        self.links.clone_from(&links);
         self.net.set_links(links);
+        if let Some(t) = self.tuner.as_mut() {
+            t.set_links(&self.links);
+        }
+    }
+
+    /// The current per-hop link table (entry `i` = node `i`'s outgoing
+    /// edge). Uniform `cfg.link` until a chaos event or an installed
+    /// table changes it.
+    pub fn links(&self) -> &[LinkSpec] {
+        &self.links
+    }
+
+    /// Node `node`'s accumulated pending update (the configured
+    /// pipeline's residual store) — the chaos harness reads it to
+    /// check residual-conservation invariants around recovery events
+    /// (DESIGN.md §15). `None` for residual-free pipelines.
+    pub fn pending(&self, node: usize) -> Option<&[f32]> {
+        self.comp.pending(node)
+    }
+
+    /// Replay every chaos event scheduled at steps the engine has not
+    /// yet reached, up to and including `step` (DESIGN.md §15).
+    /// Idempotent: an internal cursor remembers what already fired, so
+    /// harnesses that check invariants *around* recovery events call
+    /// this manually before [`SimEngine::step`] — whose own call then
+    /// becomes a no-op. Returns true when membership or links changed
+    /// (a wire engine must rebuild its socket ring before stepping).
+    pub fn apply_chaos(&mut self, step: usize) -> bool {
+        let plan = match &self.cfg.chaos {
+            Some(p) if !p.is_empty() => p.clone(),
+            _ => return false,
+        };
+        let from = self.next_chaos_step;
+        self.next_chaos_step = self.next_chaos_step.max(step + 1);
+        if from > step {
+            return false;
+        }
+        let mut changed = false;
+        for ev in plan.events.iter().filter(|e| (from..=step).contains(&e.step())) {
+            match *ev {
+                ChaosEvent::Crash { node, .. } => self.remove_node(node, plan.mode),
+                ChaosEvent::Slow { node, factor, .. } => {
+                    // Degradation is base-relative (not compounding):
+                    // the hop runs at cfg.link / factor until healed.
+                    self.links[node] = crate::net::chaos::degrade(self.cfg.link, factor);
+                    self.net.set_links(self.links.clone());
+                    if let Some(t) = self.tuner.as_mut() {
+                        t.set_links(&self.links);
+                    }
+                }
+                ChaosEvent::Heal { .. } => {
+                    self.links = vec![self.cfg.link; self.cfg.nodes];
+                    self.net.set_links(self.links.clone());
+                    if let Some(t) = self.tuner.as_mut() {
+                        t.set_links(&self.links);
+                    }
+                }
+                ChaosEvent::Join { .. } => self.add_node(step),
+            }
+            changed = true;
+        }
+        changed
+    }
+
+    /// Ring position `node` crashed mid-run: migrate its pipeline
+    /// state per `mode` (handoff to its ring successor, or
+    /// drop-and-rescale by N/(N−1) — DESIGN.md §15), then re-ring the
+    /// survivors. The virtual clock carries over (recovery does not
+    /// rewind time); cumulative byte counters and traces restart with
+    /// the new ring, and per-step reports — clock deltas — stay
+    /// comparable across the event.
+    pub fn remove_node(&mut self, node: usize, mode: RecoveryMode) {
+        let n = self.cfg.nodes;
+        assert!(n > 2, "cannot re-ring below 2 survivors (have {n})");
+        assert!(node < n, "crash of node {node} out of range (membership {n})");
+        let nodes_after = n - 1;
+        let states_after = nodes_after.min(Self::SIM_NODE_CAP);
+        self.comp.remove_node(node, mode, nodes_after, states_after);
+        // Survivors keep their own RNG streams and links (both shift
+        // down with their ring position, like the state stores).
+        self.rngs.remove(node);
+        self.links.remove(node);
+        self.cfg.nodes = nodes_after;
+        self.cfg.mask_nodes = self.cfg.mask_nodes.min(nodes_after).max(1);
+        self.rebuild_ring();
+        self.resize_grads(states_after);
+    }
+
+    /// One fresh node joins at the end of the ring before `step` runs:
+    /// zeroed pipeline state (no stale residuals), a fresh RNG stream
+    /// off the reserved join stream, the base link, and warm-up
+    /// re-entry in the pipeline (DESIGN.md §15).
+    pub fn add_node(&mut self, step: usize) {
+        let nodes_after = self.cfg.nodes + 1;
+        let states_after = nodes_after.min(Self::SIM_NODE_CAP);
+        let epoch = step / self.cfg.steps_per_epoch.max(1);
+        self.comp.add_node(epoch, nodes_after, states_after);
+        self.rngs.push(self.join_rng.split(nodes_after as u64));
+        self.links.push(self.cfg.link);
+        self.cfg.nodes = nodes_after;
+        self.rebuild_ring();
+        self.resize_grads(states_after);
+    }
+
+    /// Rebuild the net/topology/arena (and tuner pricing) for the
+    /// current membership + link table. The clock carries over; the
+    /// tuner restarts its hysteresis incumbent (a membership change
+    /// invalidates every prior prediction anyway).
+    fn rebuild_ring(&mut self) {
+        let clock = self.net.clock();
+        let mut net = RingNet::new(self.cfg.nodes, self.cfg.link, 0.05);
+        net.advance(clock);
+        net.set_links(self.links.clone());
+        self.net = net;
+        self.topo = self.cfg.topology.build(self.cfg.nodes);
+        self.arena = Arena::for_nodes(self.cfg.nodes);
+        if self.cfg.tuner != TunerMode::Off {
+            let mut t = Tuner::new(self.cfg.tuner, self.cfg.nodes, self.cfg.link);
+            t.set_links(&self.links);
+            self.tuner = Some(t);
+        }
+    }
+
+    fn resize_grads(&mut self, states: usize) {
+        let total = self.layout.total_params();
+        while self.grads.len() < states {
+            self.grads.push(vec![0.0; total]);
+        }
+        self.grads.truncate(states);
     }
 
     /// One synchronous step: generate per-node gradients, compress,
     /// ring-reduce, account. Per-node work fans out over the configured
-    /// executor; reports are bit-identical at any `parallelism`.
+    /// executor; reports are bit-identical at any `parallelism`. Fires
+    /// any pending chaos events first ([`SimEngine::apply_chaos`]).
     pub fn step(&mut self, step: usize) -> StepReport {
+        self.apply_chaos(step);
         self.step_wired(step, None)
     }
 
@@ -407,6 +565,12 @@ impl WireEngine {
             "WireEngine needs --transport uds|tcp (got `{}`)",
             cfg.transport
         );
+        let chaos_active = matches!(&cfg.chaos, Some(p) if !p.is_empty());
+        anyhow::ensure!(
+            cfg.wire_dir.is_none() || !chaos_active,
+            "chaos plans cannot drive an external `ringiwp serve` ring \
+             (re-ring would abandon live ranks); drop --wire-dir"
+        );
         let links = vec![cfg.link; cfg.nodes];
         let ring = match &cfg.wire_dir {
             Some(dir) => WireRing::connect_external(dir, cfg.transport, links)?,
@@ -436,7 +600,10 @@ impl WireEngine {
     /// `expect`) if the wire corrupts a payload mid-step; transport
     ///-level failures before that surface as typed [`WireError`]s in
     /// [`WireEngine::shutdown`].
+    ///
+    /// Fires any pending chaos events first ([`WireEngine::apply_chaos`]).
     pub fn step(&mut self, step: usize) -> WireStepReport {
+        self.apply_chaos(step);
         let t0 = std::time::Instant::now();
         let b0 = self.ring.real_bytes();
         self.ring.begin_step(step as u32);
@@ -446,6 +613,25 @@ impl WireEngine {
             wall_seconds: t0.elapsed().as_secs_f64(),
             real_bytes: self.ring.real_bytes() - b0,
         }
+    }
+
+    /// Fire any chaos events pending at `step` and, when membership or
+    /// links changed, tear the old socket ring down and spawn a fresh
+    /// in-process ring over the survivors' link table (the wire half of
+    /// re-ring recovery, DESIGN.md §15). Idempotent through the sim
+    /// core's cursor, so harnesses checking invariants *around* recovery
+    /// events call this manually before [`WireEngine::step`] — whose own
+    /// call then becomes a no-op. Returns true when the ring was rebuilt.
+    pub fn apply_chaos(&mut self, step: usize) -> bool {
+        if !self.sim.apply_chaos(step) {
+            return false;
+        }
+        let transport = self.ring.transport();
+        self.ring.shutdown().expect("re-ring: old ring shutdown failed");
+        self.ring = WireRing::new_in_process(transport, self.sim.links().to_vec())
+            .expect("re-ring: survivor ring spawn failed");
+        self.sim.set_links(self.ring.links().to_vec());
+        true
     }
 
     /// Tear the socket ring down (also runs on drop).
@@ -713,6 +899,151 @@ mod tests {
             assert_eq!(row.considered.len(), t.candidates().len());
             assert!(row.predicted_s.is_finite());
         }
+    }
+
+    #[test]
+    fn no_fault_chaos_plan_is_bit_identical() {
+        // Wiring the chaos machinery in must cost nothing when no event
+        // fires: `chaos: None` and an empty plan produce byte-equal
+        // report streams (the DESIGN.md §15 zero-overhead contract).
+        let layout = small_layout();
+        for spec in ["iwp:fixed", "dgc", "terngrad"] {
+            let base = spec_cfg(spec, 5);
+            let mut plain = SimEngine::new(layout.clone(), base.clone());
+            let mut chaotic = SimEngine::new(
+                layout.clone(),
+                SimCfg {
+                    chaos: Some(ChaosPlan::none()),
+                    ..base
+                },
+            );
+            for s in 0..4 {
+                let a = plain.step(s);
+                let b = chaotic.step(s);
+                assert_eq!(a.wire_bytes_per_node, b.wire_bytes_per_node, "{spec} step {s}");
+                assert_eq!(a.density.to_bits(), b.density.to_bits(), "{spec} step {s}");
+                assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "{spec} step {s}");
+                assert_eq!(a.support_nnz, b.support_nnz, "{spec} step {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn crash_recovers_within_one_step_in_both_modes() {
+        // A mid-run crash shrinks the membership before the scheduled
+        // step runs; every subsequent report stays well-formed and the
+        // per-node wire bytes track the new ring size.
+        let layout = small_layout();
+        for mode in ["handoff", "rescale"] {
+            let mut c = spec_cfg("iwp:fixed", 5);
+            c.chaos = Some(ChaosPlan::parse(&format!("mode={mode},crash@2:1")).unwrap());
+            let mut e = SimEngine::new(layout.clone(), c);
+            for s in 0..5 {
+                let r = e.step(s);
+                assert!(r.wire_bytes_per_node > 0, "{mode} step {s}");
+                assert!(r.density > 0.0 && r.density <= 1.0, "{mode} step {s}");
+                assert!(r.seconds.is_finite() && r.seconds > 0.0, "{mode} step {s}");
+                let want = if s < 2 { 5 } else { 4 };
+                assert_eq!(e.cfg.nodes, want, "{mode} step {s}");
+            }
+            // Survivor state stays finite (bounded staleness).
+            if let Some(p) = e.pending(0) {
+                assert!(p.iter().all(|v| v.is_finite()), "{mode}");
+            }
+        }
+    }
+
+    #[test]
+    fn join_grows_membership_and_caps_state() {
+        let mut c = spec_cfg("iwp:fixed", 5);
+        c.chaos = Some(ChaosPlan::parse("join@2").unwrap());
+        let mut e = SimEngine::new(small_layout(), c);
+        for s in 0..4 {
+            let r = e.step(s);
+            assert!(r.wire_bytes_per_node > 0, "step {s}");
+        }
+        assert_eq!(e.cfg.nodes, 6);
+        // Materialized state never exceeds the exchangeable-node cap.
+        assert_eq!(e.grads.len(), 6.min(SimEngine::SIM_NODE_CAP));
+        assert_eq!(e.rngs.len(), 6);
+        assert_eq!(e.links().len(), 6);
+    }
+
+    #[test]
+    fn slow_then_heal_roundtrips_the_link_table() {
+        let mut c = cfg(Method::Baseline, 4);
+        c.chaos = Some(ChaosPlan::parse("slow@1:2:4,heal@3").unwrap());
+        let mut e = SimEngine::new(small_layout(), c.clone());
+        let r0 = e.step(0);
+        let r1 = e.step(1);
+        // Hop 2 at bandwidth/4 slows the (synchronous) round.
+        assert!(e.links()[2].bandwidth_bps < c.link.bandwidth_bps);
+        assert!(
+            r1.wire_seconds > r0.wire_seconds,
+            "straggler hop must slow the ring: {} vs {}",
+            r1.wire_seconds,
+            r0.wire_seconds
+        );
+        e.step(2);
+        let r3 = e.step(3);
+        // Heal restores the uniform base table and the original timing.
+        assert!(e.links().iter().all(|l| l.bandwidth_bps == c.link.bandwidth_bps));
+        assert_eq!(r3.wire_seconds.to_bits(), r0.wire_seconds.to_bits());
+    }
+
+    #[test]
+    fn apply_chaos_is_idempotent_across_manual_and_step() {
+        // Harnesses call apply_chaos manually to inspect state around
+        // the event; the engine's own call inside step() must then be a
+        // no-op, leaving reports identical to the auto-applied run.
+        let layout = small_layout();
+        let mut c = spec_cfg("iwp:fixed", 5);
+        c.chaos = Some(ChaosPlan::parse("mode=rescale,crash@1:3,join@3").unwrap());
+        let mut auto = SimEngine::new(layout.clone(), c.clone());
+        let mut manual = SimEngine::new(layout, c);
+        for s in 0..5 {
+            let a = auto.step(s);
+            manual.apply_chaos(s);
+            assert!(!manual.apply_chaos(s), "second call at step {s} must no-op");
+            let b = manual.step(s);
+            assert_eq!(a.wire_bytes_per_node, b.wire_bytes_per_node, "step {s}");
+            assert_eq!(a.density.to_bits(), b.density.to_bits(), "step {s}");
+            assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "step {s}");
+        }
+        assert_eq!(auto.cfg.nodes, manual.cfg.nodes);
+    }
+
+    #[test]
+    fn wire_engine_re_rings_through_a_crash() {
+        // The wire half of recovery: the same crash plan on sim and uds
+        // transports yields bit-identical reports, with the socket ring
+        // rebuilt over the survivors mid-run.
+        let layout = small_layout();
+        let mut c = spec_cfg("iwp:fixed", 4);
+        c.chaos = Some(ChaosPlan::parse("mode=handoff,crash@1:2").unwrap());
+        let mut sim = SimEngine::new(layout.clone(), c.clone());
+        c.transport = TransportKind::Uds;
+        let mut wire = WireEngine::new(layout, c).unwrap();
+        for s in 0..4 {
+            let a = sim.step(s);
+            let b = wire.step(s);
+            assert_eq!(a.wire_bytes_per_node, b.report.wire_bytes_per_node, "step {s}");
+            assert_eq!(a.density.to_bits(), b.report.density.to_bits(), "step {s}");
+            assert_eq!(a.seconds.to_bits(), b.report.seconds.to_bits(), "step {s}");
+            assert_eq!(a.support_nnz, b.report.support_nnz, "step {s}");
+        }
+        assert_eq!(wire.sim().cfg.nodes, 3);
+        assert_eq!(wire.ring().links().len(), 3);
+        wire.shutdown().unwrap();
+    }
+
+    #[test]
+    fn chaos_with_external_wire_dir_is_rejected() {
+        let mut c = spec_cfg("baseline", 4);
+        c.transport = TransportKind::Uds;
+        c.wire_dir = Some(std::path::PathBuf::from("/tmp/nonexistent-ring"));
+        c.chaos = Some(ChaosPlan::parse("crash@1:0").unwrap());
+        assert!(WireEngine::new(small_layout(), c).is_err());
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //!   exp     — regenerate a paper table/figure (table1, fig2, …, all)
 //!   bench   — emit machine-readable BENCH_*.json perf payloads
 //!   serve   — run one wire-transport rank (net::wire, DESIGN.md §13)
+//!   chaos   — sweep a deterministic failure schedule across every
+//!             pipeline × topology × recovery mode (DESIGN.md §15)
 //!   methods — list the registered compression-pipeline specs
 //!   info    — show artifacts, platform, model inventories
 //!   help    — this text
@@ -81,6 +83,21 @@ SUBCOMMANDS:
                   --dir DIR           rendezvous directory (default wire)
                   --transport uds|tcp (default uds)
                   --once              serve one session then exit
+    chaos       replay a deterministic fault schedule (net::chaos,
+                DESIGN.md §15) across every compression pipeline ×
+                reduce topology × recovery mode, checking residual
+                conservation, bounded staleness, and mask consistency
+                around every recovery event; output is byte-identical
+                for the same seed:
+                  --seed N            schedule seed (default 42)
+                  --chaos GRAMMAR     explicit plan instead (mode=…,
+                                      crash@s:n, slow@s:n:f, heal@s,
+                                      join@s; env RINGIWP_CHAOS)
+                  --chaos-mode handoff|rescale  sweep one mode only
+                  --nodes N --steps N starting ring / schedule length
+                  --transport sim|uds|tcp  engine flavor (sim checks
+                                      the virtual oracle; uds/tcp
+                                      re-ring real socket rings)
     methods     list the registered compression-pipeline specs with
                 one-line descriptions (the --method registry)
     info        list artifacts, PJRT platform, zoo inventories
@@ -140,6 +157,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("exp") => cmd_exp(args),
         Some("bench") => cmd_bench(args),
         Some("serve") => cmd_serve(args),
+        Some("chaos") => cmd_chaos(args),
         Some("methods") => cmd_methods(),
         Some("info") => cmd_info(args),
         Some("help") | None => {
@@ -152,6 +170,11 @@ fn run(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = Config::default().apply_args(args)?;
+    anyhow::ensure!(
+        !matches!(&cfg.chaos, Some(p) if !p.is_empty()),
+        "train does not execute fault schedules — run `ringiwp chaos` \
+         (drop --chaos/--chaos-seed or unset RINGIWP_CHAOS)"
+    );
     let rt = Runtime::cpu(&cfg.artifacts_dir)?;
     println!(
         "training {} with {} on a {}-node ring (PJRT platform: {})",
@@ -218,6 +241,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    // The experiment harnesses build engines from `SimCfg::default()`,
+    // which honors RINGIWP_CHAOS — refuse up front rather than let a
+    // forgotten env var silently fault every paper artifact.
+    anyhow::ensure!(
+        !ringiwp::net::ChaosPlan::from_env().is_some_and(|p| !p.is_empty()),
+        "exp does not execute fault schedules — run `ringiwp chaos` (unset RINGIWP_CHAOS)"
+    );
     let id = args.str_or("id", "all");
     let out_dir = args.str_or("out", "results");
     let seed = args.u64_or("seed", 42);
@@ -273,6 +303,12 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use ringiwp::exp::bench::{run_ring, run_step, BenchCfg};
     use ringiwp::metrics::bench::{canonical, commit, compare, ns_op_summary};
     use ringiwp::util::json;
+
+    anyhow::ensure!(
+        !ringiwp::net::ChaosPlan::from_env().is_some_and(|p| !p.is_empty()),
+        "bench does not execute fault schedules — a faulted run would poison the \
+         perf baselines; run `ringiwp chaos` (unset RINGIWP_CHAOS)"
+    );
 
     // Diff mode: compare two output directories' payloads modulo the
     // volatile fields (the CI determinism check).
@@ -487,6 +523,49 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     );
     let sessions = serve_rank(std::path::Path::new(&dir), rank, nodes, transport, once)?;
     println!("serve: rank {rank} served {sessions} session(s)");
+    Ok(())
+}
+
+fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
+    use ringiwp::exp::chaosrun::{run, ChaosCfg};
+    use ringiwp::net::{ChaosPlan, RecoveryMode, TransportKind};
+
+    let nodes = args.usize_or("nodes", 5);
+    let steps = args.usize_or("steps", 10);
+    let seed = args.u64_or("seed", 42);
+    // Plan precedence: explicit grammar > RINGIWP_CHAOS > generated
+    // from --seed.
+    let plan = match args.str_opt("chaos") {
+        Some(g) => ChaosPlan::parse(g).map_err(|e| anyhow::anyhow!(e))?,
+        None => {
+            ChaosPlan::from_env().unwrap_or_else(|| ChaosPlan::generate(seed, nodes, steps))
+        }
+    };
+    let modes = match args.str_opt("chaos-mode") {
+        Some(m) => vec![RecoveryMode::parse(m)
+            .ok_or_else(|| anyhow::anyhow!("--chaos-mode expects handoff|rescale"))?],
+        None => vec![RecoveryMode::Handoff, RecoveryMode::DropRescale],
+    };
+    let transport = TransportKind::parse(&args.str_or("transport", "sim"))?;
+    let cfg = ChaosCfg {
+        nodes,
+        steps,
+        plan: plan.clone(),
+        modes,
+        transport,
+        seed,
+        ..Default::default()
+    };
+    println!("chaos: plan {plan}");
+    println!("chaos: nodes={nodes} steps={steps} transport={transport} seed={seed}");
+    let s = run(&cfg)?;
+    for line in &s.lines {
+        println!("  {line}");
+    }
+    println!(
+        "chaos: {} configs green, {} conservation checks, digest={:016x}",
+        s.configs, s.recovery_events, s.digest
+    );
     Ok(())
 }
 

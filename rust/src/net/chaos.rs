@@ -1,0 +1,431 @@
+//! Deterministic seeded fault injection for elastic rings (DESIGN.md
+//! §15).
+//!
+//! A [`ChaosPlan`] is a *schedule*: a sorted list of membership and
+//! link events ([`ChaosEvent`]) the engines replay at fixed step
+//! indices, plus the [`RecoveryMode`] governing what happens to a
+//! crashed node's pending residual state. Plans come from three
+//! equivalent sources — a grammar string (`--chaos` /
+//! `RINGIWP_CHAOS`), a seed (`--chaos-seed N` →
+//! [`ChaosPlan::generate`]), or code — and the grammar round-trips
+//! through [`std::fmt::Display`], so `ringiwp chaos --seed N` can print
+//! the exact plan it ran.
+//!
+//! Everything here is pure data + SplitMix64 draws: the same seed
+//! yields the same plan on every run, machine, and transport, which is
+//! what makes the chaos suites goldenable (same seed ⇒ bit-identical
+//! report streams).
+//!
+//! Grammar (comma-separated tokens, steps are absolute step indices):
+//!
+//! ```text
+//!   mode=handoff | mode=rescale      recovery mode (default handoff)
+//!   crash@<step>:<node>              node leaves before this step runs
+//!   slow@<step>:<node>:<factor>      node's link degrades by ×factor
+//!   heal@<step>                      all links reset to the base link
+//!   join@<step>                      one node joins before this step
+//! ```
+//!
+//! Node indices refer to the membership *at that step* — after all
+//! earlier crashes and joins have been applied (ring positions shift
+//! down on a crash, exactly like the engine's survivor re-ring).
+
+use super::link::LinkSpec;
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// One scheduled fault or membership event. `step` is the engine step
+/// index the event fires *before* (the step then runs on the post-event
+/// ring).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChaosEvent {
+    /// Node `node` crashes: it leaves the ring and survivors re-ring.
+    Crash {
+        /// Step the crash precedes.
+        step: usize,
+        /// Ring position of the crashing node at that step.
+        node: usize,
+    },
+    /// Node `node`'s link degrades (straggler / congested hop):
+    /// bandwidth divides by `factor`, latency multiplies by `factor`.
+    Slow {
+        /// Step the degradation precedes.
+        step: usize,
+        /// Ring position of the degraded node at that step.
+        node: usize,
+        /// Degradation factor (> 1 slows the hop down).
+        factor: f64,
+    },
+    /// All links reset to the base link (partition heals).
+    Heal {
+        /// Step the heal precedes.
+        step: usize,
+    },
+    /// One fresh node joins at the end of the ring (warm-up re-entry).
+    Join {
+        /// Step the join precedes.
+        step: usize,
+    },
+}
+
+impl ChaosEvent {
+    /// The step index this event fires before.
+    pub fn step(&self) -> usize {
+        match *self {
+            ChaosEvent::Crash { step, .. }
+            | ChaosEvent::Slow { step, .. }
+            | ChaosEvent::Heal { step }
+            | ChaosEvent::Join { step } => step,
+        }
+    }
+}
+
+impl fmt::Display for ChaosEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            ChaosEvent::Crash { step, node } => write!(f, "crash@{step}:{node}"),
+            ChaosEvent::Slow { step, node, factor } => {
+                write!(f, "slow@{step}:{node}:{factor}")
+            }
+            ChaosEvent::Heal { step } => write!(f, "heal@{step}"),
+            ChaosEvent::Join { step } => write!(f, "join@{step}"),
+        }
+    }
+}
+
+/// What happens to a crashed node's pending residual state (DESIGN.md
+/// §15): DGC-style residual accumulation makes membership stateful —
+/// the departing node's unsent residuals are pending gradient mass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecoveryMode {
+    /// Hand the departing store to the next surviving neighbor (merge):
+    /// total pending mass is conserved exactly (modulo f32 addition).
+    #[default]
+    Handoff,
+    /// Drop the departing store and rescale every survivor's pending
+    /// state by N/(N−1), preserving the *expected* gradient sum.
+    DropRescale,
+}
+
+impl RecoveryMode {
+    /// Parse a mode name (`handoff` | `rescale`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "handoff" => Some(RecoveryMode::Handoff),
+            "rescale" | "drop-rescale" => Some(RecoveryMode::DropRescale),
+            _ => None,
+        }
+    }
+
+    /// Canonical grammar name.
+    pub fn name(self) -> &'static str {
+        match self {
+            RecoveryMode::Handoff => "handoff",
+            RecoveryMode::DropRescale => "rescale",
+        }
+    }
+}
+
+impl fmt::Display for RecoveryMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A deterministic fault-injection schedule: events sorted by step
+/// (stable within a step) plus the recovery mode.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ChaosPlan {
+    /// Scheduled events, sorted by [`ChaosEvent::step`].
+    pub events: Vec<ChaosEvent>,
+    /// Recovery protocol for crashed nodes' residual state.
+    pub mode: RecoveryMode,
+}
+
+impl ChaosPlan {
+    /// The empty (no-fault) plan — engines running it are bit-identical
+    /// to engines with no plan at all (pinned by
+    /// `chaos_equivalence.rs`).
+    pub fn none() -> Self {
+        ChaosPlan::default()
+    }
+
+    /// True when the plan schedules nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Largest step any event fires before (0 for an empty plan).
+    pub fn max_step(&self) -> usize {
+        self.events.iter().map(|e| e.step()).max().unwrap_or(0)
+    }
+
+    /// Parse the grammar (module docs). Events are stably sorted by
+    /// step, so `parse(plan.to_string()) == plan` for any valid plan.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut plan = ChaosPlan::default();
+        for raw in s.split(',') {
+            let tok = raw.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            if let Some(m) = tok.strip_prefix("mode=") {
+                plan.mode = RecoveryMode::parse(m)
+                    .ok_or_else(|| format!("chaos: unknown mode '{m}' (handoff|rescale)"))?;
+                continue;
+            }
+            let (kind, rest) = tok
+                .split_once('@')
+                .ok_or_else(|| format!("chaos: bad token '{tok}' (want kind@args)"))?;
+            let fields: Vec<&str> = rest.split(':').collect();
+            let num = |i: usize| -> Result<usize, String> {
+                fields
+                    .get(i)
+                    .and_then(|f| f.parse::<usize>().ok())
+                    .ok_or_else(|| format!("chaos: bad field {i} in '{tok}'"))
+            };
+            let ev = match (kind, fields.len()) {
+                ("crash", 2) => ChaosEvent::Crash {
+                    step: num(0)?,
+                    node: num(1)?,
+                },
+                ("slow", 3) => ChaosEvent::Slow {
+                    step: num(0)?,
+                    node: num(1)?,
+                    factor: fields[2]
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|f| f.is_finite() && *f >= 1.0)
+                        .ok_or_else(|| format!("chaos: bad factor in '{tok}' (want ≥ 1)"))?,
+                },
+                ("heal", 1) => ChaosEvent::Heal { step: num(0)? },
+                ("join", 1) => ChaosEvent::Join { step: num(0)? },
+                _ => return Err(format!("chaos: unknown event '{tok}'")),
+            };
+            plan.events.push(ev);
+        }
+        plan.events.sort_by_key(|e| e.step());
+        Ok(plan)
+    }
+
+    /// Seeded schedule over `steps` engine steps starting from `nodes`
+    /// ring members: a mix of crashes (membership floor 3 survivors),
+    /// stragglers (integral factors, so the grammar round-trips
+    /// exactly), heals, and joins (at most 2 above the starting size).
+    /// Same `(seed, nodes, steps)` ⇒ the same plan, always.
+    pub fn generate(seed: u64, nodes: usize, steps: usize) -> Self {
+        assert!(nodes >= 2, "chaos: need at least 2 nodes");
+        let mut rng = Rng::new(seed ^ 0xC4A0_55ED);
+        let mut n = nodes;
+        let mut events = Vec::new();
+        // Step 0 stays clean: every run gets one fault-free baseline
+        // step before the schedule starts firing.
+        for step in 1..steps {
+            let roll = rng.uniform();
+            if roll < 0.20 {
+                if n > 3 {
+                    events.push(ChaosEvent::Crash {
+                        step,
+                        node: rng.below(n),
+                    });
+                    n -= 1;
+                }
+            } else if roll < 0.45 {
+                events.push(ChaosEvent::Slow {
+                    step,
+                    node: rng.below(n),
+                    factor: (2 + rng.below(9)) as f64,
+                });
+            } else if roll < 0.55 {
+                events.push(ChaosEvent::Heal { step });
+            } else if roll < 0.70 && n < nodes + 2 {
+                events.push(ChaosEvent::Join { step });
+                n += 1;
+            }
+        }
+        ChaosPlan {
+            events,
+            mode: RecoveryMode::default(),
+        }
+    }
+
+    /// Plan from the `RINGIWP_CHAOS` grammar env var, if set. A bad
+    /// grammar panics with the parse error — a silently ignored chaos
+    /// plan would report fault-free results as fault-tolerant ones.
+    pub fn from_env() -> Option<Self> {
+        std::env::var("RINGIWP_CHAOS")
+            .ok()
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| Self::parse(&s).unwrap_or_else(|e| panic!("RINGIWP_CHAOS: {e}")))
+    }
+
+    /// Check the schedule against a starting ring size: every event's
+    /// node index must exist in the membership at its step, and a crash
+    /// must leave at least 2 survivors (the smallest ring the engines
+    /// support — `remove_node` refuses below 3 members).
+    pub fn validate(&self, nodes: usize) -> Result<(), String> {
+        let mut n = nodes;
+        for ev in &self.events {
+            match *ev {
+                ChaosEvent::Crash { step, node } => {
+                    if n <= 2 {
+                        return Err(format!(
+                            "chaos: crash@{step} would leave fewer than 2 nodes"
+                        ));
+                    }
+                    if node >= n {
+                        return Err(format!(
+                            "chaos: crash@{step}:{node} out of range (membership {n})"
+                        ));
+                    }
+                    n -= 1;
+                }
+                ChaosEvent::Slow { step, node, .. } => {
+                    if node >= n {
+                        return Err(format!(
+                            "chaos: slow@{step}:{node} out of range (membership {n})"
+                        ));
+                    }
+                }
+                ChaosEvent::Heal { .. } => {}
+                ChaosEvent::Join { .. } => n += 1,
+            }
+        }
+        Ok(())
+    }
+
+    /// Events firing before `step`, in schedule order.
+    pub fn events_at(&self, step: usize) -> impl Iterator<Item = &ChaosEvent> + '_ {
+        self.events.iter().filter(move |e| e.step() == step)
+    }
+}
+
+impl fmt::Display for ChaosPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "mode={}", self.mode)?;
+        for ev in &self.events {
+            write!(f, ",{ev}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A link degraded by `factor`: bandwidth divides, latency multiplies.
+/// Factor 1 returns the base link unchanged.
+pub fn degrade(base: LinkSpec, factor: f64) -> LinkSpec {
+    assert!(factor >= 1.0, "chaos: degrade factor must be ≥ 1");
+    LinkSpec::new(base.bandwidth_bps / factor, base.latency_s * factor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_roundtrips_through_display() {
+        let s = "mode=rescale,crash@3:1,slow@4:0:2.5,heal@6,join@7";
+        let plan = ChaosPlan::parse(s).unwrap();
+        assert_eq!(plan.mode, RecoveryMode::DropRescale);
+        assert_eq!(plan.events.len(), 4);
+        assert_eq!(ChaosPlan::parse(&plan.to_string()).unwrap(), plan);
+    }
+
+    #[test]
+    fn parse_sorts_events_stably_by_step() {
+        let plan = ChaosPlan::parse("heal@5,crash@2:0,slow@5:1:3").unwrap();
+        assert_eq!(plan.events[0], ChaosEvent::Crash { step: 2, node: 0 });
+        // Same-step order is the listed order (heal before slow).
+        assert_eq!(plan.events[1], ChaosEvent::Heal { step: 5 });
+        assert_eq!(
+            plan.events[2],
+            ChaosEvent::Slow {
+                step: 5,
+                node: 1,
+                factor: 3.0
+            }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "crash@3",          // missing node
+            "slow@1:0",         // missing factor
+            "slow@1:0:0.5",     // factor below 1
+            "mode=fancy",       // unknown mode
+            "reboot@4",         // unknown event
+            "crash@x:1",        // non-numeric step
+        ] {
+            assert!(ChaosPlan::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_valid() {
+        for seed in [0u64, 1, 7, 42, 12345] {
+            let a = ChaosPlan::generate(seed, 5, 12);
+            let b = ChaosPlan::generate(seed, 5, 12);
+            assert_eq!(a, b, "seed {seed} not deterministic");
+            a.validate(5).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            // The generated grammar round-trips (integral slow factors).
+            assert_eq!(ChaosPlan::parse(&a.to_string()).unwrap(), a);
+        }
+        assert_ne!(
+            ChaosPlan::generate(1, 5, 12),
+            ChaosPlan::generate(2, 5, 12),
+            "different seeds should differ"
+        );
+    }
+
+    #[test]
+    fn generate_leaves_step_zero_clean() {
+        for seed in 0..20u64 {
+            let plan = ChaosPlan::generate(seed, 5, 10);
+            assert!(plan.events_at(0).next().is_none(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn validate_tracks_membership() {
+        // 4 nodes: one crash ok (→3), a second refused (would leave 2
+        // pre-crash members, below the engine floor).
+        assert!(ChaosPlan::parse("crash@1:3").unwrap().validate(4).is_ok());
+        assert!(ChaosPlan::parse("crash@1:3,crash@2:2")
+            .unwrap()
+            .validate(4)
+            .is_err());
+        // A join lifts the membership back over the floor.
+        assert!(ChaosPlan::parse("crash@1:3,join@2,crash@3:2")
+            .unwrap()
+            .validate(4)
+            .is_ok());
+        // Node index must exist at its step.
+        assert!(ChaosPlan::parse("crash@1:0,slow@2:3:2")
+            .unwrap()
+            .validate(4)
+            .is_err());
+    }
+
+    #[test]
+    fn degrade_scales_both_axes() {
+        let base = LinkSpec::new(1000.0, 0.1);
+        let d = degrade(base, 4.0);
+        assert_eq!(d.bandwidth_bps, 250.0);
+        assert_eq!(d.latency_s, 0.4);
+        // ×1 is the identity.
+        let id = degrade(base, 1.0);
+        assert_eq!(id.bandwidth_bps, base.bandwidth_bps);
+        assert_eq!(id.latency_s, base.latency_s);
+    }
+
+    #[test]
+    fn events_at_filters_by_step() {
+        let plan = ChaosPlan::parse("crash@2:0,slow@2:1:2,heal@4").unwrap();
+        assert_eq!(plan.events_at(2).count(), 2);
+        assert_eq!(plan.events_at(3).count(), 0);
+        assert_eq!(plan.events_at(4).count(), 1);
+        assert_eq!(plan.max_step(), 4);
+        assert!(!plan.is_empty());
+        assert!(ChaosPlan::none().is_empty());
+    }
+}

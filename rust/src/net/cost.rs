@@ -25,18 +25,28 @@ use super::{LinkSpec, TopoKind};
 use crate::ring::chunk_ranges;
 use crate::sparse::{wire_bytes, WireFormat};
 
-/// Analytic byte/time model of one homogeneous `n`-node ring.
-#[derive(Debug, Clone, Copy)]
+/// Analytic byte/time model of one `n`-node ring — homogeneous by
+/// default, heterogeneous once a per-hop table is installed
+/// ([`CostModel::set_links`]).
+#[derive(Debug, Clone)]
 pub struct CostModel {
     nodes: usize,
     link: LinkSpec,
+    /// Per-hop link table (entry `i` = node `i`'s outgoing edge).
+    /// `None` prices every hop at `link` — bit-identical to the
+    /// pre-heterogeneous model; a uniform table equal to `link` is too.
+    links: Option<Vec<LinkSpec>>,
 }
 
 impl CostModel {
     /// Model an `n`-node ring (`n >= 2`) with homogeneous `link`s.
     pub fn new(nodes: usize, link: LinkSpec) -> Self {
         assert!(nodes >= 2, "a ring needs at least 2 nodes");
-        CostModel { nodes, link }
+        CostModel {
+            nodes,
+            link,
+            links: None,
+        }
     }
 
     /// Ring size N.
@@ -44,16 +54,48 @@ impl CostModel {
         self.nodes
     }
 
-    /// The link parameters this model prices against.
+    /// The base link parameters this model prices against (per-hop
+    /// overrides, when installed, take precedence — see
+    /// [`CostModel::set_links`]).
     pub fn link(&self) -> &LinkSpec {
         &self.link
     }
 
+    /// Install a per-hop link table (one [`LinkSpec`] per ring hop, in
+    /// node order) so predictions price heterogeneous rings — e.g. a
+    /// chaos straggler (`net::chaos`, DESIGN.md §15). Synchronous
+    /// rounds are paced by their slowest transfer, so one degraded hop
+    /// slows every prediction, exactly as it slows the simulated ring.
+    pub fn set_links(&mut self, links: Vec<LinkSpec>) {
+        assert_eq!(links.len(), self.nodes, "one link per ring hop");
+        self.links = Some(links);
+    }
+
+    /// The installed per-hop table, if any.
+    pub fn links(&self) -> Option<&[LinkSpec]> {
+        self.links.as_deref()
+    }
+
+    /// Transfer time of `bytes` on hop `i`'s link.
+    fn hop_time(&self, i: usize, bytes: u64) -> f64 {
+        match &self.links {
+            Some(ls) => ls[i % ls.len()].transfer_time(bytes),
+            None => self.link.transfer_time(bytes),
+        }
+    }
+
     /// Virtual seconds of one synchronous round whose slowest transfer
     /// moves `max_bytes` (the paper's "the limit of the system is
-    /// determined only by the slowest connection").
+    /// determined only by the slowest connection") — with a per-hop
+    /// table, the slowest *link* paces the round.
     pub fn round_seconds(&self, max_bytes: u64) -> f64 {
-        self.link.transfer_time(max_bytes)
+        match &self.links {
+            Some(ls) => ls
+                .iter()
+                .map(|l| l.transfer_time(max_bytes))
+                .fold(0.0f64, f64::max),
+            None => self.link.transfer_time(max_bytes),
+        }
     }
 
     /// Largest chunk (in bytes) of the balanced partition of `coords`
@@ -167,16 +209,16 @@ impl CostModel {
 
     /// Accumulate (total bytes, virtual seconds) over a round plan,
     /// pricing each round exactly as [`RingNet::round`](super::RingNet::round)
-    /// does: the round lasts as long as its slowest transfer, folded in
-    /// node order.
+    /// does: the round lasts as long as its slowest transfer (each
+    /// node's send on its own hop's link), folded in node order.
     fn run_plan(&self, plan: impl FnOnce(&mut dyn FnMut(&[u64]))) -> (u64, f64) {
         let mut bytes = 0u64;
         let mut t = 0.0f64;
-        let link = self.link;
         plan(&mut |sends: &[u64]| {
             let dur = sends
                 .iter()
-                .map(|&b| link.transfer_time(b))
+                .enumerate()
+                .map(|(i, &b)| self.hop_time(i, b))
                 .fold(0.0f64, f64::max);
             bytes += sends.iter().sum::<u64>();
             t += dur;
@@ -188,12 +230,15 @@ impl CostModel {
     /// under a **base** topology, in the exact simulation round order —
     /// the building block the pipelined predictions accumulate from.
     fn base_dense_rounds(&self, base: TopoKind, coords: usize, f: &mut dyn FnMut(u64, f64)) {
-        let link = self.link;
         match base {
             TopoKind::Flat => {
                 if coords == 0 {
                     return;
                 }
+                // Flat rounds are max-chunk paced; under a per-hop
+                // table the slowest link paces every round (the chunk
+                // rotation puts the max chunk on each hop in turn, so
+                // this stays the synchronous-round worst case).
                 let per_round = self.round_seconds(self.max_chunk_bytes(coords));
                 let bytes = coords as u64 * 4;
                 for _ in 0..2 * (self.nodes - 1) {
@@ -202,12 +247,20 @@ impl CostModel {
             }
             TopoKind::Hier { group } => {
                 hier_dense_plan(self.nodes, group, coords, &mut Vec::new(), |s| {
-                    let dur = s.iter().map(|&b| link.transfer_time(b)).fold(0.0f64, f64::max);
+                    let dur = s
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &b)| self.hop_time(i, b))
+                        .fold(0.0f64, f64::max);
                     f(s.iter().sum::<u64>(), dur);
                 })
             }
             TopoKind::Tree => tree_dense_plan(self.nodes, coords, &mut Vec::new(), |s| {
-                let dur = s.iter().map(|&b| link.transfer_time(b)).fold(0.0f64, f64::max);
+                let dur = s
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &b)| self.hop_time(i, b))
+                    .fold(0.0f64, f64::max);
                 f(s.iter().sum::<u64>(), dur);
             }),
             TopoKind::Pipeline { .. } => unreachable!("pipelines do not nest"),
@@ -217,7 +270,6 @@ impl CostModel {
     /// Per-round `(Σ bytes, duration)` stream of the blob spread under a
     /// base topology, in simulation round order.
     fn base_spread_rounds(&self, base: TopoKind, blob: u64, k: usize, f: &mut dyn FnMut(u64, f64)) {
-        let link = self.link;
         let k = k.min(self.nodes);
         match base {
             TopoKind::Flat => {
@@ -233,12 +285,20 @@ impl CostModel {
             }
             TopoKind::Hier { group } => {
                 hier_spread_plan(self.nodes, group, blob, k, &mut Vec::new(), |s| {
-                    let dur = s.iter().map(|&b| link.transfer_time(b)).fold(0.0f64, f64::max);
+                    let dur = s
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &b)| self.hop_time(i, b))
+                        .fold(0.0f64, f64::max);
                     f(s.iter().sum::<u64>(), dur);
                 })
             }
             TopoKind::Tree => tree_spread_plan(self.nodes, blob, k, &mut Vec::new(), |s| {
-                let dur = s.iter().map(|&b| link.transfer_time(b)).fold(0.0f64, f64::max);
+                let dur = s
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &b)| self.hop_time(i, b))
+                    .fold(0.0f64, f64::max);
                 f(s.iter().sum::<u64>(), dur);
             }),
             TopoKind::Pipeline { .. } => unreachable!("pipelines do not nest"),
@@ -787,6 +847,63 @@ mod tests {
                 "pipeline wrappers delegate gather spreads to the inner topology"
             );
         }
+    }
+
+    #[test]
+    fn uniform_link_table_prices_bit_identical_to_global_link() {
+        // The per-hop seam must be free when unused: a uniform table
+        // equal to the base link reproduces every prediction bit for
+        // bit (mirrors RingNet's uniform-table contract).
+        let n = 6;
+        let plain = CostModel::new(n, link());
+        let mut tabled = CostModel::new(n, link());
+        tabled.set_links(vec![link(); n]);
+        let coords = 12_345;
+        for topo in [TopoKind::Flat, TopoKind::Hier { group: 3 }, TopoKind::Tree] {
+            assert_eq!(
+                plain.topo_dense_seconds(topo, coords).to_bits(),
+                tabled.topo_dense_seconds(topo, coords).to_bits(),
+                "{topo:?} dense"
+            );
+            assert_eq!(
+                plain.topo_masked_seconds(topo, coords, 2, 400).to_bits(),
+                tabled.topo_masked_seconds(topo, coords, 2, 400).to_bits(),
+                "{topo:?} masked"
+            );
+            assert_eq!(
+                plain.masked_gather_seconds(topo, coords, 2, 400).to_bits(),
+                tabled.masked_gather_seconds(topo, coords, 2, 400).to_bits(),
+                "{topo:?} gather"
+            );
+        }
+    }
+
+    #[test]
+    fn straggler_hop_slows_every_prediction() {
+        // One degraded hop paces every synchronous round: all schedule
+        // predictions move up, none stay flat.
+        let n = 6;
+        let base = CostModel::new(n, link());
+        let mut slow = CostModel::new(n, link());
+        let mut ls = vec![link(); n];
+        ls[2] = LinkSpec::new(link().bandwidth_bps / 8.0, link().latency_s);
+        slow.set_links(ls);
+        let coords = 40_000;
+        for topo in [TopoKind::Flat, TopoKind::Hier { group: 3 }, TopoKind::Tree] {
+            assert!(
+                slow.topo_dense_seconds(topo, coords) > base.topo_dense_seconds(topo, coords),
+                "{topo:?} dense"
+            );
+            assert!(
+                slow.topo_masked_seconds(topo, coords, 2, 500)
+                    > base.topo_masked_seconds(topo, coords, 2, 500),
+                "{topo:?} masked"
+            );
+        }
+        assert!(
+            slow.pipelined_masked_seconds(TopoKind::Flat, 4, coords, 2, &[125, 125, 125, 125])
+                > base.pipelined_masked_seconds(TopoKind::Flat, 4, coords, 2, &[125, 125, 125, 125])
+        );
     }
 
     #[test]

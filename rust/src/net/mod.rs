@@ -19,6 +19,7 @@
 //! the same accounting through this module while moving actual frames
 //! over Unix domain sockets or loopback TCP.
 
+pub mod chaos;
 pub mod cost;
 pub mod link;
 pub mod topo;
@@ -26,6 +27,7 @@ pub mod trace;
 pub mod tuner;
 pub mod wire;
 
+pub use chaos::{ChaosEvent, ChaosPlan, RecoveryMode};
 pub use cost::CostModel;
 pub use link::LinkSpec;
 pub use topo::{PipeInner, TopoKind, Topology};

@@ -206,6 +206,17 @@ impl Tuner {
         self
     }
 
+    /// Re-price the grid against a per-hop link table (one [`LinkSpec`]
+    /// per ring hop, node order) — heterogeneous rings, e.g. a chaos
+    /// straggler (DESIGN.md §15). Every candidate is priced under the
+    /// same table, so a degraded hop penalizes round-heavy schedules
+    /// the most and can flip the pick. The incumbent and trace are
+    /// kept: hysteresis describes the observation stream, not the link
+    /// model.
+    pub fn set_links(&mut self, links: &[LinkSpec]) {
+        self.model.set_links(links.to_vec());
+    }
+
     /// The default grid: masked over `pipeline:<chunks>:<inner>` for
     /// chunks ∈ {1,2,4,8} × inner ∈ {flat, hier:g, tree} (12 rows;
     /// chunks=1 is the serial masked reference), plus dense / gather /
@@ -479,6 +490,54 @@ mod tests {
             held.trace().rows()[0].pick,
             free.trace().rows()[0].pick,
             "margin only affects steps after the first"
+        );
+    }
+
+    #[test]
+    fn straggler_hop_flips_the_pick() {
+        // Per-hop pricing (DESIGN.md §15): a high-latency hop charges
+        // every synchronous round, so round-heavy schedules (the flat
+        // ring's 2(N-1) dense rounds) fall behind round-light ones and
+        // the argmin moves off the uniform winner.
+        let coords = 40_000;
+        let link = LinkSpec::gigabit_ethernet();
+        let mut full = BitMask::zeros(coords);
+        for i in 0..coords {
+            full.set(i);
+        }
+        let obs = Observation {
+            coords,
+            k: 3,
+            shared: &full,
+        };
+        let mut uniform = Tuner::new(TunerMode::On, 6, link);
+        let d_u = uniform.decide(&obs);
+        let u_pick = *uniform.strategy(d_u.index);
+        assert!(
+            matches!(u_pick.topo, TopoKind::Flat),
+            "uniform full-density argmin should be flat dense, got {}",
+            u_pick.name()
+        );
+        let mut straggler = Tuner::new(TunerMode::On, 6, link);
+        let mut ls = vec![link; 6];
+        ls[2] = LinkSpec::new(link.bandwidth_bps, 0.5);
+        straggler.set_links(&ls);
+        let d_s = straggler.decide(&obs);
+        let s_pick = *straggler.strategy(d_s.index);
+        assert_ne!(
+            u_pick.name(),
+            s_pick.name(),
+            "a 0.5 s straggler hop must flip the pick"
+        );
+        // The flip is real routing-around, not a tie: under the
+        // straggler table the new pick beats the uniform winner by a
+        // wide margin.
+        assert!(
+            d_s.predicted_s < straggler.predict(d_u.index, &obs) * 0.5,
+            "pick {} at {:.3}s vs old winner at {:.3}s",
+            s_pick.name(),
+            d_s.predicted_s,
+            straggler.predict(d_u.index, &obs)
         );
     }
 

@@ -281,6 +281,17 @@ impl WireRing {
         self.epoch = epoch;
     }
 
+    /// Override the delivery-side read timeout ([`peer::READ_TIMEOUT`]
+    /// by default). A partitioned or dead rank then surfaces as a
+    /// typed [`WireError::Io`] after `d` instead of 30 s — the seam
+    /// the chaos/failure tests use to keep partition detection fast.
+    pub fn set_read_timeout(&self, d: Option<std::time::Duration>) -> Result<(), WireError> {
+        for r in &self.ctl_r {
+            r.set_read_timeout(d)?;
+        }
+        Ok(())
+    }
+
     /// Spread one frame from `origin` across all `n-1` ring edges,
     /// collect every relay's delivered copy in hop order, verify the
     /// copies byte-identical, and return the payload.

@@ -1,0 +1,243 @@
+//! Chaos determinism + zero-overhead golden suite (DESIGN.md §15).
+//!
+//! Two contracts:
+//!
+//! * **zero overhead** — an engine carrying the empty (no-fault)
+//!   [`ChaosPlan`] produces `StepReport`s bit-identical to an engine
+//!   with no plan at all, for every bench pipeline × topology: wiring
+//!   the chaos seam in must not move a single bit of a healthy run;
+//! * **determinism through faults** — the same seed and the same fault
+//!   schedule yield bit-identical report streams at any executor
+//!   parallelism and on either transport (the virtual simulator vs a
+//!   real socket ring that tears down and re-rings on every membership
+//!   event). Crashes, stragglers, joins, and heals are all replayed —
+//!   recovery itself must be deterministic, not just tolerated.
+//!
+//! Every socket-touching test runs under a hard watchdog: a deadlocked
+//! re-ring fails in bounded time instead of hanging the suite (CI adds
+//! an outer `timeout` as the backstop).
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+use ringiwp::compress::MethodSpec;
+use ringiwp::exp::bench::step_specs;
+use ringiwp::exp::simrun::{SimCfg, SimEngine, StepReport, WireEngine};
+use ringiwp::model::{LayerKind, ParamLayout};
+use ringiwp::net::{ChaosPlan, LinkSpec, RecoveryMode, TopoKind, TransportKind};
+
+const WATCHDOG: Duration = Duration::from_secs(180);
+
+/// Run `f` on its own thread and fail loudly if it outlives the
+/// watchdog; panics inside `f` propagate to the harness unchanged.
+fn with_watchdog<F>(label: &str, f: F)
+where
+    F: FnOnce() + Send + 'static,
+{
+    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    let worker = std::thread::Builder::new()
+        .name(format!("watchdog-{label}"))
+        .spawn(move || {
+            f();
+            let _ = tx.send(());
+        })
+        .expect("spawn watchdog worker");
+    match rx.recv_timeout(WATCHDOG) {
+        Ok(()) | Err(RecvTimeoutError::Disconnected) => {
+            if let Err(panic) = worker.join() {
+                std::panic::resume_unwind(panic);
+            }
+        }
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("{label}: still running after {WATCHDOG:?} — ring deadlock");
+        }
+    }
+}
+
+fn layout() -> ParamLayout {
+    ParamLayout::new(
+        "chaos_equiv",
+        vec![
+            ("conv".into(), vec![32, 16, 3, 3], LayerKind::Conv),
+            ("bn".into(), vec![67], LayerKind::BatchNorm),
+            ("fc".into(), vec![128, 10], LayerKind::Fc),
+        ],
+    )
+}
+
+fn cfg(spec: &str, nodes: usize, topology: TopoKind, chaos: Option<ChaosPlan>) -> SimCfg {
+    SimCfg {
+        nodes,
+        method: MethodSpec::parse(spec).expect("registry spec"),
+        link: LinkSpec::new(1e9, 1e-5),
+        topology,
+        transport: TransportKind::Sim,
+        wire_dir: None,
+        seed: 42,
+        steps_per_epoch: 3,
+        warmup_epochs: 1,
+        chaos,
+        ..Default::default()
+    }
+}
+
+fn assert_reports_identical(ctx: &str, step: usize, a: &StepReport, b: &StepReport) {
+    assert_eq!(
+        a.wire_bytes_per_node, b.wire_bytes_per_node,
+        "{ctx} step {step}: wire_bytes_per_node"
+    );
+    assert_eq!(a.support_nnz, b.support_nnz, "{ctx} step {step}: support_nnz");
+    assert_eq!(
+        a.density.to_bits(),
+        b.density.to_bits(),
+        "{ctx} step {step}: density ({} vs {})",
+        a.density,
+        b.density
+    );
+    assert_eq!(
+        a.seconds.to_bits(),
+        b.seconds.to_bits(),
+        "{ctx} step {step}: seconds ({} vs {})",
+        a.seconds,
+        b.seconds
+    );
+    assert_eq!(
+        a.wire_seconds.to_bits(),
+        b.wire_seconds.to_bits(),
+        "{ctx} step {step}: wire_seconds ({} vs {})",
+        a.wire_seconds,
+        b.wire_seconds
+    );
+}
+
+/// The sweep's fault schedule: one crash, one straggler, one join, one
+/// heal — every recovery path fires within 6 steps on a 5-node ring.
+fn plan(mode: RecoveryMode) -> ChaosPlan {
+    let mut p = ChaosPlan::parse("crash@1:1,slow@2:0:4,join@4,heal@5").expect("static plan");
+    p.mode = mode;
+    p
+}
+
+fn topologies() -> [TopoKind; 4] {
+    [
+        TopoKind::Flat,
+        TopoKind::Hier { group: 2 },
+        TopoKind::Tree,
+        TopoKind::parse("pipeline:2:flat").unwrap(),
+    ]
+}
+
+#[test]
+fn no_fault_plan_is_bit_identical_for_every_spec_and_topology() {
+    // The zero-overhead contract over the full bench matrix: carrying
+    // an empty plan must not perturb RNG streams, link tables, or any
+    // report bit.
+    for spec in step_specs() {
+        for topo in topologies() {
+            let ctx = format!("{}/{}", spec.name(), topo.name());
+            let mut bare = SimEngine::new(layout(), cfg(&spec.name(), 5, topo, None));
+            let mut empty =
+                SimEngine::new(layout(), cfg(&spec.name(), 5, topo, Some(ChaosPlan::none())));
+            for s in 0..3 {
+                let a = bare.step(s);
+                let b = empty.step(s);
+                assert_reports_identical(&ctx, s, &a, &b);
+            }
+        }
+    }
+}
+
+#[test]
+fn faulted_streams_are_bit_identical_across_parallelism() {
+    // Same seed + same schedule at executor widths 1 (the sequential
+    // oracle), 2, and 4: recovery re-rings must preserve the
+    // parallelism-independence contract (DESIGN.md §4).
+    for mode in [RecoveryMode::Handoff, RecoveryMode::DropRescale] {
+        for spec in ["iwp:fixed", "dgc:topk"] {
+            let run = |par: usize| -> Vec<StepReport> {
+                let mut c = cfg(spec, 5, TopoKind::Flat, Some(plan(mode)));
+                c.parallelism = par;
+                let mut e = SimEngine::new(layout(), c);
+                (0..6).map(|s| e.step(s)).collect()
+            };
+            let base = run(1);
+            for par in [2usize, 4] {
+                let wide = run(par);
+                for (s, (a, b)) in base.iter().zip(&wide).enumerate() {
+                    assert_reports_identical(&format!("{spec}/{}/par{par}", mode.name()), s, a, b);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn faulted_runs_are_reproducible_same_seed() {
+    // `chaos --seed N` twice ⇒ byte-identical output, engine edition:
+    // generated schedules replayed twice produce identical streams.
+    for seed in [7u64, 11] {
+        let mut p = ChaosPlan::generate(seed, 5, 8);
+        p.mode = RecoveryMode::DropRescale;
+        let run = || -> Vec<StepReport> {
+            let mut e = SimEngine::new(layout(), cfg("iwp:layerwise", 5, TopoKind::Flat, Some(p.clone())));
+            (0..8).map(|s| e.step(s)).collect()
+        };
+        let a = run();
+        let b = run();
+        for (s, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_reports_identical(&format!("seed{seed}"), s, x, y);
+        }
+    }
+}
+
+#[test]
+fn uds_re_ring_matches_sim_on_every_topology_and_mode() {
+    // A mid-run crash on every topology, both recovery modes: the
+    // socket engine tears its ring down, re-rings the survivors, and
+    // must still reproduce the virtual oracle bit for bit.
+    with_watchdog("uds-re-ring", || {
+        for mode in [RecoveryMode::Handoff, RecoveryMode::DropRescale] {
+            for topo in topologies() {
+                let ctx = format!("iwp:fixed/{}/{}", topo.name(), mode.name());
+                let mut sim =
+                    SimEngine::new(layout(), cfg("iwp:fixed", 5, topo, Some(plan(mode))));
+                let mut c = cfg("iwp:fixed", 5, topo, Some(plan(mode)));
+                c.transport = TransportKind::Uds;
+                let mut wire = WireEngine::new(layout(), c)
+                    .unwrap_or_else(|e| panic!("{ctx}: wire construction: {e}"));
+                for s in 0..6 {
+                    let a = sim.step(s);
+                    let w = wire.step(s);
+                    assert_reports_identical(&ctx, s, &a, &w.report);
+                    assert!(w.real_bytes > 0, "{ctx} step {s}: no real bytes");
+                }
+                assert_eq!(wire.ring().n(), 5, "crash then join lands back on 5 ranks");
+                wire.shutdown().unwrap_or_else(|e| panic!("{ctx}: shutdown: {e}"));
+            }
+        }
+    });
+}
+
+#[test]
+fn uds_re_ring_matches_sim_across_the_spec_sweep() {
+    // Every bench pipeline through the full fault schedule on the flat
+    // ring — per-node (DGC) and shared-mask state migration, ternary
+    // encoders, and the dense baseline all re-ring deterministically.
+    with_watchdog("uds-specs", || {
+        for spec in step_specs() {
+            let ctx = format!("{}/chaos", spec.name());
+            let p = plan(RecoveryMode::Handoff);
+            let mut sim = SimEngine::new(layout(), cfg(&spec.name(), 5, TopoKind::Flat, Some(p.clone())));
+            let mut c = cfg(&spec.name(), 5, TopoKind::Flat, Some(p));
+            c.transport = TransportKind::Uds;
+            let mut wire = WireEngine::new(layout(), c)
+                .unwrap_or_else(|e| panic!("{ctx}: wire construction: {e}"));
+            for s in 0..6 {
+                let a = sim.step(s);
+                let w = wire.step(s);
+                assert_reports_identical(&ctx, s, &a, &w.report);
+            }
+            wire.shutdown().unwrap_or_else(|e| panic!("{ctx}: shutdown: {e}"));
+        }
+    });
+}

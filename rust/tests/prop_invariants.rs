@@ -3,10 +3,13 @@
 //! net (no PJRT needed).
 
 use ringiwp::compress::importance::{score_and_mask, EPS};
+use ringiwp::compress::pipeline;
 use ringiwp::compress::residual::ResidualStore;
 use ringiwp::compress::terngrad::TernGrad;
+use ringiwp::compress::{Compressor, MethodSpec, StageCfg};
+use ringiwp::exp::simrun::{SimCfg, SimEngine};
 use ringiwp::model::{LayerKind, ParamLayout};
-use ringiwp::net::{LinkSpec, RingNet};
+use ringiwp::net::{LinkSpec, RecoveryMode, RingNet};
 use ringiwp::ring;
 use ringiwp::sparse::{BitMask, SparseVec};
 use ringiwp::util::prop::forall;
@@ -155,6 +158,189 @@ fn score_and_mask_density_monotone_in_threshold() {
             prev = mask.count();
         }
     });
+}
+
+// ---- recovery algebra (DESIGN.md §15) ----------------------------------
+
+/// Small engine config shared by the elastic-membership properties.
+fn elastic_cfg(spec: &str, nodes: usize, seed: u64) -> SimCfg {
+    SimCfg {
+        nodes,
+        method: MethodSpec::parse(spec).expect("registry spec"),
+        link: LinkSpec::new(1e9, 0.0),
+        seed,
+        steps_per_epoch: 2,
+        warmup_epochs: 0,
+        chaos: None,
+        ..Default::default()
+    }
+}
+
+fn elastic_layout() -> ParamLayout {
+    ParamLayout::new(
+        "elastic",
+        vec![
+            ("bn".into(), vec![16], LayerKind::BatchNorm),
+            ("fc".into(), vec![64, 10], LayerKind::Fc),
+        ],
+    )
+}
+
+#[test]
+fn survivor_handoff_matches_a_fresh_smaller_ring_given_the_state() {
+    // The re-ring contract (DESIGN.md §15): crashing node k out of an
+    // n-ring under handoff must leave survivors bit-identical to a
+    // *fresh* (n−1)-ring that was handed the survivor state directly —
+    // departing store merged into the post-removal ring successor at
+    // slot k % (n−1). If the two ever diverge by a bit, recovery has
+    // hidden state the migration seam does not capture.
+    forall("handoff == fresh (n-1)-ring + handed state", 20, |g| {
+        let n = g.usize_in(3, 6);
+        let node = g.usize_in(0, n);
+        let len = g.usize_in(16, 200);
+        let layout = ParamLayout::new("h", vec![("fc".into(), vec![len], LayerKind::Fc)]);
+        let spec_name = g.choice(&["iwp:fixed", "iwp:layerwise", "dgc:topk"]);
+        let spec = MethodSpec::parse(spec_name).unwrap();
+        let sc = |nodes: usize| StageCfg {
+            nodes,
+            state_nodes: nodes,
+            threshold: 0.05,
+            beta: 0.002,
+            c: 1.0,
+            mask_nodes: nodes.min(2),
+            random_select: false,
+            momentum: 0.9,
+            dgc_density: 0.05,
+            warmup_epochs: 0,
+        };
+        // Two accumulations so the velocity state is non-trivial too —
+        // merge_from folds both res and vel, and a handoff that dropped
+        // velocity would still pass a pending-only single-step check.
+        let stores: Vec<ResidualStore> = (0..n)
+            .map(|_| {
+                let mut s = ResidualStore::new(len, 0.9);
+                s.accumulate(&g.vec_normal(len, 0.0, 1.0));
+                s.accumulate(&g.vec_normal(len, 0.0, 1.0));
+                s
+            })
+            .collect();
+        let mut crashed = pipeline::build(spec, &sc(n), &layout);
+        for (i, s) in stores.iter().enumerate() {
+            crashed.install_node(i, s.clone());
+        }
+        crashed.remove_node(node, RecoveryMode::Handoff, n - 1, n - 1);
+
+        let mut handed = stores;
+        let departing = handed.remove(node);
+        let succ = node % (n - 1);
+        handed[succ].merge_from(&departing);
+        let mut fresh = pipeline::build(spec, &sc(n - 1), &layout);
+        for (i, s) in handed.into_iter().enumerate() {
+            fresh.install_node(i, s);
+        }
+
+        for i in 0..n - 1 {
+            let a = crashed.pending(i).expect("stateful pipeline");
+            let b = fresh.pending(i).expect("stateful pipeline");
+            for (j, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{spec_name} n={n} crash@{node}: node {i} coord {j} ({x} vs {y})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn drop_and_rescale_preserves_gradient_mass() {
+    // DropRescale replaces the departed node's contribution by scaling
+    // every survivor by N/(N−1) in f32. Two guarantees, both documented
+    // in DESIGN.md §15: (a) per coordinate the survivor's pending value
+    // is *bitwise* old * (N as f32 / (N−1) as f32) — one f32 multiply,
+    // replicated here exactly; (b) the f64 sum of survivors therefore
+    // lands on (Σbefore − departed)·N/(N−1) to within one rounding step
+    // per coordinate, bounded by 1e-4·(1 + Σ|pending|).
+    forall("rescale: per-coord bitwise, sums to tolerance", 10, |g| {
+        let n = 4; // == SimEngine::SIM_NODE_CAP: every member has a store
+        let node = g.usize_in(0, n);
+        let steps = g.usize_in(1, 4);
+        let spec = g.choice(&["iwp:fixed", "dgc:topk"]);
+        let mut e = SimEngine::new(elastic_layout(), elastic_cfg(spec, n, 42 + g.case as u64));
+        for s in 0..steps {
+            e.step(s);
+        }
+        let before: Vec<Vec<f32>> =
+            (0..n).map(|i| e.pending(i).expect("stateful").to_vec()).collect();
+        e.remove_node(node, RecoveryMode::DropRescale);
+
+        let factor = n as f32 / (n - 1) as f32;
+        let mut sum_after = 0.0f64;
+        let mut scale = 0.0f64;
+        for i in 0..n - 1 {
+            let pre = &before[if i < node { i } else { i + 1 }];
+            let post = e.pending(i).expect("stateful");
+            for (j, (&x, &y)) in pre.iter().zip(post).enumerate() {
+                assert_eq!(
+                    (x * factor).to_bits(),
+                    y.to_bits(),
+                    "{spec} crash@{node}: node {i} coord {j} not a single f32 rescale"
+                );
+                sum_after += y as f64;
+                scale += x.abs() as f64;
+            }
+        }
+        let sum_before: f64 = (0..n)
+            .filter(|&i| i != node)
+            .map(|i| before[i].iter().map(|&v| v as f64).sum::<f64>())
+            .sum();
+        let expect = sum_before * (n as f64) / ((n - 1) as f64);
+        let tol = 1e-4 * (1.0 + scale);
+        assert!(
+            (sum_after - expect).abs() <= tol,
+            "{spec} crash@{node}: Σafter {sum_after} vs {expect} (tol {tol})"
+        );
+    });
+}
+
+#[test]
+fn join_after_warmup_never_resurrects_stale_residuals() {
+    // A mid-run join materializes a zeroed store: bit-exact zeros for
+    // the newcomer, survivors untouched bit for bit, and the enlarged
+    // ring keeps stepping. The ring had already finished its warm-up
+    // schedule — a resurrection bug would show up as non-zero pending
+    // on the joiner (stale state from a previous member) right here.
+    for spec in ["iwp:fixed", "dgc:topk"] {
+        // nodes = 3 < SIM_NODE_CAP so the join materializes a 4th store.
+        let mut c = elastic_cfg(spec, 3, 42);
+        c.warmup_epochs = 2;
+        let mut e = SimEngine::new(elastic_layout(), c);
+        for s in 0..5 {
+            e.step(s); // epochs 0–1 are warm-up; step 4 is past it
+        }
+        let before: Vec<Vec<u32>> = (0..3)
+            .map(|i| e.pending(i).expect("stateful").iter().map(|v| v.to_bits()).collect())
+            .collect();
+        e.add_node(5);
+        let joined = e.pending(3).expect("joiner store materialized");
+        assert!(
+            joined.iter().all(|&v| v.to_bits() == 0),
+            "{spec}: joiner resurrected stale residuals"
+        );
+        for (i, bits) in before.iter().enumerate() {
+            let now = e.pending(i).expect("stateful");
+            assert!(
+                now.iter().map(|v| v.to_bits()).eq(bits.iter().copied()),
+                "{spec}: join perturbed survivor {i}"
+            );
+        }
+        let r = e.step(5);
+        assert!(
+            r.density.is_finite() && r.seconds > 0.0,
+            "{spec}: enlarged ring failed to step"
+        );
+    }
 }
 
 #[test]

@@ -14,13 +14,13 @@
 //! (CI adds an outer `timeout` as the backstop).
 
 use std::sync::mpsc::RecvTimeoutError;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use ringiwp::exp::bench::step_specs;
 use ringiwp::exp::simrun::{SimCfg, SimEngine, StepReport, WireEngine};
 use ringiwp::model::{LayerKind, ParamLayout};
-use ringiwp::net::wire::{serve_rank, Frame, Kind, WireStream};
-use ringiwp::net::{LinkSpec, TopoKind, TransportKind, WireError};
+use ringiwp::net::wire::{peer, serve_rank, Frame, Kind, WireStream};
+use ringiwp::net::{LinkSpec, TopoKind, TransportKind, WireError, WireRing};
 
 /// Hard per-test deadline: generous next to the observed runtime,
 /// tiny next to a hung socket read (whose own timeout is 30 s).
@@ -279,5 +279,122 @@ fn wire_real_seconds_and_bytes_sit_next_to_virtual_accounting() {
             w.report.wire_bytes_per_node
         );
         wire.shutdown().unwrap();
+    });
+}
+
+// ---- failure modes (DESIGN.md §15) -------------------------------------
+
+#[test]
+fn mid_frame_peer_death_is_a_typed_error_not_a_hang() {
+    // A rank crashing partway through a frame write: the survivor's
+    // next read off the real socket must come back as the typed
+    // `WireError::Io` UnexpectedEof — cut inside the header and inside
+    // the payload both — never a hang or a partially-decoded frame.
+    with_watchdog("mid-frame-death", || {
+        let full = Frame::new(Kind::Dense, 0, 1, 0, vec![0xAB; 64]).encode();
+        for cut in [7usize, full.len() - 16] {
+            let (mut a, mut b) = WireStream::pair(TransportKind::Uds).unwrap();
+            std::io::Write::write_all(&mut a, &full[..cut]).unwrap();
+            std::io::Write::flush(&mut a).unwrap();
+            drop(a); // the peer dies mid-frame
+            match Frame::read_from(&mut b) {
+                Err(WireError::Io(e)) => assert_eq!(
+                    e.kind(),
+                    std::io::ErrorKind::UnexpectedEof,
+                    "cut at {cut}/{}",
+                    full.len()
+                ),
+                other => panic!("cut at {cut}: expected typed Io error, got {other:?}"),
+            }
+        }
+    });
+}
+
+#[test]
+fn partition_detection_budget_is_pinned_and_overridable() {
+    // The documented failure-detection budget: both wire timeouts sit
+    // at 30 s (DESIGN.md §13). Changing either is a protocol decision —
+    // this pin makes it a deliberate one.
+    assert_eq!(peer::READ_TIMEOUT, Duration::from_secs(30));
+    assert_eq!(peer::CONNECT_TIMEOUT, Duration::from_secs(30));
+    with_watchdog("partition", || {
+        // A partitioned peer: connected, alive, but never sends. With
+        // the timeout shortened through the override seam, the
+        // survivor's read returns typed within the budget instead of
+        // deadlocking — the property the chaos harness leans on.
+        let (a, mut b) = WireStream::pair(TransportKind::Uds).unwrap();
+        b.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        let start = Instant::now();
+        match Frame::read_from(&mut b) {
+            Err(WireError::Io(e)) => assert!(
+                matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ),
+                "unexpected error kind {:?}",
+                e.kind()
+            ),
+            other => panic!("expected typed Io timeout, got {other:?}"),
+        }
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "partition detection took {:?} — not bounded by the override",
+            start.elapsed()
+        );
+        drop(a);
+    });
+}
+
+#[test]
+fn read_timeout_seam_arms_a_live_ring_without_perturbing_it() {
+    // `WireRing::set_read_timeout` reaches every delivery socket: a
+    // healthy ring still completes its exchanges with a 250 ms budget
+    // armed (loopback is far faster), and restoring the default leaves
+    // the ring shut-downable. Guards the seam the failure tests and
+    // chaos runs use against silently arming only some readers.
+    with_watchdog("ring-timeout", || {
+        let links = vec![LinkSpec::new(1e9, 0.0); 3];
+        let mut ring = WireRing::new_in_process(TransportKind::Uds, links).unwrap();
+        ring.set_read_timeout(Some(Duration::from_millis(250))).unwrap();
+        ring.begin_step(0);
+        let v: Vec<f32> = (0..19).map(|i| i as f32 * 0.25 - 2.0).collect();
+        assert_eq!(ring.exchange_dense(&v).unwrap(), 19);
+        ring.set_read_timeout(Some(peer::READ_TIMEOUT)).unwrap();
+        ring.shutdown().unwrap();
+    });
+}
+
+#[test]
+fn shutdown_is_idempotent_and_survives_a_dead_peer() {
+    with_watchdog("shutdown-idempotent", || {
+        // Double shutdown on a healthy ring is a no-op, not an error —
+        // `WireEngine` re-rings by shutting down mid-run and its Drop
+        // fires shutdown again at the end.
+        let mut ring =
+            WireRing::new_in_process(TransportKind::Uds, vec![LinkSpec::new(1e9, 0.0); 3])
+                .unwrap();
+        ring.shutdown().unwrap();
+        ring.shutdown().unwrap();
+        // Sending Shutdown toward a relay whose reader already died:
+        // the write returns promptly — Ok while the kernel buffers,
+        // or the typed hangup once it notices — never a panic (Rust
+        // masks SIGPIPE) and never a hang. Repeating it is harmless.
+        let (mut a, b) = WireStream::pair(TransportKind::Uds).unwrap();
+        drop(b);
+        let bytes = Frame::new(Kind::Shutdown, 0, 0, 0, Vec::new()).encode();
+        for attempt in 0..2 {
+            let r = std::io::Write::write_all(&mut a, &bytes)
+                .and_then(|_| std::io::Write::flush(&mut a));
+            if let Err(e) = r {
+                assert!(
+                    matches!(
+                        e.kind(),
+                        std::io::ErrorKind::BrokenPipe | std::io::ErrorKind::ConnectionReset
+                    ),
+                    "attempt {attempt}: unexpected error kind {:?}",
+                    e.kind()
+                );
+            }
+        }
     });
 }

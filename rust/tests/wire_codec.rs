@@ -311,6 +311,32 @@ fn random_garbage_never_panics_the_frame_decoder() {
 }
 
 #[test]
+fn stream_ending_mid_frame_is_typed_io_at_every_cut() {
+    // A peer dying mid-frame (DESIGN.md §15): the reader sees the
+    // stream end partway through a header or payload. Every cut —
+    // empty stream, mid-header, exact header boundary, mid-payload —
+    // must surface as the typed `WireError::Io` UnexpectedEof a
+    // survivor can act on, never a panic or a partial frame.
+    let full = Frame::new(Kind::Masked, 0, 2, 7, vec![0xCD; 33]).encode();
+    for cut in [0, 1, HEADER_LEN / 2, HEADER_LEN, HEADER_LEN + 5, full.len() - 1] {
+        let mut cursor = std::io::Cursor::new(full[..cut].to_vec());
+        match Frame::read_from(&mut cursor) {
+            Err(WireError::Io(e)) => assert_eq!(
+                e.kind(),
+                std::io::ErrorKind::UnexpectedEof,
+                "cut at {cut}/{}",
+                full.len()
+            ),
+            other => panic!("cut at {cut}: expected typed Io error, got {other:?}"),
+        }
+    }
+    // And the uncut stream still parses — the cuts, not the frame,
+    // were the problem.
+    let mut cursor = std::io::Cursor::new(full);
+    assert_eq!(Frame::read_from(&mut cursor).unwrap().payload.len(), 33);
+}
+
+#[test]
 fn oversized_payload_len_is_rejected_before_allocation() {
     let mut bytes = Frame::new(Kind::Dense, 0, 0, 0, Vec::new()).encode();
     bytes[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
