@@ -110,6 +110,13 @@ pub struct SimCtx<'a> {
     /// blobs — is encoded, spread over actual sockets, and only the
     /// *decoded* copy feeds the computation below, so the virtual
     /// accounting stays bit-identical iff the wire is faithful.
+    /// On a v2 ring (DESIGN.md §16) "faithful" is enforced, not
+    /// assumed: every frame carries a CRC trailer and injected wire
+    /// faults are repaired by the per-edge ARQ before a payload ever
+    /// reaches this seam, so the `.expect("wire … failed")` panics
+    /// below only fire on *unrecoverable* schedules — their payload is
+    /// the typed [`crate::net::WireError`] Display (e.g. `retry budget
+    /// exhausted after 4 attempts`), which `main` maps to exit 3.
     pub wire: Option<&'a mut WireRing>,
     /// Online autotuner (DESIGN.md §14). When set, shared-mask
     /// pipelines feed it the observed support each step; in

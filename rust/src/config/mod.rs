@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::compress::{Method, MethodSpec};
-use crate::net::{ChaosPlan, RecoveryMode, TopoKind, TransportKind, TunerMode};
+use crate::net::{ChaosPlan, FaultPlan, RecoveryMode, TopoKind, TransportKind, TunerMode};
 use crate::util::cli::Args;
 
 /// Everything a training / experiment run needs.
@@ -80,6 +80,17 @@ pub struct Config {
     /// Only `ringiwp chaos` executes plans — `train`/`exp`/`bench`
     /// refuse them rather than silently reporting faulted results.
     pub chaos: Option<ChaosPlan>,
+    /// Socket read/connect deadline in milliseconds for the real wire
+    /// ring (`net::wire`, DESIGN.md §16): `--wire-timeout-ms N` |
+    /// `RINGIWP_WIRE_TIMEOUT_MS`. The ARQ retransmit and ACK deadlines
+    /// derive from it, so shrinking it speeds up drop-fault recovery in
+    /// tests. Must be > 0; default 30 000 (the pre-§16 constant).
+    pub wire_timeout_ms: u64,
+    /// Seeded byte-level wire-fault schedule (`net::wire::fault`,
+    /// DESIGN.md §16): `--wire-faults <grammar>` | `RINGIWP_WIRE_FAULTS`.
+    /// Overrides any wire tokens riding in `--chaos`. Like chaos plans,
+    /// only `ringiwp chaos` executes one — `train`/`exp`/`bench` refuse.
+    pub wire_faults: Option<FaultPlan>,
     /// Artifact directory (`make artifacts` output).
     pub artifacts_dir: String,
     /// Output directory for CSVs and logs.
@@ -113,6 +124,8 @@ impl Default for Config {
             transport: TransportKind::from_env(),
             tuner: TunerMode::from_env(),
             chaos: ChaosPlan::from_env(),
+            wire_timeout_ms: crate::net::wire::wire_timeout_from_env(),
+            wire_faults: FaultPlan::from_env(),
             artifacts_dir: "artifacts".into(),
             out_dir: "results".into(),
         }
@@ -175,6 +188,10 @@ impl Config {
                 .ok_or_else(|| anyhow::anyhow!("--chaos-mode expects handoff|rescale"))?;
             self.chaos.get_or_insert_with(ChaosPlan::none).mode = mode;
         }
+        self.wire_timeout_ms = a.u64_or("wire-timeout-ms", self.wire_timeout_ms);
+        if let Some(g) = a.str_opt("wire-faults") {
+            self.wire_faults = Some(FaultPlan::parse(g).map_err(|e| anyhow::anyhow!(e))?);
+        }
         self.artifacts_dir = a.str_or("artifacts", &self.artifacts_dir);
         self.out_dir = a.str_or("out", &self.out_dir);
         self.validate()?;
@@ -210,6 +227,10 @@ impl Config {
                 "chaos" => {
                     self.chaos = Some(ChaosPlan::parse(v).map_err(|e| anyhow::anyhow!(e))?)
                 }
+                "wire_timeout_ms" => self.wire_timeout_ms = v.parse()?,
+                "wire_faults" => {
+                    self.wire_faults = Some(FaultPlan::parse(v).map_err(|e| anyhow::anyhow!(e))?)
+                }
                 "artifacts_dir" => self.artifacts_dir = v.clone(),
                 "out_dir" => self.out_dir = v.clone(),
                 other => anyhow::bail!("unknown config key `{other}`"),
@@ -239,6 +260,10 @@ impl Config {
         anyhow::ensure!(self.parallelism >= 1, "parallelism must be >= 1");
         if let Some(p) = &self.chaos {
             p.validate(self.nodes).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        anyhow::ensure!(self.wire_timeout_ms > 0, "wire_timeout_ms must be > 0");
+        if let Some(p) = &self.wire_faults {
+            p.validate().map_err(|e| anyhow::anyhow!(e))?;
         }
         self.method.validate()?;
         self.topology.validate()?;
@@ -490,6 +515,37 @@ mod tests {
         // The config-file key flows through the same parser.
         let kv = parse_kv("chaos = crash@3:0").unwrap();
         assert!(Config::default().apply_kv(&kv).unwrap().chaos.is_some());
+    }
+
+    #[test]
+    fn wire_knobs_flow_and_validate() {
+        let a = Args::parse(
+            ["chaos", "--wire-timeout-ms", "5000", "--wire-faults", "seed=7,flip@0:1,dup@2:0"]
+                .into_iter()
+                .map(String::from),
+        );
+        let cfg = Config::default().apply_args(&a).unwrap();
+        assert_eq!(cfg.wire_timeout_ms, 5_000);
+        let plan = cfg.wire_faults.unwrap();
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(plan.seed, 7);
+        // Config-file keys flow through the same parsers.
+        let kv = parse_kv("wire_timeout_ms = 750\nwire_faults = reset@1:0").unwrap();
+        let cfg = Config::default().apply_kv(&kv).unwrap();
+        assert_eq!(cfg.wire_timeout_ms, 750);
+        assert!(cfg.wire_faults.is_some());
+        // A zero deadline and an out-of-range retry budget are rejected.
+        let c = Config {
+            wire_timeout_ms: 0,
+            ..Config::default()
+        };
+        assert!(c.validate().is_err());
+        let a = Args::parse(
+            ["chaos", "--wire-faults", "attempts=9,flip@0:0"]
+                .into_iter()
+                .map(String::from),
+        );
+        assert!(Config::default().apply_args(&a).is_err());
     }
 
     #[test]

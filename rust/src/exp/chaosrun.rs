@@ -24,7 +24,11 @@ use crate::compress::MethodSpec;
 use crate::exp::bench::step_specs;
 use crate::exp::simrun::{SimCfg, SimEngine, StepReport, WireEngine};
 use crate::model::{LayerKind, ParamLayout};
-use crate::net::{ChaosEvent, ChaosPlan, LinkSpec, RecoveryMode, TopoKind, TransportKind, TunerMode};
+use crate::net::{
+    ChaosEvent, ChaosPlan, FaultPlan, LinkSpec, RecoveryMode, RecoveryStats, TopoKind,
+    TransportKind, TunerMode,
+};
+use crate::util::exit::ExitClass;
 
 /// Sweep configuration (the `ringiwp chaos` flag surface).
 #[derive(Debug, Clone)]
@@ -46,6 +50,13 @@ pub struct ChaosCfg {
     pub transport: TransportKind,
     /// Engine seed (gradient + selection streams).
     pub seed: u64,
+    /// Wire connect/read deadline in milliseconds (`--wire-timeout-ms`);
+    /// sim arms ignore it.
+    pub wire_timeout_ms: u64,
+    /// Explicit wire-fault schedule (`--wire-faults`, default
+    /// `RINGIWP_WIRE_FAULTS`). When set it overrides any wire tokens
+    /// riding in the chaos plan; sim arms ignore it.
+    pub wire_faults: Option<FaultPlan>,
 }
 
 impl Default for ChaosCfg {
@@ -59,6 +70,8 @@ impl Default for ChaosCfg {
             topologies: sweep_topologies().to_vec(),
             transport: TransportKind::Sim,
             seed: 17,
+            wire_timeout_ms: crate::net::wire::wire_timeout_from_env(),
+            wire_faults: FaultPlan::from_env(),
         }
     }
 }
@@ -99,6 +112,13 @@ pub struct ChaosSummary {
     /// Single-crash recovery events whose conservation invariant was
     /// checked (pipelines without pending state contribute none).
     pub recovery_events: usize,
+    /// Wire-level recovery totals summed over every swept configuration
+    /// (DESIGN.md §16). All-zero on sim transports and on fault-free
+    /// wire sweeps; deterministic for a given plan, so it is part of
+    /// the goldenable output. Kept *out* of [`ChaosSummary::digest`] —
+    /// the digest compares payload results across transports, and the
+    /// sim oracle does no wire recovery by construction.
+    pub wire_recovery: RecoveryStats,
 }
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
@@ -154,6 +174,26 @@ impl Engine {
             Engine::Wire(w) => w.step(step).report,
         }
     }
+
+    /// Tear a wire engine's ring down and return the final (exact)
+    /// recovery totals; sim engines have nothing to reap.
+    fn finish(&mut self) -> anyhow::Result<RecoveryStats> {
+        match self {
+            Engine::Sim(_) => Ok(RecoveryStats::default()),
+            Engine::Wire(w) => {
+                w.shutdown()?;
+                Ok(w.recovery_stats())
+            }
+        }
+    }
+}
+
+fn add_stats(total: &mut RecoveryStats, r: RecoveryStats) {
+    total.retransmits += r.retransmits;
+    total.reconnects += r.reconnects;
+    total.dup_drops += r.dup_drops;
+    total.nacks += r.nacks;
+    total.backoff_us += r.backoff_us;
 }
 
 /// Per-store pending-mass sums (f64, index order); `None` for
@@ -182,7 +222,7 @@ fn pending_scale(e: &SimEngine) -> f64 {
 pub fn run(cfg: &ChaosCfg) -> anyhow::Result<ChaosSummary> {
     cfg.plan
         .validate(cfg.nodes)
-        .map_err(|e| anyhow::anyhow!(e))?;
+        .map_err(|e| anyhow::anyhow!(e).context(ExitClass::Config))?;
     let steps = cfg.steps.max(cfg.plan.max_step() + 2);
     let layout = harness_layout();
     let mut summary = ChaosSummary {
@@ -190,20 +230,34 @@ pub fn run(cfg: &ChaosCfg) -> anyhow::Result<ChaosSummary> {
         digest: FNV_OFFSET,
         configs: 0,
         recovery_events: 0,
+        wire_recovery: RecoveryStats::default(),
     };
     for &mode in &cfg.modes {
         let mut plan = cfg.plan.clone();
         plan.mode = mode;
         for &spec in &cfg.specs {
             for &topo in &cfg.topologies {
-                let (digest, events) =
+                let (digest, events, recovery) =
                     run_one(cfg, plan.clone(), spec, topo, steps, layout.clone())
                         .map_err(|e| {
+                            // A WireError anywhere in the chain is a
+                            // transport failure (exit 3); everything
+                            // else run_one raises is a broken recovery
+                            // invariant (exit 4).
+                            let class = if e
+                                .chain()
+                                .any(|c| c.downcast_ref::<crate::net::WireError>().is_some())
+                            {
+                                ExitClass::Transport
+                            } else {
+                                ExitClass::Invariant
+                            };
                             e.context(format!(
                                 "chaos config mode={mode} spec={} topo={}",
                                 spec.name(),
                                 topo.name()
                             ))
+                            .context(class)
                         })?;
                 summary.lines.push(format!(
                     "mode={:<8} spec={:<16} topo={:<16} steps={steps} checked={events} \
@@ -215,6 +269,7 @@ pub fn run(cfg: &ChaosCfg) -> anyhow::Result<ChaosSummary> {
                 fnv(&mut summary.digest, &digest.to_le_bytes());
                 summary.configs += 1;
                 summary.recovery_events += events;
+                add_stats(&mut summary.wire_recovery, recovery);
             }
         }
     }
@@ -228,7 +283,7 @@ fn run_one(
     topo: TopoKind,
     steps: usize,
     layout: ParamLayout,
-) -> anyhow::Result<(u64, usize)> {
+) -> anyhow::Result<(u64, usize, RecoveryStats)> {
     let mode = plan.mode;
     let sim_cfg = SimCfg {
         nodes: cfg.nodes,
@@ -244,6 +299,11 @@ fn run_one(
         wire_dir: None,
         tuner: TunerMode::Off,
         chaos: Some(plan.clone()),
+        // Fault precedence: --wire-faults / RINGIWP_WIRE_FAULTS (both
+        // land in `cfg.wire_faults`) beat the plan's own wire tokens
+        // (WireEngine falls back to `chaos.wire` when this is unset).
+        wire_faults: cfg.wire_faults.clone(),
+        wire_timeout_ms: cfg.wire_timeout_ms,
         ..Default::default()
     };
     let total = layout.total_params() as u64;
@@ -334,7 +394,11 @@ fn run_one(
         }
         fnv_report(&mut digest, &r);
     }
-    Ok((digest, events))
+    // Join session threads before reading totals: counters are only
+    // exact post-shutdown, and an unrecoverable fault that slipped past
+    // the step loop surfaces here as its typed error.
+    let recovery = engine.finish()?;
+    Ok((digest, events, recovery))
 }
 
 #[cfg(test)]
@@ -381,6 +445,36 @@ mod tests {
         cfg.transport = TransportKind::Uds;
         let uds = run(&cfg).unwrap();
         assert_eq!(sim.digest, uds.digest, "sim is the oracle across re-rings");
+        // No wire faults scheduled → no recovery activity.
+        assert_eq!(uds.wire_recovery, RecoveryStats::default());
+    }
+
+    #[test]
+    fn wire_faults_recover_bit_identically_to_the_sim_oracle() {
+        // One grammar string schedules membership churn AND byte-level
+        // frame faults; the recovered uds sweep must still reproduce
+        // the fault-free sim digest (DESIGN.md §16), with the recovery
+        // totals proving the faults actually fired.
+        let mut cfg = tiny(TransportKind::Sim);
+        cfg.specs = vec![Method::IwpFixed.spec()];
+        cfg.modes = vec![RecoveryMode::Handoff];
+        let sim = run(&cfg).unwrap();
+        cfg.transport = TransportKind::Uds;
+        cfg.wire_timeout_ms = 5_000;
+        cfg.plan = ChaosPlan::parse(
+            "crash@2:1,slow@3:0:4,join@5,heal@6,crash@7:2,seed=9,flip@0:0,dup@1:1,reset@2:2",
+        )
+        .unwrap();
+        let uds = run(&cfg).unwrap();
+        assert_eq!(
+            sim.digest, uds.digest,
+            "recovered wire sweep must match the fault-free sim oracle"
+        );
+        let rec = uds.wire_recovery;
+        assert!(rec.retransmits >= 1, "{rec}");
+        assert!(rec.reconnects >= 1, "{rec}");
+        assert!(rec.dup_drops >= 1, "{rec}");
+        assert_eq!(sim.wire_recovery, RecoveryStats::default());
     }
 
     #[test]

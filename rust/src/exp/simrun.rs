@@ -85,6 +85,17 @@ pub struct SimCfg {
     /// bit-identical to the pre-chaos engine. Defaults to
     /// `RINGIWP_CHAOS`, else `None`.
     pub chaos: Option<ChaosPlan>,
+    /// Seeded byte-level wire faults (`net::wire::fault`, DESIGN.md
+    /// §16), applied to ring-edge writes of an in-process socket ring.
+    /// Overrides the wire half of `chaos` when both are set. `None` —
+    /// and an empty plan — are bit-identical to a fault-free ring.
+    /// Defaults to `RINGIWP_WIRE_FAULTS`, else `None`.
+    pub wire_faults: Option<crate::net::FaultPlan>,
+    /// Wire connect/read deadline in milliseconds and the base the v2
+    /// ARQ timeouts derive from (`--wire-timeout-ms`). Defaults to
+    /// `RINGIWP_WIRE_TIMEOUT_MS`, else 30 000 (the historical
+    /// `READ_TIMEOUT`/`CONNECT_TIMEOUT` constants).
+    pub wire_timeout_ms: u64,
 }
 
 impl Default for SimCfg {
@@ -112,6 +123,8 @@ impl Default for SimCfg {
             wire_dir: std::env::var_os("RINGIWP_WIRE_DIR").map(std::path::PathBuf::from),
             tuner: TunerMode::from_env(),
             chaos: ChaosPlan::from_env(),
+            wire_faults: crate::net::FaultPlan::from_env(),
+            wire_timeout_ms: crate::net::wire::wire_timeout_from_env(),
         }
     }
 }
@@ -540,6 +553,13 @@ pub struct WireStepReport {
     /// hops — includes frame headers, so it sits above the virtual
     /// payload accounting).
     pub real_bytes: u64,
+    /// Cumulative recovery totals over the ring's lifetime (DESIGN.md
+    /// §16): retransmits, reconnects, duplicate drops, NACKs, backoff
+    /// time. Advisory mid-run (session threads may still be counting);
+    /// exact after [`WireEngine::shutdown`]. All-zero on a fault-free
+    /// ring, and never part of [`StepReport`] — the oracle contract
+    /// compares payload results, not recovery effort.
+    pub recovery: crate::net::RecoveryStats,
 }
 
 /// The socket-transport engine (DESIGN.md §13): a [`SimEngine`]
@@ -551,6 +571,10 @@ pub struct WireStepReport {
 pub struct WireEngine {
     sim: SimEngine,
     ring: WireRing,
+    /// Ring options reused on every elastic re-ring: the fault plan,
+    /// the timeout knob, and the shared counter block (so
+    /// [`crate::net::RecoveryStats`] stays cumulative across rebuilds).
+    ring_opts: crate::net::RingOpts,
 }
 
 impl WireEngine {
@@ -571,14 +595,40 @@ impl WireEngine {
             "chaos plans cannot drive an external `ringiwp serve` ring \
              (re-ring would abandon live ranks); drop --wire-dir"
         );
+        // Explicit --wire-faults wins; otherwise a chaos plan's inline
+        // wire tokens ride along. Empty plans count as absent (the
+        // zero-overhead contract).
+        let faults = cfg
+            .wire_faults
+            .clone()
+            .filter(|p| !p.is_empty())
+            .or_else(|| {
+                cfg.chaos
+                    .as_ref()
+                    .map(|c| c.wire.clone())
+                    .filter(|p| !p.is_empty())
+            });
+        anyhow::ensure!(
+            cfg.wire_dir.is_none() || faults.is_none(),
+            "wire faults are an in-process harness; they cannot corrupt \
+             an external `ringiwp serve` ring — drop --wire-dir"
+        );
+        let ring_opts = crate::net::RingOpts {
+            faults,
+            timeout: std::time::Duration::from_millis(cfg.wire_timeout_ms.max(1)),
+            counters: Some(std::sync::Arc::new(crate::net::RecoveryCounters::new())),
+            force_version: None,
+        };
         let links = vec![cfg.link; cfg.nodes];
         let ring = match &cfg.wire_dir {
-            Some(dir) => WireRing::connect_external(dir, cfg.transport, links)?,
-            None => WireRing::new_in_process(cfg.transport, links)?,
+            Some(dir) => {
+                WireRing::connect_external_with(dir, cfg.transport, links, ring_opts.clone())?
+            }
+            None => WireRing::new_in_process_with(cfg.transport, links, ring_opts.clone())?,
         };
         let mut sim = SimEngine::new(layout, cfg);
         sim.set_links(ring.links().to_vec());
-        Ok(WireEngine { sim, ring })
+        Ok(WireEngine { sim, ring, ring_opts })
     }
 
     /// The underlying simulation core (accounting, layout, snapshots).
@@ -612,6 +662,7 @@ impl WireEngine {
             report,
             wall_seconds: t0.elapsed().as_secs_f64(),
             real_bytes: self.ring.real_bytes() - b0,
+            recovery: self.ring.recovery_stats(),
         }
     }
 
@@ -628,10 +679,23 @@ impl WireEngine {
         }
         let transport = self.ring.transport();
         self.ring.shutdown().expect("re-ring: old ring shutdown failed");
-        self.ring = WireRing::new_in_process(transport, self.sim.links().to_vec())
-            .expect("re-ring: survivor ring spawn failed");
+        // Same options (and the same counter block) as the first ring,
+        // so fault schedules — edge indices taken modulo the live ring
+        // size — and recovery totals survive the rebuild.
+        self.ring = WireRing::new_in_process_with(
+            transport,
+            self.sim.links().to_vec(),
+            self.ring_opts.clone(),
+        )
+        .expect("re-ring: survivor ring spawn failed");
         self.sim.set_links(self.ring.links().to_vec());
         true
+    }
+
+    /// Recovery totals so far (cumulative across re-rings); exact once
+    /// [`WireEngine::shutdown`] has joined the session threads.
+    pub fn recovery_stats(&self) -> crate::net::RecoveryStats {
+        self.ring.recovery_stats()
     }
 
     /// Tear the socket ring down (also runs on drop).

@@ -83,6 +83,11 @@ SUBCOMMANDS:
                   --dir DIR           rendezvous directory (default wire)
                   --transport uds|tcp (default uds)
                   --once              serve one session then exit
+                  --wire-timeout-ms N socket connect/read deadline, ms
+                                      (default 30000; env
+                                      RINGIWP_WIRE_TIMEOUT_MS)
+                prints per-rank recovery totals (retransmits,
+                reconnects, …) on exit (DESIGN.md §16)
     chaos       replay a deterministic fault schedule (net::chaos,
                 DESIGN.md §15) across every compression pipeline ×
                 reduce topology × recovery mode, checking residual
@@ -98,6 +103,16 @@ SUBCOMMANDS:
                   --transport sim|uds|tcp  engine flavor (sim checks
                                       the virtual oracle; uds/tcp
                                       re-ring real socket rings)
+                  --wire-faults GRAMMAR  seeded byte-level frame faults
+                                      on the socket rings (flip@f:e,
+                                      trunc@f:e, drop@f:e, dup@f:e,
+                                      delay@f:e:ms, reset@f:e,
+                                      attempts=K, seed=S; env
+                                      RINGIWP_WIRE_FAULTS; overrides
+                                      wire tokens riding in --chaos;
+                                      sim arms ignore it; DESIGN.md §16)
+                  --wire-timeout-ms N socket deadline, ms (ARQ retry /
+                                      ACK deadlines derive from it)
     methods     list the registered compression-pipeline specs with
                 one-line descriptions (the --method registry)
     info        list artifacts, PJRT platform, zoo inventories
@@ -105,6 +120,11 @@ SUBCOMMANDS:
 
 Config file (--config): `key = value` lines; see configs/*.conf.
 Artifacts must exist (run `make artifacts` once).
+
+Exit codes (DESIGN.md §16): 0 success; 1 unclassified error;
+2 config (bad flag / grammar / plan); 3 transport (socket, frame, or
+recovery failure — including an unrecoverable wire-fault schedule
+exhausting its retry budget); 4 invariant violation.
 ";
 
 fn main() {
@@ -120,7 +140,15 @@ fn main() {
         }
         Err(e) => {
             eprintln!("error: {e:#}");
-            1
+            // Typed exit codes (util::exit, DESIGN.md §16): config=2,
+            // transport=3, invariant=4; anything untagged stays 1.
+            match ringiwp::util::exit::ExitClass::of(&e) {
+                Some(class) => {
+                    eprintln!("error: {class}");
+                    class.code()
+                }
+                None => 1,
+            }
         }
     };
     std::process::exit(code);
@@ -174,6 +202,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         !matches!(&cfg.chaos, Some(p) if !p.is_empty()),
         "train does not execute fault schedules — run `ringiwp chaos` \
          (drop --chaos/--chaos-seed or unset RINGIWP_CHAOS)"
+    );
+    anyhow::ensure!(
+        !matches!(&cfg.wire_faults, Some(p) if !p.is_empty()),
+        "train does not execute wire-fault schedules — run `ringiwp chaos` \
+         (drop --wire-faults or unset RINGIWP_WIRE_FAULTS)"
     );
     let rt = Runtime::cpu(&cfg.artifacts_dir)?;
     println!(
@@ -248,6 +281,11 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         !ringiwp::net::ChaosPlan::from_env().is_some_and(|p| !p.is_empty()),
         "exp does not execute fault schedules — run `ringiwp chaos` (unset RINGIWP_CHAOS)"
     );
+    anyhow::ensure!(
+        !ringiwp::net::FaultPlan::from_env().is_some_and(|p| !p.is_empty()),
+        "exp does not execute wire-fault schedules — run `ringiwp chaos` \
+         (unset RINGIWP_WIRE_FAULTS)"
+    );
     let id = args.str_or("id", "all");
     let out_dir = args.str_or("out", "results");
     let seed = args.u64_or("seed", 42);
@@ -308,6 +346,11 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         !ringiwp::net::ChaosPlan::from_env().is_some_and(|p| !p.is_empty()),
         "bench does not execute fault schedules — a faulted run would poison the \
          perf baselines; run `ringiwp chaos` (unset RINGIWP_CHAOS)"
+    );
+    anyhow::ensure!(
+        !ringiwp::net::FaultPlan::from_env().is_some_and(|p| !p.is_empty()),
+        "bench does not execute wire-fault schedules — retransmits would poison the \
+         perf baselines; run `ringiwp chaos` (unset RINGIWP_WIRE_FAULTS)"
     );
 
     // Diff mode: compare two output directories' payloads modulo the
@@ -494,7 +537,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    use ringiwp::net::wire::serve_rank;
+    use ringiwp::net::wire::{serve_rank_with, wire_timeout_from_env, ServeOpts};
     use ringiwp::net::TransportKind;
 
     let rank = args
@@ -516,19 +559,29 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "serve needs a socket transport (--transport uds|tcp)"
     );
     let once = args.switch("once");
+    let timeout_ms = args.u64_or("wire-timeout-ms", wire_timeout_from_env());
+    anyhow::ensure!(timeout_ms > 0, "--wire-timeout-ms must be > 0");
     std::fs::create_dir_all(&dir)?;
     println!(
         "serve: rank {rank}/{nodes} over {transport} in {dir} \
          (coordinator: set RINGIWP_WIRE_DIR={dir} RINGIWP_TRANSPORT={transport})"
     );
-    let sessions = serve_rank(std::path::Path::new(&dir), rank, nodes, transport, once)?;
-    println!("serve: rank {rank} served {sessions} session(s)");
+    let opts = ServeOpts {
+        timeout: std::time::Duration::from_millis(timeout_ms),
+        ..Default::default()
+    };
+    let report = serve_rank_with(std::path::Path::new(&dir), rank, nodes, transport, once, opts)?;
+    println!(
+        "serve: rank {rank} served {} session(s), wire-recovery: {}",
+        report.sessions, report.recovery
+    );
     Ok(())
 }
 
 fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
     use ringiwp::exp::chaosrun::{run, ChaosCfg};
-    use ringiwp::net::{ChaosPlan, RecoveryMode, TransportKind};
+    use ringiwp::net::{ChaosPlan, FaultPlan, RecoveryMode, TransportKind};
+    use ringiwp::util::exit::ExitClass;
 
     let nodes = args.usize_or("nodes", 5);
     let steps = args.usize_or("steps", 10);
@@ -536,10 +589,19 @@ fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
     // Plan precedence: explicit grammar > RINGIWP_CHAOS > generated
     // from --seed.
     let plan = match args.str_opt("chaos") {
-        Some(g) => ChaosPlan::parse(g).map_err(|e| anyhow::anyhow!(e))?,
+        Some(g) => ChaosPlan::parse(g).map_err(|e| anyhow::anyhow!(e).context(ExitClass::Config))?,
         None => {
             ChaosPlan::from_env().unwrap_or_else(|| ChaosPlan::generate(seed, nodes, steps))
         }
+    };
+    // Wire-fault precedence mirrors the chaos plan's: explicit grammar >
+    // RINGIWP_WIRE_FAULTS > wire tokens riding in the chaos plan (the
+    // engine falls back to those when this stays None).
+    let wire_faults = match args.str_opt("wire-faults") {
+        Some(g) => {
+            Some(FaultPlan::parse(g).map_err(|e| anyhow::anyhow!(e).context(ExitClass::Config))?)
+        }
+        None => FaultPlan::from_env(),
     };
     let modes = match args.str_opt("chaos-mode") {
         Some(m) => vec![RecoveryMode::parse(m)
@@ -547,6 +609,8 @@ fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
         None => vec![RecoveryMode::Handoff, RecoveryMode::DropRescale],
     };
     let transport = TransportKind::parse(&args.str_or("transport", "sim"))?;
+    let wire_timeout_ms =
+        args.u64_or("wire-timeout-ms", ringiwp::net::wire::wire_timeout_from_env());
     let cfg = ChaosCfg {
         nodes,
         steps,
@@ -554,11 +618,25 @@ fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
         modes,
         transport,
         seed,
+        wire_timeout_ms,
+        wire_faults,
         ..Default::default()
     };
     println!("chaos: plan {plan}");
     println!("chaos: nodes={nodes} steps={steps} transport={transport} seed={seed}");
-    let s = run(&cfg)?;
+    // The wire seam inside the compression pipelines panics (by §13
+    // design) if a payload goes missing; with fault injection live that
+    // is an unrecoverable-schedule outcome, so convert the panic into
+    // the typed transport failure (exit 3) instead of an abort trace.
+    let s = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(&cfg)))
+        .unwrap_or_else(|p| {
+            let msg = p
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "wire seam panicked".into());
+            Err(anyhow::anyhow!("{msg}").context(ExitClass::Transport))
+        })?;
     for line in &s.lines {
         println!("  {line}");
     }
@@ -566,6 +644,9 @@ fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
         "chaos: {} configs green, {} conservation checks, digest={:016x}",
         s.configs, s.recovery_events, s.digest
     );
+    if transport.is_wire() {
+        println!("chaos: wire-recovery: {}", s.wire_recovery);
+    }
     Ok(())
 }
 

@@ -29,8 +29,19 @@
 //! Node indices refer to the membership *at that step* — after all
 //! earlier crashes and joins have been applied (ring positions shift
 //! down on a crash, exactly like the engine's survivor re-ring).
+//!
+//! Since DESIGN.md §16 the grammar also accepts the *wire-fault*
+//! tokens of [`net::wire::fault`](crate::net::wire::fault)
+//! (`flip@<frame>:<edge>`, `trunc@…`, `drop@…`, `dup@…`,
+//! `delay@<frame>:<edge>:<ms>`, `reset@…`, plus `attempts=` /
+//! `seed=`) inline, collected into [`ChaosPlan::wire`] — so one
+//! `--chaos` string can schedule membership churn *and* byte-level
+//! frame corruption. Wire faults only apply on socket transports; the
+//! sim oracle ignores them (its results are the bit-exact target the
+//! recovered wire run must reproduce).
 
 use super::link::LinkSpec;
+use super::wire::FaultPlan;
 use crate::util::rng::Rng;
 use std::fmt;
 
@@ -140,6 +151,9 @@ pub struct ChaosPlan {
     pub events: Vec<ChaosEvent>,
     /// Recovery protocol for crashed nodes' residual state.
     pub mode: RecoveryMode,
+    /// Byte-level wire faults riding along (socket transports only;
+    /// empty by default so membership-only plans are unchanged).
+    pub wire: FaultPlan,
 }
 
 impl ChaosPlan {
@@ -150,9 +164,10 @@ impl ChaosPlan {
         ChaosPlan::default()
     }
 
-    /// True when the plan schedules nothing.
+    /// True when the plan schedules nothing (no membership events and
+    /// no wire faults).
     pub fn is_empty(&self) -> bool {
-        self.events.is_empty()
+        self.events.is_empty() && self.wire.is_empty()
     }
 
     /// Largest step any event fires before (0 for an empty plan).
@@ -162,8 +177,11 @@ impl ChaosPlan {
 
     /// Parse the grammar (module docs). Events are stably sorted by
     /// step, so `parse(plan.to_string()) == plan` for any valid plan.
+    /// Wire-fault tokens (`flip@…`, `attempts=…`, …) are routed to the
+    /// embedded [`FaultPlan`] grammar.
     pub fn parse(s: &str) -> Result<Self, String> {
         let mut plan = ChaosPlan::default();
+        let mut wire_toks: Vec<&str> = Vec::new();
         for raw in s.split(',') {
             let tok = raw.trim();
             if tok.is_empty() {
@@ -172,6 +190,16 @@ impl ChaosPlan {
             if let Some(m) = tok.strip_prefix("mode=") {
                 plan.mode = RecoveryMode::parse(m)
                     .ok_or_else(|| format!("chaos: unknown mode '{m}' (handoff|rescale)"))?;
+                continue;
+            }
+            let is_wire = tok.starts_with("attempts=")
+                || tok.starts_with("seed=")
+                || matches!(
+                    tok.split('@').next(),
+                    Some("flip" | "trunc" | "drop" | "dup" | "delay" | "reset")
+                );
+            if is_wire {
+                wire_toks.push(tok);
                 continue;
             }
             let (kind, rest) = tok
@@ -205,6 +233,9 @@ impl ChaosPlan {
             plan.events.push(ev);
         }
         plan.events.sort_by_key(|e| e.step());
+        if !wire_toks.is_empty() {
+            plan.wire = FaultPlan::parse(&wire_toks.join(","))?;
+        }
         Ok(plan)
     }
 
@@ -246,6 +277,12 @@ impl ChaosPlan {
         ChaosPlan {
             events,
             mode: RecoveryMode::default(),
+            // Wire faults ride along from a decorrelated stream
+            // (appended after the membership rolls, so adding them
+            // left every pre-§16 generated schedule byte-identical).
+            // Frame indices stay small relative to a step's traffic so
+            // the scheduled faults actually fire early in the run.
+            wire: FaultPlan::generate(seed, nodes, (steps as u64).max(2) * 4),
         }
     }
 
@@ -291,7 +328,7 @@ impl ChaosPlan {
                 ChaosEvent::Join { .. } => n += 1,
             }
         }
-        Ok(())
+        self.wire.validate()
     }
 
     /// Events firing before `step`, in schedule order.
@@ -305,6 +342,9 @@ impl fmt::Display for ChaosPlan {
         write!(f, "mode={}", self.mode)?;
         for ev in &self.events {
             write!(f, ",{ev}")?;
+        }
+        if !self.wire.is_empty() {
+            write!(f, ",{}", self.wire)?;
         }
         Ok(())
     }

@@ -33,7 +33,10 @@ pub use link::LinkSpec;
 pub use topo::{PipeInner, TopoKind, Topology};
 pub use trace::{DecisionRow, DecisionTrace, Trace};
 pub use tuner::{Decision, Observation, Strategy, Tuner, TunerMode, WirePick};
-pub use wire::{TransportKind, WireError, WireRing};
+pub use wire::{
+    FaultKind, FaultPlan, RecoveryCounters, RecoveryStats, RingOpts, TransportKind, WireError,
+    WireRing,
+};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -21,6 +21,12 @@
 //! hello    : rank u16 | n u16
 //! helloack : n_links u32 | n_links × (bandwidth f64 | latency f64)
 //! ```
+//!
+//! These layouts are identical at wire versions 1 and 2: the §16
+//! integrity layer (CRC32 + sequence trailer, `frame.rs`) wraps
+//! *around* the payload, so the codecs never see it. Hello/HelloAck in
+//! particular must stay byte-stable across versions — the capability
+//! negotiation rides the `flags` header byte, never the body.
 
 use super::frame::WireError;
 use crate::compress::terngrad::{TernBlob, TernGrad};

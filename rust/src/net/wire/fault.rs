@@ -1,0 +1,475 @@
+//! Deterministic byte-level fault injection for the wire transport
+//! (DESIGN.md §16).
+//!
+//! A [`FaultPlan`] is a seeded schedule of frame-level faults applied
+//! to ring-edge **data** writes (never to ACK/NACK control traffic and
+//! never to the coordinator control channels): bit flips, mid-frame
+//! truncation, dropped frames, duplicated frames, fixed delays, and
+//! connection resets. The grammar mirrors `net::chaos` so `ringiwp
+//! chaos` sweeps wire faults next to membership faults:
+//!
+//! ```text
+//! attempts=4,seed=7,flip@0:1,trunc@2:0,drop@1:2,dup@3:1,delay@0:0:5,reset@4:2
+//!           kind@frame:edge            delay@frame:edge:ms
+//! ```
+//!
+//! * `frame` — 0-based index of the original data frame on that edge
+//!   (retransmissions do not advance the index);
+//! * `edge` — ring-edge index, taken modulo the live ring size so a
+//!   plan survives elastic re-rings;
+//! * `attempts` — the bounded per-frame retry budget (send attempts
+//!   including the first; `WireError::Exhausted` past it);
+//! * `seed` — drives the *positions* (which bit flips, where the cut
+//!   lands) via SplitMix64, keyed per `(edge, frame, attempt)` so the
+//!   same plan replays byte-identically.
+//!
+//! When several events name the same `(frame, edge)` cell, the k-th
+//! listed event fires on the k-th send attempt — a plan with more
+//! events on a cell than `attempts` is an *unrecoverable* schedule by
+//! construction and must fail loudly (the `wire_fault_recovery.rs`
+//! golden suite pins both directions).
+//!
+//! Faults are in-process only: external rings (`--wire-dir`) refuse a
+//! non-empty plan, because a shim that corrupts real remote peers'
+//! traffic is a footgun, not a test harness.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::util::rng::Rng;
+
+use super::frame::WireError;
+
+/// Default bounded retry budget (send attempts per frame).
+pub const DEFAULT_ATTEMPTS: u32 = 4;
+
+/// Hard cap on a scheduled delay fault, so a typo cannot stall a CI
+/// ring past its watchdog.
+pub const MAX_DELAY_MS: u64 = 100;
+
+/// XOR tag decorrelating the wire-fault stream from the membership
+/// stream inside `ChaosPlan::generate` (which uses `seed ^ 0xC4A0_55ED`).
+pub const GENERATE_TAG: u64 = 0x57A6_F001;
+
+/// One kind of injectable frame fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Flip one seeded bit of the encoded frame (CRC catches it, the
+    /// receiver NACKs, the sender retransmits).
+    Flip,
+    /// Cut the write at a seeded mid-frame offset (receiver stalls
+    /// mid-frame, drains, NACKs).
+    Trunc,
+    /// Swallow the write entirely (sender's ACK timeout retransmits).
+    Drop,
+    /// Write the frame twice (receiver drops the duplicate seq).
+    Dup,
+    /// Sleep this many milliseconds before the write (≤ [`MAX_DELAY_MS`]).
+    Delay(u64),
+    /// Surface a connection reset at the sender before the write; the
+    /// sender reconnects with capped exponential backoff and retries.
+    Reset,
+}
+
+impl FaultKind {
+    fn token(&self) -> String {
+        match self {
+            FaultKind::Flip => "flip".into(),
+            FaultKind::Trunc => "trunc".into(),
+            FaultKind::Drop => "drop".into(),
+            FaultKind::Dup => "dup".into(),
+            FaultKind::Delay(_) => "delay".into(),
+            FaultKind::Reset => "reset".into(),
+        }
+    }
+}
+
+/// One scheduled fault: fire `kind` on data frame `frame` of ring edge
+/// `edge` (edge taken modulo the live ring size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// 0-based original-frame index on the edge (retransmits don't count).
+    pub frame: u64,
+    /// Ring-edge index (sender rank), modulo the live ring size.
+    pub edge: usize,
+    /// What to do to that frame's write.
+    pub kind: FaultKind,
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            FaultKind::Delay(ms) => write!(f, "delay@{}:{}:{}", self.frame, self.edge, ms),
+            ref k => write!(f, "{}@{}:{}", k.token(), self.frame, self.edge),
+        }
+    }
+}
+
+/// A seeded, deterministic schedule of wire faults.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Scheduled fault events (listed order breaks ties on the same
+    /// `(frame, edge)` cell: k-th event → k-th send attempt).
+    pub events: Vec<FaultEvent>,
+    /// Bounded per-frame send-attempt budget (validated 2..=6).
+    pub attempts: u32,
+    /// Seed for fault *positions* (flip bit, truncation cut).
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            events: Vec::new(),
+            attempts: DEFAULT_ATTEMPTS,
+            seed: 0,
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts: Vec<String> = Vec::new();
+        if self.attempts != DEFAULT_ATTEMPTS {
+            parts.push(format!("attempts={}", self.attempts));
+        }
+        if self.seed != 0 {
+            parts.push(format!("seed={}", self.seed));
+        }
+        parts.extend(self.events.iter().map(|e| e.to_string()));
+        write!(f, "{}", parts.join(","))
+    }
+}
+
+impl FaultPlan {
+    /// The no-fault plan (identical to [`FaultPlan::default`]).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// True when no events are scheduled (attempts/seed alone do not
+    /// make a plan "active" — an empty plan must be bit-identical to
+    /// no plan at all).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the comma-separated grammar (see module docs). Empty input
+    /// parses to the empty plan.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            if let Some(v) = tok.strip_prefix("attempts=") {
+                plan.attempts = v
+                    .parse::<u32>()
+                    .map_err(|e| format!("bad attempts `{tok}`: {e}"))?;
+            } else if let Some(v) = tok.strip_prefix("seed=") {
+                plan.seed = v
+                    .parse::<u64>()
+                    .map_err(|e| format!("bad seed `{tok}`: {e}"))?;
+            } else {
+                plan.events.push(Self::parse_event(tok)?);
+            }
+        }
+        Ok(plan)
+    }
+
+    fn parse_event(tok: &str) -> Result<FaultEvent, String> {
+        let (kind_s, rest) = tok
+            .split_once('@')
+            .ok_or_else(|| format!("bad wire-fault token `{tok}` (want kind@frame:edge)"))?;
+        let fields: Vec<&str> = rest.split(':').collect();
+        let need = if kind_s == "delay" { 3 } else { 2 };
+        if fields.len() != need {
+            return Err(format!(
+                "bad wire-fault token `{tok}`: `{kind_s}` wants {need} `:`-fields"
+            ));
+        }
+        let frame = fields[0]
+            .parse::<u64>()
+            .map_err(|e| format!("bad frame in `{tok}`: {e}"))?;
+        let edge = fields[1]
+            .parse::<usize>()
+            .map_err(|e| format!("bad edge in `{tok}`: {e}"))?;
+        let kind = match kind_s {
+            "flip" => FaultKind::Flip,
+            "trunc" => FaultKind::Trunc,
+            "drop" => FaultKind::Drop,
+            "dup" => FaultKind::Dup,
+            "reset" => FaultKind::Reset,
+            "delay" => {
+                let ms = fields[2]
+                    .parse::<u64>()
+                    .map_err(|e| format!("bad delay ms in `{tok}`: {e}"))?;
+                FaultKind::Delay(ms)
+            }
+            other => return Err(format!("unknown wire-fault kind `{other}` in `{tok}`")),
+        };
+        Ok(FaultEvent { frame, edge, kind })
+    }
+
+    /// Parse `RINGIWP_WIRE_FAULTS`; panics on malformed input (mirrors
+    /// the other env knobs: a typo'd schedule silently dropped would
+    /// un-test exactly what the operator asked to test). Unset → `None`.
+    pub fn from_env() -> Option<FaultPlan> {
+        let s = std::env::var("RINGIWP_WIRE_FAULTS").ok()?;
+        Some(Self::parse(&s).unwrap_or_else(|e| panic!("RINGIWP_WIRE_FAULTS: {e}")))
+    }
+
+    /// Structural validation (grammar-level; ring-size concerns are
+    /// handled by the modulo mapping at ring build time).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(2..=6).contains(&self.attempts) {
+            return Err(format!(
+                "wire-fault attempts {} out of range 2..=6",
+                self.attempts
+            ));
+        }
+        for e in &self.events {
+            if let FaultKind::Delay(ms) = e.kind {
+                if ms > MAX_DELAY_MS {
+                    return Err(format!(
+                        "wire-fault delay {ms}ms exceeds cap {MAX_DELAY_MS}ms ({e})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Generate a small recoverable plan from a seed: 2–3 events drawn
+    /// from the *cheap* kinds (flip, dup, delay, reset) on early frames
+    /// of random edges. Drop and truncation are excluded on purpose —
+    /// they recover through multi-second ACK timeouts, which would blow
+    /// the CI chaos-smoke budget; dedicated tests cover them instead.
+    pub fn generate(seed: u64, edges: usize, frames: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ GENERATE_TAG);
+        let mut plan = FaultPlan {
+            seed,
+            ..FaultPlan::default()
+        };
+        let count = 2 + rng.below(2);
+        for _ in 0..count {
+            let frame = rng.below(frames.max(1) as usize) as u64;
+            let edge = rng.below(edges.max(1));
+            let kind = match rng.below(4) {
+                0 => FaultKind::Flip,
+                1 => FaultKind::Dup,
+                2 => FaultKind::Delay(1 + rng.below(5) as u64),
+                _ => FaultKind::Reset,
+            };
+            plan.events.push(FaultEvent { frame, edge, kind });
+        }
+        plan
+    }
+
+    /// Project the plan onto one ring edge of an `n`-edge ring: events
+    /// whose `edge % n` equals `edge`. Returns `None` when nothing is
+    /// scheduled there (the edge runs fault-free at zero overhead).
+    pub fn edge_faults(&self, edge: usize, n: usize) -> Option<EdgeFaults> {
+        let mut by_frame: HashMap<u64, Vec<FaultKind>> = HashMap::new();
+        for e in self.events.iter().filter(|e| e.edge % n == edge) {
+            by_frame.entry(e.frame).or_default().push(e.kind);
+        }
+        if by_frame.is_empty() {
+            return None;
+        }
+        Some(EdgeFaults {
+            edge,
+            seed: self.seed,
+            by_frame,
+        })
+    }
+
+    /// A plan whose events outnumber the attempt budget on some cell is
+    /// unrecoverable by construction; typed helper for refusals.
+    pub fn unrecoverable_cells(&self) -> Vec<(u64, usize)> {
+        let mut counts: HashMap<(u64, usize), u32> = HashMap::new();
+        for e in &self.events {
+            *counts.entry((e.frame, e.edge)).or_default() += 1;
+        }
+        let mut cells: Vec<(u64, usize)> = counts
+            .into_iter()
+            .filter(|&(_, c)| c >= self.attempts)
+            .map(|(k, _)| k)
+            .collect();
+        cells.sort_unstable();
+        cells
+    }
+}
+
+/// One edge's projection of a [`FaultPlan`]: fault lookups keyed by
+/// original-frame index + attempt, plus the seeded position draws.
+#[derive(Debug, Clone)]
+pub struct EdgeFaults {
+    edge: usize,
+    seed: u64,
+    by_frame: HashMap<u64, Vec<FaultKind>>,
+}
+
+impl EdgeFaults {
+    /// The fault to apply on send attempt `attempt` (0-based) of
+    /// original frame `frame`, if any: the k-th scheduled event on the
+    /// cell fires on the k-th attempt.
+    pub fn at(&self, frame: u64, attempt: u32) -> Option<FaultKind> {
+        self.by_frame
+            .get(&frame)
+            .and_then(|ks| ks.get(attempt as usize))
+            .copied()
+    }
+
+    /// Seeded position stream for `(frame, attempt)` on this edge —
+    /// same plan seed ⇒ same flipped bit / truncation cut every run.
+    fn pos_rng(&self, frame: u64, attempt: u32) -> Rng {
+        Rng::new(
+            self.seed
+                ^ (frame.wrapping_add(1)).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ ((self.edge as u64) << 32)
+                ^ u64::from(attempt).wrapping_mul(0xBF58_476D_1CE4_E5B9),
+        )
+    }
+
+    /// Which bit of an `nbytes`-byte encoded frame a Flip corrupts.
+    pub fn flip_bit(&self, frame: u64, attempt: u32, nbytes: usize) -> usize {
+        debug_assert!(nbytes > 0);
+        self.pos_rng(frame, attempt).below(nbytes * 8)
+    }
+
+    /// Where a Trunc cuts: at least 1 byte written, strictly less than
+    /// the full frame (so the receiver always stalls mid-frame).
+    pub fn trunc_cut(&self, frame: u64, attempt: u32, nbytes: usize) -> usize {
+        debug_assert!(nbytes > 1);
+        1 + self.pos_rng(frame, attempt).below(nbytes - 1)
+    }
+}
+
+/// Refuse a plan/context combination the recovery layer cannot honor
+/// (external rings, v1-negotiated rings).
+pub fn refuse(reason: &str) -> WireError {
+    WireError::Corrupt(format!("wire-fault injection refused: {reason}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_roundtrips_through_display() {
+        let s = "attempts=3,seed=9,flip@0:1,trunc@2:0,drop@1:2,dup@3:1,delay@0:0:5,reset@4:2";
+        let plan = FaultPlan::parse(s).unwrap();
+        assert_eq!(plan.attempts, 3);
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.events.len(), 6);
+        let echoed = plan.to_string();
+        assert_eq!(FaultPlan::parse(&echoed).unwrap(), plan);
+        assert_eq!(echoed, s);
+    }
+
+    #[test]
+    fn defaults_are_elided_from_display_and_empty_is_empty() {
+        let plan = FaultPlan::parse("flip@0:0").unwrap();
+        assert_eq!(plan.attempts, DEFAULT_ATTEMPTS);
+        assert_eq!(plan.to_string(), "flip@0:0");
+        let empty = FaultPlan::parse("").unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(empty, FaultPlan::default());
+        assert_eq!(empty.to_string(), "");
+    }
+
+    #[test]
+    fn malformed_tokens_are_rejected() {
+        for bad in [
+            "flip@0",          // missing edge
+            "flip@0:1:2",      // extra field
+            "delay@0:1",       // delay needs ms
+            "warp@0:1",        // unknown kind
+            "flip@x:1",        // non-numeric frame
+            "attempts=zero",   // non-numeric attempts
+            "seed=",           // empty seed
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn validate_bounds_attempts_and_delay() {
+        let mut plan = FaultPlan::parse("flip@0:0").unwrap();
+        assert!(plan.validate().is_ok());
+        plan.attempts = 1;
+        assert!(plan.validate().is_err());
+        plan.attempts = 7;
+        assert!(plan.validate().is_err());
+        plan.attempts = 4;
+        plan.events.push(FaultEvent {
+            frame: 0,
+            edge: 0,
+            kind: FaultKind::Delay(MAX_DELAY_MS + 1),
+        });
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn generate_is_deterministic_recoverable_and_seed_sensitive() {
+        let a = FaultPlan::generate(17, 5, 8);
+        let b = FaultPlan::generate(17, 5, 8);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert!(a.validate().is_ok());
+        assert!(a.unrecoverable_cells().is_empty());
+        // Only cheap kinds appear (no drop/trunc in generated plans).
+        for e in &a.events {
+            assert!(
+                !matches!(e.kind, FaultKind::Drop | FaultKind::Trunc),
+                "generated plan must avoid slow kinds, got {e}"
+            );
+        }
+        assert_ne!(FaultPlan::generate(18, 5, 8), a);
+    }
+
+    #[test]
+    fn edge_projection_wraps_modulo_ring_size() {
+        let plan = FaultPlan::parse("flip@0:0,dup@1:3,reset@2:4").unwrap();
+        // Ring of 3: edge 3 wraps to 0, edge 4 wraps to 1.
+        let e0 = plan.edge_faults(0, 3).unwrap();
+        assert_eq!(e0.at(0, 0), Some(FaultKind::Flip));
+        assert_eq!(e0.at(1, 0), Some(FaultKind::Dup));
+        let e1 = plan.edge_faults(1, 3).unwrap();
+        assert_eq!(e1.at(2, 0), Some(FaultKind::Reset));
+        assert!(plan.edge_faults(2, 3).is_none());
+    }
+
+    #[test]
+    fn stacked_events_fire_per_attempt_in_listed_order() {
+        let plan = FaultPlan::parse("flip@0:0,reset@0:0").unwrap();
+        let e = plan.edge_faults(0, 5).unwrap();
+        assert_eq!(e.at(0, 0), Some(FaultKind::Flip));
+        assert_eq!(e.at(0, 1), Some(FaultKind::Reset));
+        assert_eq!(e.at(0, 2), None); // third attempt runs clean
+        assert!(plan.unrecoverable_cells().is_empty());
+    }
+
+    #[test]
+    fn unrecoverable_cells_are_detected() {
+        let mut plan = FaultPlan::parse("flip@0:0,flip@0:0,flip@0:0,flip@0:0").unwrap();
+        assert_eq!(plan.unrecoverable_cells(), vec![(0, 0)]);
+        plan.attempts = 5;
+        assert!(plan.unrecoverable_cells().is_empty());
+    }
+
+    #[test]
+    fn seeded_positions_replay_and_stay_in_bounds() {
+        let plan = FaultPlan::parse("seed=42,flip@0:1").unwrap();
+        let e = plan.edge_faults(1, 4).unwrap();
+        let bit = e.flip_bit(0, 0, 64);
+        assert_eq!(e.flip_bit(0, 0, 64), bit);
+        assert!(bit < 64 * 8);
+        // Different attempt → (almost surely) different position stream.
+        assert!(e.flip_bit(0, 1, 64) != bit || e.flip_bit(0, 2, 64) != bit);
+        let cut = e.trunc_cut(0, 0, 64);
+        assert!((1..64).contains(&cut));
+        // A different plan seed moves the position.
+        let plan2 = FaultPlan::parse("seed=43,flip@0:1").unwrap();
+        let e2 = plan2.edge_faults(1, 4).unwrap();
+        assert!(e2.flip_bit(0, 0, 64) != bit || e2.trunc_cut(0, 0, 64) != cut);
+    }
+}

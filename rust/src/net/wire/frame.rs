@@ -1,4 +1,4 @@
-//! Versioned, length-prefixed wire frames (DESIGN.md §13).
+//! Versioned, length-prefixed wire frames (DESIGN.md §13, §16).
 //!
 //! Every message on a real ring edge travels as one frame: a fixed
 //! 20-byte little-endian header followed by `payload_len` payload
@@ -11,10 +11,10 @@
 //! offset  size  field        notes
 //! ------  ----  -----------  ----------------------------------------
 //!      0     4  magic        b"RIWP"
-//!      4     2  version      u16 LE, currently 1; mismatch is typed
-//!      6     1  kind         Dense|Sparse|Masked|Tern|Hello|HelloAck|Shutdown
-//!      7     1  flags        bit0 = FLAG_TERN_BLOB (Tern payload is a
-//!                            single-scale TernBlob, not a TernGrad)
+//!      4     2  version      u16 LE, 1 or 2; anything else is typed
+//!      6     1  kind         Dense|Sparse|Masked|Tern|Hello|HelloAck|
+//!                            Shutdown|Ack|Nack
+//!      7     1  flags        bit0 = FLAG_TERN_BLOB, bit1 = FLAG_CAP_V2
 //!      8     2  origin       u16 LE, rank that injected the frame
 //!     10     2  ttl          u16 LE, ring-edge traversals remaining
 //!     12     4  epoch        u32 LE, step/handshake epoch stamp
@@ -22,22 +22,48 @@
 //!     20     …  payload      codec-encoded (see `super::codec`)
 //! ```
 //!
+//! **Version 2** appends an 8-byte integrity trailer after the payload
+//! (DESIGN.md §16):
+//!
+//! ```text
+//! offset              size  field  notes
+//! ------------------  ----  -----  --------------------------------
+//! 20 + payload_len       4  seq    u32 LE, per-edge transmission
+//!                                  sequence (0 on control channels)
+//! 24 + payload_len       4  crc    u32 LE, CRC-32 (IEEE) over
+//!                                  header ‖ payload ‖ seq
+//! ```
+//!
+//! Decoders accept both versions on the same stream — that is what
+//! makes Hello/HelloAck version negotiation possible ([`FLAG_CAP_V2`]):
+//! the handshake always travels at version 1, and the negotiated
+//! version governs every frame after it. A corrupted trailer surfaces
+//! as the typed [`WireError::Checksum`] the per-hop recovery layer
+//! (`super::peer`) turns into a NACK + retransmit.
+//!
 //! Decoding is total: malformed input returns a typed [`WireError`],
 //! never a panic — the transport-equivalence suite and
-//! `tests/wire_codec.rs` exercise truncation, bad magic, bad kind and
-//! version skew explicitly.
+//! `tests/wire_codec.rs` exercise truncation, bad magic, bad kind,
+//! version skew and single-bit corruption explicitly.
 
 use std::io::{Read, Write};
 
 /// Frame magic: ASCII "RIWP".
 pub const MAGIC: [u8; 4] = *b"RIWP";
 
-/// Current wire protocol version. Bump on any header or payload layout
-/// change; peers reject mismatches with [`WireError::Version`].
-pub const VERSION: u16 = 1;
+/// Legacy wire protocol version: header + payload, no trailer.
+pub const V1: u16 = 1;
+
+/// Current wire protocol version: header + payload + CRC-32 trailer.
+/// Decoders accept [`V1`] and [`VERSION`]; anything else is rejected
+/// with [`WireError::Version`].
+pub const VERSION: u16 = 2;
 
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 20;
+
+/// Version-2 trailer size in bytes (`seq` + `crc`).
+pub const TRAILER_LEN: usize = 8;
 
 /// Hard cap on a single frame payload (guards against garbage
 /// `payload_len` allocating gigabytes on a corrupt stream).
@@ -46,6 +72,13 @@ pub const MAX_PAYLOAD: u32 = 1 << 30;
 /// Flag bit 0: the Tern payload is a single-scale `TernBlob` rather
 /// than a per-layer-scaled `TernGrad`.
 pub const FLAG_TERN_BLOB: u8 = 1;
+
+/// Flag bit 1, on Hello/HelloAck frames only: the sender speaks wire
+/// protocol version 2 (CRC trailer + per-hop ARQ). A ring runs at v2
+/// iff every Hello carried the bit; the coordinator echoes the
+/// decision on each HelloAck. Old v1 peers leave the bit clear and
+/// the ring transparently degrades to v1 framing.
+pub const FLAG_CAP_V2: u8 = 1 << 1;
 
 /// Frame kinds — the four payload codecs plus control traffic.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,6 +98,12 @@ pub enum Kind {
     HelloAck = 6,
     /// Orderly session teardown.
     Shutdown = 7,
+    /// Per-edge ARQ acknowledgment (v2 only, empty payload, trailer
+    /// `seq` names the acknowledged transmission).
+    Ack = 8,
+    /// Per-edge retransmit request (v2 only, empty payload, trailer
+    /// `seq` names the first missing transmission).
+    Nack = 9,
 }
 
 impl Kind {
@@ -78,6 +117,8 @@ impl Kind {
             5 => Kind::Hello,
             6 => Kind::HelloAck,
             7 => Kind::Shutdown,
+            8 => Kind::Ack,
+            9 => Kind::Nack,
             other => return Err(WireError::BadKind(other)),
         })
     }
@@ -91,12 +132,13 @@ pub enum WireError {
     /// Header does not start with `b"RIWP"`.
     #[error("bad frame magic (expected \"RIWP\")")]
     BadMagic,
-    /// Peer speaks a different protocol version.
+    /// Peer speaks a protocol version this build does not (neither
+    /// [`V1`] nor [`VERSION`]).
     #[error("wire protocol version mismatch: got {got}, want {want}")]
     Version {
         /// Version advertised by the peer.
         got: u16,
-        /// Version this build speaks ([`VERSION`]).
+        /// Newest version this build speaks ([`VERSION`]).
         want: u16,
     },
     /// Unknown kind byte.
@@ -110,6 +152,22 @@ pub enum WireError {
         /// Bytes actually available.
         got: usize,
     },
+    /// Version-2 trailer CRC does not match the received bytes — the
+    /// recoverable corruption signal the ARQ layer NACKs on.
+    #[error("frame checksum mismatch: expected {expected:#010x}, got {got:#010x}")]
+    Checksum {
+        /// CRC-32 recomputed over the received header ‖ payload ‖ seq.
+        expected: u32,
+        /// CRC-32 carried by the trailer.
+        got: u32,
+    },
+    /// A recoverable fault persisted through every retransmit attempt
+    /// — the fault is treated as fatal and the ring tears down.
+    #[error("unrecoverable wire fault: retry budget exhausted after {attempts} attempts")]
+    Exhausted {
+        /// The bounded attempt budget that was exhausted.
+        attempts: u32,
+    },
     /// Structurally valid frame whose contents are inconsistent
     /// (payload/shape mismatch, diverging relay copies, epoch skew).
     #[error("corrupt frame: {0}")]
@@ -119,12 +177,54 @@ pub enum WireError {
     Io(#[from] std::io::Error),
 }
 
+/// CRC-32 (IEEE 802.3, polynomial `0xEDB88320`) lookup table, built at
+/// compile time — no new dependency for the integrity trailer.
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE) over the concatenation of `chunks`.
+pub fn crc32(chunks: &[&[u8]]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for chunk in chunks {
+        for &b in *chunk {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Per-transmission metadata a decoder recovers next to the [`Frame`]:
+/// the wire version the bytes traveled at and, for version 2, the
+/// per-edge sequence number from the trailer (0 at version 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameMeta {
+    /// Wire version of this transmission ([`V1`] or [`VERSION`]).
+    pub version: u16,
+    /// Trailer sequence number (0 for version-1 frames).
+    pub seq: u32,
+}
+
 /// One decoded wire frame.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Frame {
     /// Payload kind.
     pub kind: Kind,
-    /// Flag bits ([`FLAG_TERN_BLOB`]).
+    /// Flag bits ([`FLAG_TERN_BLOB`], [`FLAG_CAP_V2`]).
     pub flags: u8,
     /// Rank that injected the frame into the ring.
     pub origin: u16,
@@ -149,11 +249,21 @@ impl Frame {
         }
     }
 
-    /// Encode header + payload into a fresh buffer.
+    /// Encode header + payload at version 1 (no trailer) into a fresh
+    /// buffer — the encoding every pre-negotiation frame and every v1
+    /// ring edge uses, byte-identical to the PR-6 format.
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(HEADER_LEN + self.payload.len());
+        self.encode_at(V1, 0)
+    }
+
+    /// Encode at an explicit wire version. Version 2 appends the
+    /// `seq`+CRC trailer; version 1 ignores `seq`.
+    pub fn encode_at(&self, version: u16, seq: u32) -> Vec<u8> {
+        debug_assert!(version == V1 || version == VERSION, "unknown version {version}");
+        let trailer = if version >= VERSION { TRAILER_LEN } else { 0 };
+        let mut out = Vec::with_capacity(HEADER_LEN + self.payload.len() + trailer);
         out.extend_from_slice(&MAGIC);
-        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&version.to_le_bytes());
         out.push(self.kind as u8);
         out.push(self.flags);
         out.extend_from_slice(&self.origin.to_le_bytes());
@@ -161,24 +271,30 @@ impl Frame {
         out.extend_from_slice(&self.epoch.to_le_bytes());
         out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
         out.extend_from_slice(&self.payload);
+        if version >= VERSION {
+            out.extend_from_slice(&seq.to_le_bytes());
+            let crc = crc32(&[&out]);
+            out.extend_from_slice(&crc.to_le_bytes());
+        }
         out
     }
 
-    /// Total encoded size in bytes.
+    /// Total encoded size in bytes at version 1.
     pub fn encoded_len(&self) -> usize {
-        HEADER_LEN + self.payload.len()
+        self.encoded_len_at(V1)
+    }
+
+    /// Total encoded size in bytes at the given wire version.
+    pub fn encoded_len_at(&self, version: u16) -> usize {
+        HEADER_LEN
+            + self.payload.len()
+            + if version >= VERSION { TRAILER_LEN } else { 0 }
     }
 
     /// Decode a frame from an in-memory buffer. The buffer must contain
     /// exactly one frame (trailing bytes are rejected as corrupt).
     pub fn decode(buf: &[u8]) -> Result<Frame, WireError> {
-        if buf.len() < HEADER_LEN {
-            return Err(WireError::Truncated {
-                need: HEADER_LEN,
-                got: buf.len(),
-            });
-        }
-        let (frame, used) = Self::decode_prefix(buf)?;
+        let (frame, _, used) = Self::decode_prefix_ext(buf)?;
         if used != buf.len() {
             return Err(WireError::Corrupt(format!(
                 "{} trailing bytes after frame",
@@ -191,86 +307,171 @@ impl Frame {
     /// Decode one frame from the front of `buf`, returning it and the
     /// number of bytes consumed.
     pub fn decode_prefix(buf: &[u8]) -> Result<(Frame, usize), WireError> {
+        let (frame, _, used) = Self::decode_prefix_ext(buf)?;
+        Ok((frame, used))
+    }
+
+    /// Decode one frame from the front of `buf` with its transmission
+    /// metadata (version + trailer sequence) and the bytes consumed.
+    pub fn decode_prefix_ext(buf: &[u8]) -> Result<(Frame, FrameMeta, usize), WireError> {
         if buf.len() < HEADER_LEN {
             return Err(WireError::Truncated {
                 need: HEADER_LEN,
                 got: buf.len(),
             });
         }
-        let (kind, flags, origin, ttl, epoch, payload_len) = parse_header(&buf[..HEADER_LEN])?;
-        let total = HEADER_LEN + payload_len as usize;
+        let h = Header::parse(&buf[..HEADER_LEN])?;
+        let trailer = if h.version >= VERSION { TRAILER_LEN } else { 0 };
+        let body_end = HEADER_LEN + h.payload_len as usize;
+        let total = body_end + trailer;
         if buf.len() < total {
             return Err(WireError::Truncated {
                 need: total,
                 got: buf.len(),
             });
         }
-        let payload = buf[HEADER_LEN..total].to_vec();
+        let mut seq = 0u32;
+        if h.version >= VERSION {
+            let t = &buf[body_end..total];
+            seq = u32::from_le_bytes([t[0], t[1], t[2], t[3]]);
+            let got = u32::from_le_bytes([t[4], t[5], t[6], t[7]]);
+            let expected = crc32(&[&buf[..body_end], &t[..4]]);
+            if expected != got {
+                return Err(WireError::Checksum { expected, got });
+            }
+        }
+        let payload = buf[HEADER_LEN..body_end].to_vec();
         Ok((
             Frame {
-                kind,
-                flags,
-                origin,
-                ttl,
-                epoch,
+                kind: h.kind,
+                flags: h.flags,
+                origin: h.origin,
+                ttl: h.ttl,
+                epoch: h.epoch,
                 payload,
+            },
+            FrameMeta {
+                version: h.version,
+                seq,
             },
             total,
         ))
     }
 
-    /// Write the frame to a stream (single buffered write).
+    /// Write the frame to a stream at version 1 (single buffered write).
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<(), WireError> {
         w.write_all(&self.encode())?;
         Ok(())
     }
 
-    /// Read one frame off a stream. A clean EOF before any header byte
-    /// maps to [`WireError::Io`] with `UnexpectedEof`; a partial header
-    /// or payload does too (the socket layer cannot distinguish a
-    /// truncated frame from a dropped connection).
+    /// Write the frame to a stream at an explicit wire version.
+    pub fn write_to_at<W: Write>(&self, w: &mut W, version: u16, seq: u32) -> Result<(), WireError> {
+        w.write_all(&self.encode_at(version, seq))?;
+        Ok(())
+    }
+
+    /// Read one frame off a stream (either wire version). A clean EOF
+    /// before any header byte maps to [`WireError::Io`] with
+    /// `UnexpectedEof`; a partial header, payload or trailer does too
+    /// (the socket layer cannot distinguish a truncated frame from a
+    /// dropped connection).
     pub fn read_from<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+        Self::read_from_ext(r).map(|(f, _)| f)
+    }
+
+    /// Read one frame off a stream together with its transmission
+    /// metadata — the ARQ layer keys duplicate suppression and
+    /// acknowledgments off `meta.seq`.
+    pub fn read_from_ext<R: Read>(r: &mut R) -> Result<(Frame, FrameMeta), WireError> {
         let mut header = [0u8; HEADER_LEN];
         r.read_exact(&mut header)?;
-        let (kind, flags, origin, ttl, epoch, payload_len) = parse_header(&header)?;
-        let mut payload = vec![0u8; payload_len as usize];
+        Self::read_body_ext(r, &header)
+    }
+
+    /// Finish reading a frame whose 20-byte header has already been
+    /// consumed — the receive path uses a 1-byte probe to tell an idle
+    /// edge from a mid-frame stall, then hands the header here.
+    pub fn read_body_ext<R: Read>(
+        r: &mut R,
+        header: &[u8; HEADER_LEN],
+    ) -> Result<(Frame, FrameMeta), WireError> {
+        let h = Header::parse(header)?;
+        let mut payload = vec![0u8; h.payload_len as usize];
         r.read_exact(&mut payload)?;
-        Ok(Frame {
+        let mut seq = 0u32;
+        if h.version >= VERSION {
+            let mut t = [0u8; TRAILER_LEN];
+            r.read_exact(&mut t)?;
+            seq = u32::from_le_bytes([t[0], t[1], t[2], t[3]]);
+            let got = u32::from_le_bytes([t[4], t[5], t[6], t[7]]);
+            let expected = crc32(&[header, &payload, &t[..4]]);
+            if expected != got {
+                return Err(WireError::Checksum { expected, got });
+            }
+        }
+        Ok((
+            Frame {
+                kind: h.kind,
+                flags: h.flags,
+                origin: h.origin,
+                ttl: h.ttl,
+                epoch: h.epoch,
+                payload,
+            },
+            FrameMeta {
+                version: h.version,
+                seq,
+            },
+        ))
+    }
+}
+
+/// Validated header fields.
+struct Header {
+    version: u16,
+    kind: Kind,
+    flags: u8,
+    origin: u16,
+    ttl: u16,
+    epoch: u32,
+    payload_len: u32,
+}
+
+impl Header {
+    /// Validate and split a 20-byte header.
+    fn parse(h: &[u8]) -> Result<Header, WireError> {
+        debug_assert_eq!(h.len(), HEADER_LEN);
+        if h[0..4] != MAGIC {
+            return Err(WireError::BadMagic);
+        }
+        let version = u16::from_le_bytes([h[4], h[5]]);
+        if version != V1 && version != VERSION {
+            return Err(WireError::Version {
+                got: version,
+                want: VERSION,
+            });
+        }
+        let kind = Kind::from_u8(h[6])?;
+        let flags = h[7];
+        let origin = u16::from_le_bytes([h[8], h[9]]);
+        let ttl = u16::from_le_bytes([h[10], h[11]]);
+        let epoch = u32::from_le_bytes([h[12], h[13], h[14], h[15]]);
+        let payload_len = u32::from_le_bytes([h[16], h[17], h[18], h[19]]);
+        if payload_len > MAX_PAYLOAD {
+            return Err(WireError::Corrupt(format!(
+                "payload_len {payload_len} exceeds cap {MAX_PAYLOAD}"
+            )));
+        }
+        Ok(Header {
+            version,
             kind,
             flags,
             origin,
             ttl,
             epoch,
-            payload,
+            payload_len,
         })
     }
-}
-
-/// Validate and split a 20-byte header.
-fn parse_header(h: &[u8]) -> Result<(Kind, u8, u16, u16, u32, u32), WireError> {
-    debug_assert_eq!(h.len(), HEADER_LEN);
-    if h[0..4] != MAGIC {
-        return Err(WireError::BadMagic);
-    }
-    let version = u16::from_le_bytes([h[4], h[5]]);
-    if version != VERSION {
-        return Err(WireError::Version {
-            got: version,
-            want: VERSION,
-        });
-    }
-    let kind = Kind::from_u8(h[6])?;
-    let flags = h[7];
-    let origin = u16::from_le_bytes([h[8], h[9]]);
-    let ttl = u16::from_le_bytes([h[10], h[11]]);
-    let epoch = u32::from_le_bytes([h[12], h[13], h[14], h[15]]);
-    let payload_len = u32::from_le_bytes([h[16], h[17], h[18], h[19]]);
-    if payload_len > MAX_PAYLOAD {
-        return Err(WireError::Corrupt(format!(
-            "payload_len {payload_len} exceeds cap {MAX_PAYLOAD}"
-        )));
-    }
-    Ok((kind, flags, origin, ttl, epoch, payload_len))
 }
 
 #[cfg(test)]
@@ -303,6 +504,73 @@ mod tests {
         f.write_to(&mut buf).unwrap();
         let mut cursor = std::io::Cursor::new(buf);
         assert_eq!(Frame::read_from(&mut cursor).unwrap(), f);
+    }
+
+    #[test]
+    fn v2_roundtrips_with_trailer_and_seq() {
+        let f = sample();
+        let bytes = f.encode_at(VERSION, 77);
+        assert_eq!(bytes.len(), f.encoded_len_at(VERSION));
+        assert_eq!(bytes.len(), f.encoded_len() + TRAILER_LEN);
+        let (d, meta, used) = Frame::decode_prefix_ext(&bytes).unwrap();
+        assert_eq!(d, f);
+        assert_eq!(meta, FrameMeta { version: VERSION, seq: 77 });
+        assert_eq!(used, bytes.len());
+        let mut cursor = std::io::Cursor::new(bytes);
+        let (d, meta) = Frame::read_from_ext(&mut cursor).unwrap();
+        assert_eq!(d, f);
+        assert_eq!(meta.seq, 77);
+    }
+
+    #[test]
+    fn v1_frames_still_decode_under_the_v2_build() {
+        // Version negotiation's load-bearing half: a v1 peer's bytes
+        // (no trailer) parse on the same decoders a v2 edge uses.
+        let f = sample();
+        let (d, meta, used) = Frame::decode_prefix_ext(&f.encode_at(V1, 99)).unwrap();
+        assert_eq!(d, f);
+        assert_eq!(meta, FrameMeta { version: V1, seq: 0 });
+        assert_eq!(used, f.encoded_len());
+    }
+
+    #[test]
+    fn v2_corruption_is_typed_checksum() {
+        let f = sample();
+        let mut bytes = f.encode_at(VERSION, 5);
+        let i = HEADER_LEN + 2; // payload byte
+        bytes[i] ^= 0x10;
+        assert!(matches!(
+            Frame::decode(&bytes),
+            Err(WireError::Checksum { .. })
+        ));
+        // Seq corruption is covered too — the CRC spans the seq field.
+        let mut bytes = f.encode_at(VERSION, 5);
+        let i = bytes.len() - TRAILER_LEN;
+        bytes[i] ^= 1;
+        assert!(matches!(
+            Frame::decode(&bytes),
+            Err(WireError::Checksum { .. })
+        ));
+    }
+
+    #[test]
+    fn v2_trailer_truncation_is_typed() {
+        let bytes = sample().encode_at(VERSION, 1);
+        for cut in [bytes.len() - TRAILER_LEN, bytes.len() - 1] {
+            assert!(
+                matches!(Frame::decode(&bytes[..cut]), Err(WireError::Truncated { .. })),
+                "cut={cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // The classic reference vector: CRC-32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(&[b"123456789"]), 0xCBF4_3926);
+        // Incremental chunking is associative.
+        assert_eq!(crc32(&[b"1234", b"56789"]), 0xCBF4_3926);
+        assert_eq!(crc32(&[b""]), 0);
     }
 
     #[test]
@@ -347,6 +615,20 @@ mod tests {
     }
 
     #[test]
+    fn ack_and_nack_kinds_roundtrip() {
+        for kind in [Kind::Ack, Kind::Nack] {
+            let f = Frame::new(kind, 2, 0, 9, Vec::new());
+            let bytes = f.encode_at(VERSION, 31);
+            let (d, meta, _) = Frame::decode_prefix_ext(&bytes).unwrap();
+            assert_eq!(d, f);
+            assert_eq!(meta.seq, 31);
+        }
+        assert_eq!(Kind::from_u8(8).unwrap(), Kind::Ack);
+        assert_eq!(Kind::from_u8(9).unwrap(), Kind::Nack);
+        assert!(Kind::from_u8(10).is_err());
+    }
+
+    #[test]
     fn empty_payload_roundtrips() {
         let f = Frame::new(Kind::Shutdown, 0, 0, 7, Vec::new());
         assert_eq!(Frame::decode(&f.encode()).unwrap(), f);
@@ -357,7 +639,7 @@ mod tests {
         let a = sample();
         let b = Frame::new(Kind::Dense, 1, 2, 3, vec![9]);
         let mut bytes = a.encode();
-        bytes.extend_from_slice(&b.encode());
+        bytes.extend_from_slice(&b.encode_at(VERSION, 4));
         let (fa, used) = Frame::decode_prefix(&bytes).unwrap();
         assert_eq!(fa, a);
         let (fb, used2) = Frame::decode_prefix(&bytes[used..]).unwrap();

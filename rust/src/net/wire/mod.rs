@@ -1,4 +1,4 @@
-//! Real socket ring transport (DESIGN.md §13).
+//! Real socket ring transport (DESIGN.md §13, §16).
 //!
 //! Everything below `net::wire` moves actual bytes: rank sessions
 //! relay length-prefixed [`frame::Frame`]s over Unix domain sockets
@@ -10,6 +10,16 @@
 //! routes every traveling payload through this module, consuming only
 //! the *decoded* frames, so any codec or relay corruption diverges the
 //! `StepReport` and the `transport_equivalence` suite catches it.
+//!
+//! Since wire protocol v2 the ring is *self-healing* (DESIGN.md §16):
+//! frames carry a CRC-32 trailer, ring edges run a bounded
+//! NACK/retransmit ARQ with duplicate suppression and reconnect
+//! backoff ([`peer::EdgeTx`]/[`peer::EdgeRx`]), and a seeded
+//! [`FaultPlan`] can corrupt edge traffic deterministically to prove
+//! it. The version is negotiated per ring in Hello/HelloAck
+//! ([`frame::FLAG_CAP_V2`]), so v1 peers interoperate unchanged.
+//! Recovery activity surfaces as [`RecoveryStats`]
+//! ([`WireRing::recovery_stats`]).
 //!
 //! Two wirings:
 //!
@@ -26,18 +36,25 @@
 //! today's uniform link bit-for-bit.
 
 pub mod codec;
+pub mod fault;
 pub mod frame;
 pub mod peer;
 
-pub use frame::{Frame, Kind, WireError, FLAG_TERN_BLOB, VERSION};
-pub use peer::{serve_rank, WireListener, WireStream};
+pub use fault::{FaultEvent, FaultKind, FaultPlan};
+pub use frame::{Frame, Kind, WireError, FLAG_CAP_V2, FLAG_TERN_BLOB, V1, VERSION};
+pub use peer::{
+    serve_rank, serve_rank_with, RecoveryCounters, RecoveryStats, ServeOpts, ServeReport,
+    WireListener, WireStream,
+};
 
 use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
 
 use crate::compress::terngrad::{TernBlob, TernGrad};
 use crate::net::LinkSpec;
 use crate::sparse::BitMask;
-use peer::{RankSession, READ_TIMEOUT};
+use peer::{RankSession, SessionOpts, READ_TIMEOUT};
 
 /// Which transport the engines run on (`--transport`, `RINGIWP_TRANSPORT`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -92,6 +109,84 @@ impl std::fmt::Display for TransportKind {
     }
 }
 
+/// Wire timeout from `RINGIWP_WIRE_TIMEOUT_MS` (default 30 000 ms, the
+/// historical [`peer::READ_TIMEOUT`]); panics on a malformed or zero
+/// value, mirroring the other env knobs.
+pub fn wire_timeout_from_env() -> u64 {
+    match std::env::var("RINGIWP_WIRE_TIMEOUT_MS") {
+        Ok(s) => {
+            let ms: u64 = s
+                .parse()
+                .unwrap_or_else(|e| panic!("RINGIWP_WIRE_TIMEOUT_MS: {e}"));
+            assert!(ms > 0, "RINGIWP_WIRE_TIMEOUT_MS must be > 0");
+            ms
+        }
+        Err(_) => READ_TIMEOUT.as_millis() as u64,
+    }
+}
+
+/// Ring construction options: fault schedule, timeout knob, shared
+/// recovery counters (so stats survive elastic re-rings), and an
+/// explicit wire-version override for negotiation tests.
+#[derive(Debug, Clone)]
+pub struct RingOpts {
+    /// Seeded fault schedule applied to ring-edge data writes
+    /// (in-process rings only; `None`/empty ⇒ zero overhead).
+    pub faults: Option<FaultPlan>,
+    /// Connect/read deadline and the base the ARQ timeouts derive from
+    /// (`--wire-timeout-ms`; defaults to the historical 30 s).
+    pub timeout: Duration,
+    /// Recovery counter block to account into; `None` allocates a
+    /// fresh one. `WireEngine` passes one block across re-rings so
+    /// [`RecoveryStats`] stays cumulative.
+    pub counters: Option<Arc<RecoveryCounters>>,
+    /// Force the ring's wire version ([`V1`] or [`VERSION`]) instead
+    /// of negotiating v2; `None` ⇒ negotiate (v2 for in-process rings).
+    pub force_version: Option<u16>,
+}
+
+impl Default for RingOpts {
+    fn default() -> Self {
+        RingOpts {
+            faults: None,
+            timeout: READ_TIMEOUT,
+            counters: None,
+            force_version: None,
+        }
+    }
+}
+
+impl RingOpts {
+    fn resolve_counters(&self) -> Arc<RecoveryCounters> {
+        self.counters
+            .clone()
+            .unwrap_or_else(|| Arc::new(RecoveryCounters::new()))
+    }
+
+    fn active_faults(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref().filter(|p| !p.is_empty())
+    }
+
+    fn validate(&self) -> Result<(), WireError> {
+        if let Some(v) = self.force_version {
+            if v != V1 && v != VERSION {
+                return Err(WireError::Corrupt(format!(
+                    "unsupported forced wire version {v} (1 or {VERSION})"
+                )));
+            }
+        }
+        if let Some(plan) = self.active_faults() {
+            plan.validate().map_err(WireError::Corrupt)?;
+            if self.force_version == Some(V1) {
+                return Err(fault::refuse(
+                    "the v1 wire protocol has no CRC/ARQ to recover with",
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Coordinator handle over an `n`-rank socket ring.
 ///
 /// Every collective is a sequence of *spreads*: a frame injected at
@@ -105,6 +200,8 @@ impl std::fmt::Display for TransportKind {
 pub struct WireRing {
     n: usize,
     transport: TransportKind,
+    /// Negotiated wire version for every post-handshake frame.
+    version: u16,
     epoch: u32,
     /// Injection halves, indexed by rank.
     ctl_w: Vec<WireStream>,
@@ -115,34 +212,61 @@ pub struct WireRing {
     /// Per-hop link parameters from the handshake (entry `i` = rank
     /// `i`'s egress edge).
     links: Vec<LinkSpec>,
-    /// Real bytes that traversed ring edges (frame length × hops).
+    /// Shared recovery accounting across all edges (and re-rings).
+    counters: Arc<RecoveryCounters>,
+    /// Real bytes that traversed ring edges (data-frame length at the
+    /// negotiated version × hops; ACK/NACK traffic is deliberately
+    /// excluded — it is recovery overhead, not payload movement, and
+    /// its volume is reported through [`RecoveryStats`] instead).
     real_bytes: u64,
 }
 
 impl WireRing {
-    /// Build an in-process ring: socket pairs for every control
-    /// channel and ring edge, rank threads spawned here, handshake run
-    /// synchronously before any data frame.
+    /// Build an in-process ring with default options (negotiated v2,
+    /// no faults, 30 s timeouts) — see [`WireRing::new_in_process_with`].
     pub fn new_in_process(
         transport: TransportKind,
         links: Vec<LinkSpec>,
     ) -> Result<WireRing, WireError> {
+        Self::new_in_process_with(transport, links, RingOpts::default())
+    }
+
+    /// Build an in-process ring: socket pairs for every control
+    /// channel and ring edge, rank threads spawned here, handshake run
+    /// synchronously before any data frame. The handshake travels at
+    /// wire version 1 and negotiates the session version via
+    /// [`FLAG_CAP_V2`]; `opts.faults` arms the per-edge fault shim
+    /// (v2 rings only).
+    pub fn new_in_process_with(
+        transport: TransportKind,
+        links: Vec<LinkSpec>,
+        opts: RingOpts,
+    ) -> Result<WireRing, WireError> {
         let n = links.len();
         assert!(n >= 2, "ring needs at least 2 ranks");
         assert!(transport.is_wire(), "in-process ring needs a socket transport");
+        opts.validate()?;
+        let want = opts.force_version.unwrap_or(VERSION);
         let mut ctl_coord = Vec::with_capacity(n);
         let mut ctl_rank = Vec::with_capacity(n);
+        let mut all_v2 = true;
         for r in 0..n {
             let (mut coord, mut rank_side) = WireStream::pair(transport)?;
-            // Same handshake frames an external rank sends (peer::serve_rank).
-            Frame::new(
+            // Same handshake frames an external rank sends
+            // (peer::serve_rank): always encoded at v1, capability
+            // advertised in the flags byte so the payload stays
+            // byte-identical to what v1 builds parse.
+            let mut hello = Frame::new(
                 Kind::Hello,
                 r as u16,
                 0,
                 0,
                 codec::encode_hello(r as u16, n as u16),
-            )
-            .write_to(&mut rank_side)?;
+            );
+            if want >= VERSION {
+                hello.flags = FLAG_CAP_V2;
+            }
+            hello.write_to(&mut rank_side)?;
             let hello = Frame::read_from(&mut coord)?;
             let (rank, rn) = codec::decode_hello(&hello.payload)?;
             if hello.kind != Kind::Hello || rank as usize != r || rn as usize != n {
@@ -151,15 +275,36 @@ impl WireRing {
                     hello.kind
                 )));
             }
-            Frame::new(Kind::HelloAck, r as u16, 0, 0, codec::encode_hello_ack(&links))
-                .write_to(&mut coord)?;
-            let ack = Frame::read_from(&mut rank_side)?;
+            all_v2 &= hello.flags & FLAG_CAP_V2 != 0;
+            ctl_coord.push(coord);
+            ctl_rank.push(rank_side);
+        }
+        // The ring runs v2 iff every Hello advertised the capability.
+        let version = if all_v2 { VERSION } else { V1 };
+        for (r, (coord, rank_side)) in
+            ctl_coord.iter_mut().zip(ctl_rank.iter_mut()).enumerate()
+        {
+            let mut ack = Frame::new(
+                Kind::HelloAck,
+                r as u16,
+                0,
+                0,
+                codec::encode_hello_ack(&links),
+            );
+            if version >= VERSION {
+                ack.flags = FLAG_CAP_V2;
+            }
+            ack.write_to(coord)?;
+            let ack = Frame::read_from(rank_side)?;
             let acked = codec::decode_hello_ack(&ack.payload)?;
             if ack.kind != Kind::HelloAck || acked.len() != n {
                 return Err(WireError::Corrupt("handshake: bad HelloAck".into()));
             }
-            ctl_coord.push(coord);
-            ctl_rank.push(rank_side);
+        }
+        if version < VERSION && opts.active_faults().is_some() {
+            return Err(fault::refuse(
+                "the ring negotiated wire v1, which has no CRC/ARQ",
+            ));
         }
         // Ring edges: edge r carries rank r → rank (r+1) mod n.
         let mut succs = Vec::with_capacity(n);
@@ -169,6 +314,8 @@ impl WireRing {
             succs.push(w);
             preds[(r + 1) % n] = Some(rd);
         }
+        let counters = opts.resolve_counters();
+        let plan = opts.active_faults();
         let mut sessions = Vec::with_capacity(n);
         for (r, ((ctl, succ), pred)) in ctl_rank
             .into_iter()
@@ -176,25 +323,53 @@ impl WireRing {
             .zip(preds.iter_mut().map(|p| p.take().expect("pred wired")))
             .enumerate()
         {
-            sessions.push(peer::spawn_rank(r as u16, ctl, pred, succ)?);
+            let session_opts = SessionOpts {
+                version,
+                faults: plan.and_then(|p| p.edge_faults(r, n)),
+                attempts: plan.map_or(fault::DEFAULT_ATTEMPTS, |p| p.attempts),
+                timeout: opts.timeout,
+                counters: counters.clone(),
+            };
+            sessions.push(peer::spawn_rank_with(r as u16, ctl, pred, succ, session_opts)?);
         }
-        Self::finish(n, transport, ctl_coord, sessions, links)
+        Self::finish(n, transport, version, opts.timeout, counters, ctl_coord, sessions, links)
     }
 
-    /// Attach to `n` external `ringiwp serve` ranks rendezvousing in
-    /// `dir`: bind the `ctl` endpoint, accept every rank's Hello
-    /// (identified by its payload, not accept order), and reply with
-    /// the per-hop link table.
+    /// Attach to `n` external `ringiwp serve` ranks with default
+    /// options — see [`WireRing::connect_external_with`].
     pub fn connect_external(
         dir: &Path,
         transport: TransportKind,
         links: Vec<LinkSpec>,
     ) -> Result<WireRing, WireError> {
+        Self::connect_external_with(dir, transport, links, RingOpts::default())
+    }
+
+    /// Attach to `n` external `ringiwp serve` ranks rendezvousing in
+    /// `dir`: bind the `ctl` endpoint, accept every rank's Hello
+    /// (identified by its payload, not accept order), and reply with
+    /// the per-hop link table. The ring runs wire v2 iff every rank's
+    /// Hello advertised [`FLAG_CAP_V2`]; fault injection is refused
+    /// (it is an in-process test harness, not a tool to corrupt real
+    /// peers' traffic).
+    pub fn connect_external_with(
+        dir: &Path,
+        transport: TransportKind,
+        links: Vec<LinkSpec>,
+        opts: RingOpts,
+    ) -> Result<WireRing, WireError> {
         let n = links.len();
         assert!(n >= 2, "ring needs at least 2 ranks");
         assert!(transport.is_wire(), "external ring needs a socket transport");
+        opts.validate()?;
+        if opts.active_faults().is_some() {
+            return Err(fault::refuse(
+                "external rings own real peers; faults are in-process only",
+            ));
+        }
         let listener = WireListener::bind(dir, "ctl", transport)?;
         let mut by_rank: Vec<Option<WireStream>> = (0..n).map(|_| None).collect();
+        let mut all_v2 = true;
         for _ in 0..n {
             let mut s = listener.accept()?;
             let hello = Frame::read_from(&mut s)?;
@@ -213,24 +388,44 @@ impl WireRing {
             if rank as usize >= n {
                 return Err(WireError::Corrupt(format!("rank {rank} out of range")));
             }
+            all_v2 &= hello.flags & FLAG_CAP_V2 != 0;
             if by_rank[rank as usize].replace(s).is_some() {
                 return Err(WireError::Corrupt(format!("rank {rank} joined twice")));
             }
         }
+        let version = match opts.force_version {
+            Some(v) => v.min(if all_v2 { VERSION } else { V1 }),
+            None if all_v2 => VERSION,
+            None => V1,
+        };
         let mut ctl_coord = Vec::with_capacity(n);
         for (r, slot) in by_rank.iter_mut().enumerate() {
             let mut s = slot.take().expect("all ranks joined");
-            Frame::new(Kind::HelloAck, r as u16, 0, 0, codec::encode_hello_ack(&links))
-                .write_to(&mut s)?;
+            let mut ack = Frame::new(
+                Kind::HelloAck,
+                r as u16,
+                0,
+                0,
+                codec::encode_hello_ack(&links),
+            );
+            if version >= VERSION {
+                ack.flags = FLAG_CAP_V2;
+            }
+            ack.write_to(&mut s)?;
             ctl_coord.push(s);
         }
-        Self::finish(n, transport, ctl_coord, Vec::new(), links)
+        let counters = opts.resolve_counters();
+        Self::finish(n, transport, version, opts.timeout, counters, ctl_coord, Vec::new(), links)
     }
 
     /// Split ctl streams into directional halves and arm read timeouts.
+    #[allow(clippy::too_many_arguments)]
     fn finish(
         n: usize,
         transport: TransportKind,
+        version: u16,
+        timeout: Duration,
+        counters: Arc<RecoveryCounters>,
         ctl: Vec<WireStream>,
         sessions: Vec<RankSession>,
         links: Vec<LinkSpec>,
@@ -239,18 +434,20 @@ impl WireRing {
         let mut ctl_r = Vec::with_capacity(n);
         for s in ctl {
             let r = s.try_clone()?;
-            r.set_read_timeout(Some(READ_TIMEOUT))?;
+            r.set_read_timeout(Some(timeout))?;
             ctl_w.push(s);
             ctl_r.push(r);
         }
         Ok(WireRing {
             n,
             transport,
+            version,
             epoch: 0,
             ctl_w,
             ctl_r,
             sessions,
             links,
+            counters,
             real_bytes: 0,
         })
     }
@@ -265,14 +462,26 @@ impl WireRing {
         self.transport
     }
 
+    /// Negotiated wire version ([`V1`] or [`VERSION`]).
+    pub fn version(&self) -> u16 {
+        self.version
+    }
+
     /// Per-hop link parameters delivered by the handshake.
     pub fn links(&self) -> &[LinkSpec] {
         &self.links
     }
 
-    /// Total real bytes that traversed ring edges so far.
+    /// Total real bytes that traversed ring edges so far (data frames
+    /// only; ACK/NACK overhead is excluded by design).
     pub fn real_bytes(&self) -> u64 {
         self.real_bytes
+    }
+
+    /// Recovery totals so far. Advisory while the ring is live; exact
+    /// once [`WireRing::shutdown`] has joined the session threads.
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        self.counters.snapshot()
     }
 
     /// Stamp subsequent frames with this step's epoch; copies with a
@@ -281,7 +490,8 @@ impl WireRing {
         self.epoch = epoch;
     }
 
-    /// Override the delivery-side read timeout ([`peer::READ_TIMEOUT`]
+    /// Override the delivery-side read timeout (the ring's wire
+    /// timeout — `--wire-timeout-ms`, default [`peer::READ_TIMEOUT`] —
     /// by default). A partitioned or dead rank then surfaces as a
     /// typed [`WireError::Io`] after `d` instead of 30 s — the seam
     /// the chaos/failure tests use to keep partition detection fast.
@@ -294,7 +504,10 @@ impl WireRing {
 
     /// Spread one frame from `origin` across all `n-1` ring edges,
     /// collect every relay's delivered copy in hop order, verify the
-    /// copies byte-identical, and return the payload.
+    /// copies byte-identical, and return the payload. If a session
+    /// thread died on an unrecoverable fault, the typed error it
+    /// recorded is surfaced here instead of the bare control-channel
+    /// timeout it causes.
     fn spread(
         &mut self,
         origin: usize,
@@ -305,6 +518,7 @@ impl WireRing {
         assert!(origin < self.n, "origin {origin} out of range");
         let ttl = (self.n - 1) as u16;
         let epoch = self.epoch;
+        let version = self.version;
         let frame = Frame {
             kind,
             flags,
@@ -313,7 +527,7 @@ impl WireRing {
             epoch,
             payload,
         };
-        self.real_bytes += frame.encoded_len() as u64 * ttl as u64;
+        self.real_bytes += frame.encoded_len_at(version) as u64 * ttl as u64;
         let n = self.n;
         let ctl_w = &mut self.ctl_w[origin];
         let ctl_r = &mut self.ctl_r;
@@ -323,7 +537,7 @@ impl WireRing {
         // otherwise deadlock the write against the unread copies.
         let collected: Result<(), WireError> = std::thread::scope(|s| {
             let inject = s.spawn(move || -> Result<(), WireError> {
-                frame.write_to(ctl_w)?;
+                frame.write_to_at(ctl_w, version, 0)?;
                 std::io::Write::flush(ctl_w)?;
                 Ok(())
             });
@@ -334,7 +548,10 @@ impl WireRing {
                 .join()
                 .unwrap_or_else(|_| Err(WireError::Corrupt("inject thread panicked".into())))
         });
-        collected?;
+        if let Err(e) = collected {
+            // Prefer the typed root cause a dying session recorded.
+            return Err(self.counters.take_fatal().unwrap_or(e));
+        }
         for (i, c) in copies.iter().enumerate() {
             if c.epoch != epoch {
                 return Err(WireError::Corrupt(format!(
@@ -440,23 +657,51 @@ impl WireRing {
 
     /// Tear the ring down: one Shutdown around the ring stops every
     /// relay, a ttl-0 Shutdown on each control channel stops every
-    /// uplink, then in-process sessions are joined. Idempotent.
+    /// uplink, then in-process sessions are joined. Teardown is
+    /// best-effort end to end — after an unrecoverable fault killed a
+    /// session thread, the circulation is broken, so surviving relays
+    /// are released through the shared down-flag (checked on their
+    /// idle ticks) and every join stays bounded by the ARQ budgets.
+    /// Idempotent; the first error (preferring a recorded typed fatal)
+    /// is returned after all sessions are reaped.
     pub fn shutdown(&mut self) -> Result<(), WireError> {
         if self.ctl_w.is_empty() {
             return Ok(());
         }
         let epoch = self.epoch;
-        Frame::new(Kind::Shutdown, 0, self.n as u16, epoch, Vec::new())
-            .write_to(&mut self.ctl_w[0])?;
+        let version = self.version;
+        let mut first_err: Option<WireError> = None;
+        if self.counters.has_fatal() {
+            self.counters.request_down();
+        }
+        if let Err(e) = Frame::new(Kind::Shutdown, 0, self.n as u16, epoch, Vec::new())
+            .write_to_at(&mut self.ctl_w[0], version, 0)
+        {
+            first_err.get_or_insert(e);
+        }
         for w in self.ctl_w.iter_mut() {
-            Frame::new(Kind::Shutdown, 0, 0, epoch, Vec::new()).write_to(w)?;
+            if let Err(e) =
+                Frame::new(Kind::Shutdown, 0, 0, epoch, Vec::new()).write_to_at(w, version, 0)
+            {
+                first_err.get_or_insert(e);
+            }
         }
         self.ctl_w.clear();
         self.ctl_r.clear();
-        for s in self.sessions.drain(..) {
-            s.join()?;
+        // A fatal recorded between the first check and here still needs
+        // the down-flag, or a survivor relay would idle forever.
+        if self.counters.has_fatal() {
+            self.counters.request_down();
         }
-        Ok(())
+        for s in self.sessions.drain(..) {
+            if let Err(e) = s.join() {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(self.counters.take_fatal().unwrap_or(e)),
+            None => Ok(()),
+        }
     }
 }
 
@@ -488,11 +733,14 @@ mod tests {
     #[test]
     fn dense_exchange_roundtrips_and_accounts() {
         let mut ring = WireRing::new_in_process(TransportKind::Uds, uniform(4)).unwrap();
+        assert_eq!(ring.version(), VERSION);
         ring.begin_step(1);
         let v: Vec<f32> = (0..37).map(|i| i as f32 * 0.5 - 9.0).collect();
         assert_eq!(ring.exchange_dense(&v).unwrap(), 37);
         assert!(ring.real_bytes() > 0);
         ring.shutdown().unwrap();
+        // A clean ring recovers nothing.
+        assert_eq!(ring.recovery_stats(), RecoveryStats::default());
     }
 
     #[test]
@@ -546,5 +794,85 @@ mod tests {
         let ring = WireRing::new_in_process(TransportKind::Uds, links).unwrap();
         assert_eq!(ring.links().len(), 2);
         assert_eq!(ring.links()[1].bandwidth_bps, 5e8);
+    }
+
+    #[test]
+    fn forced_v1_ring_still_interops() {
+        // A ring whose peers lack FLAG_CAP_V2 degrades to v1 framing
+        // and keeps moving payloads byte-exactly.
+        let opts = RingOpts {
+            force_version: Some(V1),
+            ..RingOpts::default()
+        };
+        let mut ring =
+            WireRing::new_in_process_with(TransportKind::Uds, uniform(3), opts).unwrap();
+        assert_eq!(ring.version(), V1);
+        ring.begin_step(5);
+        assert_eq!(ring.exchange_dense(&[1.0, -2.0, 3.5, 0.25]).unwrap(), 4);
+        ring.shutdown().unwrap();
+        assert_eq!(ring.recovery_stats(), RecoveryStats::default());
+    }
+
+    #[test]
+    fn v2_trailer_is_accounted_in_real_bytes() {
+        let run = |force: Option<u16>| -> u64 {
+            let mut ring = WireRing::new_in_process_with(
+                TransportKind::Uds,
+                uniform(3),
+                RingOpts {
+                    force_version: force,
+                    ..RingOpts::default()
+                },
+            )
+            .unwrap();
+            ring.begin_step(1);
+            ring.exchange_dense(&[1.0, 2.0, 3.0]).unwrap();
+            let b = ring.real_bytes();
+            ring.shutdown().unwrap();
+            b
+        };
+        let v2 = run(None);
+        let v1 = run(Some(V1));
+        // 3 chunks × 2 hops × 8-byte trailer.
+        assert_eq!(v2, v1 + 3 * 2 * frame::TRAILER_LEN as u64);
+    }
+
+    #[test]
+    fn fault_plan_recovers_bitexact_with_stats() {
+        let plan = FaultPlan::parse("seed=11,flip@0:0,dup@1:1,delay@0:2:2").unwrap();
+        let opts = RingOpts {
+            faults: Some(plan),
+            timeout: Duration::from_secs(5),
+            ..RingOpts::default()
+        };
+        let mut ring =
+            WireRing::new_in_process_with(TransportKind::Uds, uniform(3), opts).unwrap();
+        ring.begin_step(1);
+        let v: Vec<f32> = (0..23).map(|i| (i as f32).sin()).collect();
+        assert_eq!(ring.exchange_dense(&v).unwrap(), 23);
+        ring.shutdown().unwrap();
+        let stats = ring.recovery_stats();
+        assert!(stats.retransmits >= 1, "{stats}");
+        assert!(stats.nacks >= 1, "{stats}");
+        assert!(stats.dup_drops >= 1, "{stats}");
+    }
+
+    #[test]
+    fn faults_are_refused_on_v1_and_external_rings() {
+        let opts = RingOpts {
+            faults: Some(FaultPlan::parse("flip@0:0").unwrap()),
+            force_version: Some(V1),
+            ..RingOpts::default()
+        };
+        assert!(WireRing::new_in_process_with(TransportKind::Uds, uniform(2), opts).is_err());
+        let dir = std::env::temp_dir().join("riwp-fault-refuse-test");
+        let _ = std::fs::create_dir_all(&dir);
+        let opts = RingOpts {
+            faults: Some(FaultPlan::parse("flip@0:0").unwrap()),
+            ..RingOpts::default()
+        };
+        assert!(
+            WireRing::connect_external_with(&dir, TransportKind::Uds, uniform(2), opts).is_err()
+        );
     }
 }

@@ -1,30 +1,50 @@
-//! Socket plumbing and per-rank relay sessions (DESIGN.md §13).
+//! Socket plumbing, per-rank relay sessions, and per-hop recovery
+//! (DESIGN.md §13, §16).
 //!
 //! A wire ring is `n` rank sessions plus one coordinator. Rank `r`
 //! owns three streams:
 //!
 //! * `ctl`  — full-duplex to the coordinator: injections arrive on the
 //!   read side, delivered copies leave on the write side;
-//! * `pred` — read half of ring edge `(r-1) mod n → r`;
-//! * `succ` — write half of ring edge `r → (r+1) mod n`.
+//! * `pred` — ring edge `(r-1) mod n → r`: data frames in, ACK/NACK
+//!   out (the edge socket is full-duplex, so acknowledgments travel
+//!   backwards on the same connection);
+//! * `succ` — ring edge `r → (r+1) mod n`: data frames out, ACK/NACK
+//!   in.
 //!
-//! Each session runs two threads ([`spawn_rank`]):
+//! Each session runs two threads ([`spawn_rank`] / [`spawn_rank_with`]):
 //!
-//! * **uplink** reads frames off `ctl` and writes them to `succ` (a
+//! * **uplink** reads frames off `ctl` and sends them down `succ` (a
 //!   `Shutdown` with `ttl == 0` stops the thread instead);
-//! * **relay** reads frames off `pred`; for data frames it writes a
+//! * **relay** receives frames off `pred`; for data frames it writes a
 //!   `ttl`-zeroed copy back to the coordinator over `ctl` and, while
 //!   `ttl > 1`, forwards the frame to `succ` with `ttl - 1`. A
 //!   `Shutdown` frame is forwarded (while `ttl > 1`) but never
 //!   delivered, and stops the thread.
 //!
-//! `succ` is shared between the two threads behind a mutex; `ctl` is
-//! split by `try_clone` so the directions never contend. A frame
-//! injected at `origin` with `ttl = t` therefore traverses `t` real
-//! ring edges and produces exactly `t` delivered copies — one from
-//! each of ranks `origin+1 … origin+t (mod n)` — which the
-//! coordinator collects in deterministic hop order and verifies
-//! byte-identical (`net::wire::WireRing`).
+//! `succ` is owned by an [`EdgeTx`] shared between the two threads
+//! behind a mutex; `ctl` is split by `try_clone` so the directions
+//! never contend. A frame injected at `origin` with `ttl = t`
+//! traverses `t` real ring edges and produces exactly `t` delivered
+//! copies — one from each of ranks `origin+1 … origin+t (mod n)` —
+//! which the coordinator collects in deterministic hop order and
+//! verifies byte-identical (`net::wire::WireRing`).
+//!
+//! ## Per-hop recovery (wire protocol v2, DESIGN.md §16)
+//!
+//! On a v2-negotiated ring every ring-edge data frame runs through a
+//! stop-and-wait ARQ: [`EdgeTx`] assigns a per-edge sequence number,
+//! transmits, and waits (bounded) for the matching `Ack`; [`EdgeRx`]
+//! CRC-validates, suppresses duplicate sequence numbers, and answers
+//! corruption or a mid-frame stall with drain-and-resync + `Nack`.
+//! Acknowledgment always precedes forwarding/delivery, so only one
+//! data frame is ever outstanding per injection and the relay cascade
+//! cannot deadlock on the shared `succ` mutex. Recovery activity is
+//! accounted in a shared [`RecoveryCounters`] block and surfaced as
+//! [`RecoveryStats`]; unrecoverable faults record a typed fatal error
+//! there before the session thread dies, so the coordinator can
+//! surface *why* instead of a bare timeout. Control channels get the
+//! CRC check (v2 framing) but no ARQ — they are process-local pipes.
 //!
 //! Two wirings share this module: in-process rings build their edges
 //! from socket pairs ([`WireStream::pair`]), and external rings
@@ -38,19 +58,526 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::codec;
-use super::frame::{Frame, Kind, WireError};
+use super::fault::EdgeFaults;
+use super::fault::{FaultKind, DEFAULT_ATTEMPTS};
+use super::frame::{Frame, FrameMeta, Kind, WireError, FLAG_CAP_V2, HEADER_LEN, V1, VERSION};
 use super::TransportKind;
 
-/// How long connect-with-retry waits for a peer to bind.
+/// How long connect-with-retry waits for a peer to bind (default; the
+/// `--wire-timeout-ms` knob overrides it per run).
 pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// Coordinator-side read timeout: a hung rank surfaces as a typed
+/// Coordinator-side read timeout (default; the `--wire-timeout-ms`
+/// knob overrides it per run): a hung rank surfaces as a typed
 /// [`WireError::Io`] (`WouldBlock`/`TimedOut`) instead of a hung run.
 pub const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Settle pause before drain-and-resync: lets the tail of a truncated
+/// write land so the drain consumes all of it.
+const SETTLE: Duration = Duration::from_millis(20);
+
+/// Read timeout while draining a desynchronized edge.
+const DRAIN: Duration = Duration::from_millis(20);
+
+/// First reconnect backoff step (microseconds, nominal accounting).
+const BACKOFF_BASE_US: u64 = 1_000;
+
+/// Exponential backoff cap (microseconds).
+const BACKOFF_CAP_US: u64 = 64_000;
+
+/// Per-frame receive timeout on a v2 ring edge, derived from the wire
+/// timeout knob: long enough to never fire on a healthy edge, short
+/// enough that a truncated frame is detected well inside the sender's
+/// ACK wait.
+pub fn rx_frame_timeout(wire_timeout: Duration) -> Duration {
+    (wire_timeout / 30).clamp(Duration::from_millis(100), Duration::from_secs(1))
+}
+
+/// Sender-side ACK wait: 4× the receive timeout, so the receiver's
+/// NACK always wins the race and the sender's timeout only fires when
+/// the frame never arrived at all (drop faults, dead peer).
+pub fn tx_ack_timeout(wire_timeout: Duration) -> Duration {
+    rx_frame_timeout(wire_timeout) * 4
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+fn is_disconnect(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::BrokenPipe
+            | std::io::ErrorKind::UnexpectedEof
+    )
+}
+
+/// Best-effort structural copy of a [`WireError`] (the type holds an
+/// `io::Error` and so cannot be `Clone`); used to both *record* a
+/// fatal error for the coordinator and *return* it up the thread.
+fn mirror(e: &WireError) -> WireError {
+    match e {
+        WireError::BadMagic => WireError::BadMagic,
+        WireError::Version { got, want } => WireError::Version {
+            got: *got,
+            want: *want,
+        },
+        WireError::BadKind(b) => WireError::BadKind(*b),
+        WireError::Truncated { need, got } => WireError::Truncated {
+            need: *need,
+            got: *got,
+        },
+        WireError::Checksum { expected, got } => WireError::Checksum {
+            expected: *expected,
+            got: *got,
+        },
+        WireError::Exhausted { attempts } => WireError::Exhausted {
+            attempts: *attempts,
+        },
+        WireError::Corrupt(s) => WireError::Corrupt(s.clone()),
+        WireError::Io(io) => WireError::Io(std::io::Error::new(io.kind(), io.to_string())),
+    }
+}
+
+/// Snapshot of recovery activity on a ring (all edges summed). The
+/// counters are cumulative over the ring's lifetime and survive
+/// elastic re-rings when the caller threads the same
+/// [`RecoveryCounters`] through (as `WireEngine` does).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Data-frame retransmissions (any send attempt after the first).
+    pub retransmits: u64,
+    /// Connection resets recovered by reconnect + backoff.
+    pub reconnects: u64,
+    /// Duplicate data frames suppressed by sequence number.
+    pub dup_drops: u64,
+    /// NACKs issued after corruption or a mid-frame stall.
+    pub nacks: u64,
+    /// Nominal backoff time spent in reconnects, microseconds.
+    pub backoff_us: u64,
+}
+
+impl RecoveryStats {
+    /// Total discrete recovery events (excludes backoff time).
+    pub fn total_events(&self) -> u64 {
+        self.retransmits + self.reconnects + self.dup_drops + self.nacks
+    }
+}
+
+impl std::fmt::Display for RecoveryStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "retransmits={} reconnects={} dup_drops={} nacks={} backoff_us={}",
+            self.retransmits, self.reconnects, self.dup_drops, self.nacks, self.backoff_us
+        )
+    }
+}
+
+/// Shared, thread-safe recovery accounting plus a slot for the first
+/// typed fatal error a session thread hit (so the coordinator can
+/// report the cause instead of a bare control-channel timeout).
+#[derive(Debug, Default)]
+pub struct RecoveryCounters {
+    retransmits: AtomicU64,
+    reconnects: AtomicU64,
+    dup_drops: AtomicU64,
+    nacks: AtomicU64,
+    backoff_us: AtomicU64,
+    fatal: Mutex<Option<WireError>>,
+    /// Teardown flag: set when the coordinator shuts down a ring whose
+    /// Shutdown circulation may be broken (a session thread died on an
+    /// unrecoverable fault). Survivor relays check it on idle ticks so
+    /// every join stays bounded.
+    down: AtomicBool,
+}
+
+impl RecoveryCounters {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        RecoveryCounters::default()
+    }
+
+    /// Current totals. Only authoritative once the ring has shut down
+    /// (session threads joined); mid-run snapshots are advisory.
+    pub fn snapshot(&self) -> RecoveryStats {
+        RecoveryStats {
+            retransmits: self.retransmits.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            dup_drops: self.dup_drops.load(Ordering::Relaxed),
+            nacks: self.nacks.load(Ordering::Relaxed),
+            backoff_us: self.backoff_us.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Record the first fatal error (later ones are dropped — the
+    /// first cause is the one worth reporting) and return a structural
+    /// copy for the caller to propagate.
+    pub fn record_fatal(&self, e: WireError) -> WireError {
+        let m = mirror(&e);
+        let mut slot = self.fatal.lock().expect("fatal slot poisoned");
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+        m
+    }
+
+    /// Take the recorded fatal error, if any.
+    pub fn take_fatal(&self) -> Option<WireError> {
+        self.fatal.lock().expect("fatal slot poisoned").take()
+    }
+
+    /// True if a fatal error has been recorded (and not yet taken).
+    pub fn has_fatal(&self) -> bool {
+        self.fatal.lock().expect("fatal slot poisoned").is_some()
+    }
+
+    /// Ask surviving relays to exit at their next idle tick — the
+    /// teardown path for rings whose Shutdown circulation is broken.
+    pub fn request_down(&self) {
+        self.down.store(true, Ordering::Relaxed);
+    }
+
+    /// True once teardown has been requested.
+    pub fn is_down(&self) -> bool {
+        self.down.load(Ordering::Relaxed)
+    }
+
+    fn bump(&self, c: &AtomicU64) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+enum AckOutcome {
+    Acked,
+    Nacked,
+    TimedOut,
+    Disconnected,
+    Fatal(WireError),
+}
+
+/// Sending half of one ring edge: owns the `succ` stream, assigns the
+/// per-edge sequence numbers, applies scheduled faults to its own
+/// writes, and (on v2) runs the bounded stop-and-wait retransmit loop.
+#[derive(Debug)]
+pub struct EdgeTx {
+    stream: WireStream,
+    version: u16,
+    seq: u32,
+    frames: u64,
+    faults: Option<EdgeFaults>,
+    attempts: u32,
+    counters: Arc<RecoveryCounters>,
+}
+
+impl EdgeTx {
+    /// Build the sender for one edge. On a v2 ring the stream's read
+    /// side is armed with `ack_timeout` (it only ever carries ACK/NACK
+    /// traffic back from the successor).
+    pub fn new(
+        stream: WireStream,
+        version: u16,
+        faults: Option<EdgeFaults>,
+        attempts: u32,
+        ack_timeout: Duration,
+        counters: Arc<RecoveryCounters>,
+    ) -> Result<EdgeTx, WireError> {
+        if version >= VERSION {
+            stream.set_read_timeout(Some(ack_timeout))?;
+        }
+        Ok(EdgeTx {
+            stream,
+            version,
+            seq: 0,
+            frames: 0,
+            faults,
+            attempts,
+            counters,
+        })
+    }
+
+    /// Send one data frame down the edge. v1: a single write. v2:
+    /// sequence, transmit (with any scheduled fault applied to this
+    /// attempt's bytes), await ACK/NACK, retransmit up to the bounded
+    /// attempt budget, then fail typed ([`WireError::Exhausted`]).
+    pub fn send(&mut self, f: &Frame) -> Result<(), WireError> {
+        if self.version < VERSION {
+            f.write_to(&mut self.stream)?;
+            self.stream.flush()?;
+            return Ok(());
+        }
+        self.seq = self.seq.wrapping_add(1);
+        let seq = self.seq;
+        let frame_idx = self.frames;
+        self.frames += 1;
+        let bytes = f.encode_at(VERSION, seq);
+        let mut attempt = 0u32;
+        while attempt < self.attempts {
+            let fault = self.faults.as_ref().and_then(|ef| ef.at(frame_idx, attempt));
+            match self.transmit(&bytes, frame_idx, attempt, fault) {
+                Ok(true) => {}
+                Ok(false) => {
+                    // Nothing reached the wire (reset fault / reconnect):
+                    // the attempt is consumed, retry after the backoff.
+                    attempt += 1;
+                    continue;
+                }
+                Err(e) => return Err(self.counters.record_fatal(e)),
+            }
+            match self.await_ack(seq) {
+                AckOutcome::Acked => return Ok(()),
+                AckOutcome::Nacked | AckOutcome::TimedOut => {
+                    attempt += 1;
+                }
+                AckOutcome::Disconnected => {
+                    self.reconnect_backoff(attempt);
+                    attempt += 1;
+                }
+                AckOutcome::Fatal(e) => return Err(self.counters.record_fatal(e)),
+            }
+        }
+        let e = WireError::Exhausted {
+            attempts: self.attempts,
+        };
+        Err(self.counters.record_fatal(e))
+    }
+
+    /// Write one attempt's bytes, applying `fault`. Returns whether
+    /// anything reached the wire (false consumes the attempt without a
+    /// transmission — reset faults and real disconnects).
+    fn transmit(
+        &mut self,
+        bytes: &[u8],
+        frame_idx: u64,
+        attempt: u32,
+        fault: Option<FaultKind>,
+    ) -> Result<bool, WireError> {
+        if attempt > 0 {
+            self.counters.bump(&self.counters.retransmits);
+        }
+        let write = |stream: &mut WireStream, buf: &[u8]| -> Result<(), std::io::Error> {
+            stream.write_all(buf)?;
+            stream.flush()
+        };
+        let res = match fault {
+            None => write(&mut self.stream, bytes),
+            Some(FaultKind::Flip) => {
+                let faults = self.faults.as_ref().expect("fault without schedule");
+                let bit = faults.flip_bit(frame_idx, attempt, bytes.len());
+                let mut c = bytes.to_vec();
+                c[bit / 8] ^= 1 << (bit % 8);
+                write(&mut self.stream, &c)
+            }
+            Some(FaultKind::Trunc) => {
+                let faults = self.faults.as_ref().expect("fault without schedule");
+                let cut = faults.trunc_cut(frame_idx, attempt, bytes.len());
+                write(&mut self.stream, &bytes[..cut])
+            }
+            Some(FaultKind::Drop) => Ok(()), // swallowed; ACK wait times out
+            Some(FaultKind::Dup) => {
+                write(&mut self.stream, bytes).and_then(|()| write(&mut self.stream, bytes))
+            }
+            Some(FaultKind::Delay(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                write(&mut self.stream, bytes)
+            }
+            Some(FaultKind::Reset) => {
+                self.reconnect_backoff(attempt);
+                return Ok(false);
+            }
+        };
+        match res {
+            Ok(()) => Ok(true),
+            Err(e) if is_disconnect(&e) => {
+                self.reconnect_backoff(attempt);
+                Ok(false)
+            }
+            Err(e) => Err(WireError::Io(e)),
+        }
+    }
+
+    fn await_ack(&mut self, seq: u32) -> AckOutcome {
+        loop {
+            match Frame::read_from_ext(&mut self.stream) {
+                Ok((af, meta)) => match af.kind {
+                    Kind::Ack if meta.seq == seq => return AckOutcome::Acked,
+                    Kind::Ack => continue, // stale ack from an earlier exchange
+                    Kind::Nack => return AckOutcome::Nacked,
+                    other => {
+                        return AckOutcome::Fatal(WireError::Corrupt(format!(
+                            "unexpected {other:?} frame on ack channel"
+                        )))
+                    }
+                },
+                Err(WireError::Io(e)) if is_timeout(&e) => return AckOutcome::TimedOut,
+                Err(WireError::Io(e)) if is_disconnect(&e) => return AckOutcome::Disconnected,
+                Err(e) => return AckOutcome::Fatal(e),
+            }
+        }
+    }
+
+    /// Account one reconnect with capped exponential backoff. For
+    /// in-process rings the underlying socket pair is reused (there is
+    /// no address to redial), so the backoff time is *nominal* but the
+    /// accounting — and the sleep, which keeps pacing honest — is real.
+    fn reconnect_backoff(&self, attempt: u32) {
+        self.counters.bump(&self.counters.reconnects);
+        let nominal = BACKOFF_BASE_US
+            .saturating_mul(1u64 << attempt.min(6))
+            .min(BACKOFF_CAP_US);
+        self.counters.backoff_us.fetch_add(nominal, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_micros(nominal));
+    }
+}
+
+/// Receiving half of one ring edge: CRC-validates, suppresses
+/// duplicate sequence numbers, and converts corruption or a mid-frame
+/// stall into drain-and-resync + NACK so the sender retransmits.
+#[derive(Debug)]
+pub struct EdgeRx {
+    stream: WireStream,
+    rank: u16,
+    version: u16,
+    last_seq: u32,
+    frame_timeout: Duration,
+    counters: Arc<RecoveryCounters>,
+}
+
+impl EdgeRx {
+    /// Build the receiver for one edge. On a v2 ring the stream is
+    /// armed with `frame_timeout` so a frame that starts but never
+    /// finishes (truncation) is detected and NACKed.
+    pub fn new(
+        stream: WireStream,
+        rank: u16,
+        version: u16,
+        frame_timeout: Duration,
+        counters: Arc<RecoveryCounters>,
+    ) -> Result<EdgeRx, WireError> {
+        if version >= VERSION {
+            stream.set_read_timeout(Some(frame_timeout))?;
+        }
+        Ok(EdgeRx {
+            stream,
+            rank,
+            version,
+            last_seq: 0,
+            frame_timeout,
+            counters,
+        })
+    }
+
+    /// Receive the next in-order data frame. `Ok(None)` is an idle
+    /// tick (no frame started within the timeout) — callers just loop.
+    /// The matching ACK is written *before* returning, so the sender
+    /// unblocks before this rank forwards or delivers.
+    pub fn recv(&mut self) -> Result<Option<Frame>, WireError> {
+        if self.version < VERSION {
+            // v1 edges keep the original blocking semantics.
+            return Frame::read_from(&mut self.stream).map(Some);
+        }
+        loop {
+            // 1-byte probe: distinguishes "edge idle" (timeout before
+            // any byte) from "mid-frame stall" (timeout after some).
+            let mut first = [0u8; 1];
+            match self.stream.read(&mut first) {
+                Ok(0) => {
+                    return Err(WireError::Io(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "ring edge closed",
+                    )))
+                }
+                Ok(_) => {}
+                Err(e) if is_timeout(&e) => return Ok(None),
+                Err(e) => return Err(WireError::Io(e)),
+            }
+            match self.read_rest(first[0]) {
+                Ok((f, meta)) => {
+                    if matches!(f.kind, Kind::Ack | Kind::Nack) {
+                        // Defensive: control frames never travel this
+                        // direction; ignore rather than desync.
+                        continue;
+                    }
+                    if meta.seq <= self.last_seq {
+                        // Duplicate (retransmit we already ACKed, or a
+                        // dup fault): suppress silently — re-ACKing
+                        // would confuse the stop-and-wait sender.
+                        self.counters.bump(&self.counters.dup_drops);
+                        continue;
+                    }
+                    if meta.seq != self.last_seq.wrapping_add(1) {
+                        return Err(WireError::Corrupt(format!(
+                            "edge sequence gap: expected {}, got {}",
+                            self.last_seq.wrapping_add(1),
+                            meta.seq
+                        )));
+                    }
+                    self.last_seq = meta.seq;
+                    self.ack(Kind::Ack, meta.seq, f.epoch)?;
+                    return Ok(Some(f));
+                }
+                Err(WireError::Io(e)) if is_timeout(&e) => {
+                    // Mid-frame stall (truncated write): resync + NACK.
+                    self.resync_and_nack()?;
+                }
+                Err(WireError::Io(e)) => return Err(WireError::Io(e)),
+                Err(_corrupt) => {
+                    // Checksum / magic / kind / version / length damage:
+                    // recoverable — resync + NACK for a retransmit.
+                    self.resync_and_nack()?;
+                }
+            }
+        }
+    }
+
+    fn read_rest(&mut self, first: u8) -> Result<(Frame, FrameMeta), WireError> {
+        let mut header = [0u8; HEADER_LEN];
+        header[0] = first;
+        self.stream.read_exact(&mut header[1..])?;
+        Frame::read_body_ext(&mut self.stream, &header)
+    }
+
+    /// After corruption the byte stream may be desynchronized (a
+    /// truncated frame leaves a partial tail). Under stop-and-wait at
+    /// most one data frame is in flight, so: settle briefly, drain
+    /// whatever is buffered, then NACK to request the retransmit.
+    fn resync_and_nack(&mut self) -> Result<(), WireError> {
+        std::thread::sleep(SETTLE);
+        self.stream.set_read_timeout(Some(DRAIN))?;
+        let mut scratch = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut scratch) {
+                Ok(0) => break, // EOF surfaces at the next probe
+                Ok(_) => continue,
+                Err(e) if is_timeout(&e) => break,
+                Err(e) => {
+                    let _ = self.stream.set_read_timeout(Some(self.frame_timeout));
+                    return Err(WireError::Io(e));
+                }
+            }
+        }
+        self.stream.set_read_timeout(Some(self.frame_timeout))?;
+        self.counters.bump(&self.counters.nacks);
+        self.ack(Kind::Nack, self.last_seq.wrapping_add(1), 0)
+    }
+
+    fn ack(&mut self, kind: Kind, seq: u32, epoch: u32) -> Result<(), WireError> {
+        let f = Frame::new(kind, self.rank, 0, epoch, Vec::new());
+        f.write_to_at(&mut self.stream, VERSION, seq)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+}
 
 /// One connected stream of either transport flavor.
 #[derive(Debug)]
@@ -187,6 +714,17 @@ fn port_path(dir: &Path, name: &str) -> PathBuf {
 /// Connect to rendezvous point `<dir>/<name>`, retrying until the
 /// peer binds or [`CONNECT_TIMEOUT`] expires.
 pub fn connect_retry(dir: &Path, name: &str, kind: TransportKind) -> Result<WireStream, WireError> {
+    connect_retry_with(dir, name, kind, CONNECT_TIMEOUT)
+}
+
+/// [`connect_retry`] with an explicit deadline (the `--wire-timeout-ms`
+/// knob).
+pub fn connect_retry_with(
+    dir: &Path,
+    name: &str,
+    kind: TransportKind,
+    timeout: Duration,
+) -> Result<WireStream, WireError> {
     let start = Instant::now();
     loop {
         let attempt: std::io::Result<WireStream> = match kind {
@@ -205,13 +743,43 @@ pub fn connect_retry(dir: &Path, name: &str, kind: TransportKind) -> Result<Wire
         };
         match attempt {
             Ok(s) => return Ok(s),
-            Err(e) if start.elapsed() >= CONNECT_TIMEOUT => {
+            Err(e) if start.elapsed() >= timeout => {
                 return Err(WireError::Io(std::io::Error::new(
                     e.kind(),
                     format!("connecting to {name} in {}: {e}", dir.display()),
                 )))
             }
             Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Per-session wiring options: the negotiated wire version, this
+/// rank's outgoing-edge fault schedule, the bounded retry budget, the
+/// wire timeout the ARQ deadlines derive from, and the shared recovery
+/// counters.
+#[derive(Debug, Clone)]
+pub struct SessionOpts {
+    /// Negotiated wire version ([`V1`] or [`VERSION`]).
+    pub version: u16,
+    /// Fault schedule for this rank's outgoing edge (tests/chaos only).
+    pub faults: Option<EdgeFaults>,
+    /// Bounded per-frame send-attempt budget.
+    pub attempts: u32,
+    /// Wire timeout the ARQ receive/ack deadlines derive from.
+    pub timeout: Duration,
+    /// Shared recovery accounting (one block per ring).
+    pub counters: Arc<RecoveryCounters>,
+}
+
+impl Default for SessionOpts {
+    fn default() -> Self {
+        SessionOpts {
+            version: V1,
+            faults: None,
+            attempts: DEFAULT_ATTEMPTS,
+            timeout: READ_TIMEOUT,
+            counters: Arc::new(RecoveryCounters::new()),
         }
     }
 }
@@ -239,39 +807,79 @@ impl RankSession {
     }
 }
 
-/// Spawn the uplink + relay threads for one rank session. `ctl` is
-/// split internally; `succ` is shared behind a mutex.
+/// Spawn the uplink + relay threads for one rank session at wire
+/// version 1 with no faults (byte-compatible with the pre-v2 ring).
 pub fn spawn_rank(
     rank: u16,
     ctl: WireStream,
     pred: WireStream,
     succ: WireStream,
 ) -> Result<RankSession, WireError> {
+    spawn_rank_with(rank, ctl, pred, succ, SessionOpts::default())
+}
+
+/// Spawn the uplink + relay threads for one rank session. `ctl` is
+/// split internally; `succ` is wrapped in an [`EdgeTx`] shared behind
+/// a mutex. On a v2 session both ring-edge directions run the ARQ
+/// described in the module docs; fatal errors are recorded in
+/// `opts.counters` before a thread dies.
+pub fn spawn_rank_with(
+    rank: u16,
+    ctl: WireStream,
+    pred: WireStream,
+    succ: WireStream,
+    opts: SessionOpts,
+) -> Result<RankSession, WireError> {
+    let version = opts.version;
+    let counters = opts.counters;
     let mut ctl_r = ctl.try_clone()?; // uplink reads injections
     let mut ctl_w = ctl; // relay writes deliveries
-    let succ = std::sync::Arc::new(Mutex::new(succ));
+    let tx = EdgeTx::new(
+        succ,
+        version,
+        opts.faults,
+        opts.attempts,
+        tx_ack_timeout(opts.timeout),
+        counters.clone(),
+    )?;
+    let tx = Arc::new(Mutex::new(tx));
 
-    let succ_up = succ.clone();
+    let tx_up = tx.clone();
+    let counters_up = counters.clone();
     let uplink = std::thread::Builder::new()
         .name(format!("riwp-uplink-{rank}"))
         .spawn(move || -> Result<(), WireError> {
             loop {
-                let f = Frame::read_from(&mut ctl_r)?;
+                let f = match Frame::read_from(&mut ctl_r) {
+                    Ok(f) => f,
+                    Err(e) => return Err(counters_up.record_fatal(e)),
+                };
                 if f.kind == Kind::Shutdown && f.ttl == 0 {
                     return Ok(());
                 }
-                let mut s = succ_up.lock().expect("succ mutex poisoned");
-                f.write_to(&mut *s)?;
-                s.flush()?;
+                let mut s = tx_up.lock().expect("edge tx mutex poisoned");
+                s.send(&f)?; // send() records its own fatal
             }
         })?;
 
-    let mut pred = pred;
+    let mut rx = EdgeRx::new(pred, rank, version, rx_frame_timeout(opts.timeout), counters.clone())?;
     let relay = std::thread::Builder::new()
         .name(format!("riwp-relay-{rank}"))
         .spawn(move || -> Result<(), WireError> {
             loop {
-                let f = Frame::read_from(&mut pred)?;
+                let f = match rx.recv() {
+                    Ok(Some(f)) => f,
+                    Ok(None) => {
+                        // Idle tick on a v2 edge. If the coordinator
+                        // requested teardown (broken Shutdown
+                        // circulation after a fatal), exit here.
+                        if counters.is_down() {
+                            return Ok(());
+                        }
+                        continue;
+                    }
+                    Err(e) => return Err(counters.record_fatal(e)),
+                };
                 let forward = f.ttl > 1;
                 if forward {
                     let fwd = Frame {
@@ -279,29 +887,60 @@ pub fn spawn_rank(
                         payload: f.payload.clone(),
                         ..f
                     };
-                    let mut s = succ.lock().expect("succ mutex poisoned");
-                    fwd.write_to(&mut *s)?;
-                    s.flush()?;
+                    let mut s = tx.lock().expect("edge tx mutex poisoned");
+                    s.send(&fwd)?; // send() records its own fatal
                 }
                 if f.kind == Kind::Shutdown {
                     return Ok(());
                 }
                 // Deliver a ttl-normalized copy so every hop's copy of
                 // the same injection is byte-identical at the
-                // coordinator.
+                // coordinator. Control frames carry no ARQ (seq 0) but
+                // do carry the v2 CRC when the ring negotiated it.
                 let delivered = Frame { ttl: 0, ..f };
-                delivered.write_to(&mut ctl_w)?;
-                ctl_w.flush()?;
+                if let Err(e) = delivered
+                    .write_to_at(&mut ctl_w, version, 0)
+                    .and_then(|()| ctl_w.flush().map_err(WireError::Io))
+                {
+                    return Err(counters.record_fatal(e));
+                }
             }
         })?;
 
     Ok(RankSession { uplink, relay })
 }
 
+/// Options for [`serve_rank_with`]: the rendezvous/read deadline and a
+/// caller-owned counter block so recovery stats survive even an
+/// erroring session.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Connect/read deadline (the `--wire-timeout-ms` knob).
+    pub timeout: Duration,
+    /// Shared recovery accounting (snapshot it after serving).
+    pub counters: Arc<RecoveryCounters>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            timeout: READ_TIMEOUT,
+            counters: Arc::new(RecoveryCounters::new()),
+        }
+    }
+}
+
+/// What [`serve_rank_with`] served.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeReport {
+    /// Completed sessions.
+    pub sessions: u32,
+    /// Recovery totals across all sessions served.
+    pub recovery: RecoveryStats,
+}
+
 /// Run rank `rank` of an `n`-node external ring rendezvousing in
-/// `dir`: handshake with the coordinator, wire the ring edges, then
-/// relay until the coordinator shuts the session down. Loops over
-/// sessions (re-connecting after each shutdown) unless `once` is set.
+/// `dir` (version-1 compatible wrapper; see [`serve_rank_with`]).
 /// Returns the number of sessions served.
 pub fn serve_rank(
     dir: &Path,
@@ -310,14 +949,35 @@ pub fn serve_rank(
     kind: TransportKind,
     once: bool,
 ) -> Result<u32, WireError> {
+    serve_rank_with(dir, rank, n, kind, once, ServeOpts::default()).map(|r| r.sessions)
+}
+
+/// Run rank `rank` of an `n`-node external ring rendezvousing in
+/// `dir`: handshake with the coordinator (advertising v2 capability
+/// via [`FLAG_CAP_V2`] and honoring the coordinator's decision), wire
+/// the ring edges, then relay until the coordinator shuts the session
+/// down. Loops over sessions (re-connecting after each shutdown)
+/// unless `once` is set.
+pub fn serve_rank_with(
+    dir: &Path,
+    rank: u16,
+    n: u16,
+    kind: TransportKind,
+    once: bool,
+    opts: ServeOpts,
+) -> Result<ServeReport, WireError> {
     assert!(n >= 2, "ring needs at least 2 ranks");
     assert!(rank < n, "rank {rank} out of range for n={n}");
     let listener = WireListener::bind(dir, &format!("rank-{rank}"), kind)?;
     let mut sessions = 0u32;
     loop {
-        // Handshake: Hello(rank, n) → coordinator, HelloAck back.
-        let mut ctl = connect_retry(dir, "ctl", kind)?;
-        Frame::new(Kind::Hello, rank, 0, 0, codec::encode_hello(rank, n)).write_to(&mut ctl)?;
+        // Handshake: Hello(rank, n) → coordinator, HelloAck back. The
+        // handshake always travels at wire version 1 — that is what
+        // makes the capability negotiation possible at all.
+        let mut ctl = connect_retry_with(dir, "ctl", kind, opts.timeout)?;
+        let mut hello = Frame::new(Kind::Hello, rank, 0, 0, codec::encode_hello(rank, n));
+        hello.flags = FLAG_CAP_V2;
+        hello.write_to(&mut ctl)?;
         ctl.flush()?;
         let ack = Frame::read_from(&mut ctl)?;
         if ack.kind != Kind::HelloAck {
@@ -326,6 +986,7 @@ pub fn serve_rank(
                 ack.kind
             )));
         }
+        let version = if ack.flags & FLAG_CAP_V2 != 0 { VERSION } else { V1 };
         let links = codec::decode_hello_ack(&ack.payload)?;
         if links.len() != n as usize {
             return Err(WireError::Corrupt(format!(
@@ -335,12 +996,22 @@ pub fn serve_rank(
         }
         // Ring edges: connect succ first (connects complete against a
         // bound listener's backlog without an accept), then accept pred.
-        let succ = connect_retry(dir, &format!("rank-{}", (rank + 1) % n), kind)?;
+        let succ = connect_retry_with(dir, &format!("rank-{}", (rank + 1) % n), kind, opts.timeout)?;
         let pred = listener.accept()?;
-        spawn_rank(rank, ctl, pred, succ)?.join()?;
+        let session_opts = SessionOpts {
+            version,
+            faults: None, // fault injection is in-process only
+            attempts: DEFAULT_ATTEMPTS,
+            timeout: opts.timeout,
+            counters: opts.counters.clone(),
+        };
+        spawn_rank_with(rank, ctl, pred, succ, session_opts)?.join()?;
         sessions += 1;
         if once {
-            return Ok(sessions);
+            return Ok(ServeReport {
+                sessions,
+                recovery: opts.counters.snapshot(),
+            });
         }
     }
 }
@@ -362,6 +1033,24 @@ mod tests {
     #[test]
     fn sim_transport_has_no_sockets() {
         assert!(WireStream::pair(TransportKind::Sim).is_err());
+    }
+
+    #[test]
+    fn arq_timeouts_derive_from_the_wire_knob() {
+        // Defaults: 30s knob → 1s frame timeout, 4s ack wait.
+        assert_eq!(rx_frame_timeout(READ_TIMEOUT), Duration::from_secs(1));
+        assert_eq!(tx_ack_timeout(READ_TIMEOUT), Duration::from_secs(4));
+        // Small knobs clamp at 100ms so the probe loop stays sane.
+        assert_eq!(
+            rx_frame_timeout(Duration::from_millis(300)),
+            Duration::from_millis(100)
+        );
+        // The receiver always detects (and NACKs) before the sender's
+        // ack wait fires — the invariant the recovery design rests on.
+        for ms in [300u64, 2_000, 30_000, 600_000] {
+            let t = Duration::from_millis(ms);
+            assert!(tx_ack_timeout(t) >= rx_frame_timeout(t) * 2 + SETTLE + DRAIN);
+        }
     }
 
     #[test]
@@ -401,5 +1090,51 @@ mod tests {
             .unwrap();
         s0.join().unwrap();
         s1.join().unwrap();
+    }
+
+    #[test]
+    fn v2_session_relays_with_arq_and_crc() {
+        // Same micro-ring, negotiated at v2: injections and deliveries
+        // on ctl carry the CRC (seq 0), edge traffic is sequenced and
+        // acknowledged end to end.
+        let counters = Arc::new(RecoveryCounters::new());
+        let opts = |c: &Arc<RecoveryCounters>| SessionOpts {
+            version: VERSION,
+            timeout: Duration::from_secs(3),
+            counters: c.clone(),
+            ..SessionOpts::default()
+        };
+        let (ctl0_coord, ctl0_rank) = WireStream::pair(TransportKind::Uds).unwrap();
+        let (ctl1_coord, ctl1_rank) = WireStream::pair(TransportKind::Uds).unwrap();
+        let (edge01_w, edge01_r) = WireStream::pair(TransportKind::Uds).unwrap();
+        let (edge10_w, edge10_r) = WireStream::pair(TransportKind::Uds).unwrap();
+        let s0 = spawn_rank_with(0, ctl0_rank, edge10_r, edge01_w, opts(&counters)).unwrap();
+        let s1 = spawn_rank_with(1, ctl1_rank, edge01_r, edge10_w, opts(&counters)).unwrap();
+
+        let mut ctl0 = ctl0_coord;
+        let mut ctl1 = ctl1_coord;
+        let f = Frame::new(Kind::Tern, 0, 2, 9, vec![4, 5, 6]);
+        f.write_to_at(&mut ctl0, VERSION, 0).unwrap();
+        let (d1, m1) = Frame::read_from_ext(&mut ctl1).unwrap();
+        let (d0, m0) = Frame::read_from_ext(&mut ctl0).unwrap();
+        for (d, m) in [(&d1, m1), (&d0, m0)] {
+            assert_eq!(d.ttl, 0);
+            assert_eq!(d.payload, vec![4, 5, 6]);
+            assert_eq!(m.version, VERSION);
+        }
+        Frame::new(Kind::Shutdown, 0, 2, 9, Vec::new())
+            .write_to_at(&mut ctl0, VERSION, 0)
+            .unwrap();
+        Frame::new(Kind::Shutdown, 0, 0, 9, Vec::new())
+            .write_to_at(&mut ctl0, VERSION, 0)
+            .unwrap();
+        Frame::new(Kind::Shutdown, 0, 0, 9, Vec::new())
+            .write_to_at(&mut ctl1, VERSION, 0)
+            .unwrap();
+        s0.join().unwrap();
+        s1.join().unwrap();
+        // Clean run: no recovery events fired.
+        assert_eq!(counters.snapshot(), RecoveryStats::default());
+        assert!(counters.take_fatal().is_none());
     }
 }

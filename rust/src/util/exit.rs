@@ -1,0 +1,108 @@
+//! Typed process exit classes (DESIGN.md §16).
+//!
+//! `ringiwp serve` and `ringiwp chaos` are run by CI scripts and
+//! operators who triage failures from the exit *code*, not the log
+//! text. An [`ExitClass`] rides an `anyhow` error chain as context
+//! (`err.context(ExitClass::Config)`) and `main` maps it to a stable
+//! code:
+//!
+//! | code | class                  | typical cause                       |
+//! |------|------------------------|-------------------------------------|
+//! | 0    | —                      | success                             |
+//! | 1    | unclassified           | anything untagged                   |
+//! | 2    | [`ExitClass::Config`]    | bad flag / grammar / plan         |
+//! | 3    | [`ExitClass::Transport`] | socket, frame, or recovery failure (includes exhausted wire-fault retries) |
+//! | 4    | [`ExitClass::Invariant`] | a recovery/accounting invariant broke |
+//!
+//! A bare [`crate::net::WireError`] in the chain (without an explicit
+//! class) also maps to 3 — the transport taxonomy lives in one place.
+
+use std::fmt;
+
+/// Failure class carried as `anyhow` context; see the module table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitClass {
+    /// Malformed flags, config keys, or schedule grammar (exit 2).
+    Config,
+    /// Socket, frame, or recovery failure — including an unrecoverable
+    /// wire-fault schedule exhausting its retry budget (exit 3).
+    Transport,
+    /// A recovery or accounting invariant was violated (exit 4).
+    Invariant,
+}
+
+impl ExitClass {
+    /// The process exit code this class maps to.
+    pub fn code(self) -> i32 {
+        match self {
+            ExitClass::Config => 2,
+            ExitClass::Transport => 3,
+            ExitClass::Invariant => 4,
+        }
+    }
+
+    /// Stable lowercase name (printed next to the error).
+    pub fn name(self) -> &'static str {
+        match self {
+            ExitClass::Config => "config",
+            ExitClass::Transport => "transport",
+            ExitClass::Invariant => "invariant",
+        }
+    }
+
+    /// Classify an `anyhow` error: an explicit [`ExitClass`] context
+    /// wins; otherwise a [`crate::net::WireError`] anywhere in the
+    /// chain means transport; anything else is unclassified (`None`,
+    /// exit 1).
+    pub fn of(err: &anyhow::Error) -> Option<ExitClass> {
+        if let Some(c) = err.downcast_ref::<ExitClass>() {
+            return Some(*c);
+        }
+        if err
+            .chain()
+            .any(|c| c.downcast_ref::<crate::net::WireError>().is_some())
+        {
+            return Some(ExitClass::Transport);
+        }
+        None
+    }
+}
+
+impl fmt::Display for ExitClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} failure (exit {})", self.name(), self.code())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::WireError;
+
+    #[test]
+    fn codes_are_stable() {
+        assert_eq!(ExitClass::Config.code(), 2);
+        assert_eq!(ExitClass::Transport.code(), 3);
+        assert_eq!(ExitClass::Invariant.code(), 4);
+        assert_eq!(format!("{}", ExitClass::Config), "config failure (exit 2)");
+    }
+
+    #[test]
+    fn explicit_class_wins_over_chain_scan() {
+        let err = anyhow::Error::from(WireError::BadMagic).context(ExitClass::Invariant);
+        assert_eq!(ExitClass::of(&err), Some(ExitClass::Invariant));
+    }
+
+    #[test]
+    fn bare_wire_errors_classify_as_transport() {
+        let err = anyhow::Error::from(WireError::Exhausted { attempts: 4 })
+            .context("step 3 failed");
+        assert_eq!(ExitClass::of(&err), Some(ExitClass::Transport));
+    }
+
+    #[test]
+    fn untagged_errors_stay_unclassified() {
+        let err = anyhow::anyhow!("some other failure");
+        assert_eq!(ExitClass::of(&err), None);
+    }
+}

@@ -2,6 +2,7 @@
 //! clap / rand / proptest — DESIGN.md §2 records the substitution).
 
 pub mod cli;
+pub mod exit;
 pub mod json;
 pub mod prop;
 pub mod rng;

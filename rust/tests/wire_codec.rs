@@ -12,9 +12,16 @@
 //!   inconsistent payloads, random garbage) returns a typed
 //!   [`WireError`], never a panic.
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use ringiwp::net::wire::codec;
 use ringiwp::net::wire::frame::{HEADER_LEN, MAGIC};
-use ringiwp::net::wire::{Frame, Kind, WireError, FLAG_TERN_BLOB, VERSION};
+use ringiwp::net::wire::peer::{EdgeRx, EdgeTx};
+use ringiwp::net::wire::{
+    FaultPlan, Frame, Kind, RecoveryCounters, RecoveryStats, TransportKind, WireError,
+    WireStream, FLAG_CAP_V2, FLAG_TERN_BLOB, V1, VERSION,
+};
 use ringiwp::compress::terngrad::{TernBlob, TernGrad};
 use ringiwp::net::LinkSpec;
 use ringiwp::sparse::BitMask;
@@ -334,6 +341,123 @@ fn stream_ending_mid_frame_is_typed_io_at_every_cut() {
     // were the problem.
     let mut cursor = std::io::Cursor::new(full);
     assert_eq!(Frame::read_from(&mut cursor).unwrap().payload.len(), 33);
+}
+
+// ------------------------------------------------- §16 integrity layer + ARQ
+
+#[test]
+fn every_single_bit_flip_on_a_v2_frame_is_detected() {
+    // The CRC trailer covers header ‖ payload ‖ seq, so no single-bit
+    // flip anywhere in a v2 transmission may decode silently — it must
+    // surface as Checksum or an earlier typed header error.
+    let f = Frame::new(Kind::Masked, 3, 2, 9, (0u8..32).collect());
+    let clean = f.encode_at(VERSION, 7);
+    assert_eq!(Frame::decode(&clean).unwrap(), f);
+    for bit in 0..clean.len() * 8 {
+        let mut bytes = clean.clone();
+        bytes[bit / 8] ^= 1 << (bit % 8);
+        assert!(
+            Frame::decode(&bytes).is_err(),
+            "bit flip at {bit} (byte {}) must be detected, not silently decoded",
+            bit / 8
+        );
+    }
+}
+
+#[test]
+fn duplicated_and_stale_frames_are_suppressed_by_sequence() {
+    // A stop-and-wait receiver must deliver each sequence number once,
+    // in order, no matter how often the bytes show up: dup faults and
+    // stale retransmits (the "reordered frame" a byte stream can
+    // actually produce) are dropped silently, never re-ACKed.
+    let (mut w, r) = WireStream::pair(TransportKind::Uds).unwrap();
+    let counters = Arc::new(RecoveryCounters::new());
+    let mut rx = EdgeRx::new(r, 1, VERSION, Duration::from_millis(500), counters.clone()).unwrap();
+    let frame = |i: u32| Frame::new(Kind::Dense, 0, 1, i, codec::encode_dense(&[i as f32]));
+    let writer = std::thread::spawn(move || {
+        // seq 1, dup of 1, seq 2, stale 1 again, seq 3 — the writer
+        // never reads the ACKs; the socket buffer absorbs them.
+        for seq in [1u32, 1, 2, 1, 3] {
+            frame(seq).write_to_at(&mut w, VERSION, seq).unwrap();
+            w.flush().unwrap();
+        }
+        w
+    });
+    let mut got = Vec::new();
+    while got.len() < 3 {
+        if let Some(f) = rx.recv().unwrap() {
+            got.push(f.epoch);
+        }
+    }
+    let _w = writer.join().unwrap();
+    assert_eq!(got, vec![1, 2, 3], "in-order delivery, each seq exactly once");
+    let s = counters.snapshot();
+    assert_eq!(s.dup_drops, 2, "{s}");
+    assert_eq!((s.retransmits, s.nacks), (0, 0), "{s}");
+}
+
+#[test]
+fn flip_fault_recovers_via_nack_and_retransmit() {
+    // A scheduled bit flip on the first attempt: the receiver NACKs,
+    // the sender retransmits, and the delivered frame is bit-identical
+    // — with the counters proving the fault actually fired.
+    let plan = FaultPlan::parse("seed=5,flip@0:0").unwrap();
+    let counters = Arc::new(RecoveryCounters::new());
+    let (a, b) = WireStream::pair(TransportKind::Uds).unwrap();
+    let mut tx = EdgeTx::new(
+        a,
+        VERSION,
+        plan.edge_faults(0, 1),
+        4,
+        Duration::from_millis(2_000),
+        counters.clone(),
+    )
+    .unwrap();
+    let mut rx = EdgeRx::new(b, 1, VERSION, Duration::from_millis(150), counters.clone()).unwrap();
+    let f = Frame::new(Kind::Dense, 0, 1, 3, codec::encode_dense(&[1.0, -2.5]));
+    let sent = f.clone();
+    let sender = std::thread::spawn(move || {
+        tx.send(&sent).unwrap();
+        tx
+    });
+    let got = loop {
+        if let Some(g) = rx.recv().unwrap() {
+            break g;
+        }
+    };
+    let _tx = sender.join().unwrap();
+    assert_eq!(got, f, "recovered frame must be bit-identical");
+    let s = counters.snapshot();
+    assert!(s.retransmits >= 1, "{s}");
+    assert!(s.nacks >= 1, "{s}");
+    assert_eq!(s.dup_drops, 0, "{s}");
+}
+
+#[test]
+fn hello_negotiation_rides_v1_flags_and_v1_sessions_skip_the_arq() {
+    // Hello always travels at wire version 1 with the v2 capability in
+    // the flags byte — that is what makes negotiation with old peers
+    // possible at all (the body layout never changes).
+    let mut hello = Frame::new(Kind::Hello, 2, 0, 0, codec::encode_hello(2, 4));
+    hello.flags = FLAG_CAP_V2;
+    let bytes = hello.encode();
+    assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), V1);
+    let (f, meta, used) = Frame::decode_prefix_ext(&bytes).unwrap();
+    assert_eq!(used, bytes.len());
+    assert_eq!(meta.version, V1);
+    assert_eq!(f.flags & FLAG_CAP_V2, FLAG_CAP_V2);
+    assert_eq!(codec::decode_hello(&f.payload).unwrap(), (2, 4));
+    // An ack without the flag pins the session to v1: edges write
+    // plain trailerless frames and the sender never waits for an ACK.
+    let counters = Arc::new(RecoveryCounters::new());
+    let (a, b) = WireStream::pair(TransportKind::Uds).unwrap();
+    let mut tx =
+        EdgeTx::new(a, V1, None, 4, Duration::from_millis(500), counters.clone()).unwrap();
+    let mut rx = EdgeRx::new(b, 1, V1, Duration::from_millis(500), counters.clone()).unwrap();
+    let f = Frame::new(Kind::Dense, 0, 1, 0, codec::encode_dense(&[4.5]));
+    tx.send(&f).unwrap(); // returns immediately — no ACK round-trip
+    assert_eq!(rx.recv().unwrap(), Some(f));
+    assert_eq!(counters.snapshot(), RecoveryStats::default());
 }
 
 #[test]

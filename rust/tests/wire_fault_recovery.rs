@@ -1,0 +1,262 @@
+//! Wire-fault recovery golden suite (DESIGN.md §16).
+//!
+//! The self-healing contract, pinned to the sim oracle:
+//!
+//! * **recoverable schedules are invisible** — a socket engine running
+//!   under a seeded byte-level fault plan (bit flips, truncations,
+//!   drops, duplicates, delays, connection resets) must produce
+//!   `StepReport`s bit-identical to a fault-free virtual `SimEngine`,
+//!   for every bench pipeline × reduce topology, with the recovery
+//!   counters proving the faults actually fired;
+//! * **the empty plan is free** — carrying `FaultPlan::default()`
+//!   is bit-identical to carrying no plan at all, and records zero
+//!   recovery activity;
+//! * **unrecoverable schedules fail loudly** — a cell scheduled with
+//!   more faults than the attempt budget surfaces the typed
+//!   [`WireError::Exhausted`] ("retry budget exhausted"), never a
+//!   silent wrong answer.
+//!
+//! Every socket-touching test runs under the same hard watchdog as
+//! `chaos_equivalence.rs` — a wedged ARQ fails in bounded time.
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+use ringiwp::compress::MethodSpec;
+use ringiwp::exp::bench::step_specs;
+use ringiwp::exp::simrun::{SimCfg, SimEngine, StepReport, WireEngine};
+use ringiwp::model::{LayerKind, ParamLayout};
+use ringiwp::net::{FaultPlan, LinkSpec, TopoKind, TransportKind};
+
+const WATCHDOG: Duration = Duration::from_secs(180);
+
+/// Run `f` on its own thread and fail loudly if it outlives the
+/// watchdog; panics inside `f` propagate to the harness unchanged.
+fn with_watchdog<F>(label: &str, f: F)
+where
+    F: FnOnce() + Send + 'static,
+{
+    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    let worker = std::thread::Builder::new()
+        .name(format!("watchdog-{label}"))
+        .spawn(move || {
+            f();
+            let _ = tx.send(());
+        })
+        .expect("spawn watchdog worker");
+    match rx.recv_timeout(WATCHDOG) {
+        Ok(()) | Err(RecvTimeoutError::Disconnected) => {
+            if let Err(panic) = worker.join() {
+                std::panic::resume_unwind(panic);
+            }
+        }
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("{label}: still running after {WATCHDOG:?} — ARQ deadlock");
+        }
+    }
+}
+
+fn layout() -> ParamLayout {
+    ParamLayout::new(
+        "fault_recovery",
+        vec![
+            ("conv".into(), vec![32, 16, 3, 3], LayerKind::Conv),
+            ("bn".into(), vec![67], LayerKind::BatchNorm),
+            ("fc".into(), vec![128, 10], LayerKind::Fc),
+        ],
+    )
+}
+
+fn cfg(spec: &str, topology: TopoKind, faults: Option<FaultPlan>) -> SimCfg {
+    SimCfg {
+        nodes: 5,
+        method: MethodSpec::parse(spec).expect("registry spec"),
+        link: LinkSpec::new(1e9, 1e-5),
+        topology,
+        transport: TransportKind::Sim,
+        wire_dir: None,
+        seed: 42,
+        steps_per_epoch: 3,
+        warmup_epochs: 1,
+        chaos: None,
+        wire_faults: faults,
+        // Short deadline so drop/truncation stalls resolve in test
+        // time; the ARQ retry + ACK deadlines derive from this knob.
+        wire_timeout_ms: 5_000,
+        ..Default::default()
+    }
+}
+
+/// A recoverable schedule exercising every fault family: a bit flip, a
+/// truncation, a drop, a duplicate, a delay, and a connection reset —
+/// all landing on first-step frames so every topology hits them.
+fn recoverable_plan() -> FaultPlan {
+    FaultPlan::parse("seed=11,flip@0:0,trunc@1:3,drop@0:2,dup@1:1,delay@2:0:3,reset@2:2")
+        .expect("static plan")
+}
+
+fn assert_reports_identical(ctx: &str, step: usize, a: &StepReport, b: &StepReport) {
+    assert_eq!(
+        a.wire_bytes_per_node, b.wire_bytes_per_node,
+        "{ctx} step {step}: wire_bytes_per_node"
+    );
+    assert_eq!(a.support_nnz, b.support_nnz, "{ctx} step {step}: support_nnz");
+    assert_eq!(
+        a.density.to_bits(),
+        b.density.to_bits(),
+        "{ctx} step {step}: density ({} vs {})",
+        a.density,
+        b.density
+    );
+    assert_eq!(
+        a.seconds.to_bits(),
+        b.seconds.to_bits(),
+        "{ctx} step {step}: seconds ({} vs {})",
+        a.seconds,
+        b.seconds
+    );
+    assert_eq!(
+        a.wire_seconds.to_bits(),
+        b.wire_seconds.to_bits(),
+        "{ctx} step {step}: wire_seconds ({} vs {})",
+        a.wire_seconds,
+        b.wire_seconds
+    );
+}
+
+/// One faulted uds run vs the fault-free sim oracle; returns nothing —
+/// panics carry the config context.
+fn assert_faulted_run_matches_oracle(spec: &str, topo: TopoKind) {
+    let ctx = format!("{spec}/{}", topo.name());
+    let mut sim = SimEngine::new(layout(), cfg(spec, topo, None));
+    let mut c = cfg(spec, topo, Some(recoverable_plan()));
+    c.transport = TransportKind::Uds;
+    let mut wire =
+        WireEngine::new(layout(), c).unwrap_or_else(|e| panic!("{ctx}: wire construction: {e}"));
+    for s in 0..3 {
+        let a = sim.step(s);
+        let w = wire.step(s);
+        assert_reports_identical(&ctx, s, &a, &w.report);
+        assert!(w.real_bytes > 0, "{ctx} step {s}: no real bytes");
+    }
+    wire.shutdown().unwrap_or_else(|e| panic!("{ctx}: shutdown: {e}"));
+    let rec = wire.recovery_stats();
+    assert!(
+        rec.retransmits >= 1,
+        "{ctx}: flip/trunc/drop faults must force retransmits — {rec}"
+    );
+    assert!(
+        rec.reconnects >= 1,
+        "{ctx}: the reset fault must force a reconnect — {rec}"
+    );
+    assert!(
+        rec.dup_drops >= 1,
+        "{ctx}: the dup fault must be suppressed — {rec}"
+    );
+}
+
+#[test]
+fn faulted_uds_matches_sim_for_every_spec_on_ring_topologies() {
+    // First half of the spec × topology matrix: the flat paper ring
+    // and the hierarchical reduce.
+    with_watchdog("faults-flat-hier", || {
+        for spec in step_specs() {
+            for topo in [TopoKind::Flat, TopoKind::Hier { group: 4 }] {
+                assert_faulted_run_matches_oracle(&spec.name(), topo);
+            }
+        }
+    });
+}
+
+#[test]
+fn faulted_uds_matches_sim_for_every_spec_on_tree_and_pipeline() {
+    // Second half of the matrix: tree reduce and the chunked pipeline.
+    with_watchdog("faults-tree-pipeline", || {
+        for spec in step_specs() {
+            for topo in [TopoKind::Tree, TopoKind::parse("pipeline:4:flat").unwrap()] {
+                assert_faulted_run_matches_oracle(&spec.name(), topo);
+            }
+        }
+    });
+}
+
+#[test]
+fn empty_plan_is_bit_identical_to_no_plan_with_zero_recovery() {
+    // The zero-overhead contract: an engine carrying the empty plan
+    // must not move a single bit of a healthy run, and its counters
+    // must stay at zero.
+    with_watchdog("empty-plan", || {
+        let run = |faults: Option<FaultPlan>| -> (Vec<StepReport>, u64) {
+            let mut c = cfg("iwp:fixed", TopoKind::Flat, faults);
+            c.transport = TransportKind::Uds;
+            let mut wire = WireEngine::new(layout(), c).expect("wire construction");
+            let reports = (0..3).map(|s| wire.step(s).report).collect();
+            wire.shutdown().expect("shutdown");
+            let rec = wire.recovery_stats();
+            (reports, rec.total_events())
+        };
+        let (bare, bare_events) = run(None);
+        let (empty, empty_events) = run(Some(FaultPlan::default()));
+        for (s, (a, b)) in bare.iter().zip(&empty).enumerate() {
+            assert_reports_identical("empty-plan", s, a, b);
+        }
+        assert_eq!(bare_events, 0, "fault-free run must record no recovery");
+        assert_eq!(empty_events, 0, "empty plan must record no recovery");
+    });
+}
+
+#[test]
+fn drop_faults_recover_through_the_shortened_ack_deadline() {
+    // A swallowed frame is the slowest fault (nothing arrives, the
+    // sender must time out): with a small --wire-timeout-ms the ACK
+    // deadline shrinks and recovery still reproduces the oracle.
+    with_watchdog("drop-fault", || {
+        let plan = FaultPlan::parse("seed=3,drop@0:0,drop@1:2").expect("static plan");
+        let mut sim = SimEngine::new(layout(), cfg("iwp:fixed", TopoKind::Flat, None));
+        let mut c = cfg("iwp:fixed", TopoKind::Flat, Some(plan));
+        c.transport = TransportKind::Uds;
+        c.wire_timeout_ms = 1_500;
+        let mut wire = WireEngine::new(layout(), c).expect("wire construction");
+        for s in 0..3 {
+            let a = sim.step(s);
+            let w = wire.step(s);
+            assert_reports_identical("drop-fault", s, &a, &w.report);
+        }
+        wire.shutdown().expect("shutdown");
+        let rec = wire.recovery_stats();
+        assert!(rec.retransmits >= 2, "both drops must retransmit — {rec}");
+    });
+}
+
+#[test]
+fn exhausted_retry_budget_fails_loudly_with_the_typed_error() {
+    // Unrecoverable by construction: attempts=2 with two faults piled
+    // on the same (frame, edge) cell — every attempt is damaged, the
+    // budget runs out, and the run must die with the typed Exhausted
+    // error (wire seam panic carrying its Display), never a silently
+    // wrong report stream.
+    with_watchdog("exhausted", || {
+        let plan =
+            FaultPlan::parse("attempts=2,seed=7,drop@0:0,drop@0:0").expect("static plan");
+        let mut c = cfg("iwp:fixed", TopoKind::Flat, Some(plan));
+        c.transport = TransportKind::Uds;
+        c.wire_timeout_ms = 1_000;
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut wire = WireEngine::new(layout(), c).expect("wire construction");
+            for s in 0..2 {
+                let _ = wire.step(s);
+            }
+            let _ = wire.shutdown();
+        }));
+        let panic = outcome.expect_err("unrecoverable schedule must not succeed");
+        let msg = panic
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(
+            msg.to_lowercase().contains("exhausted"),
+            "panic must carry the typed Exhausted error, got: {msg}"
+        );
+    });
+}
