@@ -5,6 +5,7 @@
 
 use ringiwp::compress::fuse;
 use ringiwp::compress::importance::{score_and_mask, LayerStats, EPS};
+use ringiwp::compress::quant::{QBlob, QuantWidth};
 use ringiwp::compress::residual::ResidualStore;
 use ringiwp::compress::select;
 use ringiwp::compress::terngrad::TernGrad;
@@ -123,6 +124,44 @@ fn main() {
             "    -> {:.0} Mcoord/s",
             stats.per_sec(len as f64) / 1e6
         );
+    }
+
+    // The word-wise post-wire kernel: support walk via trailing_zeros
+    // instead of the per-bit iterator (DESIGN.md §11, §17).
+    let mut t_store = ResidualStore::new(len, 0.9);
+    t_store.accumulate(&g);
+    let mut compacted: Vec<f32> = Vec::with_capacity(mask.count());
+    let stats = bench(2, 10, || {
+        t_store.accumulate(std::hint::black_box(&g));
+        std::hint::black_box(fuse::take_compact(&mut t_store, &mask, &mut compacted));
+    });
+    println!("{}", stats.row("take_compact 2M coords (1% support)"));
+
+    // The +q:<bits> payload codecs over a compacted 1%-support payload
+    // (DESIGN.md §17): blocked two-phase stochastic rounding for the
+    // k-bit widths, scalar float conversion for bf16/f16.
+    println!("\n== QBlob encode/decode ({} compacted values) ==", compacted.len());
+    let nnz = compacted.len() as f64;
+    for width in QuantWidth::ALL {
+        let stats = bench(2, 10, || {
+            let mut r = Rng::new(5);
+            std::hint::black_box(QBlob::encode(
+                std::hint::black_box(&compacted),
+                width,
+                &mut r,
+            ));
+        });
+        println!("{}", stats.row(&format!("qblob encode {width}")));
+        println!("    -> {:.0} Mval/s", stats.per_sec(nnz) / 1e6);
+        let blob = {
+            let mut r = Rng::new(5);
+            QBlob::encode(&compacted, width, &mut r)
+        };
+        let mut acc = vec![0.0f32; compacted.len()];
+        let stats = bench(2, 10, || {
+            blob.add_decoded_into(std::hint::black_box(&mut acc));
+        });
+        println!("{}", stats.row(&format!("qblob decode+add {width}")));
     }
 
     println!("\n(bench_compress done)");

@@ -156,10 +156,21 @@ pub fn take_compact(store: &mut ResidualStore, shared: &BitMask, out: &mut Vec<f
     let (vel, res) = store.parts_mut();
     let cap = out.capacity();
     out.clear();
-    for i in shared.iter_set() {
-        out.push(res[i]);
-        res[i] = 0.0;
-        vel[i] = 0.0;
+    // Word-at-a-time support walk: one branch skips 64 empty
+    // coordinates, and set bits pop via `trailing_zeros` / `w &= w - 1`
+    // in ascending order — the same element order (hence bit-identical
+    // output) as the per-bit `iter_set` walk, without its per-bit
+    // iterator state.
+    for (wi, &w0) in shared.words().iter().enumerate() {
+        let mut w = w0;
+        let base = wi * 64;
+        while w != 0 {
+            let i = base + w.trailing_zeros() as usize;
+            w &= w - 1;
+            out.push(res[i]);
+            res[i] = 0.0;
+            vel[i] = 0.0;
+        }
     }
     out.capacity() != cap
 }

@@ -14,6 +14,9 @@
 //!   (DESIGN.md §11) — the engines' hot path.
 //! * `clip` / `warmup` — DGC-inherited tricks the paper also applies.
 //! * `terngrad` / `dgc` — the baselines the paper compares against.
+//! * `quant` — the parametric `+q:<bits>` low-precision payload stage
+//!   (bf16/f16/q8/q4/q2, DESIGN.md §17); `+tern` is the pinned alias of
+//!   its 2-bit special case.
 //! * `spec` / `pipeline` — the compressor strategy subsystem
 //!   (DESIGN.md §12): a string-spec grammar naming every point in the
 //!   scoring × policy × selection × store × quantization family, and
@@ -27,6 +30,7 @@ pub mod dgc;
 pub mod fuse;
 pub mod importance;
 pub mod pipeline;
+pub mod quant;
 pub mod residual;
 pub mod select;
 pub mod spec;
@@ -35,6 +39,7 @@ pub mod threshold;
 pub mod warmup;
 
 pub use pipeline::{Compressor, SimCtx, StageCfg, TrainCtx, WireOutcome};
+pub use quant::{QBlob, QuantWidth};
 pub use spec::{DgcSelect, IwpPolicy, MethodSpec, SpecHead};
 
 /// The training methods of Table I (plus DGC for the §II density claim)

@@ -39,11 +39,15 @@
 //!
 //! so e.g. `dgc:layerwise` is the Eq. 4 threshold policy composed with
 //! the per-node (DGC) transport, and `iwp:fixed+tern` appends ternary
-//! quantization to the shared-mask payload.
+//! quantization to the shared-mask payload. The parametric `+q:<bits>`
+//! stage (DESIGN.md §17) generalizes that last hop: `+q:2` runs the
+//! `+tern` machinery verbatim (it *is* `+tern`), while bf16/f16/q8/q4
+//! ship [`QBlob`] payloads over the same mask-then-whole-blob shape.
 
 use super::dgc::Dgc;
 use super::fuse;
 use super::importance::{LayerStats, EPS};
+use super::quant::{QBlob, QuantWidth, QUANT_BLOCK};
 use super::residual::ResidualStore;
 use super::select;
 use super::spec::{DgcSelect, IwpPolicy, MethodSpec, SpecHead};
@@ -536,7 +540,8 @@ impl Compressor for TernaryCompressor {
 
 /// `iwp:*`: importance scoring × threshold policy × randomized
 /// broadcaster masks × residual store, over the shared-mask (Alg. 1)
-/// transport — optionally `+tern`-quantizing the compacted payload.
+/// transport — optionally quantizing the compacted payload
+/// (`+tern`/`+q:<bits>`, DESIGN.md §17).
 struct SharedMaskCompressor {
     spec: MethodSpec,
     policy: ThresholdPolicy,
@@ -557,7 +562,8 @@ struct SharedMaskCompressor {
     mask_slots: Vec<BitMask>,
     stats_scratch: Vec<LayerStats>,
     /// Per-node compacted payloads for the whole-blob wire formats
-    /// (`+tern`, and the tuner's gather pick) — train side, lazy.
+    /// (`+tern`/`+q:<bits>`, and the tuner's gather/quant picks) —
+    /// train side, lazy.
     tern_payloads: Vec<Vec<f32>>,
     /// All-ones mask for the tuner's dense-pick residual flush
     /// (`clear_masked` over the full support; lazy — `take_all` would
@@ -652,6 +658,50 @@ impl SharedMaskCompressor {
             None => shared.count(),
         };
         let blob = TernBlob::wire_bytes_for(nnz);
+        let rep_blob = topo.spread_bytes(ctx_net, blob, nodes, arena);
+        (shared, blob, rep_mask.total_bytes() + rep_blob.total_bytes())
+    }
+
+    /// The `+q:<bits>` analogue of [`Self::tern_wire`] for the non-2-bit
+    /// widths: mask spread, then every node's [`QBlob`]-encoded
+    /// compacted payload spreads whole (like `+tern`, quantized grids
+    /// are not closed under addition). On the wire path a shape-exact
+    /// probe blob spreads over real sockets and its *decoded* length
+    /// prices the blobs.
+    #[allow(clippy::too_many_arguments)]
+    fn q_wire(
+        &self,
+        ctx_net: &mut RingNet,
+        topo: &dyn Topology,
+        arena: &mut Arena,
+        wire: Option<&mut WireRing>,
+        mask_refs: &[&BitMask],
+        nodes: usize,
+        total: usize,
+        width: QuantWidth,
+    ) -> (BitMask, u64, u64) {
+        let mut shared = BitMask::zeros(total);
+        for m in mask_refs {
+            shared.or_assign(m);
+        }
+        let rep_mask = topo.spread_bytes(ctx_net, shared.wire_bytes(), mask_refs.len(), arena);
+        let nnz = match wire {
+            Some(w) => {
+                let count = shared.count();
+                let probe = QBlob {
+                    width,
+                    len: count,
+                    block: if width.is_float() { 0 } else { QUANT_BLOCK },
+                    scales: vec![0.0; width.scale_slots(count)],
+                    codes: vec![0u8; width.code_bytes(count)],
+                };
+                w.spread_q_blob(&probe)
+                    .expect("wire quant blob spread failed")
+                    .len
+            }
+            None => shared.count(),
+        };
+        let blob = QBlob::wire_bytes_for(nnz, width);
         let rep_blob = topo.spread_bytes(ctx_net, blob, nodes, arena);
         (shared, blob, rep_mask.total_bytes() + rep_blob.total_bytes())
     }
@@ -893,25 +943,70 @@ impl Compressor for SharedMaskCompressor {
                         wire_seconds: ctx.net.clock() - t0,
                     }
                 }
+                WirePick::Quant(width) => {
+                    // The `+q:<bits>` stage body over the picked
+                    // topology (the tuner prices precision against
+                    // bandwidth; the 2-bit point is the Tern pick).
+                    ctx.net.advance(crate::net::topo::pipeline::prep_seconds(total));
+                    let (shared, blob, total_bytes) = self.q_wire(
+                        ctx.net,
+                        topo,
+                        ctx.arena,
+                        ctx.wire.as_deref_mut(),
+                        &mask_refs,
+                        ctx.nodes,
+                        total,
+                        width,
+                    );
+                    let shared_ref = &shared;
+                    ctx.exec.map_mut(&mut self.stores, |_, store| {
+                        store.clear_masked(shared_ref);
+                    });
+                    WireOutcome {
+                        wire_bytes_per_node: total_bytes / ctx.nodes as u64,
+                        payload_bytes: blob,
+                        density: shared.density(),
+                        support_nnz: shared.count() as u64,
+                        wire_seconds: ctx.net.clock() - t0,
+                    }
+                }
             };
             return outcome;
         }
-        let (shared, wire, payload) = if self.spec.tern {
-            let (shared, blob, total_bytes) = self.tern_wire(
-                ctx.net,
-                ctx.topo,
-                ctx.arena,
-                ctx.wire.as_deref_mut(),
-                &mask_refs,
-                ctx.nodes,
-                total,
-            );
-            (shared, total_bytes / ctx.nodes as u64, blob)
-        } else {
-            let (shared, rep) = ctx.topo.masked_bytes_only(ctx.net, &mask_refs, ctx.arena);
-            let nnz = shared.count();
-            let payload = wire_bytes(WireFormat::cheapest(total, nnz), total, nnz);
-            (shared, rep.mean_bytes_per_node() as u64, payload)
+        let (shared, wire, payload) = match self.spec.quant {
+            // `+tern` ≡ `+q:2`: the 2-bit width runs the historical
+            // TernBlob path verbatim (same frames, same closed forms).
+            Some(QuantWidth::Q2) => {
+                let (shared, blob, total_bytes) = self.tern_wire(
+                    ctx.net,
+                    ctx.topo,
+                    ctx.arena,
+                    ctx.wire.as_deref_mut(),
+                    &mask_refs,
+                    ctx.nodes,
+                    total,
+                );
+                (shared, total_bytes / ctx.nodes as u64, blob)
+            }
+            Some(width) => {
+                let (shared, blob, total_bytes) = self.q_wire(
+                    ctx.net,
+                    ctx.topo,
+                    ctx.arena,
+                    ctx.wire.as_deref_mut(),
+                    &mask_refs,
+                    ctx.nodes,
+                    total,
+                    width,
+                );
+                (shared, total_bytes / ctx.nodes as u64, blob)
+            }
+            None => {
+                let (shared, rep) = ctx.topo.masked_bytes_only(ctx.net, &mask_refs, ctx.arena);
+                let nnz = shared.count();
+                let payload = wire_bytes(WireFormat::cheapest(total, nnz), total, nnz);
+                (shared, rep.mean_bytes_per_node() as u64, payload)
+            }
         };
         // Fused residual take: zero residual + velocity on the shared
         // support in one sweep, no per-node Vec (the accounting engine
@@ -1164,13 +1259,62 @@ impl Compressor for SharedMaskCompressor {
                         wire_seconds: ctx.net.clock() - t0,
                     }
                 }
+                WirePick::Quant(width) => {
+                    // The `+q:<bits>` stage body over the picked
+                    // topology: fused take + compact, parallel QBlob
+                    // encode, mask + whole-blob spreads, decode-sum.
+                    ctx.net.advance(crate::net::topo::pipeline::prep_seconds(total));
+                    let mut shared = BitMask::zeros(total);
+                    for m in &self.mask_slots[..broadcasters.len()] {
+                        shared.or_assign(m);
+                    }
+                    if self.tern_payloads.len() != self.stores.len() {
+                        self.tern_payloads = vec![Vec::new(); self.stores.len()];
+                    }
+                    let shared_ref = &shared;
+                    ctx.exec.map_mut2(
+                        &mut self.stores,
+                        &mut self.tern_payloads,
+                        |_, store, buf| {
+                            fuse::take_compact(store, shared_ref, buf);
+                        },
+                    );
+                    let blobs: Vec<QBlob> = {
+                        let payloads: &[Vec<f32>] = &self.tern_payloads;
+                        ctx.exec.map_mut(ctx.node_rngs, |node, rng| {
+                            QBlob::encode(&payloads[node], width, rng)
+                        })
+                    };
+                    let rep_mask = topo.spread_bytes(
+                        ctx.net,
+                        shared.wire_bytes(),
+                        broadcasters.len(),
+                        ctx.arena,
+                    );
+                    let rep_blob =
+                        topo.spread_bytes(ctx.net, blobs[0].wire_bytes(), n, ctx.arena);
+                    let mut summed = vec![0.0f32; shared.count()];
+                    for b in &blobs {
+                        b.add_decoded_into(&mut summed);
+                    }
+                    ctx.opt
+                        .step_sparse_mask(ctx.params, &shared, &summed, inv_n, ctx.lr);
+                    WireOutcome {
+                        wire_bytes_per_node: (rep_mask.total_bytes() + rep_blob.total_bytes())
+                            / n as u64,
+                        payload_bytes: blobs[0].wire_bytes(),
+                        density: shared.density(),
+                        support_nnz: shared.count() as u64,
+                        wire_seconds: ctx.net.clock() - t0,
+                    }
+                }
             };
             return Ok(outcome);
         }
-        let outcome = if self.spec.tern {
-            // `+tern`: once the shared mask is known, each node's
-            // compacted residuals quantize ternary and spread whole
-            // (not closed under addition), decode-summing at full
+        let outcome = if self.spec.quant == Some(QuantWidth::Q2) {
+            // `+tern` ≡ `+q:2`: once the shared mask is known, each
+            // node's compacted residuals quantize ternary and spread
+            // whole (not closed under addition), decode-summing at full
             // precision on every node.
             let mask_refs: Vec<&BitMask> =
                 self.mask_slots[..broadcasters.len()].iter().collect();
@@ -1204,6 +1348,55 @@ impl Compressor for SharedMaskCompressor {
                     .spread_bytes(ctx.net, blobs[0].wire_bytes(), n, ctx.arena);
             // Decode + sum in node order, then the sparse update on the
             // shared support with the 1/N scaling fused in.
+            let mut summed = vec![0.0f32; shared.count()];
+            for b in &blobs {
+                b.add_decoded_into(&mut summed);
+            }
+            ctx.opt
+                .step_sparse_mask(ctx.params, &shared, &summed, inv_n, ctx.lr);
+            WireOutcome {
+                wire_bytes_per_node: (rep_mask.total_bytes() + rep_blob.total_bytes())
+                    / n as u64,
+                payload_bytes: blobs[0].wire_bytes(),
+                density: shared.density(),
+                support_nnz: shared.count() as u64,
+                wire_seconds: ctx.net.clock() - t0,
+            }
+        } else if let Some(width) = self.spec.quant {
+            // `+q:<bits>` (bf16/f16/q8/q4): the `+tern` shape with
+            // [`QBlob`] payloads — fused take + compact, parallel
+            // per-node encode off each node's own RNG stream, mask +
+            // whole-blob spreads, then decode-sum in node order at full
+            // precision.
+            let mask_refs: Vec<&BitMask> =
+                self.mask_slots[..broadcasters.len()].iter().collect();
+            let mut shared = BitMask::zeros(total);
+            for m in &mask_refs {
+                shared.or_assign(m);
+            }
+            if self.tern_payloads.len() != self.stores.len() {
+                self.tern_payloads = vec![Vec::new(); self.stores.len()];
+            }
+            let shared_ref = &shared;
+            ctx.exec.map_mut2(
+                &mut self.stores,
+                &mut self.tern_payloads,
+                |_, store, buf| {
+                    fuse::take_compact(store, shared_ref, buf);
+                },
+            );
+            let blobs: Vec<QBlob> = {
+                let payloads: &[Vec<f32>] = &self.tern_payloads;
+                ctx.exec.map_mut(ctx.node_rngs, |node, rng| {
+                    QBlob::encode(&payloads[node], width, rng)
+                })
+            };
+            let rep_mask =
+                ctx.topo
+                    .spread_bytes(ctx.net, shared.wire_bytes(), mask_refs.len(), ctx.arena);
+            let rep_blob =
+                ctx.topo
+                    .spread_bytes(ctx.net, blobs[0].wire_bytes(), n, ctx.arena);
             let mut summed = vec![0.0f32; shared.count()];
             for b in &blobs {
                 b.add_decoded_into(&mut summed);

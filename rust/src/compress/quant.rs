@@ -1,0 +1,640 @@
+//! Parametric low-precision payload stage (`+q:<bits>`, DESIGN.md §17).
+//!
+//! Generalizes the one-off `+tern` stage (compress/terngrad.rs) into a
+//! family of wire precisions for the compacted shared-mask payload:
+//!
+//! - `+q:16b` — bf16: truncate-with-round-to-nearest-even of the f32 bit
+//!   pattern. No scales, no RNG.
+//! - `+q:16`  — IEEE binary16 (f16), round-to-nearest-even, gradual
+//!   underflow. No scales, no RNG.
+//! - `+q:8` / `+q:4` / `+q:2` — k-bit block quantization: the payload is
+//!   cut into fixed-width blocks of [`QUANT_BLOCK`] elements, each block
+//!   carries one f32 scale `s = max|v|`, and every element is rounded
+//!   stochastically onto the signed grid `{-L..L}·s/L` where
+//!   `L = 2^(k-1) - 1` levels (q8: 127, q4: 7, q2: 1). The rounding is
+//!   unbiased: `q = floor(t) + Bernoulli(frac(t))` with `t = |v|/s·L`
+//!   satisfies `E[q·s/L] = |v|` exactly (up to f32 rounding of `t`),
+//!   consuming exactly one `Rng::uniform()` draw per element of a
+//!   non-zero block — the same stream discipline as `TernBlob`.
+//!
+//! `+q:2` is *definitionally* `+tern`: at `L = 1` the grid is `{-s,0,s}`,
+//! `floor(t) = 0` for `|v| < s` so the Bernoulli test degenerates to
+//! TernGrad's `u < |v|/s`, and the 2-bit code map below reproduces
+//! `TernBlob`'s `CODE_ZERO/CODE_POS/CODE_NEG` packing byte for byte
+//! (pinned by `q2_single_block_matches_tern_blob` here and by
+//! tests/quant_equivalence.rs at the engine level). The engine therefore
+//! routes `+q:2` through the existing `TernBlob` path; `QBlob` carries
+//! the other widths.
+//!
+//! Code map (k-bit widths): `0` = zero, `1..=L` = `+q`, `L+1..=2L` = `-q`
+//! (code `L+q` encodes magnitude `q`). Codes pack little-end-first,
+//! `8/k` per byte, exactly like `TernBlob` at k = 2.
+//!
+//! Like `TernBlob`, quantized blobs are NOT closed under addition
+//! (grids differ per block), so they spread whole around the ring and
+//! every rank decodes-and-sums all `n` blobs (DESIGN.md §10, §17). The
+//! wire layout lives in net/wire/codec.rs (`encode_q_blob`).
+//!
+//! Kernel shape: the quantize path is written in the two-phase blocked
+//! form of compress/fuse.rs — phase 1 computes `floor`/`frac` for a
+//! [`fuse::BLOCK`]-wide run of elements with no cross-element
+//! dependencies (autovectorizes on stable Rust: `abs`, `div`, `mul`,
+//! `cvttps2dq`), phase 2 walks the run scalar for the sequential RNG
+//! draws and bit packing. See DESIGN.md §17 and `benches/bench_compress.rs`
+//! for the measured win.
+
+use crate::compress::terngrad::TernBlob;
+use crate::util::rng::Rng;
+
+/// Elements per scale block for k-bit widths. One f32 scale per block is
+/// 4/QUANT_BLOCK bytes of overhead per element (0.4% at q8) while keeping
+/// the grid local enough that one outlier cannot flatten a whole layer.
+pub const QUANT_BLOCK: usize = 1024;
+
+/// Serialized `QBlob` overhead: width tag (u8) + block (u32) + len (u32).
+/// Deliberately equal to sparse::HEADER_BYTES so the §17 closed forms
+/// compare like with like.
+pub const QBLOB_HEADER_BYTES: u64 = 9;
+
+/// Inner run width for the two-phase quantize kernel; matches
+/// compress/fuse.rs BLOCK so both kernels vectorize the same way.
+const BLOCK: usize = 64;
+
+/// Wire precision for the `+q:<bits>` stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantWidth {
+    /// bfloat16: f32 with the low 16 mantissa bits rounded away.
+    Bf16,
+    /// IEEE binary16.
+    F16,
+    /// 8-bit block quantization, 127 levels per sign.
+    Q8,
+    /// 4-bit block quantization, 7 levels per sign.
+    Q4,
+    /// 2-bit block quantization ≡ TernGrad ternary (`+tern`).
+    Q2,
+}
+
+impl QuantWidth {
+    /// Every width, widest to narrowest (sweep/doc order).
+    pub const ALL: [QuantWidth; 5] = [
+        QuantWidth::Bf16,
+        QuantWidth::F16,
+        QuantWidth::Q8,
+        QuantWidth::Q4,
+        QuantWidth::Q2,
+    ];
+
+    /// Grammar token as written after `+q:` in a method spec.
+    pub fn token(self) -> &'static str {
+        match self {
+            QuantWidth::Bf16 => "16b",
+            QuantWidth::F16 => "16",
+            QuantWidth::Q8 => "8",
+            QuantWidth::Q4 => "4",
+            QuantWidth::Q2 => "2",
+        }
+    }
+
+    /// Short name used by tuner strategies and bench row ids.
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantWidth::Bf16 => "bf16",
+            QuantWidth::F16 => "f16",
+            QuantWidth::Q8 => "q8",
+            QuantWidth::Q4 => "q4",
+            QuantWidth::Q2 => "q2",
+        }
+    }
+
+    /// Parse the `<bits>` token of a `+q:<bits>` stage.
+    pub fn parse(tok: &str) -> anyhow::Result<Self> {
+        Ok(match tok {
+            "16b" => QuantWidth::Bf16,
+            "16" => QuantWidth::F16,
+            "8" => QuantWidth::Q8,
+            "4" => QuantWidth::Q4,
+            "2" => QuantWidth::Q2,
+            other => anyhow::bail!(
+                "unknown quantization width `{other}` (expected one of: 16b | 16 | 8 | 4 | 2)"
+            ),
+        })
+    }
+
+    /// Width tag byte of the `qblob` wire layout (net/wire/codec.rs).
+    pub fn wire_tag(self) -> u8 {
+        match self {
+            QuantWidth::Bf16 => 1,
+            QuantWidth::F16 => 2,
+            QuantWidth::Q8 => 3,
+            QuantWidth::Q4 => 4,
+            QuantWidth::Q2 => 5,
+        }
+    }
+
+    /// Decode a `qblob` width tag byte (total: `None` on garbage).
+    pub fn from_wire_tag(tag: u8) -> Option<Self> {
+        Some(match tag {
+            1 => QuantWidth::Bf16,
+            2 => QuantWidth::F16,
+            3 => QuantWidth::Q8,
+            4 => QuantWidth::Q4,
+            5 => QuantWidth::Q2,
+            _ => return None,
+        })
+    }
+
+    /// Bits per transmitted code.
+    pub fn bits(self) -> u32 {
+        match self {
+            QuantWidth::Bf16 | QuantWidth::F16 => 16,
+            QuantWidth::Q8 => 8,
+            QuantWidth::Q4 => 4,
+            QuantWidth::Q2 => 2,
+        }
+    }
+
+    /// Float widths carry raw half-precision bit patterns: no scales, no
+    /// stochastic rounding, no RNG draws.
+    pub fn is_float(self) -> bool {
+        matches!(self, QuantWidth::Bf16 | QuantWidth::F16)
+    }
+
+    /// Quantization levels per sign for k-bit widths: `L = 2^(k-1) - 1`.
+    /// Float widths have no grid; callers must gate on [`is_float`].
+    ///
+    /// [`is_float`]: QuantWidth::is_float
+    pub fn levels(self) -> u32 {
+        debug_assert!(!self.is_float(), "float widths have no level grid");
+        (1u32 << (self.bits() - 1)) - 1
+    }
+
+    /// Packed code bytes for `nnz` elements.
+    pub fn code_bytes(self, nnz: usize) -> usize {
+        if self.is_float() {
+            2 * nnz
+        } else {
+            let per = (8 / self.bits()) as usize;
+            nnz.div_ceil(per)
+        }
+    }
+
+    /// Scale slots for `nnz` elements at the canonical [`QUANT_BLOCK`].
+    pub fn scale_slots(self, nnz: usize) -> usize {
+        if self.is_float() {
+            0
+        } else {
+            nnz.div_ceil(QUANT_BLOCK)
+        }
+    }
+}
+
+impl std::fmt::Display for QuantWidth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A quantized whole-payload blob: the `+q` analogue of [`TernBlob`].
+///
+/// For k-bit widths `scales[b]` is the absmax of elements
+/// `[b·block, (b+1)·block)` and `codes` packs `8/k` codes per byte,
+/// little-end-first. For float widths `scales` is empty, `block` is 0
+/// and `codes` holds `len` little-endian u16 bit patterns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QBlob {
+    pub width: QuantWidth,
+    /// Number of payload elements.
+    pub len: usize,
+    /// Elements per scale block (0 for float widths).
+    pub block: usize,
+    pub scales: Vec<f32>,
+    pub codes: Vec<u8>,
+}
+
+impl QBlob {
+    /// Encode at the canonical [`QUANT_BLOCK`] scale-block width.
+    pub fn encode(values: &[f32], width: QuantWidth, rng: &mut Rng) -> Self {
+        Self::encode_blocked(values, width, QUANT_BLOCK, rng)
+    }
+
+    /// Encode with an explicit scale-block width (k-bit widths only use
+    /// it; float widths ignore it). `block = len` reproduces the
+    /// whole-payload single-scale regime of [`TernBlob`].
+    pub fn encode_blocked(values: &[f32], width: QuantWidth, block: usize, rng: &mut Rng) -> Self {
+        if width.is_float() {
+            let mut codes = Vec::with_capacity(2 * values.len());
+            match width {
+                QuantWidth::Bf16 => {
+                    for &v in values {
+                        codes.extend_from_slice(&f32_to_bf16(v).to_le_bytes());
+                    }
+                }
+                _ => {
+                    for &v in values {
+                        codes.extend_from_slice(&f32_to_f16(v).to_le_bytes());
+                    }
+                }
+            }
+            return QBlob { width, len: values.len(), block: 0, scales: Vec::new(), codes };
+        }
+
+        assert!(block > 0, "k-bit quantization needs a positive scale block");
+        let bits = width.bits() as usize;
+        let per = 8 / bits;
+        let levels = width.levels() as f32;
+        let mut codes = vec![0u8; values.len().div_ceil(per)];
+        let mut scales = Vec::with_capacity(values.len().div_ceil(block));
+
+        // Phase-1 staging for one inner run (two-phase fuse.rs idiom).
+        let mut whole = [0u32; BLOCK];
+        let mut frac = [0f32; BLOCK];
+
+        for (b, chunk) in values.chunks(block).enumerate() {
+            // Absmax is associative, so the blocked reduce below matches
+            // TernBlob's sequential fold bit for bit (finite payloads).
+            let scale = chunk.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            scales.push(scale);
+            if scale == 0.0 {
+                // All-zero block: codes stay 0 and — like TernBlob's
+                // zero-scale guard — no RNG draws are consumed.
+                continue;
+            }
+            let base = b * block;
+            let mut off = 0;
+            while off < chunk.len() {
+                let run = (chunk.len() - off).min(BLOCK);
+                // Phase 1: element-independent arithmetic over the run.
+                // `t ∈ [0, L]` because `|v|/s ≤ 1` exactly in f32 and
+                // multiplying by L is monotone; truncation equals floor
+                // for non-negative t.
+                for k in 0..run {
+                    let t = chunk[off + k].abs() / scale * levels;
+                    let fl = t as u32;
+                    whole[k] = fl;
+                    frac[k] = t - fl as f32;
+                }
+                // Phase 2: sequential RNG + sign + bit packing. One
+                // uniform per element, in element order — the stream
+                // contract shared with TernBlob.
+                for k in 0..run {
+                    let mut q = whole[k];
+                    if rng.uniform() < frac[k] {
+                        q += 1;
+                    }
+                    if q == 0 {
+                        continue;
+                    }
+                    let code = if chunk[off + k] >= 0.0 { q } else { q + levels as u32 };
+                    let i = base + off + k;
+                    codes[i / per] |= (code as u8) << ((i % per) * bits);
+                }
+                off += run;
+            }
+        }
+        QBlob { width, len: values.len(), block, scales, codes }
+    }
+
+    /// Decode and add every element into `acc` (`acc[i] += q_i`).
+    /// Total: any byte pattern decodes (codes above `2L` clamp to the
+    /// negative end of the grid rather than panicking).
+    pub fn add_decoded_into(&self, acc: &mut [f32]) {
+        assert_eq!(acc.len(), self.len, "quant blob length mismatch");
+        if self.width.is_float() {
+            let from = match self.width {
+                QuantWidth::Bf16 => bf16_to_f32,
+                _ => f16_to_f32,
+            };
+            for (i, a) in acc.iter_mut().enumerate() {
+                let h = u16::from_le_bytes([self.codes[2 * i], self.codes[2 * i + 1]]);
+                *a += from(h);
+            }
+            return;
+        }
+        let bits = self.width.bits() as usize;
+        let per = 8 / bits;
+        let mask = (1u8 << bits) - 1;
+        let levels = self.width.levels();
+        for (b, chunk) in acc.chunks_mut(self.block).enumerate() {
+            let scale = self.scales[b];
+            if scale == 0.0 {
+                continue;
+            }
+            // One divide per block; at q2 `unit = s/1.0 = s` exactly, so
+            // the decoded grid matches TernBlob's ±scale bit for bit.
+            let unit = scale / levels as f32;
+            let base = b * self.block;
+            for (k, a) in chunk.iter_mut().enumerate() {
+                let i = base + k;
+                let code = (self.codes[i / per] >> ((i % per) * bits)) & mask;
+                if code == 0 {
+                    continue;
+                }
+                let code = code as u32;
+                if code <= levels {
+                    *a += code as f32 * unit;
+                } else {
+                    *a -= (code - levels).min(levels) as f32 * unit;
+                }
+            }
+        }
+    }
+
+    /// Wire size of this blob as serialized by net/wire/codec.rs.
+    pub fn wire_bytes(&self) -> u64 {
+        QBLOB_HEADER_BYTES + 4 * self.scales.len() as u64 + self.codes.len() as u64
+    }
+
+    /// Closed-form wire size for `nnz` surviving coordinates at the
+    /// canonical [`QUANT_BLOCK`]; feeds `CostModel::masked_q_*`
+    /// (net/cost.rs). The q2 form delegates to [`TernBlob`] because the
+    /// engine ships q2 payloads on the tern path.
+    pub fn wire_bytes_for(nnz: usize, width: QuantWidth) -> u64 {
+        if width == QuantWidth::Q2 {
+            return TernBlob::wire_bytes_for(nnz);
+        }
+        QBLOB_HEADER_BYTES
+            + 4 * width.scale_slots(nnz) as u64
+            + width.code_bytes(nnz) as u64
+    }
+}
+
+/// f32 → bf16 with round-to-nearest-even; NaN keeps a quiet payload.
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let b = v.to_bits();
+    if v.is_nan() {
+        return ((b >> 16) as u16) | 0x0040;
+    }
+    // Cannot overflow u32: the largest non-NaN pattern is 0xFF80_0000.
+    ((b + 0x7FFF + ((b >> 16) & 1)) >> 16) as u16
+}
+
+/// bf16 → f32 (exact).
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// f32 → IEEE binary16 with round-to-nearest-even and gradual underflow.
+pub fn f32_to_f16(v: f32) -> u16 {
+    let b = v.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = ((b >> 23) & 0xFF) as i32;
+    let man = b & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN; force a nonzero mantissa with the quiet bit for NaN.
+        return sign | 0x7C00 | if man != 0 { 0x0200 | ((man >> 13) as u16 & 0x03FF) } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow → ±inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflows even the smallest subnormal → ±0
+        }
+        // Subnormal: shift the (implicit-bit-restored) mantissa into
+        // place, rounding to nearest even.
+        let man = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let rounded = man + (1 << (shift - 1)) - 1 + ((man >> shift) & 1);
+        return sign | (rounded >> shift) as u16;
+    }
+    // Normal: round the 23-bit mantissa to 10 bits; a carry out of the
+    // mantissa bumps the exponent (possibly to inf) arithmetically.
+    let rounded = man + 0x0FFF + ((man >> 13) & 1);
+    sign | (((e as u32) << 10) + (rounded >> 13)) as u16
+}
+
+/// IEEE binary16 → f32 (exact).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let man = (h & 0x03FF) as u32;
+    let bits = match exp {
+        0 => {
+            if man == 0 {
+                sign
+            } else {
+                // Subnormal: renormalize into an f32 exponent.
+                let mut e32 = 127 - 15 + 1;
+                let mut m = man;
+                while m & 0x0400 == 0 {
+                    m <<= 1;
+                    e32 -= 1;
+                }
+                sign | ((e32 as u32) << 23) | ((m & 0x03FF) << 13)
+            }
+        }
+        0x1F => sign | 0x7F80_0000 | (man << 13),
+        _ => sign | ((exp as u32 + 127 - 15) << 23) | (man << 13),
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_with(0.0, 0.3)).collect()
+    }
+
+    #[test]
+    fn q2_single_block_matches_tern_blob_byte_for_byte() {
+        let mut rng = Rng::new(0x51C2);
+        let vals = payload(257, &mut rng);
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let q = QBlob::encode_blocked(&vals, QuantWidth::Q2, vals.len(), &mut r1);
+        let t = TernBlob::encode(&vals, &mut r2);
+        assert_eq!(q.codes, t.codes, "identical packing and draws at L = 1");
+        assert_eq!(q.scales, vec![t.scale]);
+        // Identical RNG stream consumption.
+        assert_eq!(r1.uniform(), r2.uniform());
+        // Identical decode.
+        let mut a = vec![0f32; vals.len()];
+        let mut b = vec![0f32; vals.len()];
+        q.add_decoded_into(&mut a);
+        t.add_decoded_into(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased_per_width() {
+        // E[decode(encode(x))] = x for the k-bit widths; float widths
+        // are deterministic nearest-even so the error is bounded by half
+        // a ulp of the target format instead.
+        for width in [QuantWidth::Q8, QuantWidth::Q4, QuantWidth::Q2] {
+            let mut rng = Rng::new(0xB1A5 ^ width.bits() as u64);
+            let vals = payload(64, &mut rng);
+            let trials = 4000;
+            let mut mean = vec![0f64; vals.len()];
+            for t in 0..trials {
+                let mut enc_rng = Rng::new(0xD00D + t);
+                let q = QBlob::encode(&vals, width, &mut enc_rng);
+                let mut dec = vec![0f32; vals.len()];
+                q.add_decoded_into(&mut dec);
+                for (m, d) in mean.iter_mut().zip(&dec) {
+                    *m += *d as f64 / trials as f64;
+                }
+            }
+            let unit = vals.iter().fold(0f32, |m, &v| m.max(v.abs())) / width.levels() as f32;
+            // Bernoulli std per trial ≤ unit/2; 5 sigma over `trials`.
+            let tol = 5.0 * (unit as f64) / 2.0 / (trials as f64).sqrt();
+            for (m, &v) in mean.iter().zip(&vals) {
+                assert!(
+                    (m - v as f64).abs() < tol,
+                    "{width}: E[q(x)] = {m} vs x = {v} (tol {tol})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn float_widths_round_to_nearest_and_skip_rng() {
+        let vals = [1.0f32, -2.5, 0.1, 3.0e-5, -7.25e4, 0.0];
+        for width in [QuantWidth::Bf16, QuantWidth::F16] {
+            let mut r = Rng::new(3);
+            let mut before = r.clone();
+            let q = QBlob::encode(&vals, width, &mut r);
+            assert_eq!(r.next_u64(), before.next_u64(), "float widths must not touch the RNG");
+            assert!(q.scales.is_empty());
+            let mut dec = vec![0f32; vals.len()];
+            q.add_decoded_into(&mut dec);
+            for (&d, &v) in dec.iter().zip(&vals) {
+                let rel = if v == 0.0 { d.abs() } else { ((d - v) / v).abs() };
+                // Half-ulp of an 8-bit (bf16) mantissa is the looser bound.
+                assert!(rel <= 1.0 / 256.0, "{width}: {d} vs {v}");
+            }
+        }
+        // Exactly representable values roundtrip bit-for-bit.
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.5)), 1.5);
+        assert_eq!(f16_to_f32(f32_to_f16(-0.375)), -0.375);
+        // f16 gradual underflow: 2^-24 is the smallest subnormal.
+        assert_eq!(f16_to_f32(f32_to_f16(2.0f32.powi(-24))), 2.0f32.powi(-24));
+        assert_eq!(f16_to_f32(f32_to_f16(2.0f32.powi(-26))), 0.0);
+        // Infinities and NaN survive both conversions.
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn max_magnitude_always_transmits_at_every_k_bit_width() {
+        // |v| == s has frac 0 after the floor split, so the max lands on
+        // the top grid level deterministically (TernGrad's guarantee,
+        // generalized). Decoding `L·(s/L)` reintroduces at most two f32
+        // roundings, so compare with a couple-ulp relative tolerance
+        // (exactly zero at q2 where the grid step is `s` itself).
+        for width in [QuantWidth::Q8, QuantWidth::Q4, QuantWidth::Q2] {
+            for seed in 0..32 {
+                let mut rng = Rng::new(seed);
+                let vals = [0.01f32, -0.9, 0.02, 0.5];
+                let q = QBlob::encode(&vals, width, &mut rng);
+                let mut dec = vec![0f32; vals.len()];
+                q.add_decoded_into(&mut dec);
+                assert!(
+                    ((dec[1] + 0.9) / 0.9).abs() <= 1e-6,
+                    "{width}: absmax must hit the top level ({})",
+                    dec[1]
+                );
+                if width == QuantWidth::Q2 {
+                    assert_eq!(dec[1], -0.9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_block_scales_localize_outliers() {
+        // One huge element in block 0 must not flatten block 1's grid.
+        let mut vals = vec![0.001f32; 2 * QUANT_BLOCK];
+        vals[0] = 1000.0;
+        let mut rng = Rng::new(11);
+        let q = QBlob::encode(&vals, QuantWidth::Q8, &mut rng);
+        assert_eq!(q.scales.len(), 2);
+        assert_eq!(q.scales[0], 1000.0);
+        assert_eq!(q.scales[1], 0.001);
+        let mut dec = vec![0f32; vals.len()];
+        q.add_decoded_into(&mut dec);
+        // Block 1 decodes its small values on its own fine grid (the
+        // shared-scale alternative would round them all to zero).
+        assert!(((dec[QUANT_BLOCK + 1] - 0.001) / 0.001).abs() <= 1e-6);
+    }
+
+    #[test]
+    fn wire_bytes_closed_forms() {
+        // Float widths: 9 + 2 per element, no scales.
+        assert_eq!(QBlob::wire_bytes_for(1000, QuantWidth::Bf16), 9 + 2000);
+        assert_eq!(QBlob::wire_bytes_for(1000, QuantWidth::F16), 9 + 2000);
+        // k-bit: 9 + 4·ceil(n/1024) + ceil(n·k/8).
+        assert_eq!(QBlob::wire_bytes_for(1000, QuantWidth::Q8), 9 + 4 + 1000);
+        assert_eq!(QBlob::wire_bytes_for(1025, QuantWidth::Q4), 9 + 8 + 513);
+        // q2 delegates to TernBlob (whole-payload single scale).
+        assert_eq!(
+            QBlob::wire_bytes_for(1025, QuantWidth::Q2),
+            TernBlob::wire_bytes_for(1025)
+        );
+        // Instance sizes agree with the closed form at the canonical block.
+        let mut rng = Rng::new(5);
+        let vals = payload(1500, &mut rng);
+        for width in [QuantWidth::Bf16, QuantWidth::F16, QuantWidth::Q8, QuantWidth::Q4] {
+            let q = QBlob::encode(&vals, width, &mut rng);
+            assert_eq!(q.wire_bytes(), QBlob::wire_bytes_for(vals.len(), width), "{width}");
+        }
+    }
+
+    #[test]
+    fn zero_payload_and_zero_block_are_total() {
+        let mut rng = Rng::new(9);
+        for width in QuantWidth::ALL {
+            let q = QBlob::encode(&[], width, &mut rng);
+            assert_eq!(q.len, 0);
+            assert!(q.codes.is_empty());
+            q.add_decoded_into(&mut []);
+        }
+        // An all-zero block encodes to zero codes and zero scale, and
+        // consumes no RNG draws.
+        let mut r = Rng::new(4);
+        let mut before = r.clone();
+        let q = QBlob::encode(&[0.0; 10], QuantWidth::Q4, &mut r);
+        assert_eq!(r.next_u64(), before.next_u64());
+        assert_eq!(q.scales, vec![0.0]);
+        let mut dec = vec![1.0f32; 10];
+        q.add_decoded_into(&mut dec);
+        assert_eq!(dec, vec![1.0; 10]);
+    }
+
+    #[test]
+    fn decode_is_total_on_arbitrary_codes() {
+        // Any byte soup decodes without panicking (wire-facing contract).
+        let blob = QBlob {
+            width: QuantWidth::Q4,
+            len: 16,
+            block: QUANT_BLOCK,
+            scales: vec![2.0],
+            codes: (0..8).map(|i| (i * 37 + 255) as u8).collect(),
+        };
+        let mut dec = vec![0f32; 16];
+        blob.add_decoded_into(&mut dec);
+        for d in dec {
+            assert!(d.abs() <= 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn width_tokens_roundtrip() {
+        for w in QuantWidth::ALL {
+            assert_eq!(QuantWidth::parse(w.token()).unwrap(), w);
+            assert_eq!(QuantWidth::from_wire_tag(w.wire_tag()), Some(w));
+        }
+        assert_eq!(QuantWidth::from_wire_tag(0), None);
+        assert_eq!(QuantWidth::from_wire_tag(6), None);
+        assert!(QuantWidth::parse("3").is_err());
+        assert!(QuantWidth::parse("32").is_err());
+        assert_eq!(QuantWidth::Q8.levels(), 127);
+        assert_eq!(QuantWidth::Q4.levels(), 7);
+        assert_eq!(QuantWidth::Q2.levels(), 1);
+    }
+}

@@ -11,8 +11,14 @@
 //! head  := dense | terngrad
 //!        | iwp:fixed | iwp:layerwise | iwp:vargate[:<gate>[:<boost>]]
 //!        | dgc:topk  | dgc:layerwise
-//! stage := warmup:<epochs> | mcorr | nomcorr | sel | nosel | tern
+//! stage := warmup:<epochs> | mcorr | nomcorr | sel | nosel | tern | q:<bits>
+//! bits  := 16b | 16 | 8 | 4 | 2
 //! ```
+//!
+//! `+q:<bits>` selects the wire precision of the compacted shared-mask
+//! payload (compress/quant.rs, DESIGN.md §17); `+tern` is the pinned
+//! alias of its 2-bit special case, so `iwp:fixed+q:2` canonicalizes to
+//! `iwp:fixed+tern`.
 //!
 //! Every legacy `Method` enum value maps to a canonical spec
 //! ([`super::Method::spec`]) and runs bit-identically to the
@@ -22,6 +28,7 @@
 //! validated entry point [`MethodSpec::parse`].
 
 use super::Method;
+use crate::compress::quant::QuantWidth;
 
 /// Default var/mean gate of `iwp:vargate` (trailing dispersion above
 /// this marks a layer as noisy — Tsuzuku et al., 1802.06058 adapted to
@@ -86,9 +93,10 @@ pub struct MethodSpec {
     /// `+sel` / `+nosel` — randomized-selection override (`None` defers
     /// to the config's `random_select`).
     pub random_select: Option<bool>,
-    /// `+tern` — ternary-quantize the compacted shared-mask payload;
-    /// the quantized blobs spread whole (not closed under addition).
-    pub tern: bool,
+    /// `+q:<bits>` / `+tern` — wire precision of the compacted
+    /// shared-mask payload; the quantized blobs spread whole (not closed
+    /// under addition). `+tern` is the alias of `+q:2`.
+    pub quant: Option<QuantWidth>,
 }
 
 /// One row of the spec registry (`ringiwp methods`).
@@ -103,7 +111,7 @@ pub struct SpecEntry {
 }
 
 /// Registered heads, in `ringiwp methods` display order.
-pub const REGISTRY: [SpecEntry; 7] = [
+pub const REGISTRY: [SpecEntry; 9] = [
     SpecEntry {
         spec: "dense",
         legacy: Some("baseline"),
@@ -131,6 +139,18 @@ pub const REGISTRY: [SpecEntry; 7] = [
                harder (default gate 1, boost 4; Tsuzuku et al. 2018)",
     },
     SpecEntry {
+        spec: "iwp:layerwise+q:8",
+        legacy: None,
+        desc: "layerwise IWP with an 8-bit block-quantized payload (127 levels/sign, \
+               unbiased stochastic rounding; DESIGN.md §17)",
+    },
+    SpecEntry {
+        spec: "iwp:fixed+q:16b",
+        legacy: None,
+        desc: "fixed-threshold IWP with a bf16 payload (deterministic round-to-nearest; \
+               halves masked values bytes)",
+    },
+    SpecEntry {
         spec: "dgc:topk",
         legacy: Some("dgc"),
         desc: "per-node magnitude top-k (Lin et al. 2017); densifies on rings",
@@ -144,13 +164,18 @@ pub const REGISTRY: [SpecEntry; 7] = [
 ];
 
 /// Stage grammar, in `ringiwp methods` display order.
-pub const STAGES: [(&str, &str); 6] = [
+pub const STAGES: [(&str, &str); 7] = [
     ("+warmup:<epochs>", "override warm-up epochs (threshold/density ramp; iwp/dgc heads)"),
     ("+mcorr", "momentum-corrected residual store (Eq. 3; the default for iwp/dgc heads)"),
     ("+nomcorr", "raw residual accumulation (momentum correction off; iwp/dgc heads)"),
     ("+sel", "randomized selection P = I/thr on (Sec. III-C; iwp heads)"),
     ("+nosel", "hard thresholding (randomized selection off; iwp heads)"),
     ("+tern", "ternary-quantize the compacted shared-mask payload; blobs spread whole (iwp heads)"),
+    (
+        "+q:<bits>",
+        "wire precision of the compacted shared-mask payload: 16b (bf16) | 16 (f16) | \
+         8 | 4 | 2 (block-quantized, unbiased stochastic rounding; +tern = +q:2; iwp heads)",
+    ),
 ];
 
 impl MethodSpec {
@@ -161,7 +186,7 @@ impl MethodSpec {
             warmup: None,
             mcorr: None,
             random_select: None,
-            tern: false,
+            quant: None,
         }
     }
 
@@ -183,8 +208,11 @@ impl MethodSpec {
                 "sel" => set_once(&mut spec.random_select, true, "sel/nosel")?,
                 "nosel" => set_once(&mut spec.random_select, false, "sel/nosel")?,
                 "tern" => {
-                    anyhow::ensure!(!spec.tern, "duplicate `+tern` stage");
-                    spec.tern = true;
+                    anyhow::ensure!(
+                        spec.quant.is_none(),
+                        "conflicting/duplicate quantization stages (`+tern`/`+q:<bits>`)"
+                    );
+                    spec.quant = Some(QuantWidth::Q2);
                 }
                 other => {
                     if let Some(e) = other.strip_prefix("warmup:") {
@@ -196,10 +224,16 @@ impl MethodSpec {
                             "duplicate `+warmup` stage"
                         );
                         spec.warmup = Some(epochs);
+                    } else if let Some(w) = other.strip_prefix("q:") {
+                        anyhow::ensure!(
+                            spec.quant.is_none(),
+                            "conflicting/duplicate quantization stages (`+tern`/`+q:<bits>`)"
+                        );
+                        spec.quant = Some(QuantWidth::parse(w)?);
                     } else {
                         anyhow::bail!(
                             "unknown stage `+{other}` (warmup:<epochs> | mcorr | nomcorr | \
-                             sel | nosel | tern)"
+                             sel | nosel | tern | q:<bits>)"
                         );
                     }
                 }
@@ -229,11 +263,41 @@ impl MethodSpec {
             self.random_select.is_none() || iwp,
             "`+sel`/`+nosel` (randomized selection, Sec. III-C) only applies to iwp heads"
         );
-        anyhow::ensure!(
-            !self.tern || iwp,
-            "`+tern` quantizes the compacted shared-mask payload and only applies to iwp \
-             heads (the standalone `terngrad` head quantizes the full gradient)"
-        );
+        // Payload quantization (`+tern`/`+q`) rides the shared-mask
+        // transport: a single compacted payload per step, spread whole.
+        // Every other head lacks that payload for a *head-specific*
+        // reason, so the rejection says which one (the old message
+        // explained only the dgc:topk case).
+        if self.quant.is_some() && !iwp {
+            let stage = match self.quant {
+                Some(QuantWidth::Q2) => "`+tern`".to_string(),
+                Some(w) => format!("`+q:{}`", w.token()),
+                None => unreachable!(),
+            };
+            match self.head {
+                SpecHead::Dense => anyhow::bail!(
+                    "{stage} quantizes the compacted shared-mask payload; the dense head \
+                     ships full gradients with no mask or compaction (use the `terngrad` \
+                     head for full-gradient quantization)"
+                ),
+                SpecHead::Terngrad => anyhow::bail!(
+                    "{stage} is redundant on the `terngrad` head, which already \
+                     ternary-quantizes the full gradient before it reaches the wire"
+                ),
+                SpecHead::Dgc(DgcSelect::TopK) => anyhow::bail!(
+                    "{stage} quantizes the compacted shared-mask payload; dgc:topk ships \
+                     per-node magnitude top-k supports as sparse (index, value) pairs that \
+                     densify on the ring — there is no shared compacted payload to quantize"
+                ),
+                SpecHead::Dgc(DgcSelect::Layerwise) => anyhow::bail!(
+                    "{stage} quantizes the compacted shared-mask payload; dgc:layerwise \
+                     scores by importance but still ships per-node supports on the \
+                     densifying sparse transport, so it has no shared compacted payload \
+                     either"
+                ),
+                SpecHead::Iwp(_) => unreachable!(),
+            }
+        }
         if let SpecHead::Iwp(IwpPolicy::VarGate { gate, boost }) = self.head {
             anyhow::ensure!(
                 gate >= 0.0 && gate.is_finite(),
@@ -276,8 +340,15 @@ impl MethodSpec {
             Some(false) => out.push_str("+nosel"),
             None => {}
         }
-        if self.tern {
-            out.push_str("+tern");
+        match self.quant {
+            // `+tern` is the pinned alias of the 2-bit case: `+q:2`
+            // canonicalizes to the historical spelling.
+            Some(QuantWidth::Q2) => out.push_str("+tern"),
+            Some(w) => {
+                out.push_str("+q:");
+                out.push_str(w.token());
+            }
+            None => {}
         }
         out
     }
@@ -295,7 +366,7 @@ impl MethodSpec {
     /// `None` for the new compositions and any stage-overridden spec.
     pub fn legacy(&self) -> Option<Method> {
         if self.warmup.is_some() || self.mcorr.is_some() || self.random_select.is_some()
-            || self.tern
+            || self.quant.is_some()
         {
             return None;
         }
@@ -428,12 +499,67 @@ mod tests {
         assert_eq!(s.name(), "iwp:layerwise+warmup:4");
         let s = MethodSpec::parse("iwp:fixed+nosel+tern").unwrap();
         assert_eq!(s.random_select, Some(false));
-        assert!(s.tern);
+        assert_eq!(s.quant, Some(QuantWidth::Q2));
         assert_eq!(s.name(), "iwp:fixed+nosel+tern");
         assert_eq!(MethodSpec::parse(&s.name()).unwrap(), s);
         let s = MethodSpec::parse("dgc:layerwise+nomcorr+warmup:2").unwrap();
         assert_eq!(s.mcorr, Some(false));
         assert_eq!(s.name(), "dgc:layerwise+warmup:2+nomcorr");
+    }
+
+    #[test]
+    fn q_stage_parses_every_width_and_q2_canonicalizes_as_tern() {
+        for (tok, width) in [
+            ("16b", QuantWidth::Bf16),
+            ("16", QuantWidth::F16),
+            ("8", QuantWidth::Q8),
+            ("4", QuantWidth::Q4),
+        ] {
+            let spec_s = format!("iwp:layerwise+q:{tok}");
+            let s = MethodSpec::parse(&spec_s).unwrap();
+            assert_eq!(s.quant, Some(width));
+            assert_eq!(s.name(), spec_s, "non-2-bit widths spell as +q:<bits>");
+            assert_eq!(MethodSpec::parse(&s.name()).unwrap(), s);
+            assert_eq!(s.legacy(), None);
+        }
+        // `+tern` is the pinned alias of `+q:2`: both parse to the same
+        // spec and the canonical spelling is the historical one.
+        let via_q = MethodSpec::parse("iwp:fixed+q:2").unwrap();
+        let via_tern = MethodSpec::parse("iwp:fixed+tern").unwrap();
+        assert_eq!(via_q, via_tern);
+        assert_eq!(via_q.quant, Some(QuantWidth::Q2));
+        assert_eq!(via_q.name(), "iwp:fixed+tern");
+        // Stage ordering is normalized through name().
+        let s = MethodSpec::parse("iwp:vargate+q:4+nosel+warmup:3").unwrap();
+        assert_eq!(s.name(), "iwp:vargate+warmup:3+nosel+q:4");
+    }
+
+    #[test]
+    fn quant_rejections_are_per_head_accurate() {
+        // Satellite pin (ISSUE 10): each non-iwp head rejects `+q`/`+tern`
+        // with a message explaining *that head's* transport, not just the
+        // dgc:topk story.
+        for (bad, needle) in [
+            ("dense+tern", "full gradients with no mask"),
+            ("dense+q:8", "full gradients with no mask"),
+            ("terngrad+tern", "already"),
+            ("terngrad+q:4", "already"),
+            ("dgc:topk+tern", "magnitude top-k"),
+            ("dgc:topk+q:8", "magnitude top-k"),
+            ("dgc:layerwise+tern", "scores by importance"),
+            ("dgc:layerwise+q:16b", "scores by importance"),
+        ] {
+            let err = MethodSpec::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains(needle),
+                "`{bad}` error must mention `{needle}`, got: {err}"
+            );
+        }
+        // And the stage spelling the user wrote is echoed back.
+        let err = MethodSpec::parse("dense+q:8").unwrap_err().to_string();
+        assert!(err.contains("`+q:8`"), "{err}");
+        let err = MethodSpec::parse("dense+tern").unwrap_err().to_string();
+        assert!(err.contains("`+tern`"), "{err}");
     }
 
     #[test]
@@ -473,12 +599,18 @@ mod tests {
             "dense+warmup:2",     // warmup on a dense head
             "terngrad+mcorr",     // store stage on a quantization head
             "dgc:topk+sel",       // randomized selection is an iwp stage
-            "dgc:topk+tern",      // tern is an iwp stage
+            "dgc:topk+tern",      // quantization is an iwp stage
+            "dgc:layerwise+q:8",  // … on every dgc head
             "iwp:fixed+warmup:x", // malformed epochs
             "iwp:fixed+warmup:1+warmup:2",
             "iwp:fixed+sel+nosel",
             "iwp:fixed+mcorr+nomcorr",
             "iwp:fixed+tern+tern",
+            "iwp:fixed+q:3",      // not a registered width
+            "iwp:fixed+q:",       // missing width
+            "iwp:fixed+q:32",     // f32 is the unquantized default, not a stage
+            "iwp:fixed+tern+q:8", // conflicting quantization stages
+            "iwp:fixed+q:2+q:2",  // duplicate via the alias too
             "iwp:fixed+bogus",
         ] {
             assert!(MethodSpec::parse(bad).is_err(), "`{bad}` must be rejected");

@@ -12,9 +12,10 @@
 //!   carry the simulated virtual seconds *and* the closed-form
 //!   `net::cost` prediction (`model_s`), which must agree.
 //! * **step** — the full `SimEngine` step (gradient synthesis →
-//!   compression → ring transport → accounting) for all 7 pipelines
-//!   ([`step_specs`]: the 5 legacy methods plus `iwp:vargate` and
-//!   `dgc:layerwise`, DESIGN.md §12) × ring sizes × AlexNet/ResNet50
+//!   compression → ring transport → accounting) for all 9 pipelines
+//!   ([`step_specs`]: the 5 legacy methods plus `iwp:vargate`,
+//!   `dgc:layerwise`, and the two registry `+q` compositions,
+//!   DESIGN.md §12, §17) × ring sizes × AlexNet/ResNet50
 //!   inventories (scaled-down stand-ins under the `quick` profile so
 //!   the CI smoke run stays fast).
 //!
@@ -399,9 +400,11 @@ fn micro_resnet50() -> ParamLayout {
 }
 
 /// Step-sweep pipelines: the five legacy Table-I methods (canonical
-/// specs) plus the two shipped stage compositions — variance-gated IWP
-/// and DGC transport under Eq. 4 layerwise thresholds (DESIGN.md §12).
-pub fn step_specs() -> [MethodSpec; 7] {
+/// specs) plus the four shipped stage compositions — variance-gated
+/// IWP, DGC transport under Eq. 4 layerwise thresholds (DESIGN.md
+/// §12), and the two registry `+q:<bits>` rows pricing precision
+/// against bandwidth on the masked payload (DESIGN.md §17).
+pub fn step_specs() -> [MethodSpec; 9] {
     [
         Method::Baseline.spec(),
         Method::TernGrad.spec(),
@@ -410,10 +413,12 @@ pub fn step_specs() -> [MethodSpec; 7] {
         Method::IwpLayerwise.spec(),
         MethodSpec::parse("iwp:vargate").expect("registry spec"),
         MethodSpec::parse("dgc:layerwise").expect("registry spec"),
+        MethodSpec::parse("iwp:layerwise+q:8").expect("registry spec"),
+        MethodSpec::parse("iwp:fixed+q:16b").expect("registry spec"),
     ]
 }
 
-/// The engine step sweep: 7 pipelines plus the autotuned arm (`tuned`,
+/// The engine step sweep: 9 pipelines plus the autotuned arm (`tuned`,
 /// `--tuner on` over `iwp:fixed`) × ring sizes × AlexNet/ResNet50.
 pub fn run_step(cfg: &BenchCfg) -> BenchReport {
     let mut report = BenchReport::new("step", cfg.config_json());
@@ -585,8 +590,8 @@ mod tests {
         let a = run_step(&cfg).to_json();
         let b = run_step(&cfg).to_json();
         assert_eq!(canonical(&a), canonical(&b));
-        // 2 models x (7 pipelines + the tuned arm) x 1 ring size.
-        assert_eq!(a.get("rows").as_arr().unwrap().len(), 16);
+        // 2 models x (9 pipelines + the tuned arm) x 1 ring size.
+        assert_eq!(a.get("rows").as_arr().unwrap().len(), 20);
     }
 
     #[test]
@@ -603,7 +608,12 @@ mod tests {
             .iter()
             .filter_map(|r| r.get("method").as_str().map(String::from))
             .collect();
-        for want in ["iwp:vargate", "dgc:layerwise"] {
+        for want in [
+            "iwp:vargate",
+            "dgc:layerwise",
+            "iwp:layerwise+q:8",
+            "iwp:fixed+q:16b",
+        ] {
             assert!(
                 methods.iter().any(|m| m == want),
                 "step sweep must carry `{want}` rows (got {methods:?})"

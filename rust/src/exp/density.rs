@@ -47,9 +47,17 @@ pub const DENSITY_TOPOLOGIES: [TopoKind; 5] = [
 ];
 
 /// Selection pipelines the sweep compares: both DGC-transport variants
-/// (densifying per-node masks) against both shared-mask variants
-/// (ring-size-invariant density).
-pub const DENSITY_SPECS: [&str; 4] = ["dgc:topk", "dgc:layerwise", "iwp:fixed", "iwp:vargate"];
+/// (densifying per-node masks) against the shared-mask variants
+/// (ring-size-invariant density), including one low-precision payload
+/// row (`+q:8`, DESIGN.md §17) — same mask stream as `iwp:fixed`, a
+/// quarter of the payload bytes.
+pub const DENSITY_SPECS: [&str; 5] = [
+    "dgc:topk",
+    "dgc:layerwise",
+    "iwp:fixed",
+    "iwp:vargate",
+    "iwp:fixed+q:8",
+];
 
 /// Sweep ring sizes × topologies × pipelines and write
 /// `density_growth.csv` against the analytic `1-(1-d)^N` model.
@@ -70,13 +78,14 @@ pub fn run(out_dir: &str, seed: u64) -> anyhow::Result<()> {
     )?;
     println!("== per-node vs shared-mask density growth across topologies (ResNet50, d0=1%) ==");
     println!(
-        "{:>6} {:>15} {:>11} {:>11} {:>11} {:>11} {:>16} {:>12}",
+        "{:>6} {:>15} {:>11} {:>11} {:>11} {:>11} {:>11} {:>16} {:>12}",
         "nodes",
         "topology",
         "dgc:topk",
         "dgc:lw",
         "iwp:fixed",
         "iwp:vargate",
+        "iwp:fix+q8",
         "model(1-(1-d)^N)",
         "topk_MB/node"
     );
@@ -123,12 +132,13 @@ pub fn run(out_dir: &str, seed: u64) -> anyhow::Result<()> {
                 )?;
             }
             println!(
-                "{n:>6} {:>15} {:>10.4}% {:>10.4}% {:>10.4}% {:>10.4}% {:>15.4}% {:>12.2}",
+                "{n:>6} {:>15} {:>10.4}% {:>10.4}% {:>10.4}% {:>10.4}% {:>10.4}% {:>15.4}% {:>12.2}",
                 topology.name(),
                 densities[0] * 100.0,
                 densities[1] * 100.0,
                 densities[2] * 100.0,
                 densities[3] * 100.0,
+                densities[4] * 100.0,
                 expected_final_density(0.01, n) * 100.0,
                 dgc_bytes as f64 / 1e6
             );

@@ -833,9 +833,16 @@ mod tests {
     #[test]
     fn new_compositions_run_end_to_end() {
         // The two shipped stage compositions (DESIGN.md §12) and the
-        // ternary payload stage, through the full engine.
+        // low-precision payload stages — ternary plus one k-bit and one
+        // float `+q` width (DESIGN.md §17) — through the full engine.
         let layout = small_layout();
-        for spec in ["iwp:vargate", "dgc:layerwise", "iwp:fixed+tern"] {
+        for spec in [
+            "iwp:vargate",
+            "dgc:layerwise",
+            "iwp:fixed+tern",
+            "iwp:fixed+q:8",
+            "iwp:fixed+q:16b",
+        ] {
             let mut e = SimEngine::new(layout.clone(), spec_cfg(spec, 8));
             for s in 0..3 {
                 let r = e.step(s);

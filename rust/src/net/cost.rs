@@ -608,6 +608,69 @@ impl CostModel {
     ) -> u64 {
         self.masked_tern(topo, coords, k, nnz).0
     }
+
+    /// One accumulator over the `+q:<bits>` masked stage's round
+    /// sequence (DESIGN.md §17): the [`CostModel::masked_tern_seconds`]
+    /// shape — spread the `k` broadcaster masks, then spread every
+    /// node's [`QBlob`]-encoded compacted payload *whole* — with the
+    /// width's closed-form blob size. At `QuantWidth::Q2` the blob size
+    /// delegates to `TernBlob::wire_bytes_for`, so the prediction equals
+    /// `masked_tern` bit for bit (the engine ships the 2-bit width on
+    /// the tern path). Rounds fold in the simulator's clock order
+    /// (fresh-clock bit-exactness); pipeline wrappers delegate blob
+    /// spreads to their inner topology.
+    ///
+    /// [`QBlob`]: crate::compress::quant::QBlob
+    fn masked_q(
+        &self,
+        topo: TopoKind,
+        coords: usize,
+        k: usize,
+        nnz: usize,
+        width: crate::compress::quant::QuantWidth,
+    ) -> (u64, f64) {
+        let base = match topo {
+            TopoKind::Pipeline { inner, .. } => inner.kind(),
+            t => t,
+        };
+        let mask_bytes = (coords.div_ceil(8)) as u64;
+        let blob = crate::compress::quant::QBlob::wire_bytes_for(nnz, width);
+        let (mut bytes, mut t) = (0u64, 0.0f64);
+        self.base_spread_rounds(base, mask_bytes, k, &mut |b, d| {
+            bytes += b;
+            t += d;
+        });
+        self.base_spread_rounds(base, blob, self.nodes, &mut |b, d| {
+            bytes += b;
+            t += d;
+        });
+        (bytes, t)
+    }
+
+    /// Virtual seconds of the `+q:<bits>` masked stage under `topo` for
+    /// an `nnz`-coordinate shared support and `k` broadcaster masks.
+    pub fn masked_q_seconds(
+        &self,
+        topo: TopoKind,
+        coords: usize,
+        k: usize,
+        nnz: usize,
+        width: crate::compress::quant::QuantWidth,
+    ) -> f64 {
+        self.masked_q(topo, coords, k, nnz, width).1
+    }
+
+    /// Total wire bytes of the `+q:<bits>` masked stage under `topo`.
+    pub fn masked_q_total_bytes(
+        &self,
+        topo: TopoKind,
+        coords: usize,
+        k: usize,
+        nnz: usize,
+        width: crate::compress::quant::QuantWidth,
+    ) -> u64 {
+        self.masked_q(topo, coords, k, nnz, width).0
+    }
 }
 
 #[cfg(test)]
@@ -812,6 +875,56 @@ mod tests {
                 "{topo:?}"
             );
         }
+    }
+
+    #[test]
+    fn masked_q_composes_two_spreads() {
+        // Every `+q:<bits>` width prices as exactly the mask spread plus
+        // the whole-QBlob spread; the Q2 special case must equal
+        // `masked_tern` bit for bit (the engine ships that width on the
+        // tern path), and pipeline wrappers delegate to their inner
+        // topology as everywhere else.
+        use crate::compress::quant::{QBlob, QuantWidth};
+        let n = 6;
+        let model = CostModel::new(n, link());
+        let (coords, k, nnz) = (10_000usize, 2usize, 300usize);
+        let mask_bytes = (coords.div_ceil(8)) as u64;
+        for width in QuantWidth::ALL {
+            let blob = QBlob::wire_bytes_for(nnz, width);
+            for topo in [TopoKind::Flat, TopoKind::Hier { group: 3 }, TopoKind::Tree] {
+                assert_eq!(
+                    model.masked_q_total_bytes(topo, coords, k, nnz, width),
+                    model.topo_spread_total_bytes(topo, mask_bytes, k)
+                        + model.topo_spread_total_bytes(topo, blob, n),
+                    "{width} {topo:?}"
+                );
+            }
+        }
+        for topo in [TopoKind::Flat, TopoKind::Hier { group: 3 }, TopoKind::Tree] {
+            assert_eq!(
+                model.masked_q_total_bytes(topo, coords, k, nnz, QuantWidth::Q2),
+                model.masked_tern_total_bytes(topo, coords, k, nnz),
+                "q:2 bytes must equal +tern on {topo:?}"
+            );
+            assert_eq!(
+                model.masked_q_seconds(topo, coords, k, nnz, QuantWidth::Q2).to_bits(),
+                model.masked_tern_seconds(topo, coords, k, nnz).to_bits(),
+                "q:2 seconds must equal +tern on {topo:?}"
+            );
+        }
+        assert_eq!(
+            model
+                .masked_q_seconds(
+                    TopoKind::Pipeline { chunks: 4, inner: crate::net::PipeInner::Tree },
+                    coords,
+                    k,
+                    nnz,
+                    QuantWidth::Q8
+                )
+                .to_bits(),
+            model.masked_q_seconds(TopoKind::Tree, coords, k, nnz, QuantWidth::Q8).to_bits(),
+            "pipeline wrappers delegate quant spreads to the inner topology"
+        );
     }
 
     #[test]

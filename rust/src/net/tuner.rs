@@ -17,8 +17,8 @@
 //! it — so every candidate is priced as one prep pass plus its wire
 //! rounds. Pipelined masked candidates overlap the prep with earlier
 //! chunks' rounds ([`CostModel::pipelined_masked_seconds`]); the
-//! non-pipelined formats (dense / sparse-allgather / `+tern`) pay it
-//! up front. `masked` over `pipeline:1:<base>` *is* the serial
+//! non-pipelined formats (dense / sparse-allgather / `+tern` /
+//! `+q:<bits>`) pay it up front. `masked` over `pipeline:1:<base>` *is* the serial
 //! prep-then-rounds reference, so the grid needs no separate
 //! un-pipelined masked rows.
 //!
@@ -32,6 +32,7 @@
 use super::topo::{pipeline, PipeInner, Topology};
 use super::trace::{DecisionRow, DecisionTrace};
 use super::{CostModel, LinkSpec, TopoKind};
+use crate::compress::quant::QuantWidth;
 use crate::sparse::BitMask;
 
 /// How the tuner participates in a run (`--tuner`, `RINGIWP_TUNER`).
@@ -99,16 +100,24 @@ pub enum WirePick {
     /// The `+tern` stage: masks, then whole ternary-quantized blobs
     /// (ternary is not closed under addition, DESIGN.md §12).
     Tern,
+    /// The `+q:<bits>` stage at the given width: masks, then whole
+    /// [`QBlob`](crate::compress::quant::QBlob)-encoded payloads
+    /// (DESIGN.md §17). The grid carries bf16/f16/q8/q4 rows —
+    /// `QuantWidth::Q2` is the `+tern` row's semantics, so it never
+    /// appears here twice.
+    Quant(QuantWidth),
 }
 
 impl WirePick {
-    /// Canonical short name.
+    /// Canonical short name (quant rows use the width's name, e.g.
+    /// `q8`).
     pub fn name(&self) -> &'static str {
         match self {
             WirePick::Masked => "masked",
             WirePick::Dense => "dense",
             WirePick::Gather => "gather",
             WirePick::Tern => "tern",
+            WirePick::Quant(w) => w.name(),
         }
     }
 }
@@ -220,7 +229,9 @@ impl Tuner {
     /// The default grid: masked over `pipeline:<chunks>:<inner>` for
     /// chunks ∈ {1,2,4,8} × inner ∈ {flat, hier:g, tree} (12 rows;
     /// chunks=1 is the serial masked reference), plus dense / gather /
-    /// tern over each base topology (9 rows). The hier group size is
+    /// tern / `+q:{16b,16,8,4}` over each base topology (21 rows; the
+    /// quant rows price precision against bandwidth per DESIGN.md §17,
+    /// and `+q:2` is the tern row). The hier group size is
     /// `min(4, nodes)` so the grid stays valid on tiny rings.
     pub fn default_candidates(nodes: usize) -> Vec<Strategy> {
         let group = 4.min(nodes);
@@ -236,7 +247,15 @@ impl Tuner {
         }
         for inner in inners {
             let base = inner.kind();
-            for wire in [WirePick::Dense, WirePick::Gather, WirePick::Tern] {
+            for wire in [
+                WirePick::Dense,
+                WirePick::Gather,
+                WirePick::Tern,
+                WirePick::Quant(QuantWidth::Bf16),
+                WirePick::Quant(QuantWidth::F16),
+                WirePick::Quant(QuantWidth::Q8),
+                WirePick::Quant(QuantWidth::Q4),
+            ] {
                 out.push(Strategy { wire, topo: base });
             }
         }
@@ -304,6 +323,16 @@ impl Tuner {
                     + self
                         .model
                         .masked_tern_seconds(s.topo, obs.coords, obs.k, obs.shared.count())
+            }
+            WirePick::Quant(width) => {
+                pipeline::prep_seconds(obs.coords)
+                    + self.model.masked_q_seconds(
+                        s.topo,
+                        obs.coords,
+                        obs.k,
+                        obs.shared.count(),
+                        width,
+                    )
             }
         }
     }
@@ -410,14 +439,34 @@ mod tests {
     #[test]
     fn default_grid_covers_the_strategy_space() {
         let c = Tuner::default_candidates(8);
-        assert_eq!(c.len(), 21, "12 masked-pipelined + 9 base-format rows");
+        assert_eq!(c.len(), 33, "12 masked-pipelined + 21 base-format rows");
         assert_eq!(
             c.iter().filter(|s| s.wire == WirePick::Masked).count(),
             12
         );
-        for wire in [WirePick::Dense, WirePick::Gather, WirePick::Tern] {
+        for wire in [
+            WirePick::Dense,
+            WirePick::Gather,
+            WirePick::Tern,
+            WirePick::Quant(QuantWidth::Bf16),
+            WirePick::Quant(QuantWidth::F16),
+            WirePick::Quant(QuantWidth::Q8),
+            WirePick::Quant(QuantWidth::Q4),
+        ] {
             assert_eq!(c.iter().filter(|s| s.wire == wire).count(), 3);
         }
+        assert_eq!(
+            c.iter()
+                .filter(|s| matches!(s.wire, WirePick::Quant(_)))
+                .count(),
+            12,
+            "four widths over three base topologies"
+        );
+        assert!(
+            !c.iter()
+                .any(|s| s.wire == WirePick::Quant(QuantWidth::Q2)),
+            "the 2-bit width rides the tern row, never a duplicate"
+        );
         // Names are unique (the trace keys on them).
         let mut names: Vec<String> = c.iter().map(|s| s.name()).collect();
         names.sort();
@@ -538,6 +587,43 @@ mod tests {
             s_pick.name(),
             d_s.predicted_s,
             straggler.predict(d_u.index, &obs)
+        );
+    }
+
+    #[test]
+    fn quant_rows_price_precision_against_bandwidth() {
+        // DESIGN.md §17: on one topology the quant rows order purely by
+        // blob bytes — tern (2-bit) < q4 < q8 < bf16 — and the two
+        // 16-bit floats price bit-identically (same wire bytes, no
+        // scales). This is the gradient the tuner trades against
+        // accuracy; the ordering must never silently invert.
+        let tuner = Tuner::new(TunerMode::On, 8, LinkSpec::gigabit_ethernet());
+        let coords = 40_000;
+        let idx = |wire: WirePick| {
+            tuner
+                .candidates()
+                .iter()
+                .position(|s| s.wire == wire && s.topo == TopoKind::Flat)
+                .unwrap()
+        };
+        let mask = obs_mask(coords, 3000, 11);
+        let obs = Observation {
+            coords,
+            k: 3,
+            shared: &mask,
+        };
+        let p = |w| tuner.predict(idx(w), &obs);
+        assert!(p(WirePick::Tern) < p(WirePick::Quant(QuantWidth::Q4)));
+        assert!(p(WirePick::Quant(QuantWidth::Q4)) < p(WirePick::Quant(QuantWidth::Q8)));
+        assert!(p(WirePick::Quant(QuantWidth::Q8)) < p(WirePick::Quant(QuantWidth::Bf16)));
+        assert_eq!(
+            p(WirePick::Quant(QuantWidth::Bf16)).to_bits(),
+            p(WirePick::Quant(QuantWidth::F16)).to_bits(),
+            "both 16-bit floats ship 2 bytes per value and no scales"
+        );
+        assert!(
+            p(WirePick::Quant(QuantWidth::F16)) < p(WirePick::Gather),
+            "halving the payload must beat whole-f32 gather at this support"
         );
     }
 

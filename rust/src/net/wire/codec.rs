@@ -1,4 +1,4 @@
-//! Payload codecs for the four traveling representations plus the
+//! Payload codecs for the five traveling representations plus the
 //! handshake bodies (DESIGN.md §13).
 //!
 //! Each codec is a pure `encode → Vec<u8>` / `decode → Result<T>`
@@ -18,6 +18,10 @@
 //! masked   : len u32 | nnz u32 | ceil(len/8) mask bytes | nnz × f32
 //! terngrad : len u32 | n_scales u32 | n_scales × f32 | ceil(len/4) codes
 //! ternblob : len u32 | scale f32 | ceil(len/4) codes
+//! qblob    : width u8 | block u32 | len u32 | scales × f32 | codes
+//!            (scale count = ceil(len/block) for k-bit widths, 0 for
+//!            bf16/f16; code bytes = ceil(len·k/8) resp. 2·len — both
+//!            derived, so a lying field is caught by the exact takes)
 //! hello    : rank u16 | n u16
 //! helloack : n_links u32 | n_links × (bandwidth f64 | latency f64)
 //! ```
@@ -29,6 +33,7 @@
 //! negotiation rides the `flags` header byte, never the body.
 
 use super::frame::WireError;
+use crate::compress::quant::{QBlob, QuantWidth};
 use crate::compress::terngrad::{TernBlob, TernGrad};
 use crate::net::LinkSpec;
 use crate::sparse::BitMask;
@@ -241,6 +246,56 @@ pub fn decode_tern_blob(buf: &[u8]) -> Result<TernBlob, WireError> {
     Ok(TernBlob { len, scale, codes })
 }
 
+// ---------------------------------------------------------------- qblob
+
+/// Encode a low-precision [`QBlob`] (`+q:<bits>` payload).
+pub fn encode_q_blob(q: &QBlob) -> Vec<u8> {
+    debug_assert_eq!(q.codes.len(), q.width.code_bytes(q.len));
+    let mut out = Vec::with_capacity(9 + 4 * q.scales.len() + q.codes.len());
+    out.push(q.width.wire_tag());
+    out.extend_from_slice(&(q.block as u32).to_le_bytes());
+    out.extend_from_slice(&(q.len as u32).to_le_bytes());
+    for s in &q.scales {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    out.extend_from_slice(&q.codes);
+    out
+}
+
+/// Decode a [`QBlob`]. Scale and code counts are derived from the
+/// validated `(width, block, len)` triple, never trusted from the
+/// buffer, so the exact `take`s below reject any inconsistent length.
+pub fn decode_q_blob(buf: &[u8]) -> Result<QBlob, WireError> {
+    let mut c = Cursor::new(buf);
+    let tag = c.take(1)?[0];
+    let width = QuantWidth::from_wire_tag(tag)
+        .ok_or_else(|| WireError::Corrupt(format!("qblob: unknown width tag {tag}")))?;
+    let block = checked_len(c.u32()?, "qblob block")?;
+    let len = checked_len(c.u32()?, "qblob")?;
+    let n_scales = if width.is_float() {
+        if block != 0 {
+            return Err(WireError::Corrupt(format!(
+                "qblob: float width {width} with nonzero scale block {block}"
+            )));
+        }
+        0
+    } else {
+        if block == 0 {
+            return Err(WireError::Corrupt(format!(
+                "qblob: k-bit width {width} with zero scale block"
+            )));
+        }
+        len.div_ceil(block)
+    };
+    let mut scales = Vec::with_capacity(n_scales.min(c.remaining() / 4));
+    for _ in 0..n_scales {
+        scales.push(c.f32()?);
+    }
+    let codes = c.take(width.code_bytes(len))?.to_vec();
+    c.finish()?;
+    Ok(QBlob { width, len, block, scales, codes })
+}
+
 // ------------------------------------------------------------ handshake
 
 /// Encode a Hello body (rank + ring size; protocol version lives in
@@ -356,6 +411,50 @@ mod tests {
         };
         let db = decode_tern_blob(&encode_tern_blob(&b)).unwrap();
         assert_eq!((db.len, db.scale, &db.codes), (b.len, b.scale, &b.codes));
+    }
+
+    #[test]
+    fn q_blob_roundtrips_every_width() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x0B10B);
+        let vals: Vec<f32> = (0..1100).map(|_| rng.normal_with(0.0, 0.5)).collect();
+        for width in QuantWidth::ALL {
+            let q = QBlob::encode(&vals, width, &mut rng);
+            let d = decode_q_blob(&encode_q_blob(&q)).unwrap();
+            assert_eq!(d, q, "{width}");
+        }
+        // Empty payload roundtrips too.
+        let q = QBlob::encode(&[], QuantWidth::Q8, &mut rng);
+        assert_eq!(decode_q_blob(&encode_q_blob(&q)).unwrap(), q);
+    }
+
+    #[test]
+    fn q_blob_rejects_inconsistent_shapes() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        let vals = vec![0.5f32; 40];
+        let q = QBlob::encode(&vals, QuantWidth::Q4, &mut rng);
+        let bytes = encode_q_blob(&q);
+        // Unknown width tag.
+        let mut bad = bytes.clone();
+        bad[0] = 0;
+        assert!(matches!(decode_q_blob(&bad), Err(WireError::Corrupt(_))));
+        // k-bit width with a zero scale block.
+        let mut bad = bytes.clone();
+        bad[1..5].copy_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(decode_q_blob(&bad), Err(WireError::Corrupt(_))));
+        // Float width with a nonzero block (field mismatch).
+        let mut bad = bytes.clone();
+        bad[0] = QuantWidth::Bf16.wire_tag();
+        assert!(matches!(decode_q_blob(&bad), Err(WireError::Corrupt(_))));
+        // Truncation and trailing garbage are typed.
+        assert!(matches!(
+            decode_q_blob(&bytes[..bytes.len() - 1]),
+            Err(WireError::Truncated { .. })
+        ));
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(matches!(decode_q_blob(&long), Err(WireError::Corrupt(_))));
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //!      0     4  magic        b"RIWP"
 //!      4     2  version      u16 LE, 1 or 2; anything else is typed
 //!      6     1  kind         Dense|Sparse|Masked|Tern|Hello|HelloAck|
-//!                            Shutdown|Ack|Nack
+//!                            Shutdown|Ack|Nack|Quant
 //!      7     1  flags        bit0 = FLAG_TERN_BLOB, bit1 = FLAG_CAP_V2
 //!      8     2  origin       u16 LE, rank that injected the frame
 //!     10     2  ttl          u16 LE, ring-edge traversals remaining
@@ -80,7 +80,7 @@ pub const FLAG_TERN_BLOB: u8 = 1;
 /// the ring transparently degrades to v1 framing.
 pub const FLAG_CAP_V2: u8 = 1 << 1;
 
-/// Frame kinds — the four payload codecs plus control traffic.
+/// Frame kinds — the five payload codecs plus control traffic.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 #[repr(u8)]
 pub enum Kind {
@@ -104,6 +104,9 @@ pub enum Kind {
     /// Per-edge retransmit request (v2 only, empty payload, trailer
     /// `seq` names the first missing transmission).
     Nack = 9,
+    /// Low-precision payload blob (`+q:<bits>` QBlob: width tag,
+    /// per-block scales, packed codes — see `super::codec`).
+    Quant = 10,
 }
 
 impl Kind {
@@ -119,6 +122,7 @@ impl Kind {
             7 => Kind::Shutdown,
             8 => Kind::Ack,
             9 => Kind::Nack,
+            10 => Kind::Quant,
             other => return Err(WireError::BadKind(other)),
         })
     }
@@ -625,7 +629,8 @@ mod tests {
         }
         assert_eq!(Kind::from_u8(8).unwrap(), Kind::Ack);
         assert_eq!(Kind::from_u8(9).unwrap(), Kind::Nack);
-        assert!(Kind::from_u8(10).is_err());
+        assert_eq!(Kind::from_u8(10).unwrap(), Kind::Quant);
+        assert!(Kind::from_u8(11).is_err());
     }
 
     #[test]

@@ -51,6 +51,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::compress::quant::QBlob;
 use crate::compress::terngrad::{TernBlob, TernGrad};
 use crate::net::LinkSpec;
 use crate::sparse::BitMask;
@@ -638,6 +639,13 @@ impl WireRing {
         codec::decode_tern_blob(&out)
     }
 
+    /// Spread a low-precision `+q:<bits>` payload blob ([`Kind::Quant`]);
+    /// returns the decoded copy (whose length prices every node's blob).
+    pub fn spread_q_blob(&mut self, q: &QBlob) -> Result<QBlob, WireError> {
+        let out = self.spread(0, Kind::Quant, 0, codec::encode_q_blob(q))?;
+        codec::decode_q_blob(&out)
+    }
+
     /// AllGather every rank's support mask: rank `r`'s mask spreads
     /// from origin `r mod n`; returns the decoded masks in input
     /// order. Inputs beyond the ring size (exchangeable-node supports,
@@ -763,6 +771,15 @@ mod tests {
         };
         let db = ring.spread_tern_blob(&blob).unwrap();
         assert_eq!((db.len, db.scale, db.codes), (blob.len, blob.scale, blob.codes));
+        let qb = QBlob {
+            width: crate::compress::quant::QuantWidth::Q8,
+            len: 3,
+            block: 1024,
+            scales: vec![0.5],
+            codes: vec![1, 130, 127],
+        };
+        let dq = ring.spread_q_blob(&qb).unwrap();
+        assert_eq!(dq, qb);
         ring.shutdown().unwrap();
     }
 

@@ -114,6 +114,13 @@ impl BitMask {
         &mut self.words
     }
 
+    /// Raw word view for bulk readers that walk the support word-at-a-
+    /// time (`compress::fuse::take_compact` extracts set bits with
+    /// `trailing_zeros` instead of driving the per-bit iterator).
+    pub(crate) fn words(&self) -> &[u64] {
+        &self.words
+    }
+
     /// Iterate set indices in ascending order.
     pub fn iter_set(&self) -> impl Iterator<Item = usize> + '_ {
         self.words.iter().enumerate().flat_map(move |(wi, &w)| {

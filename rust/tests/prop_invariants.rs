@@ -4,6 +4,7 @@
 
 use ringiwp::compress::importance::{score_and_mask, EPS};
 use ringiwp::compress::pipeline;
+use ringiwp::compress::quant::{QBlob, QuantWidth};
 use ringiwp::compress::residual::ResidualStore;
 use ringiwp::compress::terngrad::TernGrad;
 use ringiwp::compress::{Compressor, MethodSpec, StageCfg};
@@ -126,6 +127,55 @@ fn terngrad_roundtrip_magnitudes_bounded_by_scale() {
         }
         // 2-bit wire size.
         assert!(t.wire_bytes() <= (len as u64).div_ceil(4) + 16);
+    });
+}
+
+#[test]
+fn qblob_stochastic_rounding_is_unbiased_at_every_width() {
+    // The `+q:<bits>` contract (DESIGN.md §17): for every k-bit width,
+    // E[decode(encode(v))] == v — averaging many independent encodes
+    // converges on the payload, coordinate-wise, within 5σ of the
+    // rounding noise (σ ≤ unit/(2√trials) per coordinate, unit = the
+    // block's quantization step). The float widths have no randomness
+    // at all: two encodes under diverging RNG streams are identical.
+    forall("E[qblob decode] == payload", 4, |g| {
+        let len = g.usize_in(16, 96);
+        let vals = g.vec_normal(len, 0.0, 0.5);
+        let scale = vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let mut rng = Rng::new(1000 + g.case as u64);
+        for width in QuantWidth::ALL {
+            if width.is_float() {
+                let mut r1 = Rng::new(1);
+                let mut r2 = Rng::new(2);
+                r2.uniform(); // desynchronize the streams
+                assert_eq!(
+                    QBlob::encode(&vals, width, &mut r1),
+                    QBlob::encode(&vals, width, &mut r2),
+                    "{width}: float widths must not consume randomness"
+                );
+                continue;
+            }
+            let trials = 3000usize;
+            let mut acc = vec![0.0f64; len];
+            let mut dec = vec![0.0f32; len];
+            for _ in 0..trials {
+                let blob = QBlob::encode(&vals, width, &mut rng);
+                dec.fill(0.0);
+                blob.add_decoded_into(&mut dec);
+                for (a, &d) in acc.iter_mut().zip(&dec) {
+                    *a += d as f64;
+                }
+            }
+            let unit = scale as f64 / width.levels() as f64;
+            let tol = 5.0 * unit / 2.0 / (trials as f64).sqrt();
+            for (i, (&v, &a)) in vals.iter().zip(&acc).enumerate() {
+                let mean = a / trials as f64;
+                assert!(
+                    (mean - v as f64).abs() <= tol,
+                    "{width} coord {i}: mean {mean} vs {v} (tol {tol})"
+                );
+            }
+        }
     });
 }
 

@@ -1,0 +1,253 @@
+//! The `+q:<bits>` golden suite (DESIGN.md §17).
+//!
+//! The low-precision payload stage has four contracts, each pinned here
+//! end to end through the engines rather than unit-by-unit:
+//!
+//! 1. **Alias**: `+q:2` *is* `+tern` — same parsed spec, same canonical
+//!    name, same engine path, bit-identical runs.
+//! 2. **Determinism**: every width is bit-identical across executor
+//!    parallelism and across topologies' §4 contract, like every other
+//!    pipeline.
+//! 3. **Transport**: the real socket ring (`uds`) reproduces the
+//!    simulator bit for bit at every width — the QBlob frame codec is
+//!    invisible to the reports.
+//! 4. **Pricing**: `CostModel::masked_q_{seconds,total_bytes}` equals
+//!    the simulated wire time/bytes bit for bit for every width ×
+//!    topology on a fresh clock, and the steady-state transport arena
+//!    never grows.
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+use ringiwp::compress::quant::QuantWidth;
+use ringiwp::compress::MethodSpec;
+use ringiwp::exp::simrun::{SimCfg, SimEngine, WireEngine};
+use ringiwp::model::{LayerKind, ParamLayout};
+use ringiwp::net::{CostModel, LinkSpec, TopoKind, TransportKind};
+
+const SIM_NODE_CAP: usize = 4; // SimEngine::SIM_NODE_CAP
+const WATCHDOG: Duration = Duration::from_secs(180);
+
+/// Every `+q` spec string, one per width (the 2-bit row spelled both
+/// ways — the alias is part of the surface under test).
+const Q_SPECS: [&str; 6] = [
+    "iwp:fixed+q:16b",
+    "iwp:fixed+q:16",
+    "iwp:fixed+q:8",
+    "iwp:fixed+q:4",
+    "iwp:fixed+q:2",
+    "iwp:fixed+tern",
+];
+
+fn with_watchdog<F>(label: &str, f: F)
+where
+    F: FnOnce() + Send + 'static,
+{
+    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    let worker = std::thread::Builder::new()
+        .name(format!("watchdog-{label}"))
+        .spawn(move || {
+            f();
+            let _ = tx.send(());
+        })
+        .expect("spawn watchdog worker");
+    match rx.recv_timeout(WATCHDOG) {
+        Ok(()) | Err(RecvTimeoutError::Disconnected) => {
+            if let Err(panic) = worker.join() {
+                std::panic::resume_unwind(panic);
+            }
+        }
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("{label}: still running after {WATCHDOG:?} — ring deadlock");
+        }
+    }
+}
+
+/// Conv + batchnorm + fc with an unaligned boundary and a one-element
+/// bias — the same structurally-honest shape the transport oracle uses,
+/// so every QBlob codec edge (partial pack byte, partial scale block)
+/// is exercised.
+fn layout() -> ParamLayout {
+    ParamLayout::new(
+        "quant_eq",
+        vec![
+            ("conv".into(), vec![32, 16, 3, 3], LayerKind::Conv),
+            ("bn".into(), vec![67], LayerKind::BatchNorm),
+            ("fc".into(), vec![128, 10], LayerKind::Fc),
+            ("bias".into(), vec![1], LayerKind::Bias),
+        ],
+    )
+}
+
+fn cfg(spec: &str, nodes: usize, topology: TopoKind, transport: TransportKind) -> SimCfg {
+    SimCfg {
+        nodes,
+        method: MethodSpec::parse(spec).expect("registry spec"),
+        link: LinkSpec::new(1e9, 1e-5),
+        topology,
+        transport,
+        wire_dir: None,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+type Reports = Vec<(u64, u64, u64, u64)>;
+
+fn engine_run(c: &SimCfg, steps: usize) -> (Reports, u64) {
+    let mut engine = SimEngine::new(layout(), c.clone());
+    let mut reports = Vec::new();
+    for s in 0..steps {
+        let r = engine.step(s);
+        reports.push((
+            r.wire_bytes_per_node,
+            r.support_nnz,
+            r.density.to_bits(),
+            r.seconds.to_bits(),
+        ));
+    }
+    (reports, engine.account.ratio().to_bits())
+}
+
+#[test]
+fn q2_spec_is_the_tern_spec_end_to_end() {
+    // The alias contract: `+q:2` parses to the very spec `+tern` does,
+    // canonicalizes back to the `+tern` spelling, and runs bit-identical
+    // through the engine on every topology — there is one 2-bit path,
+    // not two.
+    let a = MethodSpec::parse("iwp:fixed+q:2").unwrap();
+    let b = MethodSpec::parse("iwp:fixed+tern").unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.name(), "iwp:fixed+tern");
+    assert_eq!(a.quant, Some(QuantWidth::Q2));
+    for topology in [TopoKind::Flat, TopoKind::Hier { group: 3 }, TopoKind::Tree] {
+        let ra = engine_run(&cfg("iwp:fixed+q:2", 8, topology, TransportKind::Sim), 3);
+        let rb = engine_run(&cfg("iwp:fixed+tern", 8, topology, TransportKind::Sim), 3);
+        assert_eq!(ra, rb, "{}: alias ran a different path", topology.name());
+    }
+}
+
+#[test]
+fn every_width_is_bit_identical_across_parallelism() {
+    // The §4 executor contract, per width: per-node encode closures are
+    // disjoint and cross-node reduction happens in node order on the
+    // coordinating thread, so worker count must never show in a report.
+    for spec in Q_SPECS {
+        for topology in [TopoKind::Flat, TopoKind::Tree] {
+            let run = |w: usize| {
+                let mut c = cfg(spec, 9, topology, TransportKind::Sim);
+                c.parallelism = w;
+                engine_run(&c, 3)
+            };
+            let seq = run(1);
+            for w in [2usize, 4] {
+                assert_eq!(
+                    seq,
+                    run(w),
+                    "{spec} {} w={w}: §4 contract violated",
+                    topology.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn uds_matches_sim_at_every_width() {
+    // The transport oracle, restricted to the QBlob frame path: the
+    // real socket ring must reproduce the simulator's reports bit for
+    // bit at every width (the bench spec set only carries two widths;
+    // this covers all of them, plus the alias spelling).
+    with_watchdog("quant-uds", || {
+        for spec in Q_SPECS {
+            let mut sim = SimEngine::new(layout(), cfg(spec, 4, TopoKind::Flat, TransportKind::Sim));
+            let mut wire = WireEngine::new(layout(), cfg(spec, 4, TopoKind::Flat, TransportKind::Uds))
+                .unwrap_or_else(|e| panic!("{spec}: wire ring construction failed: {e}"));
+            for s in 0..2 {
+                let a = sim.step(s);
+                let w = wire.step(s);
+                assert_eq!(
+                    (a.wire_bytes_per_node, a.support_nnz, a.density.to_bits()),
+                    (
+                        w.report.wire_bytes_per_node,
+                        w.report.support_nnz,
+                        w.report.density.to_bits()
+                    ),
+                    "{spec} step {s}: uds diverged from sim"
+                );
+                assert_eq!(
+                    a.seconds.to_bits(),
+                    w.report.seconds.to_bits(),
+                    "{spec} step {s}: virtual clock diverged"
+                );
+                assert!(w.real_bytes > 0, "{spec} step {s}: no bytes crossed the ring");
+            }
+            assert_eq!(
+                sim.account.ratio().to_bits(),
+                wire.sim().account.ratio().to_bits(),
+                "{spec}: compression ratio diverged"
+            );
+            wire.shutdown().unwrap_or_else(|e| panic!("{spec}: shutdown: {e}"));
+        }
+    });
+}
+
+#[test]
+fn engine_wire_costs_equal_masked_q_closed_forms() {
+    // CostModel::masked_q_{seconds,total_bytes} vs the simulated engine,
+    // fresh clock, every width × topology. The Q2 row goes through the
+    // tern engine path and must *still* land on masked_q — which in turn
+    // equals masked_tern by construction.
+    let lay = layout();
+    let total = lay.total_params();
+    let widths: [(&str, QuantWidth); 5] = [
+        ("iwp:fixed+q:16b", QuantWidth::Bf16),
+        ("iwp:fixed+q:16", QuantWidth::F16),
+        ("iwp:fixed+q:8", QuantWidth::Q8),
+        ("iwp:fixed+q:4", QuantWidth::Q4),
+        ("iwp:fixed+q:2", QuantWidth::Q2),
+    ];
+    for topology in [TopoKind::Flat, TopoKind::Hier { group: 4 }, TopoKind::Tree] {
+        for (spec, width) in widths {
+            let c = cfg(spec, 8, topology, TransportKind::Sim);
+            let model = CostModel::new(c.nodes, c.link);
+            let k = c.mask_nodes.min(SIM_NODE_CAP);
+            let mut engine = SimEngine::new(lay.clone(), c);
+            let r = engine.step(0);
+            let nnz = r.support_nnz as usize;
+            assert!(nnz > 0, "{spec} {}: nothing selected", topology.name());
+            assert_eq!(
+                model.masked_q_seconds(topology, total, k, nnz, width).to_bits(),
+                r.wire_seconds.to_bits(),
+                "{spec} {}: wire time drifted from masked_q",
+                topology.name()
+            );
+            assert_eq!(
+                model.masked_q_total_bytes(topology, total, k, nnz, width),
+                engine.net().total_bytes(),
+                "{spec} {}: wire bytes drifted from masked_q",
+                topology.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn steady_state_arena_never_grows_at_any_width() {
+    // The transport arena contract (DESIGN.md §9) holds for the QBlob
+    // path too: after the first (warm-up) step, further steps never
+    // reallocate arena buffers at any width.
+    for spec in Q_SPECS {
+        let mut engine = SimEngine::new(layout(), cfg(spec, 8, TopoKind::Flat, TransportKind::Sim));
+        engine.step(0);
+        let warm = engine.arena().grows();
+        for s in 1..5 {
+            engine.step(s);
+            assert_eq!(
+                engine.arena().grows(),
+                warm,
+                "{spec}: step {s} reallocated arena buffers"
+            );
+        }
+    }
+}

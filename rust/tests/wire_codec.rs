@@ -22,6 +22,7 @@ use ringiwp::net::wire::{
     FaultPlan, Frame, Kind, RecoveryCounters, RecoveryStats, TransportKind, WireError,
     WireStream, FLAG_CAP_V2, FLAG_TERN_BLOB, V1, VERSION,
 };
+use ringiwp::compress::quant::{QBlob, QuantWidth, QUANT_BLOCK};
 use ringiwp::compress::terngrad::{TernBlob, TernGrad};
 use ringiwp::net::LinkSpec;
 use ringiwp::sparse::BitMask;
@@ -134,6 +135,23 @@ fn ternblob_roundtrips() {
 }
 
 #[test]
+fn qblob_roundtrips_every_width_at_edge_shapes() {
+    // Empty payload, single element, one partial code byte, a partial
+    // trailing scale block — built through the real encoder so the
+    // shapes are exactly what the engines ship (DESIGN.md §17).
+    let mut rng = Rng::new(17);
+    for width in QuantWidth::ALL {
+        for len in [0usize, 1, 5, QUANT_BLOCK + 3] {
+            let mut vals = vec![0.0f32; len];
+            rng.fill_normal(&mut vals, 0.0, 1.0);
+            let q = QBlob::encode(&vals, width, &mut rng);
+            let d = codec::decode_q_blob(&codec::encode_q_blob(&q)).unwrap();
+            assert_eq!(d, q, "{width} len={len}");
+        }
+    }
+}
+
+#[test]
 fn handshake_roundtrips() {
     assert_eq!(codec::decode_hello(&codec::encode_hello(3, 9)).unwrap(), (3, 9));
     let links = vec![LinkSpec::new(1e9, 1e-4), LinkSpec::new(5e8, 0.0)];
@@ -151,6 +169,7 @@ fn frame_roundtrips_every_kind_over_buffer_and_stream() {
         (Kind::Masked, 0),
         (Kind::Tern, 0),
         (Kind::Tern, FLAG_TERN_BLOB),
+        (Kind::Quant, 0),
         (Kind::Hello, 0),
         (Kind::HelloAck, 0),
         (Kind::Shutdown, 0),
@@ -227,6 +246,16 @@ fn truncation_at_every_cut_is_typed_for_every_codec() {
                 codes: vec![7, 8],
             }),
         ),
+        (
+            "q_blob",
+            codec::encode_q_blob(&QBlob {
+                width: QuantWidth::Q4,
+                len: 5,
+                block: QUANT_BLOCK,
+                scales: vec![1.0],
+                codes: vec![0x21, 0x43, 0x05],
+            }),
+        ),
         ("hello", codec::encode_hello(1, 4)),
         ("hello_ack", codec::encode_hello_ack(&[LinkSpec::new(1e9, 0.0); 2])),
     ];
@@ -238,6 +267,7 @@ fn truncation_at_every_cut_is_typed_for_every_codec() {
                 "masked" => codec::decode_masked(b).map(drop),
                 "tern_grad" => codec::decode_tern_grad(b).map(drop),
                 "tern_blob" => codec::decode_tern_blob(b).map(drop),
+                "q_blob" => codec::decode_q_blob(b).map(drop),
                 "hello" => codec::decode_hello(b).map(drop),
                 "hello_ack" => codec::decode_hello_ack(b).map(drop),
                 other => unreachable!("{other}"),
@@ -312,6 +342,7 @@ fn random_garbage_never_panics_the_frame_decoder() {
             let _ = codec::decode_masked(&buf[HEADER_LEN..]);
             let _ = codec::decode_tern_grad(&buf[HEADER_LEN..]);
             let _ = codec::decode_tern_blob(&buf[HEADER_LEN..]);
+            let _ = codec::decode_q_blob(&buf[HEADER_LEN..]);
             let _ = codec::decode_hello_ack(&buf[HEADER_LEN..]);
         }
     }
